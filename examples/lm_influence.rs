@@ -1,0 +1,40 @@
+//! Figure-9 scenario: qualitative LLM data attribution with FactGraSS.
+//!
+//! Trains the tiny LM on the themed corpus, then attributes a themed query
+//! prompt ("privacy") with FactGraSS + layer-wise block-diagonal FIM
+//! influence and prints the top influential documents — the synthetic
+//! analogue of the paper's "To improve data privacy" → privacy-journalism
+//! retrieval (Fig. 9).
+//!
+//! Run: `cargo run --release --example lm_influence [-- --fast]`
+
+use anyhow::Result;
+use grass::config::ExpConfig;
+use grass::exp::fig9;
+use grass::runtime::Runtime;
+use grass::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let mut cfg = ExpConfig {
+        n_train: 384,
+        epochs: 3,
+        lr: 0.3,
+        ..Default::default()
+    };
+    if args.get_bool("fast") {
+        cfg.n_train = 96;
+        cfg.epochs = 1;
+    }
+    let kl = args.get_usize("kl", 256)?;
+
+    let rt = Runtime::load(Runtime::artifacts_dir())?;
+    let outcome = fig9::run(&rt, &cfg, kl)?;
+    outcome.table.print();
+    println!(
+        "top-10 same-theme fraction: {:.0}% (query theme: '{}'; corpus base rate ≈ 17%)",
+        outcome.top10_theme_hit * 100.0,
+        outcome.query_theme
+    );
+    Ok(())
+}

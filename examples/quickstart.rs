@@ -1,0 +1,100 @@
+//! Quickstart: the whole three-layer stack in one page.
+//!
+//! 1. Load the PJRT runtime and AOT artifacts (`make artifacts` first).
+//! 2. Run the L1 Pallas SJLT kernel through HLO and cross-check it against
+//!    the Rust-native SJLT (same seeded tables — bitwise same projection).
+//! 3. Compress a batch of per-sample MLP gradients with GraSS and compute
+//!    influence scores.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use grass::attrib::influence::InfluenceEngine;
+use grass::data::images::SynthDigits;
+use grass::eval::retrain::{TaskData, Trainer};
+use grass::runtime::{Arg, Runtime};
+use grass::sketch::rng::Pcg;
+use grass::sketch::{sjlt::Sjlt, Compressor, MaskKind, MethodSpec};
+
+fn main() -> Result<()> {
+    let rt = Runtime::load(Runtime::artifacts_dir())?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // --- L1: Pallas SJLT kernel vs Rust-native SJLT -----------------------
+    let exe = rt.executable("kernel_sjlt")?;
+    let (b, p, k) = (4usize, 8192usize, 256usize);
+    let native = Sjlt::new(p, k, 1, 42);
+    let (mut idx, mut sgn) = (vec![0i32; p], vec![0f32; p]);
+    for j in 0..p {
+        let (bucket, sign) = native.bucket_sign(j, 0);
+        idx[j] = bucket as i32;
+        sgn[j] = sign;
+    }
+    let mut rng = Pcg::new(1);
+    let g: Vec<f32> = (0..b * p).map(|_| rng.next_gaussian()).collect();
+    let out = exe
+        .run(&[
+            Arg::F32(g.clone(), vec![b, p]),
+            Arg::I32(idx, vec![p]),
+            Arg::F32(sgn, vec![p]),
+        ])?
+        .remove(0);
+    let want = native.compress(&g[..p]);
+    let max_err = out
+        .row(0)
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("L1 Pallas SJLT vs Rust SJLT: max |Δ| = {max_err:.2e}  ✓");
+
+    // --- L2+L3: per-sample gradients → GraSS → influence ------------------
+    let trainer = Trainer::new(&rt, "mlp")?;
+    let n = 128;
+    let m = 8;
+    let train = SynthDigits::generate(n, 7);
+    let test = SynthDigits::generate(m, 8);
+    let all: Vec<usize> = (0..n).collect();
+    let tidx: Vec<usize> = (0..m).collect();
+    println!("training MLP ({} params) on {n} synthetic digits…", trainer.p);
+    let params = trainer.train(
+        trainer.init(0)?,
+        &TaskData::Labelled(&train),
+        &all,
+        4,
+        0.2,
+        0,
+    )?;
+
+    let g_train = trainer.grads(&params, &TaskData::Labelled(&train), &all)?;
+    let g_test = trainer.grads(&params, &TaskData::Labelled(&test), &tidx)?;
+
+    let spec = MethodSpec::Grass {
+        k: 256,
+        k_prime: 2048,
+        mask: MaskKind::Random,
+    };
+    let c = spec.build(trainer.p, 42);
+    println!("compressing with {} (P = {} → k = 256)…", c.name(), trainer.p);
+    let mut ctr = vec![0.0f32; n * 256];
+    c.compress_batch(&g_train, n, &mut ctr);
+    let mut cte = vec![0.0f32; m * 256];
+    c.compress_batch(&g_test, m, &mut cte);
+
+    let engine = InfluenceEngine::new(256, 1e-3);
+    let scores = engine.attribute(&ctr, n, &cte, m)?;
+    for q in 0..3.min(m) {
+        let srow = &scores[q * n..(q + 1) * n];
+        let best = (0..n)
+            .max_by(|&a, &b| srow[a].partial_cmp(&srow[b]).unwrap())
+            .unwrap();
+        println!(
+            "query {q} (class {}): most influential train sample #{best} (class {}), τ = {:.4}",
+            test.sample(q).1,
+            train.sample(best).1,
+            srow[best]
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,259 @@
+"""AOT compile path: lower every L2/L1 computation to HLO **text** and write
+``artifacts/manifest.json`` describing shapes for the Rust runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; Python never runs again after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import models as M
+from compile.kernels import factgrass as kfact
+from compile.kernels import sjlt as ksjlt
+
+# ---- batch-size contract with the Rust coordinator (runtime/registry.rs) ----
+GRADS_BATCH = {"mlp": 16, "resnet_lite": 16, "gpt2_tiny": 4, "music": 8}
+TRAIN_BATCH = {"mlp": 64, "resnet_lite": 32, "gpt2_tiny": 16, "music": 16}
+LOSS_BATCH = {"mlp": 64, "resnet_lite": 32, "gpt2_tiny": 16, "music": 16}
+HOOKS_BATCH = {"gpt2_tiny": 4, "music": 8}
+
+# Demo kernel shapes (quickstart example + L1↔L3 cross-check).
+SJLT_DEMO = {"b": 4, "p": 8192, "k": 256}
+FACTGRASS_DEMO = {"t": 16, "ki": 32, "ko": 32, "k": 256}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _data_specs(model: M.Model, batch: int):
+    """(x, y) input avals for a model; LMs take tokens only."""
+    if model.name == "mlp":
+        return [
+            (jax.ShapeDtypeStruct((batch, 196), jnp.float32), _spec((batch, 196))),
+            (jax.ShapeDtypeStruct((batch,), jnp.int32), _spec((batch,), "s32")),
+        ]
+    if model.name == "resnet_lite":
+        return [
+            (jax.ShapeDtypeStruct((batch, 3, 16, 16), jnp.float32), _spec((batch, 3, 16, 16))),
+            (jax.ShapeDtypeStruct((batch,), jnp.int32), _spec((batch,), "s32")),
+        ]
+    # LMs: (tokens,)
+    cfg = model.cfg
+    return [
+        (jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32), _spec((batch, cfg.seq), "s32")),
+    ]
+
+
+def lower_model_artifacts(model: M.Model, outdir: pathlib.Path, manifest: dict):
+    p = model.p
+    flat_aval = jax.ShapeDtypeStruct((p,), jnp.float32)
+    lr_aval = jax.ShapeDtypeStruct((), jnp.float32)
+    seed_aval = jax.ShapeDtypeStruct((), jnp.int32)
+    is_lm = isinstance(model, M.TinyLM)
+
+    def emit(name, fn, avals, in_specs, out_specs):
+        path = outdir / f"{name}.hlo.txt"
+        lowered = jax.jit(fn).lower(*avals)
+        path.write_text(to_hlo_text(lowered))
+        manifest["artifacts"][name] = {
+            "file": path.name,
+            "inputs": in_specs,
+            "outputs": out_specs,
+        }
+        print(f"  {name}: {path.stat().st_size/1e6:.2f} MB")
+
+    # init(seed) -> flat params
+    emit(
+        f"{model.name}_init",
+        lambda seed: (model.init(seed),),
+        [seed_aval],
+        [_spec((), "s32")],
+        [_spec((p,))],
+    )
+
+    # train_step(flat, data..., lr) -> flat'
+    tb = TRAIN_BATCH[model.name]
+    data = _data_specs(model, tb)
+    if is_lm:
+        emit(
+            f"{model.name}_train_step",
+            lambda f, t, lr: (model.train_step(f, t, lr),),
+            [flat_aval, data[0][0], lr_aval],
+            [_spec((p,)), data[0][1], _spec((), "f32")],
+            [_spec((p,))],
+        )
+    else:
+        emit(
+            f"{model.name}_train_step",
+            lambda f, x, y, lr: (model.train_step(f, x, y, lr),),
+            [flat_aval, data[0][0], data[1][0], lr_aval],
+            [_spec((p,)), data[0][1], data[1][1], _spec((), "f32")],
+            [_spec((p,))],
+        )
+
+    # loss_batch(flat, data...) -> (B,)
+    lb = LOSS_BATCH[model.name]
+    data = _data_specs(model, lb)
+    if is_lm:
+        emit(
+            f"{model.name}_loss",
+            lambda f, t: (model.loss_batch(f, t),),
+            [flat_aval, data[0][0]],
+            [_spec((p,)), data[0][1]],
+            [_spec((lb,))],
+        )
+    else:
+        emit(
+            f"{model.name}_loss",
+            lambda f, x, y: (model.loss_batch(f, x, y),),
+            [flat_aval, data[0][0], data[1][0]],
+            [_spec((p,)), data[0][1], data[1][1]],
+            [_spec((lb,))],
+        )
+
+    # grads_batch(flat, data...) -> (B, P)
+    gb = GRADS_BATCH[model.name]
+    data = _data_specs(model, gb)
+    if is_lm:
+        emit(
+            f"{model.name}_grads",
+            lambda f, t: (model.grads_batch(f, t),),
+            [flat_aval, data[0][0]],
+            [_spec((p,)), data[0][1]],
+            [_spec((gb, p))],
+        )
+    else:
+        emit(
+            f"{model.name}_grads",
+            lambda f, x, y: (model.grads_batch(f, x, y),),
+            [flat_aval, data[0][0], data[1][0]],
+            [_spec((p,)), data[0][1], data[1][1]],
+            [_spec((gb, p))],
+        )
+
+    model_meta = {"p": p, "params": [[s.name, list(s.shape)] for s in model.specs]}
+
+    # hooks_batch (LoGra interface) for LMs
+    if is_lm and model.name in HOOKS_BATCH:
+        hb = HOOKS_BATCH[model.name]
+        cfg = model.cfg
+        layers = M.lm_linear_layers(cfg)
+        tok_aval = jax.ShapeDtypeStruct((hb, cfg.seq), jnp.int32)
+        out_specs = [_spec((hb, cfg.seq, d_in)) for (_, d_in, _) in layers] + [
+            _spec((hb, cfg.seq, d_out)) for (_, _, d_out) in layers
+        ]
+        emit(
+            f"{model.name}_hooks",
+            lambda f, t: model.hooks_batch(f, t),
+            [flat_aval, tok_aval],
+            [_spec((p,)), _spec((hb, cfg.seq), "s32")],
+            out_specs,
+        )
+        model_meta["layers"] = [[n, d_in, d_out] for (n, d_in, d_out) in layers]
+        model_meta["seq"] = cfg.seq
+        model_meta["vocab"] = cfg.vocab
+
+    manifest["models"][model.name] = model_meta
+
+
+def lower_kernel_artifacts(outdir: pathlib.Path, manifest: dict):
+    """The L1 Pallas kernels as standalone executables (runtime tables are
+    inputs, so the Rust side drives them with its own counter-based SJLT)."""
+    b, p, k = SJLT_DEMO["b"], SJLT_DEMO["p"], SJLT_DEMO["k"]
+    g = jax.ShapeDtypeStruct((b, p), jnp.float32)
+    idx = jax.ShapeDtypeStruct((p,), jnp.int32)
+    sgn = jax.ShapeDtypeStruct((p,), jnp.float32)
+    lowered = jax.jit(lambda g_, i_, s_: (ksjlt.sjlt(g_, i_, s_, k),)).lower(g, idx, sgn)
+    path = outdir / "kernel_sjlt.hlo.txt"
+    path.write_text(to_hlo_text(lowered))
+    manifest["artifacts"]["kernel_sjlt"] = {
+        "file": path.name,
+        "inputs": [_spec((b, p)), _spec((p,), "s32"), _spec((p,))],
+        "outputs": [_spec((b, k))],
+        "meta": SJLT_DEMO,
+    }
+    print(f"  kernel_sjlt: {path.stat().st_size/1e6:.2f} MB")
+
+    t, ki, ko, k2 = (
+        FACTGRASS_DEMO["t"],
+        FACTGRASS_DEMO["ki"],
+        FACTGRASS_DEMO["ko"],
+        FACTGRASS_DEMO["k"],
+    )
+    x = jax.ShapeDtypeStruct((t, ki), jnp.float32)
+    dy = jax.ShapeDtypeStruct((t, ko), jnp.float32)
+    idx2 = jax.ShapeDtypeStruct((ki * ko,), jnp.int32)
+    sgn2 = jax.ShapeDtypeStruct((ki * ko,), jnp.float32)
+    lowered = jax.jit(
+        lambda x_, d_, i_, s_: (kfact.factgrass_compress(x_, d_, i_, s_, k2),)
+    ).lower(x, dy, idx2, sgn2)
+    path = outdir / "kernel_factgrass.hlo.txt"
+    path.write_text(to_hlo_text(lowered))
+    manifest["artifacts"]["kernel_factgrass"] = {
+        "file": path.name,
+        "inputs": [_spec((t, ki)), _spec((t, ko)), _spec((ki * ko,), "s32"), _spec((ki * ko,))],
+        "outputs": [_spec((k2,))],
+        "meta": FACTGRASS_DEMO,
+    }
+    print(f"  kernel_factgrass: {path.stat().st_size/1e6:.2f} MB")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--models",
+        default="mlp,resnet_lite,gpt2_tiny,music",
+        help="comma-separated model subset",
+    )
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "artifacts": {},
+        "models": {},
+        "batch_sizes": {
+            "grads": GRADS_BATCH,
+            "train": TRAIN_BATCH,
+            "loss": LOSS_BATCH,
+            "hooks": HOOKS_BATCH,
+        },
+    }
+    for name in args.models.split(","):
+        model = M.get_model(name.strip())
+        print(f"[aot] lowering {model.name} (P = {model.p:,})")
+        lower_model_artifacts(model, outdir, manifest)
+    print("[aot] lowering L1 kernels")
+    lower_kernel_artifacts(outdir, manifest)
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"[aot] wrote {outdir / 'manifest.json'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

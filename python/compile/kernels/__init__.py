@@ -1,0 +1,2 @@
+"""L1 Pallas kernels for GraSS: SJLT sparse projection and the FactGraSS
+factorized compress step, plus pure-jnp oracles (ref.py)."""

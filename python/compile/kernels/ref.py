@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest (including the
+hypothesis shape/dtype sweeps in ``python/tests``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sjlt_ref(g: jnp.ndarray, idx: jnp.ndarray, sgn: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Reference SJLT with s=1: scatter-add ``sgn[j] * g[..., j]`` into bucket
+    ``idx[j]``.
+
+    Args:
+      g: ``(..., p)`` input vectors.
+      idx: ``(p,)`` int32 bucket per input coordinate, values in ``[0, k)``.
+      sgn: ``(p,)`` float ±1 signs.
+      k: output dimension.
+
+    Returns:
+      ``(..., k)`` compressed vectors.
+    """
+    signed = g * sgn  # broadcast over leading dims
+    out_shape = g.shape[:-1] + (k,)
+    flat = signed.reshape(-1, g.shape[-1])
+    out = jnp.zeros((flat.shape[0], k), dtype=g.dtype)
+    out = out.at[:, idx].add(flat)
+    return out.reshape(out_shape)
+
+
+def kron_reconstruct_ref(x: jnp.ndarray, dy: jnp.ndarray) -> jnp.ndarray:
+    """Reference sparsified-gradient reconstruction (paper Eq. 2/3):
+
+    ``g'[a*ko + b] = sum_t x[t, a] * dy[t, b]``  ==  ``vec(x^T dy)``.
+
+    Args:
+      x: ``(T, ki)`` masked layer inputs.
+      dy: ``(T, ko)`` masked pre-activation gradients.
+
+    Returns:
+      ``(ki * ko,)`` reconstructed sparsified gradient.
+    """
+    return (x.T @ dy).reshape(-1)
+
+
+def factgrass_ref(
+    x: jnp.ndarray,
+    dy: jnp.ndarray,
+    idx: jnp.ndarray,
+    sgn: jnp.ndarray,
+    k: int,
+) -> jnp.ndarray:
+    """Reference FactGraSS stage 2+3: Kronecker reconstruction then SJLT.
+
+    Args:
+      x: ``(T, ki)`` masked inputs; dy: ``(T, ko)`` masked output grads.
+      idx/sgn: SJLT tables over ``p' = ki * ko``.
+      k: target compressed dimension.
+    """
+    g = kron_reconstruct_ref(x, dy)
+    return sjlt_ref(g, idx, sgn, k)

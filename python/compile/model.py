@@ -1,0 +1,15 @@
+"""Thin re-export kept for the canonical repo layout; see ``models.py``."""
+
+from compile.models import (  # noqa: F401
+    MODELS,
+    LmConfig,
+    Model,
+    ParamSpec,
+    TinyLM,
+    get_model,
+    lm_linear_layers,
+    make_gpt2_tiny,
+    make_mlp,
+    make_music_transformer,
+    make_resnet_lite,
+)

@@ -1,0 +1,453 @@
+"""L2 JAX models — the compute graphs the Rust coordinator drives via PJRT.
+
+Every model exposes the same flat-parameter interface so the Rust side only
+ever handles a single ``f32[P]`` vector plus data tensors:
+
+  * ``init(seed) -> params_flat``                      (f32[P])
+  * ``train_step(params_flat, x, y, lr) -> params_flat'``  (SGD)
+  * ``loss_batch(params_flat, x, y) -> f32[B]``        (per-sample losses)
+  * ``grads_batch(params_flat, x, y) -> f32[B, P]``    (per-sample gradients,
+    a single vmap∘grad — no recomputation, one backward per sample)
+
+The transformer LM additionally exposes the LoGra interface needed by the
+factorized compressors (paper §3.3.2):
+
+  * ``hooks_batch(params_flat, tokens) ->``
+    per-linear-layer ``(z_in (B,T,d_in), D z_out (B,T,d_out))`` pairs,
+    captured with the zero-perturbation trick: ``y = W x + b + eps`` with
+    ``eps ≡ 0``, so ``∂loss/∂eps`` *is* the pre-activation gradient.
+
+Models (paper Table 3 analogues, scaled for the CPU testbed):
+  * ``MLP``        — 3-layer MLP, 14×14 digit images (MNIST analogue).
+  * ``ResNetLite`` — small residual convnet, 16×16×3 (CIFAR2 analogue).
+  * ``TinyLM``     — decoder-only transformer; GPT2-small analogue and,
+    with music hyper-parameters, the MusicTransformer/MAESTRO analogue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Flat-parameter plumbing
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Name and shape of one parameter tensor, in flat-vector order."""
+
+    name: str
+    shape: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        size = 1
+        for d in self.shape:
+            size *= d
+        return size
+
+
+def flatten_params(specs: list[ParamSpec], tree: dict) -> jnp.ndarray:
+    return jnp.concatenate([tree[s.name].reshape(-1) for s in specs])
+
+
+def unflatten_params(specs: list[ParamSpec], flat: jnp.ndarray) -> dict:
+    out = {}
+    off = 0
+    for s in specs:
+        out[s.name] = jax.lax.dynamic_slice_in_dim(flat, off, s.size).reshape(s.shape)
+        off += s.size
+    return out
+
+
+def param_count(specs: list[ParamSpec]) -> int:
+    return sum(s.size for s in specs)
+
+
+def _glorot(key, shape):
+    fan_in = shape[-1] if len(shape) > 1 else shape[0]
+    fan_out = shape[0] if len(shape) > 1 else shape[0]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Model base: shared factory for the flat-parameter API
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    """A model with a flat-parameter functional API (see module docstring)."""
+
+    name: str
+    specs: list[ParamSpec]
+    # loss_single(params_tree, x_single, y_single) -> scalar
+    loss_single: Callable
+    init_tree: Callable  # (key) -> params_tree
+
+    @property
+    def p(self) -> int:
+        return param_count(self.specs)
+
+    # ---- jax-level functions (lowered by aot.py) ----
+
+    def init(self, seed: jnp.ndarray) -> jnp.ndarray:
+        key = jax.random.PRNGKey(seed)
+        return flatten_params(self.specs, self.init_tree(key))
+
+    def loss_batch(self, flat, x, y):
+        tree = unflatten_params(self.specs, flat)
+        return jax.vmap(lambda xs, ys: self.loss_single(tree, xs, ys))(x, y)
+
+    def mean_loss(self, flat, x, y):
+        return jnp.mean(self.loss_batch(flat, x, y))
+
+    def train_step(self, flat, x, y, lr):
+        g = jax.grad(self.mean_loss)(flat, x, y)
+        return flat - lr * g
+
+    def grads_batch(self, flat, x, y):
+        """Per-sample gradients as a (B, P) matrix — one vmap∘grad."""
+
+        def grad_one(xs, ys):
+            return jax.grad(lambda f: self.loss_single(unflatten_params(self.specs, f), xs, ys))(
+                flat
+            )
+
+        return jax.vmap(grad_one)(x, y)
+
+
+# --------------------------------------------------------------------------
+# MLP (MNIST analogue)
+# --------------------------------------------------------------------------
+
+
+def make_mlp(d_in: int = 196, hidden: tuple[int, ...] = (256, 128), n_classes: int = 10) -> Model:
+    """3-layer ReLU MLP on flattened digit images (paper Table 1a substrate).
+
+    ReLU is deliberate: it induces the per-sample gradient sparsity the
+    paper's §3.1 builds on (zero pre-activations kill whole gradient rows).
+    """
+    dims = (d_in,) + hidden + (n_classes,)
+    specs = []
+    for i in range(len(dims) - 1):
+        specs.append(ParamSpec(f"w{i}", (dims[i + 1], dims[i])))
+        specs.append(ParamSpec(f"b{i}", (dims[i + 1],)))
+
+    def init_tree(key):
+        tree = {}
+        for i in range(len(dims) - 1):
+            key, k1 = jax.random.split(key)
+            tree[f"w{i}"] = _glorot(k1, (dims[i + 1], dims[i]))
+            tree[f"b{i}"] = jnp.zeros((dims[i + 1],), dtype=jnp.float32)
+        return tree
+
+    n_layers = len(dims) - 1
+
+    def loss_single(tree, x, y):
+        h = x
+        for i in range(n_layers):
+            h = tree[f"w{i}"] @ h + tree[f"b{i}"]
+            if i + 1 < n_layers:
+                h = jax.nn.relu(h)
+        logp = jax.nn.log_softmax(h)
+        return -logp[y]
+
+    return Model("mlp", specs, loss_single, init_tree)
+
+
+# --------------------------------------------------------------------------
+# ResNet-lite convnet (CIFAR2 analogue)
+# --------------------------------------------------------------------------
+
+
+def make_resnet_lite(
+    image: int = 16, channels: int = 3, width: int = 16, n_classes: int = 2
+) -> Model:
+    """A small residual convnet: conv → 2 residual blocks (stride-2 between)
+    → global-avg-pool → linear. ResNet9-in-miniature for Table 1b."""
+    c1, c2 = width, width * 2
+    specs = [
+        ParamSpec("conv0", (c1, channels, 3, 3)),
+        ParamSpec("b0", (c1,)),
+        ParamSpec("conv1a", (c1, c1, 3, 3)),
+        ParamSpec("b1a", (c1,)),
+        ParamSpec("conv1b", (c1, c1, 3, 3)),
+        ParamSpec("b1b", (c1,)),
+        ParamSpec("conv2", (c2, c1, 3, 3)),  # stride 2
+        ParamSpec("b2", (c2,)),
+        ParamSpec("conv3a", (c2, c2, 3, 3)),
+        ParamSpec("b3a", (c2,)),
+        ParamSpec("conv3b", (c2, c2, 3, 3)),
+        ParamSpec("b3b", (c2,)),
+        ParamSpec("wout", (n_classes, c2)),
+        ParamSpec("bout", (n_classes,)),
+    ]
+
+    def init_tree(key):
+        tree = {}
+        for s in specs:
+            key, k1 = jax.random.split(key)
+            if len(s.shape) == 4:
+                fan_in = s.shape[1] * s.shape[2] * s.shape[3]
+                tree[s.name] = jnp.sqrt(2.0 / fan_in) * jax.random.normal(
+                    k1, s.shape, dtype=jnp.float32
+                )
+            elif len(s.shape) == 2:
+                tree[s.name] = _glorot(k1, s.shape)
+            else:
+                tree[s.name] = jnp.zeros(s.shape, dtype=jnp.float32)
+        return tree
+
+    def conv(x, w, b, stride=1):
+        # x: (C, H, W) single sample -> NCHW with N=1
+        y = jax.lax.conv_general_dilated(
+            x[None],
+            w,
+            window_strides=(stride, stride),
+            padding="SAME",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )[0]
+        return y + b[:, None, None]
+
+    def loss_single(tree, x, y):
+        h = jax.nn.relu(conv(x, tree["conv0"], tree["b0"]))
+        # residual block 1
+        r = jax.nn.relu(conv(h, tree["conv1a"], tree["b1a"]))
+        r = conv(r, tree["conv1b"], tree["b1b"])
+        h = jax.nn.relu(h + r)
+        # downsample
+        h = jax.nn.relu(conv(h, tree["conv2"], tree["b2"], stride=2))
+        # residual block 2
+        r = jax.nn.relu(conv(h, tree["conv3a"], tree["b3a"]))
+        r = conv(r, tree["conv3b"], tree["b3b"])
+        h = jax.nn.relu(h + r)
+        # global average pool + linear
+        feat = h.mean(axis=(1, 2))
+        logits = tree["wout"] @ feat + tree["bout"]
+        logp = jax.nn.log_softmax(logits)
+        return -logp[y]
+
+    return Model("resnet_lite", specs, loss_single, init_tree)
+
+
+# --------------------------------------------------------------------------
+# Tiny decoder-only transformer LM (GPT2-small / MusicTransformer analogue)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LmConfig:
+    vocab: int = 256
+    seq: int = 64
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 256
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+#: The linear layers hooked for LoGra/FactGraSS, per block:
+#: (name, d_in, d_out) — qkv fused, attention output, and the two MLP mats.
+def lm_linear_layers(cfg: LmConfig) -> list[tuple[str, int, int]]:
+    layers = []
+    for b in range(cfg.n_layers):
+        layers.append((f"blk{b}.qkv", cfg.d_model, 3 * cfg.d_model))
+        layers.append((f"blk{b}.proj", cfg.d_model, cfg.d_model))
+        layers.append((f"blk{b}.fc1", cfg.d_model, cfg.d_ff))
+        layers.append((f"blk{b}.fc2", cfg.d_ff, cfg.d_model))
+    return layers
+
+
+class TinyLM(Model):
+    """Decoder-only transformer with pre-LN blocks and a tied LM head."""
+
+    def __init__(self, cfg: LmConfig, name: str = "lm"):
+        self.cfg = cfg
+        specs = [
+            ParamSpec("embed", (cfg.vocab, cfg.d_model)),
+            ParamSpec("pos", (cfg.seq, cfg.d_model)),
+        ]
+        for b in range(cfg.n_layers):
+            specs += [
+                ParamSpec(f"blk{b}.ln1_g", (cfg.d_model,)),
+                ParamSpec(f"blk{b}.ln1_b", (cfg.d_model,)),
+                ParamSpec(f"blk{b}.qkv_w", (3 * cfg.d_model, cfg.d_model)),
+                ParamSpec(f"blk{b}.qkv_b", (3 * cfg.d_model,)),
+                ParamSpec(f"blk{b}.proj_w", (cfg.d_model, cfg.d_model)),
+                ParamSpec(f"blk{b}.proj_b", (cfg.d_model,)),
+                ParamSpec(f"blk{b}.ln2_g", (cfg.d_model,)),
+                ParamSpec(f"blk{b}.ln2_b", (cfg.d_model,)),
+                ParamSpec(f"blk{b}.fc1_w", (cfg.d_ff, cfg.d_model)),
+                ParamSpec(f"blk{b}.fc1_b", (cfg.d_ff,)),
+                ParamSpec(f"blk{b}.fc2_w", (cfg.d_model, cfg.d_ff)),
+                ParamSpec(f"blk{b}.fc2_b", (cfg.d_model,)),
+            ]
+        specs += [ParamSpec("lnf_g", (cfg.d_model,)), ParamSpec("lnf_b", (cfg.d_model,))]
+
+        def init_tree(key):
+            tree = {}
+            for s in specs:
+                key, k1 = jax.random.split(key)
+                if s.name.endswith("_g"):
+                    tree[s.name] = jnp.ones(s.shape, dtype=jnp.float32)
+                elif len(s.shape) == 1:
+                    tree[s.name] = jnp.zeros(s.shape, dtype=jnp.float32)
+                elif s.name in ("embed", "pos"):
+                    tree[s.name] = 0.02 * jax.random.normal(k1, s.shape, dtype=jnp.float32)
+                else:
+                    tree[s.name] = _glorot(k1, s.shape)
+            return tree
+
+        super().__init__(
+            name=name,
+            specs=specs,
+            loss_single=self._loss_single,
+            init_tree=init_tree,
+        )
+
+    # ---- forward ----
+
+    @staticmethod
+    def _ln(x, g, b):
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        return g * (x - mu) * jax.lax.rsqrt(var + 1e-5) + b
+
+    def _block(self, tree, b, h, eps=None):
+        """One transformer block; ``eps`` optionally carries the
+        zero-perturbations for pre-activation gradient capture, alongside a
+        list collecting layer inputs."""
+        cfg = self.cfg
+        T = h.shape[0]
+
+        def lin(x, w, bb, tag):
+            y = x @ w.T + bb
+            if eps is not None:
+                eps["x"].append((tag, x))
+                y = y + eps["eps"][tag]
+            return y
+
+        x1 = self._ln(h, tree[f"blk{b}.ln1_g"], tree[f"blk{b}.ln1_b"])
+        qkv = lin(x1, tree[f"blk{b}.qkv_w"], tree[f"blk{b}.qkv_b"], f"blk{b}.qkv")
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        hd = cfg.head_dim
+        q = q.reshape(T, cfg.n_heads, hd).transpose(1, 0, 2)
+        k = k.reshape(T, cfg.n_heads, hd).transpose(1, 0, 2)
+        v = v.reshape(T, cfg.n_heads, hd).transpose(1, 0, 2)
+        att = (q @ k.transpose(0, 2, 1)) / jnp.sqrt(hd).astype(jnp.float32)
+        mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+        att = jnp.where(mask[None], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        o = (att @ v).transpose(1, 0, 2).reshape(T, cfg.d_model)
+        h = h + lin(o, tree[f"blk{b}.proj_w"], tree[f"blk{b}.proj_b"], f"blk{b}.proj")
+        x2 = self._ln(h, tree[f"blk{b}.ln2_g"], tree[f"blk{b}.ln2_b"])
+        f = jax.nn.gelu(lin(x2, tree[f"blk{b}.fc1_w"], tree[f"blk{b}.fc1_b"], f"blk{b}.fc1"))
+        h = h + lin(f, tree[f"blk{b}.fc2_w"], tree[f"blk{b}.fc2_b"], f"blk{b}.fc2")
+        return h
+
+    def _logits(self, tree, tokens, eps=None):
+        cfg = self.cfg
+        h = tree["embed"][tokens] + tree["pos"]
+        for b in range(cfg.n_layers):
+            h = self._block(tree, b, h, eps)
+        h = self._ln(h, tree["lnf_g"], tree["lnf_b"])
+        return h @ tree["embed"].T  # tied head
+
+    def _loss_single(self, tree, tokens, _y_unused=None):
+        """Next-token cross-entropy over one (T,) token sequence."""
+        logits = self._logits(tree, tokens)  # (T, V)
+        logp = jax.nn.log_softmax(logits[:-1])
+        tgt = tokens[1:]
+        return -jnp.take_along_axis(logp, tgt[:, None], axis=1).mean()
+
+    # LM data is (tokens,) only — adapt the generic API.
+    def loss_batch(self, flat, tokens, y=None):
+        tree = unflatten_params(self.specs, flat)
+        return jax.vmap(lambda t: self._loss_single(tree, t))(tokens)
+
+    def mean_loss(self, flat, tokens, y=None):
+        return jnp.mean(self.loss_batch(flat, tokens))
+
+    def train_step(self, flat, tokens, lr, y=None):
+        g = jax.grad(lambda f: jnp.mean(self.loss_batch(f, tokens)))(flat)
+        return flat - lr * g
+
+    def grads_batch(self, flat, tokens, y=None):
+        def grad_one(t):
+            return jax.grad(
+                lambda f: self._loss_single(unflatten_params(self.specs, f), t)
+            )(flat)
+
+        return jax.vmap(grad_one)(tokens)
+
+    # ---- LoGra hook capture ----
+
+    def hooks_single(self, flat, tokens):
+        """Per-linear-layer (z_in, D z_out) for one sequence.
+
+        Returns two tuples ordered as ``lm_linear_layers(cfg)``:
+        xs[i] is (T, d_in_i), dys[i] is (T, d_out_i).
+        """
+        tree = unflatten_params(self.specs, flat)
+        layers = lm_linear_layers(self.cfg)
+        T = self.cfg.seq
+
+        def loss_wrt_eps(eps_list):
+            eps = {
+                "eps": {name: e for (name, _, _), e in zip(layers, eps_list)},
+                "x": [],
+            }
+            logits = self._logits(tree, tokens, eps)
+            logp = jax.nn.log_softmax(logits[:-1])
+            tgt = tokens[1:]
+            loss = -jnp.take_along_axis(logp, tgt[:, None], axis=1).mean()
+            xs = {tag: x for tag, x in eps["x"]}
+            return loss, tuple(xs[name] for (name, _, _) in layers)
+
+        zeros = tuple(jnp.zeros((T, d_out), dtype=jnp.float32) for (_, _, d_out) in layers)
+        dys, xs = jax.grad(loss_wrt_eps, has_aux=True)(zeros)
+        return xs, dys
+
+    def hooks_batch(self, flat, tokens):
+        """Batched hook capture: returns (xs..., dys...) flattened for AOT —
+        2·L arrays, first all xs (B,T,d_in_l), then all dys (B,T,d_out_l)."""
+        xs, dys = jax.vmap(lambda t: self.hooks_single(flat, t))(tokens)
+        return tuple(xs) + tuple(dys)
+
+
+def make_gpt2_tiny() -> TinyLM:
+    """GPT2-small analogue for Table 1d (scaled; see DESIGN.md §5)."""
+    return TinyLM(LmConfig(vocab=256, seq=64, d_model=128, n_heads=4, n_layers=2, d_ff=256),
+                  name="gpt2_tiny")
+
+
+def make_music_transformer() -> TinyLM:
+    """MusicTransformer/MAESTRO analogue for Table 1c: event-vocabulary LM."""
+    return TinyLM(LmConfig(vocab=128, seq=32, d_model=64, n_heads=4, n_layers=2, d_ff=128),
+                  name="music")
+
+
+# Registry used by aot.py and tests.
+MODELS: dict[str, Callable[[], Model]] = {
+    "mlp": make_mlp,
+    "resnet_lite": make_resnet_lite,
+    "gpt2_tiny": make_gpt2_tiny,
+    "music": make_music_transformer,
+}
+
+
+@functools.cache
+def get_model(name: str) -> Model:
+    return MODELS[name]()

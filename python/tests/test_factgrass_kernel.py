@@ -1,0 +1,84 @@
+"""L1 correctness: the Pallas FactGraSS kernel (Kron-reconstruct + SJLT)
+vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.factgrass import factgrass_compress, factgrass_compress_batch
+
+
+def _problem(t, ki, ko, k, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kd, kidx, ksgn = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (t, ki), dtype=jnp.float32)
+    dy = jax.random.normal(kd, (t, ko), dtype=jnp.float32)
+    idx = jax.random.randint(kidx, (ki * ko,), 0, k, dtype=jnp.int32)
+    sgn = jax.random.rademacher(ksgn, (ki * ko,), dtype=jnp.float32)
+    return x, dy, idx, sgn
+
+
+def test_matches_ref():
+    x, dy, idx, sgn = _problem(t=8, ki=16, ko=12, k=32, seed=0)
+    out = factgrass_compress(x, dy, idx, sgn, 32)
+    want = ref.factgrass_ref(x, dy, idx, sgn, 32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_reconstruction_is_sum_of_kroneckers():
+    # The kernel's stage-2 must equal sum_t x_t ⊗ dy_t (paper Eq. 3).
+    x, dy, idx, sgn = _problem(t=5, ki=4, ko=3, k=12, seed=1)
+    explicit = jnp.zeros((4 * 3,), dtype=jnp.float32)
+    for ti in range(5):
+        explicit = explicit + jnp.kron(x[ti], dy[ti])
+    want = ref.sjlt_ref(explicit, idx, sgn, 12)
+    out = factgrass_compress(x, dy, idx, sgn, 12)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_batch_matches_loop():
+    b = 3
+    key = jax.random.PRNGKey(2)
+    kx, kd = jax.random.split(key)
+    x = jax.random.normal(kx, (b, 8, 16), dtype=jnp.float32)
+    dy = jax.random.normal(kd, (b, 8, 12), dtype=jnp.float32)
+    _, _, idx, sgn = _problem(t=8, ki=16, ko=12, k=24, seed=3)
+    batched = factgrass_compress_batch(x, dy, idx, sgn, 24)
+    for i in range(b):
+        one = factgrass_compress(x[i], dy[i], idx, sgn, 24)
+        np.testing.assert_allclose(np.asarray(batched[i]), np.asarray(one), rtol=1e-5, atol=1e-5)
+
+
+def test_never_materializes_full_gradient():
+    # Structural check: for d_in = d_out = 256 with ki = ko = 8, the lowered
+    # HLO must not contain a 256·256 = 65536-element intermediate.
+    x, dy, idx, sgn = _problem(t=4, ki=8, ko=8, k=16, seed=4)
+    lowered = jax.jit(lambda a, b, c, d: factgrass_compress(a, b, c, d, 16)).lower(
+        x, dy, idx, sgn
+    )
+    text = lowered.compiler_ir("hlo").as_hlo_text()
+    assert "65536" not in text
+
+
+def test_linearity_in_dy():
+    x, dy, idx, sgn = _problem(t=8, ki=16, ko=12, k=32, seed=5)
+    out1 = factgrass_compress(x, dy, idx, sgn, 32)
+    out2 = factgrass_compress(x, 3.0 * dy, idx, sgn, 32)
+    np.testing.assert_allclose(np.asarray(out2), 3.0 * np.asarray(out1), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(min_value=1, max_value=32),
+    ki=st.integers(min_value=2, max_value=32),
+    ko=st.integers(min_value=2, max_value=32),
+    k=st.integers(min_value=2, max_value=128),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_shapes(t, ki, ko, k, seed):
+    x, dy, idx, sgn = _problem(t=t, ki=ki, ko=ko, k=k, seed=seed)
+    out = factgrass_compress(x, dy, idx, sgn, k)
+    want = ref.factgrass_ref(x, dy, idx, sgn, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-3, atol=1e-3)

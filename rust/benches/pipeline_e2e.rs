@@ -1,0 +1,58 @@
+//! Bench: the staged cache pipeline end-to-end (PJRT grad workers →
+//! compress → store writer) on the MLP workload — the coordinator-level
+//! throughput number (samples/s) that backs EXPERIMENTS.md §Perf.
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench pipeline_e2e`
+
+use grass::coordinator::{pipeline::Source, CachePipeline, CompressorBank, PipelineConfig};
+use grass::data::images::SynthDigits;
+use grass::runtime::{Arg, Runtime};
+use grass::sketch::MethodSpec;
+
+fn main() {
+    let dir = Runtime::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("pipeline_e2e: skipping (run `make artifacts` first)");
+        return;
+    }
+    let rt = Runtime::load(dir).expect("runtime");
+    let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
+    let n = if fast { 64 } else { 512 };
+    let p = rt.manifest.model("mlp").unwrap().p;
+    let data = SynthDigits::generate(n, 3);
+    let params = rt
+        .executable("mlp_init")
+        .unwrap()
+        .run(&[Arg::ScalarI32(0)])
+        .unwrap()
+        .remove(0)
+        .data;
+    let store = std::env::temp_dir().join(format!("grass_bench_pipe_{}", std::process::id()));
+
+    println!("== cache pipeline e2e (MLP, n = {n}) ==");
+    for (gw, cw) in [(1usize, 1usize), (2, 2), (4, 2)] {
+        let spec = MethodSpec::Sjlt { k: 1024, s: 1 };
+        let bank = CompressorBank::Flat(spec.build(p, 42));
+        let pipeline = CachePipeline::new(
+            &rt,
+            "mlp",
+            params.clone(),
+            PipelineConfig {
+                grad_workers: gw,
+                compress_workers: cw,
+                queue_depth: 4,
+                shard_rows: 4096,
+            },
+        );
+        let _ = std::fs::remove_dir_all(&store);
+        pipeline
+            .run_flat(&Source::Labelled(&data), &bank, &store, "sjlt:k=1024,s=1", 42)
+            .expect("pipeline");
+        println!(
+            "grad_workers={gw} compress_workers={cw}: {:.1} samples/s | {}",
+            pipeline.metrics.samples_per_sec(),
+            pipeline.metrics.report()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&store);
+}

@@ -1,0 +1,66 @@
+//! Bench: Table 1 compression wall-time columns — every compressor over an
+//! MLP-scale gradient batch (P = 84,618), reproducing the time ordering of
+//! Tables 1a–c: masks ≪ GraSS ≪ SJLT ≪ FJLT ≪ Gauss.
+//!
+//! Run: `cargo bench --bench table1_compression`
+
+use grass::sketch::rng::Pcg;
+use grass::sketch::{MaskKind, MethodSpec};
+use grass::util::bench;
+
+fn main() {
+    let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
+    let p = 84_618usize; // MLP parameter count
+    let n = if fast { 8 } else { 64 };
+    let ks: &[usize] = if fast { &[512] } else { &[512, 1024, 2048] };
+    let mut rng = Pcg::new(5);
+    // ~40% zeros, matching the ReLU-induced per-sample gradient sparsity
+    // observed on the trained MLP (paper §3.1).
+    let gs: Vec<f32> = (0..n * p)
+        .map(|_| {
+            if rng.next_f32() < 0.4 {
+                0.0
+            } else {
+                rng.next_gaussian()
+            }
+        })
+        .collect();
+    println!("== Table 1 compression benchmark (P = {p}, batch = {n}) ==");
+    // Ablation: SJLT sparsity parameter s (paper default s = 1).
+    {
+        let k = ks[0];
+        for s in [1usize, 2, 4, 8] {
+            let c = MethodSpec::Sjlt { k, s }.build(p, 42);
+            let mut out = vec![0.0f32; n * k];
+            let r = bench::bench(&format!("ablation SJLT s={s} k={k}"), || {
+                c.compress_batch(&gs, n, &mut out)
+            });
+            println!("{}", r.report());
+        }
+    }
+    for &k in ks {
+        let specs = vec![
+            MethodSpec::RandomMask { k },
+            MethodSpec::Sjlt { k, s: 1 },
+            MethodSpec::Grass {
+                k,
+                k_prime: (4 * k).min(p),
+                mask: MaskKind::Random,
+            },
+            MethodSpec::Fjlt { k },
+            MethodSpec::Gauss { k },
+        ];
+        for spec in specs {
+            let c = spec.build(p, 42);
+            let mut out = vec![0.0f32; n * k];
+            let r = bench::bench(&format!("{} batch={n}", c.name()), || {
+                c.compress_batch(&gs, n, &mut out)
+            });
+            println!("{}", r.report());
+        }
+    }
+}
+
+// Note: an `s`-sweep ablation for SJLT (paper fixes s = 1) is provided by
+// the library test-bench below; run with `cargo bench --bench
+// table1_compression` and compare the SJLT rows.

@@ -1,0 +1,17 @@
+//! Bench: Table 2 — FactGraSS vs LoGra throughput on the exact
+//! Llama-3.1-8B layer geometry. Prints the same rows as the paper.
+//!
+//! Run: `cargo bench --bench table2_throughput`
+
+use grass::exp::table2;
+
+fn main() {
+    let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
+    let (kls, tokens, reps) = if fast {
+        (vec![256], 64, 2)
+    } else {
+        (vec![256, 1024, 4096], 256, 4)
+    };
+    let table = table2::run(&kls, tokens, reps, Some("results/table2.json")).expect("table2");
+    table.print();
+}

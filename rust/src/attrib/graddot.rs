@@ -1,0 +1,44 @@
+//! GradDot (Charpiat et al. 2019): `τ(z_i, z_q) = ⟨g_i, g_q⟩` — the cheap
+//! surrogate the Selective Mask objective (Eq. 1) targets, and a baseline
+//! attributor in its own right.
+
+use crate::util::par;
+
+/// `scores[q][i] = ⟨g_q, g_i⟩` over `n × k` train and `m × k` query
+/// matrices; returns `m × n`.
+pub fn graddot_scores(grads: &[f32], n: usize, k: usize, queries: &[f32], m: usize) -> Vec<f32> {
+    assert_eq!(grads.len(), n * k);
+    assert_eq!(queries.len(), m * k);
+    let mut scores = vec![0.0f32; m * n];
+    par::par_chunks_mut(&mut scores, n, 1, |q_start, chunk| {
+        for (off, srow) in chunk.chunks_mut(n).enumerate() {
+            let q = &queries[(q_start + off) * k..(q_start + off + 1) * k];
+            for (i, s) in srow.iter_mut().enumerate() {
+                let gi = &grads[i * k..(i + 1) * k];
+                *s = q.iter().zip(gi).map(|(a, b)| a * b).sum();
+            }
+        }
+    });
+    scores
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_manual_dot() {
+        let g = [1.0f32, 2.0, 3.0, 4.0]; // 2×2
+        let q = [1.0f32, 1.0]; // 1×2
+        let s = graddot_scores(&g, 2, 2, &q, 1);
+        assert_eq!(s, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn orthogonal_gradients_score_zero() {
+        let g = [1.0f32, 0.0, 0.0, 1.0];
+        let q = [0.0f32, 1.0];
+        let s = graddot_scores(&g, 2, 2, &q, 1);
+        assert_eq!(s, vec![0.0, 1.0]);
+    }
+}

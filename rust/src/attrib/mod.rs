@@ -1,0 +1,21 @@
+//! Gradient-based data attribution on compressed gradients.
+//!
+//! The two-stage pipeline of §2.1:
+//!   cache — per-sample gradients → compress → FIM `F̂ = Σ ĝ ĝᵀ/n` →
+//!            precondition `g̃̂ = (F̂+λI)⁻¹ ĝ`;
+//!   attribute — `τ(z_i, z_q) = ⟨ĝ_q, g̃̂_i⟩`.
+//!
+//! [`fim`] builds and inverts the compressed FIM; [`influence`] is the
+//! monolithic-FIM engine (TRAK-style models); [`blockwise`] is the
+//! layer-wise block-diagonal variant for LMs (§3.3.2); [`trak`] ensembles
+//! checkpoints; [`graddot`] is the cheap surrogate used by Selective Mask.
+
+pub mod blockwise;
+pub mod tracin;
+pub mod fim;
+pub mod graddot;
+pub mod influence;
+pub mod trak;
+
+pub use fim::Preconditioner;
+pub use influence::InfluenceEngine;

@@ -1,0 +1,96 @@
+//! TracIn (Pruthi et al. 2020) — a training-dynamics attributor the paper
+//! lists among the gradient-based methods GraSS accelerates (§2, App A.1.1):
+//! `τ(z_i, z_q) = Σ_c η_c ⟨g_i^{(c)}, g_q^{(c)}⟩` over training checkpoints
+//! `c` with learning rates `η_c`. Because it is a sum of GradDots, it
+//! composes with any [`crate::sketch::Compressor`] exactly like TRAK does —
+//! compressed checkpoint gradients drop in unchanged.
+
+use super::graddot::graddot_scores;
+
+/// One checkpoint's compressed gradients plus its learning rate.
+pub struct TracinCheckpoint {
+    /// `n × k` compressed train gradients at this checkpoint.
+    pub train: Vec<f32>,
+    /// `m × k` compressed query gradients at this checkpoint.
+    pub queries: Vec<f32>,
+    /// Learning rate in effect at this checkpoint.
+    pub lr: f32,
+}
+
+/// TracInCP over compressed gradients: returns `m × n` scores.
+pub fn tracin_scores(
+    checkpoints: &[TracinCheckpoint],
+    n: usize,
+    m: usize,
+    k: usize,
+) -> Vec<f32> {
+    assert!(!checkpoints.is_empty());
+    let mut total = vec![0.0f64; m * n];
+    for ck in checkpoints {
+        assert_eq!(ck.train.len(), n * k);
+        assert_eq!(ck.queries.len(), m * k);
+        let s = graddot_scores(&ck.train, n, k, &ck.queries, m);
+        for (t, &v) in total.iter_mut().zip(&s) {
+            *t += (ck.lr * v) as f64;
+        }
+    }
+    total.into_iter().map(|v| v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    fn ck(n: usize, m: usize, k: usize, lr: f32, seed: u64) -> TracinCheckpoint {
+        let mut rng = Pcg::new(seed);
+        TracinCheckpoint {
+            train: (0..n * k).map(|_| rng.next_gaussian()).collect(),
+            queries: (0..m * k).map(|_| rng.next_gaussian()).collect(),
+            lr,
+        }
+    }
+
+    #[test]
+    fn single_checkpoint_is_scaled_graddot() {
+        let (n, m, k) = (6, 2, 4);
+        let c = ck(n, m, k, 0.5, 1);
+        let scores = tracin_scores(&[c], n, m, k);
+        let c2 = ck(n, m, k, 0.5, 1);
+        let plain = graddot_scores(&c2.train, n, k, &c2.queries, m);
+        for i in 0..m * n {
+            assert!((scores[i] - 0.5 * plain[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sums_over_checkpoints_weighted_by_lr() {
+        let (n, m, k) = (5, 1, 3);
+        let c1 = ck(n, m, k, 1.0, 2);
+        let c2 = ck(n, m, k, 0.1, 3);
+        let both = tracin_scores(
+            &[
+                ck(n, m, k, 1.0, 2),
+                ck(n, m, k, 0.1, 3),
+            ],
+            n,
+            m,
+            k,
+        );
+        let s1 = tracin_scores(&[c1], n, m, k);
+        let s2 = tracin_scores(&[c2], n, m, k);
+        for i in 0..m * n {
+            assert!((both[i] - (s1[i] + s2[i])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_lr_checkpoint_contributes_nothing() {
+        let (n, m, k) = (4, 1, 2);
+        let a = tracin_scores(&[ck(n, m, k, 1.0, 5)], n, m, k);
+        let b = tracin_scores(&[ck(n, m, k, 1.0, 5), ck(n, m, k, 0.0, 6)], n, m, k);
+        for i in 0..m * n {
+            assert!((a[i] - b[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Experiment configuration: JSON-file configs with CLI overrides, so every
+//! table/figure run is reproducible from a checked-in config plus a seed.
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::path::Path;
+
+/// Scale of a quantitative experiment (Table 1 family).
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    /// Training-set size drawn from the synthetic generator.
+    pub n_train: usize,
+    /// Test/query-set size.
+    pub n_test: usize,
+    /// TRAK checkpoints (Table 1a–c).
+    pub checkpoints: usize,
+    /// LDS subsets.
+    pub subsets: usize,
+    /// Subset fraction (paper: 0.5).
+    pub subset_frac: f64,
+    /// SGD epochs per (re)train.
+    pub epochs: usize,
+    pub lr: f32,
+    /// Compression dimensions to sweep.
+    pub ks: Vec<usize>,
+    pub seed: u64,
+    /// Fast mode shrinks everything for CI smoke runs.
+    pub fast: bool,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        Self {
+            n_train: 2000,
+            n_test: 128,
+            checkpoints: 3,
+            subsets: 16,
+            subset_frac: 0.5,
+            epochs: 3,
+            lr: 0.1,
+            ks: vec![512, 1024, 2048],
+            seed: 42,
+            fast: false,
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Load from a JSON file (missing keys fall back to defaults).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let j = Json::parse(&std::fs::read_to_string(path)?)?;
+        let mut cfg = Self::default();
+        cfg.apply_json(&j);
+        Ok(cfg)
+    }
+
+    fn apply_json(&mut self, j: &Json) {
+        let get = |k: &str| j.get(k).and_then(|v| v.as_usize());
+        if let Some(v) = get("n_train") {
+            self.n_train = v;
+        }
+        if let Some(v) = get("n_test") {
+            self.n_test = v;
+        }
+        if let Some(v) = get("checkpoints") {
+            self.checkpoints = v;
+        }
+        if let Some(v) = get("subsets") {
+            self.subsets = v;
+        }
+        if let Some(v) = j.get("subset_frac").and_then(|v| v.as_f64()) {
+            self.subset_frac = v;
+        }
+        if let Some(v) = get("epochs") {
+            self.epochs = v;
+        }
+        if let Some(v) = j.get("lr").and_then(|v| v.as_f64()) {
+            self.lr = v as f32;
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_u64()) {
+            self.seed = v;
+        }
+        if let Some(arr) = j.get("ks").and_then(|v| v.as_arr()) {
+            self.ks = arr.iter().filter_map(|v| v.as_usize()).collect();
+        }
+    }
+
+    /// Apply CLI overrides (`--n-train`, `--subsets`, `--ks 512,1024`, …).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        self.n_train = args.get_usize("n-train", self.n_train)?;
+        self.n_test = args.get_usize("n-test", self.n_test)?;
+        self.checkpoints = args.get_usize("checkpoints", self.checkpoints)?;
+        self.subsets = args.get_usize("subsets", self.subsets)?;
+        self.subset_frac = args.get_f64("subset-frac", self.subset_frac)?;
+        self.epochs = args.get_usize("epochs", self.epochs)?;
+        self.lr = args.get_f64("lr", self.lr as f64)? as f32;
+        self.seed = args.get_u64("seed", self.seed)?;
+        self.ks = args.get_usize_list("ks", &self.ks)?;
+        if args.get_bool("fast") {
+            self.fast = true;
+            self.n_train = self.n_train.min(400);
+            self.n_test = self.n_test.min(32);
+            self.checkpoints = self.checkpoints.min(2);
+            self.subsets = self.subsets.min(6);
+            self.epochs = self.epochs.min(1);
+            self.ks.truncate(1);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let mut cfg = ExpConfig::default();
+        let args = Args::parse(
+            ["x", "--n-train", "100", "--ks", "8,16", "--seed", "9"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.n_train, 100);
+        assert_eq!(cfg.ks, vec![8, 16]);
+        assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn fast_mode_shrinks() {
+        let mut cfg = ExpConfig::default();
+        let args =
+            Args::parse(["x", "--fast"].iter().map(|s| s.to_string())).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.fast);
+        assert!(cfg.n_train <= 400);
+        assert_eq!(cfg.ks.len(), 1);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("grass_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"n_train": 77, "ks": [4], "lr": 0.5}"#).unwrap();
+        let cfg = ExpConfig::from_file(&p).unwrap();
+        assert_eq!(cfg.n_train, 77);
+        assert_eq!(cfg.ks, vec![4]);
+        assert!((cfg.lr - 0.5).abs() < 1e-6);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

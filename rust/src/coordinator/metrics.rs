@@ -1,0 +1,91 @@
+//! Pipeline metrics: atomic counters sampled by the leader, plus a
+//! throughput report matching the paper's Table 2 units (tokens/s for LMs,
+//! samples/s otherwise).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Metrics {
+    start: Instant,
+    pub samples: AtomicU64,
+    pub tokens: AtomicU64,
+    pub batches: AtomicU64,
+    pub rows_written: AtomicU64,
+    /// Nanoseconds spent inside each stage (summed across workers).
+    pub grad_ns: AtomicU64,
+    pub compress_ns: AtomicU64,
+    pub write_ns: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+            samples: AtomicU64::new(0),
+            tokens: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            rows_written: AtomicU64::new(0),
+            grad_ns: AtomicU64::new(0),
+            compress_ns: AtomicU64::new(0),
+            write_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn add(&self, counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn samples_per_sec(&self) -> f64 {
+        self.samples.load(Ordering::Relaxed) as f64 / self.elapsed_secs().max(1e-9)
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens.load(Ordering::Relaxed) as f64 / self.elapsed_secs().max(1e-9)
+    }
+
+    pub fn report(&self) -> String {
+        let load = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        format!(
+            "samples={} tokens={} batches={} rows_written={} elapsed={:.2}s \
+             throughput={:.1} samples/s ({:.0} tok/s) | stage-time grad={:.2}s \
+             compress={:.2}s write={:.2}s",
+            load(&self.samples),
+            load(&self.tokens),
+            load(&self.batches),
+            load(&self.rows_written),
+            self.elapsed_secs(),
+            self.samples_per_sec(),
+            self.tokens_per_sec(),
+            load(&self.grad_ns) as f64 / 1e9,
+            load(&self.compress_ns) as f64 / 1e9,
+            load(&self.write_ns) as f64 / 1e9,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.add(&m.samples, 10);
+        m.add(&m.samples, 5);
+        m.add(&m.tokens, 640);
+        assert_eq!(m.samples.load(Ordering::Relaxed), 15);
+        assert!(m.samples_per_sec() > 0.0);
+        assert!(m.report().contains("samples=15"));
+    }
+}

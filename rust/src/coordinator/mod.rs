@@ -1,0 +1,24 @@
+//! The cache-stage coordinator — GraSS's L3 runtime contribution.
+//!
+//! Pipeline (all stages bounded, so a slow stage backpressures upstream):
+//!
+//! ```text
+//! batcher ──(sync_channel)──▶ grad workers ──(sync_channel)──▶ compress
+//!  (index     depth=Q          (PJRT execute,   depth=Q         workers
+//!   batches)                    G threads)                      (C threads)
+//!                                                                  │
+//!                                             writer ◀─(channel)───┘
+//!                                     (reorder buffer → StoreWriter)
+//! ```
+//!
+//! Two gradient sources implement the same pipeline: flat per-sample
+//! gradients (`<model>_grads` HLO) compressed by a [`Compressor`], and the
+//! LoGra hook source (`<model>_hooks` HLO) compressed per layer by
+//! [`FactorizedCompressor`]s — the FactGraSS path that never materialises
+//! the full gradient.
+
+pub mod metrics;
+pub mod pipeline;
+
+pub use metrics::Metrics;
+pub use pipeline::{CachePipeline, CompressorBank, PipelineConfig};

@@ -1,0 +1,371 @@
+//! The staged cache pipeline (see module docs on [`super`]).
+
+use super::metrics::Metrics;
+use crate::data::{Labelled, Sequences};
+use crate::runtime::{Arg, Executable, Runtime};
+use crate::sketch::{Compressor, FactorizedCompressor};
+use crate::store::{StoreMeta, StoreWriter};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Pipeline tuning knobs.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub grad_workers: usize,
+    pub compress_workers: usize,
+    /// Bounded channel depth — the backpressure horizon.
+    pub queue_depth: usize,
+    pub shard_rows: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            grad_workers: 2,
+            compress_workers: 2,
+            queue_depth: 4,
+            shard_rows: crate::store::DEFAULT_SHARD_ROWS,
+        }
+    }
+}
+
+/// What the grad stage hands to the compress stage.
+enum GradBatch {
+    /// Flat per-sample gradients: `len(indices) × dim` rows.
+    Flat { first: usize, rows: Vec<f32>, count: usize },
+    /// LoGra hooks: per-layer (x: count×T×d_in, dy: count×T×d_out).
+    Factored {
+        first: usize,
+        count: usize,
+        seq: usize,
+        layers: Vec<(Vec<f32>, Vec<f32>)>,
+    },
+}
+
+/// Which compressors the compress stage applies.
+pub enum CompressorBank {
+    Flat(Box<dyn Compressor>),
+    /// One factorized compressor per hooked layer; outputs concatenate.
+    Factored(Vec<Box<dyn FactorizedCompressor>>),
+}
+
+impl CompressorBank {
+    pub fn output_dim(&self) -> usize {
+        match self {
+            CompressorBank::Flat(c) => c.output_dim(),
+            CompressorBank::Factored(cs) => cs.iter().map(|c| c.output_dim()).sum(),
+        }
+    }
+}
+
+/// Data source for the batcher.
+pub enum Source<'a> {
+    Labelled(&'a Labelled),
+    Sequences(&'a Sequences),
+}
+
+impl Source<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Source::Labelled(d) => d.n,
+            Source::Sequences(d) => d.n,
+        }
+    }
+}
+
+/// The cache pipeline: per-sample gradients → compression → gradient store.
+pub struct CachePipeline<'a> {
+    pub rt: &'a Runtime,
+    pub model: String,
+    pub params: Vec<f32>,
+    pub cfg: PipelineConfig,
+    pub metrics: Arc<Metrics>,
+}
+
+impl<'a> CachePipeline<'a> {
+    pub fn new(rt: &'a Runtime, model: &str, params: Vec<f32>, cfg: PipelineConfig) -> Self {
+        Self {
+            rt,
+            model: model.to_string(),
+            params,
+            cfg,
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    /// Run the flat-gradient cache stage over `data`, writing compressed
+    /// rows (in dataset order) into `store_dir`.
+    pub fn run_flat(
+        &self,
+        data: &Source,
+        bank: &CompressorBank,
+        store_dir: &std::path::Path,
+        method: &str,
+        seed: u64,
+    ) -> Result<StoreMeta> {
+        let grads_exe = self.rt.executable(&format!("{}_grads", self.model))?;
+        let batch = self.rt.manifest.batch_size("grads", &self.model)?;
+        self.run_inner(data, bank, store_dir, method, seed, grads_exe, batch, false)
+    }
+
+    /// Run the factorized (LoGra hooks) cache stage — FactGraSS's path.
+    pub fn run_factored(
+        &self,
+        data: &Source,
+        bank: &CompressorBank,
+        store_dir: &std::path::Path,
+        method: &str,
+        seed: u64,
+    ) -> Result<StoreMeta> {
+        let hooks_exe = self.rt.executable(&format!("{}_hooks", self.model))?;
+        let batch = self.rt.manifest.batch_size("hooks", &self.model)?;
+        self.run_inner(data, bank, store_dir, method, seed, hooks_exe, batch, true)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_inner(
+        &self,
+        data: &Source,
+        bank: &CompressorBank,
+        store_dir: &std::path::Path,
+        method: &str,
+        seed: u64,
+        exe: Arc<Executable>,
+        batch: usize,
+        factored: bool,
+    ) -> Result<StoreMeta> {
+        let n = data.len();
+        let k = bank.output_dim();
+        let p = self.rt.manifest.model(&self.model)?.p;
+        let meta = self.rt.manifest.model(&self.model)?.clone();
+        let metrics = self.metrics.clone();
+        let writer = Mutex::new(StoreWriter::create(
+            store_dir,
+            k,
+            method,
+            seed,
+            self.cfg.shard_rows,
+        )?);
+        let seq = meta.seq.unwrap_or(1);
+
+        // Stage 1 → 2 channel: index batches.
+        let (batch_tx, batch_rx) = sync_channel::<Vec<usize>>(self.cfg.queue_depth);
+        let batch_rx = Mutex::new(batch_rx);
+        // Stage 2 → 3 channel: gradient payloads.
+        let (grad_tx, grad_rx) = sync_channel::<GradBatch>(self.cfg.queue_depth);
+        let grad_rx = Mutex::new(grad_rx);
+        // Stage 3 → 4 channel: compressed row blocks.
+        let (row_tx, row_rx) = sync_channel::<(usize, usize, Vec<f32>)>(self.cfg.queue_depth * 2);
+
+        let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let fail = |e: anyhow::Error| {
+            let mut guard = error.lock().unwrap();
+            if guard.is_none() {
+                *guard = Some(e);
+            }
+        };
+
+        std::thread::scope(|s| {
+            // ---- stage 1: batcher ----
+            s.spawn(|| {
+                for start in (0..n).step_by(batch) {
+                    let idx: Vec<usize> = (start..(start + batch).min(n)).collect();
+                    if batch_tx.send(idx).is_err() {
+                        return;
+                    }
+                }
+                drop(batch_tx);
+            });
+
+            // ---- stage 2: grad workers (PJRT) ----
+            for _ in 0..self.cfg.grad_workers.max(1) {
+                let exe = exe.clone();
+                let metrics = metrics.clone();
+                let grad_tx: SyncSender<GradBatch> = grad_tx.clone();
+                let batch_rx = &batch_rx;
+                let params = &self.params;
+                let fail = &fail;
+                let meta = &meta;
+                s.spawn(move || {
+                    loop {
+                        let idx = match batch_rx.lock().unwrap().recv() {
+                            Ok(i) => i,
+                            Err(_) => return,
+                        };
+                        let count = idx.len();
+                        let first = idx[0];
+                        let t0 = Instant::now();
+                        let mut args = vec![Arg::F32(params.clone(), vec![p])];
+                        match data {
+                            Source::Labelled(d) => {
+                                let (x, y) = d.gather(&idx, batch);
+                                let mut shape = vec![batch];
+                                shape.extend_from_slice(&d.feature_shape);
+                                args.push(Arg::F32(x, shape));
+                                args.push(Arg::I32(y, vec![batch]));
+                            }
+                            Source::Sequences(d) => {
+                                let toks = d.gather(&idx, batch);
+                                args.push(Arg::I32(toks, vec![batch, d.seq]));
+                            }
+                        }
+                        let outputs = match exe.run(&args) {
+                            Ok(o) => o,
+                            Err(e) => {
+                                fail(e);
+                                return;
+                            }
+                        };
+                        metrics.add(&metrics.grad_ns, t0.elapsed().as_nanos() as u64);
+                        metrics.add(&metrics.batches, 1);
+                        metrics.add(&metrics.samples, count as u64);
+                        metrics.add(&metrics.tokens, (count * seq) as u64);
+                        let payload = if factored {
+                            let l = meta.layers.len();
+                            let mut layers = Vec::with_capacity(l);
+                            for li in 0..l {
+                                let x = &outputs[li];
+                                let dy = &outputs[l + li];
+                                let xw: usize = x.shape[1..].iter().product();
+                                let dw: usize = dy.shape[1..].iter().product();
+                                layers.push((
+                                    x.data[..count * xw].to_vec(),
+                                    dy.data[..count * dw].to_vec(),
+                                ));
+                            }
+                            GradBatch::Factored {
+                                first,
+                                count,
+                                seq,
+                                layers,
+                            }
+                        } else {
+                            GradBatch::Flat {
+                                first,
+                                rows: outputs[0].data[..count * p].to_vec(),
+                                count,
+                            }
+                        };
+                        if grad_tx.send(payload).is_err() {
+                            return;
+                        }
+                    }
+                });
+            }
+            drop(grad_tx);
+
+            // ---- stage 3: compress workers ----
+            for _ in 0..self.cfg.compress_workers.max(1) {
+                let metrics = metrics.clone();
+                let row_tx = row_tx.clone();
+                let grad_rx = &grad_rx;
+                let meta = &meta;
+                s.spawn(move || loop {
+                    let gb = match grad_rx.lock().unwrap().recv() {
+                        Ok(g) => g,
+                        Err(_) => return,
+                    };
+                    let t0 = Instant::now();
+                    let (first, count, rows) = match gb {
+                        GradBatch::Flat { first, rows, count } => {
+                            let c = match bank {
+                                CompressorBank::Flat(c) => c,
+                                _ => unreachable!("flat batch with factored bank"),
+                            };
+                            let mut out = vec![0.0f32; count * k];
+                            for i in 0..count {
+                                c.compress_into(
+                                    &rows[i * p..(i + 1) * p],
+                                    &mut out[i * k..(i + 1) * k],
+                                );
+                            }
+                            (first, count, out)
+                        }
+                        GradBatch::Factored {
+                            first,
+                            count,
+                            seq,
+                            layers,
+                        } => {
+                            let cs = match bank {
+                                CompressorBank::Factored(cs) => cs,
+                                _ => unreachable!("factored batch with flat bank"),
+                            };
+                            let mut out = vec![0.0f32; count * k];
+                            for i in 0..count {
+                                let mut off = 0usize;
+                                for (li, c) in cs.iter().enumerate() {
+                                    let (x, dy) = &layers[li];
+                                    let d_in = meta.layers[li].d_in;
+                                    let d_out = meta.layers[li].d_out;
+                                    let kl = c.output_dim();
+                                    c.compress_into(
+                                        seq,
+                                        &x[i * seq * d_in..(i + 1) * seq * d_in],
+                                        &dy[i * seq * d_out..(i + 1) * seq * d_out],
+                                        &mut out[i * k + off..i * k + off + kl],
+                                    );
+                                    off += kl;
+                                }
+                            }
+                            (first, count, out)
+                        }
+                    };
+                    metrics.add(&metrics.compress_ns, t0.elapsed().as_nanos() as u64);
+                    if row_tx.send((first, count, rows)).is_err() {
+                        return;
+                    }
+                });
+            }
+            drop(row_tx);
+
+            // ---- stage 4: writer with reorder buffer ----
+            let written = AtomicUsize::new(0);
+            let writer_ref = &writer;
+            let metrics2 = metrics.clone();
+            let fail2 = &fail;
+            s.spawn(move || {
+                let rx: Receiver<(usize, usize, Vec<f32>)> = row_rx;
+                let mut pending: BTreeMap<usize, (usize, Vec<f32>)> = BTreeMap::new();
+                let mut next = 0usize;
+                let flush = |pending: &mut BTreeMap<usize, (usize, Vec<f32>)>,
+                                 next: &mut usize|
+                 -> Result<()> {
+                    while let Some((count, rows)) = pending.remove(next) {
+                        let t0 = Instant::now();
+                        let mut w = writer_ref.lock().unwrap();
+                        w.push_batch(&rows)?;
+                        metrics2.add(&metrics2.write_ns, t0.elapsed().as_nanos() as u64);
+                        metrics2.add(&metrics2.rows_written, count as u64);
+                        written.fetch_add(count, Ordering::Relaxed);
+                        *next += count;
+                    }
+                    Ok(())
+                };
+                for (first, count, rows) in rx.iter() {
+                    pending.insert(first, (count, rows));
+                    if let Err(e) = flush(&mut pending, &mut next) {
+                        fail2(e);
+                        return;
+                    }
+                }
+                if let Err(e) = flush(&mut pending, &mut next) {
+                    fail2(e);
+                }
+            });
+        });
+
+        if let Some(e) = error.into_inner().unwrap() {
+            return Err(e);
+        }
+        let meta = writer.into_inner().unwrap().finish()?;
+        if meta.n != n {
+            return Err(anyhow!("pipeline wrote {} rows, expected {n}", meta.n));
+        }
+        Ok(meta)
+    }
+}

@@ -1,0 +1,171 @@
+//! Synthetic token corpora: a themed byte-level corpus (WikiText /
+//! OpenWebText analogue; themes give Fig-9-style qualitative attribution a
+//! ground truth) and synthetic music-event sequences (MAESTRO analogue).
+
+use super::Sequences;
+use crate::sketch::rng::Pcg;
+
+/// Themed text corpus. Each theme has a distinct vocabulary of "words"
+/// (byte n-grams); documents are theme-pure word streams with shared
+/// function words, so a language model learns theme-conditional statistics
+/// and influence should concentrate on same-theme documents.
+pub struct ThemedCorpus;
+
+pub const THEMES: &[&str] = &["privacy", "sports", "cooking", "finance", "astronomy", "music"];
+
+impl ThemedCorpus {
+    /// Per-theme content words (byte-level tokens are the characters).
+    fn theme_words(theme: usize) -> &'static [&'static str] {
+        match theme {
+            0 => &["privacy", "data", "policy", "consent", "tracking", "encrypt", "journalist", "leak", "gdpr", "surveillance"],
+            1 => &["match", "goal", "league", "coach", "stadium", "score", "playoff", "referee", "champion", "transfer"],
+            2 => &["recipe", "butter", "oven", "simmer", "garlic", "season", "knead", "roast", "whisk", "saute"],
+            3 => &["market", "equity", "yield", "hedge", "dividend", "asset", "margin", "futures", "bond", "audit"],
+            4 => &["galaxy", "orbit", "nebula", "telescope", "quasar", "eclipse", "comet", "parallax", "redshift", "pulsar"],
+            _ => &["chord", "tempo", "melody", "sonata", "rhythm", "octave", "timbre", "cadence", "harmony", "fugue"],
+        }
+    }
+
+    const FUNCTION_WORDS: &'static [&'static str] =
+        &["the", "of", "and", "to", "in", "is", "for", "with", "on", "as"];
+
+    /// Render one document of roughly `seq` bytes for a theme.
+    pub fn document(theme: usize, seq: usize, rng: &mut Pcg) -> String {
+        let words = Self::theme_words(theme);
+        let mut doc = String::with_capacity(seq + 16);
+        while doc.len() < seq + 1 {
+            let w = if rng.next_f32() < 0.35 {
+                Self::FUNCTION_WORDS[rng.next_below(Self::FUNCTION_WORDS.len())]
+            } else {
+                words[rng.next_below(words.len())]
+            };
+            doc.push_str(w);
+            doc.push(' ');
+        }
+        doc
+    }
+
+    /// Generate `n` byte-level token sequences of length `seq` with theme
+    /// tags. Tokens are raw bytes (vocab 256).
+    pub fn generate(n: usize, seq: usize, seed: u64) -> Sequences {
+        let mut rng = Pcg::new(seed ^ 0xC0FF);
+        let mut tokens = Vec::with_capacity(n * seq);
+        let mut tags = Vec::with_capacity(n);
+        for _ in 0..n {
+            let theme = rng.next_below(THEMES.len());
+            let doc = Self::document(theme, seq, &mut rng);
+            let bytes = doc.as_bytes();
+            for t in 0..seq {
+                tokens.push(bytes[t % bytes.len()] as i32);
+            }
+            tags.push(theme as u32);
+        }
+        Sequences {
+            tokens,
+            seq,
+            n,
+            tags,
+        }
+    }
+
+    /// A query prompt for a theme (Fig 9 style).
+    pub fn query(theme: usize, seq: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Pcg::new(seed ^ 0x9E41);
+        let doc = Self::document(theme, seq, &mut rng);
+        doc.as_bytes()[..seq].iter().map(|&b| b as i32).collect()
+    }
+}
+
+/// Synthetic music-event sequences (MAESTRO analogue): events are drawn
+/// from a vocab of 128 (note-on/off/velocity buckets); each piece follows a
+/// random walk over a scale with piece-level key and tempo structure.
+pub struct MusicEvents;
+
+impl MusicEvents {
+    pub const VOCAB: usize = 128;
+
+    pub fn generate(n: usize, seq: usize, seed: u64) -> Sequences {
+        let mut rng = Pcg::new(seed ^ 0x3164);
+        let scale = [0i32, 2, 4, 5, 7, 9, 11]; // major scale degrees
+        let mut tokens = Vec::with_capacity(n * seq);
+        let mut tags = Vec::with_capacity(n);
+        for _ in 0..n {
+            let key = rng.next_below(12) as i32;
+            let mut degree: i32 = rng.next_below(7) as i32;
+            let register = 36 + 12 * rng.next_below(3) as i32;
+            for _ in 0..seq {
+                // random walk over scale degrees with occasional leaps
+                let step = match rng.next_below(10) {
+                    0 => 4,
+                    1 => -4,
+                    x if x < 6 => 1,
+                    _ => -1,
+                };
+                degree = (degree + step).rem_euclid(14);
+                let octave = degree / 7;
+                let pitch = register + 12 * octave + key + scale[(degree % 7) as usize];
+                tokens.push(pitch.clamp(0, Self::VOCAB as i32 - 1));
+            }
+            tags.push(key as u32);
+        }
+        Sequences {
+            tokens,
+            seq,
+            n,
+            tags,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_shapes_and_ranges() {
+        let c = ThemedCorpus::generate(50, 64, 1);
+        assert_eq!(c.n, 50);
+        assert_eq!(c.tokens.len(), 50 * 64);
+        assert!(c.tokens.iter().all(|&t| (0..256).contains(&t)));
+        assert!(c.tags.iter().all(|&t| (t as usize) < THEMES.len()));
+    }
+
+    #[test]
+    fn documents_are_theme_distinct() {
+        let mut rng = Pcg::new(2);
+        let d0 = ThemedCorpus::document(0, 200, &mut rng);
+        let d1 = ThemedCorpus::document(1, 200, &mut rng);
+        assert!(d0.contains("privacy") || d0.contains("data") || d0.contains("consent"));
+        assert!(!d1.contains("privacy"));
+    }
+
+    #[test]
+    fn queries_match_theme_vocabulary() {
+        let q = ThemedCorpus::query(0, 64, 3);
+        let text: String = q.iter().map(|&b| b as u8 as char).collect();
+        let theme_hit = ThemedCorpus::theme_words(0)
+            .iter()
+            .any(|w| text.contains(w));
+        assert!(theme_hit, "query lacked theme words: {text}");
+    }
+
+    #[test]
+    fn music_tokens_in_vocab() {
+        let m = MusicEvents::generate(20, 32, 4);
+        assert!(m
+            .tokens
+            .iter()
+            .all(|&t| (0..MusicEvents::VOCAB as i32).contains(&t)));
+        // sequences should not be constant
+        let first = m.sample(0);
+        assert!(first.iter().any(|&t| t != first[0]));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = ThemedCorpus::generate(5, 32, 9);
+        let b = ThemedCorpus::generate(5, 32, 9);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.tags, b.tags);
+    }
+}

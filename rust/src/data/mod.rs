@@ -1,0 +1,103 @@
+//! Synthetic dataset substrates (DESIGN.md §5 substitutions).
+//!
+//! The paper's datasets (MNIST, CIFAR2, MAESTRO, WikiText, OpenWebText) are
+//! unavailable offline; these generators produce learnable tasks with the
+//! same tensor shapes and class/sequence structure, which is what the LDS
+//! comparison between compression methods needs (it ranks methods on a
+//! *fixed* task — see DESIGN.md for the argument).
+
+pub mod corpus;
+pub mod images;
+
+pub use corpus::{MusicEvents, ThemedCorpus};
+pub use images::{SynthCifar2, SynthDigits};
+
+/// A labelled dataset of flat feature vectors.
+#[derive(Debug, Clone)]
+pub struct Labelled {
+    /// n × feature_len, row-major.
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub feature_shape: Vec<usize>,
+    pub n: usize,
+}
+
+impl Labelled {
+    pub fn feature_len(&self) -> usize {
+        self.feature_shape.iter().product()
+    }
+
+    pub fn sample(&self, i: usize) -> (&[f32], i32) {
+        let w = self.feature_len();
+        (&self.x[i * w..(i + 1) * w], self.y[i])
+    }
+
+    /// Gather a batch by indices (pads by repeating the last index).
+    pub fn gather(&self, idx: &[usize], batch: usize) -> (Vec<f32>, Vec<i32>) {
+        let w = self.feature_len();
+        let mut x = Vec::with_capacity(batch * w);
+        let mut y = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let i = idx[b.min(idx.len() - 1)];
+            x.extend_from_slice(&self.x[i * w..(i + 1) * w]);
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+}
+
+/// A token-sequence dataset.
+#[derive(Debug, Clone)]
+pub struct Sequences {
+    /// n × seq, row-major token ids.
+    pub tokens: Vec<i32>,
+    pub seq: usize,
+    pub n: usize,
+    /// Optional per-sequence metadata (e.g. theme id for Fig 9).
+    pub tags: Vec<u32>,
+}
+
+impl Sequences {
+    pub fn sample(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq..(i + 1) * self.seq]
+    }
+
+    pub fn gather(&self, idx: &[usize], batch: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * self.seq);
+        for b in 0..batch {
+            let i = idx[b.min(idx.len() - 1)];
+            out.extend_from_slice(self.sample(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_pads_with_last() {
+        let d = Labelled {
+            x: vec![1.0, 2.0, 3.0, 4.0],
+            y: vec![0, 1],
+            feature_shape: vec![2],
+            n: 2,
+        };
+        let (x, y) = d.gather(&[1], 3);
+        assert_eq!(x, vec![3.0, 4.0, 3.0, 4.0, 3.0, 4.0]);
+        assert_eq!(y, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn sequences_sample() {
+        let s = Sequences {
+            tokens: vec![1, 2, 3, 4, 5, 6],
+            seq: 3,
+            n: 2,
+            tags: vec![0, 1],
+        };
+        assert_eq!(s.sample(1), &[4, 5, 6]);
+        assert_eq!(s.gather(&[0, 1], 2), vec![1, 2, 3, 4, 5, 6]);
+    }
+}

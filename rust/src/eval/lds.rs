@@ -1,0 +1,124 @@
+//! Linear Datamodeling Score (Park et al. 2023).
+//!
+//! For each test point `z_q`: predict the counterfactual test loss of a
+//! model trained on subset `S` by the (negated) additive attribution mass
+//! `−Σ_{i∈S} τ(z_i, z_q)` — more helpful training data included ⇒ lower
+//! loss — and rank-correlate against the actually retrained losses:
+//!
+//! `LDS = mean_q Spearman( (−Σ_{i∈S_s} τ_iq)_s , (loss_{S_s}(z_q))_s )`.
+
+use crate::linalg::stats::{mean, spearman};
+
+/// Compute LDS.
+///
+/// * `scores`: `m × n` attribution matrix (τ[q][i]).
+/// * `subsets`: S index lists into `0..n`.
+/// * `subset_losses`: `S × m` — per-test losses of the model retrained on
+///   each subset (row s = losses under subset s).
+///
+/// Returns (lds, per-test scores).
+pub fn lds_score(
+    scores: &[f32],
+    n: usize,
+    m: usize,
+    subsets: &[Vec<usize>],
+    subset_losses: &[f32],
+) -> (f64, Vec<f64>) {
+    let s_count = subsets.len();
+    assert_eq!(scores.len(), m * n);
+    assert_eq!(subset_losses.len(), s_count * m);
+
+    // predicted[s][q] = Σ_{i ∈ S_s} τ[q][i]
+    let mut per_test = Vec::with_capacity(m);
+    for q in 0..m {
+        let srow = &scores[q * n..(q + 1) * n];
+        let mut predicted = Vec::with_capacity(s_count);
+        let mut actual = Vec::with_capacity(s_count);
+        for (s, subset) in subsets.iter().enumerate() {
+            let mass: f32 = subset.iter().map(|&i| srow[i]).sum();
+            predicted.push(-mass); // more attribution mass ⇒ lower loss
+            actual.push(subset_losses[s * m + q]);
+        }
+        per_test.push(spearman(&predicted, &actual));
+    }
+    (mean(&per_test), per_test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    /// Ground-truth additive datamodel: loss_S(q) = Σ_{i∈S} w_iq + noise.
+    /// An attributor with τ = −w should get LDS ≈ 1.
+    #[test]
+    fn perfect_attributor_scores_one() {
+        let (n, m, s_count) = (40, 6, 24);
+        let mut rng = Pcg::new(1);
+        let w: Vec<f32> = (0..m * n).map(|_| rng.next_gaussian()).collect();
+        let subsets = crate::eval::subsets::sample_subsets(n, s_count, 0.5, 2);
+        let mut losses = vec![0.0f32; s_count * m];
+        for (s, subset) in subsets.iter().enumerate() {
+            for q in 0..m {
+                let sum: f32 = subset.iter().map(|&i| w[q * n + i]).sum();
+                losses[s * m + q] = sum;
+            }
+        }
+        // τ = −w (helpful sample ⇒ negative loss contribution ⇒ positive τ)
+        let tau: Vec<f32> = w.iter().map(|&x| -x).collect();
+        let (lds, per_test) = lds_score(&tau, n, m, &subsets, &losses);
+        assert!(lds > 0.99, "perfect attributor LDS = {lds}");
+        assert!(per_test.iter().all(|&v| v > 0.95));
+    }
+
+    #[test]
+    fn anti_attributor_scores_minus_one() {
+        let (n, m, s_count) = (30, 4, 16);
+        let mut rng = Pcg::new(3);
+        let w: Vec<f32> = (0..m * n).map(|_| rng.next_gaussian()).collect();
+        let subsets = crate::eval::subsets::sample_subsets(n, s_count, 0.5, 4);
+        let mut losses = vec![0.0f32; s_count * m];
+        for (s, subset) in subsets.iter().enumerate() {
+            for q in 0..m {
+                losses[s * m + q] = subset.iter().map(|&i| w[q * n + i]).sum();
+            }
+        }
+        let (lds, _) = lds_score(&w, n, m, &subsets, &losses); // τ = +w: inverted
+        assert!(lds < -0.99, "anti attributor LDS = {lds}");
+    }
+
+    #[test]
+    fn random_attributor_scores_near_zero() {
+        let (n, m, s_count) = (50, 8, 30);
+        let mut rng = Pcg::new(5);
+        let w: Vec<f32> = (0..m * n).map(|_| rng.next_gaussian()).collect();
+        let noise: Vec<f32> = (0..m * n).map(|_| rng.next_gaussian()).collect();
+        let subsets = crate::eval::subsets::sample_subsets(n, s_count, 0.5, 6);
+        let mut losses = vec![0.0f32; s_count * m];
+        for (s, subset) in subsets.iter().enumerate() {
+            for q in 0..m {
+                losses[s * m + q] = subset.iter().map(|&i| w[q * n + i]).sum();
+            }
+        }
+        let (lds, _) = lds_score(&noise, n, m, &subsets, &losses);
+        assert!(lds.abs() < 0.35, "random attributor LDS = {lds}");
+    }
+
+    #[test]
+    fn noisy_ground_truth_degrades_gracefully() {
+        let (n, m, s_count) = (40, 5, 20);
+        let mut rng = Pcg::new(7);
+        let w: Vec<f32> = (0..m * n).map(|_| rng.next_gaussian()).collect();
+        let subsets = crate::eval::subsets::sample_subsets(n, s_count, 0.5, 8);
+        let mut losses = vec![0.0f32; s_count * m];
+        for (s, subset) in subsets.iter().enumerate() {
+            for q in 0..m {
+                let sum: f32 = subset.iter().map(|&i| w[q * n + i]).sum();
+                losses[s * m + q] = sum + 2.0 * rng.next_gaussian();
+            }
+        }
+        let tau: Vec<f32> = w.iter().map(|&x| -x).collect();
+        let (lds, _) = lds_score(&tau, n, m, &subsets, &losses);
+        assert!(lds > 0.3 && lds < 1.0, "noisy LDS = {lds}");
+    }
+}

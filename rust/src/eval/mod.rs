@@ -1,0 +1,11 @@
+//! Counterfactual evaluation: the Linear Datamodeling Score (LDS, Park et
+//! al. 2023) with Rust-driven subset retraining through HLO train-step
+//! executables. [`subsets`] samples the evaluation subsets; [`lds`] computes
+//! the score; [`retrain`] drives SGD through the PJRT runtime.
+
+pub mod lds;
+pub mod retrain;
+pub mod subsets;
+
+pub use lds::lds_score;
+pub use subsets::sample_subsets;

@@ -1,0 +1,44 @@
+//! LDS evaluation subsets: S random subsets, each a fixed fraction of the
+//! training set (the paper uses 50 subsets of one half each).
+
+use crate::sketch::rng::Pcg;
+
+/// Sample `s` subsets of `⌊n·frac⌋` distinct indices each (sorted).
+pub fn sample_subsets(n: usize, s: usize, frac: f64, seed: u64) -> Vec<Vec<usize>> {
+    assert!((0.0..=1.0).contains(&frac));
+    let size = ((n as f64 * frac) as usize).max(1);
+    let mut rng = Pcg::new(seed ^ 0x5eb5);
+    (0..s)
+        .map(|_| {
+            rng.sample_distinct(n, size)
+                .into_iter()
+                .map(|i| i as usize)
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subset_sizes_and_distinctness() {
+        let subs = sample_subsets(100, 10, 0.5, 1);
+        assert_eq!(subs.len(), 10);
+        for s in &subs {
+            assert_eq!(s.len(), 50);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), 50);
+            assert!(s.iter().all(|&i| i < 100));
+        }
+        // different subsets differ
+        assert_ne!(subs[0], subs[1]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(sample_subsets(50, 3, 0.4, 7), sample_subsets(50, 3, 0.4, 7));
+        assert_ne!(sample_subsets(50, 3, 0.4, 7), sample_subsets(50, 3, 0.4, 8));
+    }
+}

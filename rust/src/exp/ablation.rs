@@ -1,0 +1,172 @@
+//! Ablations on the design choices DESIGN.md calls out:
+//!
+//! 1. **GraSS k′ sweep** (§3.3.1): k′ interpolates between pure
+//!    sparsification (k′ = k) and vanilla SJLT (k′ = p) — measure both the
+//!    GradDot rank fidelity and the compression cost along that axis.
+//! 2. **SJLT s sweep** (§3.1): the paper fixes s = 1 for speed; verify the
+//!    error/time trade-off that justifies it.
+//! 3. **FactGraSS blow-up factor c = k′/k** (§3.3.2): the theoretical
+//!    speedup condition is c ≤ √(p_l/k_l); sweep c and find the empirical
+//!    crossover vs LoGra.
+
+use super::report::Table;
+use crate::attrib::graddot::graddot_scores;
+use crate::linalg::stats::spearman;
+use crate::sketch::rng::Pcg;
+use crate::sketch::{
+    factgrass::FactGrass, grass::Grass, logra::LoGra, sjlt::Sjlt, Compressor,
+    FactorizedCompressor, MaskKind,
+};
+use crate::util::bench;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Rank fidelity of compressed GradDot vs exact, on synthetic sparse grads.
+fn rank_fidelity(c: &dyn Compressor, n: usize, m: usize, seed: u64) -> f64 {
+    let p = c.input_dim();
+    let k = c.output_dim();
+    let mut rng = Pcg::new(seed);
+    let mut gen = |rows: usize| -> Vec<f32> {
+        (0..rows * p)
+            .map(|_| {
+                if rng.next_f32() < 0.5 {
+                    0.0
+                } else {
+                    rng.next_gaussian()
+                }
+            })
+            .collect()
+    };
+    let train = gen(n);
+    let queries = gen(m);
+    let exact = graddot_scores(&train, n, p, &queries, m);
+    let mut ctr = vec![0.0f32; n * k];
+    c.compress_batch(&train, n, &mut ctr);
+    let mut cte = vec![0.0f32; m * k];
+    c.compress_batch(&queries, m, &mut cte);
+    let approx = graddot_scores(&ctr, n, k, &cte, m);
+    let mut rho = 0.0;
+    for q in 0..m {
+        rho += spearman(&exact[q * n..(q + 1) * n], &approx[q * n..(q + 1) * n]);
+    }
+    rho / m as f64
+}
+
+/// Ablation 1+2: GraSS k′ sweep and SJLT s sweep at fixed (p, k).
+pub fn run_grass_kprime(p: usize, k: usize, out_json: Option<&str>) -> Result<Table> {
+    let mut table = Table::new(
+        &format!("Ablation — GraSS k′ sweep and SJLT s sweep (p = {p}, k = {k})"),
+        &["config", "rank ρ", "time/vec"],
+    );
+    let (n, m) = (48, 4);
+    let mut rng = Pcg::new(3);
+    let g: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+    let mut out = vec![0.0f32; k];
+
+    // k' sweep: k, 2k, 4k, 16k, p
+    let mut kps = vec![k, 2 * k, 4 * k, 16 * k, p];
+    kps.retain(|&v| v <= p);
+    kps.dedup();
+    for kp in kps {
+        let c = Grass::new(p, kp, k, MaskKind::Random, 7);
+        let rho = rank_fidelity(&c, n, m, 11);
+        let r = bench::bench_with_budget("kp", Duration::from_millis(60), || {
+            c.compress_into(&g, &mut out)
+        });
+        table.row(vec![
+            format!("GraSS k'={kp}"),
+            format!("{rho:.4}"),
+            super::report::fmt_secs(r.median_secs()),
+        ]);
+    }
+    for s in [1usize, 2, 4, 8] {
+        let c = Sjlt::new(p, k, s, 7);
+        let rho = rank_fidelity(&c, n, m, 13);
+        let r = bench::bench_with_budget("s", Duration::from_millis(60), || {
+            c.compress_into(&g, &mut out)
+        });
+        table.row(vec![
+            format!("SJLT s={s}"),
+            format!("{rho:.4}"),
+            super::report::fmt_secs(r.median_secs()),
+        ]);
+    }
+    if let Some(path) = out_json {
+        table.save(path)?;
+    }
+    Ok(table)
+}
+
+/// Ablation 3: FactGraSS blow-up factor crossover vs LoGra on one
+/// Llama-sized layer.
+pub fn run_factgrass_blowup(out_json: Option<&str>) -> Result<Table> {
+    let (d_in, d_out, t) = (4096usize, 4096usize, 32usize);
+    let k_side = 16usize; // k_l = 256
+    let kl = k_side * k_side;
+    let mut rng = Pcg::new(9);
+    let x: Vec<f32> = (0..t * d_in).map(|_| rng.next_gaussian()).collect();
+    let dy: Vec<f32> = (0..t * d_out).map(|_| rng.next_gaussian()).collect();
+    let mut table = Table::new(
+        &format!(
+            "Ablation — FactGraSS blow-up factor c (layer {d_in}×{d_out}, k_l = {kl}); \
+             theory: faster than LoGra while c ≤ √(p_l/k_l) = {:.0}",
+            ((d_in * d_out) as f64 / kl as f64).sqrt()
+        ),
+        &["method", "c = k'/k", "time/sample"],
+    );
+    let lg = LoGra::new(d_in, d_out, k_side, k_side, 1);
+    let mut out = vec![0.0f32; kl];
+    let r = bench::bench_with_budget("logra", Duration::from_millis(120), || {
+        lg.compress_into(t, &x, &dy, &mut out)
+    });
+    table.row(vec![
+        "LoGra".into(),
+        "—".into(),
+        super::report::fmt_secs(r.median_secs()),
+    ]);
+    for mult in [1usize, 2, 4, 8, 16, 32] {
+        let side = (mult * k_side).min(d_in);
+        let fg = FactGrass::new(d_in, d_out, side, side, kl, MaskKind::Random, 2);
+        let c = (side * side) as f64 / kl as f64;
+        let r = bench::bench_with_budget("fg", Duration::from_millis(120), || {
+            fg.compress_into(t, &x, &dy, &mut out)
+        });
+        table.row(vec![
+            format!("FactGraSS {side}⊗{side}"),
+            format!("{c:.0}"),
+            super::report::fmt_secs(r.median_secs()),
+        ]);
+    }
+    if let Some(path) = out_json {
+        table.save(path)?;
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kprime_fidelity_increases_with_kprime() {
+        let (p, k) = (2048, 64);
+        let lo = rank_fidelity(&Grass::new(p, k, k, MaskKind::Random, 1), 32, 3, 5);
+        let hi = rank_fidelity(&Grass::new(p, p, k, MaskKind::Random, 1), 32, 3, 5);
+        // k' = p (vanilla SJLT) should beat k' = k (pure mask) on fidelity.
+        assert!(
+            hi > lo - 0.05,
+            "fidelity should not degrade with k': lo={lo:.3} hi={hi:.3}"
+        );
+    }
+
+    #[test]
+    fn ablation_tables_render() {
+        let t = run_grass_kprime(1024, 32, None).unwrap();
+        assert!(t.rows.len() >= 6);
+        // fidelity column parses as f64
+        for row in &t.rows {
+            let rho: f64 = row[1].parse().unwrap();
+            assert!((-1.0..=1.0).contains(&rho));
+        }
+    }
+}

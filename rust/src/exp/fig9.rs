@@ -1,0 +1,119 @@
+//! Figure 9 — qualitative attribution: train the tiny LM on the themed
+//! corpus, attribute a themed query prompt with FactGraSS + block-diagonal
+//! FIM influence, and check that the top-influence documents share the
+//! query's theme (the synthetic analogue of the paper's "To improve data
+//! privacy" → journalist-jailing/privacy-policy document example).
+
+use super::report::Table;
+use super::table1::{collect_hooks, compress_hooks};
+use crate::attrib::blockwise::{BlockLayout, BlockwiseEngine};
+use crate::config::ExpConfig;
+use crate::data::corpus::{ThemedCorpus, THEMES};
+use crate::data::Sequences;
+use crate::eval::retrain::{TaskData, Trainer};
+use crate::runtime::Runtime;
+use crate::sketch::{factgrass::FactGrass, FactorizedCompressor, MaskKind};
+use anyhow::Result;
+
+pub struct Fig9Outcome {
+    pub table: Table,
+    /// Fraction of top-10 influential docs sharing the query theme.
+    pub top10_theme_hit: f64,
+    pub query_theme: &'static str,
+}
+
+pub fn run(rt: &Runtime, cfg: &ExpConfig, kl: usize) -> Result<Fig9Outcome> {
+    let model = "gpt2_tiny";
+    let meta = rt.manifest.model(model)?.clone();
+    let seq = meta.seq.unwrap();
+    let train = ThemedCorpus::generate(cfg.n_train, seq, cfg.seed);
+    let trainer = Trainer::new(rt, model)?;
+    let all: Vec<usize> = (0..train.n).collect();
+
+    eprintln!("[fig9] training base LM on {} themed docs", train.n);
+    let init = trainer.init(4000)?;
+    let params = trainer.train(
+        init,
+        &TaskData::Sequences(&train),
+        &all,
+        cfg.epochs,
+        cfg.lr,
+        cfg.seed ^ 0xF19,
+    )?;
+
+    // Query: a fresh privacy-themed prompt (theme 0).
+    let query_theme = 0usize;
+    let qtokens = ThemedCorpus::query(query_theme, seq, cfg.seed ^ 0x900D);
+    let queries = Sequences {
+        tokens: qtokens.clone(),
+        seq,
+        n: 1,
+        tags: vec![query_theme as u32],
+    };
+
+    // FactGraSS compression of train + query hooks.
+    let hooks_train = collect_hooks(rt, model, &params, &train, &all)?;
+    let hooks_q = collect_hooks(rt, model, &params, &queries, &[0])?;
+    let k_side = (kl as f64).sqrt() as usize;
+    let banks: Vec<Box<dyn FactorizedCompressor>> = meta
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, lm)| -> Box<dyn FactorizedCompressor> {
+            Box::new(FactGrass::new(
+                lm.d_in,
+                lm.d_out,
+                (2 * k_side).min(lm.d_in),
+                (2 * k_side).min(lm.d_out),
+                kl,
+                MaskKind::Random,
+                400 + li as u64,
+            ))
+        })
+        .collect();
+    let dims: Vec<usize> = banks.iter().map(|b| b.output_dim()).collect();
+    let (ctr, _) = compress_hooks(&hooks_train, &banks);
+    let (cq, _) = compress_hooks(&hooks_q, &banks);
+
+    let engine = BlockwiseEngine::new(BlockLayout::new(dims), 1e-3);
+    let scores = engine.attribute(&ctr, train.n, &cq, 1)?;
+
+    // Rank training docs by influence; the paper filters outliers by
+    // gradient norm — here we simply rank and inspect the top 10.
+    let mut order: Vec<usize> = (0..train.n).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+
+    let mut table = Table::new(
+        &format!(
+            "Figure 9 — top influential docs for a '{}' query (FactGraSS k_l={kl})",
+            THEMES[query_theme]
+        ),
+        &["rank", "doc", "theme", "score", "same theme?"],
+    );
+    let mut hits = 0;
+    for (rank, &i) in order.iter().take(10).enumerate() {
+        let theme = train.tags[i] as usize;
+        let same = theme == query_theme;
+        if same {
+            hits += 1;
+        }
+        let preview: String = train
+            .sample(i)
+            .iter()
+            .take(32)
+            .map(|&b| b as u8 as char)
+            .collect();
+        table.row(vec![
+            (rank + 1).to_string(),
+            format!("#{i} \"{preview}…\""),
+            THEMES[theme].to_string(),
+            format!("{:.4}", scores[i]),
+            if same { "✓".into() } else { "✗".into() },
+        ]);
+    }
+    Ok(Fig9Outcome {
+        table,
+        top10_theme_hit: hits as f64 / 10.0,
+        query_theme: THEMES[query_theme],
+    })
+}

@@ -1,0 +1,18 @@
+//! Experiment harnesses regenerating every table and figure in the paper's
+//! evaluation (see DESIGN.md §3 for the index):
+//!
+//! * [`fig4`] — projection micro-benchmark (speed + relative error vs
+//!   sparsity) at p = 131072.
+//! * [`table1`] — LDS + compression wall-time: (a) MLP, (b) ResNet-lite,
+//!   (c) music transformer (TRAK); (d) GPT2-tiny with layer-wise
+//!   block-diagonal FIM and factorized compression.
+//! * [`table2`] — billion-scale throughput: FactGraSS vs LoGra over the
+//!   exact Llama-3.1-8B layer geometry.
+//! * [`fig9`] — qualitative attribution on the themed corpus.
+
+pub mod ablation;
+pub mod fig4;
+pub mod fig9;
+pub mod report;
+pub mod table1;
+pub mod table2;

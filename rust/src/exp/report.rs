@@ -1,0 +1,143 @@
+//! Plain-text + JSON experiment reports (the "rows the paper prints").
+
+use crate::util::json::Json;
+use anyhow::Result;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Append to a results JSON file (list of tables).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut list = if path.exists() {
+            match Json::parse(&std::fs::read_to_string(path)?)? {
+                Json::Arr(a) => a,
+                other => vec![other],
+            }
+        } else {
+            vec![]
+        };
+        list.push(self.to_json());
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, Json::Arr(list).to_string_pretty())?;
+        Ok(())
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}")
+    } else {
+        format!("{s:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["method", "LDS", "time"]);
+        t.row(vec!["SJLT_64".into(), "0.41".into(), "0.5".into()]);
+        t.row(vec!["G".into(), "0.4".into(), "10".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("SJLT_64"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert!(lines.len() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_wrong_width() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn save_appends() {
+        let dir = std::env::temp_dir().join(format!("grass_rep_{}", std::process::id()));
+        let path = dir.join("results.json");
+        let _ = std::fs::remove_file(&path);
+        let mut t = Table::new("t1", &["a"]);
+        t.row(vec!["1".into()]);
+        t.save(&path).unwrap();
+        t.save(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

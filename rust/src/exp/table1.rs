@@ -1,0 +1,586 @@
+//! Table 1 — quantitative accuracy (LDS) and compression wall-time.
+//!
+//! (a) MLP + synthetic digits, TRAK           — `run_table1a`
+//! (b) ResNet-lite + synthetic CIFAR2, TRAK   — `run_table1b` (adds GraSS)
+//! (c) music transformer + events, TRAK      — `run_table1c`
+//! (d) GPT2-tiny + themed corpus, block-diag FIM influence with factorized
+//!     compression (RM⊗ / SM⊗ / SJLT⊗ / FactGraSS / LoGra) — `run_table1d`
+//!
+//! The LDS ground truth (subset retraining through the model's HLO
+//! train-step) is computed once per model and shared across methods, as in
+//! the paper. Damping is grid-searched on 10% of test and LDS reported on
+//! the remaining 90% (App. B.2).
+
+use super::report::{fmt_secs, Table};
+use crate::attrib::blockwise::{BlockLayout, BlockwiseEngine};
+use crate::attrib::fim::accumulate_fim;
+use crate::attrib::influence::{scores_query_side, DAMPING_GRID};
+use crate::config::ExpConfig;
+use crate::data::{corpus::MusicEvents, corpus::ThemedCorpus, images::SynthCifar2, images::SynthDigits};
+use crate::eval::retrain::{TaskData, Trainer};
+use crate::eval::{lds_score, sample_subsets};
+use crate::runtime::{Arg, Runtime};
+use crate::sketch::selective::{
+    train_factorized_selective_mask, train_selective_mask, SelectiveMaskConfig,
+};
+use crate::sketch::{
+    factgrass::{FactGrass, FactMask, FactSjlt},
+    logra::LoGra,
+    Compressor, FactorizedCompressor, MaskKind, MethodSpec,
+};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Shared LDS ground truth for one model/dataset pair.
+pub struct GroundTruth {
+    pub subsets: Vec<Vec<usize>>,
+    /// S × m per-test losses of the retrained subset models.
+    pub subset_losses: Vec<f32>,
+}
+
+pub fn build_ground_truth(
+    trainer: &Trainer,
+    train: &TaskData,
+    test: &TaskData,
+    cfg: &ExpConfig,
+) -> Result<GroundTruth> {
+    let n = train.len();
+    let m = test.len();
+    let subsets = sample_subsets(n, cfg.subsets, cfg.subset_frac, cfg.seed ^ 0x11D5);
+    let mut subset_losses = Vec::with_capacity(cfg.subsets * m);
+    let test_idx: Vec<usize> = (0..m).collect();
+    for (s, subset) in subsets.iter().enumerate() {
+        let init = trainer.init((cfg.seed as i32) ^ (s as i32 + 1))?;
+        let params = trainer.train(init, train, subset, cfg.epochs, cfg.lr, cfg.seed + s as u64)?;
+        let losses = trainer.losses(&params, test, &test_idx)?;
+        subset_losses.extend_from_slice(&losses);
+        eprintln!("  [gt] subset {}/{} retrained", s + 1, cfg.subsets);
+    }
+    Ok(GroundTruth {
+        subsets,
+        subset_losses,
+    })
+}
+
+/// Split tests into (val, eval) index sets — 10% / 90% (at least 1 val).
+fn val_split(m: usize) -> (Vec<usize>, Vec<usize>) {
+    let v = (m / 10).max(1);
+    ((0..v).collect(), (v..m).collect())
+}
+
+/// LDS against a subset of the test columns.
+fn lds_on(
+    scores: &[f32],
+    n: usize,
+    m: usize,
+    gt: &GroundTruth,
+    cols: &[usize],
+) -> f64 {
+    // Restrict scores and losses to the selected test columns.
+    let mm = cols.len();
+    let mut s2 = vec![0.0f32; mm * n];
+    for (new_q, &q) in cols.iter().enumerate() {
+        s2[new_q * n..(new_q + 1) * n].copy_from_slice(&scores[q * n..(q + 1) * n]);
+    }
+    let s_count = gt.subsets.len();
+    let mut l2 = vec![0.0f32; s_count * mm];
+    for s in 0..s_count {
+        for (new_q, &q) in cols.iter().enumerate() {
+            l2[s * mm + new_q] = gt.subset_losses[s * m + q];
+        }
+    }
+    lds_score(&s2, n, mm, &gt.subsets, &l2).0
+}
+
+/// One TRAK-family experiment: compress per checkpoint, ensemble scores,
+/// grid-search damping on the val split, report LDS on the eval split.
+#[allow(clippy::too_many_arguments)]
+fn eval_method_trak(
+    compressed: &[(Vec<f32>, Vec<f32>)], // per checkpoint (train n×k, test m×k)
+    n: usize,
+    m: usize,
+    k: usize,
+    gt: &GroundTruth,
+) -> Result<(f64, f64)> {
+    let (val, evl) = val_split(m);
+    // cache FIM per checkpoint
+    let fims: Vec<Vec<f32>> = compressed
+        .iter()
+        .map(|(tr, _)| accumulate_fim(tr, n, k))
+        .collect();
+    // Damping grid in parallel — each λ needs its own Cholesky (O(k³)),
+    // and the factorizations are independent (§Perf iteration 2: the grid
+    // was the single-threaded tail of every Table 1 run).
+    let grid_vals: Vec<Option<f64>> =
+        crate::util::par::par_map_ranges(DAMPING_GRID.len(), 1, |range| {
+            range
+                .map(|di| {
+                    let damping = DAMPING_GRID[di];
+                    let mut total = vec![0.0f64; m * n];
+                    for (ck, (tr, te)) in compressed.iter().enumerate() {
+                        match scores_query_side(&fims[ck], k, damping, tr, n, te, m) {
+                            Ok(s) => {
+                                for (t, &v) in total.iter_mut().zip(&s) {
+                                    *t += v as f64;
+                                }
+                            }
+                            Err(_) => return None,
+                        }
+                    }
+                    let scores: Vec<f32> = total.iter().map(|&v| v as f32).collect();
+                    Some(lds_on(&scores, n, m, gt, &val))
+                })
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+    let mut best = (DAMPING_GRID[0], f64::NEG_INFINITY);
+    for (di, v) in grid_vals.iter().enumerate() {
+        if let Some(v) = v {
+            if *v > best.1 {
+                best = (DAMPING_GRID[di], *v);
+            }
+        }
+    }
+    // final scores at best damping on eval split
+    let mut total = vec![0.0f64; m * n];
+    for (ck, (tr, te)) in compressed.iter().enumerate() {
+        let s = scores_query_side(&fims[ck], k, best.0, tr, n, te, m)?;
+        for (t, &v) in total.iter_mut().zip(&s) {
+            *t += v as f64;
+        }
+    }
+    let scores: Vec<f32> = total.iter().map(|&v| v as f32).collect();
+    Ok((lds_on(&scores, n, m, gt, &evl), best.0))
+}
+
+/// The method lineup for a TRAK table.
+fn trak_methods(p: usize, ks: &[usize], include_grass: bool) -> Vec<(String, MethodSpec)> {
+    let mut out = vec![];
+    for &k in ks {
+        out.push((format!("RM_{k}"), MethodSpec::RandomMask { k }));
+        out.push((format!("SM_{k}"), MethodSpec::SelectiveMask { k }));
+        out.push((format!("SJLT_{k}"), MethodSpec::Sjlt { k, s: 1 }));
+        if include_grass {
+            let kp = (4 * ks[ks.len() - 1]).min(p);
+            out.push((
+                format!("GraSS[SJLT_{k}∘RM_{kp}]"),
+                MethodSpec::Grass {
+                    k,
+                    k_prime: kp,
+                    mask: MaskKind::Random,
+                },
+            ));
+        }
+        out.push((format!("FJLT_{k}"), MethodSpec::Fjlt { k }));
+        out.push((format!("GAUSS_{k}"), MethodSpec::Gauss { k }));
+    }
+    out
+}
+
+/// Generic TRAK table runner (Tables 1a–c).
+pub fn run_trak_table(
+    rt: &Runtime,
+    model: &str,
+    train: &TaskData,
+    test: &TaskData,
+    cfg: &ExpConfig,
+    include_grass: bool,
+    title: &str,
+) -> Result<Table> {
+    let trainer = Trainer::new(rt, model)?;
+    let n = train.len();
+    let m = test.len();
+    let p = trainer.p;
+    eprintln!("[{title}] ground truth: {} subset retrains", cfg.subsets);
+    let gt = build_ground_truth(&trainer, train, test, cfg)?;
+
+    // Per-checkpoint raw gradients (one checkpoint in memory at a time).
+    let all_train: Vec<usize> = (0..n).collect();
+    let all_test: Vec<usize> = (0..m).collect();
+    let methods = trak_methods(p, &cfg.ks, include_grass);
+    // compressed[method] -> per checkpoint (train, test)
+    let mut compressed: Vec<Vec<(Vec<f32>, Vec<f32>)>> = vec![vec![]; methods.len()];
+    let mut times = vec![0.0f64; methods.len()];
+    // Selective masks are trained once on the first checkpoint's gradients.
+    let mut sm_masks: std::collections::BTreeMap<usize, Vec<u32>> = Default::default();
+
+    for ck in 0..cfg.checkpoints {
+        eprintln!("[{title}] checkpoint {}/{}", ck + 1, cfg.checkpoints);
+        let init = trainer.init(1000 + ck as i32)?;
+        let params = trainer.train(
+            init,
+            train,
+            &all_train,
+            cfg.epochs,
+            cfg.lr,
+            cfg.seed ^ (0xC0 + ck as u64),
+        )?;
+        let g_train = trainer.grads(&params, train, &all_train)?;
+        let g_test = trainer.grads(&params, test, &all_test)?;
+
+        if ck == 0 {
+            // Train SM masks per k (on a gradient subsample, paper §3.2).
+            let sub_n = n.min(96);
+            let sub_m = m.min(8);
+            for &k in &cfg.ks {
+                let tm = train_selective_mask(
+                    &g_train[..sub_n * p],
+                    &g_test[..sub_m * p],
+                    sub_n,
+                    sub_m,
+                    p,
+                    &SelectiveMaskConfig {
+                        steps: 25,
+                        seed: cfg.seed,
+                        ..Default::default()
+                    },
+                );
+                sm_masks.insert(k, tm.top_k_indices(k));
+            }
+        }
+
+        for (mi, (_, spec)) in methods.iter().enumerate() {
+            let c: Box<dyn Compressor> = match spec {
+                MethodSpec::SelectiveMask { k } => Box::new(
+                    crate::sketch::mask::RandomMask::from_indices(p, sm_masks[k].clone(), None),
+                ),
+                other => other.build(p, cfg.seed ^ 0x7A8),
+            };
+            let k = c.output_dim();
+            let t0 = Instant::now();
+            let mut ctr = vec![0.0f32; n * k];
+            c.compress_batch(&g_train, n, &mut ctr);
+            let mut cte = vec![0.0f32; m * k];
+            c.compress_batch(&g_test, m, &mut cte);
+            times[mi] += t0.elapsed().as_secs_f64();
+            compressed[mi].push((ctr, cte));
+        }
+    }
+
+    let mut table = Table::new(title, &["method", "k", "LDS", "time (s)", "damping"]);
+    for (mi, (name, spec)) in methods.iter().enumerate() {
+        let k = spec.output_dim();
+        let (lds, damping) = eval_method_trak(&compressed[mi], n, m, k, &gt)?;
+        table.row(vec![
+            name.clone(),
+            k.to_string(),
+            format!("{lds:.4}"),
+            fmt_secs(times[mi]),
+            format!("{damping:.0e}"),
+        ]);
+        eprintln!("[{title}] {name}: LDS {lds:.4}, {:.3}s", times[mi]);
+    }
+    Ok(table)
+}
+
+pub fn run_table1a(rt: &Runtime, cfg: &ExpConfig) -> Result<Table> {
+    let train = SynthDigits::generate(cfg.n_train, cfg.seed);
+    let test = SynthDigits::generate(cfg.n_test, cfg.seed ^ TEST_SALT);
+    run_trak_table(
+        rt,
+        "mlp",
+        &TaskData::Labelled(&train),
+        &TaskData::Labelled(&test),
+        cfg,
+        false,
+        "Table 1a — MLP (synthetic digits), TRAK",
+    )
+}
+
+pub fn run_table1b(rt: &Runtime, cfg: &ExpConfig) -> Result<Table> {
+    let train = SynthCifar2::generate(cfg.n_train, cfg.seed);
+    let test = SynthCifar2::generate(cfg.n_test, cfg.seed ^ TEST_SALT);
+    run_trak_table(
+        rt,
+        "resnet_lite",
+        &TaskData::Labelled(&train),
+        &TaskData::Labelled(&test),
+        cfg,
+        true,
+        "Table 1b — ResNet-lite (synthetic CIFAR2), TRAK",
+    )
+}
+
+pub fn run_table1c(rt: &Runtime, cfg: &ExpConfig) -> Result<Table> {
+    let seq = rt.manifest.model("music")?.seq.unwrap();
+    let train = MusicEvents::generate(cfg.n_train, seq, cfg.seed);
+    let test = MusicEvents::generate(cfg.n_test, seq, cfg.seed ^ TEST_SALT);
+    run_trak_table(
+        rt,
+        "music",
+        &TaskData::Sequences(&train),
+        &TaskData::Sequences(&test),
+        cfg,
+        true,
+        "Table 1c — music transformer (synthetic events), TRAK",
+    )
+}
+
+const TEST_SALT: u64 = 0x7E57;
+
+// ---------------------------------------------------------------------------
+// Table 1d — factorized methods on GPT2-tiny with block-diagonal FIM
+// ---------------------------------------------------------------------------
+
+/// Per-layer hooks for a sample set: layers[l] = (xs n×T×d_in, dys n×T×d_out).
+pub struct Hooks {
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+    pub n: usize,
+    pub seq: usize,
+}
+
+/// Collect LoGra hooks for `idx` through the `<model>_hooks` executable.
+pub fn collect_hooks(
+    rt: &Runtime,
+    model: &str,
+    params: &[f32],
+    data: &crate::data::Sequences,
+    idx: &[usize],
+) -> Result<Hooks> {
+    let meta = rt.manifest.model(model)?.clone();
+    let b = rt.manifest.batch_size("hooks", model)?;
+    let seq = meta.seq.unwrap();
+    let exe = rt.executable(&format!("{model}_hooks"))?;
+    let l = meta.layers.len();
+    let n = idx.len();
+    let mut layers: Vec<(Vec<f32>, Vec<f32>)> = meta
+        .layers
+        .iter()
+        .map(|lm| {
+            (
+                Vec::with_capacity(n * seq * lm.d_in),
+                Vec::with_capacity(n * seq * lm.d_out),
+            )
+        })
+        .collect();
+    for chunk in idx.chunks(b) {
+        let toks = data.gather(chunk, b);
+        let outs = exe.run(&[
+            Arg::F32(params.to_vec(), vec![meta.p]),
+            Arg::I32(toks, vec![b, seq]),
+        ])?;
+        for li in 0..l {
+            let d_in = meta.layers[li].d_in;
+            let d_out = meta.layers[li].d_out;
+            layers[li]
+                .0
+                .extend_from_slice(&outs[li].data[..chunk.len() * seq * d_in]);
+            layers[li]
+                .1
+                .extend_from_slice(&outs[l + li].data[..chunk.len() * seq * d_out]);
+        }
+    }
+    Ok(Hooks { layers, n, seq })
+}
+
+/// Compress all samples' hooks through a per-layer compressor bank;
+/// returns (n × Σk_l concatenated matrix, wall-time seconds).
+pub fn compress_hooks(
+    hooks: &Hooks,
+    banks: &[Box<dyn FactorizedCompressor>],
+) -> (Vec<f32>, f64) {
+    let n = hooks.n;
+    let seq = hooks.seq;
+    let total: usize = banks.iter().map(|b| b.output_dim()).sum();
+    let mut out = vec![0.0f32; n * total];
+    let t0 = Instant::now();
+    crate::util::par::par_chunks_mut(&mut out, total, 1, |row_start, chunk| {
+        for (off, orow) in chunk.chunks_mut(total).enumerate() {
+            let i = row_start + off;
+            let mut pos = 0usize;
+            for (li, bank) in banks.iter().enumerate() {
+                let (xs, dys) = &hooks.layers[li];
+                let d_in = bank.d_in();
+                let d_out = bank.d_out();
+                let kl = bank.output_dim();
+                bank.compress_into(
+                    seq,
+                    &xs[i * seq * d_in..(i + 1) * seq * d_in],
+                    &dys[i * seq * d_out..(i + 1) * seq * d_out],
+                    &mut orow[pos..pos + kl],
+                );
+                pos += kl;
+            }
+        }
+    });
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Sequence-pooled (summed over T) per-layer activations for SM training.
+fn pool_hooks(hooks: &Hooks, li: usize, d_in: usize, d_out: usize) -> (Vec<f32>, Vec<f32>) {
+    let (xs, dys) = &hooks.layers[li];
+    let (n, seq) = (hooks.n, hooks.seq);
+    let mut px = vec![0.0f32; n * d_in];
+    let mut pd = vec![0.0f32; n * d_out];
+    for i in 0..n {
+        for t in 0..seq {
+            for j in 0..d_in {
+                px[i * d_in + j] += xs[(i * seq + t) * d_in + j];
+            }
+            for j in 0..d_out {
+                pd[i * d_out + j] += dys[(i * seq + t) * d_out + j];
+            }
+        }
+    }
+    (px, pd)
+}
+
+pub fn run_table1d(rt: &Runtime, cfg: &ExpConfig) -> Result<Table> {
+    let model = "gpt2_tiny";
+    let meta = rt.manifest.model(model)?.clone();
+    let seq = meta.seq.unwrap();
+    let train = ThemedCorpus::generate(cfg.n_train, seq, cfg.seed);
+    let test = ThemedCorpus::generate(cfg.n_test, seq, cfg.seed ^ 0x7E57);
+    let trainer = Trainer::new(rt, model)?;
+    let n = train.n;
+    let m = test.n;
+
+    eprintln!("[table1d] ground truth: {} subset retrains", cfg.subsets);
+    let gt = build_ground_truth(
+        &trainer,
+        &TaskData::Sequences(&train),
+        &TaskData::Sequences(&test),
+        cfg,
+    )?;
+
+    // Base model + hooks.
+    let init = trainer.init(2000)?;
+    let all: Vec<usize> = (0..n).collect();
+    let params = trainer.train(
+        init,
+        &TaskData::Sequences(&train),
+        &all,
+        cfg.epochs,
+        cfg.lr,
+        cfg.seed ^ 0x1D,
+    )?;
+    eprintln!("[table1d] collecting hooks for {n} train + {m} test samples");
+    let hooks_train = collect_hooks(rt, model, &params, &train, &all)?;
+    let test_idx: Vec<usize> = (0..m).collect();
+    let hooks_test = collect_hooks(rt, model, &params, &test, &test_idx)?;
+
+    let mut table = Table::new(
+        "Table 1d — GPT2-tiny (themed corpus), block-diag FIM influence",
+        &["method", "k_l", "LDS", "time (s)", "damping"],
+    );
+
+    // Per-layer k_l values (paper: k_l ∈ {256, 1024, 4096} at d=768 scale;
+    // ours scale to d=128).
+    for &kl in &cfg.ks {
+        let k_side = (kl as f64).sqrt() as usize;
+        assert_eq!(k_side * k_side, kl, "k_l must be a perfect square");
+        type BankBuilder<'a> = Box<dyn Fn(usize, usize, usize) -> Box<dyn FactorizedCompressor> + 'a>;
+        // SM masks per layer trained on pooled hooks (factorized Eq. 1).
+        let sub_n = n.min(64);
+        let sub_m = m.min(8);
+        let sm_masks: Vec<(Vec<u32>, Vec<u32>)> = (0..meta.layers.len())
+            .map(|li| {
+                let lm = &meta.layers[li];
+                let (px, pd) = pool_hooks(&hooks_train, li, lm.d_in, lm.d_out);
+                let (qx, qd) = pool_hooks(&hooks_test, li, lm.d_in, lm.d_out);
+                let (tin, tout) = train_factorized_selective_mask(
+                    &px[..sub_n * lm.d_in],
+                    &pd[..sub_n * lm.d_out],
+                    &qx[..sub_m * lm.d_in],
+                    &qd[..sub_m * lm.d_out],
+                    sub_n,
+                    sub_m,
+                    lm.d_in,
+                    lm.d_out,
+                    &SelectiveMaskConfig {
+                        steps: 20,
+                        seed: cfg.seed ^ li as u64,
+                        ..Default::default()
+                    },
+                );
+                (tin.top_k_indices(k_side), tout.top_k_indices(k_side))
+            })
+            .collect();
+
+        let methods: Vec<(String, BankBuilder)> = vec![
+            (
+                format!("RM_{k_side}⊗{k_side}"),
+                Box::new(move |d_in, d_out, li| {
+                    Box::new(FactMask::new(d_in, d_out, k_side, k_side, 31 + li as u64))
+                }),
+            ),
+            (
+                format!("SM_{k_side}⊗{k_side}"),
+                Box::new(|d_in, d_out, li| {
+                    let (mi, mo) = &sm_masks[li];
+                    Box::new(FactMask::with_masks(
+                        d_in,
+                        d_out,
+                        crate::sketch::mask::RandomMask::from_indices(d_in, mi.clone(), None),
+                        crate::sketch::mask::RandomMask::from_indices(d_out, mo.clone(), None),
+                    ))
+                }),
+            ),
+            (
+                format!("SJLT_{k_side}⊗{k_side}"),
+                Box::new(move |d_in, d_out, li| {
+                    Box::new(FactSjlt::new(d_in, d_out, k_side, k_side, 57 + li as u64))
+                }),
+            ),
+            (
+                format!("FactGraSS[SJLT_{kl}∘RM_{}⊗{}]", 2 * k_side, 2 * k_side),
+                Box::new(move |d_in, d_out, li| {
+                    Box::new(FactGrass::new(
+                        d_in,
+                        d_out,
+                        (2 * k_side).min(d_in),
+                        (2 * k_side).min(d_out),
+                        kl,
+                        MaskKind::Random,
+                        71 + li as u64,
+                    ))
+                }),
+            ),
+            (
+                format!("LoGra[GAUSS_{k_side}⊗{k_side}]"),
+                Box::new(move |d_in, d_out, li| {
+                    Box::new(LoGra::new(d_in, d_out, k_side, k_side, 93 + li as u64))
+                }),
+            ),
+        ];
+
+        for (name, build) in &methods {
+            let banks: Vec<Box<dyn FactorizedCompressor>> = meta
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(li, lm)| build(lm.d_in, lm.d_out, li))
+                .collect();
+            let dims: Vec<usize> = banks.iter().map(|b| b.output_dim()).collect();
+            let (ctr, t1) = compress_hooks(&hooks_train, &banks);
+            let (cte, t2) = compress_hooks(&hooks_test, &banks);
+            let layout = BlockLayout::new(dims);
+            // damping grid on val split, report on eval split
+            let (val, evl) = val_split(m);
+            let mut best = (DAMPING_GRID[0], f64::NEG_INFINITY);
+            for &damping in DAMPING_GRID {
+                let engine = BlockwiseEngine::new(layout.clone(), damping);
+                if let Ok(scores) = engine.attribute(&ctr, n, &cte, m) {
+                    let v = lds_on(&scores, n, m, &gt, &val);
+                    if v > best.1 {
+                        best = (damping, v);
+                    }
+                }
+            }
+            let engine = BlockwiseEngine::new(layout.clone(), best.0);
+            let scores = engine.attribute(&ctr, n, &cte, m)?;
+            let lds = lds_on(&scores, n, m, &gt, &evl);
+            table.row(vec![
+                name.clone(),
+                kl.to_string(),
+                format!("{lds:.4}"),
+                fmt_secs(t1 + t2),
+                format!("{:.0e}", best.0),
+            ]);
+            eprintln!("[table1d] {name} k_l={kl}: LDS {lds:.4}, {:.3}s", t1 + t2);
+        }
+    }
+    Ok(table)
+}

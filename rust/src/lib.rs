@@ -1,0 +1,42 @@
+//! # GraSS — Scalable Data Attribution with Gradient Sparsification and Sparse Projection
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of the GraSS paper
+//! (Hu et al., 2025). The crate is organised as:
+//!
+//! - [`sketch`] — the paper's contribution: gradient compressors (SJLT,
+//!   Random/Selective Mask, GraSS, FactGraSS) and baselines (Gauss, FJLT,
+//!   LoGra).
+//! - [`attrib`] — gradient-based data attribution on top of compressed
+//!   gradients: influence functions (FIM + iFVP), TRAK, GradDot, and
+//!   layer-wise block-diagonal FIM.
+//! - [`runtime`] — PJRT client wrapper that loads AOT-compiled HLO text
+//!   artifacts (JAX models + Pallas kernels) and executes them on the
+//!   request path with zero Python.
+//! - [`coordinator`] — the cache-stage pipeline: loader → dynamic batcher →
+//!   PJRT gradient workers → rayon compressors → backpressured store writer.
+//! - [`store`] — sharded on-disk compressed-gradient cache.
+//! - [`eval`] — counterfactual evaluation (LDS) with Rust-driven subset
+//!   retraining through HLO train-step executables.
+//! - [`data`] — synthetic dataset substrates (digits, two-class images,
+//!   themed token corpus, music-event sequences).
+//! - [`models`] — model geometry registry (incl. exact Llama-3.1-8B layer
+//!   shapes for the Table 2 throughput harness).
+//! - [`linalg`] — Cholesky, FWHT, correlation statistics.
+//! - [`exp`] — the experiment harnesses regenerating every paper table and
+//!   figure (Fig 4, Tables 1a–d, Table 2, Fig 9).
+
+pub mod attrib;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod linalg;
+pub mod models;
+pub mod runtime;
+pub mod sketch;
+pub mod store;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,185 @@
+//! Cholesky factorisation of the (damped) compressed FIM — the iFVP engine.
+//!
+//! The attribute pipeline needs `(F̂ + λI)^{-1} ĝ` for every cached gradient.
+//! `F̂` is k×k symmetric PSD; we factor once (`O(k³/3)`) and back-solve per
+//! vector (`O(k²)`), which is the paper's "matrix inversion complexity
+//! scales down from O(p²) to O(k²)" claim in practice.
+
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`, stored row-major.
+#[derive(Debug, Clone)]
+pub struct CholeskyFactor {
+    n: usize,
+    l: Vec<f64>,
+}
+
+impl CholeskyFactor {
+    /// Factor `A + damping·I`, where `a` is `n×n` row-major (only the lower
+    /// triangle is read). Uses f64 accumulation for stability.
+    pub fn factor_damped(a: &[f32], n: usize, damping: f64) -> Result<Self> {
+        assert_eq!(a.len(), n * n);
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[i * n + j] as f64;
+                if i == j {
+                    sum += damping;
+                }
+                for t in 0..j {
+                    sum -= l[i * n + t] * l[j * n + t];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        bail!("matrix not PD at pivot {i} (got {sum}); increase damping");
+                    }
+                    l[i * n + j] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        Ok(Self { n, l })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Solve `A x = b` via forward + backward substitution, in place.
+    pub fn solve_into(&self, b: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        // L y = b
+        for i in 0..n {
+            let mut s = b[i];
+            for j in 0..i {
+                s -= self.l[i * n + j] * b[j];
+            }
+            b[i] = s / self.l[i * n + i];
+        }
+        // Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for j in (i + 1)..n {
+                s -= self.l[j * n + i] * b[j];
+            }
+            b[i] = s / self.l[i * n + i];
+        }
+    }
+
+    /// f32 convenience: returns `A^{-1} b`.
+    pub fn solve_f32(&self, b: &[f32]) -> Vec<f32> {
+        let mut work: Vec<f64> = b.iter().map(|&x| x as f64).collect();
+        self.solve_into(&mut work);
+        work.into_iter().map(|x| x as f32).collect()
+    }
+
+    /// Dense inverse (used by tests and the TRAK preconditioner which
+    /// re-applies the inverse to many vectors via one matmul).
+    pub fn inverse(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut inv = vec![0.0f64; n * n];
+        let mut e = vec![0.0f64; n];
+        for c in 0..n {
+            e.fill(0.0);
+            e[c] = 1.0;
+            self.solve_into(&mut e);
+            for r in 0..n {
+                inv[r * n + c] = e[r];
+            }
+        }
+        inv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    fn random_spd(n: usize, seed: u64) -> Vec<f32> {
+        // A = B Bᵀ + 0.1 I
+        let mut rng = Pcg::new(seed);
+        let b: Vec<f64> = (0..n * n).map(|_| rng.next_gaussian() as f64).collect();
+        let mut a = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { 0.1 } else { 0.0 };
+                for t in 0..n {
+                    s += b[i * n + t] * b[j * n + t];
+                }
+                a[i * n + j] = s as f32;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn solve_recovers_known_x() {
+        let n = 24;
+        let a = random_spd(n, 5);
+        let f = CholeskyFactor::factor_damped(&a, n, 0.0).unwrap();
+        let mut rng = Pcg::new(6);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian() as f64).collect();
+        // b = A x
+        let mut b = vec![0.0f64; n];
+        for i in 0..n {
+            for j in 0..n {
+                b[i] += a[i * n + j] as f64 * x[j];
+            }
+        }
+        f.solve_into(&mut b);
+        for i in 0..n {
+            assert!((b[i] - x[i]).abs() < 1e-3, "x[{i}]: {} vs {}", b[i], x[i]);
+        }
+    }
+
+    #[test]
+    fn damping_regularises_singular_matrix() {
+        // rank-1 matrix fails without damping, succeeds with it
+        let n = 4;
+        let v = [1.0f32, 2.0, 3.0, 4.0];
+        let mut a = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = v[i] * v[j];
+            }
+        }
+        assert!(CholeskyFactor::factor_damped(&a, n, 0.0).is_err());
+        assert!(CholeskyFactor::factor_damped(&a, n, 1e-3).is_ok());
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let n = 12;
+        let a = random_spd(n, 9);
+        let f = CholeskyFactor::factor_damped(&a, n, 0.0).unwrap();
+        let inv = f.inverse();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for t in 0..n {
+                    s += inv[i * n + t] * a[t * n + j] as f64;
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-3, "({i},{j}) = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_solve_is_identity() {
+        let n = 8;
+        let mut a = vec![0.0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let f = CholeskyFactor::factor_damped(&a, n, 0.0).unwrap();
+        let b: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let x = f.solve_f32(&b);
+        for i in 0..n {
+            assert!((x[i] - b[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Fast Walsh–Hadamard transform — the `H` in the FJLT's `P·H·D` sandwich.
+//! In-place, O(n log n), n must be a power of two. Normalised by `1/√n` so
+//! the transform is orthonormal (applying it twice gives the identity).
+
+/// In-place orthonormal FWHT. Panics unless `data.len()` is a power of two.
+pub fn fwht_inplace(data: &mut [f32]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "FWHT length {n} not a power of two");
+    let mut h = 1;
+    while h < n {
+        for block in (0..n).step_by(h * 2) {
+            for i in block..block + h {
+                let (a, b) = (data[i], data[i + h]);
+                data[i] = a + b;
+                data[i + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in data.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Next power of two ≥ n.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn involution() {
+        let orig: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut x = orig.clone();
+        fwht_inplace(&mut x);
+        fwht_inplace(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn preserves_l2_norm() {
+        let orig: Vec<f32> = (0..256).map(|i| ((i * i) as f32 * 0.01).cos()).collect();
+        let mut x = orig.clone();
+        fwht_inplace(&mut x);
+        let n0: f64 = orig.iter().map(|&v| (v as f64).powi(2)).sum();
+        let n1: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!((n0 - n1).abs() < 1e-3 * n0);
+    }
+
+    #[test]
+    fn matches_naive_hadamard_small() {
+        // H_4 (unnormalised) rows: ++++, +-+-, ++--, +--+
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0];
+        fwht_inplace(&mut x);
+        let expect = [10.0f32, -2.0, -4.0, 0.0].map(|v| v / 2.0);
+        for (a, b) in x.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        fwht_inplace(&mut [1.0, 2.0, 3.0]);
+    }
+}

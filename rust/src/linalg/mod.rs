@@ -1,0 +1,14 @@
+//! Small dense linear algebra used across the attribution pipeline:
+//! Cholesky factorisation (FIM inversion), the fast Walsh–Hadamard
+//! transform (FJLT baseline), correlation statistics (LDS), and a blocked
+//! matmul for the factorized compressors.
+
+pub mod cholesky;
+pub mod fwht;
+pub mod matmul;
+pub mod stats;
+
+pub use cholesky::CholeskyFactor;
+pub use fwht::fwht_inplace;
+pub use matmul::{matmul, matmul_at_b};
+pub use stats::{pearson, spearman};

@@ -1,0 +1,110 @@
+//! Correlation statistics for the LDS evaluation (Park et al. 2023): the
+//! linear datamodeling score is a mean Spearman rank correlation between
+//! predicted group scores and actual counterfactual losses.
+
+/// Pearson correlation; returns 0 for degenerate (constant) inputs.
+pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let am = a.iter().map(|&x| x as f64).sum::<f64>() / nf;
+    let bm = b.iter().map(|&x| x as f64).sum::<f64>() / nf;
+    let (mut cov, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for i in 0..n {
+        let da = a[i] as f64 - am;
+        let db = b[i] as f64 - bm;
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    if va < 1e-18 || vb < 1e-18 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Fractional ranks with average tie handling.
+pub fn ranks(x: &[f32]) -> Vec<f64> {
+    let n = x.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| x[i].partial_cmp(&x[j]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut r = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && x[order[j + 1]] == x[order[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &oi in &order[i..=j] {
+            r[oi] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Spearman rank correlation.
+pub fn spearman(a: &[f32], b: &[f32]) -> f64 {
+    let ra: Vec<f32> = ranks(a).into_iter().map(|x| x as f32).collect();
+    let rb: Vec<f32> = ranks(b).into_iter().map(|x| x as f32).collect();
+    pearson(&ra, &rb)
+}
+
+/// Mean of a slice of f64 (NaNs filtered).
+pub fn mean(xs: &[f64]) -> f64 {
+    let good: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if good.is_empty() {
+        return 0.0;
+    }
+    good.iter().sum::<f64>() / good.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [2.0f32, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-9);
+        let c = [8.0f32, 6.0, 4.0, 2.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        assert_eq!(pearson(&[1.0; 4], &[1.0, 2.0, 3.0, 4.0]), 0.0);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear_is_one() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let b = [1.0f32, 8.0, 27.0, 64.0, 125.0];
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ranks_handle_ties() {
+        let r = ranks(&[10.0, 20.0, 20.0, 30.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn spearman_is_permutation_sensitive() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [2.0f32, 1.0, 4.0, 3.0, 6.0, 5.0];
+        let s = spearman(&a, &b);
+        assert!(s > 0.5 && s < 1.0, "s = {s}");
+    }
+
+    #[test]
+    fn mean_filters_nan() {
+        assert_eq!(mean(&[1.0, f64::NAN, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

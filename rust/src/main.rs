@@ -1,0 +1,194 @@
+//! `grass` — the leader CLI.
+//!
+//! ```text
+//! grass exp fig4 [--ks 512,...] [--out results.json]
+//! grass exp table1a|table1b|table1c|table1d [--fast] [--ks ...] [...]
+//! grass exp table2 [--ks 256,1024,4096] [--tokens 256] [--reps 8]
+//! grass exp fig9 [--kl 256]
+//! grass cache --model mlp --method sjlt:k=1024 --n 1000 --store DIR
+//! grass info
+//! ```
+
+use anyhow::{bail, Result};
+use grass::config::ExpConfig;
+use grass::coordinator::{CachePipeline, CompressorBank, PipelineConfig};
+use grass::data::images::SynthDigits;
+use grass::exp;
+use grass::runtime::Runtime;
+use grass::sketch::MethodSpec;
+use grass::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("exp") => run_exp(&args),
+        Some("cache") => run_cache(&args),
+        Some("info") => run_info(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "grass — Scalable Data Attribution with Gradient Sparsification and Sparse Projection
+
+USAGE:
+  grass exp <fig4|table1a|table1b|table1c|table1d|table2|fig9|ablation|all> [flags]
+  grass cache --model <mlp|resnet_lite|gpt2_tiny|music> --method <spec> [--n N] [--store DIR]
+  grass info
+
+COMMON FLAGS:
+  --ks 512,1024,2048    compression dimensions
+  --n-train / --n-test / --subsets / --checkpoints / --epochs / --lr / --seed
+  --fast                shrink everything for a smoke run
+  --out results.json    append table to a JSON report
+
+METHOD SPECS: rm:k=.. | sm:k=.. | sjlt:k=..,s=1 | gauss:k=.. | fjlt:k=.. |
+              grass:k=..,kp=..,mask=rm|sm"
+    );
+}
+
+fn run_info() -> Result<()> {
+    let rt = Runtime::load(Runtime::artifacts_dir())?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts ({}):", rt.manifest.artifacts.len());
+    for (name, spec) in &rt.manifest.artifacts {
+        println!(
+            "  {name}: {} inputs, {} outputs ({})",
+            spec.inputs.len(),
+            spec.outputs.len(),
+            spec.file
+        );
+    }
+    println!("models:");
+    for (name, meta) in &rt.manifest.models {
+        println!(
+            "  {name}: P = {}, {} hooked layers",
+            meta.p,
+            meta.layers.len()
+        );
+    }
+    Ok(())
+}
+
+fn run_exp(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let out = args.get("out");
+
+    // Pure-CPU experiments that need no PJRT artifacts:
+    if which == "fig4" {
+        let ks = args.get_usize_list("ks", &[512, 2048, 8192])?;
+        let budget = args.get_u64("budget-ms", 300)?;
+        let t = exp::fig4::run(&ks, budget, out)?;
+        t.print();
+        return Ok(());
+    }
+    if which == "ablation" {
+        let p = args.get_usize("p", 131_072)?;
+        let k = args.get_usize("k", 2048)?;
+        exp::ablation::run_grass_kprime(p, k, out)?.print();
+        exp::ablation::run_factgrass_blowup(out)?.print();
+        return Ok(());
+    }
+    if which == "table2" {
+        let ks = args.get_usize_list("ks", &[256, 1024, 4096])?;
+        let tokens = args.get_usize("tokens", 256)?;
+        let reps = args.get_usize("reps", 4)?;
+        let t = exp::table2::run(&ks, tokens, reps, out)?;
+        t.print();
+        return Ok(());
+    }
+
+    let rt = Runtime::load(Runtime::artifacts_dir())?;
+    let mut cfg = ExpConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg = ExpConfig::from_file(path)?;
+    }
+    cfg.apply_args(args)?;
+
+    let save = |t: &exp::report::Table| -> Result<()> {
+        t.print();
+        if let Some(path) = out {
+            t.save(path)?;
+        }
+        Ok(())
+    };
+
+    match which {
+        "table1a" => save(&exp::table1::run_table1a(&rt, &cfg)?)?,
+        "table1b" => save(&exp::table1::run_table1b(&rt, &cfg)?)?,
+        "table1c" => save(&exp::table1::run_table1c(&rt, &cfg)?)?,
+        "table1d" => {
+            let mut c = cfg.clone();
+            if args.get("ks").is_none() {
+                c.ks = vec![16, 64, 256]; // per-layer k_l (perfect squares)
+            }
+            save(&exp::table1::run_table1d(&rt, &c)?)?;
+        }
+        "fig9" => {
+            let kl = args.get_usize("kl", 256)?;
+            let outcome = exp::fig9::run(&rt, &cfg, kl)?;
+            outcome.table.print();
+            println!(
+                "top-10 same-theme fraction: {:.0}% (query theme: {})",
+                outcome.top10_theme_hit * 100.0,
+                outcome.query_theme
+            );
+        }
+        "all" => {
+            save(&exp::table1::run_table1a(&rt, &cfg)?)?;
+            save(&exp::table1::run_table1b(&rt, &cfg)?)?;
+            save(&exp::table1::run_table1c(&rt, &cfg)?)?;
+            let mut c = cfg.clone();
+            c.ks = vec![16, 64, 256];
+            save(&exp::table1::run_table1d(&rt, &c)?)?;
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn run_cache(args: &Args) -> Result<()> {
+    let rt = Runtime::load(Runtime::artifacts_dir())?;
+    let model = args.get_or("model", "mlp").to_string();
+    let spec = MethodSpec::parse(args.get_or("method", "sjlt:k=1024"))?;
+    let n = args.get_usize("n", 1000)?;
+    let seed = args.get_u64("seed", 42)?;
+    let store = args.get_or("store", "grass_store").to_string();
+    let p = rt.manifest.model(&model)?.p;
+
+    // init params (untrained demo; pass --params to load a trained vector)
+    let init = rt.executable(&format!("{model}_init"))?;
+    let params = init
+        .run(&[grass::runtime::Arg::ScalarI32(seed as i32)])?
+        .remove(0)
+        .data;
+
+    let pipeline = CachePipeline::new(&rt, &model, params, PipelineConfig::default());
+    let bank = CompressorBank::Flat(spec.build(p, seed));
+    let data = SynthDigits::generate(n, seed);
+    let meta = pipeline.run_flat(
+        &grass::coordinator::pipeline::Source::Labelled(&data),
+        &bank,
+        std::path::Path::new(&store),
+        &spec.spec_string(),
+        seed,
+    )?;
+    println!("cached {} rows of k={} into {store}", meta.n, meta.k);
+    println!("{}", pipeline.metrics.report());
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Model geometry registry.
+//!
+//! The Rust side needs layer shapes in two places: (1) the Table 2
+//! throughput harness runs the factorized compressors over the *exact*
+//! Llama-3.1-8B linear-layer geometry with synthetic activations (the
+//! paper's billion-scale experiment measures compression throughput, which
+//! depends only on shapes); (2) the attribution pipeline maps manifest
+//! layer metadata onto compressors.
+
+pub mod shapes;
+
+pub use shapes::{gpt2_small_layers, llama8b_layers, LayerShape};

@@ -1,0 +1,246 @@
+//! PJRT runtime — loads the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//! Python never runs here; the `grass` binary is self-contained once
+//! `make artifacts` has been run.
+//!
+//! Layout: [`registry`] parses `artifacts/manifest.json` into typed specs;
+//! [`Runtime`] owns the PJRT CPU client and a compile-once executable cache;
+//! [`Executable::run`] validates shapes and converts literals.
+
+pub mod registry;
+
+use anyhow::{anyhow, bail, Context, Result};
+use registry::{ArtifactSpec, Dtype, Manifest};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// A typed argument for an executable call.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl Arg {
+    pub fn shape(&self) -> Vec<usize> {
+        match self {
+            Arg::F32(_, s) | Arg::I32(_, s) => s.clone(),
+            Arg::ScalarF32(_) | Arg::ScalarI32(_) => vec![],
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Arg::F32(..) | Arg::ScalarF32(_) => Dtype::F32,
+            Arg::I32(..) | Arg::ScalarI32(_) => Dtype::S32,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Arg::F32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Arg::I32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Arg::ScalarF32(v) => xla::Literal::scalar(*v),
+            Arg::ScalarI32(v) => xla::Literal::scalar(*v),
+        })
+    }
+}
+
+/// An output tensor (all our artifacts emit f32).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn rows(&self) -> usize {
+        self.shape.first().copied().unwrap_or(1)
+    }
+
+    /// Row `i` of a tensor with leading batch dimension.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w: usize = self.shape[1..].iter().product();
+        &self.data[i * w..(i + 1) * w]
+    }
+}
+
+/// A compiled HLO executable plus its manifest spec.
+///
+/// SAFETY of `Send + Sync`: `PjRtLoadedExecutable` wraps a raw pointer into
+/// the PJRT C API. The PJRT contract (and the CPU plugin implementation)
+/// guarantees `Execute` is thread-safe on a loaded executable, and the
+/// wrapper never exposes interior mutation; the pointer itself has no thread
+/// affinity. We rely on that contract to share executables across the
+/// coordinator's worker threads — the same pattern jaxlib uses.
+pub struct Executable {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    inner: xla::PjRtLoadedExecutable,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with shape/dtype validation against the manifest spec.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<Tensor>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                args.len()
+            );
+        }
+        for (i, (arg, spec)) in args.iter().zip(&self.spec.inputs).enumerate() {
+            if arg.shape() != spec.shape || arg.dtype() != spec.dtype {
+                bail!(
+                    "{}: input {i} mismatch: got {:?}/{:?}, want {:?}/{:?}",
+                    self.name,
+                    arg.shape(),
+                    arg.dtype(),
+                    spec.shape,
+                    spec.dtype
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self
+            .inner
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.name))?;
+        // aot.py lowers with return_tuple=True.
+        let parts = out.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| {
+                Ok(Tensor {
+                    data: lit.to_vec::<f32>()?,
+                    shape: spec.shape.clone(),
+                })
+            })
+            .collect()
+    }
+}
+
+/// The PJRT runtime: client + manifest + compile-once executable cache.
+///
+/// SAFETY of `Send + Sync`: same PJRT thread-safety contract as
+/// [`Executable`]; `PjRtClient::compile` is thread-safe and the cache is
+/// guarded by a mutex.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Load the manifest from `dir` and create the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let manifest = Manifest::load(&manifest_path)
+            .with_context(|| format!("loading {}", manifest_path.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory: `$GRASS_ARTIFACTS` or `./artifacts`.
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var("GRASS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Get (compiling on first use) the named executable.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exec = Arc::new(Executable {
+            name: name.to_string(),
+            spec,
+            inner: exe,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_shapes_and_dtypes() {
+        let a = Arg::F32(vec![1.0; 6], vec![2, 3]);
+        assert_eq!(a.shape(), vec![2, 3]);
+        assert_eq!(a.dtype(), Dtype::F32);
+        let b = Arg::ScalarI32(7);
+        assert_eq!(b.shape(), Vec::<usize>::new());
+        assert_eq!(b.dtype(), Dtype::S32);
+    }
+
+    #[test]
+    fn tensor_row_access() {
+        let t = Tensor {
+            data: (0..12).map(|i| i as f32).collect(),
+            shape: vec![3, 4],
+        };
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+}

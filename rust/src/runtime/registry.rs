@@ -1,0 +1,261 @@
+//! Artifact manifest parsing — the typed contract between `aot.py` and the
+//! Rust coordinator (shapes, dtypes, batch sizes, model metadata).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" => Ok(Dtype::S32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    fn parse(j: &Json) -> Result<Self> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.req("dtype")?.as_str().unwrap_or("f32"))?;
+        Ok(Self { shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Hooked linear layer metadata (LM models): name, d_in, d_out.
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    /// Flat parameter count P.
+    pub p: usize,
+    /// Parameter layout: (name, shape) in flat-vector order.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Hooked linear layers (LMs only).
+    pub layers: Vec<LayerMeta>,
+    pub seq: Option<usize>,
+    pub vocab: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelMeta>,
+    /// batch-size contract: kind ("grads"/"train"/"loss"/"hooks") → model → B.
+    pub batch_sizes: BTreeMap<String, BTreeMap<String, usize>>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in j
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            let inputs = spec
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs not an array"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = spec
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("outputs not an array"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: spec
+                        .req("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("file not a string"))?
+                        .to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, meta) in j
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?
+        {
+            let p = meta.req("p")?.as_usize().ok_or_else(|| anyhow!("bad p"))?;
+            let params = meta
+                .req("params")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|pair| {
+                    let arr = pair.as_arr().ok_or_else(|| anyhow!("bad param pair"))?;
+                    let pname = arr[0].as_str().unwrap_or("").to_string();
+                    let shape = arr[1]
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|v| v.as_usize())
+                        .collect();
+                    Ok((pname, shape))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let layers = meta
+                .get("layers")
+                .and_then(|l| l.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|t| {
+                            let t = t.as_arr()?;
+                            Some(LayerMeta {
+                                name: t[0].as_str()?.to_string(),
+                                d_in: t[1].as_usize()?,
+                                d_out: t[2].as_usize()?,
+                            })
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    p,
+                    params,
+                    layers,
+                    seq: meta.get("seq").and_then(|v| v.as_usize()),
+                    vocab: meta.get("vocab").and_then(|v| v.as_usize()),
+                },
+            );
+        }
+
+        let mut batch_sizes = BTreeMap::new();
+        if let Some(bs) = j.get("batch_sizes").and_then(|b| b.as_obj()) {
+            for (kind, per_model) in bs {
+                let mut inner = BTreeMap::new();
+                if let Some(pm) = per_model.as_obj() {
+                    for (m, v) in pm {
+                        if let Some(n) = v.as_usize() {
+                            inner.insert(m.clone(), n);
+                        }
+                    }
+                }
+                batch_sizes.insert(kind.clone(), inner);
+            }
+        }
+
+        Ok(Self {
+            artifacts,
+            models,
+            batch_sizes,
+        })
+    }
+
+    pub fn batch_size(&self, kind: &str, model: &str) -> Result<usize> {
+        self.batch_sizes
+            .get(kind)
+            .and_then(|m| m.get(model))
+            .copied()
+            .ok_or_else(|| anyhow!("no batch size for {kind}/{model}"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": {
+        "mlp_grads": {
+          "file": "mlp_grads.hlo.txt",
+          "inputs": [{"shape": [84618], "dtype": "f32"},
+                      {"shape": [16, 196], "dtype": "f32"},
+                      {"shape": [16], "dtype": "s32"}],
+          "outputs": [{"shape": [16, 84618], "dtype": "f32"}]
+        }
+      },
+      "models": {
+        "mlp": {"p": 84618, "params": [["w0", [256, 196]], ["b0", [256]]]},
+        "gpt2_tiny": {"p": 300000, "params": [],
+          "layers": [["blk0.qkv", 128, 384]], "seq": 64, "vocab": 256}
+      },
+      "batch_sizes": {"grads": {"mlp": 16}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["mlp_grads"];
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1].shape, vec![16, 196]);
+        assert_eq!(a.inputs[2].dtype, Dtype::S32);
+        assert_eq!(a.outputs[0].elements(), 16 * 84618);
+        assert_eq!(m.model("mlp").unwrap().p, 84618);
+        assert_eq!(m.batch_size("grads", "mlp").unwrap(), 16);
+        let lm = m.model("gpt2_tiny").unwrap();
+        assert_eq!(lm.layers.len(), 1);
+        assert_eq!(lm.layers[0].d_out, 384);
+        assert_eq!(lm.seq, Some(64));
+    }
+
+    #[test]
+    fn missing_pieces_error() {
+        assert!(Manifest::parse("{}").is_err());
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.model("nope").is_err());
+        assert!(m.batch_size("train", "mlp").is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Fast Johnson–Lindenstrauss transform (`FJLT_k`) — the TRAK baseline
+//! (Ailon–Chazelle 2009; Fandina et al. 2023). Implemented as a subsampled
+//! randomized Hadamard transform (SRHT): `ĝ = √(p₂/k) · S · H · D · g`,
+//! where `D` is a random sign flip, `H` the orthonormal Walsh–Hadamard
+//! transform over the zero-padded power-of-two dimension `p₂`, and `S`
+//! samples `k` coordinates. O((p + k) log p) per projection.
+//!
+//! Its algorithmic structure — a *dense* transform touching every padded
+//! coordinate — is exactly why it cannot exploit input sparsity (paper
+//! §3.1): nnz-scaling is impossible once H mixes all coordinates.
+
+use super::rng::{hash2, to_sign, Pcg};
+use super::Compressor;
+use crate::linalg::fwht::{fwht_inplace, next_pow2};
+
+#[derive(Debug, Clone)]
+pub struct Fjlt {
+    p: usize,
+    p2: usize,
+    k: usize,
+    seed: u64,
+    /// Sampled output coordinates (len = k, with replacement per SRHT).
+    sample: Vec<u32>,
+    scale: f32,
+}
+
+impl Fjlt {
+    pub fn new(p: usize, k: usize, seed: u64) -> Self {
+        assert!(p > 0 && k > 0);
+        let p2 = next_pow2(p);
+        let mut rng = Pcg::new(seed ^ 0xF117);
+        let sample: Vec<u32> = (0..k).map(|_| rng.next_below(p2) as u32).collect();
+        Self {
+            p,
+            p2,
+            k,
+            seed,
+            sample,
+            scale: ((p2 as f64 / k as f64).sqrt()) as f32,
+        }
+    }
+
+    /// The random sign for input coordinate j.
+    #[inline(always)]
+    fn sign(&self, j: usize) -> f32 {
+        to_sign(hash2(self.seed, j as u64))
+    }
+}
+
+impl Compressor for Fjlt {
+    fn input_dim(&self) -> usize {
+        self.p
+    }
+
+    fn output_dim(&self) -> usize {
+        self.k
+    }
+
+    fn compress_into(&self, g: &[f32], out: &mut [f32]) {
+        assert_eq!(g.len(), self.p);
+        assert_eq!(out.len(), self.k);
+        // D·g into the padded buffer
+        let mut buf = vec![0.0f32; self.p2];
+        for (j, &v) in g.iter().enumerate() {
+            buf[j] = v * self.sign(j);
+        }
+        // H
+        fwht_inplace(&mut buf);
+        // S with scaling
+        for (o, &s) in out.iter_mut().zip(&self.sample) {
+            *o = buf[s as usize] * self.scale;
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("FJLT_{}", self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    fn norm(v: &[f32]) -> f64 {
+        v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn norm_preservation() {
+        let (p, k) = (3000, 1024); // non-pow2 p exercises padding
+        let t = Fjlt::new(p, k, 3);
+        let mut rng = Pcg::new(4);
+        for _ in 0..3 {
+            let g: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+            let ratio = norm(&t.compress(&g)) / norm(&g);
+            assert!((0.85..1.15).contains(&ratio), "ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn distance_preservation() {
+        let (p, k) = (2048, 512);
+        let t = Fjlt::new(p, k, 5);
+        let mut rng = Pcg::new(6);
+        let a: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let d: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x - y).collect();
+        let (ca, cb) = (t.compress(&a), t.compress(&b));
+        let dc: Vec<f32> = ca.iter().zip(&cb).map(|(x, y)| x - y).collect();
+        let ratio = norm(&dc) / norm(&d);
+        assert!((0.8..1.2).contains(&ratio), "distance ratio {ratio}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let t = Fjlt::new(100, 16, 9);
+        let g: Vec<f32> = (0..100).map(|i| i as f32 * 0.1).collect();
+        assert_eq!(t.compress(&g), t.compress(&g));
+    }
+
+    #[test]
+    fn spike_input_spreads_energy() {
+        // A 1-sparse input must spread across the Hadamard basis — the
+        // structural reason FJLT can't exploit sparsity.
+        let p = 256;
+        let t = Fjlt::new(p, 64, 11);
+        let mut g = vec![0.0f32; p];
+        g[17] = 1.0;
+        let out = t.compress(&g);
+        let nnz_out = out.iter().filter(|&&x| x != 0.0).count();
+        assert!(nnz_out > 32, "FJLT output unexpectedly sparse: {nnz_out}");
+        let ratio = norm(&out);
+        assert!((0.6..1.4).contains(&ratio), "spike norm {ratio}");
+    }
+}

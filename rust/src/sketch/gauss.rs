@@ -1,0 +1,229 @@
+//! Dense Gaussian random projection (`GAUSS_k`) — the classical JL baseline
+//! (Wojnowicz et al. 2016; TRAK's `RANDOM`). O(pk) time; the projection
+//! matrix `P_ij ~ N(0, 1/k)` is *never stored* — entries are counter-based
+//! hashes of `(seed, i, j)`, so memory stays O(1) even at p = 10^9 where the
+//! paper notes the matrix "is too large to fit in GPU memory".
+//!
+//! Also provides the dense Rademacher variant (`±1/√k`, Fig. 1 of the
+//! paper), which is ~3× faster to generate and JL-equivalent.
+
+use super::rng::{hash3, to_gaussian, to_sign};
+use super::Compressor;
+use crate::util::par;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DenseEntry {
+    Gaussian,
+    Rademacher,
+}
+
+#[derive(Debug, Clone)]
+pub struct GaussianProjection {
+    p: usize,
+    k: usize,
+    seed: u64,
+    entry: DenseEntry,
+    inv_sqrt_k: f32,
+}
+
+impl GaussianProjection {
+    pub fn new(p: usize, k: usize, seed: u64) -> Self {
+        Self::with_entry(p, k, seed, DenseEntry::Gaussian)
+    }
+
+    pub fn rademacher(p: usize, k: usize, seed: u64) -> Self {
+        Self::with_entry(p, k, seed, DenseEntry::Rademacher)
+    }
+
+    pub fn with_entry(p: usize, k: usize, seed: u64, entry: DenseEntry) -> Self {
+        assert!(p > 0 && k > 0);
+        Self {
+            p,
+            k,
+            seed,
+            entry,
+            inv_sqrt_k: 1.0 / (k as f32).sqrt(),
+        }
+    }
+
+    /// P[i][j] (unnormalised; the 1/√k factor is applied at the end).
+    #[inline(always)]
+    fn entry(&self, i: usize, j: usize) -> f32 {
+        let h = hash3(self.seed, i as u64, j as u64);
+        match self.entry {
+            DenseEntry::Gaussian => to_gaussian(h, h ^ 0x9E37_79B9_7F4A_7C15),
+            DenseEntry::Rademacher => to_sign(h),
+        }
+    }
+
+    fn row_dot(&self, i: usize, g: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (j, &v) in g.iter().enumerate() {
+            acc += self.entry(i, j) * v;
+        }
+        acc * self.inv_sqrt_k
+    }
+}
+
+impl Compressor for GaussianProjection {
+    fn input_dim(&self) -> usize {
+        self.p
+    }
+
+    fn output_dim(&self) -> usize {
+        self.k
+    }
+
+    fn compress_into(&self, g: &[f32], out: &mut [f32]) {
+        assert_eq!(g.len(), self.p);
+        assert_eq!(out.len(), self.k);
+        if self.k * self.p < (1 << 18) {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = self.row_dot(i, g);
+            }
+        } else {
+            par::par_chunks_mut(out, 1, 1, |start, chunk| {
+                for (off, o) in chunk.iter_mut().enumerate() {
+                    *o = self.row_dot(start + off, g);
+                }
+            });
+        }
+    }
+
+    /// O(k·nnz): dense rows evaluated only at non-zero input coordinates
+    /// (paper §3.1: "for a dense matrix projection, the complexity becomes
+    /// O(k·nnz(g))").
+    fn compress_sparse_into(&self, idx: &[u32], vals: &[f32], out: &mut [f32]) {
+        assert_eq!(out.len(), self.k);
+        par::par_chunks_mut(out, 1, 16, |start, chunk| {
+            for (off, o) in chunk.iter_mut().enumerate() {
+                let i = start + off;
+                let mut acc = 0.0f32;
+                for (&j, &v) in idx.iter().zip(vals) {
+                    acc += self.entry(i, j as usize) * v;
+                }
+                *o = acc * self.inv_sqrt_k;
+            }
+        });
+    }
+
+    /// Blocked-matmul batch path: generate `P` in row blocks (so memory
+    /// stays bounded at `block·p` floats) and multiply all inputs against
+    /// each block — the cache/BLAS-friendly formulation of the dense
+    /// baseline, analogous to the paper's torch.matmul reference.
+    fn compress_batch(&self, gs: &[f32], n: usize, out: &mut [f32]) {
+        assert_eq!(gs.len(), n * self.p);
+        assert_eq!(out.len(), n * self.k);
+        const BLOCK: usize = 64;
+        let mut bt = vec![0.0f32; self.p * BLOCK.min(self.k)];
+        let mut tmp = vec![0.0f32; n * BLOCK.min(self.k)];
+        let mut i0 = 0;
+        while i0 < self.k {
+            let kb = BLOCK.min(self.k - i0);
+            // bt: p × kb block of Pᵀ, generated counter-based in parallel.
+            par::par_chunks_mut(&mut bt[..self.p * kb], kb, 256, |j_start, chunk| {
+                for (off, row) in chunk.chunks_mut(kb).enumerate() {
+                    let j = j_start + off;
+                    for (c, v) in row.iter_mut().enumerate() {
+                        *v = self.entry(i0 + c, j);
+                    }
+                }
+            });
+            crate::linalg::matmul::matmul(gs, &bt[..self.p * kb], &mut tmp[..n * kb], n, self.p, kb);
+            for r in 0..n {
+                for c in 0..kb {
+                    out[r * self.k + i0 + c] = tmp[r * kb + c] * self.inv_sqrt_k;
+                }
+            }
+            i0 += kb;
+        }
+    }
+
+    fn name(&self) -> String {
+        match self.entry {
+            DenseEntry::Gaussian => format!("GAUSS_{}", self.k),
+            DenseEntry::Rademacher => format!("RADEM_{}", self.k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    fn norm(v: &[f32]) -> f64 {
+        v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn norm_preservation() {
+        let (p, k) = (2048, 512);
+        let mut rng = Pcg::new(1);
+        let g: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        for entry in [DenseEntry::Gaussian, DenseEntry::Rademacher] {
+            let proj = GaussianProjection::with_entry(p, k, 5, entry);
+            let ratio = norm(&proj.compress(&g)) / norm(&g);
+            assert!((0.85..1.15).contains(&ratio), "{entry:?} ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn inner_product_preservation() {
+        let (p, k) = (2048, 1024);
+        let mut rng = Pcg::new(2);
+        let a: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let proj = GaussianProjection::new(p, k, 9);
+        let (ca, cb) = (proj.compress(&a), proj.compress(&b));
+        let exact: f64 = a.iter().zip(&b).map(|(x, y)| (x * y) as f64).sum();
+        let approx: f64 = ca.iter().zip(&cb).map(|(x, y)| (x * y) as f64).sum();
+        // |error| = O(|a||b|/sqrt(k)) ≈ 2048/32 = 64
+        assert!(
+            (exact - approx).abs() < 200.0,
+            "inner product: {exact} vs {approx}"
+        );
+    }
+
+    #[test]
+    fn deterministic_across_calls_and_seeds_differ() {
+        let proj = GaussianProjection::new(256, 32, 7);
+        let g: Vec<f32> = (0..256).map(|i| (i as f32).sin()).collect();
+        assert_eq!(proj.compress(&g), proj.compress(&g));
+        let proj2 = GaussianProjection::new(256, 32, 8);
+        assert_ne!(proj.compress(&g), proj2.compress(&g));
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let (p, k, n) = (300, 70, 5); // k not a multiple of the block
+        let proj = GaussianProjection::new(p, k, 11);
+        let mut rng = Pcg::new(4);
+        let gs: Vec<f32> = (0..n * p).map(|_| rng.next_gaussian()).collect();
+        let mut batch = vec![0.0f32; n * k];
+        proj.compress_batch(&gs, n, &mut batch);
+        for i in 0..n {
+            let single = proj.compress(&gs[i * p..(i + 1) * p]);
+            for j in 0..k {
+                assert!(
+                    (batch[i * k + j] - single[j]).abs() < 1e-3,
+                    "({i},{j}): {} vs {}",
+                    batch[i * k + j],
+                    single[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn entries_have_unit_variance() {
+        let proj = GaussianProjection::new(10_000, 4, 3);
+        let mut sq = 0.0f64;
+        for j in 0..10_000 {
+            let e = proj.entry(0, j) as f64;
+            sq += e * e;
+        }
+        let var = sq / 10_000.0;
+        assert!((var - 1.0).abs() < 0.08, "entry var {var}");
+    }
+}

@@ -1,0 +1,156 @@
+//! GraSS (`SJLT_k ∘ MASK_k'`) — paper §3.3.1.
+//!
+//! Two-stage compression: (1) sparsify the p-dimensional gradient to a
+//! k'-dimensional sub-vector via a (random or selective) mask, then
+//! (2) sparse-project the sub-vector to the target dimension k via SJLT.
+//! Overall O(k' + k') = O(k') — *sub-linear* in p. Extremes: `k' = p`
+//! recovers vanilla SJLT; `k' = k` recovers pure sparsification.
+
+use super::mask::RandomMask;
+use super::sjlt::Sjlt;
+use super::{Compressor, MaskKind};
+
+pub struct Grass {
+    mask: RandomMask,
+    sjlt: Sjlt,
+    /// Scratch is per-call to stay `Sync`; reuse happens at the batch level
+    /// in the coordinator (see `coordinator::compress_stage`).
+    k_prime: usize,
+}
+
+impl Grass {
+    /// Random-mask stage 1. `k_prime` is the intermediate dimension
+    /// (`k ≤ k' ≤ p`); the paper's default is `k' = 4·k_max` for TRAK
+    /// models and `2k_in ⊗ 2k_out` factorized.
+    pub fn new(p: usize, k_prime: usize, k: usize, kind: MaskKind, seed: u64) -> Self {
+        assert!(
+            k <= k_prime && k_prime <= p,
+            "need k ≤ k' ≤ p (got k={k}, k'={k_prime}, p={p})"
+        );
+        let mask = match kind {
+            MaskKind::Random => RandomMask::new(p, k_prime, seed ^ 0x6A55),
+            // Without trained scores a selective mask degenerates to random
+            // over a distinct stream; `with_mask` installs a trained one.
+            MaskKind::Selective => RandomMask::new(p, k_prime, seed ^ 0x5E1E),
+        };
+        Self {
+            sjlt: Sjlt::new(k_prime, k, 1, seed ^ 0x9A55),
+            mask,
+            k_prime,
+        }
+    }
+
+    /// Build from an explicit (e.g. selective-mask-trained) stage-1 mask.
+    pub fn with_mask(p: usize, mask: RandomMask, k: usize, seed: u64) -> Self {
+        assert_eq!(mask.input_dim(), p);
+        let k_prime = mask.output_dim();
+        assert!(k <= k_prime);
+        Self {
+            sjlt: Sjlt::new(k_prime, k, 1, seed ^ 0x9A55),
+            mask,
+            k_prime,
+        }
+    }
+
+    pub fn k_prime(&self) -> usize {
+        self.k_prime
+    }
+
+    pub fn mask_indices(&self) -> &[u32] {
+        self.mask.indices()
+    }
+}
+
+impl Compressor for Grass {
+    fn input_dim(&self) -> usize {
+        self.mask.input_dim()
+    }
+
+    fn output_dim(&self) -> usize {
+        self.sjlt.output_dim()
+    }
+
+    fn compress_into(&self, g: &[f32], out: &mut [f32]) {
+        let mut mid = vec![0.0f32; self.k_prime];
+        self.mask.compress_into(g, &mut mid);
+        self.sjlt.compress_into(&mid, out);
+    }
+
+    /// Sparse path: O(nnz∩mask) — intersect the sparse input with the mask
+    /// indices, then SJLT over the (even sparser) intermediate vector.
+    fn compress_sparse_into(&self, idx: &[u32], vals: &[f32], out: &mut [f32]) {
+        let mut mid = vec![0.0f32; self.k_prime];
+        self.mask.compress_sparse_into(idx, vals, &mut mid);
+        self.sjlt.compress_into(&mid, out);
+    }
+
+    fn name(&self) -> String {
+        format!("GraSS[SJLT_{} ∘ M_{}]", self.output_dim(), self.k_prime)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    fn norm(v: &[f32]) -> f64 {
+        v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn equals_mask_then_sjlt_composition() {
+        let (p, kp, k) = (1024, 256, 64);
+        let g1 = Grass::new(p, kp, k, MaskKind::Random, 77);
+        let mut rng = Pcg::new(1);
+        let g: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        // manual composition with identical seeds
+        let mask = RandomMask::new(p, kp, 77 ^ 0x6A55);
+        let sjlt = Sjlt::new(kp, k, 1, 77 ^ 0x9A55);
+        let want = sjlt.compress(&mask.compress(&g));
+        assert_eq!(g1.compress(&g), want);
+    }
+
+    #[test]
+    fn approximate_norm_preservation() {
+        // Two random stages still concentrate: ratio within a generous band.
+        let (p, kp, k) = (8192, 2048, 512);
+        let gr = Grass::new(p, kp, k, MaskKind::Random, 3);
+        let mut rng = Pcg::new(2);
+        let g: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let ratio = norm(&gr.compress(&g)) / norm(&g);
+        assert!((0.75..1.25).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn k_prime_equals_p_recovers_sjlt_geometry() {
+        let (p, k) = (512, 64);
+        let gr = Grass::new(p, p, k, MaskKind::Random, 5);
+        let mut rng = Pcg::new(9);
+        let g: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        // full mask is a (scaled-identity) permutation, so output norm ≈ SJLT norm
+        let ratio = norm(&gr.compress(&g)) / norm(&g);
+        assert!((0.7..1.3).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn with_trained_mask() {
+        let p = 256;
+        let mask = RandomMask::from_indices(p, (0..64u32).collect(), None);
+        let gr = Grass::with_mask(p, mask, 16, 11);
+        assert_eq!(gr.output_dim(), 16);
+        assert_eq!(gr.k_prime(), 64);
+        let mut g = vec![0.0f32; p];
+        // energy outside the mask must be dropped
+        for j in 64..p {
+            g[j] = 1.0;
+        }
+        assert!(gr.compress(&g).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "need k")]
+    fn invalid_dims_panic() {
+        Grass::new(100, 10, 20, MaskKind::Random, 0);
+    }
+}

@@ -1,0 +1,230 @@
+//! LoGra (`GAUSS_{k_in ⊗ k_out}`) — the factorized SOTA baseline
+//! (Choe et al. 2024), paper §3.3.2.
+//!
+//! For a linear layer `y = W x` with sequence input, the per-sample weight
+//! gradient is `vec(DW) = Σ_t x_t ⊗ dy_t`. LoGra assumes a Kronecker
+//! projection `P = P_in ⊗ P_out` and computes
+//!
+//! `P vec(DW) = Σ_t (P_in x_t) ⊗ (P_out dy_t) = vec( (X P_inᵀ)ᵀ (DY P_outᵀ) )`
+//!
+//! i.e. two *small* dense projections (k_in×d_in and k_out×d_out) per
+//! timestep plus a k_in×k_out accumulation — O(T(k_in d_in + k_out d_out))
+//! ≈ O(√(p_l k_l)) per token — and the full gradient is never materialised.
+//! The factor matrices are small enough to store explicitly (the paper
+//! defaults them to Gaussian).
+
+use super::rng::Pcg;
+use super::FactorizedCompressor;
+use crate::linalg::matmul::{matmul, matmul_at_b};
+
+#[derive(Debug, Clone)]
+pub struct LoGra {
+    d_in: usize,
+    d_out: usize,
+    k_in: usize,
+    k_out: usize,
+    /// `k_in × d_in`, row-major, entries N(0, 1/k_in).
+    p_in: Vec<f32>,
+    /// `k_out × d_out`, row-major, entries N(0, 1/k_out).
+    p_out: Vec<f32>,
+}
+
+impl LoGra {
+    pub fn new(d_in: usize, d_out: usize, k_in: usize, k_out: usize, seed: u64) -> Self {
+        assert!(k_in <= d_in && k_out <= d_out, "factor dims exceed layer dims");
+        let mut rng = Pcg::new(seed ^ 0x106A);
+        let gen = |rows: usize, cols: usize, rng: &mut Pcg| -> Vec<f32> {
+            let scale = 1.0 / (rows as f32).sqrt();
+            (0..rows * cols).map(|_| rng.next_gaussian() * scale).collect()
+        };
+        let p_in = gen(k_in, d_in, &mut rng);
+        let p_out = gen(k_out, d_out, &mut rng);
+        Self {
+            d_in,
+            d_out,
+            k_in,
+            k_out,
+            p_in,
+            p_out,
+        }
+    }
+
+    pub fn k_in(&self) -> usize {
+        self.k_in
+    }
+
+    pub fn k_out(&self) -> usize {
+        self.k_out
+    }
+
+    /// Project the input factor: `Y(T×k_in) = X(T×d_in) · P_inᵀ`.
+    /// Parallel over timesteps — this dense factor projection is LoGra's
+    /// dominant cost and the baseline side of the Table 2 comparison.
+    pub fn project_in(&self, t: usize, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), t * self.d_in);
+        debug_assert_eq!(y.len(), t * self.k_in);
+        let (d_in, k_in, p_in) = (self.d_in, self.k_in, &self.p_in);
+        crate::util::par::par_chunks_mut(y, k_in, 16, |t_start, chunk| {
+            for (off, yr) in chunk.chunks_mut(k_in).enumerate() {
+                let ti = t_start + off;
+                let xr = &x[ti * d_in..(ti + 1) * d_in];
+                for (kk, yv) in yr.iter_mut().enumerate() {
+                    let pr = &p_in[kk * d_in..(kk + 1) * d_in];
+                    *yv = xr.iter().zip(pr).map(|(a, b)| a * b).sum();
+                }
+            }
+        });
+    }
+
+    /// Project the output factor: `Z(T×k_out) = DY(T×d_out) · P_outᵀ`.
+    pub fn project_out(&self, t: usize, dy: &[f32], z: &mut [f32]) {
+        debug_assert_eq!(dy.len(), t * self.d_out);
+        debug_assert_eq!(z.len(), t * self.k_out);
+        let (d_out, k_out, p_out) = (self.d_out, self.k_out, &self.p_out);
+        crate::util::par::par_chunks_mut(z, k_out, 16, |t_start, chunk| {
+            for (off, zr) in chunk.chunks_mut(k_out).enumerate() {
+                let ti = t_start + off;
+                let dr = &dy[ti * d_out..(ti + 1) * d_out];
+                for (kk, zv) in zr.iter_mut().enumerate() {
+                    let pr = &p_out[kk * d_out..(kk + 1) * d_out];
+                    *zv = dr.iter().zip(pr).map(|(a, b)| a * b).sum();
+                }
+            }
+        });
+    }
+}
+
+impl FactorizedCompressor for LoGra {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn output_dim(&self) -> usize {
+        self.k_in * self.k_out
+    }
+
+    fn compress_into(&self, t: usize, x: &[f32], dy: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), t * self.d_in);
+        assert_eq!(dy.len(), t * self.d_out);
+        assert_eq!(out.len(), self.k_in * self.k_out);
+        let mut y = vec![0.0f32; t * self.k_in];
+        let mut z = vec![0.0f32; t * self.k_out];
+        self.project_in(t, x, &mut y);
+        self.project_out(t, dy, &mut z);
+        // out[a*k_out + b] = Σ_t y[t,a] z[t,b]  ==  Yᵀ Z
+        matmul_at_b(&y, &z, out, t, self.k_in, self.k_out);
+    }
+
+    fn name(&self) -> String {
+        format!("LoGra[GAUSS_{}⊗{}]", self.k_in, self.k_out)
+    }
+}
+
+/// Reference: materialise the full per-sample gradient `Σ_t dy_t x_tᵀ` and
+/// apply the Kronecker projection densely — O(T·p_l) + O(p_l·k_l). Used by
+/// tests to validate the factorized fast paths, and by the Table 2 harness
+/// as the "materialise" strawman the paper rules out in §3.3.2.
+pub fn project_via_materialized(
+    logra: &LoGra,
+    t: usize,
+    x: &[f32],
+    dy: &[f32],
+) -> Vec<f32> {
+    let (d_in, d_out) = (logra.d_in, logra.d_out);
+    // G(d_in×d_out) = Xᵀ DY  (so vec index a*d_out+b == x_a * dy_b)
+    let mut g = vec![0.0f32; d_in * d_out];
+    matmul_at_b(x, dy, &mut g, t, d_in, d_out);
+    // (P_in ⊗ P_out) vec(G): out[a,b] = Σ_{i,j} P_in[a,i] P_out[b,j] G[i,j]
+    // = P_in · G · P_outᵀ
+    let mut tmp = vec![0.0f32; logra.k_in * d_out];
+    matmul(&logra.p_in, &g, &mut tmp, logra.k_in, d_in, d_out);
+    let mut out = vec![0.0f32; logra.k_in * logra.k_out];
+    for a in 0..logra.k_in {
+        for b in 0..logra.k_out {
+            let pr = &logra.p_out[b * d_out..(b + 1) * d_out];
+            let tr = &tmp[a * d_out..(a + 1) * d_out];
+            out[a * logra.k_out + b] = tr.iter().zip(pr).map(|(u, v)| u * v).sum();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    #[test]
+    fn factorized_matches_materialized() {
+        let (d_in, d_out, k_in, k_out, t) = (24, 16, 4, 3, 7);
+        let lg = LoGra::new(d_in, d_out, k_in, k_out, 42);
+        let mut rng = Pcg::new(1);
+        let x: Vec<f32> = (0..t * d_in).map(|_| rng.next_gaussian()).collect();
+        let dy: Vec<f32> = (0..t * d_out).map(|_| rng.next_gaussian()).collect();
+        let fast = lg.compress(t, &x, &dy);
+        let slow = project_via_materialized(&lg, t, &x, &dy);
+        for i in 0..fast.len() {
+            assert!(
+                (fast[i] - slow[i]).abs() < 1e-3 * (1.0 + slow[i].abs()),
+                "mismatch at {i}: {} vs {}",
+                fast[i],
+                slow[i]
+            );
+        }
+    }
+
+    #[test]
+    fn single_timestep_is_plain_kron() {
+        let (d_in, d_out, k_in, k_out) = (8, 6, 2, 2);
+        let lg = LoGra::new(d_in, d_out, k_in, k_out, 7);
+        let mut rng = Pcg::new(2);
+        let x: Vec<f32> = (0..d_in).map(|_| rng.next_gaussian()).collect();
+        let dy: Vec<f32> = (0..d_out).map(|_| rng.next_gaussian()).collect();
+        let out = lg.compress(1, &x, &dy);
+        // out[a*k_out+b] = (P_in x)_a (P_out dy)_b
+        let mut px = vec![0.0f32; k_in];
+        lg.project_in(1, &x, &mut px);
+        let mut pdy = vec![0.0f32; k_out];
+        lg.project_out(1, &dy, &mut pdy);
+        for a in 0..k_in {
+            for b in 0..k_out {
+                let want = px[a] * pdy[b];
+                assert!((out[a * k_out + b] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn norm_roughly_preserved_for_rank1() {
+        // Kronecker of two JL maps preserves kron-structured norms.
+        let (d_in, d_out, k_in, k_out) = (256, 256, 32, 32);
+        let lg = LoGra::new(d_in, d_out, k_in, k_out, 9);
+        let mut rng = Pcg::new(3);
+        let x: Vec<f32> = (0..d_in).map(|_| rng.next_gaussian()).collect();
+        let dy: Vec<f32> = (0..d_out).map(|_| rng.next_gaussian()).collect();
+        let out = lg.compress(1, &x, &dy);
+        let nx: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+        let ndy: f64 = dy.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+        let full = (nx * ndy).sqrt();
+        let got = out
+            .iter()
+            .map(|&v| (v as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let ratio = got / full;
+        assert!((0.6..1.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let lg1 = LoGra::new(16, 16, 4, 4, 5);
+        let lg2 = LoGra::new(16, 16, 4, 4, 5);
+        let x = vec![1.0f32; 16];
+        let dy = vec![0.5f32; 16];
+        assert_eq!(lg1.compress(1, &x, &dy), lg2.compress(1, &x, &dy));
+    }
+}

@@ -1,0 +1,169 @@
+//! Random Mask (`RM_k`) sparsification — paper §3.2.
+//!
+//! Selects `k` distinct coordinates of the `p`-dimensional gradient and
+//! extracts the sub-vector: `ĝ = M g` with `M` a binary selection matrix.
+//! O(k) per projection — sub-linear in `p`. Entries are scaled by `√(p/k)`
+//! so that `E[⟨ĝ_a, ĝ_b⟩] = ⟨g_a, g_b⟩` (unbiased GradDot under random
+//! coordinate sampling); the paper omits the constant as it cancels in
+//! correlation-based metrics, but the preconditioned influence pipeline
+//! benefits from scale-consistency across layers.
+
+use super::rng::Pcg;
+use super::Compressor;
+
+#[derive(Debug, Clone)]
+pub struct RandomMask {
+    p: usize,
+    /// Sorted selected coordinates (len = k).
+    indices: Vec<u32>,
+    scale: f32,
+}
+
+impl RandomMask {
+    pub fn new(p: usize, k: usize, seed: u64) -> Self {
+        assert!(k > 0 && k <= p, "mask k = {k} must be in [1, p = {p}]");
+        let mut rng = Pcg::new(seed ^ 0x4D41_534B); // "MASK"
+        let indices = rng.sample_distinct(p, k);
+        Self {
+            p,
+            indices,
+            scale: ((p as f64 / k as f64).sqrt()) as f32,
+        }
+    }
+
+    /// Build from explicit indices (used by [`super::selective`] and by the
+    /// factorized compressors which share mask plumbing).
+    pub fn from_indices(p: usize, mut indices: Vec<u32>, scale: Option<f32>) -> Self {
+        indices.sort_unstable();
+        indices.dedup();
+        assert!(!indices.is_empty(), "empty mask");
+        assert!(
+            (*indices.last().unwrap() as usize) < p,
+            "mask index out of range"
+        );
+        let k = indices.len();
+        Self {
+            p,
+            indices,
+            scale: scale.unwrap_or(((p as f64 / k as f64).sqrt()) as f32),
+        }
+    }
+
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+}
+
+impl Compressor for RandomMask {
+    fn input_dim(&self) -> usize {
+        self.p
+    }
+
+    fn output_dim(&self) -> usize {
+        self.indices.len()
+    }
+
+    fn compress_into(&self, g: &[f32], out: &mut [f32]) {
+        assert_eq!(g.len(), self.p);
+        assert_eq!(out.len(), self.indices.len());
+        for (o, &j) in out.iter_mut().zip(&self.indices) {
+            *o = g[j as usize] * self.scale;
+        }
+    }
+
+    /// O(nnz + k) via merge of two sorted index lists.
+    fn compress_sparse_into(&self, idx: &[u32], vals: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        let mut mi = 0usize;
+        for (&j, &v) in idx.iter().zip(vals) {
+            while mi < self.indices.len() && self.indices[mi] < j {
+                mi += 1;
+            }
+            if mi == self.indices.len() {
+                break;
+            }
+            if self.indices[mi] == j {
+                out[mi] = v * self.scale;
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("RM_{}", self.indices.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    #[test]
+    fn extracts_selected_coordinates() {
+        let m = RandomMask::from_indices(8, vec![1, 4, 6], Some(1.0));
+        let g = [0.0, 10.0, 0.0, 0.0, 40.0, 0.0, 60.0, 0.0];
+        assert_eq!(m.compress(&g), vec![10.0, 40.0, 60.0]);
+    }
+
+    #[test]
+    fn unbiased_inner_product() {
+        // E over masks of <Mg_a, Mg_b> ≈ <g_a, g_b> with √(p/k) scaling.
+        let p = 2048;
+        let k = 256;
+        let mut rng = Pcg::new(17);
+        let a: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let exact: f64 = a.iter().zip(&b).map(|(x, y)| (x * y) as f64).sum();
+        let trials = 200;
+        let mut mean = 0.0f64;
+        for t in 0..trials {
+            let m = RandomMask::new(p, k, t as u64);
+            let (ca, cb) = (m.compress(&a), m.compress(&b));
+            mean += ca.iter().zip(&cb).map(|(x, y)| (x * y) as f64).sum::<f64>();
+        }
+        mean /= trials as f64;
+        // exact is O(sqrt(p)) ≈ 45; estimator std ≈ p/sqrt(k·trials) ≈ 9
+        assert!(
+            (mean - exact).abs() < 30.0,
+            "masked inner product biased: {mean} vs {exact}"
+        );
+    }
+
+    #[test]
+    fn dedups_and_sorts_indices() {
+        let m = RandomMask::from_indices(10, vec![5, 2, 5, 9], Some(1.0));
+        assert_eq!(m.indices(), &[2, 5, 9]);
+    }
+
+    #[test]
+    fn full_mask_is_identity_times_scale() {
+        let m = RandomMask::new(16, 16, 0);
+        assert_eq!(m.indices(), (0..16u32).collect::<Vec<_>>().as_slice());
+        assert!((m.scale() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sparse_path_agrees() {
+        let m = RandomMask::new(100, 20, 3);
+        let idx = [3u32, 17, 50, 99];
+        let vals = [1.0f32, -2.0, 3.0, 4.0];
+        let mut dense = vec![0.0; 100];
+        for (&i, &v) in idx.iter().zip(&vals) {
+            dense[i as usize] = v;
+        }
+        let a = m.compress(&dense);
+        let mut b = vec![0.0; 20];
+        m.compress_sparse_into(&idx, &vals, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range() {
+        RandomMask::from_indices(4, vec![4], None);
+    }
+}

@@ -1,0 +1,353 @@
+//! Gradient compressors — the paper's core contribution plus every baseline.
+//!
+//! All compressors implement [`Compressor`]: a deterministic (seeded) linear
+//! map `R^p → R^k` applied to per-sample gradients. The paper's taxonomy:
+//!
+//! | Name (paper) | Type | Complexity | Here |
+//! |---|---|---|---|
+//! | `RM_k` (Random Mask) | sparsification | O(k) | [`mask::RandomMask`] |
+//! | `SM_k` (Selective Mask) | sparsification | O(k) | [`selective::SelectiveMask`] |
+//! | `SJLT_k` | sparse projection | O(p·s) | [`sjlt::Sjlt`] |
+//! | `GraSS = SJLT_k ∘ MASK_k'` | two-stage | O(k') | [`grass::Grass`] |
+//! | `GAUSS_k` | dense baseline | O(pk) | [`gauss::GaussianProjection`] |
+//! | `FJLT_k` | structured baseline | O((p+k)log p) | [`fjlt::Fjlt`] |
+//! | `LoGra = GAUSS_{kin⊗kout}` | factorized baseline | O(√(p_l k_l)) | [`logra::LoGra`] |
+//! | `FactGraSS = SJLT ∘ MASK_{kin'⊗kout'}` | factorized two-stage | O(k'_l) | [`factgrass::FactGrass`] |
+//!
+//! The factorized compressors ([`FactorizedCompressor`]) consume the LoGra
+//! interface — per-layer inputs `z_in ∈ R^{T×d_in}` and pre-activation
+//! gradients `Dz_out ∈ R^{T×d_out}` — and never materialise the full
+//! `d_in·d_out` gradient (paper §3.3.2).
+
+pub mod factgrass;
+pub mod fjlt;
+pub mod gauss;
+pub mod grass;
+pub mod logra;
+pub mod mask;
+pub mod rng;
+pub mod selective;
+pub mod sjlt;
+
+/// A seeded linear compression map `R^p → R^k` over dense gradient vectors.
+pub trait Compressor: Send + Sync {
+    /// Input dimensionality `p`.
+    fn input_dim(&self) -> usize;
+    /// Output (compressed) dimensionality `k`.
+    fn output_dim(&self) -> usize;
+
+    /// Compress `g` (len = `input_dim`) into `out` (len = `output_dim`).
+    /// `out` is fully overwritten.
+    fn compress_into(&self, g: &[f32], out: &mut [f32]);
+
+    /// Convenience allocator form.
+    fn compress(&self, g: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.output_dim()];
+        self.compress_into(g, &mut out);
+        out
+    }
+
+    /// Compress `n` rows (`n × p` → `n × k`). Default parallelises over
+    /// rows; GAUSS overrides with a blocked matmul (the hardware-friendly
+    /// form the paper's PyTorch baseline uses).
+    fn compress_batch(&self, gs: &[f32], n: usize, out: &mut [f32]) {
+        let p = self.input_dim();
+        let k = self.output_dim();
+        assert_eq!(gs.len(), n * p);
+        assert_eq!(out.len(), n * k);
+        crate::util::par::par_chunks_mut(out, k, 1, |row_start, chunk| {
+            for (off, orow) in chunk.chunks_mut(k).enumerate() {
+                let i = row_start + off;
+                self.compress_into(&gs[i * p..(i + 1) * p], orow);
+            }
+        });
+    }
+
+    /// Compress a sparse input given as (indices, values) pairs. The default
+    /// densifies; SJLT and masks override with nnz-scaling implementations —
+    /// this is the paper's "complexity scales with nnz(g)" property (§3.1).
+    fn compress_sparse_into(&self, idx: &[u32], vals: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(idx.len(), vals.len());
+        let mut dense = vec![0.0; self.input_dim()];
+        for (&i, &v) in idx.iter().zip(vals) {
+            dense[i as usize] = v;
+        }
+        self.compress_into(&dense, out);
+    }
+
+    /// Human-readable method name used in experiment reports.
+    fn name(&self) -> String;
+}
+
+/// A factorized compressor for linear layers: consumes the layer's input
+/// activations `x ∈ R^{T×d_in}` (row-major) and pre-activation gradients
+/// `dy ∈ R^{T×d_out}` and emits the compressed per-sample gradient of the
+/// weight matrix, without materialising the `d_out×d_in` gradient.
+pub trait FactorizedCompressor: Send + Sync {
+    fn d_in(&self) -> usize;
+    fn d_out(&self) -> usize;
+    /// Compressed dimension `k_l`.
+    fn output_dim(&self) -> usize;
+
+    /// `x`: `T × d_in` row-major; `dy`: `T × d_out` row-major.
+    /// `out` (len = `output_dim`) is fully overwritten.
+    fn compress_into(&self, t: usize, x: &[f32], dy: &[f32], out: &mut [f32]);
+
+    fn compress(&self, t: usize, x: &[f32], dy: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.output_dim()];
+        self.compress_into(t, x, dy, &mut out);
+        out
+    }
+
+    fn name(&self) -> String;
+}
+
+/// Which mask flavour a GraSS / FactGraSS instance uses for stage 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskKind {
+    Random,
+    Selective,
+}
+
+/// Compression method selector used by configs and the CLI.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MethodSpec {
+    /// `RM_k`
+    RandomMask { k: usize },
+    /// `SM_k` (indices must be trained first; falls back to magnitude-free
+    /// random selection if no trained mask is available).
+    SelectiveMask { k: usize },
+    /// `SJLT_k` with `s` non-zeros per column (paper uses s = 1).
+    Sjlt { k: usize, s: usize },
+    /// `GAUSS_k`
+    Gauss { k: usize },
+    /// `FJLT_k`
+    Fjlt { k: usize },
+    /// `GraSS = SJLT_k ∘ MASK_k'`
+    Grass {
+        k: usize,
+        k_prime: usize,
+        mask: MaskKind,
+    },
+}
+
+impl MethodSpec {
+    /// Parse a CLI/config spec string, e.g. `rm:k=2048`, `sjlt:k=4096,s=1`,
+    /// `gauss:k=2048`, `fjlt:k=8192`, `grass:k=2048,kp=8192,mask=rm`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        use anyhow::{anyhow, bail};
+        let (head, rest) = s.split_once(':').unwrap_or((s, ""));
+        let mut kv = std::collections::BTreeMap::new();
+        for item in rest.split(',').filter(|t| !t.is_empty()) {
+            let (k, v) = item
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad spec item '{item}' in '{s}'"))?;
+            kv.insert(k.trim(), v.trim());
+        }
+        let need = |key: &str| -> anyhow::Result<usize> {
+            kv.get(key)
+                .ok_or_else(|| anyhow!("spec '{s}' missing '{key}='"))?
+                .parse()
+                .map_err(|e| anyhow!("spec '{s}': bad {key}: {e}"))
+        };
+        Ok(match head {
+            "rm" | "random_mask" => MethodSpec::RandomMask { k: need("k")? },
+            "sm" | "selective_mask" => MethodSpec::SelectiveMask { k: need("k")? },
+            "sjlt" => MethodSpec::Sjlt {
+                k: need("k")?,
+                s: need("s").unwrap_or(1),
+            },
+            "gauss" => MethodSpec::Gauss { k: need("k")? },
+            "fjlt" => MethodSpec::Fjlt { k: need("k")? },
+            "grass" => MethodSpec::Grass {
+                k: need("k")?,
+                k_prime: need("kp")?,
+                mask: match kv.get("mask").copied().unwrap_or("rm") {
+                    "rm" => MaskKind::Random,
+                    "sm" => MaskKind::Selective,
+                    other => bail!("spec '{s}': unknown mask '{other}'"),
+                },
+            },
+            other => bail!("unknown compression method '{other}'"),
+        })
+    }
+
+    /// Canonical spec string (inverse of [`MethodSpec::parse`]).
+    pub fn spec_string(&self) -> String {
+        match self {
+            MethodSpec::RandomMask { k } => format!("rm:k={k}"),
+            MethodSpec::SelectiveMask { k } => format!("sm:k={k}"),
+            MethodSpec::Sjlt { k, s } => format!("sjlt:k={k},s={s}"),
+            MethodSpec::Gauss { k } => format!("gauss:k={k}"),
+            MethodSpec::Fjlt { k } => format!("fjlt:k={k}"),
+            MethodSpec::Grass { k, k_prime, mask } => format!(
+                "grass:k={k},kp={k_prime},mask={}",
+                match mask {
+                    MaskKind::Random => "rm",
+                    MaskKind::Selective => "sm",
+                }
+            ),
+        }
+    }
+
+    pub fn output_dim(&self) -> usize {
+        match self {
+            MethodSpec::RandomMask { k }
+            | MethodSpec::SelectiveMask { k }
+            | MethodSpec::Sjlt { k, .. }
+            | MethodSpec::Gauss { k }
+            | MethodSpec::Fjlt { k }
+            | MethodSpec::Grass { k, .. } => *k,
+        }
+    }
+
+    /// Instantiate the compressor for input dimension `p` and `seed`.
+    pub fn build(&self, p: usize, seed: u64) -> Box<dyn Compressor> {
+        match *self {
+            MethodSpec::RandomMask { k } => Box::new(mask::RandomMask::new(p, k, seed)),
+            MethodSpec::SelectiveMask { k } => {
+                // Untrained selective mask degenerates to a random mask with a
+                // distinct stream; `selective::SelectiveMask::from_scores`
+                // builds the trained variant.
+                Box::new(mask::RandomMask::new(p, k, rng::hash2(seed, 0x5E1E)))
+            }
+            MethodSpec::Sjlt { k, s } => Box::new(sjlt::Sjlt::new(p, k, s, seed)),
+            MethodSpec::Gauss { k } => Box::new(gauss::GaussianProjection::new(p, k, seed)),
+            MethodSpec::Fjlt { k } => Box::new(fjlt::Fjlt::new(p, k, seed)),
+            MethodSpec::Grass { k, k_prime, mask } => {
+                Box::new(grass::Grass::new(p, k_prime, k, mask, seed))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shared check: every compressor is (a) linear, (b) deterministic.
+    fn check_linear_deterministic(c: &dyn Compressor) {
+        let p = c.input_dim();
+        let mut rng = rng::Pcg::new(99);
+        let a: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let ca = c.compress(&a);
+        let ca2 = c.compress(&a);
+        assert_eq!(ca, ca2, "{} not deterministic", c.name());
+        let cb = c.compress(&b);
+        let sum: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        let csum = c.compress(&sum);
+        for i in 0..c.output_dim() {
+            let want = ca[i] + cb[i];
+            assert!(
+                (csum[i] - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                "{} not linear at {i}: {} vs {}",
+                c.name(),
+                csum[i],
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn all_methods_linear_and_deterministic() {
+        let p = 512;
+        let specs = [
+            MethodSpec::RandomMask { k: 64 },
+            MethodSpec::Sjlt { k: 64, s: 1 },
+            MethodSpec::Sjlt { k: 64, s: 4 },
+            MethodSpec::Gauss { k: 64 },
+            MethodSpec::Fjlt { k: 64 },
+            MethodSpec::Grass {
+                k: 64,
+                k_prime: 256,
+                mask: MaskKind::Random,
+            },
+        ];
+        for spec in &specs {
+            let c = spec.build(p, 1234);
+            assert_eq!(c.input_dim(), p);
+            assert_eq!(c.output_dim(), spec.output_dim());
+            check_linear_deterministic(c.as_ref());
+        }
+    }
+
+    #[test]
+    fn sparse_compress_matches_dense() {
+        let p = 1024;
+        let specs = [
+            MethodSpec::RandomMask { k: 128 },
+            MethodSpec::Sjlt { k: 128, s: 2 },
+            MethodSpec::Gauss { k: 32 },
+            MethodSpec::Grass {
+                k: 64,
+                k_prime: 256,
+                mask: MaskKind::Random,
+            },
+        ];
+        let mut rng = rng::Pcg::new(7);
+        // 5% dense input
+        let mut idx = vec![];
+        let mut vals = vec![];
+        let mut dense = vec![0.0f32; p];
+        for j in 0..p {
+            if rng.next_f32() < 0.05 {
+                let v = rng.next_gaussian();
+                idx.push(j as u32);
+                vals.push(v);
+                dense[j] = v;
+            }
+        }
+        for spec in &specs {
+            let c = spec.build(p, 555);
+            let a = c.compress(&dense);
+            let mut b = vec![0.0; c.output_dim()];
+            c.compress_sparse_into(&idx, &vals, &mut b);
+            for i in 0..a.len() {
+                assert!(
+                    (a[i] - b[i]).abs() < 1e-4,
+                    "{} sparse/dense mismatch at {i}",
+                    c.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn method_spec_string_roundtrip() {
+        let specs = [
+            MethodSpec::RandomMask { k: 2048 },
+            MethodSpec::SelectiveMask { k: 64 },
+            MethodSpec::Sjlt { k: 64, s: 2 },
+            MethodSpec::Gauss { k: 8192 },
+            MethodSpec::Fjlt { k: 4096 },
+            MethodSpec::Grass {
+                k: 64,
+                k_prime: 512,
+                mask: MaskKind::Selective,
+            },
+        ];
+        for spec in specs {
+            let back = MethodSpec::parse(&spec.spec_string()).unwrap();
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn method_spec_parse_defaults_and_errors() {
+        assert_eq!(
+            MethodSpec::parse("sjlt:k=64").unwrap(),
+            MethodSpec::Sjlt { k: 64, s: 1 }
+        );
+        assert_eq!(
+            MethodSpec::parse("grass:k=8,kp=32").unwrap(),
+            MethodSpec::Grass {
+                k: 8,
+                k_prime: 32,
+                mask: MaskKind::Random
+            }
+        );
+        assert!(MethodSpec::parse("bogus:k=1").is_err());
+        assert!(MethodSpec::parse("sjlt").is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! Deterministic, counter-based randomness for all compressors.
+//!
+//! Every projection in this crate is a *pure function of a seed* — the
+//! projection "matrix" is never materialised unless an algorithm needs it
+//! (LoGra's small factor matrices). Entries are derived from a splitmix64
+//! hash of `(seed, coordinates...)`, which gives:
+//!
+//! - zero memory for SJLT / masks / Gaussian baselines at p = 10^5..10^10,
+//! - bitwise reproducibility across threads and machines (the cache and
+//!   attribute stages, and every LDS retrain, must agree on the projection),
+//! - O(1) random access, so workers can partition work arbitrarily.
+
+/// splitmix64 finalizer — a fast, well-mixed 64-bit hash.
+#[inline(always)]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Hash a `(seed, a)` pair into a u64.
+#[inline(always)]
+pub fn hash2(seed: u64, a: u64) -> u64 {
+    splitmix64(seed ^ splitmix64(a))
+}
+
+/// Hash a `(seed, a, b)` triple into a u64.
+#[inline(always)]
+pub fn hash3(seed: u64, a: u64, b: u64) -> u64 {
+    splitmix64(seed ^ splitmix64(a ^ splitmix64(b)))
+}
+
+/// Map a u64 to a uniform f32 in [0, 1).
+#[inline(always)]
+pub fn to_unit_f32(x: u64) -> f32 {
+    // Use the top 24 bits for an exactly-representable mantissa.
+    ((x >> 40) as f32) * (1.0 / 16_777_216.0)
+}
+
+/// Map a u64 to a uniform f64 in [0, 1).
+#[inline(always)]
+pub fn to_unit_f64(x: u64) -> f64 {
+    ((x >> 11) as f64) * (1.0 / 9_007_199_254_740_992.0)
+}
+
+/// Map a u64 to ±1.0 (Rademacher) using the low bit.
+#[inline(always)]
+pub fn to_sign(x: u64) -> f32 {
+    if x & 1 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Map a pair of u64 hashes to one standard Gaussian via Box–Muller.
+#[inline(always)]
+pub fn to_gaussian(u: u64, v: u64) -> f32 {
+    let u1 = to_unit_f64(u).max(1e-12);
+    let u2 = to_unit_f64(v);
+    ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+}
+
+/// A small stateful PRNG (xorshift-star flavoured splitmix stream) for the
+/// places where a *sequence* is more natural than counter addressing:
+/// dataset synthesis, subset sampling, optimiser init.
+#[derive(Debug, Clone)]
+pub struct Pcg {
+    state: u64,
+}
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: splitmix64(seed ^ 0xDEAD_BEEF_CAFE_F00D),
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        splitmix64(self.state)
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        to_unit_f32(self.next_u64())
+    }
+
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        to_unit_f64(self.next_u64())
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply keeps the modulo bias negligible for n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard Gaussian sample.
+    #[inline]
+    pub fn next_gaussian(&mut self) -> f32 {
+        let (u, v) = (self.next_u64(), self.next_u64());
+        to_gaussian(u, v)
+    }
+
+    /// Sample `k` distinct indices from [0, n) (Floyd's algorithm), sorted.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<u32> {
+        assert!(k <= n, "cannot sample {k} distinct from {n}");
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.next_below(j + 1);
+            let v = if chosen.contains(&t) { j } else { t };
+            chosen.insert(v);
+            out.push(v as u32);
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic_and_mixing() {
+        assert_eq!(splitmix64(1), splitmix64(1));
+        assert_ne!(splitmix64(1), splitmix64(2));
+        // avalanche: flipping one input bit flips ~half the output bits
+        let a = splitmix64(0x1234);
+        let b = splitmix64(0x1235);
+        let flipped = (a ^ b).count_ones();
+        assert!((16..=48).contains(&flipped), "poor avalanche: {flipped}");
+    }
+
+    #[test]
+    fn unit_f32_in_range() {
+        for i in 0..10_000u64 {
+            let u = to_unit_f32(splitmix64(i));
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        let n = 100_000;
+        for i in 0..n as u64 {
+            let g = to_gaussian(hash2(7, i), hash2(13, i)) as f64;
+            sum += g;
+            sq += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_in_range() {
+        let mut rng = Pcg::new(42);
+        let idx = rng.sample_distinct(1000, 100);
+        assert_eq!(idx.len(), 100);
+        let set: std::collections::HashSet<_> = idx.iter().collect();
+        assert_eq!(set.len(), 100);
+        assert!(idx.iter().all(|&i| (i as usize) < 1000));
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn sample_distinct_full_range() {
+        let mut rng = Pcg::new(3);
+        let idx = rng.sample_distinct(16, 16);
+        assert_eq!(idx, (0..16u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut rng = Pcg::new(9);
+        for _ in 0..10_000 {
+            assert!(rng.next_below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,280 @@
+//! Sharded on-disk compressed-gradient store — the cache-stage output.
+//!
+//! Layout: a store directory holds `store.json` (metadata: k, n, shard
+//! size, method spec) plus `shard_NNNN.bin` files of raw little-endian f32
+//! rows. The writer streams rows in order with a bounded in-memory buffer
+//! (backpressure comes from the coordinator's bounded channels); the reader
+//! iterates shard-by-shard so attribution never needs the whole cache in
+//! memory — at Llama scale the cache is hundreds of GB (n·k·4 bytes) and
+//! this layout is what makes the attribute stage streamable.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Rows per shard file.
+pub const DEFAULT_SHARD_ROWS: usize = 4096;
+
+#[derive(Debug, Clone)]
+pub struct StoreMeta {
+    /// Compressed dimension per row.
+    pub k: usize,
+    /// Total rows written.
+    pub n: usize,
+    pub shard_rows: usize,
+    /// Compression method spec string (see `MethodSpec::spec_string`).
+    pub method: String,
+    /// Seed used for the projection (must match at attribute time).
+    pub seed: u64,
+}
+
+impl StoreMeta {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("k", Json::Num(self.k as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("shard_rows", Json::Num(self.shard_rows as f64)),
+            ("method", Json::Str(self.method.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            k: j.req("k")?.as_usize().ok_or_else(|| anyhow!("bad k"))?,
+            n: j.req("n")?.as_usize().ok_or_else(|| anyhow!("bad n"))?,
+            shard_rows: j
+                .req("shard_rows")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("bad shard_rows"))?,
+            method: j.req("method")?.as_str().unwrap_or("").to_string(),
+            seed: j.req("seed")?.as_u64().unwrap_or(0),
+        })
+    }
+}
+
+fn shard_path(dir: &Path, idx: usize) -> PathBuf {
+    dir.join(format!("shard_{idx:04}.bin"))
+}
+
+/// Streaming writer: rows arrive in order, shards roll automatically.
+pub struct StoreWriter {
+    dir: PathBuf,
+    meta: StoreMeta,
+    current: Option<BufWriter<std::fs::File>>,
+    rows_in_shard: usize,
+    shard_idx: usize,
+}
+
+impl StoreWriter {
+    pub fn create(
+        dir: impl AsRef<Path>,
+        k: usize,
+        method: &str,
+        seed: u64,
+        shard_rows: usize,
+    ) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        Ok(Self {
+            dir,
+            meta: StoreMeta {
+                k,
+                n: 0,
+                shard_rows,
+                method: method.to_string(),
+                seed,
+            },
+            current: None,
+            rows_in_shard: 0,
+            shard_idx: 0,
+        })
+    }
+
+    /// Append one compressed row.
+    pub fn push(&mut self, row: &[f32]) -> Result<()> {
+        if row.len() != self.meta.k {
+            bail!("row len {} != k {}", row.len(), self.meta.k);
+        }
+        if self.current.is_none() || self.rows_in_shard == self.meta.shard_rows {
+            self.roll()?;
+        }
+        let w = self.current.as_mut().unwrap();
+        // Little-endian f32; safe, portable serialisation.
+        let mut buf = Vec::with_capacity(row.len() * 4);
+        for &v in row {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+        self.rows_in_shard += 1;
+        self.meta.n += 1;
+        Ok(())
+    }
+
+    /// Append a batch of rows packed contiguously (`rows × k`).
+    pub fn push_batch(&mut self, rows: &[f32]) -> Result<()> {
+        for row in rows.chunks(self.meta.k) {
+            self.push(row)?;
+        }
+        Ok(())
+    }
+
+    fn roll(&mut self) -> Result<()> {
+        if let Some(mut w) = self.current.take() {
+            w.flush()?;
+            self.shard_idx += 1;
+        }
+        let path = shard_path(&self.dir, self.shard_idx);
+        self.current = Some(BufWriter::new(
+            std::fs::File::create(&path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        ));
+        self.rows_in_shard = 0;
+        Ok(())
+    }
+
+    /// Flush shards and write metadata. Returns the final meta.
+    pub fn finish(mut self) -> Result<StoreMeta> {
+        if let Some(mut w) = self.current.take() {
+            w.flush()?;
+        }
+        std::fs::write(
+            self.dir.join("store.json"),
+            self.meta.to_json().to_string_pretty(),
+        )?;
+        Ok(self.meta)
+    }
+}
+
+/// Reader over a finished store.
+pub struct StoreReader {
+    dir: PathBuf,
+    pub meta: StoreMeta,
+}
+
+impl StoreReader {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("store.json"))
+            .with_context(|| format!("opening store at {}", dir.display()))?;
+        let meta = StoreMeta::from_json(&Json::parse(&text)?)?;
+        Ok(Self { dir, meta })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.meta.n.div_ceil(self.meta.shard_rows)
+    }
+
+    /// Read shard `idx` fully: returns (first_row_index, rows × k data).
+    pub fn read_shard(&self, idx: usize) -> Result<(usize, Vec<f32>)> {
+        let start = idx * self.meta.shard_rows;
+        if start >= self.meta.n {
+            bail!("shard {idx} out of range");
+        }
+        let rows = (self.meta.n - start).min(self.meta.shard_rows);
+        let path = shard_path(&self.dir, idx);
+        let mut r = BufReader::new(std::fs::File::open(&path)?);
+        let mut bytes = vec![0u8; rows * self.meta.k * 4];
+        r.read_exact(&mut bytes)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok((start, data))
+    }
+
+    /// Load the entire store as an `n × k` matrix (small experiments only).
+    pub fn read_all(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.meta.n * self.meta.k);
+        for s in 0..self.num_shards() {
+            let (_, data) = self.read_shard(s)?;
+            out.extend_from_slice(&data);
+        }
+        Ok(out)
+    }
+
+    /// Visit every row without holding more than one shard in memory.
+    pub fn for_each_row(&self, mut f: impl FnMut(usize, &[f32])) -> Result<()> {
+        for s in 0..self.num_shards() {
+            let (start, data) = self.read_shard(s)?;
+            for (i, row) in data.chunks(self.meta.k).enumerate() {
+                f(start + i, row);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "grass_store_test_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip_single_shard() {
+        let dir = tmpdir("single");
+        let mut w = StoreWriter::create(&dir, 4, "sjlt:k=4,s=1", 7, 100).unwrap();
+        for i in 0..10 {
+            w.push(&[i as f32, 1.0, 2.0, 3.0]).unwrap();
+        }
+        let meta = w.finish().unwrap();
+        assert_eq!(meta.n, 10);
+        let r = StoreReader::open(&dir).unwrap();
+        assert_eq!(r.meta.k, 4);
+        assert_eq!(r.meta.method, "sjlt:k=4,s=1");
+        assert_eq!(r.meta.seed, 7);
+        assert_eq!(r.num_shards(), 1);
+        let all = r.read_all().unwrap();
+        assert_eq!(all.len(), 40);
+        assert_eq!(all[0], 0.0);
+        assert_eq!(all[36], 9.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rolls_shards_and_streams() {
+        let dir = tmpdir("multi");
+        let mut w = StoreWriter::create(&dir, 2, "rm:k=2", 0, 3).unwrap();
+        for i in 0..8 {
+            w.push(&[i as f32, -(i as f32)]).unwrap();
+        }
+        w.finish().unwrap();
+        let r = StoreReader::open(&dir).unwrap();
+        assert_eq!(r.num_shards(), 3); // 3 + 3 + 2
+        let (start, data) = r.read_shard(2).unwrap();
+        assert_eq!(start, 6);
+        assert_eq!(data, vec![6.0, -6.0, 7.0, -7.0]);
+        let mut seen = vec![];
+        r.for_each_row(|i, row| seen.push((i, row[0]))).unwrap();
+        assert_eq!(seen.len(), 8);
+        assert_eq!(seen[5], (5, 5.0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn push_batch_and_errors() {
+        let dir = tmpdir("batch");
+        let mut w = StoreWriter::create(&dir, 3, "m", 0, 10).unwrap();
+        w.push_batch(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert!(w.push(&[1.0]).is_err()); // wrong width
+        let meta = w.finish().unwrap();
+        assert_eq!(meta.n, 2);
+        let r = StoreReader::open(&dir).unwrap();
+        assert!(r.read_shard(5).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_missing_store_fails() {
+        assert!(StoreReader::open("/nonexistent/grass_store").is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Micro-benchmark harness (offline stand-in for criterion): warmup,
+//! adaptive iteration count, median-of-samples reporting. Used by every
+//! `cargo bench` target and by the experiment wall-time columns.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median time per iteration.
+    pub median: Duration,
+    /// Mean time per iteration.
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} median {:>12} mean {:>12} (min {}, max {}, n={})",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            fmt_dur(self.max),
+            self.samples
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark `f`, targeting `budget` total runtime (min 3 samples).
+pub fn bench_with_budget<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration: run once to estimate cost.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let samples = ((budget.as_secs_f64() / once.as_secs_f64()) as usize).clamp(3, 1000);
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+    times.sort();
+    let total: Duration = times.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        median: times[times.len() / 2],
+        mean: total / times.len() as u32,
+        min: times[0],
+        max: *times.last().unwrap(),
+        samples: times.len(),
+    }
+}
+
+/// Benchmark with the default 1-second budget.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let budget = std::env::var("GRASS_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_millis(800));
+    bench_with_budget(name, budget, f)
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Time a single closure invocation.
+pub fn time_once<R, F: FnOnce() -> R>(f: F) -> (R, Duration) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench_with_budget("spin", Duration::from_millis(20), || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.samples >= 3);
+        assert!(r.min <= r.median && r.median <= r.max);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_secs(2)).contains("s"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_nanos(5)).contains("ns"));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() < 1_000_000_000);
+    }
+}

@@ -1,0 +1,9 @@
+//! In-crate replacements for the usual ecosystem crates — the build
+//! environment is offline, so data-parallel helpers ([`par`]), JSON
+//! ([`json`]), the micro-benchmark harness ([`bench`]), and CLI argument
+//! parsing ([`cli`]) are implemented here on plain `std`.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;

@@ -1,0 +1,191 @@
+//! Data-parallel primitives on `std::thread::scope` — a minimal stand-in
+//! for rayon. All helpers split work into at most `available_parallelism()`
+//! contiguous chunks, which is the right grain for the crate's hot loops
+//! (long, uniform, cache-streaming passes over gradient buffers).
+
+use std::ops::Range;
+
+/// Number of worker threads to use (respects `GRASS_NUM_THREADS`).
+pub fn num_threads() -> usize {
+    static CACHED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CACHED.get_or_init(|| {
+        if let Ok(v) = std::env::var("GRASS_NUM_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Split `0..n` into at most `num_threads()` chunks of at least `min_chunk`.
+pub fn chunk_ranges(n: usize, min_chunk: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return vec![];
+    }
+    let workers = num_threads()
+        .min(n.div_ceil(min_chunk.max(1)))
+        .max(1);
+    let base = n / workers;
+    let rem = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f` over disjoint subranges of `0..n` in parallel.
+pub fn par_ranges<F>(n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    let ranges = chunk_ranges(n, min_chunk);
+    if ranges.len() <= 1 {
+        if let Some(r) = ranges.into_iter().next() {
+            f(r);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for r in ranges {
+            let f = &f;
+            s.spawn(move || f(r));
+        }
+    });
+}
+
+/// Map each chunk range to a value; results returned in chunk order.
+pub fn par_map_ranges<R, F>(n: usize, min_chunk: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(Range<usize>) -> R + Sync,
+{
+    let ranges = chunk_ranges(n, min_chunk);
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(f).collect();
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| {
+                let f = &f;
+                s.spawn(move || f(r))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Parallel map-reduce over chunk-local accumulators.
+pub fn par_map_reduce<R, F, G>(n: usize, min_chunk: usize, map: F, reduce: G) -> Option<R>
+where
+    R: Send,
+    F: Fn(Range<usize>) -> R + Sync,
+    G: Fn(R, R) -> R,
+{
+    par_map_ranges(n, min_chunk, map).into_iter().reduce(reduce)
+}
+
+/// Apply `f(chunk_index_start, chunk)` to disjoint mutable chunks of `data`
+/// in parallel, splitting on row boundaries of width `row`.
+pub fn par_chunks_mut<T, F>(data: &mut [T], row: usize, min_rows: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(row > 0 && data.len() % row == 0);
+    let n_rows = data.len() / row;
+    let ranges = chunk_ranges(n_rows, min_rows);
+    if ranges.len() <= 1 {
+        if !data.is_empty() {
+            f(0, data);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut offset = 0usize;
+        for r in ranges {
+            let len = (r.end - r.start) * row;
+            let (head, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let f = &f;
+            let start_row = offset;
+            s.spawn(move || f(start_row, head));
+            offset += r.end - r.start;
+        }
+    });
+}
+
+/// Element-wise `a += b` (used to merge private accumulators).
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for n in [0usize, 1, 7, 100, 1023] {
+            let rs = chunk_ranges(n, 1);
+            let total: usize = rs.iter().map(|r| r.end - r.start).sum();
+            assert_eq!(total, n);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn min_chunk_respected() {
+        let rs = chunk_ranges(100, 64);
+        assert!(rs.len() <= 2);
+    }
+
+    #[test]
+    fn par_ranges_visits_all() {
+        let counter = AtomicUsize::new(0);
+        par_ranges(1000, 10, |r| {
+            counter.fetch_add(r.end - r.start, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn par_map_reduce_sums() {
+        let got = par_map_reduce(10_000, 100, |r| r.sum::<usize>(), |a, b| a + b).unwrap();
+        assert_eq!(got, (0..10_000usize).sum());
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_disjoint() {
+        let mut data = vec![0u32; 64 * 8];
+        par_chunks_mut(&mut data, 8, 1, |start_row, chunk| {
+            for (i, row) in chunk.chunks_mut(8).enumerate() {
+                row.fill((start_row + i) as u32);
+            }
+        });
+        for (i, row) in data.chunks(8).enumerate() {
+            assert!(row.iter().all(|&v| v == i as u32), "row {i}");
+        }
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        par_ranges(0, 1, |_| panic!("should not run"));
+        let v: Vec<usize> = par_map_ranges(0, 1, |r| r.len());
+        assert!(v.is_empty());
+    }
+}

@@ -1,0 +1,124 @@
+//! Integration: end-to-end attribution quality on a real (small) workload —
+//! trains the MLP via HLO train-steps, caches compressed gradients, and
+//! checks that influence scores carry class-level signal: same-class
+//! training samples should receive higher attribution than other-class
+//! samples for a given query (the minimal sanity property LDS builds on).
+
+use grass::attrib::influence::InfluenceEngine;
+use grass::data::images::SynthDigits;
+use grass::eval::retrain::{TaskData, Trainer};
+use grass::runtime::Runtime;
+use grass::sketch::{Compressor, MethodSpec};
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime load"))
+}
+
+#[test]
+fn influence_scores_carry_class_signal() {
+    let Some(rt) = runtime() else { return };
+    let trainer = Trainer::new(&rt, "mlp").unwrap();
+    let p = trainer.p;
+    let n = 256;
+    let m = 32;
+    let train = SynthDigits::generate(n, 11);
+    let test = SynthDigits::generate(m, 12);
+    let train_td = TaskData::Labelled(&train);
+    let test_td = TaskData::Labelled(&test);
+
+    // Train to convergence-ish on the small set.
+    let init = trainer.init(7).unwrap();
+    let all: Vec<usize> = (0..n).collect();
+    let params = trainer.train(init, &train_td, &all, 8, 0.2, 3).unwrap();
+
+    // Sanity: training actually learned the task.
+    let test_idx: Vec<usize> = (0..m).collect();
+    let losses = trainer.losses(&params, &test_td, &test_idx).unwrap();
+    let mean_loss: f32 = losses.iter().sum::<f32>() / m as f32;
+    assert!(
+        mean_loss < 1.8,
+        "model failed to learn (mean test loss {mean_loss}; chance = ln(10) ≈ 2.3)"
+    );
+
+    // Cache: compress per-sample gradients with SJLT.
+    let spec = MethodSpec::Sjlt { k: 512, s: 1 };
+    let c = spec.build(p, 77);
+    let g_train = trainer.grads(&params, &train_td, &all).unwrap();
+    let g_test = trainer.grads(&params, &test_td, &test_idx).unwrap();
+    let mut ctr = vec![0.0f32; n * 512];
+    c.compress_batch(&g_train, n, &mut ctr);
+    let mut cte = vec![0.0f32; m * 512];
+    c.compress_batch(&g_test, m, &mut cte);
+
+    // Attribute.
+    let engine = InfluenceEngine::new(512, 1e-3);
+    let scores = engine.attribute(&ctr, n, &cte, m).unwrap();
+
+    // Class signal: mean |score| relationship — for each query, the top-10
+    // attributed samples should be enriched in the query's class.
+    let mut enrich = 0.0f64;
+    for q in 0..m {
+        let (_, yq) = test.sample(q);
+        let mut order: Vec<usize> = (0..n).collect();
+        let srow = &scores[q * n..(q + 1) * n];
+        order.sort_by(|&a, &b| srow[b].partial_cmp(&srow[a]).unwrap());
+        let hits = order[..10]
+            .iter()
+            .filter(|&&i| train.sample(i).1 == yq)
+            .count();
+        enrich += hits as f64 / 10.0;
+    }
+    enrich /= m as f64;
+    // Base rate is ~0.1 (10 classes); demand clear enrichment.
+    assert!(
+        enrich > 0.25,
+        "top-10 class enrichment too weak: {enrich:.3} (chance ≈ 0.1)"
+    );
+    eprintln!("class enrichment in top-10: {enrich:.3} (chance ≈ 0.1)");
+}
+
+#[test]
+fn compressed_influence_approximates_uncompressed() {
+    let Some(rt) = runtime() else { return };
+    let trainer = Trainer::new(&rt, "mlp").unwrap();
+    let p = trainer.p;
+    let (n, m) = (128, 16);
+    let train = SynthDigits::generate(n, 21);
+    let test = SynthDigits::generate(m, 22);
+    let train_td = TaskData::Labelled(&train);
+    let test_td = TaskData::Labelled(&test);
+    let init = trainer.init(5).unwrap();
+    let all: Vec<usize> = (0..n).collect();
+    let params = trainer.train(init, &train_td, &all, 4, 0.2, 9).unwrap();
+    let test_idx: Vec<usize> = (0..m).collect();
+    let g_train = trainer.grads(&params, &train_td, &all).unwrap();
+    let g_test = trainer.grads(&params, &test_td, &test_idx).unwrap();
+
+    // GradDot in full space vs SJLT-compressed space: rank correlation per
+    // query should be strongly positive (JL preservation of inner products).
+    let full = grass::attrib::graddot::graddot_scores(&g_train, n, p, &g_test, m);
+    let spec = MethodSpec::Sjlt { k: 1024, s: 1 };
+    let c = spec.build(p, 3);
+    let mut ctr = vec![0.0f32; n * 1024];
+    c.compress_batch(&g_train, n, &mut ctr);
+    let mut cte = vec![0.0f32; m * 1024];
+    c.compress_batch(&g_test, m, &mut cte);
+    let comp = grass::attrib::graddot::graddot_scores(&ctr, n, 1024, &cte, m);
+
+    let mut mean_rho = 0.0;
+    for q in 0..m {
+        mean_rho +=
+            grass::linalg::stats::spearman(&full[q * n..(q + 1) * n], &comp[q * n..(q + 1) * n]);
+    }
+    mean_rho /= m as f64;
+    assert!(
+        mean_rho > 0.7,
+        "compressed GradDot lost rank structure: ρ = {mean_rho:.3}"
+    );
+    eprintln!("GradDot rank preservation under SJLT_1024: ρ = {mean_rho:.3}");
+}

@@ -1,0 +1,157 @@
+//! Integration: the staged cache pipeline (batcher → PJRT grad workers →
+//! compress workers → reordering store writer) against real artifacts.
+
+use grass::coordinator::{pipeline::Source, CachePipeline, CompressorBank, PipelineConfig};
+use grass::data::corpus::MusicEvents;
+use grass::data::images::SynthDigits;
+use grass::runtime::{Arg, Runtime};
+use grass::sketch::{factgrass::FactGrass, FactorizedCompressor, MaskKind, MethodSpec};
+use grass::store::StoreReader;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime load"))
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("grass_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn flat_pipeline_writes_ordered_store_matching_direct_path() {
+    let Some(rt) = runtime() else { return };
+    let model = "mlp";
+    let p = rt.manifest.model(model).unwrap().p;
+    let n = 70; // not a multiple of the batch size: exercises padding
+    let data = SynthDigits::generate(n, 9);
+    let spec = MethodSpec::Sjlt { k: 128, s: 1 };
+    let seed = 31;
+
+    let params = rt
+        .executable("mlp_init")
+        .unwrap()
+        .run(&[Arg::ScalarI32(3)])
+        .unwrap()
+        .remove(0)
+        .data;
+
+    let dir = tmpdir("flat");
+    let pipeline = CachePipeline::new(
+        &rt,
+        model,
+        params.clone(),
+        PipelineConfig {
+            grad_workers: 2,
+            compress_workers: 2,
+            queue_depth: 2,
+            shard_rows: 32, // force multiple shards
+        },
+    );
+    let bank = CompressorBank::Flat(spec.build(p, seed));
+    let meta = pipeline
+        .run_flat(
+            &Source::Labelled(&data),
+            &bank,
+            &dir,
+            &spec.spec_string(),
+            seed,
+        )
+        .unwrap();
+    assert_eq!(meta.n, n);
+    assert_eq!(meta.k, 128);
+
+    // Cross-check rows against the sequential (no-pipeline) path.
+    let reader = StoreReader::open(&dir).unwrap();
+    assert_eq!(reader.meta.method, spec.spec_string());
+    assert!(reader.num_shards() >= 2);
+    let all = reader.read_all().unwrap();
+
+    let trainer = grass::eval::retrain::Trainer::new(&rt, model).unwrap();
+    let idx: Vec<usize> = (0..n).collect();
+    let grads = trainer
+        .grads(
+            &params,
+            &grass::eval::retrain::TaskData::Labelled(&data),
+            &idx,
+        )
+        .unwrap();
+    let c = spec.build(p, seed);
+    for i in 0..n {
+        let want = c.compress(&grads[i * p..(i + 1) * p]);
+        let got = &all[i * 128..(i + 1) * 128];
+        for j in 0..128 {
+            assert!(
+                (want[j] - got[j]).abs() < 1e-4 * (1.0 + want[j].abs()),
+                "row {i} col {j}: {} vs {}",
+                want[j],
+                got[j]
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    let report = pipeline.metrics.report();
+    assert!(report.contains(&format!("rows_written={n}")), "{report}");
+}
+
+#[test]
+fn factored_pipeline_runs_music_hooks() {
+    let Some(rt) = runtime() else { return };
+    let model = "music";
+    let meta = rt.manifest.model(model).unwrap().clone();
+    let seq = meta.seq.unwrap();
+    let n = 20;
+    let data = MusicEvents::generate(n, seq, 5);
+    let params = rt
+        .executable("music_init")
+        .unwrap()
+        .run(&[Arg::ScalarI32(1)])
+        .unwrap()
+        .remove(0)
+        .data;
+
+    let kl = 16usize;
+    let banks: Vec<Box<dyn FactorizedCompressor>> = meta
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, lm)| -> Box<dyn FactorizedCompressor> {
+            Box::new(FactGrass::new(
+                lm.d_in,
+                lm.d_out,
+                8.min(lm.d_in),
+                8.min(lm.d_out),
+                kl,
+                MaskKind::Random,
+                li as u64,
+            ))
+        })
+        .collect();
+    let total_k: usize = banks.iter().map(|b| b.output_dim()).sum();
+
+    let dir = tmpdir("fact");
+    let pipeline = CachePipeline::new(&rt, model, params, PipelineConfig::default());
+    let meta_store = pipeline
+        .run_factored(
+            &Source::Sequences(&data),
+            &CompressorBank::Factored(banks),
+            &dir,
+            "factgrass",
+            0,
+        )
+        .unwrap();
+    assert_eq!(meta_store.n, n);
+    assert_eq!(meta_store.k, total_k);
+    let reader = StoreReader::open(&dir).unwrap();
+    let all = reader.read_all().unwrap();
+    assert_eq!(all.len(), n * total_k);
+    // compressed grads must be non-degenerate
+    let energy: f32 = all.iter().map(|v| v * v).sum();
+    assert!(energy > 0.0);
+    std::fs::remove_dir_all(&dir).ok();
+}

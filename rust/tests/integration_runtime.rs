@@ -1,0 +1,183 @@
+//! Integration: the Rust PJRT runtime executing AOT artifacts end-to-end.
+//! These tests are skipped (with a notice) until `make artifacts` has run.
+
+use grass::runtime::{Arg, Runtime};
+use grass::sketch::rng::Pcg;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime load"))
+}
+
+#[test]
+fn mlp_init_train_loss_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let p = rt.manifest.model("mlp").unwrap().p;
+
+    // init: deterministic in the seed
+    let init = rt.executable("mlp_init").unwrap();
+    let params = init.run(&[Arg::ScalarI32(7)]).unwrap().remove(0);
+    assert_eq!(params.data.len(), p);
+    let params2 = init.run(&[Arg::ScalarI32(7)]).unwrap().remove(0);
+    assert_eq!(params.data, params2.data);
+    let params3 = init.run(&[Arg::ScalarI32(8)]).unwrap().remove(0);
+    assert_ne!(params.data, params3.data);
+
+    // synthetic batch
+    let tb = rt.manifest.batch_size("train", "mlp").unwrap();
+    let mut rng = Pcg::new(3);
+    let x: Vec<f32> = (0..tb * 196).map(|_| rng.next_gaussian()).collect();
+    let y: Vec<i32> = (0..tb).map(|_| rng.next_below(10) as i32).collect();
+
+    // loss before
+    let lb = rt.manifest.batch_size("loss", "mlp").unwrap();
+    assert_eq!(lb, tb, "test assumes shared batch size");
+    let loss_exe = rt.executable("mlp_loss").unwrap();
+    let loss0 = loss_exe
+        .run(&[
+            Arg::F32(params.data.clone(), vec![p]),
+            Arg::F32(x.clone(), vec![tb, 196]),
+            Arg::I32(y.clone(), vec![tb]),
+        ])
+        .unwrap()
+        .remove(0);
+    assert_eq!(loss0.data.len(), tb);
+    assert!(loss0.data.iter().all(|l| l.is_finite() && *l > 0.0));
+
+    // 20 SGD steps reduce mean loss on the same batch
+    let step = rt.executable("mlp_train_step").unwrap();
+    let mut cur = params.data.clone();
+    for _ in 0..20 {
+        cur = step
+            .run(&[
+                Arg::F32(cur, vec![p]),
+                Arg::F32(x.clone(), vec![tb, 196]),
+                Arg::I32(y.clone(), vec![tb]),
+                Arg::ScalarF32(0.1),
+            ])
+            .unwrap()
+            .remove(0)
+            .data;
+    }
+    let loss1 = loss_exe
+        .run(&[
+            Arg::F32(cur, vec![p]),
+            Arg::F32(x.clone(), vec![tb, 196]),
+            Arg::I32(y.clone(), vec![tb]),
+        ])
+        .unwrap()
+        .remove(0);
+    let m0: f32 = loss0.data.iter().sum::<f32>() / tb as f32;
+    let m1: f32 = loss1.data.iter().sum::<f32>() / tb as f32;
+    assert!(m1 < m0, "training did not reduce loss: {m0} -> {m1}");
+}
+
+#[test]
+fn mlp_per_sample_grads_shape_and_sparsity() {
+    let Some(rt) = runtime() else { return };
+    let p = rt.manifest.model("mlp").unwrap().p;
+    let gb = rt.manifest.batch_size("grads", "mlp").unwrap();
+    let init = rt.executable("mlp_init").unwrap();
+    let params = init.run(&[Arg::ScalarI32(1)]).unwrap().remove(0);
+    let mut rng = Pcg::new(5);
+    let x: Vec<f32> = (0..gb * 196).map(|_| rng.next_gaussian()).collect();
+    let y: Vec<i32> = (0..gb).map(|_| rng.next_below(10) as i32).collect();
+    let grads = rt
+        .executable("mlp_grads")
+        .unwrap()
+        .run(&[
+            Arg::F32(params.data, vec![p]),
+            Arg::F32(x, vec![gb, 196]),
+            Arg::I32(y, vec![gb]),
+        ])
+        .unwrap()
+        .remove(0);
+    assert_eq!(grads.shape, vec![gb, p]);
+    // paper §3.1: ReLU induces per-sample gradient sparsity
+    let zeros = grads.data.iter().filter(|&&v| v == 0.0).count();
+    let frac = zeros as f64 / grads.data.len() as f64;
+    assert!(frac > 0.2, "expected sparse per-sample grads, got {frac:.3}");
+}
+
+#[test]
+fn kernel_sjlt_matches_rust_native() {
+    // The L1↔L3 cross-check: the Pallas SJLT (via HLO) and the Rust
+    // counter-based SJLT agree when driven with the same tables.
+    let Some(rt) = runtime() else { return };
+    use grass::sketch::{sjlt::Sjlt, Compressor};
+    let exe = rt.executable("kernel_sjlt").unwrap();
+    let (b, p, k) = (4usize, 8192usize, 256usize);
+
+    let t = Sjlt::new(p, k, 1, 42);
+    // Export the Rust SJLT's bucket/sign tables as kernel inputs.
+    let mut idx = vec![0i32; p];
+    let mut sgn = vec![0f32; p];
+    for j in 0..p {
+        let (bucket, sign) = t.bucket_sign(j, 0);
+        idx[j] = bucket as i32;
+        sgn[j] = sign;
+    }
+    let mut rng = Pcg::new(11);
+    let g: Vec<f32> = (0..b * p).map(|_| rng.next_gaussian()).collect();
+    let out = exe
+        .run(&[
+            Arg::F32(g.clone(), vec![b, p]),
+            Arg::I32(idx, vec![p]),
+            Arg::F32(sgn, vec![p]),
+        ])
+        .unwrap()
+        .remove(0);
+    assert_eq!(out.shape, vec![b, k]);
+    for i in 0..b {
+        let native = t.compress(&g[i * p..(i + 1) * p]);
+        let hlo = out.row(i);
+        for j in 0..k {
+            assert!(
+                (native[j] - hlo[j]).abs() < 1e-3 * (1.0 + native[j].abs()),
+                "row {i} col {j}: rust {} vs hlo {}",
+                native[j],
+                hlo[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn lm_hooks_emit_all_layers() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.manifest.model("music").unwrap().clone();
+    let p = meta.p;
+    let hb = rt.manifest.batch_size("hooks", "music").unwrap();
+    let seq = meta.seq.unwrap();
+    let vocab = meta.vocab.unwrap();
+    let init = rt.executable("music_init").unwrap();
+    let params = init.run(&[Arg::ScalarI32(0)]).unwrap().remove(0);
+    let mut rng = Pcg::new(9);
+    let tokens: Vec<i32> = (0..hb * seq).map(|_| rng.next_below(vocab) as i32).collect();
+    let outs = rt
+        .executable("music_hooks")
+        .unwrap()
+        .run(&[
+            Arg::F32(params.data, vec![p]),
+            Arg::I32(tokens, vec![hb, seq]),
+        ])
+        .unwrap();
+    let l = meta.layers.len();
+    assert_eq!(outs.len(), 2 * l);
+    for (i, layer) in meta.layers.iter().enumerate() {
+        assert_eq!(outs[i].shape, vec![hb, seq, layer.d_in], "{} x", layer.name);
+        assert_eq!(
+            outs[l + i].shape,
+            vec![hb, seq, layer.d_out],
+            "{} dy",
+            layer.name
+        );
+        // gradients should be non-trivial
+        let energy: f32 = outs[l + i].data.iter().map(|v| v * v).sum();
+        assert!(energy > 0.0, "{} has zero grad energy", layer.name);
+    }
+}
