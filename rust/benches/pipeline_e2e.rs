@@ -2,57 +2,134 @@
 //! compress → store writer) on the MLP workload — the coordinator-level
 //! throughput number (samples/s) that backs EXPERIMENTS.md §Perf.
 //!
-//! Requires `make artifacts`. Run: `cargo bench --bench pipeline_e2e`
+//! Two parts, both recorded in `BENCH_pipeline_e2e.json`:
+//!
+//! 1. **Compress stage** (always runs, no artifacts needed): the exact
+//!    work stage 3 performs on one MLP-sized `GradBatch` — measured on the
+//!    old per-sample `compress_into` loop and on the batch-first
+//!    `compress_batch_with` kernel with per-worker scratch, at identical k.
+//! 2. **Full pipeline** (requires `make artifacts`): PJRT gradient workers
+//!    feeding the batch compress stage and the reordering store writer.
+//!
+//! Run: `cargo bench --bench pipeline_e2e`
 
 use grass::coordinator::{pipeline::Source, CachePipeline, CompressorBank, PipelineConfig};
 use grass::data::images::SynthDigits;
 use grass::runtime::{Arg, Runtime};
-use grass::sketch::MethodSpec;
+use grass::sketch::rng::Pcg;
+use grass::sketch::{Compressor, MethodSpec, Scratch};
+use grass::util::bench::{self, BenchRecord};
+
+/// The compress stage in isolation: one MLP-sized gradient block through
+/// SJLT at the pipeline's default k, per-sample vs batch-first.
+fn compress_stage_bench(records: &mut Vec<BenchRecord>) {
+    let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
+    let p = 84_618usize; // MLP parameter count (the pipeline's flat width)
+    let n = if fast { 16 } else { 64 };
+    let k = 1024usize;
+    let mut rng = Pcg::new(11);
+    // ~40% zeros: ReLU-induced per-sample gradient sparsity (paper §3.1)
+    let gs: Vec<f32> = (0..n * p)
+        .map(|_| {
+            if rng.next_f32() < 0.4 {
+                0.0
+            } else {
+                rng.next_gaussian()
+            }
+        })
+        .collect();
+    let c = MethodSpec::Sjlt { k, s: 1 }.build(p, 42);
+    let mut out = vec![0.0f32; n * k];
+    let r_single = bench::bench(&format!("compress-stage per-sample n={n}"), || {
+        for i in 0..n {
+            c.compress_into(&gs[i * p..(i + 1) * p], &mut out[i * k..(i + 1) * k]);
+        }
+    });
+    let mut scratch = Scratch::new();
+    let r_batch = bench::bench(&format!("compress-stage batch n={n}"), || {
+        c.compress_batch_with(&gs, n, &mut out, &mut scratch)
+    });
+    let speedup = r_single.median_secs() / r_batch.median_secs().max(1e-12);
+    println!("== compress stage (SJLT k={k}, p={p}, n={n}) ==");
+    println!("{}", r_single.report());
+    println!("{}   <- batch speedup {speedup:.2}x", r_batch.report());
+    records.push(BenchRecord::from_duration(
+        "compress_stage:sjlt:k=1024:per_sample",
+        n,
+        p,
+        k,
+        r_single.median,
+    ));
+    records.push(
+        BenchRecord::from_duration("compress_stage:sjlt:k=1024:batch", n, p, k, r_batch.median)
+            .with("speedup_vs_per_sample", speedup),
+    );
+}
 
 fn main() {
+    let mut records: Vec<BenchRecord> = Vec::new();
+    compress_stage_bench(&mut records);
+
     let dir = Runtime::artifacts_dir();
     if !dir.join("manifest.json").exists() {
-        eprintln!("pipeline_e2e: skipping (run `make artifacts` first)");
-        return;
-    }
-    let rt = Runtime::load(dir).expect("runtime");
-    let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
-    let n = if fast { 64 } else { 512 };
-    let p = rt.manifest.model("mlp").unwrap().p;
-    let data = SynthDigits::generate(n, 3);
-    let params = rt
-        .executable("mlp_init")
-        .unwrap()
-        .run(&[Arg::ScalarI32(0)])
-        .unwrap()
-        .remove(0)
-        .data;
-    let store = std::env::temp_dir().join(format!("grass_bench_pipe_{}", std::process::id()));
+        eprintln!("pipeline_e2e: skipping full pipeline (run `make artifacts` first)");
+    } else {
+        let rt = Runtime::load(dir).expect("runtime");
+        let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
+        let n = if fast { 64 } else { 512 };
+        let p = rt.manifest.model("mlp").unwrap().p;
+        let data = SynthDigits::generate(n, 3);
+        let params = rt
+            .executable("mlp_init")
+            .unwrap()
+            .run(&[Arg::ScalarI32(0)])
+            .unwrap()
+            .remove(0)
+            .data;
+        let store = std::env::temp_dir().join(format!("grass_bench_pipe_{}", std::process::id()));
 
-    println!("== cache pipeline e2e (MLP, n = {n}) ==");
-    for (gw, cw) in [(1usize, 1usize), (2, 2), (4, 2)] {
-        let spec = MethodSpec::Sjlt { k: 1024, s: 1 };
-        let bank = CompressorBank::Flat(spec.build(p, 42));
-        let pipeline = CachePipeline::new(
-            &rt,
-            "mlp",
-            params.clone(),
-            PipelineConfig {
-                grad_workers: gw,
-                compress_workers: cw,
-                queue_depth: 4,
-                shard_rows: 4096,
-            },
-        );
+        println!("== cache pipeline e2e (MLP, n = {n}) ==");
+        for (gw, cw) in [(1usize, 1usize), (2, 2), (4, 2)] {
+            let spec = MethodSpec::Sjlt { k: 1024, s: 1 };
+            let bank = CompressorBank::Flat(spec.build(p, 42));
+            let pipeline = CachePipeline::new(
+                &rt,
+                "mlp",
+                params.clone(),
+                PipelineConfig {
+                    grad_workers: gw,
+                    compress_workers: cw,
+                    queue_depth: 4,
+                    shard_rows: 4096,
+                },
+            );
+            let _ = std::fs::remove_dir_all(&store);
+            pipeline
+                .run_flat(&Source::Labelled(&data), &bank, &store, "sjlt:k=1024,s=1", 42)
+                .expect("pipeline");
+            println!(
+                "grad_workers={gw} compress_workers={cw}: {:.1} samples/s | {}",
+                pipeline.metrics.samples_per_sec(),
+                pipeline.metrics.report()
+            );
+            records.push(
+                BenchRecord {
+                    method: format!("pipeline:gw={gw}:cw={cw}:sjlt:k=1024"),
+                    n,
+                    p,
+                    k: 1024,
+                    samples_per_sec: pipeline.metrics.samples_per_sec(),
+                    ns_per_elem: 1e9
+                        / (pipeline.metrics.samples_per_sec() * p as f64).max(1e-12),
+                    extra: vec![],
+                },
+            );
+        }
         let _ = std::fs::remove_dir_all(&store);
-        pipeline
-            .run_flat(&Source::Labelled(&data), &bank, &store, "sjlt:k=1024,s=1", 42)
-            .expect("pipeline");
-        println!(
-            "grad_workers={gw} compress_workers={cw}: {:.1} samples/s | {}",
-            pipeline.metrics.samples_per_sec(),
-            pipeline.metrics.report()
-        );
     }
-    let _ = std::fs::remove_dir_all(&store);
+
+    match bench::write_bench_json("pipeline_e2e", &records) {
+        Ok(path) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write bench json: {e}"),
+    }
 }

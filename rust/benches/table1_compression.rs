@@ -2,16 +2,24 @@
 //! MLP-scale gradient batch (P = 84,618), reproducing the time ordering of
 //! Tables 1a–c: masks ≪ GraSS ≪ SJLT ≪ FJLT ≪ Gauss.
 //!
+//! Each method is measured on both execution models at identical k:
+//! the per-sample `compress_into` loop (the old compress-stage baseline)
+//! and the batch-first `compress_batch_with` kernel with a reusable
+//! scratch. Results land in `BENCH_table1_compression.json`.
+//!
 //! Run: `cargo bench --bench table1_compression`
 
 use grass::sketch::rng::Pcg;
-use grass::sketch::{MaskKind, MethodSpec};
-use grass::util::bench;
+use grass::sketch::{Compressor, MaskKind, MethodSpec, Scratch};
+use grass::util::bench::{self, BenchRecord};
 
 fn main() {
     let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
     let p = 84_618usize; // MLP parameter count
     let n = if fast { 8 } else { 64 };
+    // The per-sample baseline runs fewer rows (its cost is linear in rows;
+    // Gauss at k=2048 is ~1 s/row) and is normalised per sample.
+    let n_base = n.min(8);
     let ks: &[usize] = if fast { &[512] } else { &[512, 1024, 2048] };
     let mut rng = Pcg::new(5);
     // ~40% zeros, matching the ReLU-induced per-sample gradient sparsity
@@ -26,6 +34,8 @@ fn main() {
         })
         .collect();
     println!("== Table 1 compression benchmark (P = {p}, batch = {n}) ==");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut scratch = Scratch::new();
     // Ablation: SJLT sparsity parameter s (paper default s = 1).
     {
         let k = ks[0];
@@ -33,9 +43,13 @@ fn main() {
             let c = MethodSpec::Sjlt { k, s }.build(p, 42);
             let mut out = vec![0.0f32; n * k];
             let r = bench::bench(&format!("ablation SJLT s={s} k={k}"), || {
-                c.compress_batch(&gs, n, &mut out)
+                c.compress_batch_with(&gs, n, &mut out, &mut scratch)
             });
             println!("{}", r.report());
+            records.push(
+                BenchRecord::from_duration(&format!("sjlt:k={k},s={s}:batch"), n, p, k, r.median)
+                    .with("s", s as f64),
+            );
         }
     }
     for &k in ks {
@@ -53,14 +67,42 @@ fn main() {
         for spec in specs {
             let c = spec.build(p, 42);
             let mut out = vec![0.0f32; n * k];
-            let r = bench::bench(&format!("{} batch={n}", c.name()), || {
-                c.compress_batch(&gs, n, &mut out)
+            // per-sample baseline: the old compress-stage inner loop
+            let r_single = bench::bench(&format!("{} per-sample n={n_base}", c.name()), || {
+                for i in 0..n_base {
+                    c.compress_into(&gs[i * p..(i + 1) * p], &mut out[i * k..(i + 1) * k]);
+                }
             });
-            println!("{}", r.report());
+            // batch-first kernel over the full batch with reusable scratch
+            let r_batch = bench::bench(&format!("{} batch={n}", c.name()), || {
+                c.compress_batch_with(&gs, n, &mut out, &mut scratch)
+            });
+            let per_sample_single = r_single.median_secs() / n_base as f64;
+            let per_sample_batch = r_batch.median_secs() / n as f64;
+            let speedup = per_sample_single / per_sample_batch.max(1e-12);
+            println!("{}", r_single.report());
+            println!("{}   <- batch speedup {speedup:.2}x", r_batch.report());
+            records.push(BenchRecord::from_duration(
+                &format!("{}:per_sample", spec.spec_string()),
+                n_base,
+                p,
+                k,
+                r_single.median,
+            ));
+            records.push(
+                BenchRecord::from_duration(
+                    &format!("{}:batch", spec.spec_string()),
+                    n,
+                    p,
+                    k,
+                    r_batch.median,
+                )
+                .with("speedup_vs_per_sample", speedup),
+            );
         }
     }
+    match bench::write_bench_json("table1_compression", &records) {
+        Ok(path) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write bench json: {e}"),
+    }
 }
-
-// Note: an `s`-sweep ablation for SJLT (paper fixes s = 1) is provided by
-// the library test-bench below; run with `cargo bench --bench
-// table1_compression` and compare the SJLT rows.

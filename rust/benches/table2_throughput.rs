@@ -1,17 +1,27 @@
 //! Bench: Table 2 — FactGraSS vs LoGra throughput on the exact
-//! Llama-3.1-8B layer geometry. Prints the same rows as the paper.
+//! Llama-3.1-8B layer geometry, on both execution models (per-sample
+//! `compress_into` loop vs the batch-first kernels). Prints the same rows
+//! as the paper plus the batch-speedup column, and persists
+//! `BENCH_table2_throughput.json`.
 //!
 //! Run: `cargo bench --bench table2_throughput`
 
 use grass::exp::table2;
+use grass::util::bench;
 
 fn main() {
     let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
-    let (kls, tokens, reps) = if fast {
-        (vec![256], 64, 2)
+    let (kls, tokens, reps, batch) = if fast {
+        (vec![256], 64, 2, 4)
     } else {
-        (vec![256, 1024, 4096], 256, 4)
+        (vec![256, 1024, 4096], 256, 4, 4)
     };
-    let table = table2::run(&kls, tokens, reps, Some("results/table2.json")).expect("table2");
+    let (table, records) =
+        table2::run_bench(&kls, tokens, reps, 2, batch, Some("results/table2.json"))
+            .expect("table2");
     table.print();
+    match bench::write_bench_json("table2_throughput", &records) {
+        Ok(path) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write bench json: {e}"),
+    }
 }

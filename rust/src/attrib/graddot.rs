@@ -2,29 +2,24 @@
 //! surrogate the Selective Mask objective (Eq. 1) targets, and a baseline
 //! attributor in its own right.
 
-use crate::util::par;
+use crate::linalg::matmul::matmul_abt;
 
 /// `scores[q][i] = ⟨g_q, g_i⟩` over `n × k` train and `m × k` query
-/// matrices; returns `m × n`.
+/// matrices; returns `m × n`. Both operands are row-major with shared inner
+/// dimension `k`, so the whole score matrix is one `Q · Gᵀ` GEMM — the
+/// register-tiled parallel kernel in [`crate::linalg::matmul`].
 pub fn graddot_scores(grads: &[f32], n: usize, k: usize, queries: &[f32], m: usize) -> Vec<f32> {
     assert_eq!(grads.len(), n * k);
     assert_eq!(queries.len(), m * k);
     let mut scores = vec![0.0f32; m * n];
-    par::par_chunks_mut(&mut scores, n, 1, |q_start, chunk| {
-        for (off, srow) in chunk.chunks_mut(n).enumerate() {
-            let q = &queries[(q_start + off) * k..(q_start + off + 1) * k];
-            for (i, s) in srow.iter_mut().enumerate() {
-                let gi = &grads[i * k..(i + 1) * k];
-                *s = q.iter().zip(gi).map(|(a, b)| a * b).sum();
-            }
-        }
-    });
+    matmul_abt(queries, grads, &mut scores, m, k, n);
     scores
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sketch::rng::Pcg;
 
     #[test]
     fn matches_manual_dot() {
@@ -40,5 +35,29 @@ mod tests {
         let q = [0.0f32, 1.0];
         let s = graddot_scores(&g, 2, 2, &q, 1);
         assert_eq!(s, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn gemm_path_matches_explicit_loop() {
+        let (n, m, k) = (23, 6, 37);
+        let mut rng = Pcg::new(11);
+        let g: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let q: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
+        let s = graddot_scores(&g, n, k, &q, m);
+        for qi in 0..m {
+            for i in 0..n {
+                let want: f32 = q[qi * k..(qi + 1) * k]
+                    .iter()
+                    .zip(&g[i * k..(i + 1) * k])
+                    .map(|(a, b)| a * b)
+                    .sum();
+                assert!(
+                    (s[qi * n + i] - want).abs() < 1e-4 * (1.0 + want.abs()),
+                    "({qi},{i}): {} vs {}",
+                    s[qi * n + i],
+                    want
+                );
+            }
+        }
     }
 }

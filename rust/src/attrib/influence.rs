@@ -2,7 +2,6 @@
 //! gradient matrix, with the paper's damping grid search (App. B.2).
 
 use super::fim::{accumulate_fim, Preconditioner};
-use crate::util::par;
 use anyhow::Result;
 
 /// Candidate damping grid from the paper:
@@ -34,21 +33,11 @@ impl InfluenceEngine {
 
     /// Attribute stage: `scores[q][i] = ⟨ĝ_q, g̃̂_i⟩` for an `m × k` query
     /// matrix against the preconditioned `n × k` cache. Returns `m × n`.
+    /// Both matrices are row-major with shared inner dimension `k`, so this
+    /// is one dense `Q · Gᵀ` — the same register-tiled parallel GEMM
+    /// dispatch as [`super::graddot::graddot_scores`].
     pub fn scores(&self, preconditioned: &[f32], n: usize, queries: &[f32], m: usize) -> Vec<f32> {
-        let k = self.k;
-        assert_eq!(preconditioned.len(), n * k);
-        assert_eq!(queries.len(), m * k);
-        let mut scores = vec![0.0f32; m * n];
-        par::par_chunks_mut(&mut scores, n, 1, |q_start, chunk| {
-            for (off, srow) in chunk.chunks_mut(n).enumerate() {
-                let q = &queries[(q_start + off) * k..(q_start + off + 1) * k];
-                for (i, s) in srow.iter_mut().enumerate() {
-                    let gi = &preconditioned[i * k..(i + 1) * k];
-                    *s = q.iter().zip(gi).map(|(a, b)| a * b).sum();
-                }
-            }
-        });
-        scores
+        super::graddot::graddot_scores(preconditioned, n, self.k, queries, m)
     }
 
     /// Full pipeline: cache + attribute.

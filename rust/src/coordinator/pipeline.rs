@@ -3,7 +3,7 @@
 use super::metrics::Metrics;
 use crate::data::{Labelled, Sequences};
 use crate::runtime::{Arg, Executable, Runtime};
-use crate::sketch::{Compressor, FactorizedCompressor};
+use crate::sketch::{Compressor, FactorizedCompressor, Scratch};
 use crate::store::{StoreMeta, StoreWriter};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -259,65 +259,72 @@ impl<'a> CachePipeline<'a> {
             drop(grad_tx);
 
             // ---- stage 3: compress workers ----
+            // Batch-first: each worker owns a reusable Scratch workspace and
+            // hands the whole GradBatch to the tuned batch kernels — one
+            // call per batch (flat) or per layer (factored), instead of the
+            // old per-sample loop. Only the output block (the channel
+            // payload) is allocated per batch; every kernel temporary is
+            // recycled through the worker's scratch.
             for _ in 0..self.cfg.compress_workers.max(1) {
                 let metrics = metrics.clone();
                 let row_tx = row_tx.clone();
                 let grad_rx = &grad_rx;
-                let meta = &meta;
-                s.spawn(move || loop {
-                    let gb = match grad_rx.lock().unwrap().recv() {
-                        Ok(g) => g,
-                        Err(_) => return,
-                    };
-                    let t0 = Instant::now();
-                    let (first, count, rows) = match gb {
-                        GradBatch::Flat { first, rows, count } => {
-                            let c = match bank {
-                                CompressorBank::Flat(c) => c,
-                                _ => unreachable!("flat batch with factored bank"),
-                            };
-                            let mut out = vec![0.0f32; count * k];
-                            for i in 0..count {
-                                c.compress_into(
-                                    &rows[i * p..(i + 1) * p],
-                                    &mut out[i * k..(i + 1) * k],
+                s.spawn(move || {
+                    let mut scratch = Scratch::new();
+                    loop {
+                        let gb = match grad_rx.lock().unwrap().recv() {
+                            Ok(g) => g,
+                            Err(_) => return,
+                        };
+                        let t0 = Instant::now();
+                        let (first, count, rows) = match gb {
+                            GradBatch::Flat { first, rows, count } => {
+                                let c = match bank {
+                                    CompressorBank::Flat(c) => c,
+                                    _ => unreachable!("flat batch with factored bank"),
+                                };
+                                let mut out = vec![0.0f32; count * k];
+                                c.compress_batch_with(
+                                    &rows[..count * p],
+                                    count,
+                                    &mut out,
+                                    &mut scratch,
                                 );
+                                (first, count, out)
                             }
-                            (first, count, out)
-                        }
-                        GradBatch::Factored {
-                            first,
-                            count,
-                            seq,
-                            layers,
-                        } => {
-                            let cs = match bank {
-                                CompressorBank::Factored(cs) => cs,
-                                _ => unreachable!("factored batch with flat bank"),
-                            };
-                            let mut out = vec![0.0f32; count * k];
-                            for i in 0..count {
+                            GradBatch::Factored {
+                                first,
+                                count,
+                                seq,
+                                layers,
+                            } => {
+                                let cs = match bank {
+                                    CompressorBank::Factored(cs) => cs,
+                                    _ => unreachable!("factored batch with flat bank"),
+                                };
+                                let mut out = vec![0.0f32; count * k];
                                 let mut off = 0usize;
                                 for (li, c) in cs.iter().enumerate() {
                                     let (x, dy) = &layers[li];
-                                    let d_in = meta.layers[li].d_in;
-                                    let d_out = meta.layers[li].d_out;
-                                    let kl = c.output_dim();
-                                    c.compress_into(
+                                    c.compress_batch_with(
+                                        count,
                                         seq,
-                                        &x[i * seq * d_in..(i + 1) * seq * d_in],
-                                        &dy[i * seq * d_out..(i + 1) * seq * d_out],
-                                        &mut out[i * k + off..i * k + off + kl],
+                                        x,
+                                        dy,
+                                        &mut out,
+                                        k,
+                                        off,
+                                        &mut scratch,
                                     );
-                                    off += kl;
+                                    off += c.output_dim();
                                 }
+                                (first, count, out)
                             }
-                            (first, count, out)
+                        };
+                        metrics.add(&metrics.compress_ns, t0.elapsed().as_nanos() as u64);
+                        if row_tx.send((first, count, rows)).is_err() {
+                            return;
                         }
-                    };
-                    metrics.add(&metrics.compress_ns, t0.elapsed().as_nanos() as u64);
-                    if row_tx.send((first, count, rows)).is_err() {
-                        return;
                     }
                 });
             }

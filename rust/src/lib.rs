@@ -24,6 +24,48 @@
 //! - [`linalg`] — Cholesky, FWHT, correlation statistics.
 //! - [`exp`] — the experiment harnesses regenerating every paper table and
 //!   figure (Fig 4, Tables 1a–d, Table 2, Fig 9).
+//!
+//! # Performance & threading
+//!
+//! **Thread pool.** All data-parallel loops go through [`util::par`], a
+//! scoped-thread splitter bounded by `available_parallelism()`. Set
+//! `GRASS_NUM_THREADS=N` to cap the worker count (useful for benchmarking
+//! scaling curves or pinning the pipeline's compress workers); the value is
+//! read once per process.
+//!
+//! **Kernel paths.** Every compressor exposes three execution tiers:
+//!
+//! 1. *Serial* — [`sketch::Compressor::compress_into`] on one vector. Small
+//!    inputs (e.g. SJLT below 2¹⁵ elements) always take this path; large
+//!    single vectors switch to input-partitioned parallel scatter with
+//!    private accumulators (the paper's contention-free CUDA layout, on
+//!    CPU threads).
+//! 2. *Batch* — [`sketch::Compressor::compress_batch_with`] /
+//!    [`sketch::FactorizedCompressor::compress_batch_with`], the
+//!    **batch-first hot path** used by the cache pipeline: projector state
+//!    (SJLT bucket/sign tables, FJLT sign vectors, Gaussian projection
+//!    blocks, LoGra factor projections) is computed once per batch and
+//!    amortised across all rows, with rows partitioned across threads so
+//!    output writes never contend.
+//! 3. *Sparse* — [`sketch::Compressor::compress_sparse_into`], nnz-scaling
+//!    per-sample compression for explicitly sparse gradients.
+//!
+//! **Scratch workspaces.** The batch tier draws every temporary from a
+//! reusable [`sketch::Scratch`] (one per pipeline compress worker), so
+//! steady-state compression performs no heap allocation: buffers are
+//! taken, used, returned, and recycled by capacity. The convenience
+//! [`sketch::Compressor::compress_batch`] wrapper allocates a throwaway
+//! workspace — hot paths should hold a `Scratch` and call the `_with`
+//! form.
+//!
+//! **Scoring GEMM.** The attribute stage (`InfluenceEngine::scores`,
+//! `graddot_scores`) is a single `Q·Gᵀ` through the register-tiled
+//! parallel GEMM in [`linalg::matmul`] (shared 4×4 dot microkernel), not a
+//! triple loop. Benchmarks write machine-readable `BENCH_<name>.json`
+//! records (see `util::bench::write_bench_json`) so throughput is
+//! trackable across PRs.
+
+#![allow(clippy::needless_range_loop)]
 
 pub mod attrib;
 pub mod config;

@@ -1,42 +1,130 @@
-//! Blocked, thread-parallel matmuls for the factorized compressors.
+//! Blocked, thread-parallel matmuls for the compression and scoring hot
+//! paths.
 //!
-//! LoGra's hot loop is `Y = X Pᵀ` (activations × projection factors) and the
-//! Kronecker reconstruction is `A = XᵀD`. These are modest sizes
-//! (T ≤ 4096, d ≤ 14336, k ≤ 128) so a cache-blocked loop with f32
-//! accumulate is within ~2-3× of a tuned BLAS while keeping the crate
-//! dependency-free; the Table 2 comparison is method-vs-method on the same
-//! matmul substrate, so the *ratio* (what the paper reports) is preserved.
+//! Three shapes cover every dense kernel in the crate, all built on the
+//! shared microkernels in [`micro`]:
+//!
+//! * [`matmul`] — `C = A·B` (row-major), rank-1 updates via [`micro::axpy`]
+//!   with 4-row register blocking so each `B` row is streamed once per four
+//!   output rows. Used by the dense Gaussian batch projection.
+//! * [`matmul_at_b`] — `C = Aᵀ·B` with `A` stored `t×m`, the Kronecker
+//!   reconstruction `XᵀD` of the factorized compressors, also on
+//!   [`micro::axpy`].
+//! * [`matmul_abt`] — `C = A·Bᵀ` with both operands row-major, i.e. an
+//!   all-pairs dot product. This is the scoring GEMM
+//!   (`scores[q][i] = ⟨g_q, g_i⟩`) and the LoGra factor projection
+//!   (`Y = X·Pᵀ`); it runs a register-tiled 4×4 microkernel
+//!   ([`micro::dot4x4`]) so sixteen accumulators stay in registers across
+//!   the shared inner dimension.
+//!
+//! These are modest sizes (T ≤ 4096, d ≤ 14336, k ≤ 8192), so the blocked
+//! loops land within a small factor of a tuned BLAS while keeping the crate
+//! dependency-free; Table 2 compares method-vs-method on the same matmul
+//! substrate, so the *ratio* the paper reports is preserved.
 
 use crate::util::par;
+
+/// Shared microkernels: every GEMM shape reduces to one of these two inner
+/// loops, so tuning (or later, SIMD intrinsics) lands in one place.
+pub(crate) mod micro {
+    /// `c += a · b` over one row — the rank-1 row update shared by
+    /// [`super::matmul`] and [`super::matmul_at_b`].
+    #[inline(always)]
+    pub fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
+        for (cv, &bv) in c.iter_mut().zip(b) {
+            *cv += a * bv;
+        }
+    }
+
+    /// Register-tiled 4×4 dot-product block over a shared inner dimension:
+    /// `acc[ii][jj] += Σ_k a[ii][k] · b[jj][k]`. The sixteen accumulators
+    /// live in registers for the whole `kdim` sweep.
+    #[inline(always)]
+    pub fn dot4x4(a: [&[f32]; 4], b: [&[f32]; 4], kdim: usize, acc: &mut [[f32; 4]; 4]) {
+        for kk in 0..kdim {
+            let av = [a[0][kk], a[1][kk], a[2][kk], a[3][kk]];
+            let bv = [b[0][kk], b[1][kk], b[2][kk], b[3][kk]];
+            for (ai, row) in av.iter().zip(acc.iter_mut()) {
+                row[0] += ai * bv[0];
+                row[1] += ai * bv[1];
+                row[2] += ai * bv[2];
+                row[3] += ai * bv[3];
+            }
+        }
+    }
+
+    /// Edge-tile fallback for [`dot4x4`]: `ib×jb` block with `ib, jb ≤ 4`.
+    #[inline(always)]
+    pub fn dot_tile(
+        a: &[f32],
+        b: &[f32],
+        kdim: usize,
+        ib: usize,
+        jb: usize,
+        acc: &mut [[f32; 4]; 4],
+    ) {
+        for kk in 0..kdim {
+            for ii in 0..ib {
+                let av = a[ii * kdim + kk];
+                let row = &mut acc[ii];
+                for (jj, cell) in row.iter_mut().enumerate().take(jb) {
+                    *cell += av * b[jj * kdim + kk];
+                }
+            }
+        }
+    }
+}
 
 /// `C(m×n) = A(m×t) · B(t×n)`, all row-major. `C` is overwritten.
 pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, t: usize, n: usize) {
     assert_eq!(a.len(), m * t);
     assert_eq!(b.len(), t * n);
     assert_eq!(c.len(), m * n);
-    let do_row = |i: usize, crow: &mut [f32]| {
-        crow.fill(0.0);
-        let arow = &a[i * t..(i + 1) * t];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
+    let do_block = |row0: usize, crows: &mut [f32]| {
+        crows.fill(0.0);
+        for (bi, band) in crows.chunks_mut(4 * n).enumerate() {
+            let i0 = row0 + 4 * bi;
+            if band.len() == 4 * n {
+                // 4-row register block: each B row is loaded once for four
+                // output rows. The zero-skip preserves the nnz-scaling of
+                // sparse gradient batches.
+                let (r0, rest) = band.split_at_mut(n);
+                let (r1, rest) = rest.split_at_mut(n);
+                let (r2, r3) = rest.split_at_mut(n);
+                for kk in 0..t {
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    let base = i0 * t + kk;
+                    let (a0, a1, a2, a3) = (a[base], a[base + t], a[base + 2 * t], a[base + 3 * t]);
+                    if a0 != 0.0 {
+                        micro::axpy(r0, a0, brow);
+                    }
+                    if a1 != 0.0 {
+                        micro::axpy(r1, a1, brow);
+                    }
+                    if a2 != 0.0 {
+                        micro::axpy(r2, a2, brow);
+                    }
+                    if a3 != 0.0 {
+                        micro::axpy(r3, a3, brow);
+                    }
+                }
+            } else {
+                for (ri, crow) in band.chunks_mut(n).enumerate() {
+                    let arow = &a[(i0 + ri) * t..(i0 + ri + 1) * t];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        micro::axpy(crow, av, &b[kk * n..(kk + 1) * n]);
+                    }
+                }
             }
         }
     };
     if m * t * n < (1 << 16) {
-        for (i, crow) in c.chunks_mut(n).enumerate() {
-            do_row(i, crow);
-        }
+        do_block(0, c);
     } else {
-        par::par_chunks_mut(c, n, 1, |start_row, chunk| {
-            for (off, crow) in chunk.chunks_mut(n).enumerate() {
-                do_row(start_row + off, crow);
-            }
-        });
+        par::par_chunks_mut(c, n, 1, |start_row, chunk| do_block(start_row, chunk));
     }
 }
 
@@ -57,10 +145,7 @@ pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], t: usize, m: usize, n: u
                 if av == 0.0 {
                     continue;
                 }
-                let crow = &mut c[i * n..(i + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * bv;
-                }
+                micro::axpy(&mut c[i * n..(i + 1) * n], av, brow);
             }
         }
     } else {
@@ -72,13 +157,70 @@ pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], t: usize, m: usize, n: u
                     if av == 0.0 {
                         continue;
                     }
-                    let brow = &b[r * n..(r + 1) * n];
-                    for (cv, &bv) in crow.iter_mut().zip(brow) {
-                        *cv += av * bv;
-                    }
+                    micro::axpy(crow, av, &b[r * n..(r + 1) * n]);
                 }
             }
         });
+    }
+}
+
+/// `C(m×n) = A(m×k) · Bᵀ` with `B` stored `n×k` row-major — the all-pairs
+/// dot-product GEMM. `C` is overwritten.
+///
+/// This is the attribute-stage scoring kernel (`queries × cache`) and the
+/// LoGra factor projection; it replaces the naive triple loop with a
+/// parallel, register-tiled blocked GEMM (4×4 tiles via [`micro::dot4x4`]).
+pub fn matmul_abt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, kdim: usize, n: usize) {
+    assert_eq!(a.len(), m * kdim);
+    assert_eq!(b.len(), n * kdim);
+    assert_eq!(c.len(), m * n);
+    let do_block = |row0: usize, crows: &mut [f32]| {
+        let rows = crows.len() / n;
+        let mut i = 0;
+        while i < rows {
+            let ib = (rows - i).min(4);
+            let ai = row0 + i;
+            let mut j = 0;
+            while j < n {
+                let jb = (n - j).min(4);
+                let mut acc = [[0.0f32; 4]; 4];
+                if ib == 4 && jb == 4 {
+                    let ar = [
+                        &a[ai * kdim..(ai + 1) * kdim],
+                        &a[(ai + 1) * kdim..(ai + 2) * kdim],
+                        &a[(ai + 2) * kdim..(ai + 3) * kdim],
+                        &a[(ai + 3) * kdim..(ai + 4) * kdim],
+                    ];
+                    let br = [
+                        &b[j * kdim..(j + 1) * kdim],
+                        &b[(j + 1) * kdim..(j + 2) * kdim],
+                        &b[(j + 2) * kdim..(j + 3) * kdim],
+                        &b[(j + 3) * kdim..(j + 4) * kdim],
+                    ];
+                    micro::dot4x4(ar, br, kdim, &mut acc);
+                } else {
+                    micro::dot_tile(
+                        &a[ai * kdim..(ai + ib) * kdim],
+                        &b[j * kdim..(j + jb) * kdim],
+                        kdim,
+                        ib,
+                        jb,
+                        &mut acc,
+                    );
+                }
+                for ii in 0..ib {
+                    let crow = &mut crows[(i + ii) * n..(i + ii + 1) * n];
+                    crow[j..j + jb].copy_from_slice(&acc[ii][..jb]);
+                }
+                j += jb;
+            }
+            i += ib;
+        }
+    };
+    if m * n * kdim < (1 << 16) {
+        do_block(0, c);
+    } else {
+        par::par_chunks_mut(c, n, 1, |start_row, chunk| do_block(start_row, chunk));
     }
 }
 
@@ -147,6 +289,59 @@ mod tests {
         matmul_at_b(&a, &b, &mut c, t, m, n);
         for i in 0..m * n {
             assert!((c[i] - want[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn abt_matches_explicit_transpose() {
+        // exercises the full-4×4 tile, both edge tiles, and the remainder
+        for (m, kdim, n) in [(9, 33, 7), (4, 16, 4), (1, 5, 1), (13, 64, 21)] {
+            let mut rng = Pcg::new(4 + m as u64);
+            let a: Vec<f32> = (0..m * kdim).map(|_| rng.next_gaussian()).collect();
+            let b: Vec<f32> = (0..n * kdim).map(|_| rng.next_gaussian()).collect();
+            // explicit Bᵀ (kdim×n)
+            let mut bt = vec![0.0f32; kdim * n];
+            for r in 0..n {
+                for kk in 0..kdim {
+                    bt[kk * n + r] = b[r * kdim + kk];
+                }
+            }
+            let want = naive(&a, &bt, m, kdim, n);
+            let mut c = vec![0.0f32; m * n];
+            matmul_abt(&a, &b, &mut c, m, kdim, n);
+            for i in 0..m * n {
+                assert!(
+                    (c[i] - want[i]).abs() < 1e-3 * (1.0 + want[i].abs()),
+                    "({m},{kdim},{n}) at {i}: {} vs {}",
+                    c[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn abt_parallel_path_matches() {
+        let (m, kdim, n) = (37, 96, 53); // m·n·k above the parallel threshold
+        let mut rng = Pcg::new(9);
+        let a: Vec<f32> = (0..m * kdim).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..n * kdim).map(|_| rng.next_gaussian()).collect();
+        let mut c = vec![0.0f32; m * n];
+        matmul_abt(&a, &b, &mut c, m, kdim, n);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = a[i * kdim..(i + 1) * kdim]
+                    .iter()
+                    .zip(&b[j * kdim..(j + 1) * kdim])
+                    .map(|(x, y)| x * y)
+                    .sum();
+                assert!(
+                    (c[i * n + j] - want).abs() < 1e-2 * (1.0 + want.abs()),
+                    "({i},{j}): {} vs {}",
+                    c[i * n + j],
+                    want
+                );
+            }
         }
     }
 }

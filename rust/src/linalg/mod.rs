@@ -1,7 +1,8 @@
 //! Small dense linear algebra used across the attribution pipeline:
 //! Cholesky factorisation (FIM inversion), the fast Walsh–Hadamard
-//! transform (FJLT baseline), correlation statistics (LDS), and a blocked
-//! matmul for the factorized compressors.
+//! transform (FJLT baseline), correlation statistics (LDS), and the
+//! register-tiled blocked matmuls behind the factorized compressors and the
+//! influence scoring GEMM.
 
 pub mod cholesky;
 pub mod fwht;
@@ -10,5 +11,5 @@ pub mod stats;
 
 pub use cholesky::CholeskyFactor;
 pub use fwht::fwht_inplace;
-pub use matmul::{matmul, matmul_at_b};
+pub use matmul::{matmul, matmul_abt, matmul_at_b};
 pub use stats::{pearson, spearman};

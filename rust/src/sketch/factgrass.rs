@@ -18,8 +18,9 @@
 use super::mask::RandomMask;
 use super::rng::Pcg;
 use super::sjlt::Sjlt;
-use super::{Compressor, FactorizedCompressor, MaskKind};
+use super::{Compressor, FactorizedCompressor, MaskKind, Scratch};
 use crate::linalg::matmul::matmul_at_b;
+use crate::util::par;
 
 pub struct FactGrass {
     d_in: usize,
@@ -123,6 +124,48 @@ impl FactGrass {
         matmul_at_b(&xp, &dp, &mut g, t, ki, ko);
         g
     }
+
+    /// Batched stages 1+2: factor-mask all `n·t` timesteps with two
+    /// parallel gathers, then run the per-sample `X'ᵀ DY'` reconstruction
+    /// across samples. Returns the workspace-owned `n × (k_in'·k_out')`
+    /// matrix of reconstructed gradients — the caller must hand it back via
+    /// `scratch.put_f32`. This hoists the scalar path's per-sample
+    /// `xp`/`dp`/`g` allocations into the shared workspace.
+    fn reconstruct_batch(
+        &self,
+        n: usize,
+        t: usize,
+        x: &[f32],
+        dy: &[f32],
+        scratch: &mut Scratch,
+    ) -> Vec<f32> {
+        let (ki, ko) = (self.k_in_p(), self.k_out_p());
+        let nt = n * t;
+        let mut xp = scratch.take_f32(nt * ki);
+        let mut dp = scratch.take_f32(nt * ko);
+        self.mask_in.compress_batch_with(x, nt, &mut xp, scratch);
+        self.mask_out.compress_batch_with(dy, nt, &mut dp, scratch);
+        let mut g = scratch.take_f32(n * ki * ko);
+        {
+            let (xp, dp) = (&xp[..], &dp[..]);
+            par::par_chunks_mut(&mut g, ki * ko, 1, |row_start, chunk| {
+                for (off, grow) in chunk.chunks_mut(ki * ko).enumerate() {
+                    let i = row_start + off;
+                    matmul_at_b(
+                        &xp[i * t * ki..(i + 1) * t * ki],
+                        &dp[i * t * ko..(i + 1) * t * ko],
+                        grow,
+                        t,
+                        ki,
+                        ko,
+                    );
+                }
+            });
+        }
+        scratch.put_f32(xp);
+        scratch.put_f32(dp);
+        g
+    }
 }
 
 impl FactorizedCompressor for FactGrass {
@@ -144,6 +187,42 @@ impl FactorizedCompressor for FactGrass {
         assert_eq!(out.len(), self.k);
         let g = self.reconstruct(t, x, dy);
         self.sjlt.compress_into(&g, out);
+    }
+
+    /// Batch kernel: batched factor masking + reconstruction (see
+    /// [`FactGrass::reconstruct_batch`]) followed by a per-sample SJLT of
+    /// the small reconstructed vectors, parallel over samples. Zero
+    /// steady-state allocation.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_batch_with(
+        &self,
+        n: usize,
+        t: usize,
+        x: &[f32],
+        dy: &[f32],
+        out: &mut [f32],
+        out_stride: usize,
+        out_off: usize,
+        scratch: &mut Scratch,
+    ) {
+        assert_eq!(x.len(), n * t * self.d_in);
+        assert_eq!(dy.len(), n * t * self.d_out);
+        assert_eq!(out.len(), n * out_stride);
+        assert!(out_off + self.k <= out_stride);
+        let kp = self.k_in_p() * self.k_out_p();
+        let g = self.reconstruct_batch(n, t, x, dy, scratch);
+        {
+            let g = &g[..];
+            let k = self.k;
+            par::par_chunks_mut(out, out_stride, 1, |row_start, chunk| {
+                for (off, orow) in chunk.chunks_mut(out_stride).enumerate() {
+                    let i = row_start + off;
+                    self.sjlt
+                        .compress_into(&g[i * kp..(i + 1) * kp], &mut orow[out_off..out_off + k]);
+                }
+            });
+        }
+        scratch.put_f32(g);
     }
 
     fn name(&self) -> String {
@@ -200,6 +279,38 @@ impl FactorizedCompressor for FactMask {
         out.copy_from_slice(&g);
     }
 
+    /// Batch kernel: batched reconstruction, then a parallel copy of each
+    /// sample's row into its output band.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_batch_with(
+        &self,
+        n: usize,
+        t: usize,
+        x: &[f32],
+        dy: &[f32],
+        out: &mut [f32],
+        out_stride: usize,
+        out_off: usize,
+        scratch: &mut Scratch,
+    ) {
+        let k = self.output_dim();
+        assert_eq!(x.len(), n * t * self.0.d_in);
+        assert_eq!(dy.len(), n * t * self.0.d_out);
+        assert_eq!(out.len(), n * out_stride);
+        assert!(out_off + k <= out_stride);
+        let g = self.0.reconstruct_batch(n, t, x, dy, scratch);
+        {
+            let g = &g[..];
+            par::par_chunks_mut(out, out_stride, 8, |row_start, chunk| {
+                for (off, orow) in chunk.chunks_mut(out_stride).enumerate() {
+                    let i = row_start + off;
+                    orow[out_off..out_off + k].copy_from_slice(&g[i * k..(i + 1) * k]);
+                }
+            });
+        }
+        scratch.put_f32(g);
+    }
+
     fn name(&self) -> String {
         format!("RM_{}⊗{}", self.0.k_in_p(), self.0.k_out_p())
     }
@@ -254,6 +365,53 @@ impl FactorizedCompressor for FactSjlt {
             );
         }
         matmul_at_b(&xp, &dp, out, t, ki, ko);
+    }
+
+    /// Batch kernel: both factor SJLTs run their chunked batch scatter over
+    /// all `n·t` timestep rows at once (the bucket/sign stream is hashed
+    /// once per batch), then the Kronecker accumulation runs per sample in
+    /// parallel from workspace buffers.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_batch_with(
+        &self,
+        n: usize,
+        t: usize,
+        x: &[f32],
+        dy: &[f32],
+        out: &mut [f32],
+        out_stride: usize,
+        out_off: usize,
+        scratch: &mut Scratch,
+    ) {
+        let (ki, ko) = (self.sjlt_in.output_dim(), self.sjlt_out.output_dim());
+        let k = ki * ko;
+        assert_eq!(x.len(), n * t * self.d_in);
+        assert_eq!(dy.len(), n * t * self.d_out);
+        assert_eq!(out.len(), n * out_stride);
+        assert!(out_off + k <= out_stride);
+        let nt = n * t;
+        let mut xp = scratch.take_f32(nt * ki);
+        let mut dp = scratch.take_f32(nt * ko);
+        self.sjlt_in.compress_batch_with(x, nt, &mut xp, scratch);
+        self.sjlt_out.compress_batch_with(dy, nt, &mut dp, scratch);
+        {
+            let (xp, dp) = (&xp[..], &dp[..]);
+            par::par_chunks_mut(out, out_stride, 1, |row_start, chunk| {
+                for (off, orow) in chunk.chunks_mut(out_stride).enumerate() {
+                    let i = row_start + off;
+                    matmul_at_b(
+                        &xp[i * t * ki..(i + 1) * t * ki],
+                        &dp[i * t * ko..(i + 1) * t * ko],
+                        &mut orow[out_off..out_off + k],
+                        t,
+                        ki,
+                        ko,
+                    );
+                }
+            });
+        }
+        scratch.put_f32(xp);
+        scratch.put_f32(dp);
     }
 
     fn name(&self) -> String {

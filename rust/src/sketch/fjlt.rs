@@ -10,8 +10,9 @@
 //! §3.1): nnz-scaling is impossible once H mixes all coordinates.
 
 use super::rng::{hash2, to_sign, Pcg};
-use super::Compressor;
+use super::{Compressor, Scratch};
 use crate::linalg::fwht::{fwht_inplace, next_pow2};
+use crate::util::par;
 
 #[derive(Debug, Clone)]
 pub struct Fjlt {
@@ -70,6 +71,50 @@ impl Compressor for Fjlt {
         for (o, &s) in out.iter_mut().zip(&self.sample) {
             *o = buf[s as usize] * self.scale;
         }
+    }
+
+    /// Batch kernel: the sign flips `D` are hashed once per batch (not once
+    /// per row), and the padded FWHT buffers for all rows live in one
+    /// workspace allocation. Rows transform in parallel, then the
+    /// subsampled gather writes each output row.
+    fn compress_batch_with(&self, gs: &[f32], n: usize, out: &mut [f32], scratch: &mut Scratch) {
+        assert_eq!(gs.len(), n * self.p);
+        assert_eq!(out.len(), n * self.k);
+        let (p, p2, k) = (self.p, self.p2, self.k);
+        // Hash the sign table once for the whole batch.
+        let mut signs = scratch.take_f32(p);
+        for (j, sv) in signs.iter_mut().enumerate() {
+            *sv = self.sign(j);
+        }
+        // D·g then H, row-parallel over one shared padded buffer.
+        let mut buf_all = scratch.take_f32(n * p2);
+        {
+            let signs = &signs[..];
+            par::par_chunks_mut(&mut buf_all, p2, 1, |row_start, chunk| {
+                for (off, brow) in chunk.chunks_mut(p2).enumerate() {
+                    let g = &gs[(row_start + off) * p..(row_start + off + 1) * p];
+                    for ((b, &v), &sv) in brow.iter_mut().zip(g).zip(signs) {
+                        *b = v * sv;
+                    }
+                    fwht_inplace(brow);
+                }
+            });
+        }
+        // S with scaling
+        let scale = self.scale;
+        {
+            let buf_all = &buf_all[..];
+            par::par_chunks_mut(out, k, 8, |row_start, chunk| {
+                for (off, orow) in chunk.chunks_mut(k).enumerate() {
+                    let brow = &buf_all[(row_start + off) * p2..(row_start + off + 1) * p2];
+                    for (o, &s) in orow.iter_mut().zip(&self.sample) {
+                        *o = brow[s as usize] * scale;
+                    }
+                }
+            });
+        }
+        scratch.put_f32(buf_all);
+        scratch.put_f32(signs);
     }
 
     fn name(&self) -> String {

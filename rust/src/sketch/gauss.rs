@@ -8,7 +8,7 @@
 //! paper), which is ~3× faster to generate and JL-equivalent.
 
 use super::rng::{hash3, to_gaussian, to_sign};
-use super::Compressor;
+use super::{Compressor, Scratch};
 use crate::util::par;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -108,15 +108,17 @@ impl Compressor for GaussianProjection {
     }
 
     /// Blocked-matmul batch path: generate `P` in row blocks (so memory
-    /// stays bounded at `block·p` floats) and multiply all inputs against
-    /// each block — the cache/BLAS-friendly formulation of the dense
-    /// baseline, analogous to the paper's torch.matmul reference.
-    fn compress_batch(&self, gs: &[f32], n: usize, out: &mut [f32]) {
+    /// stays bounded at `block·p` floats, drawn from the workspace) and
+    /// multiply all inputs against each block — the cache/BLAS-friendly
+    /// formulation of the dense baseline, analogous to the paper's
+    /// torch.matmul reference.
+    fn compress_batch_with(&self, gs: &[f32], n: usize, out: &mut [f32], scratch: &mut Scratch) {
         assert_eq!(gs.len(), n * self.p);
         assert_eq!(out.len(), n * self.k);
         const BLOCK: usize = 64;
-        let mut bt = vec![0.0f32; self.p * BLOCK.min(self.k)];
-        let mut tmp = vec![0.0f32; n * BLOCK.min(self.k)];
+        let kb_max = BLOCK.min(self.k);
+        let mut bt = scratch.take_f32(self.p * kb_max);
+        let mut tmp = scratch.take_f32(n * kb_max);
         let mut i0 = 0;
         while i0 < self.k {
             let kb = BLOCK.min(self.k - i0);
@@ -137,6 +139,8 @@ impl Compressor for GaussianProjection {
             }
             i0 += kb;
         }
+        scratch.put_f32(bt);
+        scratch.put_f32(tmp);
     }
 
     fn name(&self) -> String {

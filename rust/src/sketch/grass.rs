@@ -8,7 +8,7 @@
 
 use super::mask::RandomMask;
 use super::sjlt::Sjlt;
-use super::{Compressor, MaskKind};
+use super::{Compressor, MaskKind, Scratch};
 
 pub struct Grass {
     mask: RandomMask,
@@ -82,6 +82,19 @@ impl Compressor for Grass {
         let mut mid = vec![0.0f32; self.k_prime];
         self.mask.compress_sparse_into(idx, vals, &mut mid);
         self.sjlt.compress_into(&mid, out);
+    }
+
+    /// Batch kernel: stage 1 is one batched mask gather into a workspace
+    /// `n × k'` intermediate, stage 2 one batched SJLT over it — the
+    /// per-sample `mid` allocation of the scalar path is hoisted into the
+    /// scratch and both stages run their own tuned batch kernels.
+    fn compress_batch_with(&self, gs: &[f32], n: usize, out: &mut [f32], scratch: &mut Scratch) {
+        assert_eq!(gs.len(), n * self.input_dim());
+        assert_eq!(out.len(), n * self.output_dim());
+        let mut mid = scratch.take_f32(n * self.k_prime);
+        self.mask.compress_batch_with(gs, n, &mut mid, scratch);
+        self.sjlt.compress_batch_with(&mid, n, out, scratch);
+        scratch.put_f32(mid);
     }
 
     fn name(&self) -> String {

@@ -14,8 +14,9 @@
 //! defaults them to Gaussian).
 
 use super::rng::Pcg;
-use super::FactorizedCompressor;
-use crate::linalg::matmul::{matmul, matmul_at_b};
+use super::{FactorizedCompressor, Scratch};
+use crate::linalg::matmul::{matmul, matmul_abt, matmul_at_b};
+use crate::util::par;
 
 #[derive(Debug, Clone)]
 pub struct LoGra {
@@ -117,6 +118,54 @@ impl FactorizedCompressor for LoGra {
         self.project_out(t, dy, &mut z);
         // out[a*k_out + b] = Σ_t y[t,a] z[t,b]  ==  Yᵀ Z
         matmul_at_b(&y, &z, out, t, self.k_in, self.k_out);
+    }
+
+    /// Batch kernel: the two dense factor projections run as **one** GEMM
+    /// each over all `n·t` timesteps (`Y = X·P_inᵀ`, `Z = DY·P_outᵀ` via
+    /// the register-tiled [`matmul_abt`]), amortising projector traversal
+    /// across the whole batch; only the small `k_in×k_out` reconstruction
+    /// stays per-sample, parallelised over samples with workspace buffers.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_batch_with(
+        &self,
+        n: usize,
+        t: usize,
+        x: &[f32],
+        dy: &[f32],
+        out: &mut [f32],
+        out_stride: usize,
+        out_off: usize,
+        scratch: &mut Scratch,
+    ) {
+        let k = self.k_in * self.k_out;
+        assert_eq!(x.len(), n * t * self.d_in);
+        assert_eq!(dy.len(), n * t * self.d_out);
+        assert_eq!(out.len(), n * out_stride);
+        assert!(out_off + k <= out_stride);
+        let nt = n * t;
+        let mut y = scratch.take_f32(nt * self.k_in);
+        let mut z = scratch.take_f32(nt * self.k_out);
+        matmul_abt(x, &self.p_in, &mut y, nt, self.d_in, self.k_in);
+        matmul_abt(dy, &self.p_out, &mut z, nt, self.d_out, self.k_out);
+        let (k_in, k_out) = (self.k_in, self.k_out);
+        {
+            let (y, z) = (&y[..], &z[..]);
+            par::par_chunks_mut(out, out_stride, 1, |row_start, chunk| {
+                for (off, orow) in chunk.chunks_mut(out_stride).enumerate() {
+                    let i = row_start + off;
+                    matmul_at_b(
+                        &y[i * t * k_in..(i + 1) * t * k_in],
+                        &z[i * t * k_out..(i + 1) * t * k_out],
+                        &mut orow[out_off..out_off + k],
+                        t,
+                        k_in,
+                        k_out,
+                    );
+                }
+            });
+        }
+        scratch.put_f32(y);
+        scratch.put_f32(z);
     }
 
     fn name(&self) -> String {

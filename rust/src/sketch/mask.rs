@@ -9,7 +9,8 @@
 //! benefits from scale-consistency across layers.
 
 use super::rng::Pcg;
-use super::Compressor;
+use super::{Compressor, Scratch};
+use crate::util::par;
 
 #[derive(Debug, Clone)]
 pub struct RandomMask {
@@ -73,6 +74,24 @@ impl Compressor for RandomMask {
         for (o, &j) in out.iter_mut().zip(&self.indices) {
             *o = g[j as usize] * self.scale;
         }
+    }
+
+    /// Batch kernel: a parallel strided gather. No temporaries are needed —
+    /// each row's output is written directly from the shared sorted index
+    /// list, with the scale folded into the gather.
+    fn compress_batch_with(&self, gs: &[f32], n: usize, out: &mut [f32], _scratch: &mut Scratch) {
+        let (p, k) = (self.p, self.indices.len());
+        assert_eq!(gs.len(), n * p);
+        assert_eq!(out.len(), n * k);
+        let scale = self.scale;
+        par::par_chunks_mut(out, k, 8, |row_start, chunk| {
+            for (off, orow) in chunk.chunks_mut(k).enumerate() {
+                let g = &gs[(row_start + off) * p..(row_start + off + 1) * p];
+                for (o, &j) in orow.iter_mut().zip(&self.indices) {
+                    *o = g[j as usize] * scale;
+                }
+            }
+        });
     }
 
     /// O(nnz + k) via merge of two sorted index lists.

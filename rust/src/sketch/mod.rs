@@ -29,6 +29,83 @@ pub mod rng;
 pub mod selective;
 pub mod sjlt;
 
+/// Reusable per-worker workspace for the batch compression hot path.
+///
+/// Every tuned `compress_batch_with` kernel draws its temporaries (masked
+/// intermediates, SJLT bucket/sign chunk tables, FWHT padding buffers,
+/// factor projections) from here instead of allocating, so a long-running
+/// compress worker performs **no steady-state heap allocation**: buffers are
+/// taken, used, and returned, and the next batch reuses their capacity.
+///
+/// One instance belongs to one worker thread — kernels take it `&mut`, so
+/// the type system forbids sharing (the pipeline keeps one per compress
+/// worker). Kernels that parallelise internally split the scratch-owned
+/// buffers into disjoint row ranges for their helper threads.
+#[derive(Default)]
+pub struct Scratch {
+    /// Recycled f32 buffers (best-fit by capacity).
+    f32_pool: Vec<Vec<f32>>,
+    /// Recycled SJLT (bucket, sign) chunk tables.
+    table_pool: Vec<Vec<(u32, f32)>>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a zeroed f32 buffer of exactly `len` elements, reusing pooled
+    /// capacity when possible. Return it with [`Scratch::put_f32`].
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        // Best fit: the smallest pooled buffer that already holds `len`, so
+        // a small request never consumes (and a later large request never
+        // regrows) the pool's biggest allocation.
+        let pos = self
+            .f32_pool
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.capacity() >= len)
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        let mut v = match pos {
+            Some(i) => self.f32_pool.swap_remove(i),
+            None => self.f32_pool.pop().unwrap_or_default(),
+        };
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a buffer taken with [`Scratch::take_f32`] to the pool.
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        self.f32_pool.push(v);
+    }
+
+    /// Take a (bucket, sign) table of exactly `len` entries (contents
+    /// unspecified — kernels overwrite before reading).
+    pub fn take_table(&mut self, len: usize) -> Vec<(u32, f32)> {
+        let pos = self
+            .table_pool
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.capacity() >= len)
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        let mut v = match pos {
+            Some(i) => self.table_pool.swap_remove(i),
+            None => self.table_pool.pop().unwrap_or_default(),
+        };
+        v.clear();
+        v.resize(len, (0, 0.0));
+        v
+    }
+
+    /// Return a table taken with [`Scratch::take_table`] to the pool.
+    pub fn put_table(&mut self, v: Vec<(u32, f32)>) {
+        self.table_pool.push(v);
+    }
+}
+
 /// A seeded linear compression map `R^p → R^k` over dense gradient vectors.
 pub trait Compressor: Send + Sync {
     /// Input dimensionality `p`.
@@ -47,10 +124,23 @@ pub trait Compressor: Send + Sync {
         out
     }
 
-    /// Compress `n` rows (`n × p` → `n × k`). Default parallelises over
-    /// rows; GAUSS overrides with a blocked matmul (the hardware-friendly
-    /// form the paper's PyTorch baseline uses).
+    /// Compress `n` rows (`n × p` → `n × k`) with a throwaway workspace.
+    /// Callers on the hot path should hold a [`Scratch`] and use
+    /// [`Compressor::compress_batch_with`] instead.
     fn compress_batch(&self, gs: &[f32], n: usize, out: &mut [f32]) {
+        let mut scratch = Scratch::new();
+        self.compress_batch_with(gs, n, out, &mut scratch);
+    }
+
+    /// Batch-first entry point: compress `n` rows (`n × p` → `n × k`),
+    /// drawing all temporaries from `scratch` so steady-state compression
+    /// is allocation-free. The default falls back to a row-parallel loop
+    /// over [`Compressor::compress_into`]; every production compressor
+    /// overrides it with a tuned kernel that amortises projector setup
+    /// across the whole batch (chunked bucket/sign tables for SJLT, blocked
+    /// matmul for GAUSS, shared sign/FWHT buffers for FJLT, hoisted mask
+    /// intermediates for GraSS).
+    fn compress_batch_with(&self, gs: &[f32], n: usize, out: &mut [f32], _scratch: &mut Scratch) {
         let p = self.input_dim();
         let k = self.output_dim();
         assert_eq!(gs.len(), n * p);
@@ -97,6 +187,48 @@ pub trait FactorizedCompressor: Send + Sync {
         let mut out = vec![0.0; self.output_dim()];
         self.compress_into(t, x, dy, &mut out);
         out
+    }
+
+    /// Batch-first entry point: compress `n` samples at once.
+    ///
+    /// `x` is `n × t × d_in` row-major, `dy` is `n × t × d_out` row-major.
+    /// Sample `i` writes its `output_dim()` values at
+    /// `out[i·out_stride + out_off ..]` — the strided layout lets the cache
+    /// pipeline hand one `count × k_total` block to a stack of per-layer
+    /// compressors, each filling its own column band (`out_stride = k_total`,
+    /// `out_off` = the layer's offset). All temporaries come from `scratch`.
+    ///
+    /// The default loops over [`FactorizedCompressor::compress_into`];
+    /// tuned kernels batch the factor projections across all `n·t`
+    /// timesteps and hoist the per-sample reconstruction buffers into the
+    /// workspace.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_batch_with(
+        &self,
+        n: usize,
+        t: usize,
+        x: &[f32],
+        dy: &[f32],
+        out: &mut [f32],
+        out_stride: usize,
+        out_off: usize,
+        _scratch: &mut Scratch,
+    ) {
+        let k = self.output_dim();
+        let (d_in, d_out) = (self.d_in(), self.d_out());
+        assert_eq!(x.len(), n * t * d_in);
+        assert_eq!(dy.len(), n * t * d_out);
+        assert_eq!(out.len(), n * out_stride);
+        assert!(out_off + k <= out_stride);
+        for i in 0..n {
+            let base = i * out_stride + out_off;
+            self.compress_into(
+                t,
+                &x[i * t * d_in..(i + 1) * t * d_in],
+                &dy[i * t * d_out..(i + 1) * t * d_out],
+                &mut out[base..base + k],
+            );
+        }
     }
 
     fn name(&self) -> String;
@@ -330,6 +462,64 @@ mod tests {
         for spec in specs {
             let back = MethodSpec::parse(&spec.spec_string()).unwrap();
             assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn scratch_reuses_capacity() {
+        let mut s = Scratch::new();
+        let mut a = s.take_f32(128);
+        a[0] = 3.0;
+        let ptr = a.as_ptr();
+        s.put_f32(a);
+        // same-or-smaller request reuses the pooled allocation, zeroed
+        let b = s.take_f32(64);
+        assert_eq!(b.len(), 64);
+        assert!(b.iter().all(|&v| v == 0.0));
+        assert_eq!(b.as_ptr(), ptr);
+        s.put_f32(b);
+        let t = s.take_table(16);
+        assert_eq!(t.len(), 16);
+        s.put_table(t);
+    }
+
+    #[test]
+    fn batch_with_scratch_matches_per_sample_for_all_methods() {
+        let (p, n) = (700, 5);
+        let specs = [
+            MethodSpec::RandomMask { k: 96 },
+            MethodSpec::Sjlt { k: 96, s: 1 },
+            MethodSpec::Sjlt { k: 96, s: 3 },
+            MethodSpec::Gauss { k: 48 },
+            MethodSpec::Fjlt { k: 96 },
+            MethodSpec::Grass {
+                k: 48,
+                k_prime: 192,
+                mask: MaskKind::Random,
+            },
+        ];
+        let mut rng = rng::Pcg::new(17);
+        let gs: Vec<f32> = (0..n * p).map(|_| rng.next_gaussian()).collect();
+        let mut scratch = Scratch::new();
+        for spec in &specs {
+            let c = spec.build(p, 77);
+            let k = c.output_dim();
+            let mut batch = vec![0.0f32; n * k];
+            // run twice through the same scratch to exercise buffer reuse
+            c.compress_batch_with(&gs, n, &mut batch, &mut scratch);
+            c.compress_batch_with(&gs, n, &mut batch, &mut scratch);
+            for i in 0..n {
+                let single = c.compress(&gs[i * p..(i + 1) * p]);
+                for j in 0..k {
+                    assert!(
+                        (batch[i * k + j] - single[j]).abs() <= 1e-4 * (1.0 + single[j].abs()),
+                        "{} row {i} col {j}: {} vs {}",
+                        c.name(),
+                        batch[i * k + j],
+                        single[j]
+                    );
+                }
+            }
         }
     }
 

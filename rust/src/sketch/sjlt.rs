@@ -20,11 +20,18 @@
 //! projection matrix is ever materialised (see [`super::rng`]).
 
 use super::rng::{hash3, to_sign};
-use super::Compressor;
+use super::{Compressor, Scratch};
 use crate::util::par;
 
 /// Below this many input elements, parallel fan-out costs more than it saves.
 const PAR_THRESHOLD: usize = 1 << 15;
+
+/// Input coordinates per batch-kernel chunk. The (bucket, sign) table for a
+/// chunk is `s · CHUNK` entries of 8 bytes — 32 KB at `s = 1` — so it stays
+/// L1/L2-resident while every row in the batch scatters through it, instead
+/// of materialising all `p·s` entries (which is O(p·s·8) bytes and explodes
+/// at billion-scale `p`).
+const BATCH_CHUNK: usize = 4096;
 
 #[derive(Debug, Clone)]
 pub struct Sjlt {
@@ -53,9 +60,13 @@ impl Sjlt {
     pub fn bucket_sign(&self, j: usize, r: usize) -> (usize, f32) {
         let h = hash3(self.seed, j as u64, r as u64);
         // High bits choose the bucket (multiply-shift), low bit the sign —
-        // independent enough for JL purposes and branch-free.
+        // independent enough for JL purposes and branch-free. The
+        // multiply-shift maps a 63-bit value through `· k >> 63`, so the
+        // result is strictly below `k` by construction — no clamp needed in
+        // the hot loop.
         let bucket = ((h >> 1) as u128 * self.k as u128 >> 63) as usize;
-        (bucket.min(self.k - 1), to_sign(h))
+        debug_assert!(bucket < self.k);
+        (bucket, to_sign(h))
     }
 
     /// Scatter an index range of a dense vector into `acc` (+= semantics).
@@ -114,51 +125,60 @@ impl Compressor for Sjlt {
         }
     }
 
-    /// Batch path (§Perf iteration 1): the (bucket, sign) stream depends
-    /// only on (seed, j, r), so for a batch we materialise it once
-    /// (p·s·8 bytes) and turn the per-row work into a pure table-driven
-    /// scatter — removing 2 splitmix rounds per element per row. Rows are
-    /// processed in parallel; each row's accumulator is its own output
-    /// slice, so no contention.
-    fn compress_batch(&self, gs: &[f32], n: usize, out: &mut [f32]) {
+    /// Batch path: the (bucket, sign) stream depends only on (seed, j, r),
+    /// so it is hashed **once per batch** instead of once per row —
+    /// removing two splitmix rounds per element per row — and materialised
+    /// in cache-resident chunks of [`BATCH_CHUNK`] coordinates (never the
+    /// full `p·s` table). For each chunk, every row scatters that column
+    /// range through the shared read-only table into its own output slice:
+    /// the paper's contention-free layout, with rows partitioned across
+    /// threads. Chunks are visited in ascending order, so per-bucket
+    /// addition order matches the serial path exactly.
+    fn compress_batch_with(&self, gs: &[f32], n: usize, out: &mut [f32], scratch: &mut Scratch) {
         assert_eq!(gs.len(), n * self.p);
         assert_eq!(out.len(), n * self.k);
-        // Materialise the table in parallel.
-        let mut table: Vec<(u32, f32)> = vec![(0, 0.0); self.p * self.s];
-        par::par_chunks_mut(&mut table, self.s, 4096, |j_start, chunk| {
-            for (off, ent) in chunk.chunks_mut(self.s).enumerate() {
-                let j = j_start + off;
+        let (p, k, s) = (self.p, self.k, self.s);
+        let inv = self.inv_sqrt_s;
+        out.fill(0.0);
+        let chunk_cols = BATCH_CHUNK.min(p);
+        let mut table = scratch.take_table(chunk_cols * s);
+        let mut j0 = 0;
+        while j0 < p {
+            let cl = chunk_cols.min(p - j0);
+            // Hash this chunk's (bucket, sign) entries once for all rows.
+            for (off, ent) in table[..cl * s].chunks_mut(s).enumerate() {
+                let j = j0 + off;
                 for (r, e) in ent.iter_mut().enumerate() {
                     let (b, sgn) = self.bucket_sign(j, r);
                     *e = (b as u32, sgn);
                 }
             }
-        });
-        let p = self.p;
-        let k = self.k;
-        let s = self.s;
-        let inv = self.inv_sqrt_s;
-        par::par_chunks_mut(out, k, 1, |row_start, chunk| {
-            for (off, orow) in chunk.chunks_mut(k).enumerate() {
-                let i = row_start + off;
-                orow.fill(0.0);
-                let g = &gs[i * p..(i + 1) * p];
-                for (j, &v) in g.iter().enumerate() {
-                    if v == 0.0 {
-                        continue;
-                    }
-                    for r in 0..s {
-                        let (b, sgn) = table[j * s + r];
-                        orow[b as usize] += sgn * v;
+            let table = &table[..cl * s];
+            // Scatter the chunk for every row; each row owns its output
+            // slice, so the parallel fan-out is contention-free.
+            par::par_chunks_mut(out, k, 1, |row_start, rows| {
+                for (off, orow) in rows.chunks_mut(k).enumerate() {
+                    let i = row_start + off;
+                    let g = &gs[i * p + j0..i * p + j0 + cl];
+                    for (jj, &v) in g.iter().enumerate() {
+                        if v == 0.0 {
+                            continue; // nnz-scaling: zero entries cost one branch
+                        }
+                        for r in 0..s {
+                            let (b, sgn) = table[jj * s + r];
+                            orow[b as usize] += sgn * v;
+                        }
                     }
                 }
-                if s > 1 {
-                    for v in orow.iter_mut() {
-                        *v *= inv;
-                    }
-                }
+            });
+            j0 += cl;
+        }
+        if s > 1 {
+            for v in out.iter_mut() {
+                *v *= inv;
             }
-        });
+        }
+        scratch.put_table(table);
     }
 
     /// O(s·nnz) sparse path — the headline complexity of §3.1.

@@ -1,7 +1,11 @@
 //! Micro-benchmark harness (offline stand-in for criterion): warmup,
-//! adaptive iteration count, median-of-samples reporting. Used by every
-//! `cargo bench` target and by the experiment wall-time columns.
+//! adaptive iteration count, median-of-samples reporting, plus a
+//! machine-readable `BENCH_<name>.json` emitter so the perf trajectory is
+//! trackable across PRs. Used by every `cargo bench` target and by the
+//! experiment wall-time columns.
 
+use crate::util::json::Json;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -82,6 +86,85 @@ pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
     bench_with_budget(name, budget, f)
 }
 
+/// One machine-readable benchmark record for `BENCH_<name>.json`.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Compression method / configuration label.
+    pub method: String,
+    /// Rows (samples) per measured iteration.
+    pub n: usize,
+    /// Input dimensionality.
+    pub p: usize,
+    /// Output (compressed) dimensionality.
+    pub k: usize,
+    /// Throughput in samples per second.
+    pub samples_per_sec: f64,
+    /// Cost per input element in nanoseconds.
+    pub ns_per_elem: f64,
+    /// Free-form extra metrics (e.g. `speedup_vs_per_sample`, `tokens_per_sec`).
+    pub extra: Vec<(String, f64)>,
+}
+
+impl BenchRecord {
+    /// Build a record from a measured per-iteration duration over `n`
+    /// rows of `p` elements compressed to `k`.
+    pub fn from_duration(method: &str, n: usize, p: usize, k: usize, per_iter: Duration) -> Self {
+        let secs = per_iter.as_secs_f64().max(1e-12);
+        Self {
+            method: method.to_string(),
+            n,
+            p,
+            k,
+            samples_per_sec: n as f64 / secs,
+            ns_per_elem: secs * 1e9 / (n as f64 * p as f64).max(1.0),
+            extra: vec![],
+        }
+    }
+
+    /// Attach an extra named metric (builder style).
+    pub fn with(mut self, key: &str, value: f64) -> Self {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("method", Json::Str(self.method.clone())),
+            ("n", Json::Num(self.n as f64)),
+            ("p", Json::Num(self.p as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("samples_per_sec", Json::Num(self.samples_per_sec)),
+            ("ns_per_elem", Json::Num(self.ns_per_elem)),
+        ];
+        for (key, value) in &self.extra {
+            pairs.push((key.as_str(), Json::Num(*value)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Where `BENCH_<name>.json` files land: `$GRASS_BENCH_DIR` or the CWD.
+pub fn bench_json_path(name: &str) -> PathBuf {
+    let dir = std::env::var("GRASS_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    PathBuf::from(dir).join(format!("BENCH_{name}.json"))
+}
+
+/// Write benchmark records to `BENCH_<name>.json` (overwriting any previous
+/// run) and return the path. Every bench target calls this so the perf
+/// trajectory is diffable across PRs.
+pub fn write_bench_json(name: &str, records: &[BenchRecord]) -> std::io::Result<PathBuf> {
+    let path = bench_json_path(name);
+    let j = Json::obj(vec![
+        ("bench", Json::Str(name.to_string())),
+        (
+            "records",
+            Json::Arr(records.iter().map(|r| r.to_json()).collect()),
+        ),
+    ]);
+    std::fs::write(&path, j.to_string_pretty())?;
+    Ok(path)
+}
+
 /// Prevent the optimizer from discarding a computed value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -122,5 +205,34 @@ mod tests {
         let (v, d) = time_once(|| 42);
         assert_eq!(v, 42);
         assert!(d.as_nanos() < 1_000_000_000);
+    }
+
+    #[test]
+    fn bench_record_math_and_json() {
+        let r = BenchRecord::from_duration("sjlt:k=64", 10, 1000, 64, Duration::from_millis(10))
+            .with("speedup_vs_per_sample", 2.5);
+        assert!((r.samples_per_sec - 1000.0).abs() < 1.0);
+        assert!((r.ns_per_elem - 1000.0).abs() < 1.0);
+        let j = r.to_json();
+        assert_eq!(j.req("method").unwrap().as_str(), Some("sjlt:k=64"));
+        assert_eq!(j.req("k").unwrap().as_usize(), Some(64));
+        assert!(j.req("speedup_vs_per_sample").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn bench_json_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join(format!("grass_benchjson_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_unit.json");
+        let recs = vec![BenchRecord::from_duration("rm:k=8", 4, 100, 8, Duration::from_micros(50))];
+        let j = Json::obj(vec![
+            ("bench", Json::Str("unit".into())),
+            ("records", Json::Arr(recs.iter().map(|r| r.to_json()).collect())),
+        ]);
+        std::fs::write(&path, j.to_string_pretty()).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.req("bench").unwrap().as_str(), Some("unit"));
+        assert_eq!(back.req("records").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,203 @@
+//! Property tests: every compressor implementing the batch API must produce
+//! the same output as the per-sample path within 1e-4 relative tolerance —
+//! across s > 1, sparse inputs, non-divisible batch sizes, inputs above the
+//! parallel threshold, and strided factorized output bands.
+
+use grass::sketch::factgrass::{FactGrass, FactMask, FactSjlt};
+use grass::sketch::logra::LoGra;
+use grass::sketch::rng::Pcg;
+use grass::sketch::{Compressor, FactorizedCompressor, MaskKind, MethodSpec, Scratch};
+
+const TOL: f32 = 1e-4;
+
+fn close(got: f32, want: f32) -> bool {
+    (got - want).abs() <= TOL * (1.0 + want.abs())
+}
+
+/// Gradient rows with a requested zero fraction (sparse-input coverage).
+fn make_rows(rows: usize, p: usize, zero_frac: f64, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..rows * p)
+        .map(|_| {
+            if rng.next_f64() < zero_frac {
+                0.0
+            } else {
+                rng.next_gaussian()
+            }
+        })
+        .collect()
+}
+
+/// Shared harness: batch output row-for-row equals the per-sample path.
+fn check_flat(c: &dyn Compressor, n: usize, gs: &[f32], scratch: &mut Scratch) {
+    let (p, k) = (c.input_dim(), c.output_dim());
+    assert_eq!(gs.len(), n * p);
+    let mut batch = vec![0.0f32; n * k];
+    c.compress_batch_with(gs, n, &mut batch, scratch);
+    for i in 0..n {
+        let single = c.compress(&gs[i * p..(i + 1) * p]);
+        for j in 0..k {
+            assert!(
+                close(batch[i * k + j], single[j]),
+                "{} n={n} row {i} col {j}: batch {} vs single {}",
+                c.name(),
+                batch[i * k + j],
+                single[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn flat_batch_matches_single_all_methods() {
+    // p chosen prime-ish so it never divides the SJLT chunk, the Gauss
+    // block, or the batch size; n covers 1, odd, and non-divisible sizes.
+    let p = 1537;
+    let specs = [
+        MethodSpec::RandomMask { k: 120 },
+        MethodSpec::SelectiveMask { k: 64 },
+        MethodSpec::Sjlt { k: 120, s: 1 },
+        MethodSpec::Sjlt { k: 120, s: 3 },
+        MethodSpec::Gauss { k: 70 },
+        MethodSpec::Fjlt { k: 120 },
+        MethodSpec::Grass {
+            k: 64,
+            k_prime: 300,
+            mask: MaskKind::Random,
+        },
+    ];
+    let mut scratch = Scratch::new();
+    for &n in &[1usize, 5, 17] {
+        for &zero_frac in &[0.0, 0.6] {
+            let gs = make_rows(n, p, zero_frac, 31 + n as u64);
+            for spec in &specs {
+                let c = spec.build(p, 907);
+                check_flat(c.as_ref(), n, &gs, &mut scratch);
+            }
+        }
+    }
+}
+
+#[test]
+fn flat_batch_matches_single_above_parallel_threshold() {
+    // p > 2^15 drives the single-sample SJLT through its parallel
+    // private-accumulator reduction, so the comparison crosses two
+    // different floating-point summation orders — the 1e-4 relative
+    // tolerance is exactly the fp-reassociation budget.
+    let p = (1 << 16) + 77;
+    let n = 3;
+    let gs = make_rows(n, p, 0.4, 99);
+    let mut scratch = Scratch::new();
+    let specs = [
+        MethodSpec::Sjlt { k: 256, s: 2 },
+        MethodSpec::RandomMask { k: 512 },
+        MethodSpec::Grass {
+            k: 128,
+            k_prime: 2048,
+            mask: MaskKind::Random,
+        },
+    ];
+    for spec in &specs {
+        let c = spec.build(p, 13);
+        check_flat(c.as_ref(), n, &gs, &mut scratch);
+    }
+}
+
+/// Shared harness for factorized compressors: batch output must match the
+/// per-sample path inside a strided band and leave the rest of each row
+/// untouched (the pipeline interleaves per-layer bands in one block).
+fn check_factorized(c: &dyn FactorizedCompressor, n: usize, t: usize, seed: u64) {
+    let (d_in, d_out, k) = (c.d_in(), c.d_out(), c.output_dim());
+    let mut rng = Pcg::new(seed);
+    let x: Vec<f32> = (0..n * t * d_in).map(|_| rng.next_gaussian()).collect();
+    let dy: Vec<f32> = (0..n * t * d_out).map(|_| rng.next_gaussian()).collect();
+    let stride = k + 7;
+    let off = 3;
+    let sentinel = -1234.5f32;
+    let mut out = vec![sentinel; n * stride];
+    let mut scratch = Scratch::new();
+    c.compress_batch_with(n, t, &x, &dy, &mut out, stride, off, &mut scratch);
+    for i in 0..n {
+        let single = c.compress(
+            t,
+            &x[i * t * d_in..(i + 1) * t * d_in],
+            &dy[i * t * d_out..(i + 1) * t * d_out],
+        );
+        for j in 0..k {
+            assert!(
+                close(out[i * stride + off + j], single[j]),
+                "{} n={n} sample {i} col {j}: batch {} vs single {}",
+                c.name(),
+                out[i * stride + off + j],
+                single[j]
+            );
+        }
+        for j in 0..off {
+            assert_eq!(out[i * stride + j], sentinel, "{} clobbered pre-band", c.name());
+        }
+        for j in off + k..stride {
+            assert_eq!(out[i * stride + j], sentinel, "{} clobbered post-band", c.name());
+        }
+    }
+}
+
+#[test]
+fn factorized_batch_matches_single_all_methods() {
+    let (d_in, d_out) = (48, 36);
+    for &n in &[1usize, 5] {
+        for &t in &[1usize, 6] {
+            check_factorized(&LoGra::new(d_in, d_out, 6, 4, 5), n, t, 41);
+            check_factorized(
+                &FactGrass::new(d_in, d_out, 12, 9, 24, MaskKind::Random, 5),
+                n,
+                t,
+                42,
+            );
+            check_factorized(&FactMask::new(d_in, d_out, 8, 6, 5), n, t, 43);
+            check_factorized(&FactSjlt::new(d_in, d_out, 8, 6, 5), n, t, 44);
+        }
+    }
+}
+
+#[test]
+fn factorized_default_fallback_matches_tuned_kernel() {
+    // The trait's default batch implementation (per-sample loop) and the
+    // tuned kernels must agree — guards the contract both sides implement.
+    struct Fallback<'a>(&'a LoGra);
+    impl FactorizedCompressor for Fallback<'_> {
+        fn d_in(&self) -> usize {
+            self.0.d_in()
+        }
+        fn d_out(&self) -> usize {
+            self.0.d_out()
+        }
+        fn output_dim(&self) -> usize {
+            self.0.output_dim()
+        }
+        fn compress_into(&self, t: usize, x: &[f32], dy: &[f32], out: &mut [f32]) {
+            self.0.compress_into(t, x, dy, out)
+        }
+        fn name(&self) -> String {
+            format!("fallback[{}]", self.0.name())
+        }
+    }
+    let lg = LoGra::new(32, 24, 4, 3, 9);
+    let (n, t) = (4, 5);
+    let mut rng = Pcg::new(7);
+    let x: Vec<f32> = (0..n * t * 32).map(|_| rng.next_gaussian()).collect();
+    let dy: Vec<f32> = (0..n * t * 24).map(|_| rng.next_gaussian()).collect();
+    let k = lg.output_dim();
+    let mut scratch = Scratch::new();
+    let mut tuned = vec![0.0f32; n * k];
+    lg.compress_batch_with(n, t, &x, &dy, &mut tuned, k, 0, &mut scratch);
+    let mut fallback = vec![0.0f32; n * k];
+    Fallback(&lg).compress_batch_with(n, t, &x, &dy, &mut fallback, k, 0, &mut scratch);
+    for i in 0..n * k {
+        assert!(
+            close(tuned[i], fallback[i]),
+            "at {i}: tuned {} vs fallback {}",
+            tuned[i],
+            fallback[i]
+        );
+    }
+}

@@ -5,7 +5,7 @@ use grass::coordinator::{pipeline::Source, CachePipeline, CompressorBank, Pipeli
 use grass::data::corpus::MusicEvents;
 use grass::data::images::SynthDigits;
 use grass::runtime::{Arg, Runtime};
-use grass::sketch::{factgrass::FactGrass, FactorizedCompressor, MaskKind, MethodSpec};
+use grass::sketch::{factgrass::FactGrass, Compressor, FactorizedCompressor, MaskKind, MethodSpec};
 use grass::store::StoreReader;
 
 fn runtime() -> Option<Runtime> {

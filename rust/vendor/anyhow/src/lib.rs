@@ -1,0 +1,226 @@
+//! Vendored, dependency-free drop-in for the subset of the `anyhow` API this
+//! workspace uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] /
+//! [`ensure!`] macros, and the [`Context`] extension trait.
+//!
+//! The build environment is offline, so the real crate cannot be fetched
+//! from a registry; this implementation keeps the exact call-site syntax so
+//! the dependency can be swapped back for upstream `anyhow` without touching
+//! application code. Errors are stored as a context chain of strings —
+//! `Display` prints the outermost context (`{:#}` prints the full chain,
+//! matching upstream), `Debug` prints a `Caused by:` trace.
+
+use std::fmt;
+
+/// A string-chained error value, API-compatible with `anyhow::Error` for
+/// the operations this workspace performs.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from anything printable (what the [`anyhow!`] macro calls).
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error {
+            msg: msg.to_string(),
+            cause: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, context: impl fmt::Display) -> Self {
+        Error {
+            msg: context.to_string(),
+            cause: Some(Box::new(self)),
+        }
+    }
+
+    /// The outermost message.
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    fn from_std(e: &(dyn std::error::Error + 'static)) -> Self {
+        Error {
+            msg: e.to_string(),
+            cause: e.source().map(|s| Box::new(Error::from_std(s))),
+        }
+    }
+}
+
+/// Iterator over an [`Error`]'s context chain.
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.cause.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.cause.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.cause.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = self.cause.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`, which is
+// what makes this blanket conversion coherent (same trick as upstream).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::from_std(&e)
+    }
+}
+
+/// `anyhow::Result<T>` — a `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    /// Attach a fixed context message to the error, if any.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Attach a lazily-built context message to the error, if any.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Bail unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_formats() {
+        let x = 7;
+        let e = anyhow!("bad value {x} in {}", "spot");
+        assert_eq!(e.to_string(), "bad value 7 in spot");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged");
+    }
+
+    #[test]
+    fn ensure_checks() {
+        fn f(n: usize) -> Result<()> {
+            ensure!(n > 2, "n = {n} too small");
+            Ok(())
+        }
+        assert!(f(3).is_ok());
+        assert!(f(1).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e: Result<(), _> = Err(io_err());
+        let e = e
+            .with_context(|| "loading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: gone");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn context_on_anyhow_error_itself() {
+        fn inner() -> Result<()> {
+            bail!("inner failure");
+        }
+        let e = inner().context("outer step").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer step: inner failure");
+    }
+}
