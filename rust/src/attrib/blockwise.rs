@@ -5,7 +5,8 @@
 //! the GPT-2/WikiText (Table 1d) and Llama (Table 2) experiments.
 
 use super::fim::{accumulate_fim, Preconditioner};
-use anyhow::Result;
+use super::{Attributor, ScoreMatrix};
+use anyhow::{bail, Result};
 
 /// Layout of concatenated per-layer compressed gradients.
 #[derive(Debug, Clone)]
@@ -37,15 +38,29 @@ impl BlockLayout {
     }
 }
 
+/// State installed by the [`Attributor::cache`] stage: the preconditioned
+/// matrix plus the eagerly computed self-influence diagonal (the raw
+/// gradients are not retained — see `influence::CachedTrainSet`).
+struct CachedBlocks {
+    pre: Vec<f32>,
+    self_inf: Vec<f32>,
+    n: usize,
+}
+
 /// Block-diagonal influence engine over concatenated per-layer vectors.
 pub struct BlockwiseEngine {
     pub layout: BlockLayout,
     pub damping: f64,
+    cached: Option<CachedBlocks>,
 }
 
 impl BlockwiseEngine {
     pub fn new(layout: BlockLayout, damping: f64) -> Self {
-        Self { layout, damping }
+        Self {
+            layout,
+            damping,
+            cached: None,
+        }
     }
 
     /// Precondition each layer block independently: for each `l`,
@@ -88,6 +103,41 @@ impl BlockwiseEngine {
     ) -> Result<Vec<f32>> {
         let pre = self.precondition(grads, n)?;
         Ok(self.scores(&pre, n, queries, m))
+    }
+}
+
+impl Attributor for BlockwiseEngine {
+    fn name(&self) -> &'static str {
+        "blockwise"
+    }
+
+    fn dim(&self) -> usize {
+        self.layout.total()
+    }
+
+    fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
+        let pre = self.precondition(grads, n)?;
+        let self_inf = super::influence::rowwise_dot(grads, &pre, n, self.layout.total());
+        self.cached = Some(CachedBlocks { pre, self_inf, n });
+        Ok(())
+    }
+
+    fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
+        let Some(c) = &self.cached else {
+            bail!("blockwise engine has no cached train set; call cache() first")
+        };
+        Ok(ScoreMatrix::new(
+            self.scores(&c.pre, c.n, queries, m),
+            m,
+            c.n,
+        ))
+    }
+
+    fn self_influence(&self) -> Result<Vec<f32>> {
+        let Some(c) = &self.cached else {
+            bail!("blockwise engine has no cached train set; call cache() first")
+        };
+        Ok(c.self_inf.clone())
     }
 }
 

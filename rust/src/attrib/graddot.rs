@@ -2,7 +2,9 @@
 //! surrogate the Selective Mask objective (Eq. 1) targets, and a baseline
 //! attributor in its own right.
 
+use super::{Attributor, ScoreMatrix};
 use crate::linalg::matmul::matmul_abt;
+use anyhow::{bail, Result};
 
 /// `scores[q][i] = ⟨g_q, g_i⟩` over `n × k` train and `m × k` query
 /// matrices; returns `m × n`. Both operands are row-major with shared inner
@@ -14,6 +16,65 @@ pub fn graddot_scores(grads: &[f32], n: usize, k: usize, queries: &[f32], m: usi
     let mut scores = vec![0.0f32; m * n];
     matmul_abt(queries, grads, &mut scores, m, k, n);
     scores
+}
+
+/// The GradDot scorer as a stateful [`Attributor`]: `cache` keeps the
+/// compressed train matrix, `attribute` is one `Q · Gᵀ` GEMM.
+pub struct GradDot {
+    k: usize,
+    train: Vec<f32>,
+    n: usize,
+}
+
+impl GradDot {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            train: vec![],
+            n: 0,
+        }
+    }
+}
+
+impl Attributor for GradDot {
+    fn name(&self) -> &'static str {
+        "graddot"
+    }
+
+    fn dim(&self) -> usize {
+        self.k
+    }
+
+    fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
+        if grads.len() != n * self.k {
+            bail!("graddot cache: got {} values for n = {n}, k = {}", grads.len(), self.k);
+        }
+        self.train = grads.to_vec();
+        self.n = n;
+        Ok(())
+    }
+
+    fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
+        if self.n == 0 {
+            bail!("graddot scorer has no cached train set; call cache() first");
+        }
+        Ok(ScoreMatrix::new(
+            graddot_scores(&self.train, self.n, self.k, queries, m),
+            m,
+            self.n,
+        ))
+    }
+
+    fn self_influence(&self) -> Result<Vec<f32>> {
+        if self.n == 0 {
+            bail!("graddot scorer has no cached train set; call cache() first");
+        }
+        Ok(self
+            .train
+            .chunks(self.k)
+            .map(|g| g.iter().map(|v| v * v).sum())
+            .collect())
+    }
 }
 
 #[cfg(test)]

@@ -2,7 +2,8 @@
 //! gradient matrix, with the paper's damping grid search (App. B.2).
 
 use super::fim::{accumulate_fim, Preconditioner};
-use anyhow::Result;
+use super::{Attributor, ScoreMatrix};
+use anyhow::{bail, Result};
 
 /// Candidate damping grid from the paper:
 /// λ ∈ {1e-7, …, 1e-1, 1, 10, 100} (App. B.2).
@@ -10,14 +11,46 @@ pub const DAMPING_GRID: &[f64] = &[
     1e-7, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0,
 ];
 
+/// State installed by the [`Attributor::cache`] stage. Self-influence is
+/// computed eagerly while the raw gradients are still in hand, so only the
+/// preconditioned matrix is retained — at the store module's target scale
+/// (n·k·4 bytes in the hundreds of GB) a second full copy is the
+/// difference between fitting in memory and not.
+struct CachedTrainSet {
+    /// Preconditioned `n × k` matrix `g̃̂ = (F̂+λI)⁻¹ ĝ`.
+    pre: Vec<f32>,
+    /// `τ(z_i, z_i) = ⟨ĝ_i, g̃̂_i⟩` per cached sample.
+    self_inf: Vec<f32>,
+    n: usize,
+}
+
+/// Row-wise `⟨raw_i, pre_i⟩` — the self-influence diagonal (shared with
+/// the blockwise and TRAK engines).
+pub(super) fn rowwise_dot(raw: &[f32], pre: &[f32], n: usize, k: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            raw[i * k..(i + 1) * k]
+                .iter()
+                .zip(&pre[i * k..(i + 1) * k])
+                .map(|(a, b)| a * b)
+                .sum()
+        })
+        .collect()
+}
+
 pub struct InfluenceEngine {
     pub k: usize,
     pub damping: f64,
+    cached: Option<CachedTrainSet>,
 }
 
 impl InfluenceEngine {
     pub fn new(k: usize, damping: f64) -> Self {
-        Self { k, damping }
+        Self {
+            k,
+            damping,
+            cached: None,
+        }
     }
 
     /// Cache stage on an in-memory `n × k` compressed gradient matrix:
@@ -50,6 +83,41 @@ impl InfluenceEngine {
     ) -> Result<Vec<f32>> {
         let pre = self.precondition(grads, n)?;
         Ok(self.scores(&pre, n, queries, m))
+    }
+}
+
+impl Attributor for InfluenceEngine {
+    fn name(&self) -> &'static str {
+        "if"
+    }
+
+    fn dim(&self) -> usize {
+        self.k
+    }
+
+    fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
+        let pre = self.precondition(grads, n)?;
+        let self_inf = rowwise_dot(grads, &pre, n, self.k);
+        self.cached = Some(CachedTrainSet { pre, self_inf, n });
+        Ok(())
+    }
+
+    fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
+        let Some(c) = &self.cached else {
+            bail!("influence engine has no cached train set; call cache() first")
+        };
+        Ok(ScoreMatrix::new(
+            self.scores(&c.pre, c.n, queries, m),
+            m,
+            c.n,
+        ))
+    }
+
+    fn self_influence(&self) -> Result<Vec<f32>> {
+        let Some(c) = &self.cached else {
+            bail!("influence engine has no cached train set; call cache() first")
+        };
+        Ok(c.self_inf.clone())
     }
 }
 

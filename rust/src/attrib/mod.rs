@@ -5,17 +5,367 @@
 //!            precondition `g̃̂ = (F̂+λI)⁻¹ ĝ`;
 //!   attribute — `τ(z_i, z_q) = ⟨ĝ_q, g̃̂_i⟩`.
 //!
+//! Every attribution engine implements the unified [`Attributor`] trait —
+//! `cache` ingests the compressed train gradients (in memory or streamed
+//! from a [`StoreReader`]), `attribute` scores compressed queries, and
+//! `self_influence` reports `τ(z_i, z_i)`. [`from_spec`] is the registry:
+//! it dispatches an [`AttributionSpec`]'s scorer string to the right
+//! engine, so the CLI, coordinator, and experiment harnesses share one
+//! construction path.
+//!
 //! [`fim`] builds and inverts the compressed FIM; [`influence`] is the
 //! monolithic-FIM engine (TRAK-style models); [`blockwise`] is the
 //! layer-wise block-diagonal variant for LMs (§3.3.2); [`trak`] ensembles
-//! checkpoints; [`graddot`] is the cheap surrogate used by Selective Mask.
+//! checkpoints; [`tracin`] weights checkpoint GradDots by learning rate;
+//! [`graddot`] is the cheap surrogate used by Selective Mask.
 
 pub mod blockwise;
-pub mod tracin;
 pub mod fim;
 pub mod graddot;
 pub mod influence;
+pub mod tracin;
 pub mod trak;
 
 pub use fim::Preconditioner;
 pub use influence::InfluenceEngine;
+
+use crate::sketch::MethodSpec;
+use crate::store::{StoreMeta, StoreReader};
+use anyhow::{bail, Result};
+
+/// An `m × n` (queries × train samples) attribution score matrix.
+#[derive(Debug, Clone)]
+pub struct ScoreMatrix {
+    /// Row-major `m × n` scores.
+    pub scores: Vec<f32>,
+    /// Number of query rows.
+    pub m: usize,
+    /// Number of cached train samples.
+    pub n: usize,
+}
+
+impl ScoreMatrix {
+    pub fn new(scores: Vec<f32>, m: usize, n: usize) -> Self {
+        debug_assert_eq!(scores.len(), m * n);
+        Self { scores, m, n }
+    }
+
+    /// Scores of query `q` against every cached sample.
+    pub fn row(&self, q: usize) -> &[f32] {
+        &self.scores[q * self.n..(q + 1) * self.n]
+    }
+
+    /// The `top` most influential train indices for query `q`, best first.
+    pub fn top_k(&self, q: usize, top: usize) -> Vec<(usize, f32)> {
+        let row = self.row(q);
+        let mut order: Vec<usize> = (0..self.n).collect();
+        order.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal));
+        order
+            .into_iter()
+            .take(top)
+            .map(|i| (i, row[i]))
+            .collect()
+    }
+}
+
+/// Declarative description of one attribution task: which scorer runs on
+/// gradients compressed by which method — the spec the registry
+/// ([`from_spec`]), the `grass attribute` CLI, and the store validation all
+/// consume.
+#[derive(Debug, Clone)]
+pub struct AttributionSpec {
+    /// Scorer id: `"if"` (influence), `"graddot"`, `"trak"`, `"tracin"`,
+    /// or `"blockwise"`.
+    pub scorer: String,
+    /// Gradient compression method (defines the projection and `k`).
+    pub method: MethodSpec,
+    /// Projection seed (must match the cache stage).
+    pub seed: u64,
+    /// FIM damping λ for the preconditioned scorers.
+    pub damping: f64,
+    /// Per-layer compressed dims for the blockwise scorer; empty means the
+    /// monolithic layout `[total_dim]`.
+    pub layout: Vec<usize>,
+}
+
+impl AttributionSpec {
+    pub fn new(scorer: &str, method: MethodSpec, seed: u64) -> Self {
+        Self {
+            scorer: scorer.to_string(),
+            method,
+            seed,
+            damping: 1e-3,
+            layout: vec![],
+        }
+    }
+
+    /// Total compressed row width the scorer operates on: the blockwise
+    /// layout sum when present, otherwise the method's nominal dim.
+    pub fn total_dim(&self) -> usize {
+        if self.layout.is_empty() {
+            self.method.output_dim()
+        } else {
+            self.layout.iter().sum()
+        }
+    }
+}
+
+/// A unified attribution engine over compressed gradients (§2.1's
+/// cache→attribute stages behind one object-safe interface).
+///
+/// The contract: call [`Attributor::cache`] (one or more times — ensemble
+/// scorers like TRAK/TracIn treat each call as one checkpoint) and then
+/// [`Attributor::attribute`] / [`Attributor::self_influence`] any number of
+/// times. All matrices are row-major with the engine's fixed inner
+/// dimension [`Attributor::dim`].
+pub trait Attributor {
+    /// Registry id of this scorer (`"if"`, `"graddot"`, …).
+    fn name(&self) -> &'static str;
+
+    /// Compressed row width `k` this engine expects.
+    fn dim(&self) -> usize;
+
+    /// Cache stage: ingest an `n × k` compressed train-gradient matrix and
+    /// build whatever state scoring needs (FIM, preconditioned cache).
+    fn cache(&mut self, grads: &[f32], n: usize) -> Result<()>;
+
+    /// Cache stage streamed from a finished gradient store; returns the
+    /// store's (self-describing) metadata.
+    fn cache_store(&mut self, reader: &StoreReader) -> Result<StoreMeta> {
+        if reader.meta.k != self.dim() {
+            bail!(
+                "store rows have k = {} but the {} scorer was built for k = {}",
+                reader.meta.k,
+                self.name(),
+                self.dim()
+            );
+        }
+        let grads = reader.read_all()?;
+        self.cache(&grads, reader.meta.n)?;
+        Ok(reader.meta.clone())
+    }
+
+    /// Attribute stage: score an `m × k` compressed query matrix against
+    /// the cached train set.
+    fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix>;
+
+    /// Self-influence `τ(z_i, z_i)` of every cached train sample.
+    fn self_influence(&self) -> Result<Vec<f32>>;
+}
+
+/// Registry: build the [`Attributor`] an [`AttributionSpec`] asks for,
+/// dispatching on the scorer string.
+///
+/// Factorized methods require `layout` (the per-layer compressed dims,
+/// e.g. `CompressorBank::layer_dims()`) — a factorized bank's total width
+/// depends on the hooked-layer count, which the method spec alone cannot
+/// know, so building without it would silently size the scorer to one
+/// layer's `k_l`.
+pub fn from_spec(spec: &AttributionSpec) -> Result<Box<dyn Attributor>> {
+    if spec.method.is_factorized() && spec.layout.is_empty() {
+        bail!(
+            "factorized method '{}' needs AttributionSpec::layout (per-layer dims, \
+             e.g. CompressorBank::layer_dims()) to size the scorer",
+            spec.method.spec_string()
+        );
+    }
+    let k = spec.total_dim();
+    Ok(match spec.scorer.as_str() {
+        "if" | "influence" => Box::new(InfluenceEngine::new(k, spec.damping)),
+        "graddot" | "dot" => Box::new(graddot::GradDot::new(k)),
+        "trak" => Box::new(trak::Trak::new(k, spec.damping)),
+        "tracin" => Box::new(tracin::TracIn::new(k)),
+        "blockwise" | "bw" => {
+            let layout = if spec.layout.is_empty() {
+                vec![k]
+            } else {
+                spec.layout.clone()
+            };
+            Box::new(blockwise::BlockwiseEngine::new(
+                blockwise::BlockLayout::new(layout),
+                spec.damping,
+            ))
+        }
+        other => bail!(
+            "unknown scorer '{other}' (expected if|graddot|trak|tracin|blockwise)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    fn gaussian(rows: usize, k: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        (0..rows * k).map(|_| rng.next_gaussian()).collect()
+    }
+
+    fn spec(scorer: &str, k: usize) -> AttributionSpec {
+        let mut s = AttributionSpec::new(scorer, MethodSpec::RandomMask { k }, 0);
+        s.damping = 0.1;
+        s
+    }
+
+    #[test]
+    fn registry_builds_every_scorer_and_rejects_unknown() {
+        for scorer in ["if", "graddot", "trak", "tracin", "blockwise"] {
+            let a = from_spec(&spec(scorer, 6)).unwrap();
+            assert_eq!(a.dim(), 6, "{scorer}");
+        }
+        assert!(from_spec(&spec("bogus", 6)).is_err());
+    }
+
+    #[test]
+    fn factorized_spec_requires_layout() {
+        // A factorized method's total width depends on the layer count, so
+        // the registry refuses to guess it from the per-layer k_l.
+        let fspec = AttributionSpec::new(
+            "if",
+            MethodSpec::FactGrass {
+                k: 16,
+                k_in: 8,
+                k_out: 8,
+                mask: crate::sketch::MaskKind::Random,
+            },
+            0,
+        );
+        assert!(from_spec(&fspec).is_err());
+        let mut ok = fspec.clone();
+        ok.layout = vec![16, 16];
+        assert_eq!(from_spec(&ok).unwrap().dim(), 32);
+    }
+
+    #[test]
+    fn trait_influence_matches_inherent_engine() {
+        let (n, m, k) = (20, 4, 6);
+        let g = gaussian(n, k, 1);
+        let q = gaussian(m, k, 2);
+        let mut a = from_spec(&spec("if", k)).unwrap();
+        a.cache(&g, n).unwrap();
+        let s = a.attribute(&q, m).unwrap();
+        assert_eq!((s.m, s.n), (m, n));
+        let want = InfluenceEngine::new(k, 0.1).attribute(&g, n, &q, m).unwrap();
+        for i in 0..m * n {
+            assert!((s.scores[i] - want[i]).abs() < 1e-5, "at {i}");
+        }
+        // self-influence of a PD preconditioner is positive
+        let si = a.self_influence().unwrap();
+        assert_eq!(si.len(), n);
+        assert!(si.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn trait_graddot_matches_free_function() {
+        let (n, m, k) = (12, 3, 5);
+        let g = gaussian(n, k, 3);
+        let q = gaussian(m, k, 4);
+        let mut a = from_spec(&spec("graddot", k)).unwrap();
+        a.cache(&g, n).unwrap();
+        let s = a.attribute(&q, m).unwrap();
+        let want = graddot::graddot_scores(&g, n, k, &q, m);
+        assert_eq!(s.scores, want);
+        let si = a.self_influence().unwrap();
+        for i in 0..n {
+            let norm2: f32 = g[i * k..(i + 1) * k].iter().map(|v| v * v).sum();
+            assert!((si[i] - norm2).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn trait_trak_averages_checkpoints() {
+        let (n, m, k) = (10, 2, 4);
+        let g1 = gaussian(n, k, 5);
+        let g2 = gaussian(n, k, 6);
+        let q = gaussian(m, k, 7);
+        let mut ens = from_spec(&spec("trak", k)).unwrap();
+        ens.cache(&g1, n).unwrap();
+        ens.cache(&g2, n).unwrap();
+        let s = ens.attribute(&q, m).unwrap();
+        let engine = InfluenceEngine::new(k, 0.1);
+        let s1 = engine.attribute(&g1, n, &q, m).unwrap();
+        let s2 = engine.attribute(&g2, n, &q, m).unwrap();
+        for i in 0..m * n {
+            let want = (s1[i] + s2[i]) / 2.0;
+            assert!((s.scores[i] - want).abs() < 1e-4, "at {i}");
+        }
+    }
+
+    #[test]
+    fn trait_tracin_sums_checkpoint_graddots() {
+        let (n, m, k) = (8, 2, 3);
+        let g1 = gaussian(n, k, 8);
+        let g2 = gaussian(n, k, 9);
+        let q = gaussian(m, k, 10);
+        let mut t = tracin::TracIn::with_lrs(k, vec![1.0, 0.5]);
+        Attributor::cache(&mut t, &g1, n).unwrap();
+        Attributor::cache(&mut t, &g2, n).unwrap();
+        let s = Attributor::attribute(&t, &q, m).unwrap();
+        let s1 = graddot::graddot_scores(&g1, n, k, &q, m);
+        let s2 = graddot::graddot_scores(&g2, n, k, &q, m);
+        for i in 0..m * n {
+            let want = s1[i] + 0.5 * s2[i];
+            assert!((s.scores[i] - want).abs() < 1e-4, "at {i}");
+        }
+    }
+
+    #[test]
+    fn trait_blockwise_single_block_matches_influence() {
+        let (n, m, k) = (14, 3, 6);
+        let g = gaussian(n, k, 11);
+        let q = gaussian(m, k, 12);
+        let mut bw = from_spec(&spec("blockwise", k)).unwrap();
+        bw.cache(&g, n).unwrap();
+        let s = bw.attribute(&q, m).unwrap();
+        let want = InfluenceEngine::new(k, 0.1).attribute(&g, n, &q, m).unwrap();
+        for i in 0..m * n {
+            assert!((s.scores[i] - want[i]).abs() < 1e-4, "at {i}");
+        }
+        assert!(bw.self_influence().unwrap().iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn attribute_before_cache_is_a_descriptive_error() {
+        for scorer in ["if", "graddot", "trak", "tracin", "blockwise"] {
+            let a = from_spec(&spec(scorer, 4)).unwrap();
+            let err = a.attribute(&[0.0; 4], 1);
+            assert!(err.is_err(), "{scorer} scored with an empty cache");
+            assert!(a.self_influence().is_err(), "{scorer}");
+        }
+    }
+
+    #[test]
+    fn score_matrix_top_k_orders_descending() {
+        let s = ScoreMatrix::new(vec![0.1, 3.0, -1.0, 2.0], 1, 4);
+        let top = s.top_k(0, 2);
+        assert_eq!(top[0].0, 1);
+        assert_eq!(top[1].0, 3);
+        assert_eq!(s.row(0).len(), 4);
+    }
+
+    #[test]
+    fn cache_store_roundtrip_and_width_check() {
+        let dir = std::env::temp_dir().join(format!("grass_attrib_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (n, k) = (6, 4);
+        let g = gaussian(n, k, 13);
+        let mut w = crate::store::StoreWriter::create(&dir, k, "rm:k=4", 0, 100).unwrap();
+        w.push_batch(&g).unwrap();
+        w.finish().unwrap();
+        let reader = crate::store::StoreReader::open(&dir).unwrap();
+        let mut a = from_spec(&spec("graddot", k)).unwrap();
+        let meta = a.cache_store(&reader).unwrap();
+        assert_eq!(meta.n, n);
+        let s = a.attribute(&g, n).unwrap();
+        // self-scores on the diagonal equal the norms
+        let si = a.self_influence().unwrap();
+        for i in 0..n {
+            assert!((s.scores[i * n + i] - si[i]).abs() < 1e-4);
+        }
+        // wrong-width scorer is rejected before reading shards
+        let mut wrong = from_spec(&spec("graddot", k + 1)).unwrap();
+        assert!(wrong.cache_store(&reader).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -6,6 +6,8 @@
 //! compressed checkpoint gradients drop in unchanged.
 
 use super::graddot::graddot_scores;
+use super::{Attributor, ScoreMatrix};
+use anyhow::{bail, Result};
 
 /// One checkpoint's compressed gradients plus its learning rate.
 pub struct TracinCheckpoint {
@@ -35,6 +37,101 @@ pub fn tracin_scores(
         }
     }
     total.into_iter().map(|v| v as f32).collect()
+}
+
+/// TracIn as a stateful [`Attributor`]: every [`Attributor::cache`] call
+/// adds one checkpoint's compressed train gradients, consuming the next
+/// learning rate from the schedule (1.0 once the schedule is exhausted),
+/// and [`Attributor::attribute`] sums the lr-weighted GradDots.
+pub struct TracIn {
+    k: usize,
+    /// Learning-rate schedule consumed checkpoint-by-checkpoint.
+    lrs: Vec<f32>,
+    checkpoints: Vec<(Vec<f32>, f32)>,
+    n: usize,
+}
+
+impl TracIn {
+    /// Uniform unit learning rates — a plain sum of checkpoint GradDots.
+    pub fn new(k: usize) -> Self {
+        Self::with_lrs(k, vec![])
+    }
+
+    /// Explicit learning-rate schedule (`lrs[c]` weights the c-th cached
+    /// checkpoint; missing entries default to 1.0).
+    pub fn with_lrs(k: usize, lrs: Vec<f32>) -> Self {
+        Self {
+            k,
+            lrs,
+            checkpoints: vec![],
+            n: 0,
+        }
+    }
+}
+
+impl Attributor for TracIn {
+    fn name(&self) -> &'static str {
+        "tracin"
+    }
+
+    fn dim(&self) -> usize {
+        self.k
+    }
+
+    fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
+        if !self.checkpoints.is_empty() && n != self.n {
+            bail!(
+                "tracin checkpoint has n = {n} train rows, previous checkpoints had {}",
+                self.n
+            );
+        }
+        if grads.len() != n * self.k {
+            bail!("tracin cache: got {} values for n = {n}, k = {}", grads.len(), self.k);
+        }
+        let lr = self.lrs.get(self.checkpoints.len()).copied().unwrap_or(1.0);
+        self.checkpoints.push((grads.to_vec(), lr));
+        self.n = n;
+        Ok(())
+    }
+
+    fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
+        if self.checkpoints.is_empty() {
+            bail!("tracin scorer has no cached checkpoints; call cache() first");
+        }
+        let n = self.n;
+        let mut total = vec![0.0f64; m * n];
+        for (train, lr) in &self.checkpoints {
+            let s = graddot_scores(train, n, self.k, queries, m);
+            for (t, &v) in total.iter_mut().zip(&s) {
+                *t += (*lr * v) as f64;
+            }
+        }
+        Ok(ScoreMatrix::new(
+            total.into_iter().map(|v| v as f32).collect(),
+            m,
+            n,
+        ))
+    }
+
+    fn self_influence(&self) -> Result<Vec<f32>> {
+        if self.checkpoints.is_empty() {
+            bail!("tracin scorer has no cached checkpoints; call cache() first");
+        }
+        let k = self.k;
+        Ok((0..self.n)
+            .map(|i| {
+                self.checkpoints
+                    .iter()
+                    .map(|(train, lr)| {
+                        lr * train[i * k..(i + 1) * k]
+                            .iter()
+                            .map(|v| v * v)
+                            .sum::<f32>()
+                    })
+                    .sum()
+            })
+            .collect())
+    }
 }
 
 #[cfg(test)]

@@ -4,7 +4,8 @@
 //! uses 10/10/5 checkpoints for MLP/ResNet9/MusicTransformer (App. B.2).
 
 use super::influence::InfluenceEngine;
-use anyhow::Result;
+use super::{Attributor, ScoreMatrix};
+use anyhow::{bail, Result};
 
 /// One checkpoint's compressed gradients (train + query share a seed so
 /// the projection matches).
@@ -33,6 +34,94 @@ pub fn trak_scores(
     }
     let c = checkpoints.len() as f64;
     Ok(total.into_iter().map(|v| (v / c) as f32).collect())
+}
+
+/// TRAK as a stateful [`Attributor`]: every [`Attributor::cache`] call adds
+/// one checkpoint's compressed train gradients (preconditioned on ingest),
+/// and [`Attributor::attribute`] averages the per-checkpoint influence
+/// scores. With a single cached checkpoint this reduces exactly to
+/// [`InfluenceEngine`].
+pub struct Trak {
+    k: usize,
+    damping: f64,
+    /// Per-checkpoint (preconditioned matrix, self-influence diagonal);
+    /// the raw gradients are not retained — self-influence is computed on
+    /// ingest while they are still in hand.
+    checkpoints: Vec<(Vec<f32>, Vec<f32>)>,
+    n: usize,
+}
+
+impl Trak {
+    pub fn new(k: usize, damping: f64) -> Self {
+        Self {
+            k,
+            damping,
+            checkpoints: vec![],
+            n: 0,
+        }
+    }
+}
+
+impl Attributor for Trak {
+    fn name(&self) -> &'static str {
+        "trak"
+    }
+
+    fn dim(&self) -> usize {
+        self.k
+    }
+
+    fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
+        if !self.checkpoints.is_empty() && n != self.n {
+            bail!(
+                "trak checkpoint has n = {n} train rows, previous checkpoints had {}",
+                self.n
+            );
+        }
+        let engine = InfluenceEngine::new(self.k, self.damping);
+        let pre = engine.precondition(grads, n)?;
+        let self_inf = super::influence::rowwise_dot(grads, &pre, n, self.k);
+        self.checkpoints.push((pre, self_inf));
+        self.n = n;
+        Ok(())
+    }
+
+    fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
+        if self.checkpoints.is_empty() {
+            bail!("trak scorer has no cached checkpoints; call cache() first");
+        }
+        let n = self.n;
+        let mut total = vec![0.0f64; m * n];
+        for (pre, _) in &self.checkpoints {
+            let s = super::graddot::graddot_scores(pre, n, self.k, queries, m);
+            for (t, &v) in total.iter_mut().zip(&s) {
+                *t += v as f64;
+            }
+        }
+        let c = self.checkpoints.len() as f64;
+        Ok(ScoreMatrix::new(
+            total.into_iter().map(|v| (v / c) as f32).collect(),
+            m,
+            n,
+        ))
+    }
+
+    fn self_influence(&self) -> Result<Vec<f32>> {
+        if self.checkpoints.is_empty() {
+            bail!("trak scorer has no cached checkpoints; call cache() first");
+        }
+        let c = self.checkpoints.len() as f64;
+        Ok((0..self.n)
+            .map(|i| {
+                let sum: f64 = self
+                    .checkpoints
+                    .iter()
+                    .map(|(_, si)| si[i] as f64)
+                    .sum();
+                (sum / c) as f32
+            })
+            .collect())
+    }
 }
 
 #[cfg(test)]

@@ -6,6 +6,8 @@ use crate::runtime::{Arg, Executable, Runtime};
 use crate::sketch::{Compressor, FactorizedCompressor, Scratch};
 use crate::store::{StoreMeta, StoreWriter};
 use anyhow::{anyhow, Result};
+
+pub use crate::sketch::CompressorBank;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -46,22 +48,6 @@ enum GradBatch {
     },
 }
 
-/// Which compressors the compress stage applies.
-pub enum CompressorBank {
-    Flat(Box<dyn Compressor>),
-    /// One factorized compressor per hooked layer; outputs concatenate.
-    Factored(Vec<Box<dyn FactorizedCompressor>>),
-}
-
-impl CompressorBank {
-    pub fn output_dim(&self) -> usize {
-        match self {
-            CompressorBank::Flat(c) => c.output_dim(),
-            CompressorBank::Factored(cs) => cs.iter().map(|c| c.output_dim()).sum(),
-        }
-    }
-}
-
 /// Data source for the batcher.
 pub enum Source<'a> {
     Labelled(&'a Labelled),
@@ -94,6 +80,24 @@ impl<'a> CachePipeline<'a> {
             params,
             cfg,
             metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    /// Run the cache stage through whichever gradient source the bank
+    /// calls for: flat per-sample gradients for a flat bank, LoGra hooks
+    /// for a factorized one.
+    pub fn run(
+        &self,
+        data: &Source,
+        bank: &CompressorBank,
+        store_dir: &std::path::Path,
+        method: &str,
+        seed: u64,
+    ) -> Result<StoreMeta> {
+        if bank.is_factored() {
+            self.run_factored(data, bank, store_dir, method, seed)
+        } else {
+            self.run_flat(data, bank, store_dir, method, seed)
         }
     }
 
@@ -143,12 +147,26 @@ impl<'a> CachePipeline<'a> {
         let p = self.rt.manifest.model(&self.model)?.p;
         let meta = self.rt.manifest.model(&self.model)?.clone();
         let metrics = self.metrics.clone();
-        let writer = Mutex::new(StoreWriter::create(
+        // Self-describing store metadata: record the model and gradient
+        // geometry alongside the spec string so the attribute stage can
+        // rebuild the exact compressor bank (and `open_checked` can reject
+        // mismatched readers).
+        let writer = Mutex::new(StoreWriter::create_described(
             store_dir,
-            k,
-            method,
-            seed,
-            self.cfg.shard_rows,
+            StoreMeta {
+                k,
+                n: 0,
+                shard_rows: self.cfg.shard_rows,
+                method: method.to_string(),
+                seed,
+                model: self.model.clone(),
+                input_dim: if factored { 0 } else { p },
+                layer_dims: if factored {
+                    meta.layers.iter().map(|l| (l.d_in, l.d_out)).collect()
+                } else {
+                    vec![]
+                },
+            },
         )?);
         let seq = meta.seq.unwrap_or(1);
 
@@ -279,8 +297,8 @@ impl<'a> CachePipeline<'a> {
                         let t0 = Instant::now();
                         let (first, count, rows) = match gb {
                             GradBatch::Flat { first, rows, count } => {
-                                let c = match bank {
-                                    CompressorBank::Flat(c) => c,
+                                let c: &dyn Compressor = match bank {
+                                    CompressorBank::Flat(c) => c.as_ref(),
                                     _ => unreachable!("flat batch with factored bank"),
                                 };
                                 let mut out = vec![0.0f32; count * k];
@@ -298,7 +316,7 @@ impl<'a> CachePipeline<'a> {
                                 seq,
                                 layers,
                             } => {
-                                let cs = match bank {
+                                let cs: &[Box<dyn FactorizedCompressor>] = match bank {
                                     CompressorBank::Factored(cs) => cs,
                                     _ => unreachable!("factored batch with flat bank"),
                                 };

@@ -8,9 +8,11 @@
 
 pub mod corpus;
 pub mod images;
+pub mod synthgrad;
 
 pub use corpus::{MusicEvents, ThemedCorpus};
 pub use images::{SynthCifar2, SynthDigits};
+pub use synthgrad::{SynthGrads, SynthHooks};
 
 /// A labelled dataset of flat feature vectors.
 #[derive(Debug, Clone)]

@@ -1,0 +1,209 @@
+//! Deterministic synthetic gradient substrate — the runtime-free source
+//! behind `grass cache`/`grass attribute` smoke runs when no PJRT
+//! artifacts are compiled (CI, fresh checkouts).
+//!
+//! Per-sample "gradients" are class template + noise: sample `i` of class
+//! `c = i mod classes` draws `g_i = t_c + σ·ε_i` with a fixed per-class
+//! template `t_c`. Same-class samples therefore have strongly correlated
+//! gradients, so attribution scores computed on the synthetic store carry
+//! real class-level signal (top-influence rows share the query's class) —
+//! enough structure for an end-to-end cache → attribute smoke to assert
+//! on, with no model execution anywhere.
+//!
+//! Everything is derived by counter-based hashing
+//! ([`crate::sketch::rng::hash3`]) from `(seed, stream kind, index)`, so
+//! any sample or query can be regenerated in isolation at attribute time —
+//! the store only needs to record the seed. The kind goes through the full
+//! mixer (never an additive salt), so the template/train/query streams
+//! cannot alias at shifted indices.
+
+use crate::sketch::rng::{hash2, hash3, Pcg};
+
+/// Model name recorded in store metadata for synthetic caches.
+pub const SYNTH_MODEL: &str = "synth";
+
+/// Number of gradient classes the generator plants.
+pub const SYNTH_CLASSES: usize = 8;
+
+/// Noise scale relative to the unit-scale class template.
+const NOISE: f32 = 0.5;
+
+/// Stream kinds: templates, train-sample noise, query noise.
+const KIND_TEMPLATE: u64 = 0x7E3B_1A01;
+const KIND_TRAIN: u64 = 0x7E3B_1A02;
+const KIND_QUERY: u64 = 0x7E3B_1A03;
+
+/// Flat synthetic per-sample gradients of dimension `p`.
+#[derive(Debug, Clone)]
+pub struct SynthGrads {
+    pub p: usize,
+    pub seed: u64,
+}
+
+impl SynthGrads {
+    pub fn new(p: usize, seed: u64) -> Self {
+        assert!(p > 0, "need a positive gradient dimension");
+        Self { p, seed }
+    }
+
+    fn template(&self, class: usize, out: &mut [f32]) {
+        let mut rng = Pcg::new(hash3(self.seed, KIND_TEMPLATE, class as u64));
+        for v in out.iter_mut() {
+            *v = rng.next_gaussian();
+        }
+    }
+
+    fn fill(&self, class: usize, noise_stream: u64, out: &mut [f32]) {
+        self.template(class, out);
+        let mut rng = Pcg::new(noise_stream);
+        for v in out.iter_mut() {
+            *v += NOISE * rng.next_gaussian();
+        }
+    }
+
+    /// Class label of train sample `i`.
+    pub fn class(&self, i: usize) -> usize {
+        i % SYNTH_CLASSES
+    }
+
+    /// Train sample `i`'s gradient.
+    pub fn row(&self, i: usize) -> Vec<f32> {
+        let mut g = vec![0.0f32; self.p];
+        self.fill(self.class(i), hash3(self.seed, KIND_TRAIN, i as u64), &mut g);
+        g
+    }
+
+    /// Contiguous `count × p` block starting at train index `start`.
+    pub fn rows(&self, start: usize, count: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; count * self.p];
+        for (off, chunk) in out.chunks_mut(self.p).enumerate() {
+            let i = start + off;
+            self.fill(self.class(i), hash3(self.seed, KIND_TRAIN, i as u64), chunk);
+        }
+        out
+    }
+
+    /// Query `q`'s gradient (distinct noise stream from every train
+    /// sample) and its class label `q mod classes`.
+    pub fn query(&self, q: usize) -> (Vec<f32>, usize) {
+        let class = q % SYNTH_CLASSES;
+        let mut g = vec![0.0f32; self.p];
+        self.fill(class, hash3(self.seed, KIND_QUERY, q as u64), &mut g);
+        (g, class)
+    }
+
+    /// Contiguous `count × p` query block starting at query index 0.
+    pub fn queries(&self, count: usize) -> (Vec<f32>, Vec<usize>) {
+        let mut out = vec![0.0f32; count * self.p];
+        let mut classes = Vec::with_capacity(count);
+        for (q, chunk) in out.chunks_mut(self.p).enumerate() {
+            let class = q % SYNTH_CLASSES;
+            self.fill(class, hash3(self.seed, KIND_QUERY, q as u64), chunk);
+            classes.push(class);
+        }
+        (out, classes)
+    }
+}
+
+/// Default hooked-layer geometry for factorized synthetic caches.
+pub fn default_synth_layers() -> Vec<(usize, usize)> {
+    vec![(96, 64), (64, 96)]
+}
+
+/// Timesteps per synthetic hook sample.
+pub const SYNTH_SEQ: usize = 4;
+
+/// Factorized synthetic hooks: per-layer `(x: T×d_in, dy: T×d_out)` pairs
+/// with the same class-template structure as [`SynthGrads`].
+#[derive(Debug, Clone)]
+pub struct SynthHooks {
+    pub layers: Vec<(usize, usize)>,
+    pub seed: u64,
+}
+
+impl SynthHooks {
+    pub fn new(layers: Vec<(usize, usize)>, seed: u64) -> Self {
+        assert!(!layers.is_empty(), "need at least one hooked layer");
+        Self { layers, seed }
+    }
+
+    pub fn class(&self, i: usize) -> usize {
+        i % SYNTH_CLASSES
+    }
+
+    fn sample_with(&self, class: usize, noise_root: u64) -> Vec<(Vec<f32>, Vec<f32>)> {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(li, &(d_in, d_out))| {
+                let flat = SynthGrads::new(SYNTH_SEQ * (d_in + d_out), hash2(self.seed, li as u64));
+                let mut buf = vec![0.0f32; SYNTH_SEQ * (d_in + d_out)];
+                flat.fill(class, hash2(noise_root, li as u64), &mut buf);
+                let dy = buf.split_off(SYNTH_SEQ * d_in);
+                (buf, dy)
+            })
+            .collect()
+    }
+
+    /// Train sample `i`'s per-layer hooks.
+    pub fn sample(&self, i: usize) -> Vec<(Vec<f32>, Vec<f32>)> {
+        self.sample_with(self.class(i), hash3(self.seed, KIND_TRAIN, i as u64))
+    }
+
+    /// Query `q`'s per-layer hooks and class label.
+    pub fn query(&self, q: usize) -> (Vec<(Vec<f32>, Vec<f32>)>, usize) {
+        let class = q % SYNTH_CLASSES;
+        (
+            self.sample_with(class, hash3(self.seed, KIND_QUERY, q as u64)),
+            class,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_index_addressable() {
+        let g = SynthGrads::new(64, 7);
+        assert_eq!(g.row(5), g.row(5));
+        let block = g.rows(3, 4);
+        assert_eq!(&block[64..128], g.row(4).as_slice());
+        let (q0, c0) = g.query(0);
+        assert_eq!(c0, 0);
+        assert_ne!(q0, g.row(0), "query stream must differ from train stream");
+        let (qs, classes) = g.queries(3);
+        assert_eq!(&qs[64..128], g.query(1).0.as_slice());
+        assert_eq!(classes, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn same_class_rows_correlate_more_than_cross_class() {
+        let g = SynthGrads::new(256, 11);
+        let dot = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+        // samples 0 and 8 share class 0; sample 1 is class 1
+        let (a, b, c) = (g.row(0), g.row(SYNTH_CLASSES), g.row(1));
+        assert!(
+            dot(&a, &b) > dot(&a, &c),
+            "planted class structure missing: {} vs {}",
+            dot(&a, &b),
+            dot(&a, &c)
+        );
+    }
+
+    #[test]
+    fn hooks_shapes_and_determinism() {
+        let h = SynthHooks::new(vec![(24, 16), (16, 8)], 3);
+        let s = h.sample(2);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].0.len(), SYNTH_SEQ * 24);
+        assert_eq!(s[0].1.len(), SYNTH_SEQ * 16);
+        assert_eq!(s[1].0.len(), SYNTH_SEQ * 16);
+        assert_eq!(s[1].1.len(), SYNTH_SEQ * 8);
+        assert_eq!(h.sample(2), h.sample(2));
+        let (q, class) = h.query(1);
+        assert_eq!(class, 1);
+        assert_eq!(q[0].0.len(), SYNTH_SEQ * 24);
+    }
+}

@@ -12,10 +12,10 @@
 use super::report::Table;
 use crate::attrib::graddot::graddot_scores;
 use crate::linalg::stats::spearman;
+use crate::models::shapes::ModelShapes;
 use crate::sketch::rng::Pcg;
 use crate::sketch::{
-    factgrass::FactGrass, grass::Grass, logra::LoGra, sjlt::Sjlt, Compressor,
-    FactorizedCompressor, MaskKind,
+    grass::Grass, sjlt::Sjlt, Compressor, FactorizedCompressor, MaskKind, MethodSpec,
 };
 use crate::util::bench;
 use anyhow::Result;
@@ -114,7 +114,20 @@ pub fn run_factgrass_blowup(out_json: Option<&str>) -> Result<Table> {
         ),
         &["method", "c = k'/k", "time/sample"],
     );
-    let lg = LoGra::new(d_in, d_out, k_side, k_side, 1);
+    // Single-layer banks through the declarative spec (the only factorized
+    // construction path).
+    let layer = ModelShapes::single(d_in, d_out);
+    let build = |spec: MethodSpec| -> Box<dyn FactorizedCompressor> {
+        spec.build_bank(&layer, 2)
+            .expect("ablation bank construction")
+            .into_factored()
+            .expect("factorized spec builds a factored bank")
+            .remove(0)
+    };
+    let lg = build(MethodSpec::LoGra {
+        k_in: k_side,
+        k_out: k_side,
+    });
     let mut out = vec![0.0f32; kl];
     let r = bench::bench_with_budget("logra", Duration::from_millis(120), || {
         lg.compress_into(t, &x, &dy, &mut out)
@@ -126,7 +139,12 @@ pub fn run_factgrass_blowup(out_json: Option<&str>) -> Result<Table> {
     ]);
     for mult in [1usize, 2, 4, 8, 16, 32] {
         let side = (mult * k_side).min(d_in);
-        let fg = FactGrass::new(d_in, d_out, side, side, kl, MaskKind::Random, 2);
+        let fg = build(MethodSpec::FactGrass {
+            k: kl,
+            k_in: side,
+            k_out: side,
+            mask: MaskKind::Random,
+        });
         let c = (side * side) as f64 / kl as f64;
         let r = bench::bench_with_budget("fg", Duration::from_millis(120), || {
             fg.compress_into(t, &x, &dy, &mut out)

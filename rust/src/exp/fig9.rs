@@ -12,7 +12,7 @@ use crate::data::corpus::{ThemedCorpus, THEMES};
 use crate::data::Sequences;
 use crate::eval::retrain::{TaskData, Trainer};
 use crate::runtime::Runtime;
-use crate::sketch::{factgrass::FactGrass, FactorizedCompressor, MaskKind};
+use crate::sketch::{MaskKind, MethodSpec};
 use anyhow::Result;
 
 pub struct Fig9Outcome {
@@ -51,29 +51,22 @@ pub fn run(rt: &Runtime, cfg: &ExpConfig, kl: usize) -> Result<Fig9Outcome> {
         tags: vec![query_theme as u32],
     };
 
-    // FactGraSS compression of train + query hooks.
+    // FactGraSS compression of train + query hooks, constructed through
+    // the declarative spec (one bank, shared by both sides).
     let hooks_train = collect_hooks(rt, model, &params, &train, &all)?;
     let hooks_q = collect_hooks(rt, model, &params, &queries, &[0])?;
     let k_side = (kl as f64).sqrt() as usize;
-    let banks: Vec<Box<dyn FactorizedCompressor>> = meta
-        .layers
-        .iter()
-        .enumerate()
-        .map(|(li, lm)| -> Box<dyn FactorizedCompressor> {
-            Box::new(FactGrass::new(
-                lm.d_in,
-                lm.d_out,
-                (2 * k_side).min(lm.d_in),
-                (2 * k_side).min(lm.d_out),
-                kl,
-                MaskKind::Random,
-                400 + li as u64,
-            ))
-        })
-        .collect();
-    let dims: Vec<usize> = banks.iter().map(|b| b.output_dim()).collect();
-    let (ctr, _) = compress_hooks(&hooks_train, &banks);
-    let (cq, _) = compress_hooks(&hooks_q, &banks);
+    let spec = MethodSpec::FactGrass {
+        k: kl,
+        k_in: 2 * k_side,
+        k_out: 2 * k_side,
+        mask: MaskKind::Random,
+    };
+    let bank = spec.build_bank(&meta.shapes(), cfg.seed ^ 0x400)?;
+    let banks = bank.as_factored().expect("factorized spec builds a factored bank");
+    let dims = bank.layer_dims();
+    let (ctr, _) = compress_hooks(&hooks_train, banks);
+    let (cq, _) = compress_hooks(&hooks_q, banks);
 
     let engine = BlockwiseEngine::new(BlockLayout::new(dims), 1e-3);
     let scores = engine.attribute(&ctr, train.n, &cq, 1)?;

@@ -21,13 +21,9 @@ use crate::eval::retrain::{TaskData, Trainer};
 use crate::eval::{lds_score, sample_subsets};
 use crate::runtime::{Arg, Runtime};
 use crate::sketch::selective::{
-    train_factorized_selective_mask, train_selective_mask, SelectiveMaskConfig,
+    train_factorized_selective_mask, train_selective_mask, SelectiveMaskConfig, TrainedMask,
 };
-use crate::sketch::{
-    factgrass::{FactGrass, FactMask, FactSjlt},
-    logra::LoGra,
-    Compressor, FactorizedCompressor, MaskKind, MethodSpec,
-};
+use crate::sketch::{Compressor, FactorizedCompressor, MaskKind, MethodSpec};
 use anyhow::Result;
 use std::time::Instant;
 
@@ -203,8 +199,9 @@ pub fn run_trak_table(
     // compressed[method] -> per checkpoint (train, test)
     let mut compressed: Vec<Vec<(Vec<f32>, Vec<f32>)>> = vec![vec![]; methods.len()];
     let mut times = vec![0.0f64; methods.len()];
-    // Selective masks are trained once on the first checkpoint's gradients.
-    let mut sm_masks: std::collections::BTreeMap<usize, Vec<u32>> = Default::default();
+    // Selective scores are trained once on the first checkpoint's gradients;
+    // `MethodSpec::build_with_scores` extracts the per-k top-k masks.
+    let mut sm_scores: Option<TrainedMask> = None;
 
     for ck in 0..cfg.checkpoints {
         eprintln!("[{title}] checkpoint {}/{}", ck + 1, cfg.checkpoints);
@@ -221,33 +218,27 @@ pub fn run_trak_table(
         let g_test = trainer.grads(&params, test, &all_test)?;
 
         if ck == 0 {
-            // Train SM masks per k (on a gradient subsample, paper §3.2).
+            // Train SM scores once (on a gradient subsample, paper §3.2);
+            // every per-k mask is a top-k extraction of the same scores.
             let sub_n = n.min(96);
             let sub_m = m.min(8);
-            for &k in &cfg.ks {
-                let tm = train_selective_mask(
-                    &g_train[..sub_n * p],
-                    &g_test[..sub_m * p],
-                    sub_n,
-                    sub_m,
-                    p,
-                    &SelectiveMaskConfig {
-                        steps: 25,
-                        seed: cfg.seed,
-                        ..Default::default()
-                    },
-                );
-                sm_masks.insert(k, tm.top_k_indices(k));
-            }
+            sm_scores = Some(train_selective_mask(
+                &g_train[..sub_n * p],
+                &g_test[..sub_m * p],
+                sub_n,
+                sub_m,
+                p,
+                &SelectiveMaskConfig {
+                    steps: 25,
+                    seed: cfg.seed,
+                    ..Default::default()
+                },
+            ));
         }
 
+        let scores = &sm_scores.as_ref().expect("trained on checkpoint 0").scores;
         for (mi, (_, spec)) in methods.iter().enumerate() {
-            let c: Box<dyn Compressor> = match spec {
-                MethodSpec::SelectiveMask { k } => Box::new(
-                    crate::sketch::mask::RandomMask::from_indices(p, sm_masks[k].clone(), None),
-                ),
-                other => other.build(p, cfg.seed ^ 0x7A8),
-            };
+            let c: Box<dyn Compressor> = spec.build_with_scores(p, cfg.seed ^ 0x7A8, scores);
             let k = c.output_dim();
             let t0 = Instant::now();
             let mut ctr = vec![0.0f32; n * k];
@@ -467,11 +458,13 @@ pub fn run_table1d(rt: &Runtime, cfg: &ExpConfig) -> Result<Table> {
     );
 
     // Per-layer k_l values (paper: k_l ∈ {256, 1024, 4096} at d=768 scale;
-    // ours scale to d=128).
+    // ours scale to d=128). All construction goes through
+    // `MethodSpec::build_bank(_masked)` — the declarative specs below are
+    // the whole method lineup.
+    let shapes = meta.shapes();
     for &kl in &cfg.ks {
         let k_side = (kl as f64).sqrt() as usize;
         assert_eq!(k_side * k_side, kl, "k_l must be a perfect square");
-        type BankBuilder<'a> = Box<dyn Fn(usize, usize, usize) -> Box<dyn FactorizedCompressor> + 'a>;
         // SM masks per layer trained on pooled hooks (factorized Eq. 1).
         let sub_n = n.min(64);
         let sub_m = m.min(8);
@@ -499,63 +492,61 @@ pub fn run_table1d(rt: &Runtime, cfg: &ExpConfig) -> Result<Table> {
             })
             .collect();
 
-        let methods: Vec<(String, BankBuilder)> = vec![
+        // (display name, declarative spec, optional trained factor masks)
+        type MethodRow<'a> = (String, MethodSpec, Option<&'a [(Vec<u32>, Vec<u32>)]>);
+        let methods: Vec<MethodRow> = vec![
             (
                 format!("RM_{k_side}⊗{k_side}"),
-                Box::new(move |d_in, d_out, li| {
-                    Box::new(FactMask::new(d_in, d_out, k_side, k_side, 31 + li as u64))
-                }),
+                MethodSpec::FactMask {
+                    k_in: k_side,
+                    k_out: k_side,
+                    mask: MaskKind::Random,
+                },
+                None,
             ),
             (
                 format!("SM_{k_side}⊗{k_side}"),
-                Box::new(|d_in, d_out, li| {
-                    let (mi, mo) = &sm_masks[li];
-                    Box::new(FactMask::with_masks(
-                        d_in,
-                        d_out,
-                        crate::sketch::mask::RandomMask::from_indices(d_in, mi.clone(), None),
-                        crate::sketch::mask::RandomMask::from_indices(d_out, mo.clone(), None),
-                    ))
-                }),
+                MethodSpec::FactMask {
+                    k_in: k_side,
+                    k_out: k_side,
+                    mask: MaskKind::Selective,
+                },
+                Some(&sm_masks),
             ),
             (
                 format!("SJLT_{k_side}⊗{k_side}"),
-                Box::new(move |d_in, d_out, li| {
-                    Box::new(FactSjlt::new(d_in, d_out, k_side, k_side, 57 + li as u64))
-                }),
+                MethodSpec::FactSjlt {
+                    k_in: k_side,
+                    k_out: k_side,
+                },
+                None,
             ),
             (
                 format!("FactGraSS[SJLT_{kl}∘RM_{}⊗{}]", 2 * k_side, 2 * k_side),
-                Box::new(move |d_in, d_out, li| {
-                    Box::new(FactGrass::new(
-                        d_in,
-                        d_out,
-                        (2 * k_side).min(d_in),
-                        (2 * k_side).min(d_out),
-                        kl,
-                        MaskKind::Random,
-                        71 + li as u64,
-                    ))
-                }),
+                MethodSpec::FactGrass {
+                    k: kl,
+                    k_in: 2 * k_side,
+                    k_out: 2 * k_side,
+                    mask: MaskKind::Random,
+                },
+                None,
             ),
             (
                 format!("LoGra[GAUSS_{k_side}⊗{k_side}]"),
-                Box::new(move |d_in, d_out, li| {
-                    Box::new(LoGra::new(d_in, d_out, k_side, k_side, 93 + li as u64))
-                }),
+                MethodSpec::LoGra {
+                    k_in: k_side,
+                    k_out: k_side,
+                },
+                None,
             ),
         ];
 
-        for (name, build) in &methods {
-            let banks: Vec<Box<dyn FactorizedCompressor>> = meta
-                .layers
-                .iter()
-                .enumerate()
-                .map(|(li, lm)| build(lm.d_in, lm.d_out, li))
-                .collect();
-            let dims: Vec<usize> = banks.iter().map(|b| b.output_dim()).collect();
-            let (ctr, t1) = compress_hooks(&hooks_train, &banks);
-            let (cte, t2) = compress_hooks(&hooks_test, &banks);
+        for (name, mspec, masks) in &methods {
+            let bank = mspec.build_bank_masked(&shapes, cfg.seed ^ 0x1D7, *masks)?;
+            let banks = bank.as_factored().expect("factorized spec builds a factored bank");
+            let dims = bank.layer_dims();
+            let (ctr, t1) = compress_hooks(&hooks_train, banks);
+            let (cte, t2) = compress_hooks(&hooks_test, banks);
             let layout = BlockLayout::new(dims);
             // damping grid on val split, report on eval split
             let (val, evl) = val_split(m);

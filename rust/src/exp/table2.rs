@@ -12,9 +12,9 @@
 //! LoGra on compress, ≈ 1.17× on cache.
 
 use super::report::Table;
-use crate::models::shapes::{llama8b_layers, LayerShape};
+use crate::models::shapes::{llama8b_layers, LayerShape, ModelShapes};
 use crate::sketch::rng::Pcg;
-use crate::sketch::{factgrass::FactGrass, logra::LoGra, FactorizedCompressor, MaskKind, Scratch};
+use crate::sketch::{FactorizedCompressor, MaskKind, MethodSpec, Scratch};
 use crate::store::StoreWriter;
 use crate::util::bench::BenchRecord;
 use anyhow::Result;
@@ -40,7 +40,8 @@ pub fn make_workload(layers: &[LayerShape], t: usize, seed: u64) -> Workload {
     Workload { acts, t }
 }
 
-/// Compressor banks for one method across the layer stack.
+/// Compressor banks for one method across the layer stack, built through
+/// the declarative spec (the same path the pipeline and CLI use).
 fn build_banks(
     layers: &[LayerShape],
     kl: usize,
@@ -48,26 +49,24 @@ fn build_banks(
     seed: u64,
 ) -> Vec<Box<dyn FactorizedCompressor>> {
     let k_side = (kl as f64).sqrt() as usize;
-    layers
-        .iter()
-        .enumerate()
-        .map(|(i, l)| -> Box<dyn FactorizedCompressor> {
-            if factgrass {
-                // paper default: SJLT_{k_l} ∘ RM_{2k_in ⊗ 2k_out}
-                Box::new(FactGrass::new(
-                    l.d_in,
-                    l.d_out,
-                    (2 * k_side).min(l.d_in),
-                    (2 * k_side).min(l.d_out),
-                    kl,
-                    MaskKind::Random,
-                    seed + i as u64,
-                ))
-            } else {
-                Box::new(LoGra::new(l.d_in, l.d_out, k_side, k_side, seed + i as u64))
-            }
-        })
-        .collect()
+    let spec = if factgrass {
+        // paper default: SJLT_{k_l} ∘ RM_{2k_in ⊗ 2k_out}
+        MethodSpec::FactGrass {
+            k: kl,
+            k_in: 2 * k_side,
+            k_out: 2 * k_side,
+            mask: MaskKind::Random,
+        }
+    } else {
+        MethodSpec::LoGra {
+            k_in: k_side,
+            k_out: k_side,
+        }
+    };
+    spec.build_bank(&ModelShapes::from_layer_shapes(layers), seed)
+        .expect("table2 bank construction")
+        .into_factored()
+        .expect("factorized spec builds a factored bank")
 }
 
 /// Run one method over `reps` sweeps of every layer instance; returns

@@ -5,16 +5,26 @@
 //!
 //! - [`sketch`] — the paper's contribution: gradient compressors (SJLT,
 //!   Random/Selective Mask, GraSS, FactGraSS) and baselines (Gauss, FJLT,
-//!   LoGra).
+//!   LoGra). [`sketch::MethodSpec`] is the total spec language over both
+//!   the flat (`rm|sm|sjlt|gauss|fjlt|grass`) and factorized
+//!   (`factgrass|logra|factsjlt|factmask`) families;
+//!   [`sketch::MethodSpec::build_bank`] is the single construction path
+//!   from a spec + model geometry to a [`sketch::CompressorBank`].
 //! - [`attrib`] — gradient-based data attribution on top of compressed
-//!   gradients: influence functions (FIM + iFVP), TRAK, GradDot, and
-//!   layer-wise block-diagonal FIM.
+//!   gradients: influence functions (FIM + iFVP), TRAK, TracIn, GradDot,
+//!   and layer-wise block-diagonal FIM, all behind the unified
+//!   [`attrib::Attributor`] trait (`cache` → `attribute` →
+//!   `self_influence`). [`attrib::from_spec`] dispatches an
+//!   [`attrib::AttributionSpec`]'s scorer string to the right engine.
 //! - [`runtime`] — PJRT client wrapper that loads AOT-compiled HLO text
 //!   artifacts (JAX models + Pallas kernels) and executes them on the
 //!   request path with zero Python.
 //! - [`coordinator`] — the cache-stage pipeline: loader → dynamic batcher →
 //!   PJRT gradient workers → rayon compressors → backpressured store writer.
-//! - [`store`] — sharded on-disk compressed-gradient cache.
+//! - [`store`] — sharded on-disk compressed-gradient cache. Stores are
+//!   self-describing (method spec, seed, gradient geometry), and
+//!   [`store::StoreReader::open_checked`] rejects readers whose spec or
+//!   seed does not match what was cached.
 //! - [`eval`] — counterfactual evaluation (LDS) with Rust-driven subset
 //!   retraining through HLO train-step executables.
 //! - [`data`] — synthetic dataset substrates (digits, two-class images,

@@ -2,19 +2,19 @@
 //! paths.
 //!
 //! Three shapes cover every dense kernel in the crate, all built on the
-//! shared microkernels in [`micro`]:
+//! shared microkernels in `micro`:
 //!
-//! * [`matmul`] — `C = A·B` (row-major), rank-1 updates via [`micro::axpy`]
+//! * [`matmul`] — `C = A·B` (row-major), rank-1 updates via `micro::axpy`
 //!   with 4-row register blocking so each `B` row is streamed once per four
 //!   output rows. Used by the dense Gaussian batch projection.
 //! * [`matmul_at_b`] — `C = Aᵀ·B` with `A` stored `t×m`, the Kronecker
 //!   reconstruction `XᵀD` of the factorized compressors, also on
-//!   [`micro::axpy`].
+//!   `micro::axpy`.
 //! * [`matmul_abt`] — `C = A·Bᵀ` with both operands row-major, i.e. an
 //!   all-pairs dot product. This is the scoring GEMM
 //!   (`scores[q][i] = ⟨g_q, g_i⟩`) and the LoGra factor projection
 //!   (`Y = X·Pᵀ`); it runs a register-tiled 4×4 microkernel
-//!   ([`micro::dot4x4`]) so sixteen accumulators stay in registers across
+//!   (`micro::dot4x4`) so sixteen accumulators stay in registers across
 //!   the shared inner dimension.
 //!
 //! These are modest sizes (T ≤ 4096, d ≤ 14336, k ≤ 8192), so the blocked
@@ -169,7 +169,7 @@ pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], t: usize, m: usize, n: u
 ///
 /// This is the attribute-stage scoring kernel (`queries × cache`) and the
 /// LoGra factor projection; it replaces the naive triple loop with a
-/// parallel, register-tiled blocked GEMM (4×4 tiles via [`micro::dot4x4`]).
+/// parallel, register-tiled blocked GEMM (4×4 tiles via `micro::dot4x4`).
 pub fn matmul_abt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, kdim: usize, n: usize) {
     assert_eq!(a.len(), m * kdim);
     assert_eq!(b.len(), n * kdim);

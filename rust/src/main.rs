@@ -6,17 +6,26 @@
 //! grass exp table2 [--ks 256,1024,4096] [--tokens 256] [--reps 8]
 //! grass exp fig9 [--kl 256]
 //! grass cache --model mlp --method sjlt:k=1024 --n 1000 --store DIR
+//! grass attribute --store DIR --queries 8 --scorer if
 //! grass info
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
+use grass::attrib::{from_spec, AttributionSpec, Attributor};
 use grass::config::ExpConfig;
-use grass::coordinator::{CachePipeline, CompressorBank, PipelineConfig};
+use grass::coordinator::{pipeline::Source, CachePipeline, CompressorBank, PipelineConfig};
+use grass::data::corpus::ThemedCorpus;
 use grass::data::images::SynthDigits;
+use grass::data::synthgrad::{
+    default_synth_layers, SYNTH_CLASSES, SYNTH_MODEL, SYNTH_SEQ, SynthGrads, SynthHooks,
+};
 use grass::exp;
-use grass::runtime::Runtime;
-use grass::sketch::MethodSpec;
+use grass::models::shapes::ModelShapes;
+use grass::runtime::{Arg, Runtime};
+use grass::sketch::{MethodSpec, Scratch};
+use grass::store::{StoreMeta, StoreReader, StoreWriter, DEFAULT_SHARD_ROWS};
 use grass::util::cli::Args;
+use std::path::Path;
 
 fn main() {
     if let Err(e) = run() {
@@ -30,6 +39,7 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("exp") => run_exp(&args),
         Some("cache") => run_cache(&args),
+        Some("attribute") => run_attribute(&args),
         Some("info") => run_info(),
         _ => {
             print_help();
@@ -44,7 +54,11 @@ fn print_help() {
 
 USAGE:
   grass exp <fig4|table1a|table1b|table1c|table1d|table2|fig9|ablation|all> [flags]
-  grass cache --model <mlp|resnet_lite|gpt2_tiny|music> --method <spec> [--n N] [--store DIR]
+  grass cache --model <mlp|resnet_lite|gpt2_tiny|music|synth> --method <spec>
+              [--n N] [--p P] [--seed S] [--store DIR] [--fast]
+  grass attribute --store DIR [--queries M] [--scorer if|graddot|trak|tracin|blockwise]
+                  [--damping 1e-3] [--top 5] [--self-influence]
+                  [--method <spec> --seed S to cross-check the store]
   grass info
 
 COMMON FLAGS:
@@ -53,8 +67,17 @@ COMMON FLAGS:
   --fast                shrink everything for a smoke run
   --out results.json    append table to a JSON report
 
-METHOD SPECS: rm:k=.. | sm:k=.. | sjlt:k=..,s=1 | gauss:k=.. | fjlt:k=.. |
-              grass:k=..,kp=..,mask=rm|sm"
+METHOD SPECS (flat):        rm:k=.. | sm:k=.. | sjlt:k=..,s=1 | gauss:k=.. |
+                            fjlt:k=.. | grass:k=..,kp=..,mask=rm|sm
+METHOD SPECS (factorized,   factgrass:kin=..,kout=..,kl=..,mask=rm|sm |
+ per hooked layer):         logra:kin=..,kout=.. | factsjlt:kin=..,kout=.. |
+                            factmask:kin=..,kout=..,mask=rm|sm
+
+The cache stage records the full spec, seed, and gradient geometry in the
+store; `grass attribute` rebuilds the exact compressor bank from that
+metadata and rejects mismatched --method/--seed requests. Without PJRT
+artifacts, `cache` falls back to a deterministic synthetic gradient source
+(model 'synth') so cache → attribute runs end-to-end anywhere."
     );
 }
 
@@ -162,33 +185,338 @@ fn run_exp(args: &Args) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// cache
+// ---------------------------------------------------------------------------
+
 fn run_cache(args: &Args) -> Result<()> {
-    let rt = Runtime::load(Runtime::artifacts_dir())?;
     let model = args.get_or("model", "mlp").to_string();
     let spec = MethodSpec::parse(args.get_or("method", "sjlt:k=1024"))?;
-    let n = args.get_usize("n", 1000)?;
+    let fast = args.get_bool("fast");
+    let n = args.get_usize("n", if fast { 64 } else { 1000 })?;
     let seed = args.get_u64("seed", 42)?;
     let store = args.get_or("store", "grass_store").to_string();
-    let p = rt.manifest.model(&model)?.p;
 
-    // init params (untrained demo; pass --params to load a trained vector)
+    if model == SYNTH_MODEL {
+        return cache_synthetic(&spec, n, seed, &store, args);
+    }
+    match Runtime::load(Runtime::artifacts_dir()) {
+        Ok(rt) => cache_with_runtime(&rt, &model, &spec, n, seed, &store),
+        Err(e) => {
+            eprintln!(
+                "warning: PJRT runtime unavailable ({e:#}); caching from the \
+                 deterministic synthetic gradient source instead (model '{SYNTH_MODEL}')"
+            );
+            cache_synthetic(&spec, n, seed, &store, args)
+        }
+    }
+}
+
+fn cache_with_runtime(
+    rt: &Runtime,
+    model: &str,
+    spec: &MethodSpec,
+    n: usize,
+    seed: u64,
+    store: &str,
+) -> Result<()> {
+    let model_meta = rt.manifest.model(model)?.clone();
+    let shapes = model_meta.shapes();
+    let bank = spec.build_bank(&shapes, seed)?;
+
+    // init params (untrained demo; `grass attribute` re-derives them from
+    // the stored seed so the projections and gradients match).
     let init = rt.executable(&format!("{model}_init"))?;
     let params = init
-        .run(&[grass::runtime::Arg::ScalarI32(seed as i32)])?
+        .run(&[Arg::ScalarI32(seed as i32)])?
         .remove(0)
         .data;
 
-    let pipeline = CachePipeline::new(&rt, &model, params, PipelineConfig::default());
-    let bank = CompressorBank::Flat(spec.build(p, seed));
-    let data = SynthDigits::generate(n, seed);
-    let meta = pipeline.run_flat(
-        &grass::coordinator::pipeline::Source::Labelled(&data),
-        &bank,
-        std::path::Path::new(&store),
-        &spec.spec_string(),
-        seed,
-    )?;
+    let pipeline = CachePipeline::new(rt, model, params, PipelineConfig::default());
+    let dir = Path::new(store);
+    let meta = if bank.is_factored() {
+        let seq = model_meta
+            .seq
+            .ok_or_else(|| anyhow!("model '{model}' has no sequence length for the hooks path"))?;
+        let data = ThemedCorpus::generate(n, seq, seed);
+        pipeline.run(
+            &Source::Sequences(&data),
+            &bank,
+            dir,
+            &spec.spec_string(),
+            seed,
+        )?
+    } else {
+        let data = SynthDigits::generate(n, seed);
+        pipeline.run(
+            &Source::Labelled(&data),
+            &bank,
+            dir,
+            &spec.spec_string(),
+            seed,
+        )?
+    };
     println!("cached {} rows of k={} into {store}", meta.n, meta.k);
     println!("{}", pipeline.metrics.report());
     Ok(())
+}
+
+/// Runtime-free cache: compress the deterministic synthetic gradient
+/// source through the spec's bank and persist a fully described store.
+fn cache_synthetic(
+    spec: &MethodSpec,
+    n: usize,
+    seed: u64,
+    store: &str,
+    args: &Args,
+) -> Result<()> {
+    let dir = Path::new(store);
+    let mut scratch = Scratch::new();
+    let meta = if spec.is_factorized() {
+        let layers = default_synth_layers();
+        let shapes = ModelShapes::factored(layers.clone());
+        let bank = spec.build_bank(&shapes, seed)?;
+        let cs = bank.as_factored().expect("factorized spec builds a factored bank");
+        let k = bank.output_dim();
+        let mut w = StoreWriter::create_described(
+            dir,
+            StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, DEFAULT_SHARD_ROWS)?,
+        )?;
+        let hooks = SynthHooks::new(layers, seed);
+        let mut row = vec![0.0f32; k];
+        for i in 0..n {
+            let sample = hooks.sample(i);
+            let mut off = 0;
+            for (li, c) in cs.iter().enumerate() {
+                let (x, dy) = &sample[li];
+                c.compress_batch_with(1, SYNTH_SEQ, x, dy, &mut row, k, off, &mut scratch);
+                off += c.output_dim();
+            }
+            w.push(&row)?;
+        }
+        w.finish()?
+    } else {
+        let p = args.get_usize("p", 4096)?;
+        let shapes = ModelShapes::flat(p);
+        let bank = spec.build_bank(&shapes, seed)?;
+        let c = bank.as_flat().expect("flat spec builds a flat bank");
+        let k = c.output_dim();
+        let mut w = StoreWriter::create_described(
+            dir,
+            StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, DEFAULT_SHARD_ROWS)?,
+        )?;
+        let src = SynthGrads::new(p, seed);
+        let chunk = 64usize;
+        let mut out = vec![0.0f32; chunk * k];
+        let mut start = 0;
+        while start < n {
+            let count = chunk.min(n - start);
+            let rows = src.rows(start, count);
+            c.compress_batch_with(&rows, count, &mut out[..count * k], &mut scratch);
+            w.push_batch(&out[..count * k])?;
+            start += count;
+        }
+        w.finish()?
+    };
+    println!(
+        "cached {} rows of k={} into {store} (synthetic source, method {})",
+        meta.n,
+        meta.k,
+        spec.spec_string()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// attribute
+// ---------------------------------------------------------------------------
+
+fn run_attribute(args: &Args) -> Result<()> {
+    let store = args.get_or("store", "grass_store").to_string();
+    let m = args.get_usize("queries", 8)?;
+    let scorer = args.get_or("scorer", "if").to_string();
+    let damping = args.get_f64("damping", 1e-3)?;
+    let top = args.get_usize("top", 5)?;
+
+    let reader = StoreReader::open(&store)?;
+    let spec = reader.meta.spec()?;
+    let seed = reader.meta.seed;
+    // A user-pinned --method/--seed is validated against the store: a
+    // mismatch is a hard, descriptive error instead of silent mis-scoring.
+    if args.get("method").is_some() || args.get("seed").is_some() {
+        let requested = match args.get("method") {
+            Some(ms) => MethodSpec::parse(ms)?,
+            None => spec.clone(),
+        };
+        StoreReader::open_checked(&store, &requested, args.get_u64("seed", seed)?)?;
+    }
+
+    let shapes = reader.meta.shapes();
+    ensure!(
+        shapes.p > 0 || !shapes.layers.is_empty(),
+        "store at {store} records no gradient geometry (pre-redesign cache?); re-run `grass cache`"
+    );
+    let bank = spec.build_bank(&shapes, seed)?;
+    ensure!(
+        bank.output_dim() == reader.meta.k,
+        "rebuilt bank emits {} columns but the store has k = {}",
+        bank.output_dim(),
+        reader.meta.k
+    );
+
+    // Compressed query gradients, from the same substrate the cache used.
+    let model = reader.meta.model.clone();
+    let (queries, classes) = if model == SYNTH_MODEL || model.is_empty() {
+        synth_queries(&reader.meta, &bank, m)?
+    } else {
+        runtime_queries(&reader.meta, &bank, m)?
+    };
+
+    // Scorer through the declarative registry.
+    let mut aspec = AttributionSpec::new(&scorer, spec, seed);
+    aspec.damping = damping;
+    aspec.layout = bank.layer_dims();
+    let mut attributor: Box<dyn Attributor> = from_spec(&aspec)?;
+    let meta = attributor.cache_store(&reader)?;
+    let scores = attributor.attribute(&queries, m)?;
+
+    println!(
+        "attributed {m} queries against {} cached rows (scorer '{}', method {}, k={})",
+        meta.n,
+        attributor.name(),
+        meta.method,
+        meta.k
+    );
+    let mut hits = 0usize;
+    let mut ranked = 0usize;
+    for q in 0..m {
+        let best = scores.top_k(q, top);
+        let parts: Vec<String> = best
+            .iter()
+            .map(|(i, s)| format!("#{i} ({s:+.3})"))
+            .collect();
+        let label = classes
+            .get(q)
+            .map(|c| format!(" [class {c}]"))
+            .unwrap_or_default();
+        println!("  query {q}{label}: top-{top} {}", parts.join(", "));
+        if let Some(&qc) = classes.get(q) {
+            hits += best
+                .iter()
+                .filter(|(i, _)| i % SYNTH_CLASSES == qc)
+                .count();
+            ranked += best.len();
+        }
+    }
+    if ranked > 0 && (model == SYNTH_MODEL || model.is_empty()) {
+        println!(
+            "top-{top} same-class fraction: {:.0}% (chance ≈ {:.0}%)",
+            100.0 * hits as f64 / ranked as f64,
+            100.0 / SYNTH_CLASSES as f64
+        );
+    }
+    if args.get_bool("self-influence") {
+        let si = attributor.self_influence()?;
+        let mut order: Vec<usize> = (0..si.len()).collect();
+        order.sort_by(|&a, &b| si[b].partial_cmp(&si[a]).unwrap_or(std::cmp::Ordering::Equal));
+        let parts: Vec<String> = order
+            .iter()
+            .take(top)
+            .map(|&i| format!("#{i} ({:+.3})", si[i]))
+            .collect();
+        println!("top-{top} self-influence: {}", parts.join(", "));
+    }
+    Ok(())
+}
+
+/// Regenerate + compress `m` synthetic query gradients against the store's
+/// recorded geometry. Returns the `m × k` matrix and per-query classes.
+fn synth_queries(
+    meta: &StoreMeta,
+    bank: &CompressorBank,
+    m: usize,
+) -> Result<(Vec<f32>, Vec<usize>)> {
+    let mut scratch = Scratch::new();
+    let k = bank.output_dim();
+    if let Some(cs) = bank.as_factored() {
+        let hooks = SynthHooks::new(meta.layer_dims.clone(), meta.seed);
+        let mut out = vec![0.0f32; m * k];
+        let mut classes = Vec::with_capacity(m);
+        for q in 0..m {
+            let (sample, class) = hooks.query(q);
+            classes.push(class);
+            let mut off = 0;
+            for (li, c) in cs.iter().enumerate() {
+                let (x, dy) = &sample[li];
+                c.compress_batch_with(
+                    1,
+                    SYNTH_SEQ,
+                    x,
+                    dy,
+                    &mut out[q * k..(q + 1) * k],
+                    k,
+                    off,
+                    &mut scratch,
+                );
+                off += c.output_dim();
+            }
+        }
+        Ok((out, classes))
+    } else {
+        let c = bank.as_flat().expect("flat bank");
+        let src = SynthGrads::new(meta.input_dim, meta.seed);
+        let (raw, classes) = src.queries(m);
+        let mut out = vec![0.0f32; m * k];
+        c.compress_batch_with(&raw, m, &mut out, &mut scratch);
+        Ok((out, classes))
+    }
+}
+
+/// Compute + compress `m` real query gradients through the PJRT runtime,
+/// re-deriving the cached model's parameters from the stored seed.
+fn runtime_queries(
+    meta: &StoreMeta,
+    bank: &CompressorBank,
+    m: usize,
+) -> Result<(Vec<f32>, Vec<usize>)> {
+    let rt = Runtime::load(Runtime::artifacts_dir()).map_err(|e| {
+        anyhow!(
+            "store was cached from model '{}' but the PJRT runtime is unavailable: {e:#}",
+            meta.model
+        )
+    })?;
+    let model = meta.model.as_str();
+    let model_meta = rt.manifest.model(model)?.clone();
+    let init = rt.executable(&format!("{model}_init"))?;
+    let params = init
+        .run(&[Arg::ScalarI32(meta.seed as i32)])?
+        .remove(0)
+        .data;
+    let k = bank.output_dim();
+    let query_seed = meta.seed ^ 0x7E57;
+    if let Some(cs) = bank.as_factored() {
+        let seq = model_meta
+            .seq
+            .ok_or_else(|| anyhow!("model '{model}' has no sequence length"))?;
+        let data = ThemedCorpus::generate(m, seq, query_seed);
+        let idx: Vec<usize> = (0..m).collect();
+        let hooks = exp::table1::collect_hooks(&rt, model, &params, &data, &idx)?;
+        let (out, _) = exp::table1::compress_hooks(&hooks, cs);
+        let classes = data.tags.iter().map(|&t| t as usize).collect();
+        Ok((out, classes))
+    } else {
+        let trainer = grass::eval::retrain::Trainer::new(&rt, model)?;
+        let data = SynthDigits::generate(m, query_seed);
+        let idx: Vec<usize> = (0..m).collect();
+        let grads = trainer.grads(
+            &params,
+            &grass::eval::retrain::TaskData::Labelled(&data),
+            &idx,
+        )?;
+        let c = bank.as_flat().expect("flat bank");
+        let mut out = vec![0.0f32; m * k];
+        c.compress_batch(&grads, m, &mut out);
+        let classes = data.y.iter().map(|&y| y as usize).collect();
+        Ok((out, classes))
+    }
 }

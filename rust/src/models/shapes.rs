@@ -25,6 +25,47 @@ impl LayerShape {
     }
 }
 
+/// The gradient geometry a compressor bank is built against — the one
+/// argument [`crate::sketch::MethodSpec::build_bank`] needs.
+///
+/// Flat compressors consume `p` (the flattened gradient dimension);
+/// factorized compressors consume the per-layer `(d_in, d_out)` pairs of
+/// the hooked linear layers. Both views live here so every construction
+/// site (CLI, coordinator, experiment harnesses, store validation) shares
+/// one shape vocabulary.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ModelShapes {
+    /// Flat gradient dimension `p` (0 when only hooked layers are known).
+    pub p: usize,
+    /// Hooked linear layers as `(d_in, d_out)` pairs (empty for flat-only
+    /// models).
+    pub layers: Vec<(usize, usize)>,
+}
+
+impl ModelShapes {
+    /// Flat-gradient geometry only.
+    pub fn flat(p: usize) -> Self {
+        Self { p, layers: vec![] }
+    }
+
+    /// Hooked-layer geometry; `p` is the summed linear parameter count.
+    pub fn factored(layers: Vec<(usize, usize)>) -> Self {
+        let p = layers.iter().map(|&(i, o)| i * o).sum();
+        Self { p, layers }
+    }
+
+    /// A single hooked layer (ablation sweeps, micro-benchmarks).
+    pub fn single(d_in: usize, d_out: usize) -> Self {
+        Self::factored(vec![(d_in, d_out)])
+    }
+
+    /// One bank entry per distinct [`LayerShape`] (the Table 2 harness
+    /// builds one compressor per shape and replays it `count` times).
+    pub fn from_layer_shapes(layers: &[LayerShape]) -> Self {
+        Self::factored(layers.iter().map(|l| (l.d_in, l.d_out)).collect())
+    }
+}
+
 /// Llama-3.1-8B linear layers (paper §4.2 substrate): 32 blocks,
 /// d_model = 4096, GQA with 8 KV heads (so k/v project to 1024), SwiGLU
 /// FFN with intermediate 14336. Vocab/embedding layers are excluded, as in
@@ -90,5 +131,19 @@ mod tests {
     fn layer_params() {
         let l = LayerShape::new("x", 10, 20, 3);
         assert_eq!(l.params(), 600);
+    }
+
+    #[test]
+    fn model_shapes_views() {
+        assert_eq!(ModelShapes::flat(42).p, 42);
+        assert!(ModelShapes::flat(42).layers.is_empty());
+        let s = ModelShapes::factored(vec![(4, 6), (6, 2)]);
+        assert_eq!(s.p, 4 * 6 + 6 * 2);
+        assert_eq!(ModelShapes::single(3, 5).layers, vec![(3, 5)]);
+        let from = ModelShapes::from_layer_shapes(&[
+            LayerShape::new("a", 8, 8, 32),
+            LayerShape::new("b", 8, 16, 32),
+        ]);
+        assert_eq!(from.layers, vec![(8, 8), (8, 16)]);
     }
 }

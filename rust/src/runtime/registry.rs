@@ -73,6 +73,17 @@ pub struct ModelMeta {
     pub vocab: Option<usize>,
 }
 
+impl ModelMeta {
+    /// The gradient geometry for [`crate::sketch::MethodSpec::build_bank`]:
+    /// flat dimension `p` plus the hooked layers' `(d_in, d_out)` pairs.
+    pub fn shapes(&self) -> crate::models::shapes::ModelShapes {
+        crate::models::shapes::ModelShapes {
+            p: self.p,
+            layers: self.layers.iter().map(|l| (l.d_in, l.d_out)).collect(),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub artifacts: BTreeMap<String, ArtifactSpec>,
@@ -249,6 +260,16 @@ mod tests {
         assert_eq!(lm.layers.len(), 1);
         assert_eq!(lm.layers[0].d_out, 384);
         assert_eq!(lm.seq, Some(64));
+    }
+
+    #[test]
+    fn model_shapes_from_meta() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let flat = m.model("mlp").unwrap().shapes();
+        assert_eq!(flat.p, 84618);
+        assert!(flat.layers.is_empty());
+        let lm = m.model("gpt2_tiny").unwrap().shapes();
+        assert_eq!(lm.layers, vec![(128, 384)]);
     }
 
     #[test]

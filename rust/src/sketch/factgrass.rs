@@ -190,7 +190,7 @@ impl FactorizedCompressor for FactGrass {
     }
 
     /// Batch kernel: batched factor masking + reconstruction (see
-    /// [`FactGrass::reconstruct_batch`]) followed by a per-sample SJLT of
+    /// `FactGrass::reconstruct_batch`) followed by a per-sample SJLT of
     /// the small reconstructed vectors, parallel over samples. Zero
     /// steady-state allocation.
     #[allow(clippy::too_many_arguments)]

@@ -7,6 +7,7 @@
 //! recovers vanilla SJLT; `k' = k` recovers pure sparsification.
 
 use super::mask::RandomMask;
+use super::selective::TrainedMask;
 use super::sjlt::Sjlt;
 use super::{Compressor, MaskKind, Scratch};
 
@@ -29,8 +30,12 @@ impl Grass {
         );
         let mask = match kind {
             MaskKind::Random => RandomMask::new(p, k_prime, seed ^ 0x6A55),
-            // Without trained scores a selective mask degenerates to random
-            // over a distinct stream; `with_mask` installs a trained one.
+            // A selective request without trained scores routes through the
+            // documented untrained fallback: magnitude-free selection on the
+            // selective stream, **distinct** from the random-mask stream so
+            // `rm`- and `sm`-masked GraSS never silently coincide. The real
+            // graddot-score-backed stage is [`Grass::with_scores`] /
+            // [`Grass::with_mask`].
             MaskKind::Selective => RandomMask::new(p, k_prime, seed ^ 0x5E1E),
         };
         Self {
@@ -38,6 +43,20 @@ impl Grass {
             mask,
             k_prime,
         }
+    }
+
+    /// Graddot-score-backed selective stage 1: keep the `k_prime`
+    /// highest-scoring coordinates (scores from
+    /// [`super::selective::train_selective_mask`] or any per-coordinate
+    /// importance statistic, e.g. squared-gradient means), then SJLT to `k`.
+    /// This is the trained routing for [`MaskKind::Selective`].
+    pub fn with_scores(p: usize, scores: &[f32], k_prime: usize, k: usize, seed: u64) -> Self {
+        assert_eq!(scores.len(), p, "need one importance score per coordinate");
+        let trained = TrainedMask {
+            scores: scores.to_vec(),
+            corr_history: vec![],
+        };
+        Self::with_mask(p, trained.into_mask(p, k_prime), k, seed)
     }
 
     /// Build from an explicit (e.g. selective-mask-trained) stage-1 mask.
@@ -165,5 +184,58 @@ mod tests {
     #[should_panic(expected = "need k")]
     fn invalid_dims_panic() {
         Grass::new(100, 10, 20, MaskKind::Random, 0);
+    }
+
+    #[test]
+    fn selective_kind_distinct_from_random() {
+        // Regression: `Grass::new(.., Selective, ..)` must not reuse the
+        // random-mask stream — an `sm`-masked spec has to produce different
+        // projections than the `rm`-masked one at the same seed.
+        let (p, kp, k) = (1024, 256, 64);
+        let random = Grass::new(p, kp, k, MaskKind::Random, 7);
+        let selective = Grass::new(p, kp, k, MaskKind::Selective, 7);
+        let mut rng = Pcg::new(8);
+        let g: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        assert_ne!(
+            random.compress(&g),
+            selective.compress(&g),
+            "selective mask kind collapsed onto the random stream"
+        );
+    }
+
+    #[test]
+    fn with_scores_keeps_top_scoring_coordinates() {
+        // Score-backed selective stage 1: plant all importance on the last
+        // 64 coordinates. The selective GraSS must drop everything outside
+        // them, while a random mask (with overwhelming probability at
+        // p = 256, k' = 64) keeps some of the low-score support.
+        let (p, kp, k) = (256usize, 64usize, 16usize);
+        let mut scores = vec![0.0f32; p];
+        for j in p - kp..p {
+            scores[j] = 1.0 + j as f32;
+        }
+        let selective = Grass::with_scores(p, &scores, kp, k, 5);
+        let random = Grass::new(p, kp, k, MaskKind::Random, 5);
+        // Exact: the score-backed stage selects precisely the planted set.
+        assert!(
+            selective.mask_indices().iter().all(|&j| (j as usize) >= p - kp),
+            "selective stage kept low-score coordinates"
+        );
+        assert_eq!(selective.mask_indices().len(), kp);
+        // The random mask (deterministic at this seed, and with probability
+        // ≈ 1 − 10⁻⁶⁰ over seeds) keeps some of the low-score support.
+        assert!(
+            random.mask_indices().iter().any(|&j| (j as usize) < p - kp),
+            "random mask improbably dropped all low coordinates"
+        );
+        // Energy outside the selected set is provably dropped end-to-end:
+        let mut low = vec![0.0f32; p];
+        for j in 0..p - kp {
+            low[j] = 1.0;
+        }
+        assert!(
+            selective.compress(&low).iter().all(|&v| v == 0.0),
+            "selective stage leaked low-score energy"
+        );
     }
 }

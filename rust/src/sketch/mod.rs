@@ -29,6 +29,8 @@ pub mod rng;
 pub mod selective;
 pub mod sjlt;
 
+use crate::models::shapes::ModelShapes;
+
 /// Reusable per-worker workspace for the batch compression hot path.
 ///
 /// Every tuned `compress_batch_with` kernel draws its temporaries (masked
@@ -241,7 +243,73 @@ pub enum MaskKind {
     Selective,
 }
 
-/// Compression method selector used by configs and the CLI.
+/// Which compressors the cache pipeline's compress stage applies — the
+/// output of [`MethodSpec::build_bank`] and the one construction product
+/// every consumer (coordinator, CLI, experiment harnesses, store
+/// validation) shares.
+pub enum CompressorBank {
+    /// One flat compressor over the whole `p`-dimensional gradient.
+    Flat(Box<dyn Compressor>),
+    /// One factorized compressor per hooked layer; outputs concatenate.
+    Factored(Vec<Box<dyn FactorizedCompressor>>),
+}
+
+impl CompressorBank {
+    /// Total compressed row width `k` (factorized: `Σ_l k_l`).
+    pub fn output_dim(&self) -> usize {
+        match self {
+            CompressorBank::Flat(c) => c.output_dim(),
+            CompressorBank::Factored(cs) => cs.iter().map(|c| c.output_dim()).sum(),
+        }
+    }
+
+    pub fn is_factored(&self) -> bool {
+        matches!(self, CompressorBank::Factored(_))
+    }
+
+    /// The flat compressor, if this is a flat bank.
+    pub fn as_flat(&self) -> Option<&dyn Compressor> {
+        match self {
+            CompressorBank::Flat(c) => Some(c.as_ref()),
+            CompressorBank::Factored(_) => None,
+        }
+    }
+
+    /// The per-layer compressor stack, if this is a factorized bank.
+    pub fn as_factored(&self) -> Option<&[Box<dyn FactorizedCompressor>]> {
+        match self {
+            CompressorBank::Flat(_) => None,
+            CompressorBank::Factored(cs) => Some(cs),
+        }
+    }
+
+    /// Consume into the per-layer stack, if factorized.
+    pub fn into_factored(self) -> Option<Vec<Box<dyn FactorizedCompressor>>> {
+        match self {
+            CompressorBank::Flat(_) => None,
+            CompressorBank::Factored(cs) => Some(cs),
+        }
+    }
+
+    /// Per-layer compressed dims (the block-diagonal FIM layout); a flat
+    /// bank is one block.
+    pub fn layer_dims(&self) -> Vec<usize> {
+        match self {
+            CompressorBank::Flat(c) => vec![c.output_dim()],
+            CompressorBank::Factored(cs) => cs.iter().map(|c| c.output_dim()).collect(),
+        }
+    }
+}
+
+/// Per-layer trained factor masks `(input indices, output indices)` for the
+/// selective factorized variants (see [`MethodSpec::build_bank_masked`]).
+pub type LayerMasks = [(Vec<u32>, Vec<u32>)];
+
+/// Compression method selector used by configs, the CLI, the store
+/// metadata, and every experiment harness — the crate's total spec
+/// language. [`MethodSpec::parse`] / [`MethodSpec::spec_string`] roundtrip,
+/// and [`MethodSpec::build_bank`] is the single place per-layer compressor
+/// construction happens.
 #[derive(Debug, Clone, PartialEq)]
 pub enum MethodSpec {
     /// `RM_k`
@@ -261,11 +329,44 @@ pub enum MethodSpec {
         k_prime: usize,
         mask: MaskKind,
     },
+    /// `FactGraSS = SJLT_{k_l} ∘ MASK_{k_in' ⊗ k_out'}` per hooked layer
+    /// (§3.3.2). `k_in`/`k_out` are the intermediate factor mask dims
+    /// (clamped per layer to `d_in`/`d_out`); `k` is the final per-layer
+    /// compressed dim `k_l`.
+    FactGrass {
+        k: usize,
+        k_in: usize,
+        k_out: usize,
+        mask: MaskKind,
+    },
+    /// `LoGra = GAUSS_{k_in ⊗ k_out}` per hooked layer (Choe et al. 2024).
+    LoGra { k_in: usize, k_out: usize },
+    /// `SJLT_{k_in ⊗ k_out}` per hooked layer (Table 1d baseline).
+    FactSjlt { k_in: usize, k_out: usize },
+    /// `MASK_{k_in ⊗ k_out}` per hooked layer — RM⊗ (random) or SM⊗
+    /// (selective; trained factor masks come in through
+    /// [`MethodSpec::build_bank_masked`]).
+    FactMask {
+        k_in: usize,
+        k_out: usize,
+        mask: MaskKind,
+    },
+}
+
+fn mask_str(mask: &MaskKind) -> &'static str {
+    match mask {
+        MaskKind::Random => "rm",
+        MaskKind::Selective => "sm",
+    }
 }
 
 impl MethodSpec {
-    /// Parse a CLI/config spec string, e.g. `rm:k=2048`, `sjlt:k=4096,s=1`,
-    /// `gauss:k=2048`, `fjlt:k=8192`, `grass:k=2048,kp=8192,mask=rm`.
+    /// Parse a CLI/config spec string. Flat family: `rm:k=2048`,
+    /// `sm:k=2048`, `sjlt:k=4096,s=1`, `gauss:k=2048`, `fjlt:k=8192`,
+    /// `grass:k=2048,kp=8192,mask=rm`. Factorized family (per hooked
+    /// layer): `factgrass:kin=32,kout=32,kl=256,mask=rm`,
+    /// `logra:kin=16,kout=16`, `factsjlt:kin=16,kout=16`,
+    /// `factmask:kin=16,kout=16,mask=rm`.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         use anyhow::{anyhow, bail};
         let (head, rest) = s.split_once(':').unwrap_or((s, ""));
@@ -282,6 +383,13 @@ impl MethodSpec {
                 .parse()
                 .map_err(|e| anyhow!("spec '{s}': bad {key}: {e}"))
         };
+        let mask = || -> anyhow::Result<MaskKind> {
+            Ok(match kv.get("mask").copied().unwrap_or("rm") {
+                "rm" => MaskKind::Random,
+                "sm" => MaskKind::Selective,
+                other => bail!("spec '{s}': unknown mask '{other}'"),
+            })
+        };
         Ok(match head {
             "rm" | "random_mask" => MethodSpec::RandomMask { k: need("k")? },
             "sm" | "selective_mask" => MethodSpec::SelectiveMask { k: need("k")? },
@@ -294,11 +402,26 @@ impl MethodSpec {
             "grass" => MethodSpec::Grass {
                 k: need("k")?,
                 k_prime: need("kp")?,
-                mask: match kv.get("mask").copied().unwrap_or("rm") {
-                    "rm" => MaskKind::Random,
-                    "sm" => MaskKind::Selective,
-                    other => bail!("spec '{s}': unknown mask '{other}'"),
-                },
+                mask: mask()?,
+            },
+            "factgrass" => MethodSpec::FactGrass {
+                k: need("kl")?,
+                k_in: need("kin")?,
+                k_out: need("kout")?,
+                mask: mask()?,
+            },
+            "logra" => MethodSpec::LoGra {
+                k_in: need("kin")?,
+                k_out: need("kout")?,
+            },
+            "factsjlt" => MethodSpec::FactSjlt {
+                k_in: need("kin")?,
+                k_out: need("kout")?,
+            },
+            "factmask" => MethodSpec::FactMask {
+                k_in: need("kin")?,
+                k_out: need("kout")?,
+                mask: mask()?,
             },
             other => bail!("unknown compression method '{other}'"),
         })
@@ -312,16 +435,43 @@ impl MethodSpec {
             MethodSpec::Sjlt { k, s } => format!("sjlt:k={k},s={s}"),
             MethodSpec::Gauss { k } => format!("gauss:k={k}"),
             MethodSpec::Fjlt { k } => format!("fjlt:k={k}"),
-            MethodSpec::Grass { k, k_prime, mask } => format!(
-                "grass:k={k},kp={k_prime},mask={}",
-                match mask {
-                    MaskKind::Random => "rm",
-                    MaskKind::Selective => "sm",
-                }
+            MethodSpec::Grass { k, k_prime, mask } => {
+                format!("grass:k={k},kp={k_prime},mask={}", mask_str(mask))
+            }
+            MethodSpec::FactGrass {
+                k,
+                k_in,
+                k_out,
+                mask,
+            } => format!(
+                "factgrass:kin={k_in},kout={k_out},kl={k},mask={}",
+                mask_str(mask)
             ),
+            MethodSpec::LoGra { k_in, k_out } => format!("logra:kin={k_in},kout={k_out}"),
+            MethodSpec::FactSjlt { k_in, k_out } => {
+                format!("factsjlt:kin={k_in},kout={k_out}")
+            }
+            MethodSpec::FactMask { k_in, k_out, mask } => {
+                format!("factmask:kin={k_in},kout={k_out},mask={}", mask_str(mask))
+            }
         }
     }
 
+    /// Whether this spec builds per-layer [`FactorizedCompressor`]s (the
+    /// LoGra-hook path) rather than one flat [`Compressor`].
+    pub fn is_factorized(&self) -> bool {
+        matches!(
+            self,
+            MethodSpec::FactGrass { .. }
+                | MethodSpec::LoGra { .. }
+                | MethodSpec::FactSjlt { .. }
+                | MethodSpec::FactMask { .. }
+        )
+    }
+
+    /// Nominal output dimension: the flat `k`, or the **per-layer** `k_l`
+    /// for factorized specs (a bank over `L` layers emits
+    /// [`MethodSpec::bank_output_dim`] total columns).
     pub fn output_dim(&self) -> usize {
         match self {
             MethodSpec::RandomMask { k }
@@ -329,18 +479,57 @@ impl MethodSpec {
             | MethodSpec::Sjlt { k, .. }
             | MethodSpec::Gauss { k }
             | MethodSpec::Fjlt { k }
-            | MethodSpec::Grass { k, .. } => *k,
+            | MethodSpec::Grass { k, .. }
+            | MethodSpec::FactGrass { k, .. } => *k,
+            MethodSpec::LoGra { k_in, k_out }
+            | MethodSpec::FactSjlt { k_in, k_out }
+            | MethodSpec::FactMask { k_in, k_out, .. } => k_in * k_out,
         }
     }
 
-    /// Instantiate the compressor for input dimension `p` and `seed`.
+    /// Per-layer output dim after clamping the factor dims to the layer
+    /// shape — what [`MethodSpec::build_factorized`] will actually emit.
+    pub fn layer_output_dim(&self, d_in: usize, d_out: usize) -> anyhow::Result<usize> {
+        match *self {
+            MethodSpec::FactGrass { k, .. } => Ok(k),
+            MethodSpec::LoGra { k_in, k_out } | MethodSpec::FactMask { k_in, k_out, .. } => {
+                Ok(k_in.min(d_in) * k_out.min(d_out))
+            }
+            MethodSpec::FactSjlt { k_in, k_out } => Ok(k_in * k_out),
+            _ => anyhow::bail!(
+                "flat spec '{}' has no per-layer output dim",
+                self.spec_string()
+            ),
+        }
+    }
+
+    /// Total compressed row width a bank built against `shapes` emits,
+    /// without constructing any projector state — used by the store's
+    /// open-time validation.
+    pub fn bank_output_dim(&self, shapes: &ModelShapes) -> anyhow::Result<usize> {
+        if self.is_factorized() {
+            let mut total = 0;
+            for &(d_in, d_out) in &shapes.layers {
+                total += self.layer_output_dim(d_in, d_out)?;
+            }
+            Ok(total)
+        } else {
+            Ok(self.output_dim())
+        }
+    }
+
+    /// Instantiate the flat compressor for input dimension `p` and `seed`.
+    ///
+    /// # Panics
+    /// On factorized specs — those build per-layer compressors through
+    /// [`MethodSpec::build_bank`] / [`MethodSpec::build_factorized`].
     pub fn build(&self, p: usize, seed: u64) -> Box<dyn Compressor> {
         match *self {
             MethodSpec::RandomMask { k } => Box::new(mask::RandomMask::new(p, k, seed)),
             MethodSpec::SelectiveMask { k } => {
                 // Untrained selective mask degenerates to a random mask with a
-                // distinct stream; `selective::SelectiveMask::from_scores`
-                // builds the trained variant.
+                // distinct stream; `build_with_scores` builds the trained
+                // (graddot-score-backed) variant.
                 Box::new(mask::RandomMask::new(p, k, rng::hash2(seed, 0x5E1E)))
             }
             MethodSpec::Sjlt { k, s } => Box::new(sjlt::Sjlt::new(p, k, s, seed)),
@@ -349,7 +538,172 @@ impl MethodSpec {
             MethodSpec::Grass { k, k_prime, mask } => {
                 Box::new(grass::Grass::new(p, k_prime, k, mask, seed))
             }
+            _ => panic!(
+                "factorized spec '{}' cannot build a flat compressor; use build_bank",
+                self.spec_string()
+            ),
         }
+    }
+
+    /// Flat build routing selective (`sm`-masked) specs through the
+    /// graddot-score-backed stage: `scores` are per-coordinate importance
+    /// values (e.g. a trained [`selective::TrainedMask`]'s scores) and the
+    /// top-k coordinates are kept. Non-selective specs ignore `scores`.
+    pub fn build_with_scores(&self, p: usize, seed: u64, scores: &[f32]) -> Box<dyn Compressor> {
+        assert_eq!(scores.len(), p, "need one importance score per coordinate");
+        match *self {
+            MethodSpec::SelectiveMask { k } => Box::new(
+                selective::TrainedMask {
+                    scores: scores.to_vec(),
+                    corr_history: vec![],
+                }
+                .into_mask(p, k),
+            ),
+            MethodSpec::Grass {
+                k,
+                k_prime,
+                mask: MaskKind::Selective,
+            } => Box::new(grass::Grass::with_scores(p, scores, k_prime, k, seed)),
+            _ => self.build(p, seed),
+        }
+    }
+
+    /// Instantiate one per-layer factorized compressor for a `d_in × d_out`
+    /// linear layer. Factor dims clamp to the layer shape, matching the
+    /// paper's `(2k_in ∧ d_in) ⊗ (2k_out ∧ d_out)` convention.
+    pub fn build_factorized(
+        &self,
+        d_in: usize,
+        d_out: usize,
+        seed: u64,
+    ) -> anyhow::Result<Box<dyn FactorizedCompressor>> {
+        use anyhow::{bail, ensure};
+        Ok(match *self {
+            MethodSpec::FactGrass {
+                k,
+                k_in,
+                k_out,
+                mask,
+            } => {
+                let (ki, ko) = (k_in.min(d_in), k_out.min(d_out));
+                ensure!(
+                    k <= ki * ko,
+                    "spec '{}': k_l = {k} exceeds masked dim {ki}×{ko} (layer {d_in}×{d_out})",
+                    self.spec_string()
+                );
+                Box::new(factgrass::FactGrass::new(d_in, d_out, ki, ko, k, mask, seed))
+            }
+            MethodSpec::LoGra { k_in, k_out } => Box::new(logra::LoGra::new(
+                d_in,
+                d_out,
+                k_in.min(d_in),
+                k_out.min(d_out),
+                seed,
+            )),
+            MethodSpec::FactSjlt { k_in, k_out } => {
+                Box::new(factgrass::FactSjlt::new(d_in, d_out, k_in, k_out, seed))
+            }
+            MethodSpec::FactMask { k_in, k_out, mask } => {
+                // An untrained selective factor mask falls back to random
+                // selection on a distinct stream (same convention as the
+                // flat `sm` spec); trained masks come in through
+                // `build_bank_masked`.
+                let s = match mask {
+                    MaskKind::Random => seed,
+                    MaskKind::Selective => rng::hash2(seed, 0x5E1E),
+                };
+                Box::new(factgrass::FactMask::new(
+                    d_in,
+                    d_out,
+                    k_in.min(d_in),
+                    k_out.min(d_out),
+                    s,
+                ))
+            }
+            _ => bail!(
+                "flat spec '{}' cannot build a factorized compressor; use build",
+                self.spec_string()
+            ),
+        })
+    }
+
+    /// Build the full compressor bank for a model's gradient geometry —
+    /// the **only** construction path the coordinator, CLI, store
+    /// validation, and experiment harnesses use. Flat specs produce a
+    /// [`CompressorBank::Flat`] over `shapes.p`; factorized specs produce
+    /// one per-layer compressor per hooked layer (seeded per layer from
+    /// `seed`, so cache and attribute reconstruct identical projections).
+    pub fn build_bank(&self, shapes: &ModelShapes, seed: u64) -> anyhow::Result<CompressorBank> {
+        self.build_bank_masked(shapes, seed, None)
+    }
+
+    /// [`MethodSpec::build_bank`] with optional trained per-layer factor
+    /// masks for the selective factorized variants (`factmask:..,mask=sm`
+    /// and `factgrass:..,mask=sm`).
+    pub fn build_bank_masked(
+        &self,
+        shapes: &ModelShapes,
+        seed: u64,
+        trained: Option<&LayerMasks>,
+    ) -> anyhow::Result<CompressorBank> {
+        use anyhow::{bail, ensure};
+        if !self.is_factorized() {
+            ensure!(
+                shapes.p > 0,
+                "flat spec '{}' needs a flat gradient dimension (shapes.p = 0)",
+                self.spec_string()
+            );
+            return Ok(CompressorBank::Flat(self.build(shapes.p, seed)));
+        }
+        ensure!(
+            !shapes.layers.is_empty(),
+            "factorized spec '{}' needs hooked layers, but the model exposes none",
+            self.spec_string()
+        );
+        if let Some(masks) = trained {
+            ensure!(
+                masks.len() == shapes.layers.len(),
+                "got trained masks for {} layers, model has {}",
+                masks.len(),
+                shapes.layers.len()
+            );
+        }
+        let mut cs: Vec<Box<dyn FactorizedCompressor>> =
+            Vec::with_capacity(shapes.layers.len());
+        for (li, &(d_in, d_out)) in shapes.layers.iter().enumerate() {
+            let lseed = rng::hash2(seed, li as u64);
+            let c: Box<dyn FactorizedCompressor> = match trained {
+                Some(masks) => {
+                    let (mi, mo) = &masks[li];
+                    let mask_in = mask::RandomMask::from_indices(d_in, mi.clone(), None);
+                    let mask_out = mask::RandomMask::from_indices(d_out, mo.clone(), None);
+                    match *self {
+                        MethodSpec::FactMask { .. } => Box::new(
+                            factgrass::FactMask::with_masks(d_in, d_out, mask_in, mask_out),
+                        ),
+                        MethodSpec::FactGrass { k, .. } => {
+                            ensure!(
+                                k <= mask_in.output_dim() * mask_out.output_dim(),
+                                "spec '{}': k_l = {k} exceeds trained mask dim {}×{} ({li})",
+                                self.spec_string(),
+                                mask_in.output_dim(),
+                                mask_out.output_dim()
+                            );
+                            Box::new(factgrass::FactGrass::with_masks(
+                                d_in, d_out, mask_in, mask_out, k, lseed,
+                            ))
+                        }
+                        _ => bail!(
+                            "spec '{}' does not take trained factor masks",
+                            self.spec_string()
+                        ),
+                    }
+                }
+                None => self.build_factorized(d_in, d_out, lseed)?,
+            };
+            cs.push(c);
+        }
+        Ok(CompressorBank::Factored(cs))
     }
 }
 
@@ -520,6 +874,151 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// Draw a random spec covering every variant (property-test generator).
+    fn random_spec(rng: &mut rng::Pcg) -> MethodSpec {
+        let k = 1 + rng.next_below(64);
+        let k_in = 1 + rng.next_below(16);
+        let k_out = 1 + rng.next_below(16);
+        let mask = if rng.next_f32() < 0.5 {
+            MaskKind::Random
+        } else {
+            MaskKind::Selective
+        };
+        match rng.next_below(10) {
+            0 => MethodSpec::RandomMask { k },
+            1 => MethodSpec::SelectiveMask { k },
+            2 => MethodSpec::Sjlt {
+                k,
+                s: 1 + rng.next_below(k.min(4)),
+            },
+            3 => MethodSpec::Gauss { k },
+            4 => MethodSpec::Fjlt { k },
+            5 => MethodSpec::Grass {
+                k,
+                k_prime: k + rng.next_below(256),
+                mask,
+            },
+            6 => MethodSpec::FactGrass {
+                k: 1 + rng.next_below(k_in * k_out),
+                k_in,
+                k_out,
+                mask,
+            },
+            7 => MethodSpec::LoGra { k_in, k_out },
+            8 => MethodSpec::FactSjlt { k_in, k_out },
+            _ => MethodSpec::FactMask { k_in, k_out, mask },
+        }
+    }
+
+    #[test]
+    fn method_spec_roundtrip_property() {
+        // parse(spec_string(s)) == s for every variant, on 200 random draws.
+        let mut rng = rng::Pcg::new(0x5EC5);
+        for trial in 0..200 {
+            let spec = random_spec(&mut rng);
+            let s = spec.spec_string();
+            let back = MethodSpec::parse(&s)
+                .unwrap_or_else(|e| panic!("trial {trial}: '{s}' failed to parse: {e}"));
+            assert_eq!(back, spec, "trial {trial}: '{s}' did not roundtrip");
+        }
+    }
+
+    #[test]
+    fn build_dims_match_output_dim_property() {
+        // Flat specs: build(p).output_dim() == spec.output_dim().
+        // Factorized specs: every bank member matches layer_output_dim and
+        // the bank total matches bank_output_dim.
+        let mut rng = rng::Pcg::new(0xD1B5);
+        let shapes = ModelShapes::factored(vec![(48, 32), (32, 48), (16, 16)]);
+        let p = 512;
+        for trial in 0..60 {
+            let spec = random_spec(&mut rng);
+            if spec.is_factorized() {
+                let bank = spec
+                    .build_bank(&shapes, 9 + trial as u64)
+                    .unwrap_or_else(|e| panic!("trial {trial} ({}): {e}", spec.spec_string()));
+                let cs = bank.as_factored().unwrap();
+                assert_eq!(cs.len(), shapes.layers.len());
+                for (c, &(d_in, d_out)) in cs.iter().zip(&shapes.layers) {
+                    assert_eq!(
+                        c.output_dim(),
+                        spec.layer_output_dim(d_in, d_out).unwrap(),
+                        "{} on {d_in}×{d_out}",
+                        spec.spec_string()
+                    );
+                }
+                assert_eq!(
+                    bank.output_dim(),
+                    spec.bank_output_dim(&shapes).unwrap(),
+                    "{}",
+                    spec.spec_string()
+                );
+                assert_eq!(bank.layer_dims().iter().sum::<usize>(), bank.output_dim());
+            } else {
+                let spec = match spec {
+                    // keep k' ≤ p for the GraSS draw
+                    MethodSpec::Grass { k, k_prime, mask } => MethodSpec::Grass {
+                        k,
+                        k_prime: k_prime.min(p),
+                        mask,
+                    },
+                    s => s,
+                };
+                let c = spec.build(p, 7 + trial as u64);
+                assert_eq!(c.input_dim(), p, "{}", spec.spec_string());
+                assert_eq!(c.output_dim(), spec.output_dim(), "{}", spec.spec_string());
+                let bank = spec.build_bank(&ModelShapes::flat(p), 7 + trial as u64).unwrap();
+                assert_eq!(bank.output_dim(), spec.output_dim());
+                assert!(bank.as_flat().is_some() && !bank.is_factored());
+            }
+        }
+    }
+
+    #[test]
+    fn factorized_bank_clamps_and_validates() {
+        // kin/kout clamp to the layer shape; the flat/factorized mismatch
+        // paths return descriptive errors rather than panicking.
+        let spec = MethodSpec::LoGra { k_in: 64, k_out: 64 };
+        let bank = spec.build_bank(&ModelShapes::single(16, 8), 1).unwrap();
+        assert_eq!(bank.output_dim(), 16 * 8);
+        assert!(spec
+            .build_bank(&ModelShapes::flat(128), 1)
+            .is_err());
+        let flat = MethodSpec::Sjlt { k: 8, s: 1 };
+        assert!(flat.build_factorized(16, 16, 1).is_err());
+        assert!(flat.build_bank(&ModelShapes::flat(0), 1).is_err());
+        // FactGraSS with k_l too large for the clamped masked dim errors.
+        let fg = MethodSpec::FactGrass {
+            k: 200,
+            k_in: 8,
+            k_out: 8,
+            mask: MaskKind::Random,
+        };
+        assert!(fg.build_factorized(64, 64, 1).is_err());
+    }
+
+    #[test]
+    fn bank_construction_is_seed_deterministic() {
+        // cache and attribute must reconstruct identical projections.
+        let spec = MethodSpec::FactGrass {
+            k: 16,
+            k_in: 8,
+            k_out: 8,
+            mask: MaskKind::Random,
+        };
+        let shapes = ModelShapes::factored(vec![(32, 24), (24, 32)]);
+        let b1 = spec.build_bank(&shapes, 77).unwrap();
+        let b2 = spec.build_bank(&shapes, 77).unwrap();
+        let (c1, c2) = (b1.as_factored().unwrap(), b2.as_factored().unwrap());
+        let mut rng = rng::Pcg::new(3);
+        let t = 3;
+        for (a, b) in c1.iter().zip(c2) {
+            let x: Vec<f32> = (0..t * a.d_in()).map(|_| rng.next_gaussian()).collect();
+            let dy: Vec<f32> = (0..t * a.d_out()).map(|_| rng.next_gaussian()).collect();
+            assert_eq!(a.compress(t, &x, &dy), b.compress(t, &x, &dy));
         }
     }
 

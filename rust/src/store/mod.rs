@@ -8,6 +8,8 @@
 //! memory — at Llama scale the cache is hundreds of GB (n·k·4 bytes) and
 //! this layout is what makes the attribute stage streamable.
 
+use crate::models::shapes::ModelShapes;
+use crate::sketch::MethodSpec;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -16,31 +18,141 @@ use std::path::{Path, PathBuf};
 /// Rows per shard file.
 pub const DEFAULT_SHARD_ROWS: usize = 4096;
 
+/// Self-describing store metadata: everything the attribute stage needs to
+/// reconstruct the exact compressor bank (method spec, seed, gradient
+/// geometry) plus the shard layout. [`StoreReader::open_checked`] validates
+/// a requesting spec against it so a mismatched projection is rejected at
+/// open time instead of silently mis-scoring.
 #[derive(Debug, Clone)]
 pub struct StoreMeta {
-    /// Compressed dimension per row.
+    /// Compressed dimension per row (factorized: `Σ_l k_l`).
     pub k: usize,
     /// Total rows written.
     pub n: usize,
     pub shard_rows: usize,
-    /// Compression method spec string (see `MethodSpec::spec_string`).
+    /// Compression method spec string (see
+    /// [`crate::sketch::MethodSpec::spec_string`]).
     pub method: String,
     /// Seed used for the projection (must match at attribute time).
     pub seed: u64,
+    /// Model the gradients came from (`""` when unknown).
+    pub model: String,
+    /// Flat gradient dimension `p` (0 when factorized or unknown —
+    /// pre-redesign stores did not record geometry).
+    pub input_dim: usize,
+    /// Hooked-layer `(d_in, d_out)` pairs (empty when flat or unknown).
+    pub layer_dims: Vec<(usize, usize)>,
 }
 
 impl StoreMeta {
+    /// A fresh (zero-row) meta for a store about to be written.
+    pub fn describe(
+        spec: &MethodSpec,
+        seed: u64,
+        model: &str,
+        shapes: &ModelShapes,
+        shard_rows: usize,
+    ) -> Result<Self> {
+        Ok(Self {
+            k: spec.bank_output_dim(shapes)?,
+            n: 0,
+            shard_rows,
+            method: spec.spec_string(),
+            seed,
+            model: model.to_string(),
+            input_dim: if spec.is_factorized() { 0 } else { shapes.p },
+            layer_dims: if spec.is_factorized() {
+                shapes.layers.clone()
+            } else {
+                vec![]
+            },
+        })
+    }
+
+    /// Parse the stored method string back into a [`MethodSpec`].
+    pub fn spec(&self) -> Result<MethodSpec> {
+        MethodSpec::parse(&self.method)
+            .with_context(|| format!("store method string '{}' is not a valid spec", self.method))
+    }
+
+    /// The gradient geometry the cache stage recorded (for rebuilding the
+    /// bank at attribute time).
+    pub fn shapes(&self) -> ModelShapes {
+        if self.layer_dims.is_empty() {
+            ModelShapes::flat(self.input_dim)
+        } else {
+            ModelShapes::factored(self.layer_dims.clone())
+        }
+    }
+
+    /// Validate a requesting spec + seed against this store. Errors are
+    /// descriptive: they name the stored and requested values.
+    pub fn check(&self, spec: &MethodSpec, seed: u64) -> Result<()> {
+        let stored = self.spec()?;
+        if stored != *spec {
+            bail!(
+                "store was cached with method '{}' but attribution requested '{}' — \
+                 scores would use mismatched projections",
+                stored.spec_string(),
+                spec.spec_string()
+            );
+        }
+        if self.seed != seed {
+            bail!(
+                "store was cached with seed {} but attribution requested seed {seed} — \
+                 the projections would not match",
+                self.seed
+            );
+        }
+        // Dimension check against the recorded geometry (skipped for
+        // pre-redesign stores that carry no geometry).
+        let shapes = self.shapes();
+        if shapes.p > 0 || !shapes.layers.is_empty() {
+            let expected = spec.bank_output_dim(&shapes)?;
+            if expected != self.k {
+                bail!(
+                    "store row width k = {} does not match the {} columns spec '{}' \
+                     produces on the recorded geometry",
+                    self.k,
+                    expected,
+                    spec.spec_string()
+                );
+            }
+        }
+        Ok(())
+    }
+
     fn to_json(&self) -> Json {
+        let layers = self
+            .layer_dims
+            .iter()
+            .map(|&(i, o)| Json::Arr(vec![Json::Num(i as f64), Json::Num(o as f64)]))
+            .collect();
         Json::obj(vec![
             ("k", Json::Num(self.k as f64)),
             ("n", Json::Num(self.n as f64)),
             ("shard_rows", Json::Num(self.shard_rows as f64)),
             ("method", Json::Str(self.method.clone())),
             ("seed", Json::Num(self.seed as f64)),
+            ("model", Json::Str(self.model.clone())),
+            ("input_dim", Json::Num(self.input_dim as f64)),
+            ("layer_dims", Json::Arr(layers)),
         ])
     }
 
     fn from_json(j: &Json) -> Result<Self> {
+        let layer_dims = j
+            .get("layer_dims")
+            .and_then(|v| v.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|pair| {
+                        let p = pair.as_arr()?;
+                        Some((p.first()?.as_usize()?, p.get(1)?.as_usize()?))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
         Ok(Self {
             k: j.req("k")?.as_usize().ok_or_else(|| anyhow!("bad k"))?,
             n: j.req("n")?.as_usize().ok_or_else(|| anyhow!("bad n"))?,
@@ -50,6 +162,13 @@ impl StoreMeta {
                 .ok_or_else(|| anyhow!("bad shard_rows"))?,
             method: j.req("method")?.as_str().unwrap_or("").to_string(),
             seed: j.req("seed")?.as_u64().unwrap_or(0),
+            model: j
+                .get("model")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            input_dim: j.get("input_dim").and_then(|v| v.as_usize()).unwrap_or(0),
+            layer_dims,
         })
     }
 }
@@ -68,6 +187,9 @@ pub struct StoreWriter {
 }
 
 impl StoreWriter {
+    /// Minimal creation (benches, free-form method strings). Prefer
+    /// [`StoreWriter::create_described`] so the store records the full
+    /// geometry and [`StoreReader::open_checked`] can validate readers.
     pub fn create(
         dir: impl AsRef<Path>,
         k: usize,
@@ -75,17 +197,30 @@ impl StoreWriter {
         seed: u64,
         shard_rows: usize,
     ) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        std::fs::create_dir_all(&dir)?;
-        Ok(Self {
+        Self::create_described(
             dir,
-            meta: StoreMeta {
+            StoreMeta {
                 k,
                 n: 0,
                 shard_rows,
                 method: method.to_string(),
                 seed,
+                model: String::new(),
+                input_dim: 0,
+                layer_dims: vec![],
             },
+        )
+    }
+
+    /// Create from a fully described [`StoreMeta`] (see
+    /// [`StoreMeta::describe`]); the row count restarts at zero.
+    pub fn create_described(dir: impl AsRef<Path>, mut meta: StoreMeta) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        meta.n = 0;
+        Ok(Self {
+            dir,
+            meta,
             current: None,
             rows_in_shard: 0,
             shard_idx: 0,
@@ -160,6 +295,18 @@ impl StoreReader {
             .with_context(|| format!("opening store at {}", dir.display()))?;
         let meta = StoreMeta::from_json(&Json::parse(&text)?)?;
         Ok(Self { dir, meta })
+    }
+
+    /// Open and validate against the requesting method spec + seed: a
+    /// method, seed, or row-width mismatch is a descriptive error instead
+    /// of silently mis-scored attribution (see [`StoreMeta::check`]).
+    pub fn open_checked(dir: impl AsRef<Path>, spec: &MethodSpec, seed: u64) -> Result<Self> {
+        let dir = dir.as_ref();
+        let r = Self::open(dir)?;
+        r.meta
+            .check(spec, seed)
+            .with_context(|| format!("store at {} rejected the requesting spec", dir.display()))?;
+        Ok(r)
     }
 
     pub fn num_shards(&self) -> usize {
@@ -276,5 +423,95 @@ mod tests {
     #[test]
     fn open_missing_store_fails() {
         assert!(StoreReader::open("/nonexistent/grass_store").is_err());
+    }
+
+    #[test]
+    fn open_checked_accepts_matching_spec_and_rejects_mismatches() {
+        use crate::sketch::MethodSpec;
+        let dir = tmpdir("checked");
+        let spec = MethodSpec::Sjlt { k: 8, s: 1 };
+        let meta = StoreMeta::describe(&spec, 42, "synth", &ModelShapes::flat(64), 100).unwrap();
+        let mut w = StoreWriter::create_described(&dir, meta).unwrap();
+        for i in 0..5 {
+            w.push(&vec![i as f32; 8]).unwrap();
+        }
+        w.finish().unwrap();
+
+        // Matching spec + seed opens.
+        let r = StoreReader::open_checked(&dir, &spec, 42).unwrap();
+        assert_eq!(r.meta.n, 5);
+        assert_eq!(r.meta.model, "synth");
+        assert_eq!(r.meta.input_dim, 64);
+
+        // Wrong method: descriptive rejection naming both specs.
+        let err = format!(
+            "{:#}",
+            StoreReader::open_checked(&dir, &MethodSpec::Gauss { k: 8 }, 42).unwrap_err()
+        );
+        assert!(err.contains("sjlt:k=8,s=1"), "{err}");
+        assert!(err.contains("gauss:k=8"), "{err}");
+
+        // Wrong seed: rejected with both values named.
+        let err = format!("{:#}", StoreReader::open_checked(&dir, &spec, 43).unwrap_err());
+        assert!(err.contains("42") && err.contains("43"), "{err}");
+
+        // Same spec family, different k: rejected (width mismatch).
+        let err = format!(
+            "{:#}",
+            StoreReader::open_checked(&dir, &MethodSpec::Sjlt { k: 16, s: 1 }, 42).unwrap_err()
+        );
+        assert!(err.contains("sjlt:k=16"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn factorized_meta_roundtrips_geometry() {
+        use crate::sketch::{MaskKind, MethodSpec};
+        let dir = tmpdir("factmeta");
+        let spec = MethodSpec::FactGrass {
+            k: 16,
+            k_in: 8,
+            k_out: 8,
+            mask: MaskKind::Random,
+        };
+        let shapes = ModelShapes::factored(vec![(32, 24), (24, 32)]);
+        let meta = StoreMeta::describe(&spec, 7, "gpt2_tiny", &shapes, 50).unwrap();
+        assert_eq!(meta.k, 32); // 2 layers × k_l = 16
+        let mut w = StoreWriter::create_described(&dir, meta).unwrap();
+        w.push(&vec![0.5; 32]).unwrap();
+        w.finish().unwrap();
+        let r = StoreReader::open_checked(&dir, &spec, 7).unwrap();
+        assert_eq!(r.meta.shapes(), shapes);
+        assert_eq!(r.meta.spec().unwrap(), spec);
+        // A factorized spec with a different k_l is rejected on width.
+        let other = MethodSpec::FactGrass {
+            k: 32,
+            k_in: 8,
+            k_out: 8,
+            mask: MaskKind::Random,
+        };
+        assert!(StoreReader::open_checked(&dir, &other, 7).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn legacy_meta_without_geometry_still_opens() {
+        // Pre-redesign store.json: no model/input_dim/layer_dims keys.
+        let dir = tmpdir("legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("store.json"),
+            r#"{"k": 4, "n": 0, "shard_rows": 10, "method": "rm:k=4", "seed": 3}"#,
+        )
+        .unwrap();
+        let r = StoreReader::open(&dir).unwrap();
+        assert_eq!(r.meta.model, "");
+        assert_eq!(r.meta.input_dim, 0);
+        assert!(r.meta.layer_dims.is_empty());
+        // check() still validates method + seed even without geometry.
+        use crate::sketch::MethodSpec;
+        assert!(StoreReader::open_checked(&dir, &MethodSpec::RandomMask { k: 4 }, 3).is_ok());
+        assert!(StoreReader::open_checked(&dir, &MethodSpec::RandomMask { k: 4 }, 9).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,238 @@
+//! Integration: the redesigned spec-driven API end to end, with no PJRT
+//! runtime anywhere — synthetic gradients → `MethodSpec::build_bank` →
+//! store → `StoreReader::open_checked` → `attrib::from_spec` →
+//! cache/attribute/self-influence, plus the `grass cache`/`grass
+//! attribute` CLI smoke on the same path.
+
+use grass::attrib::{from_spec, AttributionSpec, Attributor};
+use grass::data::synthgrad::{SYNTH_CLASSES, SYNTH_SEQ, SynthGrads, SynthHooks};
+use grass::models::shapes::ModelShapes;
+use grass::sketch::{MaskKind, MethodSpec, Scratch};
+use grass::store::{StoreMeta, StoreReader, StoreWriter, DEFAULT_SHARD_ROWS};
+use std::path::PathBuf;
+use std::process::Command;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("grass_attr_api_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Cache a flat synthetic store; returns (dir, spec, seed, n, p).
+fn write_flat_store(tag: &str, n: usize, p: usize, seed: u64) -> (PathBuf, MethodSpec) {
+    let dir = tmpdir(tag);
+    let spec = MethodSpec::Sjlt { k: 64, s: 1 };
+    let shapes = ModelShapes::flat(p);
+    let bank = spec.build_bank(&shapes, seed).unwrap();
+    let c = bank.as_flat().unwrap();
+    let meta = StoreMeta::describe(&spec, seed, "synth", &shapes, DEFAULT_SHARD_ROWS).unwrap();
+    let mut w = StoreWriter::create_described(&dir, meta).unwrap();
+    let src = SynthGrads::new(p, seed);
+    let rows = src.rows(0, n);
+    let mut out = vec![0.0f32; n * c.output_dim()];
+    let mut scratch = Scratch::new();
+    c.compress_batch_with(&rows, n, &mut out, &mut scratch);
+    w.push_batch(&out).unwrap();
+    w.finish().unwrap();
+    (dir, spec)
+}
+
+#[test]
+fn spec_store_attributor_end_to_end_with_class_signal() {
+    let (n, p, seed) = (64usize, 512usize, 9u64);
+    let (dir, spec) = write_flat_store("flat", n, p, seed);
+
+    // Validated open + bank reconstruction purely from store metadata.
+    let reader = StoreReader::open_checked(&dir, &spec, seed).unwrap();
+    assert_eq!(reader.meta.spec().unwrap(), spec);
+    let bank = spec.build_bank(&reader.meta.shapes(), reader.meta.seed).unwrap();
+    assert_eq!(bank.output_dim(), reader.meta.k);
+
+    // Wrong spec or seed never reaches scoring.
+    assert!(StoreReader::open_checked(&dir, &MethodSpec::Gauss { k: 64 }, seed).is_err());
+    assert!(StoreReader::open_checked(&dir, &spec, seed + 1).is_err());
+
+    // Registry-built influence scorer over the store. Generous damping so
+    // the preconditioner does not whiten away the planted class structure
+    // this test asserts on (λ → ∞ recovers GradDot direction).
+    let mut aspec = AttributionSpec::new("if", spec.clone(), seed);
+    aspec.damping = 10.0;
+    let mut attributor: Box<dyn Attributor> = from_spec(&aspec).unwrap();
+    let meta = attributor.cache_store(&reader).unwrap();
+    assert_eq!(meta.n, n);
+
+    // Compress fresh synthetic queries with the reconstructed bank.
+    let src = SynthGrads::new(p, seed);
+    let m = 8;
+    let (raw, classes) = src.queries(m);
+    let c = bank.as_flat().unwrap();
+    let mut q = vec![0.0f32; m * c.output_dim()];
+    c.compress_batch(&raw, m, &mut q);
+    let scores = attributor.attribute(&q, m).unwrap();
+    assert_eq!((scores.m, scores.n), (m, n));
+
+    // The planted class structure must survive compression + scoring:
+    // top-4 rows per query are enriched in the query's class.
+    let mut hits = 0usize;
+    for (qi, &class) in classes.iter().enumerate() {
+        hits += scores
+            .top_k(qi, 4)
+            .iter()
+            .filter(|(i, _)| i % SYNTH_CLASSES == class)
+            .count();
+    }
+    let frac = hits as f64 / (m * 4) as f64;
+    assert!(
+        frac > 0.5,
+        "class enrichment too weak: {frac:.2} (chance = {:.2})",
+        1.0 / SYNTH_CLASSES as f64
+    );
+
+    // Self-influence is defined and positive under the PD preconditioner.
+    let si = attributor.self_influence().unwrap();
+    assert_eq!(si.len(), n);
+    assert!(si.iter().all(|&v| v > 0.0));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn factorized_store_blockwise_scorer_end_to_end() {
+    let dir = tmpdir("fact");
+    let (n, seed) = (40usize, 4u64);
+    let spec = MethodSpec::FactGrass {
+        k: 16,
+        k_in: 12,
+        k_out: 12,
+        mask: MaskKind::Random,
+    };
+    let layers = vec![(48usize, 32usize), (32usize, 48usize)];
+    let shapes = ModelShapes::factored(layers.clone());
+    let bank = spec.build_bank(&shapes, seed).unwrap();
+    let cs = bank.as_factored().unwrap();
+    let k = bank.output_dim();
+    assert_eq!(k, 32); // 2 layers × k_l
+
+    let meta = StoreMeta::describe(&spec, seed, "synth", &shapes, DEFAULT_SHARD_ROWS).unwrap();
+    let mut w = StoreWriter::create_described(&dir, meta).unwrap();
+    let hooks = SynthHooks::new(layers, seed);
+    let mut scratch = Scratch::new();
+    let mut row = vec![0.0f32; k];
+    for i in 0..n {
+        let sample = hooks.sample(i);
+        let mut off = 0;
+        for (li, c) in cs.iter().enumerate() {
+            let (x, dy) = &sample[li];
+            c.compress_batch_with(1, SYNTH_SEQ, x, dy, &mut row, k, off, &mut scratch);
+            off += c.output_dim();
+        }
+        w.push(&row).unwrap();
+    }
+    w.finish().unwrap();
+
+    // Reopen through validation, rebuild the bank, score blockwise.
+    let reader = StoreReader::open_checked(&dir, &spec, seed).unwrap();
+    assert_eq!(reader.meta.shapes(), shapes);
+    let bank2 = spec.build_bank(&reader.meta.shapes(), seed).unwrap();
+    let mut aspec = AttributionSpec::new("blockwise", spec.clone(), seed);
+    aspec.damping = 0.1;
+    aspec.layout = bank2.layer_dims();
+    assert_eq!(aspec.total_dim(), k);
+    let mut attributor: Box<dyn Attributor> = from_spec(&aspec).unwrap();
+    attributor.cache_store(&reader).unwrap();
+
+    let m = 4;
+    let cs2 = bank2.as_factored().unwrap();
+    let mut q = vec![0.0f32; m * k];
+    for qi in 0..m {
+        let (sample, _) = hooks.query(qi);
+        let mut off = 0;
+        for (li, c) in cs2.iter().enumerate() {
+            let (x, dy) = &sample[li];
+            c.compress_batch_with(
+                1,
+                SYNTH_SEQ,
+                x,
+                dy,
+                &mut q[qi * k..(qi + 1) * k],
+                k,
+                off,
+                &mut scratch,
+            );
+            off += c.output_dim();
+        }
+    }
+    let scores = attributor.attribute(&q, m).unwrap();
+    assert_eq!((scores.m, scores.n), (m, n));
+    assert!(scores.scores.iter().any(|&v| v != 0.0));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_cache_then_attribute_smoke() {
+    let dir = tmpdir("cli");
+    let dir_s = dir.to_str().unwrap();
+    let exe = env!("CARGO_BIN_EXE_grass");
+
+    // cache → a factorized synthetic store, entirely runtime-free.
+    let out = Command::new(exe)
+        .args([
+            "cache",
+            "--model",
+            "synth",
+            "--method",
+            "factgrass:kin=8,kout=8,kl=16",
+            "--n",
+            "48",
+            "--seed",
+            "5",
+            "--store",
+            dir_s,
+        ])
+        .output()
+        .expect("spawn grass cache");
+    assert!(
+        out.status.success(),
+        "cache failed: {}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // attribute with the influence scorer, rebuilt from store metadata.
+    let out = Command::new(exe)
+        .args([
+            "attribute", "--store", dir_s, "--queries", "4", "--scorer", "if",
+            "--self-influence",
+        ])
+        .output()
+        .expect("spawn grass attribute");
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(
+        out.status.success(),
+        "attribute failed: {stdout}{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("attributed 4 queries"), "{stdout}");
+    assert!(stdout.contains("self-influence"), "{stdout}");
+
+    // A mismatched --method request is rejected, not silently scored.
+    let out = Command::new(exe)
+        .args([
+            "attribute",
+            "--store",
+            dir_s,
+            "--queries",
+            "2",
+            "--method",
+            "logra:kin=4,kout=4",
+        ])
+        .output()
+        .expect("spawn grass attribute mismatch");
+    assert!(
+        !out.status.success(),
+        "mismatched method must fail: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let err = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(err.contains("factgrass"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

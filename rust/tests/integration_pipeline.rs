@@ -5,7 +5,7 @@ use grass::coordinator::{pipeline::Source, CachePipeline, CompressorBank, Pipeli
 use grass::data::corpus::MusicEvents;
 use grass::data::images::SynthDigits;
 use grass::runtime::{Arg, Runtime};
-use grass::sketch::{factgrass::FactGrass, Compressor, FactorizedCompressor, MaskKind, MethodSpec};
+use grass::sketch::{Compressor, MaskKind, MethodSpec};
 use grass::store::StoreReader;
 
 fn runtime() -> Option<Runtime> {
@@ -116,38 +116,32 @@ fn factored_pipeline_runs_music_hooks() {
         .data;
 
     let kl = 16usize;
-    let banks: Vec<Box<dyn FactorizedCompressor>> = meta
-        .layers
-        .iter()
-        .enumerate()
-        .map(|(li, lm)| -> Box<dyn FactorizedCompressor> {
-            Box::new(FactGrass::new(
-                lm.d_in,
-                lm.d_out,
-                8.min(lm.d_in),
-                8.min(lm.d_out),
-                kl,
-                MaskKind::Random,
-                li as u64,
-            ))
-        })
-        .collect();
-    let total_k: usize = banks.iter().map(|b| b.output_dim()).sum();
+    let spec = MethodSpec::FactGrass {
+        k: kl,
+        k_in: 8,
+        k_out: 8,
+        mask: MaskKind::Random,
+    };
+    let bank = spec.build_bank(&meta.shapes(), 0).unwrap();
+    let total_k = bank.output_dim();
 
     let dir = tmpdir("fact");
     let pipeline = CachePipeline::new(&rt, model, params, PipelineConfig::default());
     let meta_store = pipeline
-        .run_factored(
+        .run(
             &Source::Sequences(&data),
-            &CompressorBank::Factored(banks),
+            &bank,
             &dir,
-            "factgrass",
+            &spec.spec_string(),
             0,
         )
         .unwrap();
     assert_eq!(meta_store.n, n);
     assert_eq!(meta_store.k, total_k);
-    let reader = StoreReader::open(&dir).unwrap();
+    // The store is self-describing: a matching spec opens, a mismatched
+    // seed is rejected.
+    let reader = StoreReader::open_checked(&dir, &spec, 0).unwrap();
+    assert!(StoreReader::open_checked(&dir, &spec, 1).is_err());
     let all = reader.read_all().unwrap();
     assert_eq!(all.len(), n * total_k);
     // compressed grads must be non-degenerate
