@@ -2,22 +2,29 @@
 //! compress → store writer) on the MLP workload — the coordinator-level
 //! throughput number (samples/s) that backs EXPERIMENTS.md §Perf.
 //!
-//! Two parts, both recorded in `BENCH_pipeline_e2e.json`:
+//! Three parts, all recorded in `BENCH_pipeline_e2e.json`:
 //!
 //! 1. **Compress stage** (always runs, no artifacts needed): the exact
 //!    work stage 3 performs on one MLP-sized `GradBatch` — measured on the
 //!    old per-sample `compress_into` loop and on the batch-first
 //!    `compress_batch_with` kernel with per-worker scratch, at identical k.
-//! 2. **Full pipeline** (requires `make artifacts`): PJRT gradient workers
+//! 2. **Streamed attribution** (always runs): a synthetic store 4× larger
+//!    than the configured `--mem-budget`, scored out-of-core by the
+//!    streaming influence engine at 1/2/4 workers. Asserts streamed ==
+//!    in-memory scores (≤ 1e-5 rel) and that the configured resident
+//!    buffer allocation stays within the budget.
+//! 3. **Full pipeline** (requires `make artifacts`): PJRT gradient workers
 //!    feeding the batch compress stage and the reordering store writer.
 //!
 //! Run: `cargo bench --bench pipeline_e2e`
 
+use grass::attrib::{Attributor, InfluenceEngine, StreamOpts};
 use grass::coordinator::{pipeline::Source, CachePipeline, CompressorBank, PipelineConfig};
 use grass::data::images::SynthDigits;
 use grass::runtime::{Arg, Runtime};
 use grass::sketch::rng::Pcg;
 use grass::sketch::{Compressor, MethodSpec, Scratch};
+use grass::store::{StoreReader, StoreWriter};
 use grass::util::bench::{self, BenchRecord};
 
 /// The compress stage in isolation: one MLP-sized gradient block through
@@ -66,9 +73,103 @@ fn compress_stage_bench(records: &mut Vec<BenchRecord>) {
     );
 }
 
+/// Out-of-core streamed attribution on a store 4× larger than the memory
+/// budget: correctness against the in-memory engine, then throughput
+/// scaling over worker counts.
+fn streaming_attribute_bench(records: &mut Vec<BenchRecord>) {
+    let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
+    let (n, k, m) = if fast {
+        (1024usize, 128usize, 8usize)
+    } else {
+        (8192, 256, 16)
+    };
+    let store_bytes = n * k * 4;
+    let mem_budget = store_bytes / 4;
+    let dir = std::env::temp_dir().join(format!("grass_bench_stream_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut rng = Pcg::new(17);
+    let rows: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+    let mut w = StoreWriter::create(&dir, k, "bench", 0, 512).expect("store writer");
+    w.push_batch(&rows).expect("push");
+    w.finish().expect("finish");
+    let queries: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
+
+    println!(
+        "== streamed attribution (n={n}, k={k}: store {} KB vs budget {} KB) ==",
+        store_bytes / 1024,
+        mem_budget / 1024
+    );
+    let mut mem_engine = InfluenceEngine::new(k, 0.1);
+    Attributor::cache(&mut mem_engine, &rows, n).expect("in-memory cache");
+    let want = Attributor::attribute(&mem_engine, &queries, m).expect("in-memory attribute");
+    let r_mem = bench::bench("attribute in-memory", || {
+        let _ = Attributor::attribute(&mem_engine, &queries, m).unwrap();
+    });
+    println!("{}", r_mem.report());
+    records.push(BenchRecord::from_duration(
+        "attribute:in_memory:if",
+        n,
+        k,
+        k,
+        r_mem.median,
+    ));
+
+    let reader = StoreReader::open(&dir).expect("reader");
+    let mut w1_secs = 0.0f64;
+    for workers in [1usize, 2, 4] {
+        let opts = StreamOpts {
+            mem_budget,
+            workers,
+            groups: None,
+        };
+        // The acceptance bound: the configured resident buffer allocation
+        // never exceeds the budget, while the store is 4× bigger.
+        assert!(
+            opts.resident_bytes(k) <= mem_budget,
+            "resident {} bytes exceeds the {} byte budget",
+            opts.resident_bytes(k),
+            mem_budget
+        );
+        let mut eng = InfluenceEngine::new(k, 0.1);
+        eng.cache_stream(&reader, &opts).expect("cache_stream");
+        let got = Attributor::attribute(&eng, &queries, m).expect("streamed attribute");
+        for i in 0..m * n {
+            let (a, b) = (got.scores[i], want.scores[i]);
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                "streamed mismatch at {i}: {a} vs {b}"
+            );
+        }
+        let r = bench::bench(&format!("attribute streamed workers={workers}"), || {
+            let _ = Attributor::attribute(&eng, &queries, m).unwrap();
+        });
+        if workers == 1 {
+            w1_secs = r.median_secs();
+        }
+        let speedup = w1_secs / r.median_secs().max(1e-12);
+        println!("{}   <- {speedup:.2}x vs 1 worker", r.report());
+        records.push(
+            BenchRecord::from_duration(
+                &format!("attribute:streamed:if:w={workers}"),
+                n,
+                k,
+                k,
+                r.median,
+            )
+            .with("workers", workers as f64)
+            .with("mem_budget_bytes", mem_budget as f64)
+            .with("resident_bytes", opts.resident_bytes(k) as f64)
+            .with("store_bytes", store_bytes as f64)
+            .with("speedup_vs_1_worker", speedup),
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn main() {
     let mut records: Vec<BenchRecord> = Vec::new();
     compress_stage_bench(&mut records);
+    streaming_attribute_bench(&mut records);
 
     let dir = Runtime::artifacts_dir();
     if !dir.join("manifest.json").exists() {
@@ -101,6 +202,7 @@ fn main() {
                     compress_workers: cw,
                     queue_depth: 4,
                     shard_rows: 4096,
+                    ..PipelineConfig::default()
                 },
             );
             let _ = std::fs::remove_dir_all(&store);

@@ -5,7 +5,9 @@
 //! the GPT-2/WikiText (Table 1d) and Llama (Table 2) experiments.
 
 use super::fim::{accumulate_fim, Preconditioner};
-use super::{Attributor, ScoreMatrix};
+use super::stream::{StreamOpts, StreamedCache};
+use super::{check_store_width, Attributor, ScoreMatrix};
+use crate::store::{StoreMeta, StoreReader};
 use anyhow::{bail, Result};
 
 /// Layout of concatenated per-layer compressed gradients.
@@ -47,11 +49,18 @@ struct CachedBlocks {
     n: usize,
 }
 
+/// Dual-mode cache: resident preconditioned blocks, or the streamed state
+/// (per-block preconditioners; rows re-stream at attribute time).
+enum BwCache {
+    Mem(CachedBlocks),
+    Streamed(StreamedCache),
+}
+
 /// Block-diagonal influence engine over concatenated per-layer vectors.
 pub struct BlockwiseEngine {
     pub layout: BlockLayout,
     pub damping: f64,
-    cached: Option<CachedBlocks>,
+    cached: Option<BwCache>,
 }
 
 impl BlockwiseEngine {
@@ -118,26 +127,43 @@ impl Attributor for BlockwiseEngine {
     fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
         let pre = self.precondition(grads, n)?;
         let self_inf = super::influence::rowwise_dot(grads, &pre, n, self.layout.total());
-        self.cached = Some(CachedBlocks { pre, self_inf, n });
+        self.cached = Some(BwCache::Mem(CachedBlocks { pre, self_inf, n }));
         Ok(())
+    }
+
+    fn cache_stream(&mut self, reader: &StoreReader, opts: &StreamOpts) -> Result<StoreMeta> {
+        check_store_width(self.name(), self.dim(), reader)?;
+        let sc = StreamedCache::build(reader, opts, self.layout.clone(), Some(self.damping))?;
+        self.cached = Some(BwCache::Streamed(sc));
+        Ok(reader.meta.clone())
     }
 
     fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
         let Some(c) = &self.cached else {
             bail!("blockwise engine has no cached train set; call cache() first")
         };
-        Ok(ScoreMatrix::new(
-            self.scores(&c.pre, c.n, queries, m),
-            m,
-            c.n,
-        ))
+        match c {
+            BwCache::Mem(c) => Ok(ScoreMatrix::new(
+                self.scores(&c.pre, c.n, queries, m),
+                m,
+                c.n,
+            )),
+            BwCache::Streamed(sc) => Ok(ScoreMatrix::new(
+                sc.scores(queries, m)?,
+                m,
+                sc.out_cols(),
+            )),
+        }
     }
 
     fn self_influence(&self) -> Result<Vec<f32>> {
         let Some(c) = &self.cached else {
             bail!("blockwise engine has no cached train set; call cache() first")
         };
-        Ok(c.self_inf.clone())
+        Ok(match c {
+            BwCache::Mem(c) => c.self_inf.clone(),
+            BwCache::Streamed(sc) => sc.self_inf().to_vec(),
+        })
     }
 }
 

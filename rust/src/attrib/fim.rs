@@ -74,6 +74,16 @@ impl FimAccumulator {
         self.n
     }
 
+    /// Fold another accumulator (e.g. a per-worker partial from the
+    /// shard-parallel streaming ingest) into this one.
+    pub fn merge(&mut self, other: FimAccumulator) {
+        assert_eq!(self.k, other.k, "merging FIM accumulators of different k");
+        for (a, b) in self.sum.iter_mut().zip(&other.sum) {
+            *a += b;
+        }
+        self.n += other.n;
+    }
+
     pub fn finish(&self) -> Vec<f32> {
         let n = self.n.max(1) as f64;
         self.sum.iter().map(|&v| (v / n) as f32).collect()
@@ -148,6 +158,25 @@ mod tests {
         let streamed = acc.finish();
         for i in 0..k * k {
             assert!((batch[i] - streamed[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn merged_partial_accumulators_match_single() {
+        let (n, k) = (19, 5);
+        let mut rng = Pcg::new(7);
+        let g: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let mut whole = FimAccumulator::new(k);
+        whole.add_batch(&g);
+        let mut a = FimAccumulator::new(k);
+        let mut b = FimAccumulator::new(k);
+        a.add_batch(&g[..7 * k]);
+        b.add_batch(&g[7 * k..]);
+        a.merge(b);
+        assert_eq!(a.count(), n);
+        let (fa, fw) = (a.finish(), whole.finish());
+        for i in 0..k * k {
+            assert!((fa[i] - fw[i]).abs() < 1e-6);
         }
     }
 

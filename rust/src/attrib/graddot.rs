@@ -2,8 +2,11 @@
 //! surrogate the Selective Mask objective (Eq. 1) targets, and a baseline
 //! attributor in its own right.
 
-use super::{Attributor, ScoreMatrix};
+use super::blockwise::BlockLayout;
+use super::stream::{StreamOpts, StreamedCache};
+use super::{check_store_width, Attributor, ScoreMatrix};
 use crate::linalg::matmul::matmul_abt;
+use crate::store::{StoreMeta, StoreReader};
 use anyhow::{bail, Result};
 
 /// `scores[q][i] = ⟨g_q, g_i⟩` over `n × k` train and `m × k` query
@@ -18,20 +21,28 @@ pub fn graddot_scores(grads: &[f32], n: usize, k: usize, queries: &[f32], m: usi
     scores
 }
 
+/// Dual-mode GradDot cache: the resident train matrix, or the streamed
+/// state (store handle + self-influence diagonal; rows re-stream at
+/// attribute time).
+enum GdCache {
+    Empty,
+    Mem { train: Vec<f32>, n: usize },
+    Streamed(StreamedCache),
+}
+
 /// The GradDot scorer as a stateful [`Attributor`]: `cache` keeps the
-/// compressed train matrix, `attribute` is one `Q · Gᵀ` GEMM.
+/// compressed train matrix (`cache_stream` keeps only the store handle),
+/// `attribute` is one `Q · Gᵀ` GEMM — dense, or streamed block by block.
 pub struct GradDot {
     k: usize,
-    train: Vec<f32>,
-    n: usize,
+    cached: GdCache,
 }
 
 impl GradDot {
     pub fn new(k: usize) -> Self {
         Self {
             k,
-            train: vec![],
-            n: 0,
+            cached: GdCache::Empty,
         }
     }
 }
@@ -49,31 +60,50 @@ impl Attributor for GradDot {
         if grads.len() != n * self.k {
             bail!("graddot cache: got {} values for n = {n}, k = {}", grads.len(), self.k);
         }
-        self.train = grads.to_vec();
-        self.n = n;
+        self.cached = GdCache::Mem {
+            train: grads.to_vec(),
+            n,
+        };
         Ok(())
     }
 
+    fn cache_stream(&mut self, reader: &StoreReader, opts: &StreamOpts) -> Result<StoreMeta> {
+        check_store_width(self.name(), self.dim(), reader)?;
+        // No preconditioning (damping = None): raw rows score directly.
+        let sc = StreamedCache::build(reader, opts, BlockLayout::new(vec![self.k]), None)?;
+        self.cached = GdCache::Streamed(sc);
+        Ok(reader.meta.clone())
+    }
+
     fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
-        if self.n == 0 {
-            bail!("graddot scorer has no cached train set; call cache() first");
+        match &self.cached {
+            GdCache::Empty => {
+                bail!("graddot scorer has no cached train set; call cache() first")
+            }
+            GdCache::Mem { train, n } => Ok(ScoreMatrix::new(
+                graddot_scores(train, *n, self.k, queries, m),
+                m,
+                *n,
+            )),
+            GdCache::Streamed(sc) => Ok(ScoreMatrix::new(
+                sc.scores(queries, m)?,
+                m,
+                sc.out_cols(),
+            )),
         }
-        Ok(ScoreMatrix::new(
-            graddot_scores(&self.train, self.n, self.k, queries, m),
-            m,
-            self.n,
-        ))
     }
 
     fn self_influence(&self) -> Result<Vec<f32>> {
-        if self.n == 0 {
-            bail!("graddot scorer has no cached train set; call cache() first");
+        match &self.cached {
+            GdCache::Empty => {
+                bail!("graddot scorer has no cached train set; call cache() first")
+            }
+            GdCache::Mem { train, .. } => Ok(train
+                .chunks(self.k)
+                .map(|g| g.iter().map(|v| v * v).sum())
+                .collect()),
+            GdCache::Streamed(sc) => Ok(sc.self_inf().to_vec()),
         }
-        Ok(self
-            .train
-            .chunks(self.k)
-            .map(|g| g.iter().map(|v| v * v).sum())
-            .collect())
     }
 }
 

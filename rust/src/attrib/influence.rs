@@ -1,8 +1,11 @@
 //! The monolithic-FIM influence engine: cache + attribute over a compressed
 //! gradient matrix, with the paper's damping grid search (App. B.2).
 
+use super::blockwise::BlockLayout;
 use super::fim::{accumulate_fim, Preconditioner};
-use super::{Attributor, ScoreMatrix};
+use super::stream::{StreamOpts, StreamedCache};
+use super::{check_store_width, Attributor, ScoreMatrix};
+use crate::store::{StoreMeta, StoreReader};
 use anyhow::{bail, Result};
 
 /// Candidate damping grid from the paper:
@@ -24,6 +27,14 @@ struct CachedTrainSet {
     n: usize,
 }
 
+/// Dual-mode cache: the in-memory preconditioned matrix, or the streamed
+/// state (O(k²) preconditioner + O(n) self-influence, rows re-streamed
+/// from the store at attribute time).
+enum TrainCache {
+    Mem(CachedTrainSet),
+    Streamed(StreamedCache),
+}
+
 /// Row-wise `⟨raw_i, pre_i⟩` — the self-influence diagonal (shared with
 /// the blockwise and TRAK engines).
 pub(super) fn rowwise_dot(raw: &[f32], pre: &[f32], n: usize, k: usize) -> Vec<f32> {
@@ -41,7 +52,7 @@ pub(super) fn rowwise_dot(raw: &[f32], pre: &[f32], n: usize, k: usize) -> Vec<f
 pub struct InfluenceEngine {
     pub k: usize,
     pub damping: f64,
-    cached: Option<CachedTrainSet>,
+    cached: Option<TrainCache>,
 }
 
 impl InfluenceEngine {
@@ -98,26 +109,48 @@ impl Attributor for InfluenceEngine {
     fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
         let pre = self.precondition(grads, n)?;
         let self_inf = rowwise_dot(grads, &pre, n, self.k);
-        self.cached = Some(CachedTrainSet { pre, self_inf, n });
+        self.cached = Some(TrainCache::Mem(CachedTrainSet { pre, self_inf, n }));
         Ok(())
+    }
+
+    fn cache_stream(&mut self, reader: &StoreReader, opts: &StreamOpts) -> Result<StoreMeta> {
+        check_store_width(self.name(), self.dim(), reader)?;
+        let sc = StreamedCache::build(
+            reader,
+            opts,
+            BlockLayout::new(vec![self.k]),
+            Some(self.damping),
+        )?;
+        self.cached = Some(TrainCache::Streamed(sc));
+        Ok(reader.meta.clone())
     }
 
     fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
         let Some(c) = &self.cached else {
             bail!("influence engine has no cached train set; call cache() first")
         };
-        Ok(ScoreMatrix::new(
-            self.scores(&c.pre, c.n, queries, m),
-            m,
-            c.n,
-        ))
+        match c {
+            TrainCache::Mem(c) => Ok(ScoreMatrix::new(
+                self.scores(&c.pre, c.n, queries, m),
+                m,
+                c.n,
+            )),
+            TrainCache::Streamed(sc) => Ok(ScoreMatrix::new(
+                sc.scores(queries, m)?,
+                m,
+                sc.out_cols(),
+            )),
+        }
     }
 
     fn self_influence(&self) -> Result<Vec<f32>> {
         let Some(c) = &self.cached else {
             bail!("influence engine has no cached train set; call cache() first")
         };
-        Ok(c.self_inf.clone())
+        Ok(match c {
+            TrainCache::Mem(c) => c.self_inf.clone(),
+            TrainCache::Streamed(sc) => sc.self_inf().to_vec(),
+        })
     }
 }
 

@@ -6,12 +6,13 @@
 //!   attribute — `τ(z_i, z_q) = ⟨ĝ_q, g̃̂_i⟩`.
 //!
 //! Every attribution engine implements the unified [`Attributor`] trait —
-//! `cache` ingests the compressed train gradients (in memory or streamed
-//! from a [`StoreReader`]), `attribute` scores compressed queries, and
-//! `self_influence` reports `τ(z_i, z_i)`. [`from_spec`] is the registry:
-//! it dispatches an [`AttributionSpec`]'s scorer string to the right
-//! engine, so the CLI, coordinator, and experiment harnesses share one
-//! construction path.
+//! `cache` ingests an in-memory compressed train matrix, `cache_stream`
+//! ingests a [`StoreReader`] out-of-core (shard-at-a-time accumulation
+//! under a [`StreamOpts::mem_budget`] byte budget — see [`stream`]),
+//! `attribute` scores compressed queries, and `self_influence` reports
+//! `τ(z_i, z_i)`. [`from_spec`] is the registry: it dispatches an
+//! [`AttributionSpec`]'s scorer string to the right engine, so the CLI,
+//! coordinator, and experiment harnesses share one construction path.
 //!
 //! [`fim`] builds and inverts the compressed FIM; [`influence`] is the
 //! monolithic-FIM engine (TRAK-style models); [`blockwise`] is the
@@ -23,15 +24,17 @@ pub mod blockwise;
 pub mod fim;
 pub mod graddot;
 pub mod influence;
+pub mod stream;
 pub mod tracin;
 pub mod trak;
 
 pub use fim::Preconditioner;
 pub use influence::InfluenceEngine;
+pub use stream::{StreamOpts, DEFAULT_MEM_BUDGET};
 
 use crate::sketch::MethodSpec;
 use crate::store::{StoreMeta, StoreReader};
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 /// An `m × n` (queries × train samples) attribution score matrix.
 #[derive(Debug, Clone)]
@@ -113,11 +116,31 @@ impl AttributionSpec {
 /// A unified attribution engine over compressed gradients (§2.1's
 /// cache→attribute stages behind one object-safe interface).
 ///
-/// The contract: call [`Attributor::cache`] (one or more times — ensemble
-/// scorers like TRAK/TracIn treat each call as one checkpoint) and then
-/// [`Attributor::attribute`] / [`Attributor::self_influence`] any number of
-/// times. All matrices are row-major with the engine's fixed inner
-/// dimension [`Attributor::dim`].
+/// The contract: call [`Attributor::cache`] / [`Attributor::cache_stream`]
+/// (one or more times — ensemble scorers like TRAK/TracIn treat each call
+/// as one checkpoint) and then [`Attributor::attribute`] /
+/// [`Attributor::self_influence`] any number of times. All matrices are
+/// row-major with the engine's fixed inner dimension [`Attributor::dim`].
+///
+/// Ingest is dual-mode: [`Attributor::cache`] holds the train matrix (or
+/// its preconditioned image) in memory, while [`Attributor::cache_stream`]
+/// accumulates only O(k²) Gram state plus the self-influence diagonal and
+/// re-streams the store at attribute time under a byte budget — the two
+/// produce identical scores.
+///
+/// # Examples
+///
+/// ```
+/// use grass::attrib::{from_spec, AttributionSpec};
+/// use grass::sketch::MethodSpec;
+///
+/// let spec = AttributionSpec::new("graddot", MethodSpec::RandomMask { k: 2 }, 0);
+/// let mut scorer = from_spec(&spec).unwrap();
+/// scorer.cache(&[1.0, 0.0, 0.0, 1.0], 2).unwrap(); // two train rows
+/// let scores = scorer.attribute(&[1.0, 0.0], 1).unwrap(); // one query
+/// assert_eq!(scores.row(0), &[1.0, 0.0]);
+/// assert_eq!(scorer.self_influence().unwrap(), vec![1.0, 1.0]);
+/// ```
 pub trait Attributor {
     /// Registry id of this scorer (`"if"`, `"graddot"`, …).
     fn name(&self) -> &'static str;
@@ -129,20 +152,33 @@ pub trait Attributor {
     /// build whatever state scoring needs (FIM, preconditioned cache).
     fn cache(&mut self, grads: &[f32], n: usize) -> Result<()>;
 
-    /// Cache stage streamed from a finished gradient store; returns the
-    /// store's (self-describing) metadata.
-    fn cache_store(&mut self, reader: &StoreReader) -> Result<StoreMeta> {
-        if reader.meta.k != self.dim() {
-            bail!(
-                "store rows have k = {} but the {} scorer was built for k = {}",
-                reader.meta.k,
-                self.name(),
-                self.dim()
-            );
-        }
+    /// Cache stage streamed out-of-core from a finished gradient store:
+    /// the engine folds shard-at-a-time row blocks into its Gram /
+    /// precondition state under [`StreamOpts::mem_budget`], retains a
+    /// handle to the store, and re-streams it at attribute time instead of
+    /// materialising the `n × k` matrix. With [`StreamOpts::groups`] set,
+    /// scores aggregate per row group (GGDA-style).
+    ///
+    /// The default implementation falls back to the in-memory ingest for
+    /// engines without a streaming accumulator; all built-in scorers
+    /// override it with true streaming.
+    fn cache_stream(&mut self, reader: &StoreReader, opts: &StreamOpts) -> Result<StoreMeta> {
+        check_store_width(self.name(), self.dim(), reader)?;
+        ensure!(
+            opts.groups.is_none(),
+            "the {} scorer has no streaming implementation, which grouped scoring requires",
+            self.name()
+        );
         let grads = reader.read_all()?;
         self.cache(&grads, reader.meta.n)?;
         Ok(reader.meta.clone())
+    }
+
+    /// Cache stage from a finished gradient store; streams with default
+    /// options (see [`Attributor::cache_stream`]) and returns the store's
+    /// (self-describing) metadata.
+    fn cache_store(&mut self, reader: &StoreReader) -> Result<StoreMeta> {
+        self.cache_stream(reader, &StreamOpts::default())
     }
 
     /// Attribute stage: score an `m × k` compressed query matrix against
@@ -151,6 +187,18 @@ pub trait Attributor {
 
     /// Self-influence `τ(z_i, z_i)` of every cached train sample.
     fn self_influence(&self) -> Result<Vec<f32>>;
+}
+
+/// Shared open-time width check: a store whose rows are not the scorer's
+/// `k` is rejected before any shard is read.
+pub fn check_store_width(name: &str, dim: usize, reader: &StoreReader) -> Result<()> {
+    if reader.meta.k != dim {
+        bail!(
+            "store rows have k = {} but the {name} scorer was built for k = {dim}",
+            reader.meta.k
+        );
+    }
+    Ok(())
 }
 
 /// Registry: build the [`Attributor`] an [`AttributionSpec`] asks for,

@@ -1,0 +1,564 @@
+//! Out-of-core streaming attribution: the shard-at-a-time ingest and
+//! scoring passes behind [`Attributor::cache_stream`].
+//!
+//! The in-memory path materialises the full `n × k` compressed-gradient
+//! matrix; at the ROADMAP's million-row scale that matrix is the largest
+//! allocation in the process. The streaming path inverts the data-flow
+//! contract — scorers become accumulators over shard streams instead of
+//! consumers of a dense matrix:
+//!
+//! 1. **Ingest** ([`Attributor::cache_stream`]) — stream the selected row
+//!    blocks, folding each into per-block Gram/FIM accumulators (for the
+//!    preconditioned scorers) and the eagerly computed self-influence
+//!    diagonal. Only O(k²) Gram state plus an O(n) diagonal stay resident.
+//! 2. **Score** ([`Attributor::attribute`]) — re-stream the store:
+//!    each worker preconditions its block in place and scores it against
+//!    the query matrix with the tiled GEMM, writing score columns
+//!    incrementally. Workers never hold more than one block.
+//!
+//! [`StreamOpts::mem_budget`] bounds the resident streaming buffers:
+//! `workers × chunk_rows × k × 4 bytes × 2` (each worker owns one row
+//! buffer plus an equally sized scratch used for transformed copies and
+//! score blocks). The query block (`m × k`) and the output score matrix
+//! (`m × out_cols`) sit outside the budget — they are the caller's inputs
+//! and outputs, not streaming state.
+//!
+//! Row-group selection ([`RowGroups`]) turns per-row score columns into
+//! per-group columns (GGDA-style grouped attribution): every member row's
+//! score is accumulated into its group's column, and the preconditioners
+//! are fit on the selected rows only.
+//!
+//! [`Attributor::cache_stream`]: super::Attributor::cache_stream
+//! [`Attributor::attribute`]: super::Attributor::attribute
+
+use super::blockwise::BlockLayout;
+use super::fim::{FimAccumulator, Preconditioner};
+use crate::store::{RowGroups, StoreReader};
+use crate::util::par;
+use anyhow::{anyhow, ensure, Result};
+use std::ops::Range;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Default streaming buffer budget: 256 MiB.
+pub const DEFAULT_MEM_BUDGET: usize = 256 << 20;
+
+/// Tuning for the streamed cache/attribute passes.
+#[derive(Debug, Clone)]
+pub struct StreamOpts {
+    /// Byte budget for the resident streaming buffers across all workers
+    /// ([`StreamOpts::resident_bytes`] never exceeds it, down to the
+    /// one-row-per-worker floor).
+    pub mem_budget: usize,
+    /// Streaming worker threads; 0 = available parallelism.
+    pub workers: usize,
+    /// Optional row-group selection: scores and self-influence aggregate
+    /// into one column per group instead of one per train row.
+    pub groups: Option<RowGroups>,
+}
+
+impl Default for StreamOpts {
+    fn default() -> Self {
+        Self {
+            mem_budget: DEFAULT_MEM_BUDGET,
+            workers: 0,
+            groups: None,
+        }
+    }
+}
+
+impl StreamOpts {
+    /// Default options under an explicit byte budget.
+    pub fn with_budget(mem_budget: usize) -> Self {
+        Self {
+            mem_budget,
+            ..Self::default()
+        }
+    }
+
+    /// Worker threads the streaming passes will actually use.
+    pub fn effective_workers(&self) -> usize {
+        if self.workers == 0 {
+            par::num_threads()
+        } else {
+            self.workers
+        }
+        .max(1)
+    }
+
+    /// Rows per streamed block: the largest count that keeps every
+    /// worker's two `chunk_rows × k` f32 buffers inside the budget
+    /// (floored at one row).
+    pub fn chunk_rows(&self, k: usize) -> usize {
+        let per_row = 2 * 4 * k.max(1);
+        (self.mem_budget / (self.effective_workers() * per_row)).max(1)
+    }
+
+    /// The configured resident buffer allocation the budget bounds:
+    /// `workers × chunk_rows × k × 4 × 2` bytes.
+    pub fn resident_bytes(&self, k: usize) -> usize {
+        self.effective_workers() * self.chunk_rows(k) * 2 * 4 * k.max(1)
+    }
+
+    /// Selected row ranges (empty = the whole store).
+    pub fn ranges(&self) -> Vec<Range<usize>> {
+        self.groups
+            .as_ref()
+            .map(|g| g.ranges.clone())
+            .unwrap_or_default()
+    }
+
+    /// Rows the selection covers in a store of `n` rows.
+    pub fn selected_rows(&self, n: usize) -> usize {
+        self.groups.as_ref().map(|g| g.total_rows()).unwrap_or(n)
+    }
+
+    /// Score columns the scorer emits: one per group, else one per row.
+    pub fn out_cols(&self, n: usize) -> usize {
+        self.groups.as_ref().map(|g| g.len()).unwrap_or(n)
+    }
+}
+
+/// Precondition a row-major chunk in place, block by block:
+/// `row[l] ← (F_l + λI)⁻¹ row[l]`. An empty `pres` is the identity (the
+/// GradDot family scores raw rows).
+pub(crate) fn precondition_chunk(
+    buf: &mut [f32],
+    rows: usize,
+    layout: &BlockLayout,
+    pres: &[Preconditioner],
+) {
+    if pres.is_empty() {
+        return;
+    }
+    debug_assert_eq!(pres.len(), layout.dims.len());
+    let total = layout.total();
+    for row in buf[..rows * total].chunks_mut(total) {
+        for (l, pre) in pres.iter().enumerate() {
+            let (s, e) = (layout.offsets[l], layout.offsets[l + 1]);
+            let solved = pre.apply(&row[s..e]);
+            row[s..e].copy_from_slice(&solved);
+        }
+    }
+}
+
+/// Ingest pass of the preconditioned scorers: accumulate one
+/// `k_l × k_l` FIM per layout block over the selected rows, shard-parallel
+/// with per-worker [`FimAccumulator`]s merged at the end. Returns the
+/// per-block FIMs plus the number of rows folded in.
+///
+/// This owns its worker pool instead of going through
+/// `StoreReader::par_for_each_block` because it needs long-lived
+/// *per-worker* accumulator state: each `FimAccumulator` is `k² × 8`
+/// bytes, so allocating/merging one per block (the closure-only
+/// alternative) would thrash at large `k`, while one per worker amortises
+/// to a single merge per worker at the end.
+pub(crate) fn stream_block_fims(
+    reader: &StoreReader,
+    opts: &StreamOpts,
+    layout: &BlockLayout,
+) -> Result<(Vec<Vec<f32>>, usize)> {
+    let k = reader.meta.k;
+    ensure!(
+        layout.total() == k,
+        "stream layout totals {} but store rows have k = {k}",
+        layout.total()
+    );
+    let ranges = opts.ranges();
+    let blocks = reader.plan_blocks(opts.chunk_rows(k), &ranges);
+    let max_rows = blocks.iter().map(|b| b.rows).max().unwrap_or(0);
+    let workers = opts.effective_workers().min(blocks.len()).max(1);
+    let next = AtomicUsize::new(0);
+    let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let parts: Vec<(Vec<FimAccumulator>, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let error = &error;
+                let blocks = &blocks;
+                s.spawn(move || {
+                    let mut accs: Vec<FimAccumulator> =
+                        layout.dims.iter().map(|&d| FimAccumulator::new(d)).collect();
+                    let mut buf = vec![0.0f32; max_rows * k];
+                    let mut seen = 0usize;
+                    loop {
+                        if error.lock().unwrap().is_some() {
+                            break;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= blocks.len() {
+                            break;
+                        }
+                        let b = blocks[i];
+                        if let Err(e) = reader.read_rows(b.start, b.rows, &mut buf[..b.rows * k])
+                        {
+                            let mut g = error.lock().unwrap();
+                            if g.is_none() {
+                                *g = Some(e);
+                            }
+                            break;
+                        }
+                        for row in buf[..b.rows * k].chunks(k) {
+                            for (l, acc) in accs.iter_mut().enumerate() {
+                                acc.add_row(layout.slice(row, l));
+                            }
+                        }
+                        seen += b.rows;
+                    }
+                    (accs, seen)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    if let Some(e) = error.into_inner().unwrap() {
+        return Err(e);
+    }
+    let mut merged: Vec<FimAccumulator> =
+        layout.dims.iter().map(|&d| FimAccumulator::new(d)).collect();
+    let mut n_seen = 0usize;
+    for (accs, seen) in parts {
+        n_seen += seen;
+        for (m, a) in merged.iter_mut().zip(accs) {
+            m.merge(a);
+        }
+    }
+    Ok((merged.iter().map(|a| a.finish()).collect(), n_seen))
+}
+
+/// The self-influence diagonal `τ(z_i, z_i) = ⟨g_i, g̃_i⟩` over the
+/// selected rows, streamed: one entry per row, or per-group sums under
+/// grouping. `pres` empty means `g̃ = g` (plain squared norms).
+pub(crate) fn stream_self_influence(
+    reader: &StoreReader,
+    opts: &StreamOpts,
+    layout: &BlockLayout,
+    pres: &[Preconditioner],
+) -> Result<Vec<f32>> {
+    let k = reader.meta.k;
+    let out_len = opts.out_cols(reader.meta.n);
+    // f64 for the same scheduling-stability reason as `stream_scores`;
+    // per-row entries are written once, so that path stays lossless.
+    let out = Mutex::new(vec![0.0f64; out_len]);
+    let ranges = opts.ranges();
+    reader.par_for_each_block(
+        opts.chunk_rows(k),
+        &ranges,
+        opts.effective_workers(),
+        |_, b, data, scratch| {
+            if scratch.len() < data.len() {
+                scratch.resize(data.len(), 0.0);
+            }
+            scratch[..data.len()].copy_from_slice(data);
+            precondition_chunk(&mut scratch[..data.len()], b.rows, layout, pres);
+            let mut local = vec![0.0f32; b.rows];
+            for (j, (raw, pre)) in data
+                .chunks(k)
+                .zip(scratch[..data.len()].chunks(k))
+                .enumerate()
+            {
+                local[j] = raw.iter().zip(pre).map(|(a, p)| a * p).sum();
+            }
+            let gi = match &opts.groups {
+                Some(groups) => Some(groups.group_of(b.start).ok_or_else(|| {
+                    anyhow!("row {} falls outside every row group", b.start)
+                })?),
+                None => None,
+            };
+            let mut g = out.lock().unwrap();
+            match gi {
+                Some(gi) => g[gi] += local.iter().map(|&v| v as f64).sum::<f64>(),
+                None => {
+                    for (d, &v) in g[b.start..b.start + b.rows].iter_mut().zip(&local) {
+                        *d = v as f64;
+                    }
+                }
+            }
+            Ok(())
+        },
+    )?;
+    Ok(out
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|v| v as f32)
+        .collect())
+}
+
+/// Score pass: stream the selected rows, precondition each worker-local
+/// block in place, and score it against the `m × k` query matrix. Returns
+/// row-major `m × out_cols` scores — per-row columns written incrementally
+/// as blocks complete, or per-group accumulated columns under grouping.
+pub(crate) fn stream_scores(
+    reader: &StoreReader,
+    opts: &StreamOpts,
+    queries: &[f32],
+    m: usize,
+    layout: &BlockLayout,
+    pres: &[Preconditioner],
+) -> Result<Vec<f32>> {
+    let k = reader.meta.k;
+    ensure!(
+        queries.len() == m * k,
+        "query block holds {} values, expected m = {m} × k = {k}",
+        queries.len()
+    );
+    let out_cols = opts.out_cols(reader.meta.n);
+    if m == 0 || out_cols == 0 {
+        return Ok(vec![0.0f32; m * out_cols]);
+    }
+    // f64 accumulation: grouped columns sum many block partials whose
+    // completion order varies across runs — f64 keeps the result stable to
+    // f32 precision regardless of worker scheduling. Per-row columns are
+    // written once (f32 → f64 → f32 is lossless), so the ungrouped path
+    // stays bit-identical to the in-memory GEMM.
+    let scores = Mutex::new(vec![0.0f64; m * out_cols]);
+    let chunk_rows = opts.chunk_rows(k);
+    // The GEMM scratch honours the same budget as the row buffer: score
+    // the block in spans of at most ⌈chunk_rows·k / m⌉ rows, so worker
+    // scratch never exceeds max(chunk_rows × k, m) floats.
+    let span = (chunk_rows * k / m).max(1);
+    let ranges = opts.ranges();
+    reader.par_for_each_block(
+        chunk_rows,
+        &ranges,
+        opts.effective_workers(),
+        |_, b, data, scratch| {
+            precondition_chunk(data, b.rows, layout, pres);
+            let gi = match &opts.groups {
+                Some(groups) => Some(groups.group_of(b.start).ok_or_else(|| {
+                    anyhow!("row {} falls outside every row group", b.start)
+                })?),
+                None => None,
+            };
+            let mut off = 0usize;
+            while off < b.rows {
+                let rows_here = (b.rows - off).min(span);
+                let want = m * rows_here;
+                if scratch.len() < want {
+                    scratch.resize(want, 0.0);
+                }
+                crate::linalg::matmul::matmul_abt(
+                    queries,
+                    &data[off * k..(off + rows_here) * k],
+                    &mut scratch[..want],
+                    m,
+                    k,
+                    rows_here,
+                );
+                let mut g = scores.lock().unwrap();
+                for q in 0..m {
+                    let block_row = &scratch[q * rows_here..(q + 1) * rows_here];
+                    match gi {
+                        Some(gi) => {
+                            g[q * out_cols + gi] +=
+                                block_row.iter().map(|&v| v as f64).sum::<f64>();
+                        }
+                        None => {
+                            let dst = q * out_cols + b.start + off;
+                            for (d, &v) in g[dst..dst + rows_here].iter_mut().zip(block_row) {
+                                *d = v as f64;
+                            }
+                        }
+                    }
+                }
+                off += rows_here;
+            }
+            Ok(())
+        },
+    )?;
+    Ok(scores
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|v| v as f32)
+        .collect())
+}
+
+/// Scoring state an engine retains after a streamed ingest: the store
+/// handle (re-streamed at attribute time), per-block preconditioners, and
+/// the eagerly computed self-influence diagonal. At no point does more
+/// than the budgeted buffer set of train rows sit in memory.
+pub(crate) struct StreamedCache {
+    dir: PathBuf,
+    opts: StreamOpts,
+    layout: BlockLayout,
+    pres: Vec<Preconditioner>,
+    self_inf: Vec<f32>,
+    /// Store row count snapshot (revalidated whenever the store is
+    /// re-opened for a score pass).
+    n: usize,
+    /// Score columns this cache produces (train rows, or groups).
+    out_cols: usize,
+}
+
+impl StreamedCache {
+    /// Stream-build the cache: a FIM pass per layout block when `damping`
+    /// is set (the preconditioned scorers), then a self-influence pass.
+    pub fn build(
+        reader: &StoreReader,
+        opts: &StreamOpts,
+        layout: BlockLayout,
+        damping: Option<f64>,
+    ) -> Result<Self> {
+        ensure!(
+            layout.total() == reader.meta.k,
+            "stream layout totals {} but store rows have k = {}",
+            layout.total(),
+            reader.meta.k
+        );
+        if let Some(g) = &opts.groups {
+            g.validate(reader.meta.n)?;
+        }
+        let pres = match damping {
+            Some(lambda) => {
+                let (fims, _) = stream_block_fims(reader, opts, &layout)?;
+                fims.iter()
+                    .zip(&layout.dims)
+                    .map(|(f, &kl)| Preconditioner::new(f, kl, lambda))
+                    .collect::<Result<Vec<_>>>()?
+            }
+            None => vec![],
+        };
+        let self_inf = stream_self_influence(reader, opts, &layout, &pres)?;
+        Ok(Self {
+            dir: reader.dir().to_path_buf(),
+            n: reader.meta.n,
+            out_cols: opts.out_cols(reader.meta.n),
+            opts: opts.clone(),
+            layout,
+            pres,
+            self_inf,
+        })
+    }
+
+    /// Score columns (train rows, or groups under grouping).
+    pub fn out_cols(&self) -> usize {
+        self.out_cols
+    }
+
+    /// The cached self-influence diagonal.
+    pub fn self_inf(&self) -> &[f32] {
+        &self.self_inf
+    }
+
+    fn reader(&self) -> Result<StoreReader> {
+        let r = StoreReader::open(&self.dir)?;
+        ensure!(
+            r.meta.n == self.n && r.meta.k == self.layout.total(),
+            "store at {} changed since cache_stream (was {} rows × k = {}, now {} × {})",
+            self.dir.display(),
+            self.n,
+            self.layout.total(),
+            r.meta.n,
+            r.meta.k
+        );
+        Ok(r)
+    }
+
+    /// Streamed attribute: re-stream the store and score `m` queries
+    /// against it, one block of train rows per worker at a time.
+    pub fn scores(&self, queries: &[f32], m: usize) -> Result<Vec<f32>> {
+        let reader = self.reader()?;
+        stream_scores(&reader, &self.opts, queries, m, &self.layout, &self.pres)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+    use crate::store::StoreWriter;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "grass_stream_test_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn write_store(dir: &PathBuf, n: usize, k: usize, shard_rows: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        let rows: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let mut w = StoreWriter::create(dir, k, "test", 0, shard_rows).unwrap();
+        w.push_batch(&rows).unwrap();
+        w.finish().unwrap();
+        rows
+    }
+
+    #[test]
+    fn chunk_rows_respects_budget_with_floor() {
+        let o = StreamOpts {
+            mem_budget: 2 * 2 * 4 * 8 * 2, // 2 workers × 2 rows × k=8 × 2 bufs
+            workers: 2,
+            groups: None,
+        };
+        assert_eq!(o.chunk_rows(8), 2);
+        assert!(o.resident_bytes(8) <= o.mem_budget);
+        // A budget below one row still streams, one row at a time.
+        let tiny = StreamOpts {
+            mem_budget: 1,
+            workers: 1,
+            groups: None,
+        };
+        assert_eq!(tiny.chunk_rows(1024), 1);
+    }
+
+    #[test]
+    fn streamed_fims_match_in_memory_accumulation() {
+        let dir = tmpdir("fim");
+        let (n, k) = (37, 6);
+        let rows = write_store(&dir, n, k, 5, 1);
+        let r = StoreReader::open(&dir).unwrap();
+        let layout = BlockLayout::new(vec![k]);
+        let opts = StreamOpts {
+            mem_budget: 3 * 2 * 4 * k * 2,
+            workers: 3,
+            groups: None,
+        };
+        let (fims, seen) = stream_block_fims(&r, &opts, &layout).unwrap();
+        assert_eq!(seen, n);
+        let want = crate::attrib::fim::accumulate_fim(&rows, n, k);
+        for i in 0..k * k {
+            assert!(
+                (fims[0][i] - want[i]).abs() < 1e-5,
+                "fim[{i}]: {} vs {}",
+                fims[0][i],
+                want[i]
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn streamed_scores_match_graddot_on_raw_rows() {
+        let dir = tmpdir("scores");
+        let (n, k, m) = (23, 5, 4);
+        let rows = write_store(&dir, n, k, 4, 2);
+        let r = StoreReader::open(&dir).unwrap();
+        let mut rng = Pcg::new(3);
+        let queries: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
+        let layout = BlockLayout::new(vec![k]);
+        let opts = StreamOpts {
+            mem_budget: 2 * 3 * 4 * k * 2,
+            workers: 2,
+            groups: None,
+        };
+        let got = stream_scores(&r, &opts, &queries, m, &layout, &[]).unwrap();
+        let want = crate::attrib::graddot::graddot_scores(&rows, n, k, &queries, m);
+        assert_eq!(got.len(), want.len());
+        for i in 0..m * n {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-5 * (1.0 + want[i].abs()),
+                "score {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

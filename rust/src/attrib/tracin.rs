@@ -5,8 +5,11 @@
 //! composes with any [`crate::sketch::Compressor`] exactly like TRAK does —
 //! compressed checkpoint gradients drop in unchanged.
 
+use super::blockwise::BlockLayout;
 use super::graddot::graddot_scores;
-use super::{Attributor, ScoreMatrix};
+use super::stream::{StreamOpts, StreamedCache};
+use super::{check_store_width, Attributor, ScoreMatrix};
+use crate::store::{StoreMeta, StoreReader};
 use anyhow::{bail, Result};
 
 /// One checkpoint's compressed gradients plus its learning rate.
@@ -39,15 +42,22 @@ pub fn tracin_scores(
     total.into_iter().map(|v| v as f32).collect()
 }
 
-/// TracIn as a stateful [`Attributor`]: every [`Attributor::cache`] call
-/// adds one checkpoint's compressed train gradients, consuming the next
-/// learning rate from the schedule (1.0 once the schedule is exhausted),
-/// and [`Attributor::attribute`] sums the lr-weighted GradDots.
+/// One TracIn checkpoint's gradients: resident, or streamed from a store.
+enum TracinCk {
+    Mem(Vec<f32>),
+    Streamed(StreamedCache),
+}
+
+/// TracIn as a stateful [`Attributor`]: every [`Attributor::cache`] /
+/// [`Attributor::cache_stream`] call adds one checkpoint's compressed
+/// train gradients, consuming the next learning rate from the schedule
+/// (1.0 once the schedule is exhausted), and [`Attributor::attribute`]
+/// sums the lr-weighted GradDots.
 pub struct TracIn {
     k: usize,
     /// Learning-rate schedule consumed checkpoint-by-checkpoint.
     lrs: Vec<f32>,
-    checkpoints: Vec<(Vec<f32>, f32)>,
+    checkpoints: Vec<(TracinCk, f32)>,
     n: usize,
 }
 
@@ -89,9 +99,26 @@ impl Attributor for TracIn {
             bail!("tracin cache: got {} values for n = {n}, k = {}", grads.len(), self.k);
         }
         let lr = self.lrs.get(self.checkpoints.len()).copied().unwrap_or(1.0);
-        self.checkpoints.push((grads.to_vec(), lr));
+        self.checkpoints.push((TracinCk::Mem(grads.to_vec()), lr));
         self.n = n;
         Ok(())
+    }
+
+    fn cache_stream(&mut self, reader: &StoreReader, opts: &StreamOpts) -> Result<StoreMeta> {
+        check_store_width(self.name(), self.dim(), reader)?;
+        // GradDot family: no preconditioning, raw rows score directly.
+        let sc = StreamedCache::build(reader, opts, BlockLayout::new(vec![self.k]), None)?;
+        if !self.checkpoints.is_empty() && sc.out_cols() != self.n {
+            bail!(
+                "tracin checkpoint has n = {} train rows, previous checkpoints had {}",
+                sc.out_cols(),
+                self.n
+            );
+        }
+        let lr = self.lrs.get(self.checkpoints.len()).copied().unwrap_or(1.0);
+        self.n = sc.out_cols();
+        self.checkpoints.push((TracinCk::Streamed(sc), lr));
+        Ok(reader.meta.clone())
     }
 
     fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
@@ -100,8 +127,11 @@ impl Attributor for TracIn {
         }
         let n = self.n;
         let mut total = vec![0.0f64; m * n];
-        for (train, lr) in &self.checkpoints {
-            let s = graddot_scores(train, n, self.k, queries, m);
+        for (ck, lr) in &self.checkpoints {
+            let s = match ck {
+                TracinCk::Mem(train) => graddot_scores(train, n, self.k, queries, m),
+                TracinCk::Streamed(sc) => sc.scores(queries, m)?,
+            };
             for (t, &v) in total.iter_mut().zip(&s) {
                 *t += (*lr * v) as f64;
             }
@@ -122,11 +152,14 @@ impl Attributor for TracIn {
             .map(|i| {
                 self.checkpoints
                     .iter()
-                    .map(|(train, lr)| {
-                        lr * train[i * k..(i + 1) * k]
-                            .iter()
-                            .map(|v| v * v)
-                            .sum::<f32>()
+                    .map(|(ck, lr)| {
+                        lr * match ck {
+                            TracinCk::Mem(train) => train[i * k..(i + 1) * k]
+                                .iter()
+                                .map(|v| v * v)
+                                .sum::<f32>(),
+                            TracinCk::Streamed(sc) => sc.self_inf()[i],
+                        }
                     })
                     .sum()
             })

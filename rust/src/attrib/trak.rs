@@ -3,8 +3,11 @@
 //! own per-sample gradients, compression, and preconditioner. The paper
 //! uses 10/10/5 checkpoints for MLP/ResNet9/MusicTransformer (App. B.2).
 
+use super::blockwise::BlockLayout;
 use super::influence::InfluenceEngine;
-use super::{Attributor, ScoreMatrix};
+use super::stream::{StreamOpts, StreamedCache};
+use super::{check_store_width, Attributor, ScoreMatrix};
+use crate::store::{StoreMeta, StoreReader};
 use anyhow::{bail, Result};
 
 /// One checkpoint's compressed gradients (train + query share a seed so
@@ -36,18 +39,38 @@ pub fn trak_scores(
     Ok(total.into_iter().map(|v| (v / c) as f32).collect())
 }
 
-/// TRAK as a stateful [`Attributor`]: every [`Attributor::cache`] call adds
-/// one checkpoint's compressed train gradients (preconditioned on ingest),
-/// and [`Attributor::attribute`] averages the per-checkpoint influence
+/// One TRAK checkpoint's scoring state: the resident preconditioned
+/// matrix, or the streamed handle (per-checkpoint FIM/preconditioner with
+/// rows re-streamed from that checkpoint's store at attribute time).
+enum TrakCk {
+    Mem {
+        pre: Vec<f32>,
+        self_inf: Vec<f32>,
+    },
+    Streamed(StreamedCache),
+}
+
+impl TrakCk {
+    fn self_inf(&self) -> &[f32] {
+        match self {
+            TrakCk::Mem { self_inf, .. } => self_inf,
+            TrakCk::Streamed(sc) => sc.self_inf(),
+        }
+    }
+}
+
+/// TRAK as a stateful [`Attributor`]: every [`Attributor::cache`] /
+/// [`Attributor::cache_stream`] call adds one checkpoint's compressed
+/// train gradients (preconditioned on ingest), and
+/// [`Attributor::attribute`] averages the per-checkpoint influence
 /// scores. With a single cached checkpoint this reduces exactly to
 /// [`InfluenceEngine`].
 pub struct Trak {
     k: usize,
     damping: f64,
-    /// Per-checkpoint (preconditioned matrix, self-influence diagonal);
-    /// the raw gradients are not retained — self-influence is computed on
-    /// ingest while they are still in hand.
-    checkpoints: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Per-checkpoint state; the raw gradients are never retained —
+    /// self-influence is computed on ingest while they are in hand.
+    checkpoints: Vec<TrakCk>,
     n: usize,
 }
 
@@ -59,6 +82,16 @@ impl Trak {
             checkpoints: vec![],
             n: 0,
         }
+    }
+
+    fn check_rows(&self, n: usize) -> Result<()> {
+        if !self.checkpoints.is_empty() && n != self.n {
+            bail!(
+                "trak checkpoint has n = {n} train rows, previous checkpoints had {}",
+                self.n
+            );
+        }
+        Ok(())
     }
 }
 
@@ -72,18 +105,27 @@ impl Attributor for Trak {
     }
 
     fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
-        if !self.checkpoints.is_empty() && n != self.n {
-            bail!(
-                "trak checkpoint has n = {n} train rows, previous checkpoints had {}",
-                self.n
-            );
-        }
+        self.check_rows(n)?;
         let engine = InfluenceEngine::new(self.k, self.damping);
         let pre = engine.precondition(grads, n)?;
         let self_inf = super::influence::rowwise_dot(grads, &pre, n, self.k);
-        self.checkpoints.push((pre, self_inf));
+        self.checkpoints.push(TrakCk::Mem { pre, self_inf });
         self.n = n;
         Ok(())
+    }
+
+    fn cache_stream(&mut self, reader: &StoreReader, opts: &StreamOpts) -> Result<StoreMeta> {
+        check_store_width(self.name(), self.dim(), reader)?;
+        let sc = StreamedCache::build(
+            reader,
+            opts,
+            BlockLayout::new(vec![self.k]),
+            Some(self.damping),
+        )?;
+        self.check_rows(sc.out_cols())?;
+        self.n = sc.out_cols();
+        self.checkpoints.push(TrakCk::Streamed(sc));
+        Ok(reader.meta.clone())
     }
 
     fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
@@ -92,8 +134,13 @@ impl Attributor for Trak {
         }
         let n = self.n;
         let mut total = vec![0.0f64; m * n];
-        for (pre, _) in &self.checkpoints {
-            let s = super::graddot::graddot_scores(pre, n, self.k, queries, m);
+        for ck in &self.checkpoints {
+            let s = match ck {
+                TrakCk::Mem { pre, .. } => {
+                    super::graddot::graddot_scores(pre, n, self.k, queries, m)
+                }
+                TrakCk::Streamed(sc) => sc.scores(queries, m)?,
+            };
             for (t, &v) in total.iter_mut().zip(&s) {
                 *t += v as f64;
             }
@@ -116,7 +163,7 @@ impl Attributor for Trak {
                 let sum: f64 = self
                     .checkpoints
                     .iter()
-                    .map(|(_, si)| si[i] as f64)
+                    .map(|ck| ck.self_inf()[i] as f64)
                     .sum();
                 (sum / c) as f32
             })

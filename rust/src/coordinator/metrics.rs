@@ -16,6 +16,10 @@ pub struct Metrics {
     pub grad_ns: AtomicU64,
     pub compress_ns: AtomicU64,
     pub write_ns: AtomicU64,
+    /// Peak bytes held by the writer's reorder buffer — the pipeline's
+    /// only unbounded-looking allocation, surfaced so the memory model in
+    /// docs/ARCHITECTURE.md stays checkable.
+    pub reorder_peak_bytes: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -35,11 +39,17 @@ impl Metrics {
             grad_ns: AtomicU64::new(0),
             compress_ns: AtomicU64::new(0),
             write_ns: AtomicU64::new(0),
+            reorder_peak_bytes: AtomicU64::new(0),
         }
     }
 
     pub fn add(&self, counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Raise a high-water-mark gauge to `v` if it is the new peak.
+    pub fn set_peak(&self, counter: &AtomicU64, v: u64) {
+        counter.fetch_max(v, Ordering::Relaxed);
     }
 
     pub fn elapsed_secs(&self) -> f64 {
@@ -59,7 +69,7 @@ impl Metrics {
         format!(
             "samples={} tokens={} batches={} rows_written={} elapsed={:.2}s \
              throughput={:.1} samples/s ({:.0} tok/s) | stage-time grad={:.2}s \
-             compress={:.2}s write={:.2}s",
+             compress={:.2}s write={:.2}s | reorder-peak={}KB",
             load(&self.samples),
             load(&self.tokens),
             load(&self.batches),
@@ -70,6 +80,7 @@ impl Metrics {
             load(&self.grad_ns) as f64 / 1e9,
             load(&self.compress_ns) as f64 / 1e9,
             load(&self.write_ns) as f64 / 1e9,
+            load(&self.reorder_peak_bytes) / 1024,
         )
     }
 }

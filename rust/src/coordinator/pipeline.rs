@@ -21,7 +21,14 @@ pub struct PipelineConfig {
     pub compress_workers: usize,
     /// Bounded channel depth — the backpressure horizon.
     pub queue_depth: usize,
+    /// Rows per shard file; 0 = derive from `mem_budget` and the bank's
+    /// output width (see [`PipelineConfig::effective_shard_rows`]).
     pub shard_rows: usize,
+    /// Byte budget hint for the attribute-stage streaming buffers. Used to
+    /// auto-size shards when `shard_rows` is 0, so one shard of the cache
+    /// this pipeline writes sits comfortably inside the streamed
+    /// [`crate::attrib::StreamOpts::mem_budget`] at attribute time.
+    pub mem_budget: usize,
 }
 
 impl Default for PipelineConfig {
@@ -31,7 +38,27 @@ impl Default for PipelineConfig {
             compress_workers: 2,
             queue_depth: 4,
             shard_rows: crate::store::DEFAULT_SHARD_ROWS,
+            mem_budget: crate::attrib::DEFAULT_MEM_BUDGET,
         }
+    }
+}
+
+impl PipelineConfig {
+    /// Shard size the writer uses: the configured `shard_rows`, or — when
+    /// zero — the largest row count keeping one shard of width `k` inside
+    /// an eighth of `mem_budget` (clamped to `64..=65536` rows), so the
+    /// streaming attribute stage always has several shards per worker to
+    /// overlap.
+    pub fn effective_shard_rows(&self, k: usize) -> usize {
+        if self.shard_rows > 0 {
+            return self.shard_rows;
+        }
+        let budget = if self.mem_budget > 0 {
+            self.mem_budget
+        } else {
+            crate::attrib::DEFAULT_MEM_BUDGET
+        };
+        (budget / 8 / (4 * k.max(1))).clamp(64, 65536)
     }
 }
 
@@ -156,7 +183,7 @@ impl<'a> CachePipeline<'a> {
             StoreMeta {
                 k,
                 n: 0,
-                shard_rows: self.cfg.shard_rows,
+                shard_rows: self.cfg.effective_shard_rows(k),
                 method: method.to_string(),
                 seed,
                 model: self.model.clone(),
@@ -357,10 +384,16 @@ impl<'a> CachePipeline<'a> {
                 let rx: Receiver<(usize, usize, Vec<f32>)> = row_rx;
                 let mut pending: BTreeMap<usize, (usize, Vec<f32>)> = BTreeMap::new();
                 let mut next = 0usize;
+                // Reorder-buffer accounting: pending bytes are bounded in
+                // practice by queue_depth × batch, and the observed peak is
+                // surfaced through metrics so the bound stays checkable.
+                let mut pending_bytes = 0usize;
                 let flush = |pending: &mut BTreeMap<usize, (usize, Vec<f32>)>,
-                                 next: &mut usize|
+                                 next: &mut usize,
+                                 pending_bytes: &mut usize|
                  -> Result<()> {
                     while let Some((count, rows)) = pending.remove(next) {
+                        *pending_bytes -= rows.len() * 4;
                         let t0 = Instant::now();
                         let mut w = writer_ref.lock().unwrap();
                         w.push_batch(&rows)?;
@@ -372,13 +405,15 @@ impl<'a> CachePipeline<'a> {
                     Ok(())
                 };
                 for (first, count, rows) in rx.iter() {
+                    pending_bytes += rows.len() * 4;
+                    metrics2.set_peak(&metrics2.reorder_peak_bytes, pending_bytes as u64);
                     pending.insert(first, (count, rows));
-                    if let Err(e) = flush(&mut pending, &mut next) {
+                    if let Err(e) = flush(&mut pending, &mut next, &mut pending_bytes) {
                         fail2(e);
                         return;
                     }
                 }
-                if let Err(e) = flush(&mut pending, &mut next) {
+                if let Err(e) = flush(&mut pending, &mut next, &mut pending_bytes) {
                     fail2(e);
                 }
             });

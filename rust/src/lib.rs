@@ -13,8 +13,13 @@
 //! - [`attrib`] — gradient-based data attribution on top of compressed
 //!   gradients: influence functions (FIM + iFVP), TRAK, TracIn, GradDot,
 //!   and layer-wise block-diagonal FIM, all behind the unified
-//!   [`attrib::Attributor`] trait (`cache` → `attribute` →
-//!   `self_influence`). [`attrib::from_spec`] dispatches an
+//!   [`attrib::Attributor`] trait (`cache` / `cache_stream` →
+//!   `attribute` → `self_influence`). [`attrib::stream`] is the
+//!   out-of-core path: scorers accumulate Gram/precondition state over
+//!   shard streams under a byte budget ([`attrib::StreamOpts`]) and
+//!   re-stream the store at attribute time, so stores far larger than RAM
+//!   attribute correctly (streamed == in-memory to ≤ 1e-5 relative,
+//!   test-enforced). [`attrib::from_spec`] dispatches an
 //!   [`attrib::AttributionSpec`]'s scorer string to the right engine.
 //! - [`runtime`] — PJRT client wrapper that loads AOT-compiled HLO text
 //!   artifacts (JAX models + Pallas kernels) and executes them on the
@@ -24,7 +29,10 @@
 //! - [`store`] — sharded on-disk compressed-gradient cache. Stores are
 //!   self-describing (method spec, seed, gradient geometry), and
 //!   [`store::StoreReader::open_checked`] rejects readers whose spec or
-//!   seed does not match what was cached.
+//!   seed does not match what was cached. Streaming primitives —
+//!   [`store::ShardCursor`], [`store::StoreReader::par_for_each_shard`],
+//!   [`store::RowGroups`] (GGDA-style grouped row selection) — back the
+//!   out-of-core attribute stage.
 //! - [`eval`] — counterfactual evaluation (LDS) with Rust-driven subset
 //!   retraining through HLO train-step executables.
 //! - [`data`] — synthetic dataset substrates (digits, two-class images,
@@ -74,6 +82,14 @@
 //! triple loop. Benchmarks write machine-readable `BENCH_<name>.json`
 //! records (see `util::bench::write_bench_json`) so throughput is
 //! trackable across PRs.
+//!
+//! **Out-of-core scoring.** [`attrib::Attributor::cache_stream`] streams
+//! a [`store::StoreReader`] shard-block by shard-block under
+//! [`attrib::StreamOpts::mem_budget`]: `workers × chunk_rows × k × 4 × 2`
+//! bytes of row buffers are the only resident train-row state, and score
+//! columns are written incrementally as blocks complete. The full
+//! data-flow diagram and memory model live in `docs/ARCHITECTURE.md`; the
+//! complete CLI reference is `docs/CLI.md`.
 
 #![allow(clippy::needless_range_loop)]
 

@@ -11,7 +11,7 @@
 //! ```
 
 use anyhow::{anyhow, bail, ensure, Result};
-use grass::attrib::{from_spec, AttributionSpec, Attributor};
+use grass::attrib::{from_spec, AttributionSpec, Attributor, StreamOpts, DEFAULT_MEM_BUDGET};
 use grass::config::ExpConfig;
 use grass::coordinator::{pipeline::Source, CachePipeline, CompressorBank, PipelineConfig};
 use grass::data::corpus::ThemedCorpus;
@@ -23,7 +23,7 @@ use grass::exp;
 use grass::models::shapes::ModelShapes;
 use grass::runtime::{Arg, Runtime};
 use grass::sketch::{MethodSpec, Scratch};
-use grass::store::{StoreMeta, StoreReader, StoreWriter, DEFAULT_SHARD_ROWS};
+use grass::store::{RowGroups, StoreMeta, StoreReader, StoreWriter, DEFAULT_SHARD_ROWS};
 use grass::util::cli::Args;
 use std::path::Path;
 
@@ -56,8 +56,10 @@ USAGE:
   grass exp <fig4|table1a|table1b|table1c|table1d|table2|fig9|ablation|all> [flags]
   grass cache --model <mlp|resnet_lite|gpt2_tiny|music|synth> --method <spec>
               [--n N] [--p P] [--seed S] [--store DIR] [--fast]
+              [--shard-rows R|0=auto] [--mem-budget 256M]
   grass attribute --store DIR [--queries M] [--scorer if|graddot|trak|tracin|blockwise]
                   [--damping 1e-3] [--top 5] [--self-influence]
+                  [--mem-budget 256M] [--workers N] [--row-groups 0..512,512..1024|block=N]
                   [--method <spec> --seed S to cross-check the store]
   grass info
 
@@ -73,11 +75,11 @@ METHOD SPECS (factorized,   factgrass:kin=..,kout=..,kl=..,mask=rm|sm |
  per hooked layer):         logra:kin=..,kout=.. | factsjlt:kin=..,kout=.. |
                             factmask:kin=..,kout=..,mask=rm|sm
 
-The cache stage records the full spec, seed, and gradient geometry in the
-store; `grass attribute` rebuilds the exact compressor bank from that
-metadata and rejects mismatched --method/--seed requests. Without PJRT
-artifacts, `cache` falls back to a deterministic synthetic gradient source
-(model 'synth') so cache → attribute runs end-to-end anywhere."
+`grass attribute` streams the store out-of-core: train rows are read one
+shard block per worker under --mem-budget, so stores far larger than RAM
+attribute correctly; --row-groups aggregates scores per row group
+(GGDA-style). Full reference: docs/CLI.md; data-flow and memory model:
+docs/ARCHITECTURE.md."
     );
 }
 
@@ -201,7 +203,7 @@ fn run_cache(args: &Args) -> Result<()> {
         return cache_synthetic(&spec, n, seed, &store, args);
     }
     match Runtime::load(Runtime::artifacts_dir()) {
-        Ok(rt) => cache_with_runtime(&rt, &model, &spec, n, seed, &store),
+        Ok(rt) => cache_with_runtime(&rt, &model, &spec, n, seed, &store, args),
         Err(e) => {
             eprintln!(
                 "warning: PJRT runtime unavailable ({e:#}); caching from the \
@@ -212,6 +214,16 @@ fn run_cache(args: &Args) -> Result<()> {
     }
 }
 
+/// Pipeline config from the shared cache-stage flags: `--shard-rows`
+/// (0 = auto-size from the budget) and `--mem-budget`.
+fn cache_pipeline_config(args: &Args) -> Result<PipelineConfig> {
+    Ok(PipelineConfig {
+        shard_rows: args.get_usize("shard-rows", DEFAULT_SHARD_ROWS)?,
+        mem_budget: args.get_bytes("mem-budget", DEFAULT_MEM_BUDGET)?,
+        ..PipelineConfig::default()
+    })
+}
+
 fn cache_with_runtime(
     rt: &Runtime,
     model: &str,
@@ -219,6 +231,7 @@ fn cache_with_runtime(
     n: usize,
     seed: u64,
     store: &str,
+    args: &Args,
 ) -> Result<()> {
     let model_meta = rt.manifest.model(model)?.clone();
     let shapes = model_meta.shapes();
@@ -232,7 +245,7 @@ fn cache_with_runtime(
         .remove(0)
         .data;
 
-    let pipeline = CachePipeline::new(rt, model, params, PipelineConfig::default());
+    let pipeline = CachePipeline::new(rt, model, params, cache_pipeline_config(args)?);
     let dir = Path::new(store);
     let meta = if bank.is_factored() {
         let seq = model_meta
@@ -271,6 +284,7 @@ fn cache_synthetic(
     args: &Args,
 ) -> Result<()> {
     let dir = Path::new(store);
+    let cfg = cache_pipeline_config(args)?;
     let mut scratch = Scratch::new();
     let meta = if spec.is_factorized() {
         let layers = default_synth_layers();
@@ -280,7 +294,7 @@ fn cache_synthetic(
         let k = bank.output_dim();
         let mut w = StoreWriter::create_described(
             dir,
-            StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, DEFAULT_SHARD_ROWS)?,
+            StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, cfg.effective_shard_rows(k))?,
         )?;
         let hooks = SynthHooks::new(layers, seed);
         let mut row = vec![0.0f32; k];
@@ -303,7 +317,7 @@ fn cache_synthetic(
         let k = c.output_dim();
         let mut w = StoreWriter::create_described(
             dir,
-            StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, DEFAULT_SHARD_ROWS)?,
+            StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, cfg.effective_shard_rows(k))?,
         )?;
         let src = SynthGrads::new(p, seed);
         let chunk = 64usize;
@@ -339,6 +353,17 @@ fn run_attribute(args: &Args) -> Result<()> {
     let top = args.get_usize("top", 5)?;
 
     let reader = StoreReader::open(&store)?;
+    // Out-of-core streaming knobs: byte budget for the per-worker shard
+    // buffers, worker count, and optional GGDA-style row grouping.
+    let opts = StreamOpts {
+        mem_budget: args.get_bytes("mem-budget", DEFAULT_MEM_BUDGET)?,
+        workers: args.get_usize("workers", 0)?,
+        groups: match args.get("row-groups") {
+            Some(s) => Some(parse_row_groups(s, reader.meta.n)?),
+            None => None,
+        },
+    };
+    let grouped = opts.groups.is_some();
     let spec = reader.meta.spec()?;
     let seed = reader.meta.seed;
     // A user-pinned --method/--seed is validated against the store: a
@@ -377,23 +402,27 @@ fn run_attribute(args: &Args) -> Result<()> {
     aspec.damping = damping;
     aspec.layout = bank.layer_dims();
     let mut attributor: Box<dyn Attributor> = from_spec(&aspec)?;
-    let meta = attributor.cache_store(&reader)?;
+    let meta = attributor.cache_stream(&reader, &opts)?;
     let scores = attributor.attribute(&queries, m)?;
 
     println!(
-        "attributed {m} queries against {} cached rows (scorer '{}', method {}, k={})",
+        "attributed {m} queries against {} cached rows (scorer '{}', method {}, k={}, \
+         streamed under {} budget, {} score columns)",
         meta.n,
         attributor.name(),
         meta.method,
-        meta.k
+        meta.k,
+        fmt_bytes(opts.mem_budget),
+        scores.n,
     );
     let mut hits = 0usize;
     let mut ranked = 0usize;
+    let tag = if grouped { "group " } else { "#" };
     for q in 0..m {
         let best = scores.top_k(q, top);
         let parts: Vec<String> = best
             .iter()
-            .map(|(i, s)| format!("#{i} ({s:+.3})"))
+            .map(|(i, s)| format!("{tag}{i} ({s:+.3})"))
             .collect();
         let label = classes
             .get(q)
@@ -401,11 +430,13 @@ fn run_attribute(args: &Args) -> Result<()> {
             .unwrap_or_default();
         println!("  query {q}{label}: top-{top} {}", parts.join(", "));
         if let Some(&qc) = classes.get(q) {
-            hits += best
-                .iter()
-                .filter(|(i, _)| i % SYNTH_CLASSES == qc)
-                .count();
-            ranked += best.len();
+            if !grouped {
+                hits += best
+                    .iter()
+                    .filter(|(i, _)| i % SYNTH_CLASSES == qc)
+                    .count();
+                ranked += best.len();
+            }
         }
     }
     if ranked > 0 && (model == SYNTH_MODEL || model.is_empty()) {
@@ -422,11 +453,42 @@ fn run_attribute(args: &Args) -> Result<()> {
         let parts: Vec<String> = order
             .iter()
             .take(top)
-            .map(|&i| format!("#{i} ({:+.3})", si[i]))
+            .map(|&i| format!("{tag}{i} ({:+.3})", si[i]))
             .collect();
         println!("top-{top} self-influence: {}", parts.join(", "));
     }
     Ok(())
+}
+
+/// Human-readable binary byte size (inverse of `util::cli::parse_bytes`).
+fn fmt_bytes(b: usize) -> String {
+    if b >= 1 << 30 {
+        format!("{:.1}G", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.0}M", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.0}K", b as f64 / (1u64 << 10) as f64)
+    } else {
+        format!("{b}B")
+    }
+}
+
+/// Parse `--row-groups`: an explicit half-open range list
+/// (`"0..512,512..1024"`) or uniform blocks (`"block=256"`) over the
+/// store's `n` rows.
+fn parse_row_groups(s: &str, n: usize) -> Result<RowGroups> {
+    if let Some(size) = s.strip_prefix("block=").or_else(|| s.strip_prefix("blocks=")) {
+        let block: usize = size
+            .trim()
+            .parse()
+            .map_err(|e| anyhow!("--row-groups block size '{size}': {e}"))?;
+        ensure!(block > 0, "--row-groups block size must be positive");
+        ensure!(n > 0, "store has no rows to group");
+        return Ok(RowGroups::blocks(n, block));
+    }
+    let groups = RowGroups::parse(s)?;
+    groups.validate(n)?;
+    Ok(groups)
 }
 
 /// Regenerate + compress `m` synthetic query gradients against the store's

@@ -367,6 +367,25 @@ impl MethodSpec {
     /// layer): `factgrass:kin=32,kout=32,kl=256,mask=rm`,
     /// `logra:kin=16,kout=16`, `factsjlt:kin=16,kout=16`,
     /// `factmask:kin=16,kout=16,mask=rm`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use grass::sketch::MethodSpec;
+    ///
+    /// let spec = MethodSpec::parse("sjlt:k=1024,s=1").unwrap();
+    /// assert_eq!(spec, MethodSpec::Sjlt { k: 1024, s: 1 });
+    /// // `spec_string` is the inverse: specs roundtrip canonically.
+    /// assert_eq!(spec.spec_string(), "sjlt:k=1024,s=1");
+    ///
+    /// // Factorized specs carry per-layer factor dims.
+    /// let fact = MethodSpec::parse("factgrass:kin=8,kout=8,kl=16").unwrap();
+    /// assert!(fact.is_factorized());
+    ///
+    /// // Unknown methods and malformed items are descriptive errors.
+    /// assert!(MethodSpec::parse("warp:k=3").is_err());
+    /// assert!(MethodSpec::parse("sjlt:k").is_err());
+    /// ```
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         use anyhow::{anyhow, bail};
         let (head, rest) = s.split_once(':').unwrap_or((s, ""));
@@ -633,6 +652,35 @@ impl MethodSpec {
     /// [`CompressorBank::Flat`] over `shapes.p`; factorized specs produce
     /// one per-layer compressor per hooked layer (seeded per layer from
     /// `seed`, so cache and attribute reconstruct identical projections).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use grass::models::shapes::ModelShapes;
+    /// use grass::sketch::MethodSpec;
+    ///
+    /// // Flat spec over a p-dimensional gradient.
+    /// let bank = MethodSpec::parse("rm:k=64")
+    ///     .unwrap()
+    ///     .build_bank(&ModelShapes::flat(4096), 7)
+    ///     .unwrap();
+    /// assert_eq!(bank.output_dim(), 64);
+    ///
+    /// // Factorized spec: one compressor per hooked layer, total width
+    /// // Σ_l k_l (LoGra emits k_in × k_out per layer).
+    /// let fact = MethodSpec::parse("logra:kin=4,kout=4")
+    ///     .unwrap()
+    ///     .build_bank(&ModelShapes::factored(vec![(32, 16), (16, 32)]), 7)
+    ///     .unwrap();
+    /// assert_eq!(fact.output_dim(), 2 * 16);
+    ///
+    /// // A factorized spec needs hooked layers; flat-only geometry is a
+    /// // descriptive error, not a silently mis-sized bank.
+    /// assert!(MethodSpec::parse("logra:kin=4,kout=4")
+    ///     .unwrap()
+    ///     .build_bank(&ModelShapes::flat(4096), 7)
+    ///     .is_err());
+    /// ```
     pub fn build_bank(&self, shapes: &ModelShapes, seed: u64) -> anyhow::Result<CompressorBank> {
         self.build_bank_masked(shapes, seed, None)
     }

@@ -11,9 +11,12 @@
 use crate::models::shapes::ModelShapes;
 use crate::sketch::MethodSpec;
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::ops::Range;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Rows per shard file.
 pub const DEFAULT_SHARD_ROWS: usize = 4096;
@@ -215,6 +218,11 @@ impl StoreWriter {
     /// Create from a fully described [`StoreMeta`] (see
     /// [`StoreMeta::describe`]); the row count restarts at zero.
     pub fn create_described(dir: impl AsRef<Path>, mut meta: StoreMeta) -> Result<Self> {
+        ensure!(
+            meta.shard_rows > 0,
+            "store shard_rows must be positive (got 0)"
+        );
+        ensure!(meta.k > 0, "store row width k must be positive (got 0)");
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)?;
         meta.n = 0;
@@ -282,6 +290,158 @@ impl StoreWriter {
     }
 }
 
+/// A contiguous run of rows inside one shard file — the unit of streamed
+/// work. [`StoreReader::plan_blocks`] never emits a block that crosses a
+/// shard boundary, so every block is one bounded, seekable read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowBlock {
+    /// Global index of the first row in the block.
+    pub start: usize,
+    /// Number of rows in the block.
+    pub rows: usize,
+}
+
+/// Contiguous train-row ranges for grouped attribution (GGDA-style): each
+/// half-open range is one group, and the streaming scorers aggregate the
+/// member rows' scores into a single column per group.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct RowGroups {
+    /// Half-open row ranges, ascending and non-overlapping.
+    pub ranges: Vec<Range<usize>>,
+}
+
+impl RowGroups {
+    /// Build from ranges, rejecting empty, overlapping, or out-of-order
+    /// entries.
+    pub fn new(ranges: Vec<Range<usize>>) -> Result<Self> {
+        let g = Self { ranges };
+        g.check_ordered()?;
+        Ok(g)
+    }
+
+    /// Parse a CLI list of half-open ranges: `"0..512,512..1024"`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut ranges = Vec::new();
+        for item in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (a, b) = item.split_once("..").ok_or_else(|| {
+                anyhow!("row group '{item}' is not of the form 'start..end'")
+            })?;
+            let start: usize = a
+                .trim()
+                .parse()
+                .map_err(|e| anyhow!("row group '{item}': bad start: {e}"))?;
+            let end: usize = b
+                .trim()
+                .parse()
+                .map_err(|e| anyhow!("row group '{item}': bad end: {e}"))?;
+            ensure!(start < end, "row group '{item}' is empty (start >= end)");
+            ranges.push(start..end);
+        }
+        ensure!(!ranges.is_empty(), "row group list '{s}' selects nothing");
+        Self::new(ranges)
+    }
+
+    /// Uniform groups of `block` rows covering `0..n` (the last group may
+    /// be short).
+    pub fn blocks(n: usize, block: usize) -> Self {
+        let block = block.max(1);
+        Self {
+            ranges: (0..n)
+                .step_by(block)
+                .map(|s| s..(s + block).min(n))
+                .collect(),
+        }
+    }
+
+    fn check_ordered(&self) -> Result<()> {
+        for r in &self.ranges {
+            ensure!(r.start < r.end, "row group {r:?} is empty");
+        }
+        for w in self.ranges.windows(2) {
+            ensure!(
+                w[0].end <= w[1].start,
+                "row groups {:?} and {:?} overlap or are out of order",
+                w[0],
+                w[1]
+            );
+        }
+        Ok(())
+    }
+
+    /// Validate against a store's row count.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        self.check_ordered()?;
+        if let Some(last) = self.ranges.last() {
+            ensure!(
+                last.end <= n,
+                "row group {last:?} exceeds the store's {n} rows"
+            );
+        }
+        Ok(())
+    }
+
+    /// Number of groups.
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+
+    /// Total rows the selection covers.
+    pub fn total_rows(&self) -> usize {
+        self.ranges.iter().map(|r| r.end - r.start).sum()
+    }
+
+    /// Group index containing `row`, if any (ranges are ordered, so this
+    /// is a binary search).
+    pub fn group_of(&self, row: usize) -> Option<usize> {
+        let i = self.ranges.partition_point(|r| r.end <= row);
+        self.ranges
+            .get(i)
+            .and_then(|r| (r.start <= row).then_some(i))
+    }
+}
+
+/// Bounded-memory sequential iterator over a store's rows: at most one
+/// block (`chunk_rows × k` values) is resident at a time, and blocks never
+/// cross shard boundaries. Obtain via [`StoreReader::cursor`] /
+/// [`StoreReader::cursor_with`]; the parallel analogue is
+/// [`StoreReader::par_for_each_block`].
+pub struct ShardCursor<'a> {
+    reader: &'a StoreReader,
+    blocks: Vec<RowBlock>,
+    next: usize,
+}
+
+impl ShardCursor<'_> {
+    /// Largest block this cursor will yield (for pre-sizing buffers).
+    pub fn max_rows(&self) -> usize {
+        self.blocks.iter().map(|b| b.rows).max().unwrap_or(0)
+    }
+
+    /// Blocks not yet yielded.
+    pub fn remaining(&self) -> usize {
+        self.blocks.len() - self.next
+    }
+
+    /// Read the next block into `buf` (grown as needed, never shrunk);
+    /// returns its coordinates, or `None` once the selection is exhausted.
+    pub fn next_block(&mut self, buf: &mut Vec<f32>) -> Result<Option<RowBlock>> {
+        let Some(&b) = self.blocks.get(self.next) else {
+            return Ok(None);
+        };
+        self.next += 1;
+        let want = b.rows * self.reader.meta.k;
+        if buf.len() < want {
+            buf.resize(want, 0.0);
+        }
+        self.reader.read_rows(b.start, b.rows, &mut buf[..want])?;
+        Ok(Some(b))
+    }
+}
+
 /// Reader over a finished store.
 pub struct StoreReader {
     dir: PathBuf,
@@ -294,12 +454,41 @@ impl StoreReader {
         let text = std::fs::read_to_string(dir.join("store.json"))
             .with_context(|| format!("opening store at {}", dir.display()))?;
         let meta = StoreMeta::from_json(&Json::parse(&text)?)?;
+        ensure!(
+            meta.shard_rows > 0,
+            "store at {} has invalid shard_rows = 0 in store.json",
+            dir.display()
+        );
         Ok(Self { dir, meta })
     }
 
     /// Open and validate against the requesting method spec + seed: a
     /// method, seed, or row-width mismatch is a descriptive error instead
     /// of silently mis-scored attribution (see [`StoreMeta::check`]).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use grass::models::shapes::ModelShapes;
+    /// use grass::sketch::MethodSpec;
+    /// use grass::store::{StoreMeta, StoreReader, StoreWriter};
+    ///
+    /// let dir = std::env::temp_dir().join(format!(
+    ///     "grass_doc_open_checked_{}",
+    ///     std::process::id()
+    /// ));
+    /// # let _ = std::fs::remove_dir_all(&dir);
+    /// let spec = MethodSpec::parse("rm:k=4").unwrap();
+    /// let meta = StoreMeta::describe(&spec, 7, "synth", &ModelShapes::flat(16), 2).unwrap();
+    /// let mut w = StoreWriter::create_described(&dir, meta).unwrap();
+    /// w.push(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+    /// w.finish().unwrap();
+    ///
+    /// // The matching spec + seed opens; a wrong seed is a descriptive error.
+    /// assert!(StoreReader::open_checked(&dir, &spec, 7).is_ok());
+    /// assert!(StoreReader::open_checked(&dir, &spec, 8).is_err());
+    /// # std::fs::remove_dir_all(&dir).ok();
+    /// ```
     pub fn open_checked(dir: impl AsRef<Path>, spec: &MethodSpec, seed: u64) -> Result<Self> {
         let dir = dir.as_ref();
         let r = Self::open(dir)?;
@@ -313,21 +502,95 @@ impl StoreReader {
         self.meta.n.div_ceil(self.meta.shard_rows)
     }
 
+    /// The store directory this reader was opened on.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Read `rows` rows starting at global row `start` into `buf`
+    /// (`rows × k` values). The block must lie within one shard — the unit
+    /// [`StoreReader::plan_blocks`] hands out. A truncated or corrupted
+    /// shard file is a descriptive error naming the shard index and the
+    /// expected-vs-actual byte lengths.
+    pub fn read_rows(&self, start: usize, rows: usize, buf: &mut [f32]) -> Result<()> {
+        if rows == 0 {
+            return Ok(());
+        }
+        let k = self.meta.k;
+        ensure!(
+            start + rows <= self.meta.n,
+            "rows {start}..{} out of range (store has {} rows)",
+            start + rows,
+            self.meta.n
+        );
+        ensure!(
+            buf.len() >= rows * k,
+            "buffer holds {} values but the block needs {} ({rows} rows × k = {k})",
+            buf.len(),
+            rows * k
+        );
+        let shard_rows = self.meta.shard_rows.max(1);
+        let shard = start / shard_rows;
+        let row_in_shard = start - shard * shard_rows;
+        ensure!(
+            row_in_shard + rows <= shard_rows,
+            "row block {start}+{rows} crosses the shard {shard} boundary"
+        );
+        let path = shard_path(&self.dir, shard);
+        let rows_in_shard = (self.meta.n - shard * shard_rows).min(shard_rows);
+        let expected = (rows_in_shard * k * 4) as u64;
+        // One stat + one open per block, deliberately: the full-shard size
+        // check is what turns a partially-truncated shard into a
+        // descriptive error even when this block's own bytes still read
+        // (seek-based reads past a truncation point otherwise succeed
+        // silently for earlier blocks). Block sizing amortises the cost.
+        let actual = std::fs::metadata(&path)
+            .with_context(|| format!("shard {shard} at {}", path.display()))?
+            .len();
+        if actual != expected {
+            bail!(
+                "shard {shard} at {} holds {actual} bytes but {rows_in_shard} rows × k = {k} \
+                 columns require {expected} bytes — the shard file is truncated or corrupted",
+                path.display()
+            );
+        }
+        let mut f = std::fs::File::open(&path)
+            .with_context(|| format!("shard {shard} at {}", path.display()))?;
+        f.seek(SeekFrom::Start((row_in_shard * k * 4) as u64))?;
+        // Fixed staging buffer: the read path allocates nothing, so
+        // per-worker streaming buffers are the only resident state.
+        let total = rows * k;
+        let mut done = 0usize;
+        let mut bytes = [0u8; 16384];
+        while done < total {
+            let take = (total - done).min(bytes.len() / 4);
+            let nb = take * 4;
+            f.read_exact(&mut bytes[..nb]).with_context(|| {
+                format!("shard {shard}: short read at value {done} of {total}")
+            })?;
+            for (dst, ch) in buf[done..done + take]
+                .iter_mut()
+                .zip(bytes[..nb].chunks_exact(4))
+            {
+                *dst = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            }
+            done += take;
+        }
+        Ok(())
+    }
+
     /// Read shard `idx` fully: returns (first_row_index, rows × k data).
     pub fn read_shard(&self, idx: usize) -> Result<(usize, Vec<f32>)> {
-        let start = idx * self.meta.shard_rows;
+        let start = idx * self.meta.shard_rows.max(1);
         if start >= self.meta.n {
-            bail!("shard {idx} out of range");
+            bail!(
+                "shard {idx} out of range (store has {} shards)",
+                self.num_shards()
+            );
         }
         let rows = (self.meta.n - start).min(self.meta.shard_rows);
-        let path = shard_path(&self.dir, idx);
-        let mut r = BufReader::new(std::fs::File::open(&path)?);
-        let mut bytes = vec![0u8; rows * self.meta.k * 4];
-        r.read_exact(&mut bytes)?;
-        let data = bytes
-            .chunks_exact(4)
-            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-            .collect();
+        let mut data = vec![0.0f32; rows * self.meta.k];
+        self.read_rows(start, rows, &mut data)?;
         Ok((start, data))
     }
 
@@ -341,15 +604,134 @@ impl StoreReader {
         Ok(out)
     }
 
+    /// Split the selected rows into streamable [`RowBlock`]s of at most
+    /// `chunk_rows` rows, never crossing a shard boundary. An empty
+    /// `ranges` slice selects the whole store.
+    pub fn plan_blocks(&self, chunk_rows: usize, ranges: &[Range<usize>]) -> Vec<RowBlock> {
+        let n = self.meta.n;
+        let shard_rows = self.meta.shard_rows.max(1);
+        let chunk = chunk_rows.max(1);
+        let whole = [0..n];
+        let ranges: &[Range<usize>] = if ranges.is_empty() { &whole } else { ranges };
+        let mut out = Vec::new();
+        for r in ranges {
+            let end = r.end.min(n);
+            let mut start = r.start;
+            while start < end {
+                let shard_end = (start / shard_rows + 1) * shard_rows;
+                let rows = (end - start).min(chunk).min(shard_end - start);
+                out.push(RowBlock { start, rows });
+                start += rows;
+            }
+        }
+        out
+    }
+
+    /// Sequential bounded-memory iteration over the whole store, one shard
+    /// of rows per block.
+    pub fn cursor(&self) -> ShardCursor<'_> {
+        self.cursor_with(self.meta.shard_rows.max(1), &[])
+    }
+
+    /// [`StoreReader::cursor`] with explicit block sizing and row-range
+    /// selection.
+    pub fn cursor_with(&self, chunk_rows: usize, ranges: &[Range<usize>]) -> ShardCursor<'_> {
+        ShardCursor {
+            reader: self,
+            blocks: self.plan_blocks(chunk_rows, ranges),
+            next: 0,
+        }
+    }
+
     /// Visit every row without holding more than one shard in memory.
     pub fn for_each_row(&self, mut f: impl FnMut(usize, &[f32])) -> Result<()> {
-        for s in 0..self.num_shards() {
-            let (start, data) = self.read_shard(s)?;
-            for (i, row) in data.chunks(self.meta.k).enumerate() {
-                f(start + i, row);
+        let mut cur = self.cursor();
+        let mut buf = Vec::new();
+        while let Some(b) = cur.next_block(&mut buf)? {
+            for (i, row) in buf[..b.rows * self.meta.k].chunks(self.meta.k).enumerate() {
+                f(b.start + i, row);
             }
         }
         Ok(())
+    }
+
+    /// Visit the selected row blocks in parallel: `workers` threads (0 =
+    /// [`crate::util::par::num_threads`]), each owning one reusable row
+    /// buffer and one scratch [`Vec`], claim blocks off a shared queue.
+    /// The closure receives `(block index, block, row data, scratch)`; the
+    /// row buffer is mutable so accumulator transforms (e.g. FIM
+    /// preconditioning) run in place without a second copy. The first
+    /// error wins and stops all workers.
+    pub fn par_for_each_block<F>(
+        &self,
+        chunk_rows: usize,
+        ranges: &[Range<usize>],
+        workers: usize,
+        f: F,
+    ) -> Result<()>
+    where
+        F: Fn(usize, RowBlock, &mut [f32], &mut Vec<f32>) -> Result<()> + Sync,
+    {
+        let blocks = self.plan_blocks(chunk_rows, ranges);
+        if blocks.is_empty() {
+            return Ok(());
+        }
+        let max_rows = blocks.iter().map(|b| b.rows).max().unwrap_or(0);
+        let workers = if workers == 0 {
+            crate::util::par::num_threads()
+        } else {
+            workers
+        }
+        .min(blocks.len())
+        .max(1);
+        let next = AtomicUsize::new(0);
+        let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let next = &next;
+                let error = &error;
+                let blocks = &blocks;
+                let f = &f;
+                s.spawn(move || {
+                    let mut buf = vec![0.0f32; max_rows * self.meta.k];
+                    let mut scratch = Vec::new();
+                    loop {
+                        if error.lock().unwrap().is_some() {
+                            return;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= blocks.len() {
+                            return;
+                        }
+                        let b = blocks[i];
+                        let want = b.rows * self.meta.k;
+                        let res = self
+                            .read_rows(b.start, b.rows, &mut buf[..want])
+                            .and_then(|()| f(i, b, &mut buf[..want], &mut scratch));
+                        if let Err(e) = res {
+                            let mut g = error.lock().unwrap();
+                            if g.is_none() {
+                                *g = Some(e);
+                            }
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        match error.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// [`StoreReader::par_for_each_block`] over the full store with
+    /// whole-shard blocks — one shard of rows per worker at a time.
+    pub fn par_for_each_shard<F>(&self, workers: usize, f: F) -> Result<()>
+    where
+        F: Fn(usize, RowBlock, &mut [f32], &mut Vec<f32>) -> Result<()> + Sync,
+    {
+        self.par_for_each_block(self.meta.shard_rows.max(1), &[], workers, f)
     }
 }
 
@@ -423,6 +805,105 @@ mod tests {
     #[test]
     fn open_missing_store_fails() {
         assert!(StoreReader::open("/nonexistent/grass_store").is_err());
+    }
+
+    #[test]
+    fn plan_blocks_respects_shards_chunks_and_ranges() {
+        let dir = tmpdir("plan");
+        let mut w = StoreWriter::create(&dir, 1, "m", 0, 4).unwrap();
+        for i in 0..10 {
+            w.push(&[i as f32]).unwrap();
+        }
+        w.finish().unwrap();
+        let r = StoreReader::open(&dir).unwrap();
+        // Whole store, whole-shard chunks: 4 + 4 + 2.
+        let blocks = r.plan_blocks(4, &[]);
+        assert_eq!(
+            blocks,
+            vec![
+                RowBlock { start: 0, rows: 4 },
+                RowBlock { start: 4, rows: 4 },
+                RowBlock { start: 8, rows: 2 },
+            ]
+        );
+        // Chunk 3 with shard boundaries at rows 4 and 8: blocks clip at
+        // whichever comes first, the chunk size or the shard edge.
+        let blocks = r.plan_blocks(3, &[2..9]);
+        assert_eq!(
+            blocks,
+            vec![
+                RowBlock { start: 2, rows: 2 }, // clipped at shard end 4
+                RowBlock { start: 4, rows: 3 },
+                RowBlock { start: 7, rows: 1 }, // clipped at shard end 8
+                RowBlock { start: 8, rows: 1 },
+            ]
+        );
+        // Cursor yields the same rows as read_all over the selection.
+        let mut cur = r.cursor_with(3, &[2..9]);
+        let mut buf = Vec::new();
+        let mut seen = Vec::new();
+        while let Some(b) = cur.next_block(&mut buf).unwrap() {
+            for (i, v) in buf[..b.rows].iter().enumerate() {
+                seen.push((b.start + i, *v));
+            }
+        }
+        let want: Vec<(usize, f32)> = (2..9).map(|i| (i, i as f32)).collect();
+        assert_eq!(seen, want);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn par_for_each_shard_visits_every_row_once() {
+        let dir = tmpdir("parshard");
+        let k = 3;
+        let mut w = StoreWriter::create(&dir, k, "m", 0, 4).unwrap();
+        for i in 0..11 {
+            w.push(&[i as f32, 0.0, 0.0]).unwrap();
+        }
+        w.finish().unwrap();
+        let r = StoreReader::open(&dir).unwrap();
+        let seen = Mutex::new(Vec::new());
+        r.par_for_each_shard(3, |_, b, data, _| {
+            let mut g = seen.lock().unwrap();
+            for (i, row) in data.chunks(k).enumerate() {
+                g.push((b.start + i, row[0]));
+            }
+            Ok(())
+        })
+        .unwrap();
+        let mut got = seen.into_inner().unwrap();
+        got.sort_by_key(|&(i, _)| i);
+        assert_eq!(got.len(), 11);
+        for (i, &(idx, v)) in got.iter().enumerate() {
+            assert_eq!(idx, i);
+            assert_eq!(v, i as f32);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn row_groups_parse_blocks_and_group_of() {
+        let g = RowGroups::parse("0..4, 4..10,12..13").unwrap();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.total_rows(), 11);
+        assert_eq!(g.group_of(0), Some(0));
+        assert_eq!(g.group_of(3), Some(0));
+        assert_eq!(g.group_of(4), Some(1));
+        assert_eq!(g.group_of(9), Some(1));
+        assert_eq!(g.group_of(10), None);
+        assert_eq!(g.group_of(12), Some(2));
+        assert_eq!(g.group_of(13), None);
+        assert!(g.validate(13).is_ok());
+        assert!(g.validate(12).is_err());
+        // Malformed inputs are rejected descriptively.
+        assert!(RowGroups::parse("").is_err());
+        assert!(RowGroups::parse("5..5").is_err());
+        assert!(RowGroups::parse("4..2").is_err());
+        assert!(RowGroups::parse("0..4,2..6").is_err());
+        assert!(RowGroups::parse("abc").is_err());
+        // Uniform blocks cover 0..n with a short tail.
+        let b = RowGroups::blocks(10, 4);
+        assert_eq!(b.ranges, vec![0..4, 4..8, 8..10]);
     }
 
     #[test]

@@ -85,6 +85,17 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Human byte size with optional binary suffix, e.g.
+    /// `--mem-budget 256M` / `1.5G` / `4096` (plain bytes).
+    pub fn get_bytes(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                parse_bytes(v).map_err(|e| anyhow!("--{key} expects a byte size: {e}"))
+            }
+        }
+    }
+
     /// Comma-separated list of usizes, e.g. `--k 256,1024,4096`.
     pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.get(key) {
@@ -101,12 +112,46 @@ impl Args {
     }
 }
 
+/// Parse a human byte size: plain bytes, or a binary `K`/`M`/`G` suffix
+/// (case-insensitive); fractional values like `1.5G` are allowed.
+pub fn parse_bytes(s: &str) -> Result<usize> {
+    let t = s.trim();
+    let (num, mult) = match t.chars().last() {
+        Some('k') | Some('K') => (&t[..t.len() - 1], 1usize << 10),
+        Some('m') | Some('M') => (&t[..t.len() - 1], 1 << 20),
+        Some('g') | Some('G') => (&t[..t.len() - 1], 1 << 30),
+        _ => (t, 1),
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|e| anyhow!("bad byte size '{s}': {e}"))?;
+    if v < 0.0 {
+        bail!("byte size '{s}' is negative");
+    }
+    Ok((v * mult as f64) as usize)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn parse(s: &[&str]) -> Args {
         Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn byte_sizes_parse_with_suffixes() {
+        assert_eq!(parse_bytes("4096").unwrap(), 4096);
+        assert_eq!(parse_bytes("64K").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("256M").unwrap(), 256 << 20);
+        assert_eq!(parse_bytes("2g").unwrap(), 2 << 30);
+        assert_eq!(parse_bytes("1.5M").unwrap(), (1.5 * (1 << 20) as f64) as usize);
+        assert!(parse_bytes("abc").is_err());
+        assert!(parse_bytes("-3M").is_err());
+        let a = parse(&["attribute", "--mem-budget", "64M"]);
+        assert_eq!(a.get_bytes("mem-budget", 1).unwrap(), 64 << 20);
+        assert_eq!(a.get_bytes("absent", 7).unwrap(), 7);
     }
 
     #[test]

@@ -4,11 +4,12 @@
 //! cache/attribute/self-influence, plus the `grass cache`/`grass
 //! attribute` CLI smoke on the same path.
 
-use grass::attrib::{from_spec, AttributionSpec, Attributor};
+use grass::attrib::{from_spec, AttributionSpec, Attributor, InfluenceEngine, StreamOpts};
 use grass::data::synthgrad::{SYNTH_CLASSES, SYNTH_SEQ, SynthGrads, SynthHooks};
 use grass::models::shapes::ModelShapes;
+use grass::sketch::rng::Pcg;
 use grass::sketch::{MaskKind, MethodSpec, Scratch};
-use grass::store::{StoreMeta, StoreReader, StoreWriter, DEFAULT_SHARD_ROWS};
+use grass::store::{RowGroups, StoreMeta, StoreReader, StoreWriter, DEFAULT_SHARD_ROWS};
 use std::path::PathBuf;
 use std::process::Command;
 
@@ -167,6 +168,183 @@ fn factorized_store_blockwise_scorer_end_to_end() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+fn gaussian(rows: usize, k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..rows * k).map(|_| rng.next_gaussian()).collect()
+}
+
+/// Write a raw `n × k` matrix as a store with deliberately ragged shards.
+fn write_raw_store(dir: &PathBuf, rows: &[f32], k: usize, shard_rows: usize) {
+    let mut w = StoreWriter::create(dir, k, "raw", 0, shard_rows).unwrap();
+    w.push_batch(rows).unwrap();
+    w.finish().unwrap();
+}
+
+/// The tentpole contract: out-of-core streamed ingest + scoring produces
+/// the same scores as the in-memory path for every scorer in the registry,
+/// to ≤ 1e-5 relative tolerance, even with a budget so small that every
+/// block is two rows and three workers interleave.
+#[test]
+fn streamed_attribution_matches_in_memory_for_all_five_scorers() {
+    let (n, k, m) = (96usize, 32usize, 6usize);
+    let dir1 = tmpdir("stream_eq_ck1");
+    let dir2 = tmpdir("stream_eq_ck2");
+    let g1 = gaussian(n, k, 21);
+    let g2 = gaussian(n, k, 22);
+    write_raw_store(&dir1, &g1, k, 7); // 7-row shards: ragged final shard
+    write_raw_store(&dir2, &g2, k, 7);
+    let r1 = StoreReader::open(&dir1).unwrap();
+    let r2 = StoreReader::open(&dir2).unwrap();
+    let queries = gaussian(m, k, 23);
+    // 3 workers × 2-row chunks × k × 4 B × 2 buffers — far below the
+    // store's n·k·4 footprint, forcing dozens of streamed blocks.
+    let opts = StreamOpts {
+        mem_budget: 3 * 2 * k * 4 * 2,
+        workers: 3,
+        groups: None,
+    };
+    assert_eq!(opts.chunk_rows(k), 2);
+    assert!(opts.resident_bytes(k) < n * k * 4);
+
+    for scorer in ["if", "graddot", "trak", "tracin", "blockwise"] {
+        let mut aspec = AttributionSpec::new(scorer, MethodSpec::RandomMask { k }, 0);
+        aspec.damping = 0.05;
+        if scorer == "blockwise" {
+            aspec.layout = vec![12, 20]; // two uneven FIM blocks
+        }
+        let ensemble = matches!(scorer, "trak" | "tracin");
+
+        let mut mem = from_spec(&aspec).unwrap();
+        mem.cache(&g1, n).unwrap();
+        if ensemble {
+            mem.cache(&g2, n).unwrap();
+        }
+
+        let mut streamed = from_spec(&aspec).unwrap();
+        streamed.cache_stream(&r1, &opts).unwrap();
+        if ensemble {
+            streamed.cache_stream(&r2, &opts).unwrap();
+        }
+
+        let sm = mem.attribute(&queries, m).unwrap();
+        let ss = streamed.attribute(&queries, m).unwrap();
+        assert_eq!((ss.m, ss.n), (sm.m, sm.n), "{scorer} shape");
+        for i in 0..m * n {
+            let (a, b) = (ss.scores[i], sm.scores[i]);
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                "{scorer} score {i}: streamed {a} vs in-memory {b}"
+            );
+        }
+        let si_s = streamed.self_influence().unwrap();
+        let si_m = mem.self_influence().unwrap();
+        assert_eq!(si_s.len(), si_m.len(), "{scorer} self-influence len");
+        for i in 0..n {
+            assert!(
+                (si_s[i] - si_m[i]).abs() <= 1e-5 * (1.0 + si_m[i].abs()),
+                "{scorer} self-influence {i}: {} vs {}",
+                si_s[i],
+                si_m[i]
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir1).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+/// GGDA-style grouped scoring: group columns equal the sum of their member
+/// rows' scores, for both the raw-GradDot family and the preconditioned
+/// influence family (whose FIM is fit on the selected rows only).
+#[test]
+fn grouped_streaming_aggregates_member_rows() {
+    let (n, k, m) = (40usize, 16usize, 3usize);
+    let dir = tmpdir("stream_groups");
+    let g = gaussian(n, k, 31);
+    write_raw_store(&dir, &g, k, 7);
+    let reader = StoreReader::open(&dir).unwrap();
+    let queries = gaussian(m, k, 32);
+    // Three groups with a deliberate gap: rows 25..30 are excluded.
+    let groups = RowGroups::parse("0..10,10..25,30..40").unwrap();
+    let n_groups = groups.len();
+    let opts = StreamOpts {
+        mem_budget: 2 * 3 * k * 4 * 2,
+        workers: 2,
+        groups: Some(groups.clone()),
+    };
+
+    // GradDot: group score is the sum of member dot products.
+    let mut gd = from_spec(&AttributionSpec::new(
+        "graddot",
+        MethodSpec::RandomMask { k },
+        0,
+    ))
+    .unwrap();
+    gd.cache_stream(&reader, &opts).unwrap();
+    let s = gd.attribute(&queries, m).unwrap();
+    assert_eq!((s.m, s.n), (m, n_groups));
+    for (qi, q) in queries.chunks(k).enumerate() {
+        for (gi, r) in groups.ranges.iter().enumerate() {
+            let want: f32 = r
+                .clone()
+                .map(|i| {
+                    q.iter()
+                        .zip(&g[i * k..(i + 1) * k])
+                        .map(|(a, b)| a * b)
+                        .sum::<f32>()
+                })
+                .sum();
+            let got = s.scores[qi * n_groups + gi];
+            assert!(
+                (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "graddot group ({qi},{gi}): {got} vs {want}"
+            );
+        }
+    }
+    // Grouped self-influence sums the members' norms.
+    let si = gd.self_influence().unwrap();
+    assert_eq!(si.len(), n_groups);
+    for (gi, r) in groups.ranges.iter().enumerate() {
+        let want: f32 = r
+            .clone()
+            .map(|i| g[i * k..(i + 1) * k].iter().map(|v| v * v).sum::<f32>())
+            .sum();
+        assert!((si[gi] - want).abs() <= 1e-4 * (1.0 + want.abs()), "group {gi}");
+    }
+
+    // Influence: equivalent to the in-memory engine cached on the selected
+    // rows (in selection order), with per-group column sums.
+    let sel: Vec<f32> = groups
+        .ranges
+        .iter()
+        .flat_map(|r| r.clone())
+        .flat_map(|i| g[i * k..(i + 1) * k].to_vec())
+        .collect();
+    let n_sel = groups.total_rows();
+    let want_rows = InfluenceEngine::new(k, 0.1)
+        .attribute(&sel, n_sel, &queries, m)
+        .unwrap();
+    let mut st = InfluenceEngine::new(k, 0.1);
+    st.cache_stream(&reader, &opts).unwrap();
+    let got = Attributor::attribute(&st, &queries, m).unwrap();
+    assert_eq!((got.m, got.n), (m, n_groups));
+    for qi in 0..m {
+        let mut off = 0usize;
+        for (gi, r) in groups.ranges.iter().enumerate() {
+            let len = r.end - r.start;
+            let want: f32 = want_rows[qi * n_sel + off..qi * n_sel + off + len]
+                .iter()
+                .sum();
+            off += len;
+            let v = got.scores[qi * n_groups + gi];
+            assert!(
+                (v - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "influence group ({qi},{gi}): {v} vs {want}"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn cli_cache_then_attribute_smoke() {
     let dir = tmpdir("cli");
@@ -213,6 +391,45 @@ fn cli_cache_then_attribute_smoke() {
     );
     assert!(stdout.contains("attributed 4 queries"), "{stdout}");
     assert!(stdout.contains("self-influence"), "{stdout}");
+
+    // Streaming knobs: a deliberately tiny budget, pinned workers, and
+    // block row-grouping still attribute (48 rows → 3 groups of 16).
+    let out = Command::new(exe)
+        .args([
+            "attribute",
+            "--store",
+            dir_s,
+            "--queries",
+            "2",
+            "--scorer",
+            "graddot",
+            "--mem-budget",
+            "4K",
+            "--workers",
+            "2",
+            "--row-groups",
+            "block=16",
+        ])
+        .output()
+        .expect("spawn grass attribute streamed");
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(
+        out.status.success(),
+        "streamed attribute failed: {stdout}{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("3 score columns"), "{stdout}");
+
+    // An out-of-range row-group list is a descriptive error.
+    let out = Command::new(exe)
+        .args([
+            "attribute", "--store", dir_s, "--queries", "2", "--row-groups", "0..999",
+        ])
+        .output()
+        .expect("spawn grass attribute bad groups");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(err.contains("48"), "{err}");
 
     // A mismatched --method request is rejected, not silently scored.
     let out = Command::new(exe)

@@ -51,6 +51,7 @@ fn flat_pipeline_writes_ordered_store_matching_direct_path() {
             compress_workers: 2,
             queue_depth: 2,
             shard_rows: 32, // force multiple shards
+            ..PipelineConfig::default()
         },
     );
     let bank = CompressorBank::Flat(spec.build(p, seed));

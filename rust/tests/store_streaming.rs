@@ -1,0 +1,236 @@
+//! Store edge cases the out-of-core streaming path must survive: empty
+//! stores, a single row on a ragged final shard, non-divisible
+//! `push_batch` tails, cursor/parallel agreement with `read_all`, and the
+//! corrupted-shard regression (truncation must surface as a descriptive
+//! error naming the shard and byte counts, not a bare I/O error).
+
+use grass::attrib::{from_spec, AttributionSpec, Attributor, StreamOpts};
+use grass::sketch::MethodSpec;
+use grass::store::{RowBlock, StoreReader, StoreWriter};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "grass_store_stream_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Row i is `[i, i+0.5, ..]` so misplaced rows are detectable.
+fn row(i: usize, k: usize) -> Vec<f32> {
+    (0..k).map(|j| i as f32 + j as f32 * 0.5).collect()
+}
+
+fn write_store(dir: &PathBuf, n: usize, k: usize, shard_rows: usize) {
+    let mut w = StoreWriter::create(dir, k, "edge", 0, shard_rows).unwrap();
+    for i in 0..n {
+        w.push(&row(i, k)).unwrap();
+    }
+    w.finish().unwrap();
+}
+
+/// Collect (index, first value) for every row three ways and require
+/// bit-identical agreement with `read_all`.
+fn assert_all_paths_agree(reader: &StoreReader, n: usize, k: usize) {
+    let all = reader.read_all().unwrap();
+    assert_eq!(all.len(), n * k);
+
+    let mut seq = Vec::new();
+    reader
+        .for_each_row(|i, r| seq.push((i, r.to_vec())))
+        .unwrap();
+    assert_eq!(seq.len(), n);
+    for (i, r) in &seq {
+        assert_eq!(r.as_slice(), &all[i * k..(i + 1) * k], "for_each_row {i}");
+    }
+
+    // Cursor with a deliberately awkward chunk size.
+    let mut cur = reader.cursor_with(3, &[]);
+    let mut buf = Vec::new();
+    let mut rows_seen = 0usize;
+    while let Some(b) = cur.next_block(&mut buf).unwrap() {
+        for j in 0..b.rows {
+            let got = &buf[j * k..(j + 1) * k];
+            let want = &all[(b.start + j) * k..(b.start + j + 1) * k];
+            assert_eq!(got, want, "cursor row {}", b.start + j);
+        }
+        rows_seen += b.rows;
+    }
+    assert_eq!(rows_seen, n);
+
+    // Parallel visitation covers every row exactly once.
+    let seen = Mutex::new(vec![0usize; n]);
+    reader
+        .par_for_each_block(2, &[], 3, |_, b, data, _| {
+            let mut g = seen.lock().unwrap();
+            for j in 0..b.rows {
+                g[b.start + j] += 1;
+                assert_eq!(
+                    &data[j * k..(j + 1) * k],
+                    &all[(b.start + j) * k..(b.start + j + 1) * k]
+                );
+            }
+            Ok(())
+        })
+        .unwrap();
+    assert!(seen.into_inner().unwrap().iter().all(|&c| c == 1));
+}
+
+#[test]
+fn empty_store_streams_nothing_and_scores_empty() {
+    let dir = tmpdir("empty");
+    let k = 4;
+    write_store(&dir, 0, k, 8);
+    let reader = StoreReader::open(&dir).unwrap();
+    assert_eq!(reader.meta.n, 0);
+    assert_eq!(reader.num_shards(), 0);
+    assert!(reader.read_all().unwrap().is_empty());
+    assert!(reader.plan_blocks(4, &[]).is_empty());
+    let mut cur = reader.cursor();
+    let mut buf = Vec::new();
+    assert_eq!(cur.next_block(&mut buf).unwrap(), None);
+    reader
+        .for_each_row(|_, _| panic!("empty store yielded a row"))
+        .unwrap();
+    reader
+        .par_for_each_shard(4, |_, _, _, _| panic!("empty store yielded a block"))
+        .unwrap();
+
+    // A streamed scorer over the empty store produces an m × 0 matrix.
+    let mut gd = from_spec(&AttributionSpec::new(
+        "graddot",
+        MethodSpec::RandomMask { k },
+        0,
+    ))
+    .unwrap();
+    gd.cache_stream(&reader, &StreamOpts::default()).unwrap();
+    let s = gd.attribute(&vec![0.0; 2 * k], 2).unwrap();
+    assert_eq!((s.m, s.n), (2, 0));
+    assert!(s.scores.is_empty());
+    assert!(gd.self_influence().unwrap().is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn single_row_on_partial_last_shard() {
+    let dir = tmpdir("partial");
+    let (n, k) = (9usize, 3usize); // shard_rows 4 → shards of 4, 4, 1
+    write_store(&dir, n, k, 4);
+    let reader = StoreReader::open(&dir).unwrap();
+    assert_eq!(reader.num_shards(), 3);
+    let (start, data) = reader.read_shard(2).unwrap();
+    assert_eq!(start, 8);
+    assert_eq!(data, row(8, k));
+    assert_all_paths_agree(&reader, n, k);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn push_batch_with_non_divisible_final_batch() {
+    let dir = tmpdir("tail");
+    let (n, k) = (23usize, 5usize);
+    let mut w = StoreWriter::create(&dir, k, "edge", 0, 6).unwrap();
+    // Batches of 10, 10, then a ragged 3-row tail, against 6-row shards.
+    let all: Vec<f32> = (0..n).flat_map(|i| row(i, k)).collect();
+    w.push_batch(&all[..10 * k]).unwrap();
+    w.push_batch(&all[10 * k..20 * k]).unwrap();
+    w.push_batch(&all[20 * k..]).unwrap();
+    let meta = w.finish().unwrap();
+    assert_eq!(meta.n, n);
+    let reader = StoreReader::open(&dir).unwrap();
+    assert_eq!(reader.read_all().unwrap(), all);
+    assert_all_paths_agree(&reader, n, k);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn exact_shard_multiple_has_no_phantom_rows() {
+    let dir = tmpdir("exact");
+    let (n, k) = (12usize, 2usize); // exactly 3 shards of 4
+    write_store(&dir, n, k, 4);
+    let reader = StoreReader::open(&dir).unwrap();
+    assert_eq!(reader.num_shards(), 3);
+    assert_all_paths_agree(&reader, n, k);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_shard_is_a_descriptive_error() {
+    let dir = tmpdir("corrupt");
+    let (n, k) = (10usize, 4usize);
+    write_store(&dir, n, k, 4); // shards: 4, 4, 2 rows
+    // Truncate the middle shard by 5 bytes.
+    let shard1 = dir.join("shard_0001.bin");
+    let full_len = std::fs::metadata(&shard1).unwrap().len();
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(&shard1)
+        .unwrap();
+    f.set_len(full_len - 5).unwrap();
+    drop(f);
+
+    let reader = StoreReader::open(&dir).unwrap();
+    // Healthy shards still read.
+    assert!(reader.read_shard(0).is_ok());
+    assert!(reader.read_shard(2).is_ok());
+    // The truncated shard names itself and both byte counts.
+    let err = format!("{:#}", reader.read_shard(1).unwrap_err());
+    assert!(err.contains("shard 1"), "{err}");
+    assert!(err.contains(&full_len.to_string()), "{err}");
+    assert!(err.contains(&(full_len - 5).to_string()), "{err}");
+    assert!(err.contains("truncated or corrupted"), "{err}");
+    // Every whole-store path surfaces the same failure.
+    assert!(reader.read_all().is_err());
+    let mut cur = reader.cursor();
+    let mut buf = Vec::new();
+    let mut saw_err = false;
+    loop {
+        match cur.next_block(&mut buf) {
+            Ok(None) => break,
+            Ok(Some(_)) => {}
+            Err(_) => {
+                saw_err = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_err, "cursor must surface the truncated shard");
+    assert!(reader
+        .par_for_each_shard(2, |_, _, _, _| Ok(()))
+        .is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn row_blocks_never_cross_shards_even_with_ranges() {
+    let dir = tmpdir("ranges");
+    let (n, k) = (20usize, 2usize);
+    write_store(&dir, n, k, 6); // shard boundaries at 6, 12, 18
+    let reader = StoreReader::open(&dir).unwrap();
+    let blocks = reader.plan_blocks(50, &[3..15, 17..20]);
+    assert_eq!(
+        blocks,
+        vec![
+            RowBlock { start: 3, rows: 3 },
+            RowBlock { start: 6, rows: 6 },
+            RowBlock { start: 12, rows: 3 },
+            RowBlock { start: 17, rows: 1 },
+            RowBlock { start: 18, rows: 2 },
+        ]
+    );
+    // Selected rows stream in order with correct contents.
+    let mut cur = reader.cursor_with(50, &[3..15, 17..20]);
+    let mut buf = Vec::new();
+    let mut seen = Vec::new();
+    while let Some(b) = cur.next_block(&mut buf).unwrap() {
+        for j in 0..b.rows {
+            seen.push((b.start + j, buf[j * k]));
+        }
+    }
+    let want: Vec<(usize, f32)> = (3..15).chain(17..20).map(|i| (i, i as f32)).collect();
+    assert_eq!(seen, want);
+    std::fs::remove_dir_all(&dir).ok();
+}
