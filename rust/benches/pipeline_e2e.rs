@@ -223,6 +223,8 @@ fn main() {
                     samples_per_sec: pipeline.metrics.samples_per_sec(),
                     ns_per_elem: 1e9
                         / (pipeline.metrics.samples_per_sec() * p as f64).max(1e-12),
+                    density: Some(pipeline.metrics.input_density()),
+                    mean_nnz: Some(pipeline.metrics.input_density() * p as f64),
                     extra: vec![],
                 },
             );

@@ -1,8 +1,12 @@
 //! Bench: Table 2 — FactGraSS vs LoGra throughput on the exact
 //! Llama-3.1-8B layer geometry, on both execution models (per-sample
-//! `compress_into` loop vs the batch-first kernels). Prints the same rows
-//! as the paper plus the batch-speedup column, and persists
-//! `BENCH_table2_throughput.json`.
+//! `compress_into` loop vs the batch-first kernels), plus a density sweep
+//! pitting the dense batch kernels against the CSR (sparse) kernels at
+//! identical `(p, k, s)`. Prints the same rows as the paper plus the
+//! batch-speedup column, and persists `BENCH_table2_throughput.json`
+//! (records carry `density` / `mean_nnz` / `sparse_speedup` so the
+//! nnz-proportional scaling is diffable across PRs — CI asserts the
+//! sparse path wins at 1% density).
 //!
 //! Run: `cargo bench --bench table2_throughput`
 
@@ -16,10 +20,17 @@ fn main() {
     } else {
         (vec![256, 1024, 4096], 256, 4, 4)
     };
-    let (table, records) =
+    let (table, mut records) =
         table2::run_bench(&kls, tokens, reps, 2, batch, Some("results/table2.json"))
             .expect("table2");
     table.print();
+
+    // Density sweep: CSR vs dense kernels at 1% and fully dense input.
+    let (dtable, drecords) = table2::run_density(kls[0], tokens, reps, 2, batch, &[0.01, 1.0])
+        .expect("table2 density sweep");
+    dtable.print();
+    records.extend(drecords);
+
     match bench::write_bench_json("table2_throughput", &records) {
         Ok(path) => eprintln!("wrote {}", path.display()),
         Err(e) => eprintln!("failed to write bench json: {e}"),

@@ -20,6 +20,14 @@ pub struct Metrics {
     /// only unbounded-looking allocation, surfaced so the memory model in
     /// docs/ARCHITECTURE.md stays checkable.
     pub reorder_peak_bytes: AtomicU64,
+    /// Batches the density probe routed through the CSR (sparse) kernels.
+    pub sparse_batches: AtomicU64,
+    /// Batches routed through the dense batch kernels.
+    pub dense_batches: AtomicU64,
+    /// Non-zero gradient elements seen by the density probe.
+    pub input_nnz: AtomicU64,
+    /// Total gradient elements seen by the density probe.
+    pub input_elems: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -40,6 +48,21 @@ impl Metrics {
             compress_ns: AtomicU64::new(0),
             write_ns: AtomicU64::new(0),
             reorder_peak_bytes: AtomicU64::new(0),
+            sparse_batches: AtomicU64::new(0),
+            dense_batches: AtomicU64::new(0),
+            input_nnz: AtomicU64::new(0),
+            input_elems: AtomicU64::new(0),
+        }
+    }
+
+    /// Observed input density across all batches (1.0 when the probe saw
+    /// nothing, so dense-only runs read as fully dense).
+    pub fn input_density(&self) -> f64 {
+        let elems = self.input_elems.load(Ordering::Relaxed);
+        if elems == 0 {
+            1.0
+        } else {
+            self.input_nnz.load(Ordering::Relaxed) as f64 / elems as f64
         }
     }
 
@@ -69,7 +92,8 @@ impl Metrics {
         format!(
             "samples={} tokens={} batches={} rows_written={} elapsed={:.2}s \
              throughput={:.1} samples/s ({:.0} tok/s) | stage-time grad={:.2}s \
-             compress={:.2}s write={:.2}s | reorder-peak={}KB",
+             compress={:.2}s write={:.2}s | reorder-peak={}KB | \
+             dispatch sparse={} dense={} input-density={:.4}",
             load(&self.samples),
             load(&self.tokens),
             load(&self.batches),
@@ -81,6 +105,9 @@ impl Metrics {
             load(&self.compress_ns) as f64 / 1e9,
             load(&self.write_ns) as f64 / 1e9,
             load(&self.reorder_peak_bytes) / 1024,
+            load(&self.sparse_batches),
+            load(&self.dense_batches),
+            self.input_density(),
         )
     }
 }
@@ -98,5 +125,17 @@ mod tests {
         assert_eq!(m.samples.load(Ordering::Relaxed), 15);
         assert!(m.samples_per_sec() > 0.0);
         assert!(m.report().contains("samples=15"));
+    }
+
+    #[test]
+    fn input_density_gauge() {
+        let m = Metrics::new();
+        assert_eq!(m.input_density(), 1.0, "no observations reads as dense");
+        m.add(&m.input_nnz, 25);
+        m.add(&m.input_elems, 1000);
+        assert!((m.input_density() - 0.025).abs() < 1e-12);
+        m.add(&m.sparse_batches, 1);
+        assert!(m.report().contains("sparse=1"));
+        assert!(m.report().contains("input-density=0.025"));
     }
 }

@@ -3,7 +3,8 @@
 use super::metrics::Metrics;
 use crate::data::{Labelled, Sequences};
 use crate::runtime::{Arg, Executable, Runtime};
-use crate::sketch::{Compressor, FactorizedCompressor, Scratch};
+use crate::sketch::sparse::probe;
+use crate::sketch::{Compressor, FactorizedCompressor, Scratch, SparseRows};
 use crate::store::{StoreMeta, StoreWriter};
 use anyhow::{anyhow, Result};
 
@@ -62,16 +63,36 @@ impl PipelineConfig {
     }
 }
 
-/// What the grad stage hands to the compress stage.
+/// What the grad stage hands to the compress stage. When the bank's
+/// kernels can profit from CSR input
+/// ([`CompressorBank::sparse_dispatch_viable`]), the grad workers
+/// density-[`probe`] each batch (early-exit scan) and convert
+/// sparse-enough batches to CSR on their side of the channel, so the
+/// compress stage receives the representation its kernels want and the
+/// channel carries ~`nnz` floats instead of `n·p` for sparse batches.
 enum GradBatch {
     /// Flat per-sample gradients: `len(indices) × dim` rows.
     Flat { first: usize, rows: Vec<f32>, count: usize },
+    /// Flat rows in CSR form — density at or below the dispatch crossover.
+    SparseFlat {
+        first: usize,
+        rows: SparseRows,
+        count: usize,
+    },
     /// LoGra hooks: per-layer (x: count×T×d_in, dy: count×T×d_out).
     Factored {
         first: usize,
         count: usize,
         seq: usize,
         layers: Vec<(Vec<f32>, Vec<f32>)>,
+    },
+    /// LoGra hooks in CSR form, per factor side, over `count·T` timestep
+    /// rows per layer.
+    SparseFactored {
+        first: usize,
+        count: usize,
+        seq: usize,
+        layers: Vec<(SparseRows, SparseRows)>,
     },
 }
 
@@ -193,9 +214,16 @@ impl<'a> CachePipeline<'a> {
                 } else {
                     vec![]
                 },
+                density: 1.0,
             },
         )?);
         let seq = meta.seq.unwrap_or(1);
+        // Probe dense batches for CSR conversion only when every kernel in
+        // the bank can actually win from it (SJLT / LoGra / FactSjlt —
+        // kernels whose dense cost scales with the input width). For
+        // gather-bound banks (masks, GraSS, FactGraSS) the probe itself
+        // would cost more than the dense kernel, so it is skipped.
+        let sparse_viable = bank.sparse_dispatch_viable();
 
         // Stage 1 → 2 channel: index batches.
         let (batch_tx, batch_rx) = sync_channel::<Vec<usize>>(self.cfg.queue_depth);
@@ -269,30 +297,102 @@ impl<'a> CachePipeline<'a> {
                         metrics.add(&metrics.batches, 1);
                         metrics.add(&metrics.samples, count as u64);
                         metrics.add(&metrics.tokens, (count * seq) as u64);
+                        // Early-exit density probe (viable banks only):
+                        // records what it saw for the input-density gauge
+                        // and short-circuits to dense on the first buffer
+                        // that crosses the crossover.
+                        let run_probe = |buf: &[f32], go: &mut bool| {
+                            let (sparse, nnz, scanned) = probe(buf);
+                            metrics.add(&metrics.input_nnz, nnz as u64);
+                            metrics.add(&metrics.input_elems, scanned as u64);
+                            *go &= sparse;
+                        };
                         let payload = if factored {
                             let l = meta.layers.len();
-                            let mut layers = Vec::with_capacity(l);
-                            for li in 0..l {
-                                let x = &outputs[li];
-                                let dy = &outputs[l + li];
-                                let xw: usize = x.shape[1..].iter().product();
-                                let dw: usize = dy.shape[1..].iter().product();
-                                layers.push((
-                                    x.data[..count * xw].to_vec(),
-                                    dy.data[..count * dw].to_vec(),
-                                ));
+                            // Per-layer borrowed slices of the PJRT
+                            // outputs — probing and the chosen conversion
+                            // both read these directly, so no dense copy
+                            // is ever made for a sparse-dispatched batch.
+                            let sides: Vec<(&[f32], &[f32])> = (0..l)
+                                .map(|li| {
+                                    let x = &outputs[li];
+                                    let dy = &outputs[l + li];
+                                    let xw: usize = x.shape[1..].iter().product();
+                                    let dw: usize = dy.shape[1..].iter().product();
+                                    (&x.data[..count * xw], &dy.data[..count * dw])
+                                })
+                                .collect();
+                            let mut go_sparse = sparse_viable;
+                            for &(xd, dyd) in &sides {
+                                if go_sparse {
+                                    run_probe(xd, &mut go_sparse);
+                                }
+                                if go_sparse {
+                                    run_probe(dyd, &mut go_sparse);
+                                }
                             }
-                            GradBatch::Factored {
-                                first,
-                                count,
-                                seq,
-                                layers,
+                            if go_sparse {
+                                metrics.add(&metrics.sparse_batches, 1);
+                                let layers = sides
+                                    .iter()
+                                    .map(|&(xd, dyd)| {
+                                        let d_in = xd.len() / (count * seq);
+                                        let d_out = dyd.len() / (count * seq);
+                                        (
+                                            SparseRows::from_dense_threshold(
+                                                xd,
+                                                count * seq,
+                                                d_in,
+                                                0.0,
+                                            ),
+                                            SparseRows::from_dense_threshold(
+                                                dyd,
+                                                count * seq,
+                                                d_out,
+                                                0.0,
+                                            ),
+                                        )
+                                    })
+                                    .collect();
+                                GradBatch::SparseFactored {
+                                    first,
+                                    count,
+                                    seq,
+                                    layers,
+                                }
+                            } else {
+                                metrics.add(&metrics.dense_batches, 1);
+                                let layers = sides
+                                    .iter()
+                                    .map(|&(xd, dyd)| (xd.to_vec(), dyd.to_vec()))
+                                    .collect();
+                                GradBatch::Factored {
+                                    first,
+                                    count,
+                                    seq,
+                                    layers,
+                                }
                             }
                         } else {
-                            GradBatch::Flat {
-                                first,
-                                rows: outputs[0].data[..count * p].to_vec(),
-                                count,
+                            let rows = &outputs[0].data[..count * p];
+                            let mut go_sparse = sparse_viable;
+                            if go_sparse {
+                                run_probe(rows, &mut go_sparse);
+                            }
+                            if go_sparse {
+                                metrics.add(&metrics.sparse_batches, 1);
+                                GradBatch::SparseFlat {
+                                    first,
+                                    rows: SparseRows::from_dense_threshold(rows, count, p, 0.0),
+                                    count,
+                                }
+                            } else {
+                                metrics.add(&metrics.dense_batches, 1);
+                                GradBatch::Flat {
+                                    first,
+                                    rows: rows.to_vec(),
+                                    count,
+                                }
                             }
                         };
                         if grad_tx.send(payload).is_err() {
@@ -335,6 +435,43 @@ impl<'a> CachePipeline<'a> {
                                     &mut out,
                                     &mut scratch,
                                 );
+                                (first, count, out)
+                            }
+                            GradBatch::SparseFlat { first, rows, count } => {
+                                let c: &dyn Compressor = match bank {
+                                    CompressorBank::Flat(c) => c.as_ref(),
+                                    _ => unreachable!("flat batch with factored bank"),
+                                };
+                                let mut out = vec![0.0f32; count * k];
+                                c.compress_sparse_batch_with(&rows, &mut out, &mut scratch);
+                                (first, count, out)
+                            }
+                            GradBatch::SparseFactored {
+                                first,
+                                count,
+                                seq,
+                                layers,
+                            } => {
+                                let cs: &[Box<dyn FactorizedCompressor>] = match bank {
+                                    CompressorBank::Factored(cs) => cs,
+                                    _ => unreachable!("factored batch with flat bank"),
+                                };
+                                let mut out = vec![0.0f32; count * k];
+                                let mut off = 0usize;
+                                for (li, c) in cs.iter().enumerate() {
+                                    let (x, dy) = &layers[li];
+                                    c.compress_sparse_batch_with(
+                                        count,
+                                        seq,
+                                        x,
+                                        dy,
+                                        &mut out,
+                                        k,
+                                        off,
+                                        &mut scratch,
+                                    );
+                                    off += c.output_dim();
+                                }
                                 (first, count, out)
                             }
                             GradBatch::Factored {

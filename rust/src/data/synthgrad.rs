@@ -17,7 +17,8 @@
 //! mixer (never an additive salt), so the template/train/query streams
 //! cannot alias at shifted indices.
 
-use crate::sketch::rng::{hash2, hash3, Pcg};
+use crate::sketch::rng::{hash2, hash3, to_gaussian, Pcg};
+use crate::sketch::SparseRows;
 
 /// Model name recorded in store metadata for synthetic caches.
 pub const SYNTH_MODEL: &str = "synth";
@@ -28,22 +29,93 @@ pub const SYNTH_CLASSES: usize = 8;
 /// Noise scale relative to the unit-scale class template.
 const NOISE: f32 = 0.5;
 
-/// Stream kinds: templates, train-sample noise, query noise.
+/// Stream kinds: templates, train-sample noise, query noise, class
+/// support sets (the sparse-mode coordinate selection).
 const KIND_TEMPLATE: u64 = 0x7E3B_1A01;
 const KIND_TRAIN: u64 = 0x7E3B_1A02;
 const KIND_QUERY: u64 = 0x7E3B_1A03;
+const KIND_SUPPORT: u64 = 0x7E3B_1A04;
 
 /// Flat synthetic per-sample gradients of dimension `p`.
+///
+/// With `density < 1.0` the generator is **genuinely sparse**: each class
+/// owns a deterministic support of `⌈density·p⌉` coordinates, and both the
+/// template and the per-sample noise live only on that support — so
+/// same-class rows share their support (and correlate, like real
+/// per-sample gradients whose non-zeros concentrate in the same layers)
+/// while the other `p·(1 − density)` coordinates are exact zeros.
+/// [`SynthGrads::rows_sparse`] emits the CSR form directly, never
+/// materialising the dense row; the dense accessors scatter the same
+/// values, so sparse and dense views of a sample agree bit-for-bit.
 #[derive(Debug, Clone)]
 pub struct SynthGrads {
     pub p: usize,
     pub seed: u64,
+    /// Fraction of coordinates in each class's support; 1.0 = dense.
+    pub density: f32,
+    /// Memoized per-class sorted supports (sparse mode; empty when
+    /// dense). Only [`SYNTH_CLASSES`] distinct supports exist, so they
+    /// are sampled once at construction instead of once per row.
+    supports: Vec<Vec<u32>>,
 }
 
 impl SynthGrads {
     pub fn new(p: usize, seed: u64) -> Self {
+        Self::with_density(p, seed, 1.0)
+    }
+
+    /// Sparse-mode constructor: per-class supports of `⌈density·p⌉`
+    /// coordinates. `density = 1.0` is the dense generator, bit-identical
+    /// to [`SynthGrads::new`].
+    pub fn with_density(p: usize, seed: u64, density: f32) -> Self {
         assert!(p > 0, "need a positive gradient dimension");
-        Self { p, seed }
+        assert!(
+            density > 0.0 && density <= 1.0,
+            "density must be in (0, 1], got {density}"
+        );
+        let supports = if density < 1.0 {
+            let k = ((density as f64 * p as f64).ceil() as usize).clamp(1, p);
+            (0..SYNTH_CLASSES)
+                .map(|class| {
+                    let mut rng = Pcg::new(hash3(seed, KIND_SUPPORT, class as u64));
+                    rng.sample_distinct(p, k)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Self {
+            p,
+            seed,
+            density,
+            supports,
+        }
+    }
+
+    /// Non-zeros per row in sparse mode (= `p` when dense).
+    pub fn nnz_per_row(&self) -> usize {
+        if self.density >= 1.0 {
+            self.p
+        } else {
+            self.supports[0].len()
+        }
+    }
+
+    /// Sparse-mode values on the class support: template + noise, both
+    /// counter-addressed per coordinate so any row regenerates in
+    /// isolation.
+    fn sparse_pairs(&self, class: usize, noise_root: u64) -> (&[u32], Vec<f32>) {
+        let idx = &self.supports[class];
+        let tkey = hash3(self.seed, KIND_TEMPLATE, class as u64);
+        let vals = idx
+            .iter()
+            .map(|&j| {
+                let t = to_gaussian(hash3(tkey, j as u64, 0), hash3(tkey, j as u64, 1));
+                let e = to_gaussian(hash3(noise_root, j as u64, 0), hash3(noise_root, j as u64, 1));
+                t + NOISE * e
+            })
+            .collect();
+        (idx, vals)
     }
 
     fn template(&self, class: usize, out: &mut [f32]) {
@@ -54,6 +126,16 @@ impl SynthGrads {
     }
 
     fn fill(&self, class: usize, noise_stream: u64, out: &mut [f32]) {
+        if self.density < 1.0 {
+            // Dense view of the sparse generator: scatter the exact values
+            // the CSR path emits, zeros elsewhere.
+            out.fill(0.0);
+            let (idx, vals) = self.sparse_pairs(class, noise_stream);
+            for (&j, &v) in idx.iter().zip(&vals) {
+                out[j as usize] = v;
+            }
+            return;
+        }
         self.template(class, out);
         let mut rng = Pcg::new(noise_stream);
         for v in out.iter_mut() {
@@ -79,6 +161,31 @@ impl SynthGrads {
         for (off, chunk) in out.chunks_mut(self.p).enumerate() {
             let i = start + off;
             self.fill(self.class(i), hash3(self.seed, KIND_TRAIN, i as u64), chunk);
+        }
+        out
+    }
+
+    /// Contiguous CSR block of `count` train rows starting at `start`,
+    /// built directly in index space — `O(count · nnz)`, never touching
+    /// the `p·(1 − density)` zero coordinates. Works at any density
+    /// (dense rows just store all `p` entries).
+    pub fn rows_sparse(&self, start: usize, count: usize) -> SparseRows {
+        let mut out = SparseRows::new(self.p);
+        if self.density >= 1.0 {
+            let all: Vec<u32> = (0..self.p as u32).collect();
+            let mut buf = vec![0.0f32; self.p];
+            for off in 0..count {
+                let i = start + off;
+                self.fill(self.class(i), hash3(self.seed, KIND_TRAIN, i as u64), &mut buf);
+                out.push_row(&all, &buf);
+            }
+            return out;
+        }
+        for off in 0..count {
+            let i = start + off;
+            let (idx, vals) =
+                self.sparse_pairs(self.class(i), hash3(self.seed, KIND_TRAIN, i as u64));
+            out.push_row(idx, &vals);
         }
         out
     }
@@ -190,6 +297,37 @@ mod tests {
             dot(&a, &b),
             dot(&a, &c)
         );
+    }
+
+    #[test]
+    fn sparse_mode_matches_dense_view_and_keeps_class_signal() {
+        let g = SynthGrads::with_density(512, 5, 0.05);
+        // CSR and dense views of the same sample agree bit-for-bit.
+        let sp = g.rows_sparse(2, 3);
+        assert_eq!(sp.to_dense(), g.rows(2, 3));
+        assert_eq!(sp.n(), 3);
+        // Every row carries exactly the support's nnz.
+        assert_eq!(sp.nnz(0), g.nnz_per_row());
+        assert!((sp.density() as f32 - 0.05).abs() < 0.01);
+        // Same-class rows share their support and correlate above
+        // cross-class rows (which overlap in only ~density² of coords).
+        let dot = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+        let (a, b, c) = (g.row(0), g.row(SYNTH_CLASSES), g.row(1));
+        assert!(
+            dot(&a, &b) > dot(&a, &c),
+            "sparse class structure missing: {} vs {}",
+            dot(&a, &b),
+            dot(&a, &c)
+        );
+        // Queries live on the same class supports, so attribute-time
+        // queries correlate with sparse cached rows.
+        let (q, class) = g.query(0);
+        assert_eq!(class, 0);
+        assert!(dot(&q, &a) > dot(&q, &c));
+        // Determinism + full-density CSR fallback.
+        assert_eq!(g.rows_sparse(2, 3), g.rows_sparse(2, 3));
+        let dense = SynthGrads::new(64, 9);
+        assert_eq!(dense.rows_sparse(0, 2).to_dense(), dense.rows(0, 2));
     }
 
     #[test]

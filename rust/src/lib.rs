@@ -67,6 +67,17 @@
 //!    output writes never contend.
 //! 3. *Sparse* — [`sketch::Compressor::compress_sparse_into`], nnz-scaling
 //!    per-sample compression for explicitly sparse gradients.
+//! 4. *Sparse batch* — [`sketch::Compressor::compress_sparse_batch_with`] /
+//!    [`sketch::FactorizedCompressor::compress_sparse_batch_with`] over
+//!    CSR [`sketch::SparseRows`] batches: nnz-proportional kernels
+//!    (`O(s·nnz)` SJLT scatter, `O(nnz + k)` sorted mask merges, GraSS
+//!    mask-then-project entirely in index space) that never touch a zero
+//!    coordinate. For banks that can profit from CSR conversion
+//!    ([`sketch::Compressor::sparse_dispatch_viable`]), the pipeline's
+//!    grad workers density-probe each batch (early-exit scan) and convert
+//!    at the [`sketch::sparse::SPARSE_DISPATCH_MAX_DENSITY`] crossover,
+//!    so the compress workers receive whichever representation their
+//!    kernels want — tier 2 or tier 4.
 //!
 //! **Scratch workspaces.** The batch tier draws every temporary from a
 //! reusable [`sketch::Scratch`] (one per pipeline compress worker), so

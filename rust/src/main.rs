@@ -56,6 +56,7 @@ USAGE:
   grass exp <fig4|table1a|table1b|table1c|table1d|table2|fig9|ablation|all> [flags]
   grass cache --model <mlp|resnet_lite|gpt2_tiny|music|synth> --method <spec>
               [--n N] [--p P] [--seed S] [--store DIR] [--fast]
+              [--density 0.01 (flat synth: sparse gradients via CSR kernels)]
               [--shard-rows R|0=auto] [--mem-budget 256M]
   grass attribute --store DIR [--queries M] [--scorer if|graddot|trak|tracin|blockwise]
                   [--damping 1e-3] [--top 5] [--self-influence]
@@ -78,8 +79,12 @@ METHOD SPECS (factorized,   factgrass:kin=..,kout=..,kl=..,mask=rm|sm |
 `grass attribute` streams the store out-of-core: train rows are read one
 shard block per worker under --mem-budget, so stores far larger than RAM
 attribute correctly; --row-groups aggregates scores per row group
-(GGDA-style). Full reference: docs/CLI.md; data-flow and memory model:
-docs/ARCHITECTURE.md."
+(GGDA-style). For banks whose kernels profit from CSR input (sjlt,
+logra, factsjlt), the pipeline's grad workers density-probe each
+gradient batch and auto-dispatch between the dense batch kernels and the
+nnz-proportional CSR kernels (sparse/dense counts and observed input
+density appear in the pipeline metrics). Full reference: docs/CLI.md;
+data-flow and memory model: docs/ARCHITECTURE.md."
     );
 }
 
@@ -233,6 +238,14 @@ fn cache_with_runtime(
     store: &str,
     args: &Args,
 ) -> Result<()> {
+    // The density knob shapes the synthetic gradient source only; a
+    // runtime model's gradients are whatever the model produces. Reject
+    // rather than silently ignore.
+    ensure!(
+        args.get("density").is_none(),
+        "--density applies only to the synthetic gradient source (--model {SYNTH_MODEL}); \
+         model '{model}' computes real gradients"
+    );
     let model_meta = rt.manifest.model(model)?.clone();
     let shapes = model_meta.shapes();
     let bank = spec.build_bank(&shapes, seed)?;
@@ -276,6 +289,8 @@ fn cache_with_runtime(
 
 /// Runtime-free cache: compress the deterministic synthetic gradient
 /// source through the spec's bank and persist a fully described store.
+/// `--density D` (flat specs) draws genuinely sparse class-template
+/// gradients and routes them through the CSR kernels end to end.
 fn cache_synthetic(
     spec: &MethodSpec,
     n: usize,
@@ -285,6 +300,16 @@ fn cache_synthetic(
 ) -> Result<()> {
     let dir = Path::new(store);
     let cfg = cache_pipeline_config(args)?;
+    let density = args.get_f64("density", 1.0)?;
+    ensure!(
+        density > 0.0 && density <= 1.0,
+        "--density must be in (0, 1], got {density}"
+    );
+    ensure!(
+        !(spec.is_factorized() && density < 1.0),
+        "--density applies to the flat synthetic gradient source; \
+         factorized specs cache dense synthetic hooks"
+    );
     let mut scratch = Scratch::new();
     let meta = if spec.is_factorized() {
         let layers = default_synth_layers();
@@ -315,25 +340,32 @@ fn cache_synthetic(
         let bank = spec.build_bank(&shapes, seed)?;
         let c = bank.as_flat().expect("flat spec builds a flat bank");
         let k = c.output_dim();
-        let mut w = StoreWriter::create_described(
-            dir,
-            StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, cfg.effective_shard_rows(k))?,
-        )?;
-        let src = SynthGrads::new(p, seed);
+        let mut described =
+            StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, cfg.effective_shard_rows(k))?;
+        described.density = density;
+        let mut w = StoreWriter::create_described(dir, described)?;
+        let src = SynthGrads::with_density(p, seed, density as f32);
         let chunk = 64usize;
         let mut out = vec![0.0f32; chunk * k];
         let mut start = 0;
         while start < n {
             let count = chunk.min(n - start);
-            let rows = src.rows(start, count);
-            c.compress_batch_with(&rows, count, &mut out[..count * k], &mut scratch);
+            if density < 1.0 {
+                // CSR end to end: the source emits index/value pairs and
+                // the sparse kernels never touch a zero coordinate.
+                let rows = src.rows_sparse(start, count);
+                c.compress_sparse_batch_with(&rows, &mut out[..count * k], &mut scratch);
+            } else {
+                let rows = src.rows(start, count);
+                c.compress_batch_with(&rows, count, &mut out[..count * k], &mut scratch);
+            }
             w.push_batch(&out[..count * k])?;
             start += count;
         }
         w.finish()?
     };
     println!(
-        "cached {} rows of k={} into {store} (synthetic source, method {})",
+        "cached {} rows of k={} into {store} (synthetic source, method {}, density {density})",
         meta.n,
         meta.k,
         spec.spec_string()
@@ -526,7 +558,9 @@ fn synth_queries(
         Ok((out, classes))
     } else {
         let c = bank.as_flat().expect("flat bank");
-        let src = SynthGrads::new(meta.input_dim, meta.seed);
+        // Regenerate from the recorded density so queries live on the same
+        // class supports the sparse-cached train rows used.
+        let src = SynthGrads::with_density(meta.input_dim, meta.seed, meta.density as f32);
         let (raw, classes) = src.queries(m);
         let mut out = vec![0.0f32; m * k];
         c.compress_batch_with(&raw, m, &mut out, &mut scratch);

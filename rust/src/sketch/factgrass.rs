@@ -18,6 +18,7 @@
 use super::mask::RandomMask;
 use super::rng::Pcg;
 use super::sjlt::Sjlt;
+use super::sparse::SparseRows;
 use super::{Compressor, FactorizedCompressor, MaskKind, Scratch};
 use crate::linalg::matmul::matmul_at_b;
 use crate::util::par;
@@ -145,26 +146,80 @@ impl FactGrass {
         let mut dp = scratch.take_f32(nt * ko);
         self.mask_in.compress_batch_with(x, nt, &mut xp, scratch);
         self.mask_out.compress_batch_with(dy, nt, &mut dp, scratch);
-        let mut g = scratch.take_f32(n * ki * ko);
-        {
-            let (xp, dp) = (&xp[..], &dp[..]);
-            par::par_chunks_mut(&mut g, ki * ko, 1, |row_start, chunk| {
-                for (off, grow) in chunk.chunks_mut(ki * ko).enumerate() {
-                    let i = row_start + off;
-                    matmul_at_b(
-                        &xp[i * t * ki..(i + 1) * t * ki],
-                        &dp[i * t * ko..(i + 1) * t * ko],
-                        grow,
-                        t,
-                        ki,
-                        ko,
-                    );
-                }
-            });
-        }
+        let g = self.outer_products(n, t, &xp, &dp, scratch);
         scratch.put_f32(xp);
         scratch.put_f32(dp);
         g
+    }
+
+    /// CSR variant of [`FactGrass::reconstruct_batch`]: both factor sides
+    /// arrive as sparse timestep rows and are masked by the `O(nnz + k')`
+    /// merge-gather kernel, so stage 1 never reads a zero activation. The
+    /// masked factors are tiny and dense, so stages 2+3 are shared with the
+    /// dense path unchanged.
+    fn reconstruct_batch_sparse(
+        &self,
+        n: usize,
+        t: usize,
+        x: &SparseRows,
+        dy: &SparseRows,
+        scratch: &mut Scratch,
+    ) -> Vec<f32> {
+        let (ki, ko) = (self.k_in_p(), self.k_out_p());
+        let nt = n * t;
+        let mut xp = scratch.take_f32(nt * ki);
+        let mut dp = scratch.take_f32(nt * ko);
+        self.mask_in.compress_sparse_batch_with(x, &mut xp, scratch);
+        self.mask_out.compress_sparse_batch_with(dy, &mut dp, scratch);
+        let g = self.outer_products(n, t, &xp, &dp, scratch);
+        scratch.put_f32(xp);
+        scratch.put_f32(dp);
+        g
+    }
+
+    /// Stage 2 shared by the dense and CSR batch paths: the per-sample
+    /// `X'ᵀ DY'` accumulation over the masked factors, parallel over
+    /// samples into a workspace-owned `n × (k_in'·k_out')` matrix (the
+    /// caller hands it back via `scratch.put_f32`).
+    fn outer_products(
+        &self,
+        n: usize,
+        t: usize,
+        xp: &[f32],
+        dp: &[f32],
+        scratch: &mut Scratch,
+    ) -> Vec<f32> {
+        let (ki, ko) = (self.k_in_p(), self.k_out_p());
+        let mut g = scratch.take_f32(n * ki * ko);
+        par::par_chunks_mut(&mut g, ki * ko, 1, |row_start, chunk| {
+            for (off, grow) in chunk.chunks_mut(ki * ko).enumerate() {
+                let i = row_start + off;
+                matmul_at_b(
+                    &xp[i * t * ki..(i + 1) * t * ki],
+                    &dp[i * t * ko..(i + 1) * t * ko],
+                    grow,
+                    t,
+                    ki,
+                    ko,
+                );
+            }
+        });
+        g
+    }
+
+    /// Stage 3 shared by the dense and CSR batch paths: SJLT each sample's
+    /// reconstructed vector into its strided output band, parallel over
+    /// samples.
+    fn sjlt_rows(&self, g: &[f32], out: &mut [f32], out_stride: usize, out_off: usize) {
+        let kp = self.k_in_p() * self.k_out_p();
+        let k = self.k;
+        par::par_chunks_mut(out, out_stride, 1, |row_start, chunk| {
+            for (off, orow) in chunk.chunks_mut(out_stride).enumerate() {
+                let i = row_start + off;
+                self.sjlt
+                    .compress_into(&g[i * kp..(i + 1) * kp], &mut orow[out_off..out_off + k]);
+            }
+        });
     }
 }
 
@@ -209,19 +264,39 @@ impl FactorizedCompressor for FactGrass {
         assert_eq!(dy.len(), n * t * self.d_out);
         assert_eq!(out.len(), n * out_stride);
         assert!(out_off + self.k <= out_stride);
-        let kp = self.k_in_p() * self.k_out_p();
         let g = self.reconstruct_batch(n, t, x, dy, scratch);
-        {
-            let g = &g[..];
-            let k = self.k;
-            par::par_chunks_mut(out, out_stride, 1, |row_start, chunk| {
-                for (off, orow) in chunk.chunks_mut(out_stride).enumerate() {
-                    let i = row_start + off;
-                    self.sjlt
-                        .compress_into(&g[i * kp..(i + 1) * kp], &mut orow[out_off..out_off + k]);
-                }
-            });
-        }
+        self.sjlt_rows(&g, out, out_stride, out_off);
+        scratch.put_f32(g);
+    }
+
+    /// CSR batch kernel: sparse factor masking (stage 1 cost `O(nnz + k')`
+    /// per timestep row, never `O(d)`), then the shared dense
+    /// reconstruction and SJLT over the small masked factors. The
+    /// pipeline never *converts* dense batches for this kernel
+    /// (`sparse_dispatch_viable` is false — the dense gather is already
+    /// `O(k')`); it serves callers that natively hold CSR factor
+    /// activations, where densifying would cost the `O(d)` this kernel
+    /// avoids.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_sparse_batch_with(
+        &self,
+        n: usize,
+        t: usize,
+        x: &SparseRows,
+        dy: &SparseRows,
+        out: &mut [f32],
+        out_stride: usize,
+        out_off: usize,
+        scratch: &mut Scratch,
+    ) {
+        assert_eq!(x.n(), n * t, "x row count mismatch");
+        assert_eq!(dy.n(), n * t, "dy row count mismatch");
+        assert_eq!(x.dim(), self.d_in, "x factor dimension mismatch");
+        assert_eq!(dy.dim(), self.d_out, "dy factor dimension mismatch");
+        assert_eq!(out.len(), n * out_stride);
+        assert!(out_off + self.k <= out_stride);
+        let g = self.reconstruct_batch_sparse(n, t, x, dy, scratch);
+        self.sjlt_rows(&g, out, out_stride, out_off);
         scratch.put_f32(g);
     }
 
@@ -299,21 +374,50 @@ impl FactorizedCompressor for FactMask {
         assert_eq!(out.len(), n * out_stride);
         assert!(out_off + k <= out_stride);
         let g = self.0.reconstruct_batch(n, t, x, dy, scratch);
-        {
-            let g = &g[..];
-            par::par_chunks_mut(out, out_stride, 8, |row_start, chunk| {
-                for (off, orow) in chunk.chunks_mut(out_stride).enumerate() {
-                    let i = row_start + off;
-                    orow[out_off..out_off + k].copy_from_slice(&g[i * k..(i + 1) * k]);
-                }
-            });
-        }
+        copy_bands(&g, k, out, out_stride, out_off);
+        scratch.put_f32(g);
+    }
+
+    /// CSR batch kernel: sparse factor masking (`O(nnz + k')` per timestep
+    /// row), shared reconstruction, parallel band copy.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_sparse_batch_with(
+        &self,
+        n: usize,
+        t: usize,
+        x: &SparseRows,
+        dy: &SparseRows,
+        out: &mut [f32],
+        out_stride: usize,
+        out_off: usize,
+        scratch: &mut Scratch,
+    ) {
+        let k = self.output_dim();
+        assert_eq!(x.n(), n * t, "x row count mismatch");
+        assert_eq!(dy.n(), n * t, "dy row count mismatch");
+        assert_eq!(x.dim(), self.0.d_in, "x factor dimension mismatch");
+        assert_eq!(dy.dim(), self.0.d_out, "dy factor dimension mismatch");
+        assert_eq!(out.len(), n * out_stride);
+        assert!(out_off + k <= out_stride);
+        let g = self.0.reconstruct_batch_sparse(n, t, x, dy, scratch);
+        copy_bands(&g, k, out, out_stride, out_off);
         scratch.put_f32(g);
     }
 
     fn name(&self) -> String {
         format!("RM_{}⊗{}", self.0.k_in_p(), self.0.k_out_p())
     }
+}
+
+/// Copy each sample's `k`-wide row of `g` into its strided output band,
+/// parallel over samples (shared by the dense and CSR FactMask kernels).
+fn copy_bands(g: &[f32], k: usize, out: &mut [f32], out_stride: usize, out_off: usize) {
+    par::par_chunks_mut(out, out_stride, 8, |row_start, chunk| {
+        for (off, orow) in chunk.chunks_mut(out_stride).enumerate() {
+            let i = row_start + off;
+            orow[out_off..out_off + k].copy_from_slice(&g[i * k..(i + 1) * k]);
+        }
+    });
 }
 
 /// Factorized SJLT baseline (`SJLT_{k_in ⊗ k_out}` in Table 1d): SJLT on
@@ -412,6 +516,60 @@ impl FactorizedCompressor for FactSjlt {
         }
         scratch.put_f32(xp);
         scratch.put_f32(dp);
+    }
+
+    /// CSR batch kernel: both factor SJLTs take their `O(s·nnz)` sparse
+    /// scatter over the CSR timestep rows (no chunked table — supports
+    /// differ per row), then the shared per-sample Kronecker accumulation.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_sparse_batch_with(
+        &self,
+        n: usize,
+        t: usize,
+        x: &SparseRows,
+        dy: &SparseRows,
+        out: &mut [f32],
+        out_stride: usize,
+        out_off: usize,
+        scratch: &mut Scratch,
+    ) {
+        let (ki, ko) = (self.sjlt_in.output_dim(), self.sjlt_out.output_dim());
+        let k = ki * ko;
+        assert_eq!(x.n(), n * t, "x row count mismatch");
+        assert_eq!(dy.n(), n * t, "dy row count mismatch");
+        assert_eq!(x.dim(), self.d_in, "x factor dimension mismatch");
+        assert_eq!(dy.dim(), self.d_out, "dy factor dimension mismatch");
+        assert_eq!(out.len(), n * out_stride);
+        assert!(out_off + k <= out_stride);
+        let nt = n * t;
+        let mut xp = scratch.take_f32(nt * ki);
+        let mut dp = scratch.take_f32(nt * ko);
+        self.sjlt_in.compress_sparse_batch_with(x, &mut xp, scratch);
+        self.sjlt_out.compress_sparse_batch_with(dy, &mut dp, scratch);
+        {
+            let (xp, dp) = (&xp[..], &dp[..]);
+            par::par_chunks_mut(out, out_stride, 1, |row_start, chunk| {
+                for (off, orow) in chunk.chunks_mut(out_stride).enumerate() {
+                    let i = row_start + off;
+                    matmul_at_b(
+                        &xp[i * t * ki..(i + 1) * t * ki],
+                        &dp[i * t * ko..(i + 1) * t * ko],
+                        &mut orow[out_off..out_off + k],
+                        t,
+                        ki,
+                        ko,
+                    );
+                }
+            });
+        }
+        scratch.put_f32(xp);
+        scratch.put_f32(dp);
+    }
+
+    /// Both factor SJLTs scan all `d` coordinates per timestep row on the
+    /// dense path, so CSR conversion wins below the crossover.
+    fn sparse_dispatch_viable(&self) -> bool {
+        true
     }
 
     fn name(&self) -> String {

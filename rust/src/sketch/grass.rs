@@ -9,7 +9,9 @@
 use super::mask::RandomMask;
 use super::selective::TrainedMask;
 use super::sjlt::Sjlt;
+use super::sparse::SparseRows;
 use super::{Compressor, MaskKind, Scratch};
+use crate::util::par;
 
 pub struct Grass {
     mask: RandomMask,
@@ -116,6 +118,60 @@ impl Compressor for Grass {
         scratch.put_f32(mid);
     }
 
+    /// CSR batch kernel, entirely in index space: per row, a two-pointer
+    /// merge intersects the input support with the sorted mask indices, and
+    /// every surviving non-zero scatters **directly** through the SJLT's
+    /// counter-based `(bucket, sign)` hash of its mask position — the
+    /// `k'`-dimensional sub-vector is never materialised, densely or
+    /// otherwise. `O(nnz + k')` merge + `O(s·nnz∩mask)` scatter per row,
+    /// independent of `p` (§3.3.1's sub-linear claim, end to end).
+    fn compress_sparse_batch_with(
+        &self,
+        rows: &SparseRows,
+        out: &mut [f32],
+        _scratch: &mut Scratch,
+    ) {
+        assert_eq!(rows.dim(), self.input_dim(), "sparse batch dimension mismatch");
+        let n = rows.n();
+        let k = self.output_dim();
+        assert_eq!(out.len(), n * k);
+        let mask_idx = self.mask.indices();
+        let kp = mask_idx.len();
+        let scale = self.mask.scale();
+        let s = self.sjlt.s();
+        let inv = 1.0 / (s as f32).sqrt();
+        par::par_chunks_mut(out, k, 1, |row_start, chunk| {
+            for (off, orow) in chunk.chunks_mut(k).enumerate() {
+                let (idx, vals) = rows.row(row_start + off);
+                orow.fill(0.0);
+                let mut mi = 0usize;
+                for (&j, &v) in idx.iter().zip(vals) {
+                    while mi < kp && mask_idx[mi] < j {
+                        mi += 1;
+                    }
+                    if mi == kp {
+                        break;
+                    }
+                    if mask_idx[mi] == j {
+                        let mv = v * scale;
+                        if mv != 0.0 {
+                            for r in 0..s {
+                                let (b, sgn) = self.sjlt.bucket_sign(mi, r);
+                                orow[b] += sgn * mv;
+                            }
+                        }
+                        mi += 1;
+                    }
+                }
+                if s > 1 {
+                    for o in orow.iter_mut() {
+                        *o *= inv;
+                    }
+                }
+            }
+        });
+    }
+
     fn name(&self) -> String {
         format!("GraSS[SJLT_{} ∘ M_{}]", self.output_dim(), self.k_prime)
     }
@@ -184,6 +240,36 @@ mod tests {
     #[should_panic(expected = "need k")]
     fn invalid_dims_panic() {
         Grass::new(100, 10, 20, MaskKind::Random, 0);
+    }
+
+    #[test]
+    fn csr_batch_matches_dense_batch() {
+        let (p, kp, k, n) = (2048, 512, 64, 6);
+        let gr = Grass::new(p, kp, k, MaskKind::Random, 13);
+        let mut rng = Pcg::new(21);
+        let gs: Vec<f32> = (0..n * p)
+            .map(|_| {
+                if rng.next_f32() < 0.96 {
+                    0.0
+                } else {
+                    rng.next_gaussian()
+                }
+            })
+            .collect();
+        let rows = SparseRows::from_dense_threshold(&gs, n, p, 0.0);
+        let mut scratch = Scratch::new();
+        let mut dense_out = vec![0.0f32; n * k];
+        gr.compress_batch_with(&gs, n, &mut dense_out, &mut scratch);
+        let mut sparse_out = vec![0.0f32; n * k];
+        gr.compress_sparse_batch_with(&rows, &mut sparse_out, &mut scratch);
+        for i in 0..n * k {
+            assert!(
+                (dense_out[i] - sparse_out[i]).abs() <= 1e-4 * (1.0 + dense_out[i].abs()),
+                "at {i}: {} vs {}",
+                sparse_out[i],
+                dense_out[i]
+            );
+        }
     }
 
     #[test]

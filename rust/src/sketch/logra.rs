@@ -14,9 +14,33 @@
 //! defaults them to Gaussian).
 
 use super::rng::Pcg;
+use super::sparse::SparseRows;
 use super::{FactorizedCompressor, Scratch};
 use crate::linalg::matmul::{matmul, matmul_abt, matmul_at_b};
 use crate::util::par;
+
+/// Project a CSR batch through a dense `kk × d` row-major factor matrix:
+/// `out[t, a] = Σ_{j ∈ nnz(t)} rows[t, j] · proj[a, j]` — `O(nnz · kk)` per
+/// timestep row instead of the dense GEMM's `O(d · kk)`, parallel over
+/// rows. Skipped zero terms contribute exactly `+0.0`, so the result
+/// matches the dense projection to fp-reassociation tolerance.
+fn project_sparse(proj: &[f32], d: usize, kk: usize, rows: &SparseRows, out: &mut [f32]) {
+    debug_assert_eq!(rows.dim(), d);
+    debug_assert_eq!(out.len(), rows.n() * kk);
+    par::par_chunks_mut(out, kk, 16, |t_start, chunk| {
+        for (off, yr) in chunk.chunks_mut(kk).enumerate() {
+            let (idx, vals) = rows.row(t_start + off);
+            for (a, yv) in yr.iter_mut().enumerate() {
+                let pr = &proj[a * d..(a + 1) * d];
+                let mut acc = 0.0f32;
+                for (&j, &v) in idx.iter().zip(vals) {
+                    acc += v * pr[j as usize];
+                }
+                *yv = acc;
+            }
+        }
+    });
+}
 
 #[derive(Debug, Clone)]
 pub struct LoGra {
@@ -168,6 +192,63 @@ impl FactorizedCompressor for LoGra {
         scratch.put_f32(z);
     }
 
+    /// CSR batch kernel: each factor side projects in `O(nnz · k)` per
+    /// timestep row (see `project_sparse`) instead of the dense GEMM's
+    /// `O(d · k)`; the small `k_in × k_out` per-sample reconstruction is
+    /// unchanged. At 1% activation density this is the difference between
+    /// `nnz·k` and `d·k` multiply-adds — the dense-baseline cost the paper
+    /// contrasts sparsity-native compression against.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_sparse_batch_with(
+        &self,
+        n: usize,
+        t: usize,
+        x: &SparseRows,
+        dy: &SparseRows,
+        out: &mut [f32],
+        out_stride: usize,
+        out_off: usize,
+        scratch: &mut Scratch,
+    ) {
+        let k = self.k_in * self.k_out;
+        assert_eq!(x.n(), n * t, "x row count mismatch");
+        assert_eq!(dy.n(), n * t, "dy row count mismatch");
+        assert_eq!(x.dim(), self.d_in, "x factor dimension mismatch");
+        assert_eq!(dy.dim(), self.d_out, "dy factor dimension mismatch");
+        assert_eq!(out.len(), n * out_stride);
+        assert!(out_off + k <= out_stride);
+        let nt = n * t;
+        let mut y = scratch.take_f32(nt * self.k_in);
+        let mut z = scratch.take_f32(nt * self.k_out);
+        project_sparse(&self.p_in, self.d_in, self.k_in, x, &mut y);
+        project_sparse(&self.p_out, self.d_out, self.k_out, dy, &mut z);
+        let (k_in, k_out) = (self.k_in, self.k_out);
+        {
+            let (y, z) = (&y[..], &z[..]);
+            par::par_chunks_mut(out, out_stride, 1, |row_start, chunk| {
+                for (off, orow) in chunk.chunks_mut(out_stride).enumerate() {
+                    let i = row_start + off;
+                    matmul_at_b(
+                        &y[i * t * k_in..(i + 1) * t * k_in],
+                        &z[i * t * k_out..(i + 1) * t * k_out],
+                        &mut orow[out_off..out_off + k],
+                        t,
+                        k_in,
+                        k_out,
+                    );
+                }
+            });
+        }
+        scratch.put_f32(y);
+        scratch.put_f32(z);
+    }
+
+    /// The dense factor projections are `O(d·k)` GEMMs per timestep row,
+    /// so CSR conversion wins below the crossover.
+    fn sparse_dispatch_viable(&self) -> bool {
+        true
+    }
+
     fn name(&self) -> String {
         format!("LoGra[GAUSS_{}⊗{}]", self.k_in, self.k_out)
     }
@@ -266,6 +347,42 @@ mod tests {
             .sqrt();
         let ratio = got / full;
         assert!((0.6..1.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn csr_batch_matches_dense_batch() {
+        let (d_in, d_out, k_in, k_out, n, t) = (64, 48, 8, 6, 3, 5);
+        let lg = LoGra::new(d_in, d_out, k_in, k_out, 17);
+        let mut rng = Pcg::new(6);
+        let sparse_fill = |len: usize, rng: &mut Pcg| -> Vec<f32> {
+            (0..len)
+                .map(|_| {
+                    if rng.next_f32() < 0.9 {
+                        0.0
+                    } else {
+                        rng.next_gaussian()
+                    }
+                })
+                .collect()
+        };
+        let x = sparse_fill(n * t * d_in, &mut rng);
+        let dy = sparse_fill(n * t * d_out, &mut rng);
+        let xs = SparseRows::from_dense_threshold(&x, n * t, d_in, 0.0);
+        let dys = SparseRows::from_dense_threshold(&dy, n * t, d_out, 0.0);
+        let k = lg.output_dim();
+        let mut scratch = Scratch::new();
+        let mut dense_out = vec![0.0f32; n * k];
+        lg.compress_batch_with(n, t, &x, &dy, &mut dense_out, k, 0, &mut scratch);
+        let mut sparse_out = vec![0.0f32; n * k];
+        lg.compress_sparse_batch_with(n, t, &xs, &dys, &mut sparse_out, k, 0, &mut scratch);
+        for i in 0..n * k {
+            assert!(
+                (dense_out[i] - sparse_out[i]).abs() <= 1e-4 * (1.0 + dense_out[i].abs()),
+                "at {i}: {} vs {}",
+                sparse_out[i],
+                dense_out[i]
+            );
+        }
     }
 
     #[test]

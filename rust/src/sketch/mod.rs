@@ -28,6 +28,9 @@ pub mod mask;
 pub mod rng;
 pub mod selective;
 pub mod sjlt;
+pub mod sparse;
+
+pub use sparse::{SparseRows, SPARSE_DISPATCH_MAX_DENSITY};
 
 use crate::models::shapes::ModelShapes;
 
@@ -47,7 +50,8 @@ use crate::models::shapes::ModelShapes;
 pub struct Scratch {
     /// Recycled f32 buffers (best-fit by capacity).
     f32_pool: Vec<Vec<f32>>,
-    /// Recycled SJLT (bucket, sign) chunk tables.
+    /// Recycled (u32, f32) tables — SJLT bucket/sign chunks, mask
+    /// (coordinate, scale) gather tables.
     table_pool: Vec<Vec<(u32, f32)>>,
 }
 
@@ -167,6 +171,42 @@ pub trait Compressor: Send + Sync {
         self.compress_into(&dense, out);
     }
 
+    /// Batch-first sparse entry point: compress a CSR batch of
+    /// [`SparseRows`] (`rows.n() × p` → `rows.n() × k`) without ever
+    /// touching zero coordinates. The default densifies into the workspace
+    /// and falls back to [`Compressor::compress_batch_with`]; the
+    /// sparsity-native compressors (SJLT, masks, GraSS) override it with
+    /// nnz-proportional kernels — the `O(s·nnz(g))` complexity of §3.1.
+    fn compress_sparse_batch_with(
+        &self,
+        rows: &SparseRows,
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let (p, k, n) = (self.input_dim(), self.output_dim(), rows.n());
+        assert_eq!(rows.dim(), p, "sparse batch dimension mismatch");
+        assert_eq!(out.len(), n * k);
+        let mut dense = scratch.take_f32(n * p);
+        rows.densify_into(&mut dense);
+        self.compress_batch_with(&dense, n, out, scratch);
+        scratch.put_f32(dense);
+    }
+
+    /// Whether the pipeline's auto-dispatcher should consider converting a
+    /// **dense** batch to CSR for this compressor at all. Only `true` when
+    /// the dense batch kernel's per-row cost scales with the input width
+    /// `p`, so skipping zeros can win (SJLT's `O(p)` scan). Compressors
+    /// whose dense batch path is already sub-linear in `p` — the `O(k)`
+    /// mask gathers, GraSS's `O(k')` masked pipeline — and compressors
+    /// without a native CSR kernel (Gauss, FJLT) keep the default `false`:
+    /// for them the `O(n·p)` probe + conversion costs more than the dense
+    /// kernel, so the pipeline skips the probe entirely. Natively sparse
+    /// sources that already hold CSR rows bypass this and call
+    /// [`Compressor::compress_sparse_batch_with`] directly.
+    fn sparse_dispatch_viable(&self) -> bool {
+        false
+    }
+
     /// Human-readable method name used in experiment reports.
     fn name(&self) -> String;
 }
@@ -233,6 +273,48 @@ pub trait FactorizedCompressor: Send + Sync {
         }
     }
 
+    /// Batch-first sparse entry point: both factor sides arrive as CSR
+    /// batches over the `n·t` timestep rows (`x`: width `d_in`, `dy`:
+    /// width `d_out`). Output layout matches
+    /// [`FactorizedCompressor::compress_batch_with`]. The default densifies
+    /// both sides into the workspace and falls back to the dense batch
+    /// kernel; the factorized family overrides it to sparsify / project
+    /// each factor side in `O(nnz)` per timestep row.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_sparse_batch_with(
+        &self,
+        n: usize,
+        t: usize,
+        x: &SparseRows,
+        dy: &SparseRows,
+        out: &mut [f32],
+        out_stride: usize,
+        out_off: usize,
+        scratch: &mut Scratch,
+    ) {
+        let (d_in, d_out) = (self.d_in(), self.d_out());
+        assert_eq!(x.n(), n * t, "x row count mismatch");
+        assert_eq!(dy.n(), n * t, "dy row count mismatch");
+        assert_eq!(x.dim(), d_in, "x factor dimension mismatch");
+        assert_eq!(dy.dim(), d_out, "dy factor dimension mismatch");
+        let mut xd = scratch.take_f32(n * t * d_in);
+        let mut dyd = scratch.take_f32(n * t * d_out);
+        x.densify_into(&mut xd);
+        dy.densify_into(&mut dyd);
+        self.compress_batch_with(n, t, &xd, &dyd, out, out_stride, out_off, scratch);
+        scratch.put_f32(xd);
+        scratch.put_f32(dyd);
+    }
+
+    /// See [`Compressor::sparse_dispatch_viable`]: `true` only when the
+    /// dense batch kernel's per-row cost scales with the factor widths
+    /// (LoGra's `O(d·k)` GEMMs, FactSjlt's `O(d·s)` scatters). The masked
+    /// family (FactGraSS, FactMask) gathers `O(k')` per row regardless of
+    /// `d`, so converting a dense batch can never pay for itself there.
+    fn sparse_dispatch_viable(&self) -> bool {
+        false
+    }
+
     fn name(&self) -> String;
 }
 
@@ -297,6 +379,18 @@ impl CompressorBank {
         match self {
             CompressorBank::Flat(c) => vec![c.output_dim()],
             CompressorBank::Factored(cs) => cs.iter().map(|c| c.output_dim()).collect(),
+        }
+    }
+
+    /// Whether the pipeline should density-probe dense gradient batches
+    /// for this bank (see [`Compressor::sparse_dispatch_viable`]). A
+    /// factorized bank probes only if **every** layer's CSR kernel can
+    /// win — batches convert whole, so one gather-bound layer makes the
+    /// conversion a net loss.
+    pub fn sparse_dispatch_viable(&self) -> bool {
+        match self {
+            CompressorBank::Flat(c) => c.sparse_dispatch_viable(),
+            CompressorBank::Factored(cs) => cs.iter().all(|c| c.sparse_dispatch_viable()),
         }
     }
 }
@@ -883,6 +977,82 @@ mod tests {
         let t = s.take_table(16);
         assert_eq!(t.len(), 16);
         s.put_table(t);
+    }
+
+    #[test]
+    fn sparse_dispatch_viability_per_kernel() {
+        // Only kernels whose dense batch cost scales with the input width
+        // opt in to dense→CSR conversion; gather-bound kernels and the
+        // densify-and-fallback baselines stay dense.
+        let p = 128;
+        assert!(MethodSpec::Sjlt { k: 8, s: 1 }.build(p, 1).sparse_dispatch_viable());
+        assert!(!MethodSpec::RandomMask { k: 8 }.build(p, 1).sparse_dispatch_viable());
+        assert!(!MethodSpec::Gauss { k: 8 }.build(p, 1).sparse_dispatch_viable());
+        assert!(!MethodSpec::Fjlt { k: 8 }.build(p, 1).sparse_dispatch_viable());
+        let grass = MethodSpec::Grass {
+            k: 8,
+            k_prime: 32,
+            mask: MaskKind::Random,
+        };
+        assert!(!grass.build(p, 1).sparse_dispatch_viable());
+        // Banks: flat delegates; factorized is the AND over layers.
+        let shapes = ModelShapes::factored(vec![(32, 16), (16, 32)]);
+        let viable = |spec: MethodSpec| {
+            spec.build_bank(&shapes, 1).unwrap().sparse_dispatch_viable()
+        };
+        assert!(viable(MethodSpec::LoGra { k_in: 4, k_out: 4 }));
+        assert!(viable(MethodSpec::FactSjlt { k_in: 4, k_out: 4 }));
+        assert!(!viable(MethodSpec::FactGrass {
+            k: 8,
+            k_in: 4,
+            k_out: 4,
+            mask: MaskKind::Random,
+        }));
+        assert!(!viable(MethodSpec::FactMask {
+            k_in: 4,
+            k_out: 4,
+            mask: MaskKind::Random,
+        }));
+        assert!(MethodSpec::Sjlt { k: 8, s: 1 }
+            .build_bank(&ModelShapes::flat(p), 1)
+            .unwrap()
+            .sparse_dispatch_viable());
+    }
+
+    #[test]
+    fn default_sparse_batch_densifies_and_matches() {
+        // Compressors without a tuned CSR kernel (Gauss, FJLT) take the
+        // densify-and-fallback default; it must equal the dense batch path.
+        let (p, n) = (600, 4);
+        let mut rng = rng::Pcg::new(23);
+        let gs: Vec<f32> = (0..n * p)
+            .map(|_| {
+                if rng.next_f32() < 0.9 {
+                    0.0
+                } else {
+                    rng.next_gaussian()
+                }
+            })
+            .collect();
+        let rows = SparseRows::from_dense_threshold(&gs, n, p, 0.0);
+        let mut scratch = Scratch::new();
+        for spec in [MethodSpec::Gauss { k: 40 }, MethodSpec::Fjlt { k: 64 }] {
+            let c = spec.build(p, 5);
+            let k = c.output_dim();
+            let mut dense_out = vec![0.0f32; n * k];
+            c.compress_batch_with(&gs, n, &mut dense_out, &mut scratch);
+            let mut sparse_out = vec![0.0f32; n * k];
+            c.compress_sparse_batch_with(&rows, &mut sparse_out, &mut scratch);
+            for i in 0..n * k {
+                assert!(
+                    (dense_out[i] - sparse_out[i]).abs() <= 1e-4 * (1.0 + dense_out[i].abs()),
+                    "{} at {i}: {} vs {}",
+                    c.name(),
+                    sparse_out[i],
+                    dense_out[i]
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,340 @@
+//! CSR batches of per-sample gradients — the sparsity-native fast path.
+//!
+//! The paper's headline complexity (`O(s·nnz(g))` for SJLT, §3.1) only
+//! materialises if the kernels never *touch* the zero coordinates. A
+//! [`SparseRows`] batch stores `n` gradient rows in compressed sparse row
+//! form — one shared `indices`/`values` arena plus `n + 1` row offsets —
+//! so a 99%-sparse batch occupies (and streams) 1% of the dense bytes and
+//! every sparse kernel walks exactly `nnz` entries per row.
+//!
+//! Rows keep their indices **sorted strictly increasing**, which the tuned
+//! kernels rely on: [`super::mask::RandomMask`] merges two sorted index
+//! lists in `O(nnz + k)`, and [`super::grass::Grass`] intersects the input
+//! support with the mask support entirely in index space.
+//!
+//! For banks whose dense kernels cost `O(p)`-per-row or worse (see
+//! [`super::Compressor::sparse_dispatch_viable`]), the pipeline's grad
+//! workers density-[`probe`] each batch and convert it to CSR only below
+//! [`SPARSE_DISPATCH_MAX_DENSITY`] (see [`should_dispatch_sparse`]), so
+//! the compress workers run the sparse kernels on it — above the
+//! crossover, the dense batch kernels win because they amortise projector
+//! setup (e.g. SJLT's chunked bucket/sign tables) across rows, which
+//! per-row sparse supports cannot.
+
+/// Density at (or below) which the auto-dispatcher routes a gradient batch
+/// through the CSR kernels — for compressors that opt in via
+/// [`super::Compressor::sparse_dispatch_viable`].
+///
+/// Calibration, for the opted-in kernels (those whose dense batch cost
+/// scales with the input width): SJLT's dense batch kernel costs one
+/// table build of `p·s` hashes per batch plus one load+branch per element
+/// per row, while the CSR kernel costs ~2 splitmix rounds per stored
+/// non-zero. A hash is ≈3× a predicted load+branch, and the CSR
+/// conversion itself scans the batch once, so the sparse path wins once
+/// fewer than ~1 in 8 elements are non-zero and loses (by the same
+/// argument, run backwards) above it. The LoGra/FactSjlt dense kernels
+/// break even far higher (`nnz·k` vs `d·k` multiply-adds per row), so one
+/// conservative constant serves every *viable* kernel. Compressors whose
+/// dense path is already sub-linear in `p` (mask gathers, GraSS) never
+/// opt in: no density makes conversion pay there, and the pipeline skips
+/// the probe for them entirely.
+pub const SPARSE_DISPATCH_MAX_DENSITY: f64 = 0.125;
+
+/// Whether a batch with `nnz` non-zeros out of `elems` total elements
+/// should take the sparse kernels — the pipeline's dispatch predicate,
+/// split out so the crossover is unit-testable without a runtime.
+#[inline]
+pub fn should_dispatch_sparse(nnz: usize, elems: usize) -> bool {
+    elems > 0 && (nnz as f64) <= SPARSE_DISPATCH_MAX_DENSITY * elems as f64
+}
+
+/// Count the non-zero entries of a dense buffer.
+#[inline]
+pub fn count_nnz(xs: &[f32]) -> usize {
+    xs.iter().filter(|&&v| v != 0.0).count()
+}
+
+/// Early-exit density probe: decide [`should_dispatch_sparse`] for a
+/// dense buffer while scanning as little of it as possible. Returns
+/// `(go_sparse, nnz_seen, elems_scanned)` — the scan stops the moment the
+/// running non-zero count exceeds the dispatch budget, so a fully dense
+/// batch pays ~`SPARSE_DISPATCH_MAX_DENSITY` of a full pass rather than
+/// all of it (a sparse verdict scans everything, but that batch is about
+/// to be converted anyway). `go_sparse` always equals
+/// `should_dispatch_sparse(count_nnz(xs), xs.len())`; the seen/scanned
+/// counts feed the pipeline's input-density gauge.
+pub fn probe(xs: &[f32]) -> (bool, usize, usize) {
+    let budget = (SPARSE_DISPATCH_MAX_DENSITY * xs.len() as f64) as usize;
+    let mut nnz = 0usize;
+    for (i, &v) in xs.iter().enumerate() {
+        if v != 0.0 {
+            nnz += 1;
+            if nnz > budget {
+                return (false, nnz, i + 1);
+            }
+        }
+    }
+    (!xs.is_empty(), nnz, xs.len())
+}
+
+/// A batch of `n` sparse rows over a `dim`-dimensional space, CSR layout.
+///
+/// Row `i` owns `indices[row_offsets[i]..row_offsets[i+1]]` (sorted
+/// strictly increasing, each `< dim`) and the matching `values` slice.
+/// Rows may be ragged (any per-row nnz, including empty rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseRows {
+    dim: usize,
+    /// `n + 1` offsets into `indices`/`values`; `row_offsets[0] == 0`.
+    row_offsets: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl SparseRows {
+    /// An empty batch (zero rows) over a `dim`-dimensional space.
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0, "need a positive row dimension");
+        Self {
+            dim,
+            row_offsets: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Convert `n` dense rows (`n × dim`, row-major), keeping entries with
+    /// `|v| > threshold`. `threshold = 0.0` keeps exactly the non-zeros.
+    /// NaN entries are always kept: dropping them would let the sparse
+    /// path cache clean-looking rows where the dense kernels would
+    /// propagate (and surface) the corruption.
+    pub fn from_dense_threshold(gs: &[f32], n: usize, dim: usize, threshold: f32) -> Self {
+        assert_eq!(gs.len(), n * dim, "dense batch shape mismatch");
+        let mut out = Self::new(dim);
+        for row in gs.chunks(dim) {
+            for (j, &v) in row.iter().enumerate() {
+                if v.abs() > threshold || v.is_nan() {
+                    out.indices.push(j as u32);
+                    out.values.push(v);
+                }
+            }
+            out.row_offsets.push(out.indices.len());
+        }
+        out
+    }
+
+    /// Append one row. `idx` must be sorted strictly increasing with every
+    /// entry `< dim`; `idx` and `vals` must have equal length.
+    pub fn push_row(&mut self, idx: &[u32], vals: &[f32]) {
+        assert_eq!(idx.len(), vals.len(), "row index/value length mismatch");
+        // Hard assert: the merge kernels (RandomMask, GraSS) rely on
+        // sortedness for correctness and would silently drop entries of an
+        // unsorted row — the O(nnz) check costs no more than the push.
+        assert!(
+            idx.windows(2).all(|w| w[0] < w[1]),
+            "row indices must be sorted strictly increasing"
+        );
+        if let Some(&last) = idx.last() {
+            assert!((last as usize) < self.dim, "row index out of range");
+        }
+        self.indices.extend_from_slice(idx);
+        self.values.extend_from_slice(vals);
+        self.row_offsets.push(self.indices.len());
+    }
+
+    /// Row dimension (the dense width each row sparsifies).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of rows.
+    pub fn n(&self) -> usize {
+        self.row_offsets.len() - 1
+    }
+
+    /// Total stored non-zeros across all rows.
+    pub fn nnz_total(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Stored non-zeros in row `i`.
+    pub fn nnz(&self, i: usize) -> usize {
+        self.row_offsets[i + 1] - self.row_offsets[i]
+    }
+
+    /// Row `i` as `(sorted indices, values)`.
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.row_offsets[i], self.row_offsets[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Fraction of stored entries over the dense `n × dim` size (0 for an
+    /// empty batch).
+    pub fn density(&self) -> f64 {
+        let elems = self.n() * self.dim;
+        if elems == 0 {
+            0.0
+        } else {
+            self.nnz_total() as f64 / elems as f64
+        }
+    }
+
+    /// Mean stored non-zeros per row (0 for an empty batch).
+    pub fn mean_nnz(&self) -> f64 {
+        if self.n() == 0 {
+            0.0
+        } else {
+            self.nnz_total() as f64 / self.n() as f64
+        }
+    }
+
+    /// Scatter into a dense `n × dim` buffer (fully overwritten).
+    pub fn densify_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n() * self.dim, "dense output shape mismatch");
+        out.fill(0.0);
+        for (i, orow) in out.chunks_mut(self.dim).enumerate() {
+            let (idx, vals) = self.row(i);
+            for (&j, &v) in idx.iter().zip(vals) {
+                orow[j as usize] = v;
+            }
+        }
+    }
+
+    /// Allocating form of [`SparseRows::densify_into`].
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n() * self.dim];
+        self.densify_into(&mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip_exact() {
+        let dense = vec![0.0, 1.5, 0.0, -2.0, 0.0, 0.0, 3.0, 0.0];
+        let sp = SparseRows::from_dense_threshold(&dense, 2, 4, 0.0);
+        assert_eq!(sp.n(), 2);
+        assert_eq!(sp.dim(), 4);
+        assert_eq!(sp.nnz_total(), 3);
+        assert_eq!(sp.nnz(0), 2);
+        assert_eq!(sp.nnz(1), 1);
+        assert_eq!(sp.row(0), (&[1u32, 3][..], &[1.5f32, -2.0][..]));
+        assert_eq!(sp.to_dense(), dense);
+    }
+
+    #[test]
+    fn threshold_drops_small_entries() {
+        let dense = vec![0.05, 1.0, -0.05, 2.0];
+        let sp = SparseRows::from_dense_threshold(&dense, 1, 4, 0.1);
+        assert_eq!(sp.row(0), (&[1u32, 3][..], &[1.0f32, 2.0][..]));
+        assert_eq!(sp.density(), 0.5);
+        assert_eq!(sp.mean_nnz(), 2.0);
+    }
+
+    #[test]
+    fn nan_entries_survive_conversion() {
+        // A diverged gradient's NaNs must flow through the CSR path just
+        // as the dense kernels would propagate them.
+        let dense = vec![0.0, f32::NAN, 0.0, 1.0];
+        let sp = SparseRows::from_dense_threshold(&dense, 1, 4, 0.0);
+        assert_eq!(sp.nnz(0), 2);
+        let (idx, vals) = sp.row(0);
+        assert_eq!(idx, &[1u32, 3]);
+        assert!(vals[0].is_nan());
+        assert_eq!(vals[1], 1.0);
+    }
+
+    #[test]
+    fn push_row_and_empty_rows() {
+        let mut sp = SparseRows::new(10);
+        sp.push_row(&[2, 7], &[1.0, 2.0]);
+        sp.push_row(&[], &[]);
+        sp.push_row(&[9], &[-3.0]);
+        assert_eq!(sp.n(), 3);
+        assert_eq!(sp.nnz(1), 0);
+        let dense = sp.to_dense();
+        assert_eq!(dense.len(), 30);
+        assert_eq!(dense[2], 1.0);
+        assert_eq!(dense[10..20], [0.0; 10]);
+        assert_eq!(dense[29], -3.0);
+    }
+
+    #[test]
+    fn empty_batch_density_zero() {
+        let sp = SparseRows::new(8);
+        assert_eq!(sp.n(), 0);
+        assert_eq!(sp.density(), 0.0);
+        assert_eq!(sp.mean_nnz(), 0.0);
+        assert!(sp.to_dense().is_empty());
+    }
+
+    #[test]
+    fn dispatch_crossover() {
+        // exactly at the threshold dispatches sparse; one non-zero above
+        // it dispatches dense.
+        let elems = 8000;
+        let at = (SPARSE_DISPATCH_MAX_DENSITY * elems as f64) as usize;
+        assert!(should_dispatch_sparse(at, elems));
+        assert!(!should_dispatch_sparse(at + 1, elems));
+        assert!(!should_dispatch_sparse(0, 0), "empty batch stays dense");
+        let mut dense = vec![0.0f32; 100];
+        dense[3] = 1.0;
+        dense[77] = -1.0;
+        assert_eq!(count_nnz(&dense), 2);
+        assert!(should_dispatch_sparse(count_nnz(&dense), dense.len()));
+    }
+
+    #[test]
+    fn probe_matches_full_predicate_and_exits_early() {
+        // Property: probe's verdict equals the full-scan predicate, at
+        // every density around the crossover (incl. exactly at it).
+        let n = 4096;
+        for planted in [0usize, 1, 500, 512, 513, 1000, n] {
+            let mut xs = vec![0.0f32; n];
+            for v in xs.iter_mut().take(planted) {
+                *v = 1.0;
+            }
+            let (go, nnz_seen, scanned) = probe(&xs);
+            assert_eq!(
+                go,
+                should_dispatch_sparse(count_nnz(&xs), xs.len()),
+                "planted {planted}"
+            );
+            assert!(scanned <= n);
+            assert!(nnz_seen <= planted);
+            if go {
+                assert_eq!((nnz_seen, scanned), (planted, n), "sparse verdict scans fully");
+            }
+        }
+        // Dense verdict exits early: non-zeros up front stop the scan at
+        // budget + 1 elements.
+        let mut xs = vec![1.0f32; n];
+        xs[0] = 1.0;
+        let budget = (SPARSE_DISPATCH_MAX_DENSITY * n as f64) as usize;
+        let (go, nnz_seen, scanned) = probe(&xs);
+        assert!(!go);
+        assert_eq!(nnz_seen, budget + 1);
+        assert_eq!(scanned, budget + 1);
+        // Empty buffer: dense (nothing to win).
+        assert_eq!(probe(&[]), (false, 0, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn push_row_rejects_out_of_range() {
+        let mut sp = SparseRows::new(4);
+        sp.push_row(&[4], &[1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted strictly increasing")]
+    fn push_row_rejects_unsorted() {
+        // The merge kernels would silently drop entries of an unsorted
+        // row, so the invariant is a hard assert even in release builds.
+        let mut sp = SparseRows::new(10);
+        sp.push_row(&[7, 2], &[1.0, 2.0]);
+    }
+}

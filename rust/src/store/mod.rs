@@ -45,6 +45,10 @@ pub struct StoreMeta {
     pub input_dim: usize,
     /// Hooked-layer `(d_in, d_out)` pairs (empty when flat or unknown).
     pub layer_dims: Vec<(usize, usize)>,
+    /// Gradient-source density knob the cache ran with (synthetic sparse
+    /// caches record their `--density` here so attribute-time queries
+    /// regenerate from the same sparse substrate; 1.0 = dense).
+    pub density: f64,
 }
 
 impl StoreMeta {
@@ -69,6 +73,7 @@ impl StoreMeta {
             } else {
                 vec![]
             },
+            density: 1.0,
         })
     }
 
@@ -140,6 +145,7 @@ impl StoreMeta {
             ("model", Json::Str(self.model.clone())),
             ("input_dim", Json::Num(self.input_dim as f64)),
             ("layer_dims", Json::Arr(layers)),
+            ("density", Json::Num(self.density)),
         ])
     }
 
@@ -172,6 +178,8 @@ impl StoreMeta {
                 .to_string(),
             input_dim: j.get("input_dim").and_then(|v| v.as_usize()).unwrap_or(0),
             layer_dims,
+            // Pre-sparsity stores carry no density field: treat as dense.
+            density: j.get("density").and_then(|v| v.as_f64()).unwrap_or(1.0),
         })
     }
 }
@@ -211,6 +219,7 @@ impl StoreWriter {
                 model: String::new(),
                 input_dim: 0,
                 layer_dims: vec![],
+                density: 1.0,
             },
         )
     }
@@ -767,6 +776,38 @@ mod tests {
         assert_eq!(all[0], 0.0);
         assert_eq!(all[36], 9.0);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn meta_density_roundtrips_and_defaults_dense() {
+        let dir = tmpdir("density");
+        let mut w = StoreWriter::create_described(
+            &dir,
+            StoreMeta {
+                k: 2,
+                n: 0,
+                shard_rows: 4,
+                method: "rm:k=2".into(),
+                seed: 1,
+                model: "synth".into(),
+                input_dim: 8,
+                layer_dims: vec![],
+                density: 0.01,
+            },
+        )
+        .unwrap();
+        w.push(&[1.0, 2.0]).unwrap();
+        w.finish().unwrap();
+        let r = StoreReader::open(&dir).unwrap();
+        assert!((r.meta.density - 0.01).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).unwrap();
+        // A pre-sparsity store.json without the field reads as dense.
+        let legacy = Json::parse(
+            r#"{"k":1,"n":0,"shard_rows":4,"method":"rm:k=1","seed":0}"#,
+        )
+        .unwrap();
+        let m = StoreMeta::from_json(&legacy).unwrap();
+        assert_eq!(m.density, 1.0);
     }
 
     #[test]

@@ -101,6 +101,12 @@ pub struct BenchRecord {
     pub samples_per_sec: f64,
     /// Cost per input element in nanoseconds.
     pub ns_per_elem: f64,
+    /// Input density (stored non-zeros / total elements) of the measured
+    /// workload, when known — lets BENCH_*.json show nnz-proportional
+    /// scaling across PRs.
+    pub density: Option<f64>,
+    /// Mean stored non-zeros per input row, when known.
+    pub mean_nnz: Option<f64>,
     /// Free-form extra metrics (e.g. `speedup_vs_per_sample`, `tokens_per_sec`).
     pub extra: Vec<(String, f64)>,
 }
@@ -117,6 +123,8 @@ impl BenchRecord {
             k,
             samples_per_sec: n as f64 / secs,
             ns_per_elem: secs * 1e9 / (n as f64 * p as f64).max(1.0),
+            density: None,
+            mean_nnz: None,
             extra: vec![],
         }
     }
@@ -124,6 +132,14 @@ impl BenchRecord {
     /// Attach an extra named metric (builder style).
     pub fn with(mut self, key: &str, value: f64) -> Self {
         self.extra.push((key.to_string(), value));
+        self
+    }
+
+    /// Record the measured workload's input density and mean non-zeros per
+    /// row (builder style) so the JSON shows nnz-proportional scaling.
+    pub fn with_density(mut self, density: f64, mean_nnz: f64) -> Self {
+        self.density = Some(density);
+        self.mean_nnz = Some(mean_nnz);
         self
     }
 
@@ -136,6 +152,12 @@ impl BenchRecord {
             ("samples_per_sec", Json::Num(self.samples_per_sec)),
             ("ns_per_elem", Json::Num(self.ns_per_elem)),
         ];
+        if let Some(d) = self.density {
+            pairs.push(("density", Json::Num(d)));
+        }
+        if let Some(m) = self.mean_nnz {
+            pairs.push(("mean_nnz", Json::Num(m)));
+        }
         for (key, value) in &self.extra {
             pairs.push((key.as_str(), Json::Num(*value)));
         }
@@ -217,6 +239,13 @@ mod tests {
         assert_eq!(j.req("method").unwrap().as_str(), Some("sjlt:k=64"));
         assert_eq!(j.req("k").unwrap().as_usize(), Some(64));
         assert!(j.req("speedup_vs_per_sample").unwrap().as_f64().is_some());
+        // density/mean_nnz are omitted until recorded, then serialized.
+        assert!(j.get("density").is_none());
+        let r = BenchRecord::from_duration("sjlt:k=64", 10, 1000, 64, Duration::from_millis(10))
+            .with_density(0.01, 10.0);
+        let j = r.to_json();
+        assert_eq!(j.req("density").unwrap().as_f64(), Some(0.01));
+        assert_eq!(j.req("mean_nnz").unwrap().as_f64(), Some(10.0));
     }
 
     #[test]

@@ -1,12 +1,16 @@
 //! Property tests: every compressor implementing the batch API must produce
 //! the same output as the per-sample path within 1e-4 relative tolerance —
 //! across s > 1, sparse inputs, non-divisible batch sizes, inputs above the
-//! parallel threshold, and strided factorized output bands.
+//! parallel threshold, and strided factorized output bands. The CSR
+//! (sparse) kernels are held to the same bound against the dense batch
+//! kernels across densities {0.001, 0.01, 0.1, 1.0}, ragged rows, empty
+//! rows, and the dispatch crossover.
 
 use grass::sketch::factgrass::{FactGrass, FactMask, FactSjlt};
 use grass::sketch::logra::LoGra;
 use grass::sketch::rng::Pcg;
-use grass::sketch::{Compressor, FactorizedCompressor, MaskKind, MethodSpec, Scratch};
+use grass::sketch::sparse::{should_dispatch_sparse, SPARSE_DISPATCH_MAX_DENSITY};
+use grass::sketch::{Compressor, FactorizedCompressor, MaskKind, MethodSpec, Scratch, SparseRows};
 
 const TOL: f32 = 1e-4;
 
@@ -155,6 +159,196 @@ fn factorized_batch_matches_single_all_methods() {
             );
             check_factorized(&FactMask::new(d_in, d_out, 8, 6, 5), n, t, 43);
             check_factorized(&FactSjlt::new(d_in, d_out, 8, 6, 5), n, t, 44);
+        }
+    }
+}
+
+/// Ragged batch at a target density: row 0 is empty, later rows ramp from
+/// ~0.2× to ~2× the target, so per-row nnz varies wildly within one batch.
+fn make_ragged(n: usize, p: usize, density: f64, seed: u64) -> (Vec<f32>, SparseRows) {
+    let mut rng = Pcg::new(seed);
+    let mut dense = vec![0.0f32; n * p];
+    for i in 1..n {
+        let row_density = density * (0.2 + 1.8 * (i - 1) as f64 / n.max(2) as f64);
+        for v in dense[i * p..(i + 1) * p].iter_mut() {
+            if rng.next_f64() < row_density {
+                *v = rng.next_gaussian();
+            }
+        }
+    }
+    let sp = SparseRows::from_dense_threshold(&dense, n, p, 0.0);
+    assert_eq!(sp.to_dense(), dense, "CSR roundtrip must be exact");
+    assert_eq!(sp.nnz(0), 0, "row 0 stays empty");
+    (dense, sp)
+}
+
+/// Shared harness: the CSR kernel must match the dense batch kernel.
+fn check_flat_sparse(c: &dyn Compressor, dense: &[f32], sp: &SparseRows, scratch: &mut Scratch) {
+    let (n, k) = (sp.n(), c.output_dim());
+    let mut dense_out = vec![0.0f32; n * k];
+    c.compress_batch_with(dense, n, &mut dense_out, scratch);
+    let mut sparse_out = vec![0.0f32; n * k];
+    c.compress_sparse_batch_with(sp, &mut sparse_out, scratch);
+    for i in 0..n {
+        for j in 0..k {
+            assert!(
+                close(sparse_out[i * k + j], dense_out[i * k + j]),
+                "{} density={:.4} row {i} col {j}: sparse {} vs dense {}",
+                c.name(),
+                sp.density(),
+                sparse_out[i * k + j],
+                dense_out[i * k + j]
+            );
+        }
+    }
+}
+
+#[test]
+fn flat_sparse_matches_dense_all_methods_all_densities() {
+    let p = 2053; // prime: never divides the SJLT chunk or the mask width
+    let specs = [
+        MethodSpec::RandomMask { k: 120 },
+        MethodSpec::SelectiveMask { k: 64 },
+        MethodSpec::Sjlt { k: 120, s: 1 },
+        MethodSpec::Sjlt { k: 120, s: 3 },
+        MethodSpec::Gauss { k: 48 },
+        MethodSpec::Fjlt { k: 120 },
+        MethodSpec::Grass {
+            k: 64,
+            k_prime: 300,
+            mask: MaskKind::Random,
+        },
+        MethodSpec::Grass {
+            k: 48,
+            k_prime: 256,
+            mask: MaskKind::Selective,
+        },
+    ];
+    let mut scratch = Scratch::new();
+    for (di, &density) in [0.001f64, 0.01, 0.1, 1.0].iter().enumerate() {
+        let n = 9;
+        let (dense, sp) = make_ragged(n, p, density, 0x5A17 + di as u64);
+        for spec in &specs {
+            let c = spec.build(p, 907);
+            check_flat_sparse(c.as_ref(), &dense, &sp, &mut scratch);
+        }
+    }
+}
+
+#[test]
+fn flat_sparse_matches_dense_at_dispatch_crossover() {
+    // The pipeline flips representation exactly at the crossover: both
+    // sides of the flip must agree, and the predicate must flip with them.
+    let p = 1600;
+    let n = 5;
+    let mut scratch = Scratch::new();
+    for &factor in &[0.5f64, 1.0, 1.5] {
+        let density = SPARSE_DISPATCH_MAX_DENSITY * factor;
+        let (dense, sp) = make_ragged(n, p, density, 77 + (factor * 10.0) as u64);
+        for spec in &[
+            MethodSpec::Sjlt { k: 96, s: 1 },
+            MethodSpec::RandomMask { k: 96 },
+            MethodSpec::Grass {
+                k: 48,
+                k_prime: 256,
+                mask: MaskKind::Random,
+            },
+        ] {
+            let c = spec.build(p, 13);
+            check_flat_sparse(c.as_ref(), &dense, &sp, &mut scratch);
+        }
+    }
+    // Predicate semantics at the exact boundary.
+    let elems = 4096;
+    let at = (SPARSE_DISPATCH_MAX_DENSITY * elems as f64) as usize;
+    assert!(should_dispatch_sparse(at, elems));
+    assert!(!should_dispatch_sparse(at + 1, elems));
+}
+
+#[test]
+fn flat_sparse_all_empty_rows_give_zeros() {
+    let p = 512;
+    let n = 4;
+    let mut sp = SparseRows::new(p);
+    for _ in 0..n {
+        sp.push_row(&[], &[]);
+    }
+    let mut scratch = Scratch::new();
+    for spec in &[
+        MethodSpec::Sjlt { k: 64, s: 2 },
+        MethodSpec::RandomMask { k: 64 },
+        MethodSpec::Grass {
+            k: 32,
+            k_prime: 128,
+            mask: MaskKind::Random,
+        },
+    ] {
+        let c = spec.build(p, 3);
+        let mut out = vec![1.0f32; n * c.output_dim()];
+        c.compress_sparse_batch_with(&sp, &mut out, &mut scratch);
+        assert!(
+            out.iter().all(|&v| v == 0.0),
+            "{}: empty rows must compress to zeros",
+            c.name()
+        );
+    }
+}
+
+/// Shared harness for the factorized CSR kernels: must match the dense
+/// batch kernel inside a strided band and leave the rest untouched.
+fn check_factorized_sparse(
+    c: &dyn FactorizedCompressor,
+    n: usize,
+    t: usize,
+    density: f64,
+    seed: u64,
+) {
+    let (d_in, d_out, k) = (c.d_in(), c.d_out(), c.output_dim());
+    let (x, xs) = make_ragged(n * t, d_in, density, seed);
+    let (dy, dys) = make_ragged(n * t, d_out, density, seed ^ 0xFF);
+    let stride = k + 5;
+    let off = 2;
+    let sentinel = -4321.5f32;
+    let mut scratch = Scratch::new();
+    let mut dense_out = vec![sentinel; n * stride];
+    c.compress_batch_with(n, t, &x, &dy, &mut dense_out, stride, off, &mut scratch);
+    let mut sparse_out = vec![sentinel; n * stride];
+    c.compress_sparse_batch_with(n, t, &xs, &dys, &mut sparse_out, stride, off, &mut scratch);
+    for i in 0..n {
+        for j in 0..k {
+            assert!(
+                close(sparse_out[i * stride + off + j], dense_out[i * stride + off + j]),
+                "{} density={density} sample {i} col {j}: sparse {} vs dense {}",
+                c.name(),
+                sparse_out[i * stride + off + j],
+                dense_out[i * stride + off + j]
+            );
+        }
+        for j in 0..off {
+            assert_eq!(sparse_out[i * stride + j], sentinel, "{} clobbered pre-band", c.name());
+        }
+        for j in off + k..stride {
+            assert_eq!(sparse_out[i * stride + j], sentinel, "{} clobbered post-band", c.name());
+        }
+    }
+}
+
+#[test]
+fn factorized_sparse_matches_dense_all_methods_all_densities() {
+    let (d_in, d_out) = (96, 72);
+    for (di, &density) in [0.01f64, 0.1, 1.0].iter().enumerate() {
+        let seed = 0xFA * (di as u64 + 1);
+        for &(n, t) in &[(1usize, 4usize), (4, 3)] {
+            check_factorized_sparse(&LoGra::new(d_in, d_out, 6, 4, 5), n, t, density, seed);
+            check_factorized_sparse(
+                &FactGrass::new(d_in, d_out, 12, 9, 24, MaskKind::Random, 5),
+                n,
+                t,
+                density,
+                seed + 1,
+            );
+            check_factorized_sparse(&FactMask::new(d_in, d_out, 8, 6, 5), n, t, density, seed + 2);
+            check_factorized_sparse(&FactSjlt::new(d_in, d_out, 8, 6, 5), n, t, density, seed + 3);
         }
     }
 }
