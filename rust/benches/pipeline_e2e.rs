@@ -18,7 +18,10 @@
 //!
 //! Run: `cargo bench --bench pipeline_e2e`
 
-use grass::attrib::{Attributor, InfluenceEngine, StreamOpts};
+use grass::attrib::blockwise::BlockLayout;
+use grass::attrib::{
+    Attributor, InfluenceEngine, PrecondArtifact, PrecondSpec, Preconditioner, StreamOpts,
+};
 use grass::coordinator::{pipeline::Source, CachePipeline, CompressorBank, PipelineConfig};
 use grass::data::images::SynthDigits;
 use grass::runtime::{Arg, Runtime};
@@ -121,6 +124,7 @@ fn streaming_attribute_bench(records: &mut Vec<BenchRecord>) {
             mem_budget,
             workers,
             groups: None,
+            artifact: None,
         };
         // The acceptance bound: the configured resident buffer allocation
         // never exceeds the budget, while the store is 4× bigger.
@@ -166,10 +170,64 @@ fn streaming_attribute_bench(records: &mut Vec<BenchRecord>) {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Preconditioner fit/apply costs: the stream-FIM fit pass vs loading the
+/// persisted `precond.bin` artifact (which skips the row stream entirely),
+/// plus the per-row apply cost. Records `precond_fit_ms`/`precond_apply_ms`
+/// so the solver cost trajectory is diffable across PRs; CI asserts the
+/// artifact path beats the refit.
+fn precond_artifact_bench(records: &mut Vec<BenchRecord>) {
+    let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
+    let (n, k) = if fast { (1024usize, 96usize) } else { (4096, 192) };
+    let dir = std::env::temp_dir().join(format!("grass_bench_precond_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut rng = Pcg::new(23);
+    let rows: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+    let mut w = StoreWriter::create(&dir, k, "bench", 0, 512).expect("store writer");
+    w.push_batch(&rows).expect("push");
+    w.finish().expect("finish");
+    let reader = StoreReader::open(&dir).expect("reader");
+    let layout = BlockLayout::new(vec![k]);
+    let opts = StreamOpts::default();
+    let spec = PrecondSpec::Damped { lambda: 0.1 };
+
+    println!("== preconditioner fit: stream-FIM refit vs persisted artifact (n={n}, k={k}) ==");
+    let r_fit = bench::bench("precond fit (stream FIM pass)", || {
+        let _ = bench::black_box(PrecondArtifact::fit(&reader, &opts, &layout).unwrap());
+    });
+    let artifact = PrecondArtifact::fit(&reader, &opts, &layout).expect("fit");
+    artifact.save(&dir).expect("save artifact");
+    let r_load = bench::bench("precond fit (load artifact + build)", || {
+        let a = PrecondArtifact::load(&dir).unwrap();
+        let _ = bench::black_box(spec.build(&a.fims, &layout).unwrap());
+    });
+    let pre = spec.build(&artifact.fims, &layout).expect("build");
+    let mut buf = rows.clone();
+    let r_apply = bench::bench("precond apply_rows", || {
+        buf.copy_from_slice(&rows);
+        pre.apply_rows(&mut buf, n);
+    });
+    let speedup = r_fit.median_secs() / r_load.median_secs().max(1e-12);
+    println!("{}", r_fit.report());
+    println!("{}   <- artifact reuse {speedup:.1}x vs refit", r_load.report());
+    println!("{}", r_apply.report());
+    let apply_ms = r_apply.median_secs() * 1e3;
+    records.push(
+        BenchRecord::from_duration("precond:fit_stream", n, k, k, r_fit.median)
+            .with_precond(r_fit.median_secs() * 1e3, apply_ms),
+    );
+    records.push(
+        BenchRecord::from_duration("precond:fit_artifact", n, k, k, r_load.median)
+            .with_precond(r_load.median_secs() * 1e3, apply_ms)
+            .with("speedup_vs_refit", speedup),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn main() {
     let mut records: Vec<BenchRecord> = Vec::new();
     compress_stage_bench(&mut records);
     streaming_attribute_bench(&mut records);
+    precond_artifact_bench(&mut records);
 
     let dir = Runtime::artifacts_dir();
     if !dir.join("manifest.json").exists() {
@@ -225,6 +283,8 @@ fn main() {
                         / (pipeline.metrics.samples_per_sec() * p as f64).max(1e-12),
                     density: Some(pipeline.metrics.input_density()),
                     mean_nnz: Some(pipeline.metrics.input_density() * p as f64),
+                    precond_fit_ms: None,
+                    precond_apply_ms: None,
                     extra: vec![],
                 },
             );

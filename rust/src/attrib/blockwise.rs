@@ -2,13 +2,15 @@
 //! approximated as `diag{F_1, …, F_L}` over per-layer compressed gradients,
 //! so iFVP decomposes into `L` independent small solves and the score is a
 //! sum of per-layer inner products. This is the attribution backbone for
-//! the GPT-2/WikiText (Table 1d) and Llama (Table 2) experiments.
+//! the GPT-2/WikiText (Table 1d) and Llama (Table 2) experiments. The
+//! per-layer solver family itself lives in [`super::precond`]
+//! ([`PrecondSpec::Blockwise`]); this engine binds it to a layer layout.
 
-use super::fim::{accumulate_fim, Preconditioner};
-use super::stream::{StreamOpts, StreamedCache};
+use super::precond::{apply_rows_parallel, PrecondSpec, PrecondStats};
+use super::stream::{DualCache, StreamOpts};
 use super::{check_store_width, Attributor, ScoreMatrix};
 use crate::store::{StoreMeta, StoreReader};
-use anyhow::{bail, Result};
+use anyhow::{ensure, Result};
 
 /// Layout of concatenated per-layer compressed gradients.
 #[derive(Debug, Clone)]
@@ -40,35 +42,28 @@ impl BlockLayout {
     }
 }
 
-/// State installed by the [`Attributor::cache`] stage: the preconditioned
-/// matrix plus the eagerly computed self-influence diagonal (the raw
-/// gradients are not retained — see `influence::CachedTrainSet`).
-struct CachedBlocks {
-    pre: Vec<f32>,
-    self_inf: Vec<f32>,
-    n: usize,
-}
-
-/// Dual-mode cache: resident preconditioned blocks, or the streamed state
-/// (per-block preconditioners; rows re-stream at attribute time).
-enum BwCache {
-    Mem(CachedBlocks),
-    Streamed(StreamedCache),
-}
-
 /// Block-diagonal influence engine over concatenated per-layer vectors.
 pub struct BlockwiseEngine {
     pub layout: BlockLayout,
+    /// Damping λ of the default per-block Cholesky (kept for the
+    /// pre-refactor constructor signature).
     pub damping: f64,
-    cached: Option<BwCache>,
+    precond: PrecondSpec,
+    cached: DualCache,
 }
 
 impl BlockwiseEngine {
     pub fn new(layout: BlockLayout, damping: f64) -> Self {
+        Self::with_precond(layout, PrecondSpec::Blockwise { lambda: damping })
+    }
+
+    /// Build with an explicit preconditioner spec over this layout.
+    pub fn with_precond(layout: BlockLayout, precond: PrecondSpec) -> Self {
         Self {
+            damping: precond.lambda().unwrap_or(PrecondSpec::DEFAULT_LAMBDA),
             layout,
-            damping,
-            cached: None,
+            precond,
+            cached: DualCache::Empty,
         }
     }
 
@@ -76,24 +71,10 @@ impl BlockwiseEngine {
     /// `g̃[l] = (F_l + λI)⁻¹ g[l]` with `F_l` accumulated over the cache.
     pub fn precondition(&self, grads: &[f32], n: usize) -> Result<Vec<f32>> {
         let total = self.layout.total();
-        assert_eq!(grads.len(), n * total);
+        ensure!(grads.len() == n * total, "precondition: matrix is not n × k");
+        let pre = self.precond.fit_mem(grads, n, &self.layout)?;
         let mut out = grads.to_vec();
-        for (l, &kl) in self.layout.dims.iter().enumerate() {
-            let off = self.layout.offsets[l];
-            // gather the layer column block
-            let mut block = vec![0.0f32; n * kl];
-            for i in 0..n {
-                block[i * kl..(i + 1) * kl]
-                    .copy_from_slice(&grads[i * total + off..i * total + off + kl]);
-            }
-            let fim = accumulate_fim(&block, n, kl);
-            let pre = Preconditioner::new(&fim, kl, self.damping)?;
-            pre.apply_all(&mut block, n);
-            for i in 0..n {
-                out[i * total + off..i * total + off + kl]
-                    .copy_from_slice(&block[i * kl..(i + 1) * kl]);
-            }
-        }
+        apply_rows_parallel(pre.as_ref(), &mut out, n);
         Ok(out)
     }
 
@@ -125,45 +106,45 @@ impl Attributor for BlockwiseEngine {
     }
 
     fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
-        let pre = self.precondition(grads, n)?;
-        let self_inf = super::influence::rowwise_dot(grads, &pre, n, self.layout.total());
-        self.cached = Some(BwCache::Mem(CachedBlocks { pre, self_inf, n }));
+        self.cached = DualCache::ingest_mem(grads, n, &self.layout, &self.precond)?;
         Ok(())
     }
 
     fn cache_stream(&mut self, reader: &StoreReader, opts: &StreamOpts) -> Result<StoreMeta> {
         check_store_width(self.name(), self.dim(), reader)?;
-        let sc = StreamedCache::build(reader, opts, self.layout.clone(), Some(self.damping))?;
-        self.cached = Some(BwCache::Streamed(sc));
+        self.cached =
+            DualCache::ingest_stream(reader, opts, self.layout.clone(), &self.precond)?;
         Ok(reader.meta.clone())
     }
 
     fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
-        let Some(c) = &self.cached else {
-            bail!("blockwise engine has no cached train set; call cache() first")
-        };
-        match c {
-            BwCache::Mem(c) => Ok(ScoreMatrix::new(
-                self.scores(&c.pre, c.n, queries, m),
-                m,
-                c.n,
-            )),
-            BwCache::Streamed(sc) => Ok(ScoreMatrix::new(
-                sc.scores(queries, m)?,
-                m,
-                sc.out_cols(),
-            )),
-        }
+        ensure!(
+            self.cached.is_cached(),
+            "blockwise engine has no cached train set; call cache() first"
+        );
+        Ok(ScoreMatrix::new(
+            self.cached.scores(queries, m, self.layout.total())?,
+            m,
+            self.cached.out_cols(),
+        ))
     }
 
     fn self_influence(&self) -> Result<Vec<f32>> {
-        let Some(c) = &self.cached else {
-            bail!("blockwise engine has no cached train set; call cache() first")
-        };
-        Ok(match c {
-            BwCache::Mem(c) => c.self_inf.clone(),
-            BwCache::Streamed(sc) => sc.self_inf().to_vec(),
-        })
+        ensure!(
+            self.cached.is_cached(),
+            "blockwise engine has no cached train set; call cache() first"
+        );
+        Ok(self.cached.self_inf()?.to_vec())
+    }
+
+    fn precond_stats(&self) -> PrecondStats {
+        PrecondStats {
+            fim_rows: self.cached.fim_rows(),
+            describe: self
+                .cached
+                .describe()
+                .unwrap_or_else(|| self.precond.spec_string()),
+        }
     }
 }
 
@@ -238,5 +219,19 @@ mod tests {
         for i in 0..n {
             assert!(scores[i * n + i] > 0.0);
         }
+    }
+
+    #[test]
+    fn stats_name_the_blockwise_solver() {
+        let n = 10;
+        let layout = BlockLayout::new(vec![3, 5]);
+        let total = layout.total();
+        let mut rng = Pcg::new(4);
+        let g: Vec<f32> = (0..n * total).map(|_| rng.next_gaussian()).collect();
+        let mut engine = BlockwiseEngine::new(layout, 0.1);
+        Attributor::cache(&mut engine, &g, n).unwrap();
+        let stats = Attributor::precond_stats(&engine);
+        assert_eq!(stats.fim_rows, n);
+        assert!(stats.describe.contains("blockwise"), "{}", stats.describe);
     }
 }

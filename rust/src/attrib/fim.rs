@@ -1,20 +1,28 @@
-//! Compressed FIM construction and inversion (the iFVP of §2.1, after
-//! random projection: inversion cost drops from O(p²) to O(k²) per vector).
+//! Compressed FIM construction (the iFVP input of §2.1, after random
+//! projection: inversion cost drops from O(p²) to O(k²) per vector).
+//! Fitting and applying the inverse lives in [`super::precond`]; this
+//! module owns the accumulation: batch ([`accumulate_fim`]) and streaming
+//! ([`FimAccumulator`]), each with a sparse fast path that accumulates in
+//! O(nnz²) per row instead of densifying first.
 
-use crate::linalg::CholeskyFactor;
+use crate::sketch::sparse::SparseRows;
 use crate::util::par;
-use anyhow::Result;
 
 /// `F̂ = Gᵀ G / n` over an `n × k` row-major compressed gradient matrix.
-/// Parallelised over output rows; f64 accumulation.
+/// Parallelised over output rows; f64 accumulation. Each worker owns one
+/// reusable accumulator row — no per-output-row allocation (the PR 1
+/// allocation-free convention).
 pub fn accumulate_fim(grads: &[f32], n: usize, k: usize) -> Vec<f32> {
     assert_eq!(grads.len(), n * k);
     let mut fim = vec![0.0f32; k * k];
     par::par_chunks_mut(&mut fim, k, 1, |row_start, chunk| {
+        // Per-worker scratch, reused across every output row this worker
+        // computes (hoisted out of the row loop).
+        let mut acc = vec![0.0f64; k];
         for (off, frow) in chunk.chunks_mut(k).enumerate() {
             let a = row_start + off;
             // accumulate F[a][b] = Σ_i g[i][a] g[i][b] / n
-            let mut acc = vec![0.0f64; k];
+            acc.fill(0.0);
             for i in 0..n {
                 let gi = &grads[i * k..(i + 1) * k];
                 let ga = gi[a] as f64;
@@ -64,9 +72,43 @@ impl FimAccumulator {
         self.n += 1;
     }
 
+    /// Sparse fast path: fold one row given as sorted (index, value)
+    /// pairs — the outer product touches only the nnz × nnz non-zero
+    /// cells, O(nnz²) instead of the dense path's O(k²). This is how
+    /// CSR-carried batches accumulate without densifying first.
+    pub fn add_row_sparse(&mut self, idx: &[u32], vals: &[f32]) {
+        debug_assert_eq!(idx.len(), vals.len());
+        let k = self.k;
+        for (a, &ia) in idx.iter().enumerate() {
+            let va = vals[a] as f64;
+            if va == 0.0 {
+                continue;
+            }
+            debug_assert!((ia as usize) < k);
+            let row = &mut self.sum[ia as usize * k..(ia as usize + 1) * k];
+            for (&ib, &vb) in idx.iter().zip(vals) {
+                row[ib as usize] += va * vb as f64;
+            }
+        }
+        self.n += 1;
+    }
+
     pub fn add_batch(&mut self, rows: &[f32]) {
         for r in rows.chunks(self.k) {
             self.add_row(r);
+        }
+    }
+
+    /// Fold a CSR batch through the sparse fast path — O(Σ nnz_i²) total.
+    pub fn add_batch_sparse(&mut self, rows: &SparseRows) {
+        assert_eq!(
+            rows.dim(),
+            self.k,
+            "CSR batch dim does not match the accumulator's k"
+        );
+        for i in 0..rows.n() {
+            let (idx, vals) = rows.row(i);
+            self.add_row_sparse(idx, vals);
         }
     }
 
@@ -87,39 +129,6 @@ impl FimAccumulator {
     pub fn finish(&self) -> Vec<f32> {
         let n = self.n.max(1) as f64;
         self.sum.iter().map(|&v| (v / n) as f32).collect()
-    }
-}
-
-/// Damped inverse-FIM applicator: `g ↦ (F̂ + λI)⁻¹ g`.
-pub struct Preconditioner {
-    factor: CholeskyFactor,
-}
-
-impl Preconditioner {
-    pub fn new(fim: &[f32], k: usize, damping: f64) -> Result<Self> {
-        Ok(Self {
-            factor: CholeskyFactor::factor_damped(fim, k, damping)?,
-        })
-    }
-
-    pub fn dim(&self) -> usize {
-        self.factor.dim()
-    }
-
-    pub fn apply(&self, g: &[f32]) -> Vec<f32> {
-        self.factor.solve_f32(g)
-    }
-
-    /// Precondition every row of an `n × k` matrix in parallel, in place.
-    pub fn apply_all(&self, grads: &mut [f32], n: usize) {
-        let k = self.dim();
-        assert_eq!(grads.len(), n * k);
-        par::par_chunks_mut(grads, k, 8, |_, chunk| {
-            for row in chunk.chunks_mut(k) {
-                let solved = self.factor.solve_f32(row);
-                row.copy_from_slice(&solved);
-            }
-        });
     }
 }
 
@@ -146,6 +155,40 @@ mod tests {
         }
     }
 
+    /// No-regression check for the hoisted per-worker scratch: a matrix
+    /// with planted zeros (exercising the `ga == 0` skip between rows
+    /// that now share one accumulator) still matches the naive product,
+    /// including when one worker computes many consecutive output rows.
+    #[test]
+    fn fim_scratch_reuse_across_rows_matches_naive() {
+        let (n, k) = (29, 24); // k ≫ thread count: every worker gets several rows
+        let mut rng = Pcg::new(12);
+        let g: Vec<f32> = (0..n * k)
+            .map(|_| {
+                if rng.next_f32() < 0.5 {
+                    0.0
+                } else {
+                    rng.next_gaussian()
+                }
+            })
+            .collect();
+        let fim = accumulate_fim(&g, n, k);
+        for a in 0..k {
+            for b in 0..k {
+                let mut want = 0.0f64;
+                for i in 0..n {
+                    want += g[i * k + a] as f64 * g[i * k + b] as f64;
+                }
+                want /= n as f64;
+                assert!(
+                    (fim[a * k + b] as f64 - want).abs() < 1e-4,
+                    "({a},{b}): {} vs {want}",
+                    fim[a * k + b]
+                );
+            }
+        }
+    }
+
     #[test]
     fn streaming_accumulator_matches_batch() {
         let (n, k) = (23, 6);
@@ -158,6 +201,61 @@ mod tests {
         let streamed = acc.finish();
         for i in 0..k * k {
             assert!((batch[i] - streamed[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sparse_rows_accumulate_like_dense() {
+        let (n, k) = (19, 12);
+        let mut rng = Pcg::new(6);
+        // ~10% dense rows with explicit index/value representation.
+        let mut dense = vec![0.0f32; n * k];
+        let mut acc_sparse = FimAccumulator::new(k);
+        for i in 0..n {
+            let mut idx = Vec::new();
+            let mut vals = Vec::new();
+            for j in 0..k {
+                if rng.next_f32() < 0.15 {
+                    let v = rng.next_gaussian();
+                    dense[i * k + j] = v;
+                    idx.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            acc_sparse.add_row_sparse(&idx, &vals);
+        }
+        let mut acc_dense = FimAccumulator::new(k);
+        acc_dense.add_batch(&dense);
+        assert_eq!(acc_sparse.count(), n);
+        let (fs, fd) = (acc_sparse.finish(), acc_dense.finish());
+        for i in 0..k * k {
+            assert!((fs[i] - fd[i]).abs() < 1e-6, "fim[{i}]: {} vs {}", fs[i], fd[i]);
+        }
+    }
+
+    #[test]
+    fn csr_batch_accumulates_like_dense() {
+        use crate::sketch::sparse::SparseRows;
+        let (n, k) = (15, 10);
+        let mut rng = Pcg::new(8);
+        let dense: Vec<f32> = (0..n * k)
+            .map(|_| {
+                if rng.next_f32() < 0.1 {
+                    rng.next_gaussian()
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let csr = SparseRows::from_dense_threshold(&dense, n, k, 0.0);
+        let mut a = FimAccumulator::new(k);
+        a.add_batch_sparse(&csr);
+        let mut b = FimAccumulator::new(k);
+        b.add_batch(&dense);
+        assert_eq!(a.count(), n);
+        let (fa, fb) = (a.finish(), b.finish());
+        for i in 0..k * k {
+            assert!((fa[i] - fb[i]).abs() < 1e-6);
         }
     }
 
@@ -192,38 +290,6 @@ mod tests {
             }
         }
         // PSD: factorable with tiny damping
-        assert!(Preconditioner::new(&fim, k, 1e-6).is_ok());
-    }
-
-    #[test]
-    fn precondition_identity_fim_is_scaling() {
-        let k = 5;
-        let mut fim = vec![0.0f32; k * k];
-        for i in 0..k {
-            fim[i * k + i] = 1.0;
-        }
-        let pre = Preconditioner::new(&fim, k, 1.0).unwrap(); // (I + I)⁻¹ = I/2
-        let g = vec![2.0f32; k];
-        let out = pre.apply(&g);
-        for v in out {
-            assert!((v - 1.0).abs() < 1e-5);
-        }
-    }
-
-    #[test]
-    fn apply_all_matches_apply() {
-        let (n, k) = (12, 7);
-        let mut rng = Pcg::new(4);
-        let g: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
-        let fim = accumulate_fim(&g, n, k);
-        let pre = Preconditioner::new(&fim, k, 0.1).unwrap();
-        let mut all = g.clone();
-        pre.apply_all(&mut all, n);
-        for i in 0..n {
-            let one = pre.apply(&g[i * k..(i + 1) * k]);
-            for j in 0..k {
-                assert!((all[i * k + j] - one[j]).abs() < 1e-5);
-            }
-        }
+        assert!(crate::linalg::CholeskyFactor::factor_damped(&fim, k, 1e-6).is_ok());
     }
 }

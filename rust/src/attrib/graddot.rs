@@ -1,13 +1,17 @@
 //! GradDot (Charpiat et al. 2019): `τ(z_i, z_q) = ⟨g_i, g_q⟩` — the cheap
 //! surrogate the Selective Mask objective (Eq. 1) targets, and a baseline
-//! attributor in its own right.
+//! attributor in its own right. As an [`Attributor`] it is the identity
+//! point of the preconditioner family: the same
+//! `preconditioner ∘ inner-product` composition every scorer uses, with
+//! [`PrecondSpec::Identity`] plugged in.
 
 use super::blockwise::BlockLayout;
-use super::stream::{StreamOpts, StreamedCache};
+use super::precond::{PrecondSpec, PrecondStats};
+use super::stream::{DualCache, StreamOpts};
 use super::{check_store_width, Attributor, ScoreMatrix};
 use crate::linalg::matmul::matmul_abt;
 use crate::store::{StoreMeta, StoreReader};
-use anyhow::{bail, Result};
+use anyhow::{ensure, Result};
 
 /// `scores[q][i] = ⟨g_q, g_i⟩` over `n × k` train and `m × k` query
 /// matrices; returns `m × n`. Both operands are row-major with shared inner
@@ -21,29 +25,33 @@ pub fn graddot_scores(grads: &[f32], n: usize, k: usize, queries: &[f32], m: usi
     scores
 }
 
-/// Dual-mode GradDot cache: the resident train matrix, or the streamed
-/// state (store handle + self-influence diagonal; rows re-stream at
-/// attribute time).
-enum GdCache {
-    Empty,
-    Mem { train: Vec<f32>, n: usize },
-    Streamed(StreamedCache),
-}
-
 /// The GradDot scorer as a stateful [`Attributor`]: `cache` keeps the
 /// compressed train matrix (`cache_stream` keeps only the store handle),
 /// `attribute` is one `Q · Gᵀ` GEMM — dense, or streamed block by block.
 pub struct GradDot {
     k: usize,
-    cached: GdCache,
+    precond: PrecondSpec,
+    cached: DualCache,
 }
 
 impl GradDot {
     pub fn new(k: usize) -> Self {
+        Self::with_precond(k, PrecondSpec::Identity)
+    }
+
+    /// GradDot with a non-trivial preconditioner is simply a
+    /// preconditioned inner-product scorer — exposed so `--precond`
+    /// composes with every scorer uniformly.
+    pub fn with_precond(k: usize, precond: PrecondSpec) -> Self {
         Self {
             k,
-            cached: GdCache::Empty,
+            precond,
+            cached: DualCache::Empty,
         }
+    }
+
+    fn layout(&self) -> BlockLayout {
+        BlockLayout::new(vec![self.k])
     }
 }
 
@@ -57,52 +65,43 @@ impl Attributor for GradDot {
     }
 
     fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
-        if grads.len() != n * self.k {
-            bail!("graddot cache: got {} values for n = {n}, k = {}", grads.len(), self.k);
-        }
-        self.cached = GdCache::Mem {
-            train: grads.to_vec(),
-            n,
-        };
+        self.cached = DualCache::ingest_mem(grads, n, &self.layout(), &self.precond)?;
         Ok(())
     }
 
     fn cache_stream(&mut self, reader: &StoreReader, opts: &StreamOpts) -> Result<StoreMeta> {
         check_store_width(self.name(), self.dim(), reader)?;
-        // No preconditioning (damping = None): raw rows score directly.
-        let sc = StreamedCache::build(reader, opts, BlockLayout::new(vec![self.k]), None)?;
-        self.cached = GdCache::Streamed(sc);
+        self.cached = DualCache::ingest_stream(reader, opts, self.layout(), &self.precond)?;
         Ok(reader.meta.clone())
     }
 
     fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
-        match &self.cached {
-            GdCache::Empty => {
-                bail!("graddot scorer has no cached train set; call cache() first")
-            }
-            GdCache::Mem { train, n } => Ok(ScoreMatrix::new(
-                graddot_scores(train, *n, self.k, queries, m),
-                m,
-                *n,
-            )),
-            GdCache::Streamed(sc) => Ok(ScoreMatrix::new(
-                sc.scores(queries, m)?,
-                m,
-                sc.out_cols(),
-            )),
-        }
+        ensure!(
+            self.cached.is_cached(),
+            "graddot scorer has no cached train set; call cache() first"
+        );
+        Ok(ScoreMatrix::new(
+            self.cached.scores(queries, m, self.k)?,
+            m,
+            self.cached.out_cols(),
+        ))
     }
 
     fn self_influence(&self) -> Result<Vec<f32>> {
-        match &self.cached {
-            GdCache::Empty => {
-                bail!("graddot scorer has no cached train set; call cache() first")
-            }
-            GdCache::Mem { train, .. } => Ok(train
-                .chunks(self.k)
-                .map(|g| g.iter().map(|v| v * v).sum())
-                .collect()),
-            GdCache::Streamed(sc) => Ok(sc.self_inf().to_vec()),
+        ensure!(
+            self.cached.is_cached(),
+            "graddot scorer has no cached train set; call cache() first"
+        );
+        Ok(self.cached.self_inf()?.to_vec())
+    }
+
+    fn precond_stats(&self) -> PrecondStats {
+        PrecondStats {
+            fim_rows: self.cached.fim_rows(),
+            describe: self
+                .cached
+                .describe()
+                .unwrap_or_else(|| self.precond.spec_string()),
         }
     }
 }
@@ -149,6 +148,24 @@ mod tests {
                     want
                 );
             }
+        }
+    }
+
+    #[test]
+    fn preconditioned_graddot_equals_influence() {
+        // GradDot ∘ damped preconditioner is the influence composition —
+        // the whole point of the shared DualCache.
+        use crate::attrib::influence::InfluenceEngine;
+        let (n, m, k) = (16, 3, 5);
+        let mut rng = Pcg::new(12);
+        let g: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let q: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
+        let mut gd = GradDot::with_precond(k, PrecondSpec::Damped { lambda: 0.2 });
+        gd.cache(&g, n).unwrap();
+        let s = Attributor::attribute(&gd, &q, m).unwrap();
+        let want = InfluenceEngine::new(k, 0.2).attribute(&g, n, &q, m).unwrap();
+        for i in 0..m * n {
+            assert!((s.scores[i] - want[i]).abs() < 1e-5, "at {i}");
         }
     }
 }

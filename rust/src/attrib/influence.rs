@@ -1,77 +1,67 @@
 //! The monolithic-FIM influence engine: cache + attribute over a compressed
-//! gradient matrix, with the paper's damping grid search (App. B.2).
+//! gradient matrix. The second-order solve is pluggable (any
+//! [`PrecondSpec`]); the paper's damping grid search (App. B.2) lives in
+//! [`super::precond::select`].
 
 use super::blockwise::BlockLayout;
-use super::fim::{accumulate_fim, Preconditioner};
-use super::stream::{StreamOpts, StreamedCache};
+use super::precond::{apply_rows_parallel, PrecondSpec, PrecondStats};
+use super::stream::{DualCache, StreamOpts};
 use super::{check_store_width, Attributor, ScoreMatrix};
 use crate::store::{StoreMeta, StoreReader};
-use anyhow::{bail, Result};
+use anyhow::{ensure, Result};
 
-/// Candidate damping grid from the paper:
-/// λ ∈ {1e-7, …, 1e-1, 1, 10, 100} (App. B.2).
-pub const DAMPING_GRID: &[f64] = &[
-    1e-7, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0,
-];
+/// Candidate damping grid from the paper (re-exported from
+/// [`super::precond::select`], the home of the grid search).
+pub use super::precond::select::DAMPING_GRID;
 
-/// State installed by the [`Attributor::cache`] stage. Self-influence is
-/// computed eagerly while the raw gradients are still in hand, so only the
-/// preconditioned matrix is retained — at the store module's target scale
-/// (n·k·4 bytes in the hundreds of GB) a second full copy is the
-/// difference between fitting in memory and not.
-struct CachedTrainSet {
-    /// Preconditioned `n × k` matrix `g̃̂ = (F̂+λI)⁻¹ ĝ`.
-    pre: Vec<f32>,
-    /// `τ(z_i, z_i) = ⟨ĝ_i, g̃̂_i⟩` per cached sample.
-    self_inf: Vec<f32>,
-    n: usize,
-}
-
-/// Dual-mode cache: the in-memory preconditioned matrix, or the streamed
-/// state (O(k²) preconditioner + O(n) self-influence, rows re-streamed
-/// from the store at attribute time).
-enum TrainCache {
-    Mem(CachedTrainSet),
-    Streamed(StreamedCache),
-}
-
-/// Row-wise `⟨raw_i, pre_i⟩` — the self-influence diagonal (shared with
-/// the blockwise and TRAK engines).
-pub(super) fn rowwise_dot(raw: &[f32], pre: &[f32], n: usize, k: usize) -> Vec<f32> {
-    (0..n)
-        .map(|i| {
-            raw[i * k..(i + 1) * k]
-                .iter()
-                .zip(&pre[i * k..(i + 1) * k])
-                .map(|(a, b)| a * b)
-                .sum()
-        })
-        .collect()
-}
-
+/// Monolithic influence engine: `τ(z_i, z_q) = ⟨ĝ_q, P ĝ_i⟩` with
+/// `P = (F̂ + λI)⁻¹` by default (any [`PrecondSpec`] via
+/// [`InfluenceEngine::with_precond`]).
 pub struct InfluenceEngine {
     pub k: usize,
+    /// Damping λ of the default damped-Cholesky preconditioner (kept for
+    /// the pre-refactor constructor signature; [`InfluenceEngine::precond`]
+    /// is authoritative).
     pub damping: f64,
-    cached: Option<TrainCache>,
+    precond: PrecondSpec,
+    cached: DualCache,
 }
 
 impl InfluenceEngine {
     pub fn new(k: usize, damping: f64) -> Self {
+        Self::with_precond(k, PrecondSpec::Damped { lambda: damping })
+    }
+
+    /// Build with an explicit preconditioner spec (identity, damped,
+    /// eig-truncated, …). The engine is monolithic: blockwise specs act
+    /// on one `[k]` block here — use
+    /// [`super::blockwise::BlockwiseEngine`] for per-layer solves.
+    pub fn with_precond(k: usize, precond: PrecondSpec) -> Self {
         Self {
             k,
-            damping,
-            cached: None,
+            damping: precond.lambda().unwrap_or(PrecondSpec::DEFAULT_LAMBDA),
+            precond,
+            cached: DualCache::Empty,
         }
     }
 
+    /// The engine's preconditioner spec.
+    pub fn precond(&self) -> &PrecondSpec {
+        &self.precond
+    }
+
+    fn layout(&self) -> BlockLayout {
+        BlockLayout::new(vec![self.k])
+    }
+
     /// Cache stage on an in-memory `n × k` compressed gradient matrix:
-    /// builds `F̂`, preconditions all rows. Returns the preconditioned
-    /// matrix (the `g̃̂_i`).
+    /// fits the preconditioner and returns the preconditioned matrix
+    /// (the `g̃̂_i`).
     pub fn precondition(&self, grads: &[f32], n: usize) -> Result<Vec<f32>> {
-        let fim = accumulate_fim(grads, n, self.k);
-        let pre = Preconditioner::new(&fim, self.k, self.damping)?;
+        ensure!(grads.len() == n * self.k, "precondition: matrix is not n × k");
+        let pre = self.precond.fit_mem(grads, n, &self.layout())?;
         let mut out = grads.to_vec();
-        pre.apply_all(&mut out, n);
+        apply_rows_parallel(pre.as_ref(), &mut out, n);
         Ok(out)
     }
 
@@ -107,50 +97,44 @@ impl Attributor for InfluenceEngine {
     }
 
     fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
-        let pre = self.precondition(grads, n)?;
-        let self_inf = rowwise_dot(grads, &pre, n, self.k);
-        self.cached = Some(TrainCache::Mem(CachedTrainSet { pre, self_inf, n }));
+        self.cached = DualCache::ingest_mem(grads, n, &self.layout(), &self.precond)?;
         Ok(())
     }
 
     fn cache_stream(&mut self, reader: &StoreReader, opts: &StreamOpts) -> Result<StoreMeta> {
         check_store_width(self.name(), self.dim(), reader)?;
-        let sc = StreamedCache::build(
-            reader,
-            opts,
-            BlockLayout::new(vec![self.k]),
-            Some(self.damping),
-        )?;
-        self.cached = Some(TrainCache::Streamed(sc));
+        self.cached = DualCache::ingest_stream(reader, opts, self.layout(), &self.precond)?;
         Ok(reader.meta.clone())
     }
 
     fn attribute(&self, queries: &[f32], m: usize) -> Result<ScoreMatrix> {
-        let Some(c) = &self.cached else {
-            bail!("influence engine has no cached train set; call cache() first")
-        };
-        match c {
-            TrainCache::Mem(c) => Ok(ScoreMatrix::new(
-                self.scores(&c.pre, c.n, queries, m),
-                m,
-                c.n,
-            )),
-            TrainCache::Streamed(sc) => Ok(ScoreMatrix::new(
-                sc.scores(queries, m)?,
-                m,
-                sc.out_cols(),
-            )),
-        }
+        ensure!(
+            self.cached.is_cached(),
+            "influence engine has no cached train set; call cache() first"
+        );
+        Ok(ScoreMatrix::new(
+            self.cached.scores(queries, m, self.k)?,
+            m,
+            self.cached.out_cols(),
+        ))
     }
 
     fn self_influence(&self) -> Result<Vec<f32>> {
-        let Some(c) = &self.cached else {
-            bail!("influence engine has no cached train set; call cache() first")
-        };
-        Ok(match c {
-            TrainCache::Mem(c) => c.self_inf.clone(),
-            TrainCache::Streamed(sc) => sc.self_inf().to_vec(),
-        })
+        ensure!(
+            self.cached.is_cached(),
+            "influence engine has no cached train set; call cache() first"
+        );
+        Ok(self.cached.self_inf()?.to_vec())
+    }
+
+    fn precond_stats(&self) -> PrecondStats {
+        PrecondStats {
+            fim_rows: self.cached.fim_rows(),
+            describe: self
+                .cached
+                .describe()
+                .unwrap_or_else(|| self.precond.spec_string()),
+        }
     }
 }
 
@@ -167,15 +151,17 @@ pub fn scores_query_side(
     queries: &[f32],
     m: usize,
 ) -> Result<Vec<f32>> {
-    let pre = Preconditioner::new(fim, k, damping)?;
+    let layout = BlockLayout::new(vec![k]);
+    let pre = PrecondSpec::Damped { lambda: damping }.build(&[fim.to_vec()], &layout)?;
     let mut q = queries.to_vec();
-    pre.apply_all(&mut q, m);
+    apply_rows_parallel(pre.as_ref(), &mut q, m);
     Ok(super::graddot::graddot_scores(train, n, k, &q, m))
 }
 
 /// Pick the damping maximising `eval(scores)` over [`DAMPING_GRID`]
 /// (the paper cross-validates LDS on 10% of test; the caller provides the
-/// evaluation closure). Returns (best_damping, best_value).
+/// evaluation closure — see [`super::precond::select`] for the LDS-backed
+/// selection used by `--damping grid`). Returns (best_damping, best_value).
 pub fn grid_search_damping(
     grads: &[f32],
     n: usize,
@@ -276,6 +262,47 @@ mod tests {
                 query_side[i]
             );
         }
+    }
+
+    #[test]
+    fn eig_precond_full_rank_matches_damped_engine() {
+        // The acceptance bound: `eig:k` scores equal `damped:λ` scores to
+        // ≤ 1e-4 relative at full rank.
+        let (n, m, k) = (30, 5, 10);
+        let mut rng = Pcg::new(14);
+        let g: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let q: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
+        let damped = InfluenceEngine::new(k, 0.05).attribute(&g, n, &q, m).unwrap();
+        let eig = InfluenceEngine::with_precond(
+            k,
+            PrecondSpec::Eig {
+                rank: k,
+                lambda: 0.05,
+            },
+        )
+        .attribute(&g, n, &q, m)
+        .unwrap();
+        for i in 0..m * n {
+            assert!(
+                (damped[i] - eig[i]).abs() <= 1e-4 * (1.0 + damped[i].abs()),
+                "at {i}: damped {} vs eig {}",
+                damped[i],
+                eig[i]
+            );
+        }
+    }
+
+    #[test]
+    fn precond_stats_report_fit_rows_and_solver() {
+        let (n, k) = (12, 4);
+        let mut rng = Pcg::new(15);
+        let g: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let mut engine = InfluenceEngine::new(k, 0.1);
+        assert_eq!(Attributor::precond_stats(&engine).fim_rows, 0);
+        Attributor::cache(&mut engine, &g, n).unwrap();
+        let stats = Attributor::precond_stats(&engine);
+        assert_eq!(stats.fim_rows, n);
+        assert!(stats.describe.contains("damped-cholesky"), "{}", stats.describe);
     }
 
     #[test]

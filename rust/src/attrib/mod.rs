@@ -14,7 +14,12 @@
 //! [`AttributionSpec`]'s scorer string to the right engine, so the CLI,
 //! coordinator, and experiment harnesses share one construction path.
 //!
-//! [`fim`] builds and inverts the compressed FIM; [`influence`] is the
+//! [`fim`] accumulates the compressed FIM; [`precond`] is the pluggable
+//! second-order subsystem every scorer composes with — the
+//! [`Preconditioner`] trait ([`precond::IdentityPrecond`], damped
+//! Cholesky, eigen-truncated low-rank, per-layer blockwise), persisted
+//! solver artifacts ([`PrecondArtifact`], `precond.bin`), and the paper's
+//! damping grid search ([`precond::select`]). [`influence`] is the
 //! monolithic-FIM engine (TRAK-style models); [`blockwise`] is the
 //! layer-wise block-diagonal variant for LMs (§3.3.2); [`trak`] ensembles
 //! checkpoints; [`tracin`] weights checkpoint GradDots by learning rate;
@@ -24,12 +29,13 @@ pub mod blockwise;
 pub mod fim;
 pub mod graddot;
 pub mod influence;
+pub mod precond;
 pub mod stream;
 pub mod tracin;
 pub mod trak;
 
-pub use fim::Preconditioner;
 pub use influence::InfluenceEngine;
+pub use precond::{PrecondArtifact, PrecondSpec, PrecondStats, Preconditioner};
 pub use stream::{StreamOpts, DEFAULT_MEM_BUDGET};
 
 use crate::sketch::MethodSpec;
@@ -89,6 +95,10 @@ pub struct AttributionSpec {
     /// Per-layer compressed dims for the blockwise scorer; empty means the
     /// monolithic layout `[total_dim]`.
     pub layout: Vec<usize>,
+    /// Explicit preconditioner spec (`--precond`); `None` picks each
+    /// scorer's default family
+    /// ([`PrecondSpec::default_for_scorer`]) at `damping`.
+    pub precond: Option<PrecondSpec>,
 }
 
 impl AttributionSpec {
@@ -99,6 +109,7 @@ impl AttributionSpec {
             seed,
             damping: 1e-3,
             layout: vec![],
+            precond: None,
         }
     }
 
@@ -187,6 +198,15 @@ pub trait Attributor {
 
     /// Self-influence `τ(z_i, z_i)` of every cached train sample.
     fn self_influence(&self) -> Result<Vec<f32>>;
+
+    /// Provenance + cost of the engine's fitted second-order state: how
+    /// many rows the FIM fit pass consumed (`0` when a persisted
+    /// [`PrecondArtifact`] made the pass unnecessary, or the scorer is
+    /// identity-preconditioned) and which solver was fitted. Engines
+    /// without second-order state keep the default.
+    fn precond_stats(&self) -> PrecondStats {
+        PrecondStats::default()
+    }
 }
 
 /// Shared open-time width check: a store whose rows are not the scorer's
@@ -218,20 +238,26 @@ pub fn from_spec(spec: &AttributionSpec) -> Result<Box<dyn Attributor>> {
         );
     }
     let k = spec.total_dim();
+    // Explicit `--precond` wins; otherwise each scorer keeps its default
+    // solver family at the spec's damping.
+    let pspec = spec
+        .precond
+        .clone()
+        .unwrap_or_else(|| PrecondSpec::default_for_scorer(&spec.scorer, spec.damping));
     Ok(match spec.scorer.as_str() {
-        "if" | "influence" => Box::new(InfluenceEngine::new(k, spec.damping)),
-        "graddot" | "dot" => Box::new(graddot::GradDot::new(k)),
-        "trak" => Box::new(trak::Trak::new(k, spec.damping)),
-        "tracin" => Box::new(tracin::TracIn::new(k)),
+        "if" | "influence" => Box::new(InfluenceEngine::with_precond(k, pspec)),
+        "graddot" | "dot" => Box::new(graddot::GradDot::with_precond(k, pspec)),
+        "trak" => Box::new(trak::Trak::with_precond(k, pspec)),
+        "tracin" => Box::new(tracin::TracIn::with_precond(k, vec![], pspec)),
         "blockwise" | "bw" => {
             let layout = if spec.layout.is_empty() {
                 vec![k]
             } else {
                 spec.layout.clone()
             };
-            Box::new(blockwise::BlockwiseEngine::new(
+            Box::new(blockwise::BlockwiseEngine::with_precond(
                 blockwise::BlockLayout::new(layout),
-                spec.damping,
+                pspec,
             ))
         }
         other => bail!(
@@ -263,6 +289,45 @@ mod tests {
             assert_eq!(a.dim(), 6, "{scorer}");
         }
         assert!(from_spec(&spec("bogus", 6)).is_err());
+    }
+
+    #[test]
+    fn explicit_precond_spec_routes_through_every_scorer() {
+        // An explicit eig spec overrides the scorer's default family; at
+        // full rank the influence scores match the damped default ≤ 1e-4.
+        let (n, m, k) = (24, 3, 6);
+        let g = gaussian(n, k, 40);
+        let q = gaussian(m, k, 41);
+        let mut base = spec("if", k);
+        base.damping = 0.1;
+        let mut eig = base.clone();
+        eig.precond = Some(PrecondSpec::Eig {
+            rank: k,
+            lambda: 0.1,
+        });
+        let mut a = from_spec(&base).unwrap();
+        let mut b = from_spec(&eig).unwrap();
+        a.cache(&g, n).unwrap();
+        b.cache(&g, n).unwrap();
+        let (sa, sb) = (a.attribute(&q, m).unwrap(), b.attribute(&q, m).unwrap());
+        for i in 0..m * n {
+            assert!(
+                (sa.scores[i] - sb.scores[i]).abs() <= 1e-4 * (1.0 + sa.scores[i].abs()),
+                "at {i}"
+            );
+        }
+        assert!(b.precond_stats().describe.contains("eig"), "{}", b.precond_stats().describe);
+        // Identity on the influence scorer reduces to GradDot.
+        let mut ident = base.clone();
+        ident.precond = Some(PrecondSpec::Identity);
+        let mut c = from_spec(&ident).unwrap();
+        c.cache(&g, n).unwrap();
+        let sc = c.attribute(&q, m).unwrap();
+        let want = graddot::graddot_scores(&g, n, k, &q, m);
+        for i in 0..m * n {
+            assert!((sc.scores[i] - want[i]).abs() < 1e-5, "at {i}");
+        }
+        assert_eq!(c.precond_stats().fim_rows, 0);
     }
 
     #[test]

@@ -1,0 +1,1117 @@
+//! The preconditioner subsystem — every scorer's second-order machinery
+//! behind one pluggable interface.
+//!
+//! §2.1's iFVP step `g̃ = (F̂ + λI)⁻¹ ĝ` used to be hand-rolled inside each
+//! engine. This module factors it into three orthogonal pieces:
+//!
+//! - **[`PrecondSpec`]** — a parsed spec string
+//!   (`identity | damped:λ | eig:r[,λ] | blockwise[:λ]`) naming which
+//!   solver to fit. `identity` scores raw inner products (the GradDot
+//!   family), `damped` is the monolithic damped-Cholesky iFVP, `eig:r` is
+//!   the LoRIF-style eigen-truncated rank-`r` inverse (O(k·r) per row,
+//!   exact at `r = k`), and `blockwise` is the per-layer block-diagonal
+//!   family (§3.3.2).
+//! - **[`Preconditioner`]** — the fitted solver: `apply_rows` transforms a
+//!   row-major block in place (streaming-compatible: the out-of-core
+//!   passes call it on worker-local blocks), `describe` reports what was
+//!   fitted.
+//! - **[`PrecondArtifact`]** — the persisted solver state (`precond.bin`
+//!   in the store directory): the per-block FIMs plus provenance
+//!   (method/seed/k/row-count). `grass fit` writes it once; every later
+//!   `grass attribute` validates and reuses it, skipping the O(n·k) FIM
+//!   re-stream entirely — any [`PrecondSpec`] (any λ, any rank) builds
+//!   from the same artifact.
+//!
+//! [`select`] implements the paper's damping grid search (App. B.2):
+//! every λ in [`select::DAMPING_GRID`] is fitted from the same FIMs and
+//! scored by [`crate::eval::lds`] on held-out subsets.
+
+use super::blockwise::BlockLayout;
+use super::fim::accumulate_fim;
+use super::stream::{stream_block_fims, StreamOpts};
+use crate::linalg::{eigh, CholeskyFactor};
+use crate::store::{StoreMeta, StoreReader, PRECOND_FILE};
+use crate::util::json::Json;
+use crate::util::par;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+/// A fitted second-order solver: applies `g ↦ P g` (for some approximation
+/// `P ≈ (F̂ + λI)⁻¹`) to row-major blocks in place.
+///
+/// `apply_rows` is deliberately **serial** — the callers own the
+/// parallelism (streaming workers call it on their private blocks;
+/// resident matrices go through [`apply_rows_parallel`]).
+pub trait Preconditioner: Send + Sync {
+    /// Row width `k` this solver operates on.
+    fn dim(&self) -> usize;
+
+    /// Transform the first `rows` rows of `buf` (row-major, width
+    /// [`Preconditioner::dim`]) in place.
+    fn apply_rows(&self, buf: &mut [f32], rows: usize);
+
+    /// Human-readable description of the fitted solver (impl, dims, λ).
+    fn describe(&self) -> String;
+}
+
+/// Precondition a resident `n × k` matrix in place, rows split across the
+/// thread pool (each chunk runs the solver's serial `apply_rows`).
+pub fn apply_rows_parallel(pre: &dyn Preconditioner, buf: &mut [f32], n: usize) {
+    let k = pre.dim();
+    assert_eq!(buf.len(), n * k, "apply_rows_parallel: buffer is not n × k");
+    if n == 0 {
+        return;
+    }
+    par::par_chunks_mut(buf, k, 8, |_, chunk| {
+        pre.apply_rows(chunk, chunk.len() / k);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Spec
+// ---------------------------------------------------------------------------
+
+/// Parsed preconditioner spec: which solver to fit, with which damping.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PrecondSpec {
+    /// No preconditioning: scores are raw inner products.
+    Identity,
+    /// Damped-Cholesky iFVP: `(F̂ + λI)⁻¹`, O(k²) per row. Solves over
+    /// the engine's block layout — monolithic for the flat scorers,
+    /// per-layer (equivalent to [`PrecondSpec::Blockwise`]) when the
+    /// blockwise scorer supplies a multi-block layout.
+    Damped { lambda: f64 },
+    /// Eigen-truncated rank-`r` inverse (LoRIF-style): keep the top-`r`
+    /// eigenpairs of `F̂`, treat the tail as zero — O(k·r) per row, exact
+    /// at `r = k`.
+    Eig { rank: usize, lambda: f64 },
+    /// Per-layer block-diagonal damped Cholesky (§3.3.2): one independent
+    /// solve per layout block.
+    Blockwise { lambda: f64 },
+}
+
+impl PrecondSpec {
+    /// Damping used when a spec string omits λ.
+    pub const DEFAULT_LAMBDA: f64 = 1e-3;
+
+    /// Parse `identity | damped[:λ] | eig:r[,λ] | blockwise[:λ]`, filling
+    /// omitted λ with [`PrecondSpec::DEFAULT_LAMBDA`].
+    pub fn parse(s: &str) -> Result<Self> {
+        Self::parse_with(s, Self::DEFAULT_LAMBDA)
+    }
+
+    /// [`PrecondSpec::parse`] with an explicit default λ for spec strings
+    /// that omit it (the CLI passes `--damping` here).
+    pub fn parse_with(s: &str, default_lambda: f64) -> Result<Self> {
+        let s = s.trim();
+        let (head, rest) = match s.split_once(':') {
+            Some((h, r)) => (h.trim(), Some(r.trim())),
+            None => (s, None),
+        };
+        let lambda_of = |r: Option<&str>| -> Result<f64> {
+            match r {
+                None | Some("") => Ok(default_lambda),
+                Some(v) => v
+                    .parse::<f64>()
+                    .map_err(|e| anyhow!("precond spec '{s}': bad damping '{v}': {e}")),
+            }
+        };
+        match head {
+            "identity" | "id" | "none" => {
+                ensure!(
+                    rest.is_none(),
+                    "precond spec '{s}': identity takes no parameters"
+                );
+                Ok(Self::Identity)
+            }
+            "damped" | "chol" => Ok(Self::Damped {
+                lambda: lambda_of(rest)?,
+            }),
+            "blockwise" | "bw" => Ok(Self::Blockwise {
+                lambda: lambda_of(rest)?,
+            }),
+            "eig" => {
+                let r = rest.ok_or_else(|| {
+                    anyhow!("precond spec '{s}': eig needs a rank, e.g. 'eig:64' or 'eig:64,1e-3'")
+                })?;
+                let (rank_s, lam) = match r.split_once(',') {
+                    Some((a, b)) => (a.trim(), Some(b.trim())),
+                    None => (r, None),
+                };
+                let rank: usize = rank_s
+                    .parse()
+                    .map_err(|e| anyhow!("precond spec '{s}': bad rank '{rank_s}': {e}"))?;
+                ensure!(rank >= 1, "precond spec '{s}': eig rank must be ≥ 1");
+                Ok(Self::Eig {
+                    rank,
+                    lambda: lambda_of(lam)?,
+                })
+            }
+            other => bail!(
+                "unknown preconditioner '{other}' (expected identity|damped:λ|eig:r[,λ]|blockwise)"
+            ),
+        }
+    }
+
+    /// Canonical spec string; [`PrecondSpec::parse`] roundtrips it.
+    pub fn spec_string(&self) -> String {
+        match self {
+            Self::Identity => "identity".to_string(),
+            Self::Damped { lambda } => format!("damped:{lambda:e}"),
+            Self::Eig { rank, lambda } => format!("eig:{rank},{lambda:e}"),
+            Self::Blockwise { lambda } => format!("blockwise:{lambda:e}"),
+        }
+    }
+
+    /// The damping λ this spec fits with (`None` for identity).
+    pub fn lambda(&self) -> Option<f64> {
+        match self {
+            Self::Identity => None,
+            Self::Damped { lambda } | Self::Eig { lambda, .. } | Self::Blockwise { lambda } => {
+                Some(*lambda)
+            }
+        }
+    }
+
+    /// The same solver family with a different λ (identity is unchanged) —
+    /// the damping grid search iterates this.
+    pub fn with_lambda(&self, lambda: f64) -> Self {
+        match self {
+            Self::Identity => Self::Identity,
+            Self::Damped { .. } => Self::Damped { lambda },
+            Self::Eig { rank, .. } => Self::Eig {
+                rank: *rank,
+                lambda,
+            },
+            Self::Blockwise { .. } => Self::Blockwise { lambda },
+        }
+    }
+
+    /// Whether fitting this spec requires a FIM pass over the train rows.
+    pub fn needs_fim(&self) -> bool {
+        !matches!(self, Self::Identity)
+    }
+
+    /// The preconditioner each scorer fits when no `--precond` is given:
+    /// the FIM-preconditioned scorers keep their damped families, the
+    /// GradDot family stays raw.
+    pub fn default_for_scorer(scorer: &str, damping: f64) -> Self {
+        match scorer {
+            "if" | "influence" | "trak" => Self::Damped { lambda: damping },
+            "blockwise" | "bw" => Self::Blockwise { lambda: damping },
+            _ => Self::Identity,
+        }
+    }
+
+    /// The FIM block layout this spec fits over: per-layer blocks for the
+    /// blockwise family (when the geometry records layers), one monolithic
+    /// `[k]` block otherwise.
+    pub fn layout_for(&self, k: usize, layer_dims: &[usize]) -> BlockLayout {
+        match self {
+            Self::Blockwise { .. } if !layer_dims.is_empty() => {
+                BlockLayout::new(layer_dims.to_vec())
+            }
+            _ => BlockLayout::new(vec![k]),
+        }
+    }
+
+    /// Build the solver from already-accumulated per-block FIMs (one
+    /// `k_l × k_l` matrix per layout block; ignored for identity).
+    pub fn build(&self, fims: &[Vec<f32>], layout: &BlockLayout) -> Result<Box<dyn Preconditioner>> {
+        let k = layout.total();
+        match self {
+            Self::Identity => Ok(Box::new(IdentityPrecond { k })),
+            Self::Damped { lambda } | Self::Blockwise { lambda } => {
+                ensure!(
+                    fims.len() == layout.dims.len(),
+                    "preconditioner fit: {} FIM block(s) for a {}-block layout",
+                    fims.len(),
+                    layout.dims.len()
+                );
+                let mut factors = Vec::with_capacity(fims.len());
+                for (fim, &kl) in fims.iter().zip(&layout.dims) {
+                    ensure!(
+                        fim.len() == kl * kl,
+                        "preconditioner fit: FIM block holds {} values, expected {kl}×{kl}",
+                        fim.len()
+                    );
+                    factors.push(CholeskyFactor::factor_damped(fim, kl, *lambda)?);
+                }
+                // The label reports the *fitted structure*, not the spec
+                // variant: damped on a multi-block layout performs (and
+                // must report) per-block solves, and blockwise on a flat
+                // [k] layout is a monolithic solve.
+                let blockwise = factors.len() > 1;
+                Ok(Box::new(CholeskyPrecond {
+                    layout: layout.clone(),
+                    factors,
+                    lambda: *lambda,
+                    blockwise,
+                }))
+            }
+            Self::Eig { rank, lambda } => {
+                ensure!(
+                    fims.len() == 1 && layout.dims.len() == 1,
+                    "the eig preconditioner is monolithic, but the layout has {} blocks \
+                     (use --precond blockwise for per-layer solves)",
+                    layout.dims.len()
+                );
+                Ok(Box::new(EigPrecond::fit(&fims[0], k, *rank, *lambda)?))
+            }
+        }
+    }
+
+    /// Fit from a resident `n × k` compressed gradient matrix (the
+    /// in-memory cache path): accumulate the per-block FIMs, then
+    /// [`PrecondSpec::build`].
+    pub fn fit_mem(
+        &self,
+        grads: &[f32],
+        n: usize,
+        layout: &BlockLayout,
+    ) -> Result<Box<dyn Preconditioner>> {
+        if !self.needs_fim() {
+            return self.build(&[], layout);
+        }
+        let fims = fit_fims_mem(grads, n, layout);
+        self.build(&fims, layout)
+    }
+}
+
+/// Accumulate one FIM per layout block over a resident `n × k` matrix
+/// (the in-memory analogue of the streaming `stream_block_fims` pass).
+pub fn fit_fims_mem(grads: &[f32], n: usize, layout: &BlockLayout) -> Vec<Vec<f32>> {
+    let total = layout.total();
+    assert_eq!(grads.len(), n * total, "fit_fims_mem: matrix is not n × k");
+    if layout.dims.len() == 1 {
+        return vec![accumulate_fim(grads, n, total)];
+    }
+    layout
+        .dims
+        .iter()
+        .enumerate()
+        .map(|(l, &kl)| {
+            let off = layout.offsets[l];
+            let mut block = vec![0.0f32; n * kl];
+            for i in 0..n {
+                block[i * kl..(i + 1) * kl]
+                    .copy_from_slice(&grads[i * total + off..i * total + off + kl]);
+            }
+            accumulate_fim(&block, n, kl)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Implementations
+// ---------------------------------------------------------------------------
+
+/// No-op preconditioner: raw inner-product scoring (GradDot family).
+pub struct IdentityPrecond {
+    k: usize,
+}
+
+impl Preconditioner for IdentityPrecond {
+    fn dim(&self) -> usize {
+        self.k
+    }
+
+    fn apply_rows(&self, _buf: &mut [f32], _rows: usize) {}
+
+    fn describe(&self) -> String {
+        format!("identity(k={})", self.k)
+    }
+}
+
+/// Damped-Cholesky iFVP, monolithic or per-layout-block: each row slice
+/// `row[l]` becomes `(F_l + λI)⁻¹ row[l]` via one forward+backward solve.
+pub struct CholeskyPrecond {
+    layout: BlockLayout,
+    factors: Vec<CholeskyFactor>,
+    lambda: f64,
+    blockwise: bool,
+}
+
+impl Preconditioner for CholeskyPrecond {
+    fn dim(&self) -> usize {
+        self.layout.total()
+    }
+
+    fn apply_rows(&self, buf: &mut [f32], rows: usize) {
+        let total = self.layout.total();
+        assert!(buf.len() >= rows * total, "apply_rows: buffer too small");
+        let max_k = self.layout.dims.iter().copied().max().unwrap_or(0);
+        // One f64 work vector per call, reused across rows and blocks.
+        let mut work = vec![0.0f64; max_k];
+        for row in buf[..rows * total].chunks_mut(total) {
+            for (l, factor) in self.factors.iter().enumerate() {
+                let (s, e) = (self.layout.offsets[l], self.layout.offsets[l + 1]);
+                let seg = &mut row[s..e];
+                for (w, &v) in work.iter_mut().zip(seg.iter()) {
+                    *w = v as f64;
+                }
+                factor.solve_into(&mut work[..e - s]);
+                for (v, &w) in seg.iter_mut().zip(work.iter()) {
+                    *v = w as f32;
+                }
+            }
+        }
+    }
+
+    fn describe(&self) -> String {
+        if self.blockwise {
+            format!(
+                "blockwise-cholesky(blocks={}, k={}, λ={:e})",
+                self.factors.len(),
+                self.layout.total(),
+                self.lambda
+            )
+        } else {
+            format!(
+                "damped-cholesky(k={}, λ={:e})",
+                self.layout.total(),
+                self.lambda
+            )
+        }
+    }
+}
+
+/// Eigen-truncated low-rank inverse: with `F̂ = Σ_j λ_j v_j v_jᵀ`,
+///
+/// `(F̂ + λI)⁻¹ g  ≈  g/λ + Σ_{r<rank} (1/(λ_r+λ) − 1/λ) v_r ⟨v_r, g⟩`
+///
+/// — exact when the dropped eigenvalues are zero (so exact at full rank),
+/// O(k·rank) per row instead of O(k²). The LoRIF-style option for large k.
+pub struct EigPrecond {
+    k: usize,
+    rank: usize,
+    lambda: f64,
+    /// Top-`rank` eigenvectors, row-major `rank × k` (f64 so the rank-`k`
+    /// path matches the f64 Cholesky solve to f32 precision).
+    vectors: Vec<f64>,
+    /// `1/(λ_r + λ) − 1/λ` per kept eigenpair.
+    weights: Vec<f64>,
+}
+
+impl EigPrecond {
+    /// Eigendecompose a `k × k` FIM and keep the top `rank` pairs
+    /// (clamped to `k`). Requires `λ > 0`: the truncated tail is scaled
+    /// by `1/λ`.
+    pub fn fit(fim: &[f32], k: usize, rank: usize, lambda: f64) -> Result<Self> {
+        ensure!(k > 0, "eig preconditioner needs k > 0");
+        ensure!(fim.len() == k * k, "eig fit: FIM is not k × k");
+        ensure!(
+            lambda > 0.0,
+            "eig preconditioner needs damping λ > 0 (the truncated tail is scaled by 1/λ), got {lambda}"
+        );
+        ensure!(rank >= 1, "eig rank must be ≥ 1");
+        let rank = rank.min(k);
+        let e = eigh(fim, k);
+        let vectors = e.vectors[..rank * k].to_vec();
+        let weights = e.values[..rank]
+            .iter()
+            .map(|&l| 1.0 / (l.max(0.0) + lambda) - 1.0 / lambda)
+            .collect();
+        Ok(Self {
+            k,
+            rank,
+            lambda,
+            vectors,
+            weights,
+        })
+    }
+}
+
+impl Preconditioner for EigPrecond {
+    fn dim(&self) -> usize {
+        self.k
+    }
+
+    fn apply_rows(&self, buf: &mut [f32], rows: usize) {
+        let k = self.k;
+        assert!(buf.len() >= rows * k, "apply_rows: buffer too small");
+        let inv_l = 1.0 / self.lambda;
+        // Per-call scratch, reused across rows.
+        let mut coef = vec![0.0f64; self.rank];
+        let mut work = vec![0.0f64; k];
+        for row in buf[..rows * k].chunks_mut(k) {
+            for (r, c) in coef.iter_mut().enumerate() {
+                let vrow = &self.vectors[r * k..(r + 1) * k];
+                let dot: f64 = vrow.iter().zip(row.iter()).map(|(a, &b)| a * b as f64).sum();
+                *c = self.weights[r] * dot;
+            }
+            for (w, &v) in work.iter_mut().zip(row.iter()) {
+                *w = v as f64 * inv_l;
+            }
+            for (r, &c) in coef.iter().enumerate() {
+                if c == 0.0 {
+                    continue;
+                }
+                let vrow = &self.vectors[r * k..(r + 1) * k];
+                for (w, &vv) in work.iter_mut().zip(vrow) {
+                    *w += c * vv;
+                }
+            }
+            for (v, &w) in row.iter_mut().zip(work.iter()) {
+                *v = w as f32;
+            }
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "eig(r={}, k={}, λ={:e})",
+            self.rank, self.k, self.lambda
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persisted artifacts
+// ---------------------------------------------------------------------------
+
+/// Provenance + cost stats of an engine's fitted second-order state,
+/// reported through [`super::Attributor::precond_stats`].
+#[derive(Debug, Clone, Default)]
+pub struct PrecondStats {
+    /// Rows streamed (or scanned in memory) by the FIM fit pass — `0`
+    /// when a persisted [`PrecondArtifact`] made the pass unnecessary.
+    pub fim_rows: usize,
+    /// [`Preconditioner::describe`] of the fitted solver(s).
+    pub describe: String,
+}
+
+const ARTIFACT_MAGIC: &[u8; 8] = b"GRSPRE1\n";
+
+/// The persisted solver artifact (`precond.bin` next to `store.json`): the
+/// per-block FIMs a [`PrecondSpec`] fits from, plus the provenance needed
+/// to reject a stale or mismatched reuse (method, seed, k, row count).
+///
+/// Persisting the *FIMs* rather than a single factorisation is deliberate:
+/// one artifact serves every solver family and every damping — `damped:λ`,
+/// `eig:r,λ`, and the whole `--damping grid` all build from the same file
+/// without touching the train rows again.
+#[derive(Debug, Clone)]
+pub struct PrecondArtifact {
+    /// Method spec string of the store the FIMs were fitted on.
+    pub method: String,
+    /// Projection seed of that store.
+    pub seed: u64,
+    /// Row width.
+    pub k: usize,
+    /// Per-block dims the FIMs were accumulated over.
+    pub layout: Vec<usize>,
+    /// Rows folded into the FIMs (must equal the store's `n` at reuse).
+    pub rows: usize,
+    /// One row-major `k_l × k_l` FIM per layout block.
+    pub fims: Vec<Vec<f32>>,
+}
+
+impl PrecondArtifact {
+    /// `precond.bin` path inside a store directory.
+    pub fn path(dir: impl AsRef<Path>) -> PathBuf {
+        dir.as_ref().join(PRECOND_FILE)
+    }
+
+    /// Fit the artifact by streaming the store's rows once (shard-parallel
+    /// FIM accumulation under the opts' byte budget). Fits over the whole
+    /// store — row-group selections refit at attribute time instead.
+    pub fn fit(reader: &StoreReader, opts: &StreamOpts, layout: &BlockLayout) -> Result<Self> {
+        ensure!(
+            opts.groups.is_none(),
+            "preconditioner artifacts are fitted over the whole store; \
+             row-group selections refit on the selected rows at attribute time"
+        );
+        let (fims, rows) = stream_block_fims(reader, opts, layout)?;
+        Ok(Self {
+            method: reader.meta.method.clone(),
+            seed: reader.meta.seed,
+            k: reader.meta.k,
+            layout: layout.dims.clone(),
+            rows,
+            fims,
+        })
+    }
+
+    /// The block layout the FIMs were accumulated over.
+    pub fn block_layout(&self) -> BlockLayout {
+        BlockLayout::new(self.layout.clone())
+    }
+
+    /// Reject reuse against a store the artifact was not fitted on:
+    /// method, seed, row-width, and row-count mismatches are descriptive
+    /// errors naming both sides (`open_checked`-style).
+    pub fn validate_store(&self, meta: &StoreMeta) -> Result<()> {
+        if self.method != meta.method {
+            bail!(
+                "precond artifact was fitted on method '{}' but the store records '{}' — \
+                 refit with `grass fit`",
+                self.method,
+                meta.method
+            );
+        }
+        if self.seed != meta.seed {
+            bail!(
+                "precond artifact was fitted with seed {} but the store records seed {} — \
+                 refit with `grass fit`",
+                self.seed,
+                meta.seed
+            );
+        }
+        if self.k != meta.k {
+            bail!(
+                "precond artifact was fitted for k = {} but the store rows have k = {} — \
+                 refit with `grass fit`",
+                self.k,
+                meta.k
+            );
+        }
+        if self.rows != meta.n {
+            bail!(
+                "precond artifact was fitted over {} rows but the store now has {} — \
+                 the FIM is stale; refit with `grass fit`",
+                self.rows,
+                meta.n
+            );
+        }
+        Ok(())
+    }
+
+    /// Reject reuse under a different block layout (a monolithic artifact
+    /// cannot serve per-layer solves, and vice versa).
+    pub fn validate_layout(&self, layout: &BlockLayout) -> Result<()> {
+        if self.layout != layout.dims {
+            bail!(
+                "precond artifact was fitted with block layout {:?} but this attribution \
+                 needs {:?} — refit with `grass fit --precond …` or pass --no-artifact",
+                self.layout,
+                layout.dims
+            );
+        }
+        Ok(())
+    }
+
+    /// Write `precond.bin` into a store directory; returns the path.
+    ///
+    /// Layout: 8-byte magic, u32 LE header length, JSON header (method,
+    /// seed, k, rows, layout), then each block's FIM as little-endian f32.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<PathBuf> {
+        let path = Self::path(&dir);
+        let header = Json::obj(vec![
+            ("method", Json::Str(self.method.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("rows", Json::Num(self.rows as f64)),
+            ("layout", Json::arr_usize(&self.layout)),
+        ])
+        .to_string_pretty();
+        let payload_len: usize = self.fims.iter().map(|f| f.len() * 4).sum();
+        let mut bytes = Vec::with_capacity(8 + 4 + header.len() + payload_len);
+        bytes.extend_from_slice(ARTIFACT_MAGIC);
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for fim in &self.fims {
+            for &v in fim {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(&path, bytes)
+            .with_context(|| format!("writing precond artifact {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load `precond.bin` from a store directory, verifying the magic,
+    /// header, and payload length. Every buffer below is sized by header
+    /// fields, so each size is bounded against the actual file length
+    /// *before* allocating — a corrupted header is a descriptive error,
+    /// not a multi-gigabyte allocation attempt.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = Self::path(&dir);
+        let mut f = std::fs::File::open(&path)
+            .with_context(|| format!("opening precond artifact {}", path.display()))?;
+        let file_len = f.metadata()?.len();
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)
+            .with_context(|| format!("precond artifact {} is truncated", path.display()))?;
+        ensure!(
+            magic == *ARTIFACT_MAGIC,
+            "{} is not a precond artifact (bad magic)",
+            path.display()
+        );
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as u64;
+        ensure!(
+            hlen <= file_len.saturating_sub(12),
+            "precond artifact {}: header claims {hlen} bytes but the file holds {file_len}",
+            path.display()
+        );
+        let mut hbytes = vec![0u8; hlen as usize];
+        f.read_exact(&mut hbytes)
+            .with_context(|| format!("precond artifact {}: truncated header", path.display()))?;
+        let header = Json::parse(std::str::from_utf8(&hbytes)?)?;
+        let layout: Vec<usize> = header
+            .req("layout")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("precond artifact: bad layout"))?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        ensure!(!layout.is_empty(), "precond artifact: empty layout");
+        let k = header
+            .req("k")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("precond artifact: bad k"))?;
+        let total: usize = layout.iter().sum();
+        ensure!(
+            total == k,
+            "precond artifact {}: layout {layout:?} totals {total} but the header records k = {k}",
+            path.display()
+        );
+        // Exact-length check (u128: immune to kl² overflow on hostile
+        // headers) — also rejects trailing garbage.
+        let payload: u128 = layout.iter().map(|&kl| (kl as u128) * (kl as u128) * 4).sum();
+        let expected = 12u128 + hlen as u128 + payload;
+        ensure!(
+            file_len as u128 == expected,
+            "precond artifact {}: {file_len} bytes on disk but the header implies {expected}",
+            path.display()
+        );
+        let mut fims = Vec::with_capacity(layout.len());
+        for &kl in &layout {
+            let mut raw = vec![0u8; kl * kl * 4];
+            f.read_exact(&mut raw).with_context(|| {
+                format!(
+                    "precond artifact {}: truncated FIM payload (block of {kl}×{kl})",
+                    path.display()
+                )
+            })?;
+            fims.push(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            );
+        }
+        Ok(Self {
+            method: header.req("method")?.as_str().unwrap_or("").to_string(),
+            seed: header.req("seed")?.as_u64().unwrap_or(0),
+            k,
+            rows: header
+                .req("rows")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("precond artifact: bad rows"))?,
+            layout,
+            fims,
+        })
+    }
+
+    /// Load the artifact if `precond.bin` exists in `dir`; `Ok(None)` when
+    /// absent, `Err` when present but unreadable.
+    pub fn load_if_present(dir: impl AsRef<Path>) -> Result<Option<Self>> {
+        if Self::path(&dir).exists() {
+            Ok(Some(Self::load(dir)?))
+        } else {
+            Ok(None)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Damping selection (App. B.2)
+// ---------------------------------------------------------------------------
+
+/// The paper's damping grid search, scored by LDS on held-out subsets:
+/// every λ in [`select::DAMPING_GRID`] builds from the *same* fitted FIMs
+/// (no re-streaming) and is evaluated by how well the resulting scores
+/// rank counterfactual subset losses.
+pub mod select {
+    use super::*;
+    use crate::attrib::graddot::graddot_scores;
+    use crate::eval::lds::lds_score;
+    use crate::sketch::rng::Pcg;
+
+    /// Candidate damping grid from the paper:
+    /// λ ∈ {1e-7, …, 1e-1, 1, 10, 100} (App. B.2).
+    pub const DAMPING_GRID: &[f64] = &[
+        1e-7, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0,
+    ];
+
+    /// One grid point: the λ and its held-out score (`None` when the
+    /// solver failed to fit or the score was undefined at this λ).
+    #[derive(Debug, Clone)]
+    pub struct GridEntry {
+        pub lambda: f64,
+        pub lds: Option<f64>,
+    }
+
+    /// Full grid-search outcome, recorded in the run report.
+    #[derive(Debug, Clone)]
+    pub struct GridReport {
+        pub entries: Vec<GridEntry>,
+        pub best_lambda: f64,
+        pub best_lds: f64,
+    }
+
+    /// Run `eval` for every grid λ on solvers built from the same FIMs;
+    /// keep the best. Errors if no λ produced a finite score.
+    pub fn grid_search(
+        base: &PrecondSpec,
+        fims: &[Vec<f32>],
+        layout: &BlockLayout,
+        mut eval: impl FnMut(&dyn Preconditioner) -> Option<f64>,
+    ) -> Result<GridReport> {
+        ensure!(
+            base.needs_fim(),
+            "the identity preconditioner has no damping to select"
+        );
+        let mut entries = Vec::with_capacity(DAMPING_GRID.len());
+        let mut best = (f64::NAN, f64::NEG_INFINITY);
+        for &lambda in DAMPING_GRID {
+            let spec = base.with_lambda(lambda);
+            let val = match spec.build(fims, layout) {
+                Ok(pre) => eval(pre.as_ref()).filter(|v| v.is_finite()),
+                Err(_) => None, // not PD at this λ
+            };
+            if let Some(v) = val {
+                if v > best.1 {
+                    best = (lambda, v);
+                }
+            }
+            entries.push(GridEntry { lambda, lds: val });
+        }
+        ensure!(
+            best.1.is_finite(),
+            "damping grid search: no λ in the grid produced a valid preconditioner and score"
+        );
+        Ok(GridReport {
+            entries,
+            best_lambda: best.0,
+            best_lds: best.1,
+        })
+    }
+
+    /// Grid search scored by [`lds_score`]: for each λ the held-out
+    /// queries are preconditioned query-side (the inverse is symmetric,
+    /// so this matches cache-side preconditioning at O(m·k²) instead of
+    /// O(n·k²) per λ) and scored against the held-out train rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn grid_by_lds(
+        base: &PrecondSpec,
+        fims: &[Vec<f32>],
+        layout: &BlockLayout,
+        train: &[f32],
+        n: usize,
+        queries: &[f32],
+        m: usize,
+        subsets: &[Vec<usize>],
+        subset_losses: &[f32],
+    ) -> Result<GridReport> {
+        let k = layout.total();
+        ensure!(train.len() == n * k, "grid_by_lds: train is not n × k");
+        ensure!(queries.len() == m * k, "grid_by_lds: queries are not m × k");
+        grid_search(base, fims, layout, |pre| {
+            let mut q = queries.to_vec();
+            pre.apply_rows(&mut q, m);
+            let scores = graddot_scores(train, n, k, &q, m);
+            let (lds, _) = lds_score(&scores, n, m, subsets, subset_losses);
+            Some(lds)
+        })
+    }
+
+    /// Counterfactual subset losses from the synthetic class datamodel:
+    /// retraining on subset `S` lowers query `q`'s loss in proportion to
+    /// the same-class mass of `S` (train row `i` belongs to class
+    /// `i % n_classes`, the synthetic substrate's layout). A small
+    /// deterministic jitter breaks rank ties between subsets of equal
+    /// class mass.
+    pub fn class_proxy_losses(
+        subsets: &[Vec<usize>],
+        n_classes: usize,
+        query_classes: &[usize],
+        jitter_seed: u64,
+    ) -> Vec<f32> {
+        let m = query_classes.len();
+        let mut rng = Pcg::new(jitter_seed ^ 0x10d5);
+        let mut out = vec![0.0f32; subsets.len() * m];
+        for (s, subset) in subsets.iter().enumerate() {
+            for (q, &cq) in query_classes.iter().enumerate() {
+                let hits = subset.iter().filter(|&&i| i % n_classes == cq).count();
+                out[s * m + q] = -(hits as f32) + 1e-3 * rng.next_gaussian();
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    fn gaussian(rows: usize, k: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        (0..rows * k).map(|_| rng.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn spec_parse_roundtrips_and_rejects_garbage() {
+        for s in [
+            "identity",
+            "damped:1e-3",
+            "damped:5e-1",
+            "eig:8,1e-3",
+            "eig:64,1e1",
+            "blockwise:1e-2",
+        ] {
+            let spec = PrecondSpec::parse(s).unwrap();
+            let canon = spec.spec_string();
+            assert_eq!(PrecondSpec::parse(&canon).unwrap(), spec, "{s} vs {canon}");
+        }
+        // Omitted λ fills from the default.
+        assert_eq!(
+            PrecondSpec::parse_with("damped", 0.25).unwrap(),
+            PrecondSpec::Damped { lambda: 0.25 }
+        );
+        assert_eq!(
+            PrecondSpec::parse_with("eig:4", 0.5).unwrap(),
+            PrecondSpec::Eig {
+                rank: 4,
+                lambda: 0.5
+            }
+        );
+        assert!(PrecondSpec::parse("bogus").is_err());
+        assert!(PrecondSpec::parse("eig").is_err());
+        assert!(PrecondSpec::parse("eig:0").is_err());
+        assert!(PrecondSpec::parse("damped:abc").is_err());
+        assert!(PrecondSpec::parse("identity:1e-3").is_err());
+    }
+
+    #[test]
+    fn identity_is_a_noop() {
+        let layout = BlockLayout::new(vec![4]);
+        let pre = PrecondSpec::Identity.build(&[], &layout).unwrap();
+        let mut buf = vec![1.0f32, -2.0, 3.0, 4.0];
+        let orig = buf.clone();
+        pre.apply_rows(&mut buf, 1);
+        assert_eq!(buf, orig);
+        assert!(pre.describe().contains("identity"));
+    }
+
+    #[test]
+    fn damped_matches_direct_cholesky_solve() {
+        let (n, k) = (30, 8);
+        let g = gaussian(n, k, 1);
+        let layout = BlockLayout::new(vec![k]);
+        let fims = fit_fims_mem(&g, n, &layout);
+        let pre = PrecondSpec::Damped { lambda: 0.1 }
+            .build(&fims, &layout)
+            .unwrap();
+        let f = CholeskyFactor::factor_damped(&fims[0], k, 0.1).unwrap();
+        let mut rows = gaussian(3, k, 2);
+        let orig = rows.clone();
+        pre.apply_rows(&mut rows, 3);
+        for i in 0..3 {
+            let want = f.solve_f32(&orig[i * k..(i + 1) * k]);
+            for j in 0..k {
+                assert!((rows[i * k + j] - want[j]).abs() < 1e-6, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn blockwise_blocks_solve_independently() {
+        let (n, k) = (24, 10);
+        let g = gaussian(n, k, 3);
+        let layout = BlockLayout::new(vec![4, 6]);
+        let fims = fit_fims_mem(&g, n, &layout);
+        assert_eq!(fims[0].len(), 16);
+        assert_eq!(fims[1].len(), 36);
+        let pre = PrecondSpec::Blockwise { lambda: 0.2 }
+            .build(&fims, &layout)
+            .unwrap();
+        // Zeroing block 2 of the input leaves block 1 of the output
+        // unchanged (block-diagonal solves are independent).
+        let mut a = gaussian(2, k, 4);
+        let mut b = a.clone();
+        for row in b.chunks_mut(k) {
+            for v in &mut row[4..] {
+                *v = 0.0;
+            }
+        }
+        pre.apply_rows(&mut a, 2);
+        pre.apply_rows(&mut b, 2);
+        for i in 0..2 {
+            for j in 0..4 {
+                assert!((a[i * k + j] - b[i * k + j]).abs() < 1e-6, "({i},{j})");
+            }
+        }
+        assert!(pre.describe().contains("blockwise"));
+    }
+
+    #[test]
+    fn eig_full_rank_matches_damped_cholesky() {
+        let (n, k) = (40, 12);
+        let g = gaussian(n, k, 5);
+        let layout = BlockLayout::new(vec![k]);
+        let fims = fit_fims_mem(&g, n, &layout);
+        let damped = PrecondSpec::Damped { lambda: 0.05 }
+            .build(&fims, &layout)
+            .unwrap();
+        let eig = PrecondSpec::Eig {
+            rank: k,
+            lambda: 0.05,
+        }
+        .build(&fims, &layout)
+        .unwrap();
+        let rows = gaussian(5, k, 6);
+        let mut a = rows.clone();
+        let mut b = rows;
+        damped.apply_rows(&mut a, 5);
+        eig.apply_rows(&mut b, 5);
+        for i in 0..5 * k {
+            assert!(
+                (a[i] - b[i]).abs() <= 1e-4 * (1.0 + a[i].abs()),
+                "at {i}: damped {} vs eig {}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+
+    #[test]
+    fn eig_truncation_exact_on_low_rank_fim() {
+        // A rank-1 FIM: the rank-1 eig inverse is *exact*, not approximate.
+        let k = 6;
+        let u: Vec<f32> = (0..k).map(|i| (i as f32 + 1.0) * 0.3).collect();
+        let mut fim = vec![0.0f32; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                fim[i * k + j] = u[i] * u[j];
+            }
+        }
+        let layout = BlockLayout::new(vec![k]);
+        let damped = PrecondSpec::Damped { lambda: 0.5 }
+            .build(&[fim.clone()], &layout)
+            .unwrap();
+        let eig1 = PrecondSpec::Eig {
+            rank: 1,
+            lambda: 0.5,
+        }
+        .build(&[fim], &layout)
+        .unwrap();
+        let rows = gaussian(4, k, 7);
+        let mut a = rows.clone();
+        let mut b = rows;
+        damped.apply_rows(&mut a, 4);
+        eig1.apply_rows(&mut b, 4);
+        for i in 0..4 * k {
+            assert!(
+                (a[i] - b[i]).abs() <= 1e-4 * (1.0 + a[i].abs()),
+                "at {i}: {} vs {}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+
+    #[test]
+    fn eig_requires_positive_damping_and_monolithic_layout() {
+        let k = 4;
+        let fim = vec![0.0f32; k * k];
+        assert!(EigPrecond::fit(&fim, k, 2, 0.0).is_err());
+        let layout = BlockLayout::new(vec![2, 2]);
+        let err = PrecondSpec::Eig {
+            rank: 2,
+            lambda: 0.1,
+        }
+        .build(&[vec![0.0; 4], vec![0.0; 4]], &layout);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn artifact_roundtrips_and_validates() {
+        let dir = std::env::temp_dir().join(format!("grass_precond_art_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let art = PrecondArtifact {
+            method: "rm:k=4".into(),
+            seed: 7,
+            k: 4,
+            layout: vec![2, 2],
+            rows: 99,
+            fims: vec![vec![1.0, 0.5, 0.5, 2.0], vec![3.0, 0.0, 0.0, 4.0]],
+        };
+        let path = art.save(&dir).unwrap();
+        assert!(path.ends_with(PRECOND_FILE));
+        let back = PrecondArtifact::load(&dir).unwrap();
+        assert_eq!(back.method, art.method);
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.k, 4);
+        assert_eq!(back.layout, vec![2, 2]);
+        assert_eq!(back.rows, 99);
+        assert_eq!(back.fims, art.fims);
+
+        // Validation rejects every provenance mismatch descriptively.
+        let meta = |method: &str, seed, k, n| StoreMeta {
+            k,
+            n,
+            shard_rows: 8,
+            method: method.into(),
+            seed,
+            model: String::new(),
+            input_dim: 0,
+            layer_dims: vec![],
+            density: 1.0,
+        };
+        assert!(back.validate_store(&meta("rm:k=4", 7, 4, 99)).is_ok());
+        let e = format!("{:#}", back.validate_store(&meta("sjlt:k=4,s=1", 7, 4, 99)).unwrap_err());
+        assert!(e.contains("rm:k=4") && e.contains("sjlt:k=4,s=1"), "{e}");
+        let e = format!("{:#}", back.validate_store(&meta("rm:k=4", 8, 4, 99)).unwrap_err());
+        assert!(e.contains('7') && e.contains('8'), "{e}");
+        let e = format!("{:#}", back.validate_store(&meta("rm:k=4", 7, 5, 99)).unwrap_err());
+        assert!(e.contains("k = 4") && e.contains("k = 5"), "{e}");
+        let e = format!("{:#}", back.validate_store(&meta("rm:k=4", 7, 4, 100)).unwrap_err());
+        assert!(e.contains("99") && e.contains("100"), "{e}");
+        assert!(back.validate_layout(&BlockLayout::new(vec![2, 2])).is_ok());
+        assert!(back.validate_layout(&BlockLayout::new(vec![4])).is_err());
+
+        // A non-artifact file is rejected on the magic.
+        std::fs::write(PrecondArtifact::path(&dir), b"not an artifact").unwrap();
+        assert!(PrecondArtifact::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn grid_search_records_every_lambda_and_picks_best() {
+        let (n, k) = (30, 6);
+        let g = gaussian(n, k, 11);
+        let layout = BlockLayout::new(vec![k]);
+        let fims = fit_fims_mem(&g, n, &layout);
+        // Toy eval that peaks at λ = 1e-3 (the grid visits λ in order and
+        // this FIM is PD at every grid damping, so the counter tracks λ).
+        let mut idx = 0usize;
+        let report = select::grid_search(
+            &PrecondSpec::Damped { lambda: 1.0 },
+            &fims,
+            &layout,
+            |_pre| {
+                let lam = select::DAMPING_GRID[idx];
+                idx += 1;
+                Some(-(lam.log10() + 3.0).abs())
+            },
+        )
+        .unwrap();
+        assert_eq!(report.entries.len(), select::DAMPING_GRID.len());
+        assert!((report.best_lambda - 1e-3).abs() < 1e-12);
+        // Identity has nothing to select.
+        assert!(select::grid_search(&PrecondSpec::Identity, &fims, &layout, |_| Some(0.0)).is_err());
+    }
+
+    #[test]
+    fn class_proxy_losses_track_subset_class_mass() {
+        let subsets = vec![vec![0, 4, 8], vec![1, 2, 3]]; // 3 vs 0 class-0 rows (4 classes)
+        let losses = select::class_proxy_losses(&subsets, 4, &[0], 1);
+        assert!(losses[0] < losses[1], "{losses:?}");
+    }
+}

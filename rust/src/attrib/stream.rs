@@ -1,5 +1,7 @@
-//! Out-of-core streaming attribution: the shard-at-a-time ingest and
-//! scoring passes behind [`Attributor::cache_stream`].
+//! Out-of-core streaming attribution — the shard-at-a-time ingest and
+//! scoring passes behind [`Attributor::cache_stream`] — plus the shared
+//! `DualCache` every scorer composes with a
+//! [`Preconditioner`](super::precond::Preconditioner).
 //!
 //! The in-memory path materialises the full `n × k` compressed-gradient
 //! matrix; at the ROADMAP's million-row scale that matrix is the largest
@@ -8,13 +10,16 @@
 //! consumers of a dense matrix:
 //!
 //! 1. **Ingest** ([`Attributor::cache_stream`]) — stream the selected row
-//!    blocks, folding each into per-block Gram/FIM accumulators (for the
-//!    preconditioned scorers) and the eagerly computed self-influence
-//!    diagonal. Only O(k²) Gram state plus an O(n) diagonal stay resident.
+//!    blocks, folding each into per-block FIM accumulators (when the
+//!    engine's [`PrecondSpec`] needs one — skipped entirely when a
+//!    persisted [`PrecondArtifact`] is supplied) and the eagerly computed
+//!    self-influence diagonal. Only O(k²) solver state plus an O(n)
+//!    diagonal stay resident.
 //! 2. **Score** ([`Attributor::attribute`]) — re-stream the store:
-//!    each worker preconditions its block in place and scores it against
-//!    the query matrix with the tiled GEMM, writing score columns
-//!    incrementally. Workers never hold more than one block.
+//!    each worker preconditions its block in place
+//!    ([`Preconditioner::apply_rows`](super::precond::Preconditioner::apply_rows))
+//!    and scores it against the query matrix with the tiled GEMM, writing
+//!    score columns incrementally. Workers never hold more than one block.
 //!
 //! [`StreamOpts::mem_budget`] bounds the resident streaming buffers:
 //! `workers × chunk_rows × k × 4 bytes × 2` (each worker owns one row
@@ -32,14 +37,15 @@
 //! [`Attributor::attribute`]: super::Attributor::attribute
 
 use super::blockwise::BlockLayout;
-use super::fim::{FimAccumulator, Preconditioner};
+use super::fim::FimAccumulator;
+use super::precond::{apply_rows_parallel, PrecondArtifact, PrecondSpec, Preconditioner};
 use crate::store::{RowGroups, StoreReader};
 use crate::util::par;
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::ops::Range;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Default streaming buffer budget: 256 MiB.
 pub const DEFAULT_MEM_BUDGET: usize = 256 << 20;
@@ -56,6 +62,10 @@ pub struct StreamOpts {
     /// Optional row-group selection: scores and self-influence aggregate
     /// into one column per group instead of one per train row.
     pub groups: Option<RowGroups>,
+    /// Optional persisted solver artifact (`precond.bin`): when set and
+    /// valid for the store, the FIM ingest pass is skipped entirely and
+    /// the preconditioner is built from the artifact's fitted FIMs.
+    pub artifact: Option<Arc<PrecondArtifact>>,
 }
 
 impl Default for StreamOpts {
@@ -64,6 +74,7 @@ impl Default for StreamOpts {
             mem_budget: DEFAULT_MEM_BUDGET,
             workers: 0,
             groups: None,
+            artifact: None,
         }
     }
 }
@@ -120,26 +131,32 @@ impl StreamOpts {
     }
 }
 
-/// Precondition a row-major chunk in place, block by block:
-/// `row[l] ← (F_l + λI)⁻¹ row[l]`. An empty `pres` is the identity (the
+/// Row-wise `⟨raw_i, pre_i⟩` — the self-influence diagonal shared by every
+/// engine's in-memory ingest (`pre == raw` for the identity family gives
+/// the squared norms).
+pub(crate) fn rowwise_dot(raw: &[f32], pre: &[f32], n: usize, k: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            raw[i * k..(i + 1) * k]
+                .iter()
+                .zip(&pre[i * k..(i + 1) * k])
+                .map(|(a, b)| a * b)
+                .sum()
+        })
+        .collect()
+}
+
+/// Precondition a row-major chunk in place; `None` is the identity (the
 /// GradDot family scores raw rows).
 pub(crate) fn precondition_chunk(
     buf: &mut [f32],
     rows: usize,
-    layout: &BlockLayout,
-    pres: &[Preconditioner],
+    k: usize,
+    pre: Option<&dyn Preconditioner>,
 ) {
-    if pres.is_empty() {
-        return;
-    }
-    debug_assert_eq!(pres.len(), layout.dims.len());
-    let total = layout.total();
-    for row in buf[..rows * total].chunks_mut(total) {
-        for (l, pre) in pres.iter().enumerate() {
-            let (s, e) = (layout.offsets[l], layout.offsets[l + 1]);
-            let solved = pre.apply(&row[s..e]);
-            row[s..e].copy_from_slice(&solved);
-        }
+    if let Some(p) = pre {
+        debug_assert_eq!(p.dim(), k);
+        p.apply_rows(&mut buf[..rows * k], rows);
     }
 }
 
@@ -147,6 +164,12 @@ pub(crate) fn precondition_chunk(
 /// `k_l × k_l` FIM per layout block over the selected rows, shard-parallel
 /// with per-worker [`FimAccumulator`]s merged at the end. Returns the
 /// per-block FIMs plus the number of rows folded in.
+///
+/// Rows whose block slice is sparse enough
+/// ([`crate::sketch::sparse::should_dispatch_sparse`]) take the
+/// accumulator's O(nnz²) sparse fast path via a per-worker index/value
+/// scratch — sparse caches (e.g. `grass cache --density`) fit their FIMs
+/// in nnz-proportional time.
 ///
 /// This owns its worker pool instead of going through
 /// `StoreReader::par_for_each_block` because it needs long-lived
@@ -181,6 +204,8 @@ pub(crate) fn stream_block_fims(
                     let mut accs: Vec<FimAccumulator> =
                         layout.dims.iter().map(|&d| FimAccumulator::new(d)).collect();
                     let mut buf = vec![0.0f32; max_rows * k];
+                    let mut sidx: Vec<u32> = Vec::new();
+                    let mut svals: Vec<f32> = Vec::new();
                     let mut seen = 0usize;
                     loop {
                         if error.lock().unwrap().is_some() {
@@ -201,7 +226,21 @@ pub(crate) fn stream_block_fims(
                         }
                         for row in buf[..b.rows * k].chunks(k) {
                             for (l, acc) in accs.iter_mut().enumerate() {
-                                acc.add_row(layout.slice(row, l));
+                                let sl = layout.slice(row, l);
+                                let (go_sparse, _, _) = crate::sketch::sparse::probe(sl);
+                                if go_sparse {
+                                    sidx.clear();
+                                    svals.clear();
+                                    for (j, &v) in sl.iter().enumerate() {
+                                        if v != 0.0 {
+                                            sidx.push(j as u32);
+                                            svals.push(v);
+                                        }
+                                    }
+                                    acc.add_row_sparse(&sidx, &svals);
+                                } else {
+                                    acc.add_row(sl);
+                                }
                             }
                         }
                         seen += b.rows;
@@ -229,12 +268,11 @@ pub(crate) fn stream_block_fims(
 
 /// The self-influence diagonal `τ(z_i, z_i) = ⟨g_i, g̃_i⟩` over the
 /// selected rows, streamed: one entry per row, or per-group sums under
-/// grouping. `pres` empty means `g̃ = g` (plain squared norms).
+/// grouping. `pre = None` means `g̃ = g` (plain squared norms).
 pub(crate) fn stream_self_influence(
     reader: &StoreReader,
     opts: &StreamOpts,
-    layout: &BlockLayout,
-    pres: &[Preconditioner],
+    pre: Option<&dyn Preconditioner>,
 ) -> Result<Vec<f32>> {
     let k = reader.meta.k;
     let out_len = opts.out_cols(reader.meta.n);
@@ -251,14 +289,14 @@ pub(crate) fn stream_self_influence(
                 scratch.resize(data.len(), 0.0);
             }
             scratch[..data.len()].copy_from_slice(data);
-            precondition_chunk(&mut scratch[..data.len()], b.rows, layout, pres);
+            precondition_chunk(&mut scratch[..data.len()], b.rows, k, pre);
             let mut local = vec![0.0f32; b.rows];
-            for (j, (raw, pre)) in data
+            for (j, (raw, prow)) in data
                 .chunks(k)
                 .zip(scratch[..data.len()].chunks(k))
                 .enumerate()
             {
-                local[j] = raw.iter().zip(pre).map(|(a, p)| a * p).sum();
+                local[j] = raw.iter().zip(prow).map(|(a, p)| a * p).sum();
             }
             let gi = match &opts.groups {
                 Some(groups) => Some(groups.group_of(b.start).ok_or_else(|| {
@@ -295,8 +333,7 @@ pub(crate) fn stream_scores(
     opts: &StreamOpts,
     queries: &[f32],
     m: usize,
-    layout: &BlockLayout,
-    pres: &[Preconditioner],
+    pre: Option<&dyn Preconditioner>,
 ) -> Result<Vec<f32>> {
     let k = reader.meta.k;
     ensure!(
@@ -325,7 +362,7 @@ pub(crate) fn stream_scores(
         &ranges,
         opts.effective_workers(),
         |_, b, data, scratch| {
-            precondition_chunk(data, b.rows, layout, pres);
+            precondition_chunk(data, b.rows, k, pre);
             let gi = match &opts.groups {
                 Some(groups) => Some(groups.group_of(b.start).ok_or_else(|| {
                     anyhow!("row {} falls outside every row group", b.start)
@@ -377,15 +414,18 @@ pub(crate) fn stream_scores(
 }
 
 /// Scoring state an engine retains after a streamed ingest: the store
-/// handle (re-streamed at attribute time), per-block preconditioners, and
+/// handle (re-streamed at attribute time), the fitted preconditioner, and
 /// the eagerly computed self-influence diagonal. At no point does more
 /// than the budgeted buffer set of train rows sit in memory.
 pub(crate) struct StreamedCache {
     dir: PathBuf,
     opts: StreamOpts,
-    layout: BlockLayout,
-    pres: Vec<Preconditioner>,
+    k: usize,
+    pre: Option<Box<dyn Preconditioner>>,
     self_inf: Vec<f32>,
+    /// Rows the FIM ingest pass streamed (0 when a persisted artifact
+    /// made the pass unnecessary, or the spec needs no FIM).
+    fim_rows: usize,
     /// Store row count snapshot (revalidated whenever the store is
     /// re-opened for a score pass).
     n: usize,
@@ -394,13 +434,14 @@ pub(crate) struct StreamedCache {
 }
 
 impl StreamedCache {
-    /// Stream-build the cache: a FIM pass per layout block when `damping`
-    /// is set (the preconditioned scorers), then a self-influence pass.
+    /// Stream-build the cache: a FIM pass per layout block when the spec
+    /// needs one — skipped when [`StreamOpts::artifact`] supplies a
+    /// validated, already-fitted artifact — then a self-influence pass.
     pub fn build(
         reader: &StoreReader,
         opts: &StreamOpts,
         layout: BlockLayout,
-        damping: Option<f64>,
+        spec: &PrecondSpec,
     ) -> Result<Self> {
         ensure!(
             layout.total() == reader.meta.k,
@@ -411,25 +452,36 @@ impl StreamedCache {
         if let Some(g) = &opts.groups {
             g.validate(reader.meta.n)?;
         }
-        let pres = match damping {
-            Some(lambda) => {
-                let (fims, _) = stream_block_fims(reader, opts, &layout)?;
-                fims.iter()
-                    .zip(&layout.dims)
-                    .map(|(f, &kl)| Preconditioner::new(f, kl, lambda))
-                    .collect::<Result<Vec<_>>>()?
+        let (pre, fim_rows) = if spec.needs_fim() {
+            match &opts.artifact {
+                Some(art) => {
+                    ensure!(
+                        opts.groups.is_none(),
+                        "precond artifacts are fitted over the whole store; row-group \
+                         selections refit on the selected rows — drop the artifact or the groups"
+                    );
+                    art.validate_store(&reader.meta)?;
+                    art.validate_layout(&layout)?;
+                    (Some(spec.build(&art.fims, &layout)?), 0)
+                }
+                None => {
+                    let (fims, seen) = stream_block_fims(reader, opts, &layout)?;
+                    (Some(spec.build(&fims, &layout)?), seen)
+                }
             }
-            None => vec![],
+        } else {
+            (None, 0)
         };
-        let self_inf = stream_self_influence(reader, opts, &layout, &pres)?;
+        let self_inf = stream_self_influence(reader, opts, pre.as_deref())?;
         Ok(Self {
             dir: reader.dir().to_path_buf(),
+            k: reader.meta.k,
             n: reader.meta.n,
             out_cols: opts.out_cols(reader.meta.n),
             opts: opts.clone(),
-            layout,
-            pres,
+            pre,
             self_inf,
+            fim_rows,
         })
     }
 
@@ -443,14 +495,24 @@ impl StreamedCache {
         &self.self_inf
     }
 
+    /// Rows the FIM ingest pass streamed (0 under artifact reuse).
+    pub fn fim_rows(&self) -> usize {
+        self.fim_rows
+    }
+
+    /// [`Preconditioner::describe`] of the fitted solver, if any.
+    pub fn describe(&self) -> Option<String> {
+        self.pre.as_ref().map(|p| p.describe())
+    }
+
     fn reader(&self) -> Result<StoreReader> {
         let r = StoreReader::open(&self.dir)?;
         ensure!(
-            r.meta.n == self.n && r.meta.k == self.layout.total(),
+            r.meta.n == self.n && r.meta.k == self.k,
             "store at {} changed since cache_stream (was {} rows × k = {}, now {} × {})",
             self.dir.display(),
             self.n,
-            self.layout.total(),
+            self.k,
             r.meta.n,
             r.meta.k
         );
@@ -461,7 +523,143 @@ impl StreamedCache {
     /// against it, one block of train rows per worker at a time.
     pub fn scores(&self, queries: &[f32], m: usize) -> Result<Vec<f32>> {
         let reader = self.reader()?;
-        stream_scores(&reader, &self.opts, queries, m, &self.layout, &self.pres)
+        stream_scores(&reader, &self.opts, queries, m, self.pre.as_deref())
+    }
+}
+
+/// The one dual-mode cache state every scorer composes with its
+/// [`PrecondSpec`] — `preconditioner ∘ inner-product` behind two ingest
+/// modes that produce identical scores:
+///
+/// - **Mem** — the preconditioned image of an in-memory train matrix plus
+///   the eagerly computed self-influence diagonal (the raw gradients are
+///   not retained: at store scale a second copy is the difference between
+///   fitting in memory and not).
+/// - **Streamed** — a [`StreamedCache`]: O(k²) solver state plus the O(n)
+///   diagonal, rows re-streamed from the store at attribute time.
+///
+/// This replaces the five near-identical `enum … { Mem…, Streamed… }`
+/// definitions the engines used to hand-roll.
+pub(crate) enum DualCache {
+    Empty,
+    Mem {
+        /// Preconditioned `n × k` matrix `g̃ = P ĝ` (the raw matrix when
+        /// the spec is identity).
+        pre_rows: Vec<f32>,
+        self_inf: Vec<f32>,
+        n: usize,
+        fim_rows: usize,
+        describe: Option<String>,
+    },
+    Streamed(StreamedCache),
+}
+
+impl DualCache {
+    pub fn is_cached(&self) -> bool {
+        !matches!(self, DualCache::Empty)
+    }
+
+    /// In-memory ingest: fit the spec's preconditioner over `layout`
+    /// blocks of the `n × k` matrix, retain the preconditioned image and
+    /// the self-influence diagonal.
+    pub fn ingest_mem(
+        grads: &[f32],
+        n: usize,
+        layout: &BlockLayout,
+        spec: &PrecondSpec,
+    ) -> Result<Self> {
+        let k = layout.total();
+        ensure!(
+            grads.len() == n * k,
+            "cache: got {} values for n = {n} rows × k = {k}",
+            grads.len()
+        );
+        if spec.needs_fim() {
+            let pre = spec.fit_mem(grads, n, layout)?;
+            let mut img = grads.to_vec();
+            apply_rows_parallel(pre.as_ref(), &mut img, n);
+            let self_inf = rowwise_dot(grads, &img, n, k);
+            Ok(DualCache::Mem {
+                pre_rows: img,
+                self_inf,
+                n,
+                fim_rows: n,
+                describe: Some(pre.describe()),
+            })
+        } else {
+            let self_inf = rowwise_dot(grads, grads, n, k);
+            Ok(DualCache::Mem {
+                pre_rows: grads.to_vec(),
+                self_inf,
+                n,
+                fim_rows: 0,
+                describe: None,
+            })
+        }
+    }
+
+    /// Streamed ingest from a finished store (see [`StreamedCache::build`]).
+    pub fn ingest_stream(
+        reader: &StoreReader,
+        opts: &StreamOpts,
+        layout: BlockLayout,
+        spec: &PrecondSpec,
+    ) -> Result<Self> {
+        Ok(DualCache::Streamed(StreamedCache::build(
+            reader, opts, layout, spec,
+        )?))
+    }
+
+    /// Score columns this cache produces (0 when empty).
+    pub fn out_cols(&self) -> usize {
+        match self {
+            DualCache::Empty => 0,
+            DualCache::Mem { n, .. } => *n,
+            DualCache::Streamed(sc) => sc.out_cols(),
+        }
+    }
+
+    /// `m × out_cols` scores of an `m × k` query block against the cache.
+    pub fn scores(&self, queries: &[f32], m: usize, k: usize) -> Result<Vec<f32>> {
+        match self {
+            DualCache::Empty => bail!("no cached train set; call cache() first"),
+            DualCache::Mem { pre_rows, n, .. } => {
+                ensure!(
+                    queries.len() == m * k,
+                    "query block holds {} values, expected m = {m} × k = {k}",
+                    queries.len()
+                );
+                Ok(super::graddot::graddot_scores(pre_rows, *n, k, queries, m))
+            }
+            DualCache::Streamed(sc) => sc.scores(queries, m),
+        }
+    }
+
+    /// The self-influence diagonal (per row, or per group).
+    pub fn self_inf(&self) -> Result<&[f32]> {
+        match self {
+            DualCache::Empty => bail!("no cached train set; call cache() first"),
+            DualCache::Mem { self_inf, .. } => Ok(self_inf),
+            DualCache::Streamed(sc) => Ok(sc.self_inf()),
+        }
+    }
+
+    /// Rows the FIM fit pass consumed (0 under artifact reuse or identity).
+    pub fn fim_rows(&self) -> usize {
+        match self {
+            DualCache::Empty => 0,
+            DualCache::Mem { fim_rows, .. } => *fim_rows,
+            DualCache::Streamed(sc) => sc.fim_rows(),
+        }
+    }
+
+    /// The fitted solver's description, if one was fitted.
+    pub fn describe(&self) -> Option<String> {
+        match self {
+            DualCache::Empty => None,
+            DualCache::Mem { describe, .. } => describe.clone(),
+            DualCache::Streamed(sc) => sc.describe(),
+        }
     }
 }
 
@@ -496,6 +694,7 @@ mod tests {
             mem_budget: 2 * 2 * 4 * 8 * 2, // 2 workers × 2 rows × k=8 × 2 bufs
             workers: 2,
             groups: None,
+            artifact: None,
         };
         assert_eq!(o.chunk_rows(8), 2);
         assert!(o.resident_bytes(8) <= o.mem_budget);
@@ -504,6 +703,7 @@ mod tests {
             mem_budget: 1,
             workers: 1,
             groups: None,
+            artifact: None,
         };
         assert_eq!(tiny.chunk_rows(1024), 1);
     }
@@ -519,7 +719,45 @@ mod tests {
             mem_budget: 3 * 2 * 4 * k * 2,
             workers: 3,
             groups: None,
+            artifact: None,
         };
+        let (fims, seen) = stream_block_fims(&r, &opts, &layout).unwrap();
+        assert_eq!(seen, n);
+        let want = crate::attrib::fim::accumulate_fim(&rows, n, k);
+        for i in 0..k * k {
+            assert!(
+                (fims[0][i] - want[i]).abs() < 1e-5,
+                "fim[{i}]: {} vs {}",
+                fims[0][i],
+                want[i]
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn streamed_fims_sparse_rows_take_fast_path_and_match() {
+        // A store whose rows are ~5% dense: the per-row dispatch sends
+        // them through add_row_sparse, and the result still matches the
+        // dense in-memory accumulation.
+        let dir = tmpdir("fim_sparse");
+        let (n, k) = (41, 32);
+        let mut rng = Pcg::new(9);
+        let rows: Vec<f32> = (0..n * k)
+            .map(|_| {
+                if rng.next_f32() < 0.05 {
+                    rng.next_gaussian()
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let mut w = StoreWriter::create(&dir, k, "test", 0, 7).unwrap();
+        w.push_batch(&rows).unwrap();
+        w.finish().unwrap();
+        let r = StoreReader::open(&dir).unwrap();
+        let layout = BlockLayout::new(vec![k]);
+        let opts = StreamOpts::with_budget(2 * 3 * 4 * k * 2);
         let (fims, seen) = stream_block_fims(&r, &opts, &layout).unwrap();
         assert_eq!(seen, n);
         let want = crate::attrib::fim::accumulate_fim(&rows, n, k);
@@ -542,13 +780,13 @@ mod tests {
         let r = StoreReader::open(&dir).unwrap();
         let mut rng = Pcg::new(3);
         let queries: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
-        let layout = BlockLayout::new(vec![k]);
         let opts = StreamOpts {
             mem_budget: 2 * 3 * 4 * k * 2,
             workers: 2,
             groups: None,
+            artifact: None,
         };
-        let got = stream_scores(&r, &opts, &queries, m, &layout, &[]).unwrap();
+        let got = stream_scores(&r, &opts, &queries, m, None).unwrap();
         let want = crate::attrib::graddot::graddot_scores(&rows, n, k, &queries, m);
         assert_eq!(got.len(), want.len());
         for i in 0..m * n {
@@ -558,6 +796,35 @@ mod tests {
                 got[i],
                 want[i]
             );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn artifact_backed_build_skips_the_fim_pass() {
+        let dir = tmpdir("artifact");
+        let (n, k) = (30, 6);
+        let _rows = write_store(&dir, n, k, 7, 4);
+        let r = StoreReader::open(&dir).unwrap();
+        let layout = BlockLayout::new(vec![k]);
+        let spec = PrecondSpec::Damped { lambda: 0.1 };
+        let base = StreamOpts::with_budget(4096);
+        let refit = StreamedCache::build(&r, &base, layout.clone(), &spec).unwrap();
+        assert_eq!(refit.fim_rows(), n);
+
+        let art = PrecondArtifact::fit(&r, &base, &layout).unwrap();
+        let opts = StreamOpts {
+            artifact: Some(Arc::new(art)),
+            ..base
+        };
+        let reused = StreamedCache::build(&r, &opts, layout, &spec).unwrap();
+        assert_eq!(reused.fim_rows(), 0);
+        // Identical scoring state either way.
+        let mut rng = Pcg::new(5);
+        let q: Vec<f32> = (0..3 * k).map(|_| rng.next_gaussian()).collect();
+        let (a, b) = (refit.scores(&q, 3).unwrap(), reused.scores(&q, 3).unwrap());
+        for i in 0..3 * n {
+            assert!((a[i] - b[i]).abs() <= 1e-6 * (1.0 + a[i].abs()), "at {i}");
         }
         std::fs::remove_dir_all(&dir).unwrap();
     }

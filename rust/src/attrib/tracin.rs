@@ -3,11 +3,13 @@
 //! `τ(z_i, z_q) = Σ_c η_c ⟨g_i^{(c)}, g_q^{(c)}⟩` over training checkpoints
 //! `c` with learning rates `η_c`. Because it is a sum of GradDots, it
 //! composes with any [`crate::sketch::Compressor`] exactly like TRAK does —
-//! compressed checkpoint gradients drop in unchanged.
+//! compressed checkpoint gradients drop in unchanged, and any
+//! [`PrecondSpec`] turns each term into a preconditioned inner product.
 
 use super::blockwise::BlockLayout;
 use super::graddot::graddot_scores;
-use super::stream::{StreamOpts, StreamedCache};
+use super::precond::{PrecondSpec, PrecondStats};
+use super::stream::{DualCache, StreamOpts};
 use super::{check_store_width, Attributor, ScoreMatrix};
 use crate::store::{StoreMeta, StoreReader};
 use anyhow::{bail, Result};
@@ -42,12 +44,6 @@ pub fn tracin_scores(
     total.into_iter().map(|v| v as f32).collect()
 }
 
-/// One TracIn checkpoint's gradients: resident, or streamed from a store.
-enum TracinCk {
-    Mem(Vec<f32>),
-    Streamed(StreamedCache),
-}
-
 /// TracIn as a stateful [`Attributor`]: every [`Attributor::cache`] /
 /// [`Attributor::cache_stream`] call adds one checkpoint's compressed
 /// train gradients, consuming the next learning rate from the schedule
@@ -55,9 +51,10 @@ enum TracinCk {
 /// sums the lr-weighted GradDots.
 pub struct TracIn {
     k: usize,
+    precond: PrecondSpec,
     /// Learning-rate schedule consumed checkpoint-by-checkpoint.
     lrs: Vec<f32>,
-    checkpoints: Vec<(TracinCk, f32)>,
+    checkpoints: Vec<(DualCache, f32)>,
     n: usize,
 }
 
@@ -70,12 +67,36 @@ impl TracIn {
     /// Explicit learning-rate schedule (`lrs[c]` weights the c-th cached
     /// checkpoint; missing entries default to 1.0).
     pub fn with_lrs(k: usize, lrs: Vec<f32>) -> Self {
+        Self::with_precond(k, lrs, PrecondSpec::Identity)
+    }
+
+    /// TracIn with an explicit per-checkpoint preconditioner spec.
+    pub fn with_precond(k: usize, lrs: Vec<f32>, precond: PrecondSpec) -> Self {
         Self {
             k,
+            precond,
             lrs,
             checkpoints: vec![],
             n: 0,
         }
+    }
+
+    fn layout(&self) -> BlockLayout {
+        BlockLayout::new(vec![self.k])
+    }
+
+    fn check_rows(&self, n: usize) -> Result<()> {
+        if !self.checkpoints.is_empty() && n != self.n {
+            bail!(
+                "tracin checkpoint has n = {n} train rows, previous checkpoints had {}",
+                self.n
+            );
+        }
+        Ok(())
+    }
+
+    fn next_lr(&self) -> f32 {
+        self.lrs.get(self.checkpoints.len()).copied().unwrap_or(1.0)
     }
 }
 
@@ -89,35 +110,21 @@ impl Attributor for TracIn {
     }
 
     fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
-        if !self.checkpoints.is_empty() && n != self.n {
-            bail!(
-                "tracin checkpoint has n = {n} train rows, previous checkpoints had {}",
-                self.n
-            );
-        }
-        if grads.len() != n * self.k {
-            bail!("tracin cache: got {} values for n = {n}, k = {}", grads.len(), self.k);
-        }
-        let lr = self.lrs.get(self.checkpoints.len()).copied().unwrap_or(1.0);
-        self.checkpoints.push((TracinCk::Mem(grads.to_vec()), lr));
+        self.check_rows(n)?;
+        let ck = DualCache::ingest_mem(grads, n, &self.layout(), &self.precond)?;
+        let lr = self.next_lr();
+        self.checkpoints.push((ck, lr));
         self.n = n;
         Ok(())
     }
 
     fn cache_stream(&mut self, reader: &StoreReader, opts: &StreamOpts) -> Result<StoreMeta> {
         check_store_width(self.name(), self.dim(), reader)?;
-        // GradDot family: no preconditioning, raw rows score directly.
-        let sc = StreamedCache::build(reader, opts, BlockLayout::new(vec![self.k]), None)?;
-        if !self.checkpoints.is_empty() && sc.out_cols() != self.n {
-            bail!(
-                "tracin checkpoint has n = {} train rows, previous checkpoints had {}",
-                sc.out_cols(),
-                self.n
-            );
-        }
-        let lr = self.lrs.get(self.checkpoints.len()).copied().unwrap_or(1.0);
-        self.n = sc.out_cols();
-        self.checkpoints.push((TracinCk::Streamed(sc), lr));
+        let ck = DualCache::ingest_stream(reader, opts, self.layout(), &self.precond)?;
+        self.check_rows(ck.out_cols())?;
+        let lr = self.next_lr();
+        self.n = ck.out_cols();
+        self.checkpoints.push((ck, lr));
         Ok(reader.meta.clone())
     }
 
@@ -128,10 +135,7 @@ impl Attributor for TracIn {
         let n = self.n;
         let mut total = vec![0.0f64; m * n];
         for (ck, lr) in &self.checkpoints {
-            let s = match ck {
-                TracinCk::Mem(train) => graddot_scores(train, n, self.k, queries, m),
-                TracinCk::Streamed(sc) => sc.scores(queries, m)?,
-            };
+            let s = ck.scores(queries, m, self.k)?;
             for (t, &v) in total.iter_mut().zip(&s) {
                 *t += (*lr * v) as f64;
             }
@@ -147,23 +151,24 @@ impl Attributor for TracIn {
         if self.checkpoints.is_empty() {
             bail!("tracin scorer has no cached checkpoints; call cache() first");
         }
-        let k = self.k;
-        Ok((0..self.n)
-            .map(|i| {
-                self.checkpoints
-                    .iter()
-                    .map(|(ck, lr)| {
-                        lr * match ck {
-                            TracinCk::Mem(train) => train[i * k..(i + 1) * k]
-                                .iter()
-                                .map(|v| v * v)
-                                .sum::<f32>(),
-                            TracinCk::Streamed(sc) => sc.self_inf()[i],
-                        }
-                    })
-                    .sum()
-            })
-            .collect())
+        let mut out = vec![0.0f64; self.n];
+        for (ck, lr) in &self.checkpoints {
+            for (o, &v) in out.iter_mut().zip(ck.self_inf()?) {
+                *o += (*lr * v) as f64;
+            }
+        }
+        Ok(out.into_iter().map(|v| v as f32).collect())
+    }
+
+    fn precond_stats(&self) -> PrecondStats {
+        PrecondStats {
+            fim_rows: self.checkpoints.iter().map(|(c, _)| c.fim_rows()).sum(),
+            describe: self
+                .checkpoints
+                .first()
+                .and_then(|(c, _)| c.describe())
+                .unwrap_or_else(|| self.precond.spec_string()),
+        }
     }
 }
 
@@ -221,6 +226,23 @@ mod tests {
         let b = tracin_scores(&[ck(n, m, k, 1.0, 5), ck(n, m, k, 0.0, 6)], n, m, k);
         for i in 0..m * n {
             assert!((a[i] - b[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn stateful_self_influence_is_lr_weighted_norms() {
+        let (n, k) = (5, 3);
+        let c1 = ck(n, 1, k, 1.0, 7);
+        let c2 = ck(n, 1, k, 0.5, 8);
+        let mut t = TracIn::with_lrs(k, vec![1.0, 0.5]);
+        Attributor::cache(&mut t, &c1.train, n).unwrap();
+        Attributor::cache(&mut t, &c2.train, n).unwrap();
+        let si = Attributor::self_influence(&t).unwrap();
+        for i in 0..n {
+            let n1: f32 = c1.train[i * k..(i + 1) * k].iter().map(|v| v * v).sum();
+            let n2: f32 = c2.train[i * k..(i + 1) * k].iter().map(|v| v * v).sum();
+            let want = n1 + 0.5 * n2;
+            assert!((si[i] - want).abs() < 1e-4, "at {i}: {} vs {want}", si[i]);
         }
     }
 }

@@ -5,7 +5,8 @@
 
 use super::blockwise::BlockLayout;
 use super::influence::InfluenceEngine;
-use super::stream::{StreamOpts, StreamedCache};
+use super::precond::{PrecondSpec, PrecondStats};
+use super::stream::{DualCache, StreamOpts};
 use super::{check_store_width, Attributor, ScoreMatrix};
 use crate::store::{StoreMeta, StoreReader};
 use anyhow::{bail, Result};
@@ -39,49 +40,38 @@ pub fn trak_scores(
     Ok(total.into_iter().map(|v| (v / c) as f32).collect())
 }
 
-/// One TRAK checkpoint's scoring state: the resident preconditioned
-/// matrix, or the streamed handle (per-checkpoint FIM/preconditioner with
-/// rows re-streamed from that checkpoint's store at attribute time).
-enum TrakCk {
-    Mem {
-        pre: Vec<f32>,
-        self_inf: Vec<f32>,
-    },
-    Streamed(StreamedCache),
-}
-
-impl TrakCk {
-    fn self_inf(&self) -> &[f32] {
-        match self {
-            TrakCk::Mem { self_inf, .. } => self_inf,
-            TrakCk::Streamed(sc) => sc.self_inf(),
-        }
-    }
-}
-
 /// TRAK as a stateful [`Attributor`]: every [`Attributor::cache`] /
 /// [`Attributor::cache_stream`] call adds one checkpoint's compressed
-/// train gradients (preconditioned on ingest), and
-/// [`Attributor::attribute`] averages the per-checkpoint influence
-/// scores. With a single cached checkpoint this reduces exactly to
-/// [`InfluenceEngine`].
+/// train gradients (preconditioned on ingest — each checkpoint gets its
+/// own fitted solver), and [`Attributor::attribute`] averages the
+/// per-checkpoint influence scores. With a single cached checkpoint this
+/// reduces exactly to [`InfluenceEngine`].
 pub struct Trak {
     k: usize,
-    damping: f64,
-    /// Per-checkpoint state; the raw gradients are never retained —
-    /// self-influence is computed on ingest while they are in hand.
-    checkpoints: Vec<TrakCk>,
+    precond: PrecondSpec,
+    /// Per-checkpoint dual-mode caches; the raw gradients are never
+    /// retained — self-influence is computed on ingest.
+    checkpoints: Vec<DualCache>,
     n: usize,
 }
 
 impl Trak {
     pub fn new(k: usize, damping: f64) -> Self {
+        Self::with_precond(k, PrecondSpec::Damped { lambda: damping })
+    }
+
+    /// TRAK with an explicit per-checkpoint preconditioner spec.
+    pub fn with_precond(k: usize, precond: PrecondSpec) -> Self {
         Self {
             k,
-            damping,
+            precond,
             checkpoints: vec![],
             n: 0,
         }
+    }
+
+    fn layout(&self) -> BlockLayout {
+        BlockLayout::new(vec![self.k])
     }
 
     fn check_rows(&self, n: usize) -> Result<()> {
@@ -106,25 +96,18 @@ impl Attributor for Trak {
 
     fn cache(&mut self, grads: &[f32], n: usize) -> Result<()> {
         self.check_rows(n)?;
-        let engine = InfluenceEngine::new(self.k, self.damping);
-        let pre = engine.precondition(grads, n)?;
-        let self_inf = super::influence::rowwise_dot(grads, &pre, n, self.k);
-        self.checkpoints.push(TrakCk::Mem { pre, self_inf });
+        let ck = DualCache::ingest_mem(grads, n, &self.layout(), &self.precond)?;
+        self.checkpoints.push(ck);
         self.n = n;
         Ok(())
     }
 
     fn cache_stream(&mut self, reader: &StoreReader, opts: &StreamOpts) -> Result<StoreMeta> {
         check_store_width(self.name(), self.dim(), reader)?;
-        let sc = StreamedCache::build(
-            reader,
-            opts,
-            BlockLayout::new(vec![self.k]),
-            Some(self.damping),
-        )?;
-        self.check_rows(sc.out_cols())?;
-        self.n = sc.out_cols();
-        self.checkpoints.push(TrakCk::Streamed(sc));
+        let ck = DualCache::ingest_stream(reader, opts, self.layout(), &self.precond)?;
+        self.check_rows(ck.out_cols())?;
+        self.n = ck.out_cols();
+        self.checkpoints.push(ck);
         Ok(reader.meta.clone())
     }
 
@@ -135,12 +118,7 @@ impl Attributor for Trak {
         let n = self.n;
         let mut total = vec![0.0f64; m * n];
         for ck in &self.checkpoints {
-            let s = match ck {
-                TrakCk::Mem { pre, .. } => {
-                    super::graddot::graddot_scores(pre, n, self.k, queries, m)
-                }
-                TrakCk::Streamed(sc) => sc.scores(queries, m)?,
-            };
+            let s = ck.scores(queries, m, self.k)?;
             for (t, &v) in total.iter_mut().zip(&s) {
                 *t += v as f64;
             }
@@ -158,16 +136,24 @@ impl Attributor for Trak {
             bail!("trak scorer has no cached checkpoints; call cache() first");
         }
         let c = self.checkpoints.len() as f64;
-        Ok((0..self.n)
-            .map(|i| {
-                let sum: f64 = self
-                    .checkpoints
-                    .iter()
-                    .map(|ck| ck.self_inf()[i] as f64)
-                    .sum();
-                (sum / c) as f32
-            })
-            .collect())
+        let mut out = vec![0.0f64; self.n];
+        for ck in &self.checkpoints {
+            for (o, &v) in out.iter_mut().zip(ck.self_inf()?) {
+                *o += v as f64;
+            }
+        }
+        Ok(out.into_iter().map(|v| (v / c) as f32).collect())
+    }
+
+    fn precond_stats(&self) -> PrecondStats {
+        PrecondStats {
+            fim_rows: self.checkpoints.iter().map(|c| c.fim_rows()).sum(),
+            describe: self
+                .checkpoints
+                .first()
+                .and_then(|c| c.describe())
+                .unwrap_or_else(|| self.precond.spec_string()),
+        }
     }
 }
 
@@ -221,5 +207,16 @@ mod tests {
         let ens = trak_scores(&many, n, m, k, 0.1).unwrap();
         let var = |v: &[f32]| v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / v.len() as f64;
         assert!(var(&ens) < var(&one), "{} !< {}", var(&ens), var(&one));
+    }
+
+    #[test]
+    fn stats_sum_fim_rows_over_checkpoints() {
+        let (n, m, k) = (9, 2, 4);
+        let c1 = random_ck(n, m, k, 20);
+        let c2 = random_ck(n, m, k, 21);
+        let mut t = Trak::new(k, 0.1);
+        Attributor::cache(&mut t, &c1.train, n).unwrap();
+        Attributor::cache(&mut t, &c2.train, n).unwrap();
+        assert_eq!(Attributor::precond_stats(&t).fim_rows, 2 * n);
     }
 }

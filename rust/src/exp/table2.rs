@@ -368,6 +368,8 @@ pub fn run_density(
                     ns_per_elem: 1e9 / (sparse_tps * elems_per_token as f64).max(1e-12),
                     density: Some(measured),
                     mean_nnz: Some(mean_nnz),
+                    precond_fit_ms: None,
+                    precond_apply_ms: None,
                     extra: vec![
                         ("tokens_per_sec".to_string(), sparse_tps),
                         ("dense_tokens_per_sec".to_string(), dense_tps),
@@ -478,6 +480,8 @@ pub fn run_bench(
             // The Gaussian workload is fully dense.
             density: Some(1.0),
             mean_nnz: Some((t * elems_per_token) as f64),
+            precond_fit_ms: None,
+            precond_apply_ms: None,
             extra: vec![
                 ("tokens_per_sec".to_string(), tps),
                 ("cache_tokens_per_sec".to_string(), cache),

@@ -21,6 +21,17 @@
 //!   attribute correctly (streamed == in-memory to ≤ 1e-5 relative,
 //!   test-enforced). [`attrib::from_spec`] dispatches an
 //!   [`attrib::AttributionSpec`]'s scorer string to the right engine.
+//!   Every scorer composes `preconditioner ∘ inner-product`:
+//!   [`attrib::precond`] is the pluggable second-order subsystem — the
+//!   [`attrib::Preconditioner`] trait with identity / damped-Cholesky /
+//!   eigen-truncated low-rank (`eig:r`, O(k·r) per row via
+//!   [`linalg::eigh()`]) / per-layer blockwise implementations behind the
+//!   [`attrib::PrecondSpec`] grammar, persisted solver artifacts
+//!   ([`attrib::PrecondArtifact`], `precond.bin` — fitted once by
+//!   `grass fit`, validated and reused so repeat attribution skips the
+//!   FIM re-stream), and the paper's damping grid search
+//!   ([`attrib::precond::select`], `--damping grid`) scored by LDS on
+//!   held-out subsets.
 //! - [`runtime`] — PJRT client wrapper that loads AOT-compiled HLO text
 //!   artifacts (JAX models + Pallas kernels) and executes them on the
 //!   request path with zero Python.

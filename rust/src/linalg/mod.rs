@@ -1,15 +1,18 @@
 //! Small dense linear algebra used across the attribution pipeline:
-//! Cholesky factorisation (FIM inversion), the fast Walsh–Hadamard
+//! Cholesky factorisation (FIM inversion), the symmetric Jacobi
+//! eigensolver (eigen-truncated preconditioners), the fast Walsh–Hadamard
 //! transform (FJLT baseline), correlation statistics (LDS), and the
 //! register-tiled blocked matmuls behind the factorized compressors and the
 //! influence scoring GEMM.
 
 pub mod cholesky;
+pub mod eigh;
 pub mod fwht;
 pub mod matmul;
 pub mod stats;
 
 pub use cholesky::CholeskyFactor;
+pub use eigh::{eigh, Eigh};
 pub use fwht::fwht_inplace;
 pub use matmul::{matmul, matmul_abt, matmul_at_b};
 pub use stats::{pearson, spearman};

@@ -6,12 +6,17 @@
 //! grass exp table2 [--ks 256,1024,4096] [--tokens 256] [--reps 8]
 //! grass exp fig9 [--kl 256]
 //! grass cache --model mlp --method sjlt:k=1024 --n 1000 --store DIR
-//! grass attribute --store DIR --queries 8 --scorer if
+//! grass fit --store DIR [--precond damped|blockwise|eig:r]
+//! grass attribute --store DIR --queries 8 --scorer if [--precond ...] [--damping grid]
 //! grass info
 //! ```
 
 use anyhow::{anyhow, bail, ensure, Result};
-use grass::attrib::{from_spec, AttributionSpec, Attributor, StreamOpts, DEFAULT_MEM_BUDGET};
+use grass::attrib::precond::select;
+use grass::attrib::{
+    from_spec, AttributionSpec, Attributor, PrecondArtifact, PrecondSpec, Preconditioner,
+    StreamOpts, DEFAULT_MEM_BUDGET,
+};
 use grass::config::ExpConfig;
 use grass::coordinator::{pipeline::Source, CachePipeline, CompressorBank, PipelineConfig};
 use grass::data::corpus::ThemedCorpus;
@@ -39,6 +44,7 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("exp") => run_exp(&args),
         Some("cache") => run_cache(&args),
+        Some("fit") => run_fit(&args),
         Some("attribute") => run_attribute(&args),
         Some("info") => run_info(),
         _ => {
@@ -58,10 +64,13 @@ USAGE:
               [--n N] [--p P] [--seed S] [--store DIR] [--fast]
               [--density 0.01 (flat synth: sparse gradients via CSR kernels)]
               [--shard-rows R|0=auto] [--mem-budget 256M]
+  grass fit --store DIR [--precond damped|blockwise|eig:r[,λ]] [--damping 1e-3]
+            [--mem-budget 256M] [--workers N]
   grass attribute --store DIR [--queries M] [--scorer if|graddot|trak|tracin|blockwise]
-                  [--damping 1e-3] [--top 5] [--self-influence]
+                  [--precond identity|damped:λ|eig:r[,λ]|blockwise]
+                  [--damping 1e-3|grid] [--top 5] [--self-influence]
                   [--mem-budget 256M] [--workers N] [--row-groups 0..512,512..1024|block=N]
-                  [--method <spec> --seed S to cross-check the store]
+                  [--no-artifact] [--method <spec> --seed S to cross-check the store]
   grass info
 
 COMMON FLAGS:
@@ -79,7 +88,12 @@ METHOD SPECS (factorized,   factgrass:kin=..,kout=..,kl=..,mask=rm|sm |
 `grass attribute` streams the store out-of-core: train rows are read one
 shard block per worker under --mem-budget, so stores far larger than RAM
 attribute correctly; --row-groups aggregates scores per row group
-(GGDA-style). For banks whose kernels profit from CSR input (sjlt,
+(GGDA-style). The second-order solve is pluggable (--precond): identity,
+damped Cholesky, an eigen-truncated low-rank inverse (eig:r — O(k·r) per
+row), or the per-layer blockwise family. `grass fit` streams the FIM once
+and persists it as precond.bin next to store.json; later attribute runs
+validate and reuse it, reporting `fim-pass rows: 0`. `--damping grid`
+selects λ over the paper's grid by LDS on held-out subsets. For banks whose kernels profit from CSR input (sjlt,
 logra, factsjlt), the pipeline's grad workers density-probe each
 gradient batch and auto-dispatch between the dense batch kernels and the
 nnz-proportional CSR kernels (sparse/dense counts and observed input
@@ -374,6 +388,62 @@ fn cache_synthetic(
 }
 
 // ---------------------------------------------------------------------------
+// fit
+// ---------------------------------------------------------------------------
+
+/// `grass fit`: stream the store's rows once, accumulate the per-block
+/// FIMs, and persist them as `precond.bin` next to `store.json`. Later
+/// `grass attribute` runs validate the artifact (method/seed/k/rows) and
+/// build any preconditioner — any λ, any rank — from it without touching
+/// the train rows again.
+fn run_fit(args: &Args) -> Result<()> {
+    let store = args.get_or("store", "grass_store").to_string();
+    let reader = StoreReader::open(&store)?;
+    let damping = args.get_f64("damping", PrecondSpec::DEFAULT_LAMBDA)?;
+    let pspec = PrecondSpec::parse_with(args.get_or("precond", "damped"), damping)?;
+    ensure!(
+        pspec.needs_fim(),
+        "the identity preconditioner has nothing to fit"
+    );
+    // Per-layer layout for the blockwise family needs the recorded
+    // geometry; the monolithic families fit one [k] block.
+    let layer_dims: Vec<usize> = if matches!(pspec, PrecondSpec::Blockwise { .. }) {
+        let shapes = reader.meta.shapes();
+        ensure!(
+            shapes.p > 0 || !shapes.layers.is_empty(),
+            "store at {store} records no gradient geometry (pre-redesign cache?); \
+             re-run `grass cache`"
+        );
+        reader.meta.spec()?.build_bank(&shapes, reader.meta.seed)?.layer_dims()
+    } else {
+        vec![]
+    };
+    let layout = pspec.layout_for(reader.meta.k, &layer_dims);
+    let opts = StreamOpts {
+        mem_budget: args.get_bytes("mem-budget", DEFAULT_MEM_BUDGET)?,
+        workers: args.get_usize("workers", 0)?,
+        groups: None,
+        artifact: None,
+    };
+    let (artifact, fit_dur) =
+        grass::util::bench::time_once(|| PrecondArtifact::fit(&reader, &opts, &layout));
+    let artifact = artifact?;
+    let path = artifact.save(&store)?;
+    // Prove the artifact actually builds the requested solver before
+    // reporting success.
+    let pre = pspec.build(&artifact.fims, &layout)?;
+    println!(
+        "fitted {} FIM block(s) over {} rows in {:.1} ms → {}",
+        artifact.fims.len(),
+        artifact.rows,
+        fit_dur.as_secs_f64() * 1e3,
+        path.display()
+    );
+    println!("precond: {}", pre.describe());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // attribute
 // ---------------------------------------------------------------------------
 
@@ -381,19 +451,27 @@ fn run_attribute(args: &Args) -> Result<()> {
     let store = args.get_or("store", "grass_store").to_string();
     let m = args.get_usize("queries", 8)?;
     let scorer = args.get_or("scorer", "if").to_string();
-    let damping = args.get_f64("damping", 1e-3)?;
+    // `--damping` is a number, or the literal `grid` (select λ over the
+    // paper's grid by LDS on held-out subsets).
+    let grid_requested = args.get("damping") == Some("grid");
+    let damping = if grid_requested {
+        PrecondSpec::DEFAULT_LAMBDA
+    } else {
+        args.get_f64("damping", 1e-3)?
+    };
     let top = args.get_usize("top", 5)?;
 
     let reader = StoreReader::open(&store)?;
     // Out-of-core streaming knobs: byte budget for the per-worker shard
     // buffers, worker count, and optional GGDA-style row grouping.
-    let opts = StreamOpts {
+    let mut opts = StreamOpts {
         mem_budget: args.get_bytes("mem-budget", DEFAULT_MEM_BUDGET)?,
         workers: args.get_usize("workers", 0)?,
         groups: match args.get("row-groups") {
             Some(s) => Some(parse_row_groups(s, reader.meta.n)?),
             None => None,
         },
+        artifact: None,
     };
     let grouped = opts.groups.is_some();
     let spec = reader.meta.spec()?;
@@ -429,10 +507,59 @@ fn run_attribute(args: &Args) -> Result<()> {
         runtime_queries(&reader.meta, &bank, m)?
     };
 
+    // Preconditioner: explicit --precond, or the scorer's default family;
+    // `--damping grid` replaces λ with the LDS-selected grid value.
+    let base_pspec = match args.get("precond") {
+        Some(s) => PrecondSpec::parse_with(s, damping)?,
+        None => PrecondSpec::default_for_scorer(&scorer, damping),
+    };
+
+    // Fitted-solver artifact: `precond.bin` is loaded and validated
+    // against the store (a mismatch is a hard, descriptive error) only
+    // when this run can actually consume it — identity-preconditioned
+    // scorers never touch it, and grouped runs refit on the selected
+    // rows (the grid still wants the full-store FIMs either way).
+    let wants_artifact = base_pspec.needs_fim() && (opts.groups.is_none() || grid_requested);
+    let artifact = if args.get_bool("no-artifact") || !wants_artifact {
+        None
+    } else {
+        match PrecondArtifact::load_if_present(&store)? {
+            Some(a) => {
+                a.validate_store(&reader.meta)?;
+                Some(std::sync::Arc::new(a))
+            }
+            None => None,
+        }
+    };
+
+    let (pspec, grid_artifact) = if grid_requested {
+        select_damping_by_grid(
+            &reader,
+            &opts,
+            &base_pspec,
+            &bank.layer_dims(),
+            &queries,
+            m,
+            &classes,
+            artifact.as_ref(),
+            args,
+        )?
+    } else {
+        (base_pspec, None)
+    };
+    // Artifacts cover the whole store; grouped runs refit on the
+    // selected rows, so they never consume one. A grid run's freshly
+    // fitted FIMs double as the attribute-stage artifact, so the solver
+    // build never re-streams what the grid just accumulated.
+    if pspec.needs_fim() && opts.groups.is_none() {
+        opts.artifact = grid_artifact.or(artifact);
+    }
+
     // Scorer through the declarative registry.
     let mut aspec = AttributionSpec::new(&scorer, spec, seed);
     aspec.damping = damping;
     aspec.layout = bank.layer_dims();
+    aspec.precond = Some(pspec);
     let mut attributor: Box<dyn Attributor> = from_spec(&aspec)?;
     let meta = attributor.cache_stream(&reader, &opts)?;
     let scores = attributor.attribute(&queries, m)?;
@@ -446,6 +573,11 @@ fn run_attribute(args: &Args) -> Result<()> {
         meta.k,
         fmt_bytes(opts.mem_budget),
         scores.n,
+    );
+    let pstats = attributor.precond_stats();
+    println!(
+        "precond: {} | fim-pass rows: {}",
+        pstats.describe, pstats.fim_rows
     );
     let mut hits = 0usize;
     let mut ranked = 0usize;
@@ -490,6 +622,92 @@ fn run_attribute(args: &Args) -> Result<()> {
         println!("top-{top} self-influence: {}", parts.join(", "));
     }
     Ok(())
+}
+
+/// `--damping grid` (App. B.2): fit (or reuse) the FIMs once, score every
+/// λ in the paper's grid by LDS on held-out subsets of the cached rows
+/// against the synthetic class datamodel, print the grid as a run-report
+/// table (saved to `--out` when given), and return the base spec at the
+/// selected λ plus the FIM artifact the grid evaluated on (so the
+/// attribute stage builds its solver from it instead of re-streaming).
+#[allow(clippy::too_many_arguments)]
+fn select_damping_by_grid(
+    reader: &StoreReader,
+    opts: &StreamOpts,
+    base: &PrecondSpec,
+    layer_dims: &[usize],
+    queries: &[f32],
+    m: usize,
+    classes: &[usize],
+    artifact: Option<&std::sync::Arc<PrecondArtifact>>,
+    args: &Args,
+) -> Result<(PrecondSpec, Option<std::sync::Arc<PrecondArtifact>>)> {
+    ensure!(
+        base.needs_fim(),
+        "preconditioner '{}' has no damping to select; --damping grid needs a \
+         FIM-preconditioned --precond",
+        base.spec_string()
+    );
+    let model = reader.meta.model.as_str();
+    ensure!(
+        model == SYNTH_MODEL || model.is_empty(),
+        "--damping grid scores the grid by LDS against the synthetic class datamodel; \
+         store model '{model}' records no retraining ground truth"
+    );
+    let k = reader.meta.k;
+    let layout = base.layout_for(k, layer_dims);
+    // FIMs: reuse the validated artifact when its layout matches,
+    // otherwise one streaming fit (not persisted to disk — `grass fit`
+    // does that — but handed back so the attribute stage reuses it).
+    let fitted: std::sync::Arc<PrecondArtifact> = match artifact {
+        Some(a) if a.layout == layout.dims => a.clone(),
+        _ => {
+            let clean = StreamOpts {
+                groups: None,
+                artifact: None,
+                ..opts.clone()
+            };
+            std::sync::Arc::new(PrecondArtifact::fit(reader, &clean, &layout)?)
+        }
+    };
+    let fims = &fitted.fims;
+    // Held-out rows: the first min(n, 256) cached rows, read in-core so
+    // each grid λ scores query-side at O(m·k²) without re-streaming.
+    let n_val = reader.meta.n.min(256);
+    ensure!(n_val > 0, "store has no rows to hold out for the grid");
+    let mut val = vec![0.0f32; n_val * k];
+    let mut cur = reader.cursor_with(reader.meta.shard_rows.max(1), &[0..n_val]);
+    let mut buf = Vec::new();
+    while let Some(b) = cur.next_block(&mut buf)? {
+        val[b.start * k..(b.start + b.rows) * k].copy_from_slice(&buf[..b.rows * k]);
+    }
+    let s_count = args.get_usize("grid-subsets", 24)?;
+    let subsets = grass::eval::subsets::sample_subsets(n_val, s_count, 0.5, reader.meta.seed);
+    let losses = select::class_proxy_losses(&subsets, SYNTH_CLASSES, classes, reader.meta.seed);
+    let report = select::grid_by_lds(
+        base, fims, &layout, &val, n_val, queries, m, &subsets, &losses,
+    )?;
+    let mut table = exp::report::Table::new(
+        &format!("damping grid (LDS on {s_count} held-out subsets of {n_val} rows)"),
+        &["lambda", "lds"],
+    );
+    for e in &report.entries {
+        table.row(vec![
+            format!("{:.0e}", e.lambda),
+            e.lds
+                .map(|v| format!("{v:.4}"))
+                .unwrap_or_else(|| "not PD".into()),
+        ]);
+    }
+    table.print();
+    if let Some(path) = args.get("out") {
+        table.save(path)?;
+    }
+    println!(
+        "selected λ = {:.0e} (LDS {:.4})",
+        report.best_lambda, report.best_lds
+    );
+    Ok((base.with_lambda(report.best_lambda), Some(fitted)))
 }
 
 /// Human-readable binary byte size (inverse of `util::cli::parse_bytes`).

@@ -2,7 +2,8 @@
 //!
 //! Layout: a store directory holds `store.json` (metadata: k, n, shard
 //! size, method spec) plus `shard_NNNN.bin` files of raw little-endian f32
-//! rows. The writer streams rows in order with a bounded in-memory buffer
+//! rows, and optionally a fitted-preconditioner artifact
+//! ([`PRECOND_FILE`], written by `grass fit`). The writer streams rows in order with a bounded in-memory buffer
 //! (backpressure comes from the coordinator's bounded channels); the reader
 //! iterates shard-by-shard so attribution never needs the whole cache in
 //! memory — at Llama scale the cache is hundreds of GB (n·k·4 bytes) and
@@ -20,6 +21,12 @@ use std::sync::Mutex;
 
 /// Rows per shard file.
 pub const DEFAULT_SHARD_ROWS: usize = 4096;
+
+/// File name of the persisted fitted-preconditioner artifact inside a
+/// store directory (written by `grass fit` /
+/// [`crate::attrib::PrecondArtifact::save`], reused by `grass attribute`
+/// so repeat query sets skip the FIM re-stream).
+pub const PRECOND_FILE: &str = "precond.bin";
 
 /// Self-describing store metadata: everything the attribute stage needs to
 /// reconstruct the exact compressor bank (method spec, seed, gradient

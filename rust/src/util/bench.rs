@@ -107,6 +107,13 @@ pub struct BenchRecord {
     pub density: Option<f64>,
     /// Mean stored non-zeros per input row, when known.
     pub mean_nnz: Option<f64>,
+    /// Preconditioner fit cost of the measured configuration in
+    /// milliseconds (stream-FIM pass, or artifact load+build), when the
+    /// record covers a second-order solver.
+    pub precond_fit_ms: Option<f64>,
+    /// Preconditioner apply cost (`apply_rows` over the record's `n`
+    /// rows) in milliseconds, when known.
+    pub precond_apply_ms: Option<f64>,
     /// Free-form extra metrics (e.g. `speedup_vs_per_sample`, `tokens_per_sec`).
     pub extra: Vec<(String, f64)>,
 }
@@ -125,6 +132,8 @@ impl BenchRecord {
             ns_per_elem: secs * 1e9 / (n as f64 * p as f64).max(1.0),
             density: None,
             mean_nnz: None,
+            precond_fit_ms: None,
+            precond_apply_ms: None,
             extra: vec![],
         }
     }
@@ -143,6 +152,14 @@ impl BenchRecord {
         self
     }
 
+    /// Record the solver fit and apply cost (builder style) so the
+    /// preconditioner cost trajectory lands in `BENCH_*.json` artifacts.
+    pub fn with_precond(mut self, fit_ms: f64, apply_ms: f64) -> Self {
+        self.precond_fit_ms = Some(fit_ms);
+        self.precond_apply_ms = Some(apply_ms);
+        self
+    }
+
     fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("method", Json::Str(self.method.clone())),
@@ -157,6 +174,12 @@ impl BenchRecord {
         }
         if let Some(m) = self.mean_nnz {
             pairs.push(("mean_nnz", Json::Num(m)));
+        }
+        if let Some(v) = self.precond_fit_ms {
+            pairs.push(("precond_fit_ms", Json::Num(v)));
+        }
+        if let Some(v) = self.precond_apply_ms {
+            pairs.push(("precond_apply_ms", Json::Num(v)));
         }
         for (key, value) in &self.extra {
             pairs.push((key.as_str(), Json::Num(*value)));
@@ -246,6 +269,13 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.req("density").unwrap().as_f64(), Some(0.01));
         assert_eq!(j.req("mean_nnz").unwrap().as_f64(), Some(10.0));
+        // Preconditioner costs are omitted until recorded, then serialized.
+        assert!(j.get("precond_fit_ms").is_none());
+        let r = BenchRecord::from_duration("precond", 10, 64, 64, Duration::from_millis(10))
+            .with_precond(12.5, 0.75);
+        let j = r.to_json();
+        assert_eq!(j.req("precond_fit_ms").unwrap().as_f64(), Some(12.5));
+        assert_eq!(j.req("precond_apply_ms").unwrap().as_f64(), Some(0.75));
     }
 
     #[test]

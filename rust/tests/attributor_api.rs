@@ -202,6 +202,7 @@ fn streamed_attribution_matches_in_memory_for_all_five_scorers() {
         mem_budget: 3 * 2 * k * 4 * 2,
         workers: 3,
         groups: None,
+        artifact: None,
     };
     assert_eq!(opts.chunk_rows(k), 2);
     assert!(opts.resident_bytes(k) < n * k * 4);
@@ -270,6 +271,7 @@ fn grouped_streaming_aggregates_member_rows() {
         mem_budget: 2 * 3 * k * 4 * 2,
         workers: 2,
         groups: Some(groups.clone()),
+        artifact: None,
     };
 
     // GradDot: group score is the sum of member dot products.

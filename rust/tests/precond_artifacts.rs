@@ -1,0 +1,259 @@
+//! Integration: the preconditioner subsystem end to end — fit → persist
+//! (`precond.bin`) → `open_checked`-style validation → artifact-backed
+//! attribution that skips the FIM pass entirely while producing identical
+//! scores — plus the `grass fit` / `--precond` / `--damping grid` CLI
+//! surface on a runtime-free synthetic store.
+
+use grass::attrib::blockwise::BlockLayout;
+use grass::attrib::{
+    Attributor, InfluenceEngine, PrecondArtifact, PrecondSpec, StreamOpts,
+};
+use grass::sketch::rng::Pcg;
+use grass::store::{StoreReader, StoreWriter, PRECOND_FILE};
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("grass_precond_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn gaussian(rows: usize, k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..rows * k).map(|_| rng.next_gaussian()).collect()
+}
+
+fn write_raw_store(dir: &PathBuf, rows: &[f32], k: usize, shard_rows: usize, seed: u64) {
+    let mut w = StoreWriter::create(dir, k, "raw", seed, shard_rows).unwrap();
+    w.push_batch(rows).unwrap();
+    w.finish().unwrap();
+}
+
+/// The roundtrip contract: fit → persist → validate → attribute twice,
+/// with the artifact-backed run streaming zero FIM-pass rows and scoring
+/// identically to ≤ 1e-6 relative.
+#[test]
+fn artifact_roundtrip_skips_fim_pass_with_identical_scores() {
+    let (n, k, m) = (60usize, 16usize, 5usize);
+    let dir = tmpdir("roundtrip");
+    let g = gaussian(n, k, 51);
+    write_raw_store(&dir, &g, k, 7, 0);
+    let reader = StoreReader::open(&dir).unwrap();
+    let queries = gaussian(m, k, 52);
+    let opts = StreamOpts::with_budget(4096);
+
+    // Run 1: no artifact — the FIM ingest pass streams every row.
+    let mut refit = InfluenceEngine::new(k, 0.1);
+    refit.cache_stream(&reader, &opts).unwrap();
+    assert_eq!(Attributor::precond_stats(&refit).fim_rows, n);
+    let s1 = Attributor::attribute(&refit, &queries, m).unwrap();
+
+    // Fit + persist, then validate like open_checked.
+    let layout = BlockLayout::new(vec![k]);
+    let art = PrecondArtifact::fit(&reader, &opts, &layout).unwrap();
+    assert_eq!(art.rows, n);
+    let path = art.save(&dir).unwrap();
+    assert!(path.ends_with(PRECOND_FILE));
+    let loaded = PrecondArtifact::load(&dir).unwrap();
+    loaded.validate_store(&reader.meta).unwrap();
+    loaded.validate_layout(&layout).unwrap();
+
+    // A store the artifact was NOT fitted on is rejected descriptively.
+    let dir2 = tmpdir("roundtrip_other");
+    write_raw_store(&dir2, &g, k, 7, 99); // different seed
+    let other = StoreReader::open(&dir2).unwrap();
+    let err = format!("{:#}", loaded.validate_store(&other.meta).unwrap_err());
+    assert!(err.contains("seed") && err.contains("99"), "{err}");
+    let err = format!(
+        "{:#}",
+        loaded
+            .validate_layout(&BlockLayout::new(vec![8, 8]))
+            .unwrap_err()
+    );
+    assert!(err.contains("[8, 8]"), "{err}");
+
+    // Runs 2 and 3: artifact-backed — zero FIM-pass rows, same scores.
+    for run in 0..2 {
+        let aopts = StreamOpts {
+            artifact: Some(Arc::new(loaded.clone())),
+            ..StreamOpts::with_budget(4096)
+        };
+        let mut reused = InfluenceEngine::new(k, 0.1);
+        reused.cache_stream(&reader, &aopts).unwrap();
+        let stats = Attributor::precond_stats(&reused);
+        assert_eq!(stats.fim_rows, 0, "run {run} streamed FIM rows");
+        assert!(stats.describe.contains("damped-cholesky"), "{}", stats.describe);
+        let s2 = Attributor::attribute(&reused, &queries, m).unwrap();
+        assert_eq!((s2.m, s2.n), (s1.m, s1.n));
+        for i in 0..m * n {
+            let (a, b) = (s2.scores[i], s1.scores[i]);
+            assert!(
+                (a - b).abs() <= 1e-6 * (1.0 + b.abs()),
+                "run {run} score {i}: artifact {a} vs refit {b}"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+/// One artifact serves every solver family: eig at full rank matches the
+/// damped engine (≤ 1e-4 rel, the acceptance bound), and a truncated rank
+/// still attributes with zero FIM-pass rows.
+#[test]
+fn one_artifact_serves_damped_and_eig() {
+    let (n, k, m) = (48usize, 12usize, 4usize);
+    let dir = tmpdir("families");
+    let g = gaussian(n, k, 61);
+    write_raw_store(&dir, &g, k, 9, 0);
+    let reader = StoreReader::open(&dir).unwrap();
+    let queries = gaussian(m, k, 62);
+    let layout = BlockLayout::new(vec![k]);
+    let base = StreamOpts::default();
+    let art = Arc::new(PrecondArtifact::fit(&reader, &base, &layout).unwrap());
+    let aopts = StreamOpts {
+        artifact: Some(art),
+        ..StreamOpts::default()
+    };
+
+    let mut damped = InfluenceEngine::new(k, 0.05);
+    damped.cache_stream(&reader, &aopts).unwrap();
+    let sd = Attributor::attribute(&damped, &queries, m).unwrap();
+
+    let mut eig = InfluenceEngine::with_precond(
+        k,
+        PrecondSpec::Eig {
+            rank: k,
+            lambda: 0.05,
+        },
+    );
+    eig.cache_stream(&reader, &aopts).unwrap();
+    assert_eq!(Attributor::precond_stats(&eig).fim_rows, 0);
+    let se = Attributor::attribute(&eig, &queries, m).unwrap();
+    for i in 0..m * n {
+        assert!(
+            (sd.scores[i] - se.scores[i]).abs() <= 1e-4 * (1.0 + sd.scores[i].abs()),
+            "at {i}: damped {} vs eig {}",
+            sd.scores[i],
+            se.scores[i]
+        );
+    }
+
+    let mut low = InfluenceEngine::with_precond(
+        k,
+        PrecondSpec::Eig {
+            rank: 3,
+            lambda: 0.05,
+        },
+    );
+    low.cache_stream(&reader, &aopts).unwrap();
+    assert_eq!(Attributor::precond_stats(&low).fim_rows, 0);
+    let sl = Attributor::attribute(&low, &queries, m).unwrap();
+    assert!(sl.scores.iter().all(|v| v.is_finite()));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// CLI: cache → attribute (full FIM pass) → fit → attribute twice
+/// (zero FIM-pass rows, byte-identical ranking output), the eig family
+/// from the same artifact, `--damping grid` recording the grid, and a
+/// stale artifact rejected after the store is re-cached.
+#[test]
+fn cli_fit_then_artifact_backed_attribute() {
+    let dir = tmpdir("cli");
+    let dir_s = dir.to_str().unwrap().to_string();
+    let exe = env!("CARGO_BIN_EXE_grass");
+    let run = |cli: &[&str]| {
+        let out = Command::new(exe).args(cli).output().expect("spawn grass");
+        (
+            out.status.success(),
+            String::from_utf8_lossy(&out.stdout).to_string(),
+            String::from_utf8_lossy(&out.stderr).to_string(),
+        )
+    };
+
+    let (ok, stdout, stderr) = run(&[
+        "cache", "--model", "synth", "--method", "sjlt:k=32", "--p", "1024", "--n", "48",
+        "--seed", "5", "--store", &dir_s,
+    ]);
+    assert!(ok, "cache failed: {stdout}{stderr}");
+
+    // Before fitting: the FIM pass streams all 48 rows.
+    let (ok, out1, stderr) = run(&[
+        "attribute", "--store", &dir_s, "--queries", "4", "--scorer", "if",
+    ]);
+    assert!(ok, "attribute failed: {out1}{stderr}");
+    assert!(out1.contains("fim-pass rows: 48"), "{out1}");
+
+    // Fit + persist the artifact.
+    let (ok, stdout, stderr) = run(&["fit", "--store", &dir_s]);
+    assert!(ok, "fit failed: {stdout}{stderr}");
+    assert!(stdout.contains("48 rows"), "{stdout}");
+    assert!(dir.join(PRECOND_FILE).exists());
+
+    // After fitting: zero FIM-pass rows, identical ranking output, twice.
+    let rankings = |s: &str| -> Vec<String> {
+        s.lines()
+            .filter(|l| l.trim_start().starts_with("query "))
+            .map(|l| l.to_string())
+            .collect()
+    };
+    let mut prev: Option<Vec<String>> = None;
+    for _ in 0..2 {
+        let (ok, out2, stderr) = run(&[
+            "attribute", "--store", &dir_s, "--queries", "4", "--scorer", "if",
+        ]);
+        assert!(ok, "artifact-backed attribute failed: {out2}{stderr}");
+        assert!(out2.contains("fim-pass rows: 0"), "{out2}");
+        // Artifact-backed runs are deterministic: both build the solver
+        // from the same persisted FIMs and write per-row score columns
+        // exactly once. (Run-to-run equality with the refit path is
+        // pinned at ≤ 1e-6 by the library-level roundtrip test — the
+        // streaming refit's f64 merge order is worker-scheduled, so its
+        // formatted output is not byte-pinned here.)
+        assert!(!rankings(&out2).is_empty(), "{out2}");
+        if let Some(p) = &prev {
+            assert_eq!(&rankings(&out2), p, "artifact run ranking drifted");
+        }
+        prev = Some(rankings(&out2));
+    }
+
+    // The same artifact serves the eig family.
+    let (ok, out3, stderr) = run(&[
+        "attribute", "--store", &dir_s, "--queries", "4", "--scorer", "if", "--precond",
+        "eig:32",
+    ]);
+    assert!(ok, "eig attribute failed: {out3}{stderr}");
+    assert!(out3.contains("fim-pass rows: 0"), "{out3}");
+    assert!(out3.contains("eig(r=32"), "{out3}");
+
+    // Damping grid: the grid is recorded and a λ selected.
+    let (ok, out4, stderr) = run(&[
+        "attribute", "--store", &dir_s, "--queries", "4", "--scorer", "if", "--damping",
+        "grid",
+    ]);
+    assert!(ok, "grid attribute failed: {out4}{stderr}");
+    assert!(out4.contains("damping grid"), "{out4}");
+    assert!(out4.contains("selected λ"), "{out4}");
+
+    // Re-caching the store (new seed) strands the artifact: attribution
+    // must reject it descriptively instead of silently mis-scoring.
+    let (ok, stdout, stderr) = run(&[
+        "cache", "--model", "synth", "--method", "sjlt:k=32", "--p", "1024", "--n", "48",
+        "--seed", "6", "--store", &dir_s,
+    ]);
+    assert!(ok, "re-cache failed: {stdout}{stderr}");
+    let (ok, stdout, stderr) = run(&[
+        "attribute", "--store", &dir_s, "--queries", "4", "--scorer", "if",
+    ]);
+    assert!(!ok, "stale artifact must be rejected: {stdout}");
+    assert!(stderr.contains("grass fit"), "{stderr}");
+    // --no-artifact bypasses the stale artifact and refits.
+    let (ok, out5, stderr) = run(&[
+        "attribute", "--store", &dir_s, "--queries", "4", "--scorer", "if", "--no-artifact",
+    ]);
+    assert!(ok, "--no-artifact attribute failed: {out5}{stderr}");
+    assert!(out5.contains("fim-pass rows: 48"), "{out5}");
+    std::fs::remove_dir_all(&dir).ok();
+}
