@@ -2,7 +2,7 @@
 //! compress → store writer) on the MLP workload — the coordinator-level
 //! throughput number (samples/s) that backs EXPERIMENTS.md §Perf.
 //!
-//! Three parts, all recorded in `BENCH_pipeline_e2e.json`:
+//! Four parts, all recorded in `BENCH_pipeline_e2e.json`:
 //!
 //! 1. **Compress stage** (always runs, no artifacts needed): the exact
 //!    work stage 3 performs on one MLP-sized `GradBatch` — measured on the
@@ -13,7 +13,11 @@
 //!    streaming influence engine at 1/2/4 workers. Asserts streamed ==
 //!    in-memory scores (≤ 1e-5 rel) and that the configured resident
 //!    buffer allocation stays within the budget.
-//! 3. **Full pipeline** (requires `make artifacts`): PJRT gradient workers
+//! 3. **Recovery** (always runs): an interrupted cache run resumed from
+//!    its committed shards, then fault-injected streamed scoring whose
+//!    transient read failures the retry policy absorbs — records
+//!    `resume_skipped_rows` / `retries_attempted`.
+//! 4. **Full pipeline** (requires `make artifacts`): PJRT gradient workers
 //!    feeding the batch compress stage and the reordering store writer.
 //!
 //! Run: `cargo bench --bench pipeline_e2e`
@@ -27,7 +31,7 @@ use grass::data::images::SynthDigits;
 use grass::runtime::{Arg, Runtime};
 use grass::sketch::rng::Pcg;
 use grass::sketch::{Compressor, MethodSpec, Scratch};
-use grass::store::{StoreReader, StoreWriter};
+use grass::store::{FaultKind, FaultPlan, RetryPolicy, StoreMeta, StoreReader, StoreWriter};
 use grass::util::bench::{self, BenchRecord};
 
 /// The compress stage in isolation: one MLP-sized gradient block through
@@ -123,8 +127,7 @@ fn streaming_attribute_bench(records: &mut Vec<BenchRecord>) {
         let opts = StreamOpts {
             mem_budget,
             workers,
-            groups: None,
-            artifact: None,
+            ..StreamOpts::default()
         };
         // The acceptance bound: the configured resident buffer allocation
         // never exceeds the budget, while the store is 4× bigger.
@@ -223,11 +226,84 @@ fn precond_artifact_bench(records: &mut Vec<BenchRecord>) {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Fault-tolerance stage: an interrupted cache run resumed from its
+/// committed shards (the resumed writer recomputes only the missing rows),
+/// then a fault-injected streamed scoring pass whose transient shard-read
+/// failures the retry policy absorbs. Records `resume_skipped_rows` /
+/// `retries_attempted` so the recovery cost trajectory is diffable.
+fn recovery_bench(records: &mut Vec<BenchRecord>) {
+    let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
+    let (n, k, shard_rows, m) = if fast {
+        (512usize, 64usize, 64usize, 4usize)
+    } else {
+        (2048, 128, 256, 8)
+    };
+    let dir = std::env::temp_dir().join(format!("grass_bench_recover_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut rng = Pcg::new(29);
+    let rows: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+    let meta = StoreMeta {
+        k,
+        n: 0,
+        shard_rows,
+        method: "bench".to_string(),
+        seed: 0,
+        model: String::new(),
+        input_dim: 0,
+        layer_dims: vec![],
+        density: 1.0,
+    };
+
+    // Interrupted run: push the first half, then drop the writer without
+    // `finish` — as after a crash, only manifest-listed shards survive.
+    let mut w = StoreWriter::create_described(&dir, meta.clone()).expect("writer");
+    w.push_batch(&rows[..(n / 2) * k]).expect("push half");
+    drop(w);
+
+    let ((committed, retries), d) = bench::time_once(|| {
+        let (mut w, committed) = StoreWriter::resume(&dir, &meta).expect("resume");
+        w.push_batch(&rows[committed * k..]).expect("push rest");
+        w.finish().expect("finish");
+
+        // Score the recovered store with two injected transient read
+        // faults on shard 1; the retry policy absorbs both.
+        let mut reader = StoreReader::open(&dir).expect("reader");
+        let plan = FaultPlan::new();
+        plan.fail_read(1, FaultKind::Transient, 0, 2);
+        reader.inject_faults(plan);
+        let opts = StreamOpts {
+            retry: RetryPolicy {
+                retries: 3,
+                backoff: std::time::Duration::from_millis(1),
+                seed: 0,
+            },
+            ..StreamOpts::default()
+        };
+        let mut eng = InfluenceEngine::new(k, 0.1);
+        eng.cache_stream(&reader, &opts).expect("cache_stream under faults");
+        let queries: Vec<f32> = rows[..m * k].to_vec();
+        let _ = Attributor::attribute(&eng, &queries, m).expect("attribute under faults");
+        (committed, opts.log.retries_attempted())
+    });
+    println!("== recovery (n={n}, k={k}, shard_rows={shard_rows}) ==");
+    println!(
+        "resume skipped {committed} committed rows; {retries} shard-read \
+         retries absorbed; stage took {}",
+        bench::fmt_dur(d)
+    );
+    records.push(
+        BenchRecord::from_duration("recovery:resume+retry:if", n, k, k, d)
+            .with_recovery(committed as u64, retries),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn main() {
     let mut records: Vec<BenchRecord> = Vec::new();
     compress_stage_bench(&mut records);
     streaming_attribute_bench(&mut records);
     precond_artifact_bench(&mut records);
+    recovery_bench(&mut records);
 
     let dir = Runtime::artifacts_dir();
     if !dir.join("manifest.json").exists() {
@@ -285,6 +361,8 @@ fn main() {
                     mean_nnz: Some(pipeline.metrics.input_density() * p as f64),
                     precond_fit_ms: None,
                     precond_apply_ms: None,
+                    resume_skipped_rows: None,
+                    retries_attempted: None,
                     extra: vec![],
                 },
             );

@@ -146,6 +146,10 @@ impl Attributor for BlockwiseEngine {
                 .unwrap_or_else(|| self.precond.spec_string()),
         }
     }
+
+    fn coverage(&self) -> Option<super::Coverage> {
+        self.cached.coverage()
+    }
 }
 
 #[cfg(test)]

@@ -104,6 +104,10 @@ impl Attributor for GradDot {
                 .unwrap_or_else(|| self.precond.spec_string()),
         }
     }
+
+    fn coverage(&self) -> Option<super::Coverage> {
+        self.cached.coverage()
+    }
 }
 
 #[cfg(test)]

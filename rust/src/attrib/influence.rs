@@ -136,6 +136,10 @@ impl Attributor for InfluenceEngine {
                 .unwrap_or_else(|| self.precond.spec_string()),
         }
     }
+
+    fn coverage(&self) -> Option<super::Coverage> {
+        self.cached.coverage()
+    }
 }
 
 /// Query-side scoring: `τ[q][i] = ((F̂+λI)⁻¹ ĝ_q)ᵀ ĝ_i`. Mathematically

@@ -36,7 +36,7 @@ pub mod trak;
 
 pub use influence::InfluenceEngine;
 pub use precond::{PrecondArtifact, PrecondSpec, PrecondStats, Preconditioner};
-pub use stream::{StreamOpts, DEFAULT_MEM_BUDGET};
+pub use stream::{Coverage, StreamOpts, DEFAULT_MEM_BUDGET};
 
 use crate::sketch::MethodSpec;
 use crate::store::{StoreMeta, StoreReader};
@@ -206,6 +206,15 @@ pub trait Attributor {
     /// without second-order state keep the default.
     fn precond_stats(&self) -> PrecondStats {
         PrecondStats::default()
+    }
+
+    /// Coverage of a streamed cache's degraded-mode run: how many selected
+    /// rows were actually scored, which shards were quarantined, and how
+    /// many shard-read retries were attempted. `None` for in-memory caches
+    /// (they cannot degrade) and for engines without streaming state; the
+    /// built-in scorers override it to report their [`stream::Coverage`].
+    fn coverage(&self) -> Option<Coverage> {
+        None
     }
 }
 

@@ -30,7 +30,8 @@ use super::blockwise::BlockLayout;
 use super::fim::accumulate_fim;
 use super::stream::{stream_block_fims, StreamOpts};
 use crate::linalg::{eigh, CholeskyFactor};
-use crate::store::{StoreMeta, StoreReader, PRECOND_FILE};
+use crate::store::manifest::{file_crc32c, write_atomic};
+use crate::store::{crc32c, Manifest, StoreMeta, StoreReader, PRECOND_FILE};
 use crate::util::json::Json;
 use crate::util::par;
 use anyhow::{anyhow, bail, ensure, Context, Result};
@@ -616,8 +617,15 @@ impl PrecondArtifact {
                 bytes.extend_from_slice(&v.to_le_bytes());
             }
         }
-        std::fs::write(&path, bytes)
+        write_atomic(&path, &bytes)
             .with_context(|| format!("writing precond artifact {}", path.display()))?;
+        // Record the artifact's whole-file checksum in the store manifest
+        // (when the store has one) so `grass verify` and later loads can
+        // detect bit rot in the fitted FIMs.
+        if let Some(mut man) = Manifest::load(dir.as_ref())? {
+            man.precond_crc = Some(crc32c(&bytes));
+            man.save(dir.as_ref())?;
+        }
         Ok(path)
     }
 
@@ -628,6 +636,23 @@ impl PrecondArtifact {
     /// not a multi-gigabyte allocation attempt.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let path = Self::path(&dir);
+        // Whole-file checksum against the store manifest, when recorded: a
+        // bit-flipped FIM payload fails here even though the header still
+        // parses cleanly and every length check passes.
+        if let Some(man) = Manifest::load(dir.as_ref())? {
+            if let Some(want) = man.precond_crc {
+                let (_, got) = file_crc32c(&path).map_err(|e| {
+                    anyhow!("reading precond artifact {}: {e}", path.display())
+                })?;
+                ensure!(
+                    got == want,
+                    "precond artifact at {} failed its checksum (manifest records 0x{want:08x}, \
+                     file hashes to 0x{got:08x}) — the file is corrupt; refit with `grass fit` \
+                     or pass --no-artifact",
+                    path.display()
+                );
+            }
+        }
         let mut f = std::fs::File::open(&path)
             .with_context(|| format!("opening precond artifact {}", path.display()))?;
         let file_len = f.metadata()?.len();

@@ -39,7 +39,7 @@
 use super::blockwise::BlockLayout;
 use super::fim::FimAccumulator;
 use super::precond::{apply_rows_parallel, PrecondArtifact, PrecondSpec, Preconditioner};
-use crate::store::{RowGroups, StoreReader};
+use crate::store::{ReadGuard, ReadLog, RetryPolicy, RowGroups, StoreReader};
 use crate::util::par;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::ops::Range;
@@ -66,6 +66,20 @@ pub struct StreamOpts {
     /// valid for the store, the FIM ingest pass is skipped entirely and
     /// the preconditioner is built from the artifact's fitted FIMs.
     pub artifact: Option<Arc<PrecondArtifact>>,
+    /// Retry policy for shard reads: transient errors back off and retry;
+    /// the default is fail-fast (no retries), matching the pre-retry
+    /// behaviour exactly.
+    pub retry: RetryPolicy,
+    /// Degraded mode: quarantine corrupt shards and keep scoring the
+    /// surviving rows (their score columns stay 0) instead of aborting.
+    /// Inspect [`StreamedCache::coverage`] after a run to see what was
+    /// lost.
+    pub skip_corrupt: bool,
+    /// Shared read log — quarantined shards and retry counts accumulate
+    /// here across every pass (FIM fit, self-influence, score stream) so
+    /// the final coverage report sees the union. Clones of these opts
+    /// share the log through the `Arc`.
+    pub log: Arc<ReadLog>,
 }
 
 impl Default for StreamOpts {
@@ -75,6 +89,9 @@ impl Default for StreamOpts {
             workers: 0,
             groups: None,
             artifact: None,
+            retry: RetryPolicy::none(),
+            skip_corrupt: false,
+            log: Arc::default(),
         }
     }
 }
@@ -194,12 +211,19 @@ pub(crate) fn stream_block_fims(
     let workers = opts.effective_workers().min(blocks.len()).max(1);
     let next = AtomicUsize::new(0);
     let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let guard = ReadGuard {
+        reader,
+        retry: opts.retry.clone(),
+        skip_corrupt: opts.skip_corrupt,
+        log: &opts.log,
+    };
     let parts: Vec<(Vec<FimAccumulator>, usize)> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 let next = &next;
                 let error = &error;
                 let blocks = &blocks;
+                let guard = &guard;
                 s.spawn(move || {
                     let mut accs: Vec<FimAccumulator> =
                         layout.dims.iter().map(|&d| FimAccumulator::new(d)).collect();
@@ -216,13 +240,18 @@ pub(crate) fn stream_block_fims(
                             break;
                         }
                         let b = blocks[i];
-                        if let Err(e) = reader.read_rows(b.start, b.rows, &mut buf[..b.rows * k])
-                        {
-                            let mut g = error.lock().unwrap();
-                            if g.is_none() {
-                                *g = Some(e);
+                        match guard.read_block(b, &mut buf[..b.rows * k]) {
+                            Ok(true) => {}
+                            // Quarantined shard: the FIM simply sees fewer
+                            // rows — surviving rows still fit a solver.
+                            Ok(false) => continue,
+                            Err(e) => {
+                                let mut g = error.lock().unwrap();
+                                if g.is_none() {
+                                    *g = Some(e);
+                                }
+                                break;
                             }
-                            break;
                         }
                         for row in buf[..b.rows * k].chunks(k) {
                             for (l, acc) in accs.iter_mut().enumerate() {
@@ -280,10 +309,13 @@ pub(crate) fn stream_self_influence(
     // per-row entries are written once, so that path stays lossless.
     let out = Mutex::new(vec![0.0f64; out_len]);
     let ranges = opts.ranges();
-    reader.par_for_each_block(
+    reader.par_for_each_block_guarded(
         opts.chunk_rows(k),
         &ranges,
         opts.effective_workers(),
+        &opts.retry,
+        opts.skip_corrupt,
+        &opts.log,
         |_, b, data, scratch| {
             if scratch.len() < data.len() {
                 scratch.resize(data.len(), 0.0);
@@ -357,10 +389,13 @@ pub(crate) fn stream_scores(
     // scratch never exceeds max(chunk_rows × k, m) floats.
     let span = (chunk_rows * k / m).max(1);
     let ranges = opts.ranges();
-    reader.par_for_each_block(
+    reader.par_for_each_block_guarded(
         chunk_rows,
         &ranges,
         opts.effective_workers(),
+        &opts.retry,
+        opts.skip_corrupt,
+        &opts.log,
         |_, b, data, scratch| {
             precondition_chunk(data, b.rows, k, pre);
             let gi = match &opts.groups {
@@ -413,6 +448,67 @@ pub(crate) fn stream_scores(
         .collect())
 }
 
+/// How much of the train set a (possibly degraded) streaming run actually
+/// scored. An undegraded run reports full coverage with no quarantined
+/// shards; under `--skip-corrupt`, quarantined shards subtract their
+/// selected rows from `rows_scored` and the run is
+/// [`Coverage::is_degraded`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Coverage {
+    /// Rows the run was asked to score (the row-group selection, or all
+    /// store rows).
+    pub rows_total: usize,
+    /// Rows that actually contributed (total minus rows lost to
+    /// quarantined shards).
+    pub rows_scored: usize,
+    /// Sorted indices of quarantined shards.
+    pub quarantined: Vec<usize>,
+    /// Shard-read retries attempted across every pass of the run.
+    pub retries_attempted: u64,
+}
+
+impl Coverage {
+    /// True when any selected row went unscored.
+    pub fn is_degraded(&self) -> bool {
+        self.rows_scored < self.rows_total || !self.quarantined.is_empty()
+    }
+
+    /// Fold another streaming pass's coverage in: row counts accumulate,
+    /// quarantined shard sets union, retries accumulate. Used by
+    /// multi-checkpoint scorers whose per-checkpoint caches each stream
+    /// the store once.
+    pub fn merge(&mut self, other: &Coverage) {
+        self.rows_total += other.rows_total;
+        self.rows_scored += other.rows_scored;
+        for &s in &other.quarantined {
+            if !self.quarantined.contains(&s) {
+                self.quarantined.push(s);
+            }
+        }
+        self.quarantined.sort_unstable();
+        self.retries_attempted += other.retries_attempted;
+    }
+
+    /// One-line human summary, e.g.
+    /// `"480/512 rows scored (93.8%) | quarantined shards: [2] | retries attempted: 0"`.
+    pub fn describe(&self) -> String {
+        let pct = if self.rows_total == 0 {
+            100.0
+        } else {
+            100.0 * self.rows_scored as f64 / self.rows_total as f64
+        };
+        format!(
+            "{}/{} rows scored ({pct:.1}%) | quarantined shards: {:?} | retries attempted: {}",
+            self.rows_scored, self.rows_total, self.quarantined, self.retries_attempted
+        )
+    }
+}
+
+/// Length of the intersection of two half-open row ranges.
+fn overlap(a: &Range<usize>, b: &Range<usize>) -> usize {
+    a.end.min(b.end).saturating_sub(a.start.max(b.start))
+}
+
 /// Scoring state an engine retains after a streamed ingest: the store
 /// handle (re-streamed at attribute time), the fitted preconditioner, and
 /// the eagerly computed self-influence diagonal. At no point does more
@@ -429,6 +525,9 @@ pub(crate) struct StreamedCache {
     /// Store row count snapshot (revalidated whenever the store is
     /// re-opened for a score pass).
     n: usize,
+    /// Shard row stride snapshot — maps quarantined shard indices back to
+    /// row ranges for coverage accounting.
+    shard_rows: usize,
     /// Score columns this cache produces (train rows, or groups).
     out_cols: usize,
 }
@@ -477,12 +576,41 @@ impl StreamedCache {
             dir: reader.dir().to_path_buf(),
             k: reader.meta.k,
             n: reader.meta.n,
+            shard_rows: reader.meta.shard_rows,
             out_cols: opts.out_cols(reader.meta.n),
             opts: opts.clone(),
             pre,
             self_inf,
             fim_rows,
         })
+    }
+
+    /// Coverage of this cache's streaming passes so far: selected rows
+    /// minus rows lost to quarantined shards, plus the retry count from
+    /// the shared [`ReadLog`]. Call after a score pass — quarantines
+    /// accumulate as passes touch bad shards.
+    pub fn coverage(&self) -> Coverage {
+        let rows_total = self.opts.selected_rows(self.n);
+        let quarantined = self.opts.log.quarantined();
+        let stride = self.shard_rows.max(1);
+        let mut lost = 0usize;
+        for &s in &quarantined {
+            let shard_range = s * stride..((s + 1) * stride).min(self.n);
+            lost += match &self.opts.groups {
+                Some(g) => g
+                    .ranges
+                    .iter()
+                    .map(|r| overlap(r, &shard_range))
+                    .sum::<usize>(),
+                None => shard_range.len(),
+            };
+        }
+        Coverage {
+            rows_total,
+            rows_scored: rows_total.saturating_sub(lost),
+            quarantined,
+            retries_attempted: self.opts.log.retries_attempted(),
+        }
     }
 
     /// Score columns (train rows, or groups under grouping).
@@ -661,6 +789,16 @@ impl DualCache {
             DualCache::Streamed(sc) => sc.describe(),
         }
     }
+
+    /// Coverage of the streaming passes, when this cache streams.
+    /// In-memory caches never degrade — rows that made it into memory were
+    /// read whole — so they report `None`.
+    pub fn coverage(&self) -> Option<Coverage> {
+        match self {
+            DualCache::Streamed(sc) => Some(sc.coverage()),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -693,8 +831,7 @@ mod tests {
         let o = StreamOpts {
             mem_budget: 2 * 2 * 4 * 8 * 2, // 2 workers × 2 rows × k=8 × 2 bufs
             workers: 2,
-            groups: None,
-            artifact: None,
+            ..StreamOpts::default()
         };
         assert_eq!(o.chunk_rows(8), 2);
         assert!(o.resident_bytes(8) <= o.mem_budget);
@@ -702,8 +839,7 @@ mod tests {
         let tiny = StreamOpts {
             mem_budget: 1,
             workers: 1,
-            groups: None,
-            artifact: None,
+            ..StreamOpts::default()
         };
         assert_eq!(tiny.chunk_rows(1024), 1);
     }
@@ -718,8 +854,7 @@ mod tests {
         let opts = StreamOpts {
             mem_budget: 3 * 2 * 4 * k * 2,
             workers: 3,
-            groups: None,
-            artifact: None,
+            ..StreamOpts::default()
         };
         let (fims, seen) = stream_block_fims(&r, &opts, &layout).unwrap();
         assert_eq!(seen, n);
@@ -783,8 +918,7 @@ mod tests {
         let opts = StreamOpts {
             mem_budget: 2 * 3 * 4 * k * 2,
             workers: 2,
-            groups: None,
-            artifact: None,
+            ..StreamOpts::default()
         };
         let got = stream_scores(&r, &opts, &queries, m, None).unwrap();
         let want = crate::attrib::graddot::graddot_scores(&rows, n, k, &queries, m);
@@ -827,5 +961,117 @@ mod tests {
             assert!((a[i] - b[i]).abs() <= 1e-6 * (1.0 + a[i].abs()), "at {i}");
         }
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn degraded_scores_zero_quarantined_rows_and_match_elsewhere() {
+        let dir = tmpdir("degraded");
+        let (n, k, m) = (20, 4, 3);
+        let rows = write_store(&dir, n, k, 5, 8); // 4 shards × 5 rows
+        let r = StoreReader::open(&dir).unwrap();
+        let mut rng = Pcg::new(11);
+        let queries: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
+        // Truncate shard 2 (rows 10..15).
+        let p = dir.join("shard_0002.bin");
+        let len = std::fs::metadata(&p).unwrap().len();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&p)
+            .unwrap()
+            .set_len(len - 8)
+            .unwrap();
+        // Without skip_corrupt the corruption is fatal.
+        let strict = StreamOpts::with_budget(4096);
+        assert!(stream_scores(&r, &strict, &queries, m, None).is_err());
+        // With it, surviving rows match a clean run and dead rows score 0.
+        let opts = StreamOpts {
+            skip_corrupt: true,
+            ..StreamOpts::with_budget(4096)
+        };
+        let got = stream_scores(&r, &opts, &queries, m, None).unwrap();
+        let want = crate::attrib::graddot::graddot_scores(&rows, n, k, &queries, m);
+        for q in 0..m {
+            for i in 0..n {
+                let v = got[q * n + i];
+                if (10..15).contains(&i) {
+                    assert_eq!(v, 0.0, "quarantined row {i} must stay zero");
+                } else {
+                    let w = want[q * n + i];
+                    assert!(
+                        (v - w).abs() < 1e-5 * (1.0 + w.abs()),
+                        "row {i}: {v} vs {w}"
+                    );
+                }
+            }
+        }
+        assert_eq!(opts.log.quarantined(), vec![2]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn transient_faults_retry_to_success() {
+        let dir = tmpdir("transient");
+        let (n, k, m) = (12, 3, 2);
+        let rows = write_store(&dir, n, k, 4, 13);
+        let mut r = StoreReader::open(&dir).unwrap();
+        let plan = crate::store::FaultPlan::new();
+        plan.fail_read(1, crate::store::FaultKind::Transient, 0, 2);
+        r.inject_faults(plan);
+        let mut rng = Pcg::new(4);
+        let queries: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
+        let opts = StreamOpts {
+            retry: RetryPolicy {
+                retries: 3,
+                backoff: std::time::Duration::from_millis(1),
+                seed: 0,
+            },
+            ..StreamOpts::with_budget(4096)
+        };
+        let got = stream_scores(&r, &opts, &queries, m, None).unwrap();
+        let want = crate::attrib::graddot::graddot_scores(&rows, n, k, &queries, m);
+        for i in 0..m * n {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-5 * (1.0 + want[i].abs()),
+                "score {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+        assert!(opts.log.retries_attempted() >= 2, "retries were recorded");
+        assert!(opts.log.quarantined().is_empty(), "nothing was quarantined");
+        // Without retries the same plan is fatal.
+        let plan = crate::store::FaultPlan::new();
+        plan.fail_read(1, crate::store::FaultKind::Transient, 0, 1);
+        let mut r2 = StoreReader::open(&dir).unwrap();
+        r2.inject_faults(plan);
+        let fail_fast = StreamOpts::with_budget(4096);
+        assert!(stream_scores(&r2, &fail_fast, &queries, m, None).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn coverage_accounts_quarantined_rows_and_describes() {
+        let mut c = Coverage {
+            rows_total: 512,
+            rows_scored: 480,
+            quarantined: vec![2],
+            retries_attempted: 0,
+        };
+        assert!(c.is_degraded());
+        let s = c.describe();
+        assert!(s.contains("480/512"), "{s}");
+        assert!(s.contains("93.8%"), "{s}");
+        assert!(s.contains("[2]"), "{s}");
+        c.merge(&Coverage {
+            rows_total: 512,
+            rows_scored: 512,
+            quarantined: vec![2, 5],
+            retries_attempted: 3,
+        });
+        assert_eq!(c.rows_total, 1024);
+        assert_eq!(c.rows_scored, 992);
+        assert_eq!(c.quarantined, vec![2, 5]);
+        assert_eq!(c.retries_attempted, 3);
+        assert!(!Coverage::default().is_degraded());
     }
 }

@@ -155,6 +155,19 @@ impl Attributor for Trak {
                 .unwrap_or_else(|| self.precond.spec_string()),
         }
     }
+
+    fn coverage(&self) -> Option<super::Coverage> {
+        let mut merged: Option<super::Coverage> = None;
+        for ck in &self.checkpoints {
+            if let Some(c) = ck.coverage() {
+                match &mut merged {
+                    Some(m) => m.merge(&c),
+                    None => merged = Some(c),
+                }
+            }
+        }
+        merged
+    }
 }
 
 #[cfg(test)]

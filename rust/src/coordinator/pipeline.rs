@@ -30,6 +30,11 @@ pub struct PipelineConfig {
     /// this pipeline writes sits comfortably inside the streamed
     /// [`crate::attrib::StreamOpts::mem_budget`] at attribute time.
     pub mem_budget: usize,
+    /// Resume an interrupted cache run: inventory the shards an earlier
+    /// (killed) run committed to `store_dir`, validate their checksums,
+    /// and restart gradient computation from the first missing row instead
+    /// of recomputing everything (see [`StoreWriter::resume`]).
+    pub resume: bool,
 }
 
 impl Default for PipelineConfig {
@@ -40,6 +45,7 @@ impl Default for PipelineConfig {
             queue_depth: 4,
             shard_rows: crate::store::DEFAULT_SHARD_ROWS,
             mem_budget: crate::attrib::DEFAULT_MEM_BUDGET,
+            resume: false,
         }
     }
 }
@@ -199,24 +205,33 @@ impl<'a> CachePipeline<'a> {
         // geometry alongside the spec string so the attribute stage can
         // rebuild the exact compressor bank (and `open_checked` can reject
         // mismatched readers).
-        let writer = Mutex::new(StoreWriter::create_described(
-            store_dir,
-            StoreMeta {
-                k,
-                n: 0,
-                shard_rows: self.cfg.effective_shard_rows(k),
-                method: method.to_string(),
-                seed,
-                model: self.model.clone(),
-                input_dim: if factored { 0 } else { p },
-                layer_dims: if factored {
-                    meta.layers.iter().map(|l| (l.d_in, l.d_out)).collect()
-                } else {
-                    vec![]
-                },
-                density: 1.0,
+        let target = StoreMeta {
+            k,
+            n: 0,
+            shard_rows: self.cfg.effective_shard_rows(k),
+            method: method.to_string(),
+            seed,
+            model: self.model.clone(),
+            input_dim: if factored { 0 } else { p },
+            layer_dims: if factored {
+                meta.layers.iter().map(|l| (l.d_in, l.d_out)).collect()
+            } else {
+                vec![]
             },
-        )?);
+            density: 1.0,
+        };
+        let (writer, committed) = if self.cfg.resume {
+            let (w, committed) = StoreWriter::resume(store_dir, &target)?;
+            println!(
+                "resuming: {committed} rows already committed at {}, continuing from row \
+                 {committed}",
+                store_dir.display()
+            );
+            (w, committed)
+        } else {
+            (StoreWriter::create_described(store_dir, target)?, 0)
+        };
+        let writer = Mutex::new(writer);
         let seq = meta.seq.unwrap_or(1);
         // Probe dense batches for CSR conversion only when every kernel in
         // the bank can actually win from it (SJLT / LoGra / FactSjlt —
@@ -244,8 +259,11 @@ impl<'a> CachePipeline<'a> {
 
         std::thread::scope(|s| {
             // ---- stage 1: batcher ----
+            // Under resume the first `committed` rows are already safely
+            // on disk (checksum-validated full shards) — batching restarts
+            // at the first missing row.
             s.spawn(|| {
-                for start in (0..n).step_by(batch) {
+                for start in (committed..n).step_by(batch) {
                     let idx: Vec<usize> = (start..(start + batch).min(n)).collect();
                     if batch_tx.send(idx).is_err() {
                         return;
@@ -520,7 +538,7 @@ impl<'a> CachePipeline<'a> {
             s.spawn(move || {
                 let rx: Receiver<(usize, usize, Vec<f32>)> = row_rx;
                 let mut pending: BTreeMap<usize, (usize, Vec<f32>)> = BTreeMap::new();
-                let mut next = 0usize;
+                let mut next = committed;
                 // Reorder-buffer accounting: pending bytes are bounded in
                 // practice by queue_depth × batch, and the observed peak is
                 // surfaced through metrics so the bound stays checkable.

@@ -370,6 +370,8 @@ pub fn run_density(
                     mean_nnz: Some(mean_nnz),
                     precond_fit_ms: None,
                     precond_apply_ms: None,
+                    resume_skipped_rows: None,
+                    retries_attempted: None,
                     extra: vec![
                         ("tokens_per_sec".to_string(), sparse_tps),
                         ("dense_tokens_per_sec".to_string(), dense_tps),
@@ -482,6 +484,8 @@ pub fn run_bench(
             mean_nnz: Some((t * elems_per_token) as f64),
             precond_fit_ms: None,
             precond_apply_ms: None,
+            resume_skipped_rows: None,
+            retries_attempted: None,
             extra: vec![
                 ("tokens_per_sec".to_string(), tps),
                 ("cache_tokens_per_sec".to_string(), cache),

@@ -5,11 +5,15 @@
 //! grass exp table1a|table1b|table1c|table1d [--fast] [--ks ...] [...]
 //! grass exp table2 [--ks 256,1024,4096] [--tokens 256] [--reps 8]
 //! grass exp fig9 [--kl 256]
-//! grass cache --model mlp --method sjlt:k=1024 --n 1000 --store DIR
+//! grass cache --model mlp --method sjlt:k=1024 --n 1000 --store DIR [--resume]
 //! grass fit --store DIR [--precond damped|blockwise|eig:r]
 //! grass attribute --store DIR --queries 8 --scorer if [--precond ...] [--damping grid]
+//! grass verify --store DIR [--upgrade]
 //! grass info
 //! ```
+//!
+//! Exit codes: 0 success, 1 error, 2 verify failed / corruption detected,
+//! 3 attribution completed degraded (`--skip-corrupt` quarantined shards).
 
 use anyhow::{anyhow, bail, ensure, Result};
 use grass::attrib::precond::select;
@@ -28,28 +32,34 @@ use grass::exp;
 use grass::models::shapes::ModelShapes;
 use grass::runtime::{Arg, Runtime};
 use grass::sketch::{MethodSpec, Scratch};
-use grass::store::{RowGroups, StoreMeta, StoreReader, StoreWriter, DEFAULT_SHARD_ROWS};
+use grass::store::{
+    RetryPolicy, RowGroups, StoreMeta, StoreReader, StoreWriter, DEFAULT_SHARD_ROWS,
+};
 use grass::util::cli::Args;
 use std::path::Path;
 
 fn main() {
-    if let Err(e) = run() {
-        eprintln!("error: {e:#}");
-        std::process::exit(1);
+    match run() {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
     }
 }
 
-fn run() -> Result<()> {
+fn run() -> Result<i32> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
-        Some("exp") => run_exp(&args),
-        Some("cache") => run_cache(&args),
-        Some("fit") => run_fit(&args),
+        Some("exp") => run_exp(&args).map(|()| 0),
+        Some("cache") => run_cache(&args).map(|()| 0),
+        Some("fit") => run_fit(&args).map(|()| 0),
         Some("attribute") => run_attribute(&args),
-        Some("info") => run_info(),
+        Some("verify") => run_verify(&args),
+        Some("info") => run_info().map(|()| 0),
         _ => {
             print_help();
-            Ok(())
+            Ok(0)
         }
     }
 }
@@ -64,6 +74,8 @@ USAGE:
               [--n N] [--p P] [--seed S] [--store DIR] [--fast]
               [--density 0.01 (flat synth: sparse gradients via CSR kernels)]
               [--shard-rows R|0=auto] [--mem-budget 256M]
+              [--resume (continue a killed run from its committed shards)]
+              [--throttle-ms T (slow the synthetic writer; crash-testing aid)]
   grass fit --store DIR [--precond damped|blockwise|eig:r[,λ]] [--damping 1e-3]
             [--mem-budget 256M] [--workers N]
   grass attribute --store DIR [--queries M] [--scorer if|graddot|trak|tracin|blockwise]
@@ -71,7 +83,14 @@ USAGE:
                   [--damping 1e-3|grid] [--top 5] [--self-influence]
                   [--mem-budget 256M] [--workers N] [--row-groups 0..512,512..1024|block=N]
                   [--no-artifact] [--method <spec> --seed S to cross-check the store]
+                  [--retries 2] [--retry-backoff 50 (ms)]
+                  [--skip-corrupt (quarantine bad shards, score the rest; exit 3)]
+  grass verify --store DIR [--upgrade (write a manifest over a legacy store)]
   grass info
+
+EXIT CODES:
+  0 success | 1 error | 2 verify failed / corruption detected |
+  3 attribution completed degraded (--skip-corrupt quarantined shards)
 
 COMMON FLAGS:
   --ks 512,1024,2048    compression dimensions
@@ -97,7 +116,13 @@ selects λ over the paper's grid by LDS on held-out subsets. For banks whose ker
 logra, factsjlt), the pipeline's grad workers density-probe each
 gradient batch and auto-dispatch between the dense batch kernels and the
 nnz-proportional CSR kernels (sparse/dense counts and observed input
-density appear in the pipeline metrics). Full reference: docs/CLI.md;
+density appear in the pipeline metrics). Stores are fault-tolerant:
+every shard commits atomically (tmpfile → fsync → rename) with its
+CRC32C recorded in manifest.json, `grass cache --resume` restarts a
+killed run from its committed shards, `grass verify` scans every
+checksum, and `grass attribute --retries/--skip-corrupt` retries
+transient read errors and can score around corrupt shards (coverage
+reported, exit code 3). Full reference: docs/CLI.md;
 data-flow and memory model: docs/ARCHITECTURE.md."
     );
 }
@@ -234,13 +259,30 @@ fn run_cache(args: &Args) -> Result<()> {
 }
 
 /// Pipeline config from the shared cache-stage flags: `--shard-rows`
-/// (0 = auto-size from the budget) and `--mem-budget`.
+/// (0 = auto-size from the budget), `--mem-budget`, and `--resume`.
 fn cache_pipeline_config(args: &Args) -> Result<PipelineConfig> {
     Ok(PipelineConfig {
         shard_rows: args.get_usize("shard-rows", DEFAULT_SHARD_ROWS)?,
         mem_budget: args.get_bytes("mem-budget", DEFAULT_MEM_BUDGET)?,
+        resume: args.get_bool("resume"),
         ..PipelineConfig::default()
     })
+}
+
+/// Open the store writer for a synthetic cache run: fresh, or — under
+/// `--resume` — positioned after the checksum-validated shards a killed
+/// earlier run committed.
+fn open_writer(dir: &Path, meta: StoreMeta, resume: bool) -> Result<(StoreWriter, usize)> {
+    if resume {
+        let (w, committed) = StoreWriter::resume(dir, &meta)?;
+        println!(
+            "resuming: {committed} rows already committed at {}, continuing from row {committed}",
+            dir.display()
+        );
+        Ok((w, committed))
+    } else {
+        Ok((StoreWriter::create_described(dir, meta)?, 0))
+    }
 }
 
 fn cache_with_runtime(
@@ -324,6 +366,15 @@ fn cache_synthetic(
         "--density applies to the flat synthetic gradient source; \
          factorized specs cache dense synthetic hooks"
     );
+    let resume = args.get_bool("resume");
+    // Crash-testing aid: sleep this long after each pushed chunk so an
+    // external SIGKILL can land mid-run deterministically.
+    let throttle = args.get_u64("throttle-ms", 0)?;
+    let nap = |ms: u64| {
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    };
     let mut scratch = Scratch::new();
     let meta = if spec.is_factorized() {
         let layers = default_synth_layers();
@@ -331,13 +382,12 @@ fn cache_synthetic(
         let bank = spec.build_bank(&shapes, seed)?;
         let cs = bank.as_factored().expect("factorized spec builds a factored bank");
         let k = bank.output_dim();
-        let mut w = StoreWriter::create_described(
-            dir,
-            StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, cfg.effective_shard_rows(k))?,
-        )?;
+        let described =
+            StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, cfg.effective_shard_rows(k))?;
+        let (mut w, committed) = open_writer(dir, described, resume)?;
         let hooks = SynthHooks::new(layers, seed);
         let mut row = vec![0.0f32; k];
-        for i in 0..n {
+        for i in committed..n {
             let sample = hooks.sample(i);
             let mut off = 0;
             for (li, c) in cs.iter().enumerate() {
@@ -346,6 +396,7 @@ fn cache_synthetic(
                 off += c.output_dim();
             }
             w.push(&row)?;
+            nap(throttle);
         }
         w.finish()?
     } else {
@@ -357,11 +408,14 @@ fn cache_synthetic(
         let mut described =
             StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, cfg.effective_shard_rows(k))?;
         described.density = density;
-        let mut w = StoreWriter::create_described(dir, described)?;
+        let (mut w, committed) = open_writer(dir, described, resume)?;
         let src = SynthGrads::with_density(p, seed, density as f32);
         let chunk = 64usize;
         let mut out = vec![0.0f32; chunk * k];
-        let mut start = 0;
+        // The synthetic source is deterministic per row index, so
+        // restarting at the committed-row watermark reproduces exactly the
+        // rows an uninterrupted run would have written there.
+        let mut start = committed;
         while start < n {
             let count = chunk.min(n - start);
             if density < 1.0 {
@@ -375,6 +429,7 @@ fn cache_synthetic(
             }
             w.push_batch(&out[..count * k])?;
             start += count;
+            nap(throttle);
         }
         w.finish()?
     };
@@ -422,8 +477,7 @@ fn run_fit(args: &Args) -> Result<()> {
     let opts = StreamOpts {
         mem_budget: args.get_bytes("mem-budget", DEFAULT_MEM_BUDGET)?,
         workers: args.get_usize("workers", 0)?,
-        groups: None,
-        artifact: None,
+        ..StreamOpts::default()
     };
     let (artifact, fit_dur) =
         grass::util::bench::time_once(|| PrecondArtifact::fit(&reader, &opts, &layout));
@@ -447,7 +501,7 @@ fn run_fit(args: &Args) -> Result<()> {
 // attribute
 // ---------------------------------------------------------------------------
 
-fn run_attribute(args: &Args) -> Result<()> {
+fn run_attribute(args: &Args) -> Result<i32> {
     let store = args.get_or("store", "grass_store").to_string();
     let m = args.get_usize("queries", 8)?;
     let scorer = args.get_or("scorer", "if").to_string();
@@ -463,7 +517,9 @@ fn run_attribute(args: &Args) -> Result<()> {
 
     let reader = StoreReader::open(&store)?;
     // Out-of-core streaming knobs: byte budget for the per-worker shard
-    // buffers, worker count, and optional GGDA-style row grouping.
+    // buffers, worker count, optional GGDA-style row grouping, and the
+    // fault-tolerance policy (retry transient read errors; optionally
+    // quarantine corrupt shards and keep scoring the rest).
     let mut opts = StreamOpts {
         mem_budget: args.get_bytes("mem-budget", DEFAULT_MEM_BUDGET)?,
         workers: args.get_usize("workers", 0)?,
@@ -471,7 +527,13 @@ fn run_attribute(args: &Args) -> Result<()> {
             Some(s) => Some(parse_row_groups(s, reader.meta.n)?),
             None => None,
         },
-        artifact: None,
+        retry: RetryPolicy {
+            retries: args.get_usize("retries", 2)?,
+            backoff: std::time::Duration::from_millis(args.get_u64("retry-backoff", 50)?),
+            seed: reader.meta.seed,
+        },
+        skip_corrupt: args.get_bool("skip-corrupt"),
+        ..StreamOpts::default()
     };
     let grouped = opts.groups.is_some();
     let spec = reader.meta.spec()?;
@@ -621,7 +683,71 @@ fn run_attribute(args: &Args) -> Result<()> {
             .collect();
         println!("top-{top} self-influence: {}", parts.join(", "));
     }
-    Ok(())
+    // Degraded-mode accounting: a run that quarantined shards reports
+    // exactly what it scored and exits with the distinct "completed
+    // degraded" code so callers can tell partial from full results.
+    if let Some(cov) = attributor.coverage() {
+        if opts.skip_corrupt || cov.is_degraded() {
+            println!("coverage: {}", cov.describe());
+        }
+        if cov.is_degraded() {
+            println!("attribution completed degraded (exit code 3)");
+            return Ok(3);
+        }
+    }
+    Ok(0)
+}
+
+// ---------------------------------------------------------------------------
+// verify
+// ---------------------------------------------------------------------------
+
+/// `grass verify`: full integrity scan of a store — every shard re-read
+/// and compared (exact length + CRC32C) against `manifest.json`, plus
+/// `precond.bin` when its checksum was recorded. Exit 0 when everything
+/// matches, 2 when anything is missing, mis-sized, checksum-failed, or the
+/// store has no manifest (`--upgrade` writes one in place over a healthy
+/// legacy store).
+fn run_verify(args: &Args) -> Result<i32> {
+    let store = args.get_or("store", "grass_store").to_string();
+    let mut reader = StoreReader::open(&store)?;
+    if !reader.has_manifest() {
+        if args.get_bool("upgrade") {
+            let man = reader.write_manifest()?;
+            println!(
+                "upgraded: checksummed {} shard(s) into manifest.json at {store}",
+                man.shards.len()
+            );
+        } else {
+            println!(
+                "store at {store} has no manifest.json — shard checksums cannot be verified; \
+                 run `grass verify --store {store} --upgrade` to checksum it in place"
+            );
+            return Ok(2);
+        }
+    }
+    let report = reader.verify_checksums()?;
+    for (idx, status) in &report.shards {
+        println!("shard {idx:04}: {status}");
+    }
+    if let Some(status) = report.precond {
+        println!("precond.bin: {status}");
+    }
+    if report.all_ok() {
+        println!(
+            "verify: OK ({} shards, {} rows)",
+            reader.num_shards(),
+            reader.meta.n
+        );
+        Ok(0)
+    } else {
+        let bad = report.shards.iter().filter(|(_, s)| !s.is_ok()).count();
+        println!(
+            "verify: FAILED ({bad} of {} shards bad)",
+            reader.num_shards()
+        );
+        Ok(2)
+    }
 }
 
 /// `--damping grid` (App. B.2): fit (or reuse) the FIMs once, score every

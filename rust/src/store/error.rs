@@ -1,0 +1,140 @@
+//! Typed store I/O errors, so retry and quarantine logic can match on
+//! *kind* instead of parsing message strings.
+//!
+//! The vendored `anyhow` flattens wrapped errors into a string chain (no
+//! `downcast_ref`), so [`StoreError`] is the direct return type of
+//! [`super::StoreReader::read_rows`] / [`super::StoreReader::read_shard`];
+//! callers that don't care about the kind keep using `?` — the blanket
+//! `From<E: std::error::Error>` converts it into `anyhow::Error` with the
+//! same descriptive message.
+
+use std::fmt;
+
+/// What went wrong, coarsely: drives retry-vs-quarantine decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreErrorKind {
+    /// The bytes on disk are wrong (truncated / checksum-failed / short
+    /// read mid-file). Retrying will not help; quarantine or abort.
+    Corrupt,
+    /// The operation failed in a way that may succeed on retry (generic
+    /// I/O error: interrupted syscall, flaky network filesystem, …).
+    Transient,
+    /// The target does not exist (shard file missing, row out of range).
+    Missing,
+}
+
+impl StoreErrorKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StoreErrorKind::Corrupt => "corrupt",
+            StoreErrorKind::Transient => "transient",
+            StoreErrorKind::Missing => "missing",
+        }
+    }
+}
+
+/// A classified store read/write failure: the kind, the shard it hit
+/// (when one is identifiable), and a message as descriptive as the old
+/// stringly errors — `Display` is unchanged from the pre-typed era, so
+/// existing regression tests on message content keep passing.
+#[derive(Debug, Clone)]
+pub struct StoreError {
+    kind: StoreErrorKind,
+    shard: Option<usize>,
+    message: String,
+}
+
+impl StoreError {
+    pub fn corrupt(shard: Option<usize>, message: impl fmt::Display) -> Self {
+        Self {
+            kind: StoreErrorKind::Corrupt,
+            shard,
+            message: message.to_string(),
+        }
+    }
+
+    pub fn transient(shard: Option<usize>, message: impl fmt::Display) -> Self {
+        Self {
+            kind: StoreErrorKind::Transient,
+            shard,
+            message: message.to_string(),
+        }
+    }
+
+    pub fn missing(shard: Option<usize>, message: impl fmt::Display) -> Self {
+        Self {
+            kind: StoreErrorKind::Missing,
+            shard,
+            message: message.to_string(),
+        }
+    }
+
+    /// Classify an `std::io::Error`: `NotFound` → Missing, `UnexpectedEof`
+    /// → Corrupt (the file ended where data was promised), everything else
+    /// → Transient (worth a retry).
+    pub fn from_io(shard: Option<usize>, context: impl fmt::Display, e: std::io::Error) -> Self {
+        let kind = match e.kind() {
+            std::io::ErrorKind::NotFound => StoreErrorKind::Missing,
+            std::io::ErrorKind::UnexpectedEof => StoreErrorKind::Corrupt,
+            _ => StoreErrorKind::Transient,
+        };
+        Self {
+            kind,
+            shard,
+            message: format!("{context}: {e}"),
+        }
+    }
+
+    pub fn kind(&self) -> StoreErrorKind {
+        self.kind
+    }
+
+    /// The shard index this error is attributable to, when known.
+    pub fn shard(&self) -> Option<usize> {
+        self.shard
+    }
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_classification() {
+        use std::io::{Error, ErrorKind};
+        let miss = StoreError::from_io(Some(3), "shard 3", Error::new(ErrorKind::NotFound, "gone"));
+        assert_eq!(miss.kind(), StoreErrorKind::Missing);
+        assert_eq!(miss.shard(), Some(3));
+        let eof = StoreError::from_io(None, "read", Error::new(ErrorKind::UnexpectedEof, "eof"));
+        assert_eq!(eof.kind(), StoreErrorKind::Corrupt);
+        let other = StoreError::from_io(None, "read", Error::new(ErrorKind::Other, "flaky"));
+        assert_eq!(other.kind(), StoreErrorKind::Transient);
+    }
+
+    #[test]
+    fn display_keeps_context_and_cause() {
+        use std::io::{Error, ErrorKind};
+        let e = StoreError::from_io(Some(1), "shard 1 at /x", Error::new(ErrorKind::Other, "boom"));
+        let s = e.to_string();
+        assert!(s.contains("shard 1 at /x"), "{s}");
+        assert!(s.contains("boom"), "{s}");
+    }
+
+    #[test]
+    fn converts_into_anyhow_via_question_mark() {
+        fn f() -> anyhow::Result<()> {
+            Err(StoreError::corrupt(Some(2), "shard 2 failed its checksum"))?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(e.to_string().contains("shard 2"), "{e}");
+    }
+}

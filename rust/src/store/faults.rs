@@ -1,0 +1,151 @@
+//! Fault injection for store I/O — the test shim behind
+//! `cfg(any(test, feature = "fault-injection"))`.
+//!
+//! A [`FaultPlan`] scripts failures deterministically: "fail shard `i` on
+//! its `n`-th read, `t` times, with a transient / corrupt error" for the
+//! reader, and "tear the write of shard `i`" for the writer (the commit
+//! truncates the tmpfile and errors before the rename, simulating a crash
+//! mid-`write`). `tests/fault_tolerance.rs` and the pipeline_e2e recovery
+//! stage drive kill-and-resume, retry-recovery, and degraded-scoring
+//! proofs through this shim; release builds never compile it.
+
+use super::error::StoreError;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// What kind of failure to inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A retryable I/O error (classified `StoreErrorKind::Transient`).
+    Transient,
+    /// A non-retryable data error (classified `StoreErrorKind::Corrupt`).
+    Corrupt,
+    /// Writer-side: truncate the shard tmpfile and fail before the rename.
+    TornWrite,
+}
+
+#[derive(Debug)]
+struct Rule {
+    shard: usize,
+    kind: FaultKind,
+    /// Fire only after this many successful reads of the shard.
+    after_reads: usize,
+    /// How many times the rule still fires.
+    remaining: usize,
+}
+
+/// A scripted set of failures, shared (via `Arc`) between the test and
+/// the reader/writer it is injected into.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    rules: Mutex<Vec<Rule>>,
+    reads: Mutex<BTreeMap<usize, usize>>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Script: reads of `shard` fail with `kind`, starting after
+    /// `after_reads` successful reads, for `times` occurrences.
+    pub fn fail_read(&self, shard: usize, kind: FaultKind, after_reads: usize, times: usize) {
+        self.rules.lock().unwrap().push(Rule {
+            shard,
+            kind,
+            after_reads,
+            remaining: times,
+        });
+    }
+
+    /// Script: the next commit of `shard` is torn (truncated tmpfile +
+    /// error before rename).
+    pub fn fail_write(&self, shard: usize) {
+        self.rules.lock().unwrap().push(Rule {
+            shard,
+            kind: FaultKind::TornWrite,
+            after_reads: 0,
+            remaining: 1,
+        });
+    }
+
+    /// Reader hook: called once per `read_rows` touching `shard`.
+    pub fn check_read(&self, shard: usize) -> Result<(), StoreError> {
+        let seen = {
+            let mut reads = self.reads.lock().unwrap();
+            let c = reads.entry(shard).or_insert(0);
+            *c += 1;
+            *c
+        };
+        let mut rules = self.rules.lock().unwrap();
+        for r in rules.iter_mut() {
+            if r.shard == shard
+                && r.kind != FaultKind::TornWrite
+                && r.remaining > 0
+                && seen > r.after_reads
+            {
+                r.remaining -= 1;
+                return match r.kind {
+                    FaultKind::Transient => Err(StoreError::transient(
+                        Some(shard),
+                        format!("injected transient fault on shard {shard} (read {seen})"),
+                    )),
+                    FaultKind::Corrupt => Err(StoreError::corrupt(
+                        Some(shard),
+                        format!("injected corrupt fault on shard {shard} (read {seen})"),
+                    )),
+                    FaultKind::TornWrite => unreachable!(),
+                };
+            }
+        }
+        Ok(())
+    }
+
+    /// Writer hook: `true` exactly when a torn-write rule for `shard` is
+    /// armed (consumes one firing).
+    pub fn take_torn_write(&self, shard: usize) -> bool {
+        let mut rules = self.rules.lock().unwrap();
+        for r in rules.iter_mut() {
+            if r.shard == shard && r.kind == FaultKind::TornWrite && r.remaining > 0 {
+                r.remaining -= 1;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::StoreErrorKind;
+
+    #[test]
+    fn rules_fire_after_threshold_then_exhaust() {
+        let plan = FaultPlan::new();
+        plan.fail_read(1, FaultKind::Transient, 1, 2);
+        assert!(plan.check_read(1).is_ok(), "read 1 is under the threshold");
+        let e = plan.check_read(1).unwrap_err();
+        assert_eq!(e.kind(), StoreErrorKind::Transient);
+        assert_eq!(e.shard(), Some(1));
+        assert!(plan.check_read(1).is_err(), "second firing");
+        assert!(plan.check_read(1).is_ok(), "rule exhausted");
+        assert!(plan.check_read(0).is_ok(), "other shards untouched");
+    }
+
+    #[test]
+    fn corrupt_rules_classify_as_corrupt() {
+        let plan = FaultPlan::new();
+        plan.fail_read(0, FaultKind::Corrupt, 0, 1);
+        assert_eq!(plan.check_read(0).unwrap_err().kind(), StoreErrorKind::Corrupt);
+    }
+
+    #[test]
+    fn torn_write_is_consumed_once() {
+        let plan = FaultPlan::new();
+        plan.fail_write(2);
+        assert!(!plan.take_torn_write(1));
+        assert!(plan.take_torn_write(2));
+        assert!(!plan.take_torn_write(2));
+    }
+}

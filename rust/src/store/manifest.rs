@@ -1,0 +1,236 @@
+//! The store integrity manifest (`manifest.json`): a versioned record of
+//! every committed shard's row count, byte length, and CRC32C, plus the
+//! checksum of `precond.bin` when an artifact has been fitted.
+//!
+//! **On-disk invariant: only manifest-listed shards are real.** The writer
+//! commits each shard atomically — tmpfile → fsync → rename → manifest
+//! rewrite (itself write-temp-then-rename) — so after a crash the manifest
+//! names exactly the shards whose bytes are durable, and anything else in
+//! the directory (`*.bin.tmp`, a shard past the manifest tail) is garbage
+//! that resume/cleanup may delete.
+
+use super::checksum::crc32c;
+use crate::util::json::Json;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Manifest file name inside a store directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// Current manifest schema version.
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// One committed shard: its row count, exact byte length, and CRC32C.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardEntry {
+    pub rows: usize,
+    pub bytes: u64,
+    pub crc32c: u32,
+}
+
+/// The parsed manifest. `precond_crc` is recorded by `grass fit` when it
+/// writes `precond.bin`, so artifact loads verify end-to-end integrity.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Manifest {
+    pub shards: Vec<ShardEntry>,
+    pub precond_crc: Option<u32>,
+}
+
+impl Manifest {
+    /// Total rows across committed shards.
+    pub fn committed_rows(&self) -> usize {
+        self.shards.iter().map(|s| s.rows).sum()
+    }
+
+    /// Load `manifest.json` from a store directory. `Ok(None)` when the
+    /// file is absent (a legacy, pre-manifest store); `Err` when present
+    /// but unreadable or from an unknown schema version.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Option<Self>> {
+        let path = dir.as_ref().join(MANIFEST_FILE);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading {}", path.display()));
+            }
+        };
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let version = j.req("version")?.as_u64().unwrap_or(0);
+        ensure!(
+            version == MANIFEST_VERSION,
+            "{} is manifest version {version}, this build reads version {MANIFEST_VERSION}",
+            path.display()
+        );
+        let mut shards = Vec::new();
+        let listed = j
+            .req("shards")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("{}: shards is not an array", path.display()))?;
+        for (i, entry) in listed.iter().enumerate() {
+            let rows = entry
+                .req("rows")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("{}: shard {i} has a bad row count", path.display()))?;
+            let bytes = entry
+                .req("bytes")?
+                .as_u64()
+                .ok_or_else(|| anyhow!("{}: shard {i} has a bad byte count", path.display()))?;
+            let crc = entry
+                .req("crc32c")?
+                .as_u64()
+                .ok_or_else(|| anyhow!("{}: shard {i} has a bad crc32c", path.display()))?;
+            shards.push(ShardEntry {
+                rows,
+                bytes,
+                crc32c: crc as u32,
+            });
+        }
+        let precond_crc = j.get("precond_crc").and_then(|v| v.as_u64()).map(|v| v as u32);
+        Ok(Some(Self { shards, precond_crc }))
+    }
+
+    fn to_json(&self) -> Json {
+        // CRC32C values fit a u32, exactly representable as f64 — the
+        // in-repo Json numeric type — well below the 2^53 integer limit.
+        let shards = self
+            .shards
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("rows", Json::Num(s.rows as f64)),
+                    ("bytes", Json::Num(s.bytes as f64)),
+                    ("crc32c", Json::Num(s.crc32c as f64)),
+                ])
+            })
+            .collect();
+        let mut pairs = vec![
+            ("version", Json::Num(MANIFEST_VERSION as f64)),
+            ("shards", Json::Arr(shards)),
+        ];
+        if let Some(crc) = self.precond_crc {
+            pairs.push(("precond_crc", Json::Num(crc as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Atomically (re)write `manifest.json` into a store directory.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let path = dir.as_ref().join(MANIFEST_FILE);
+        write_atomic(&path, self.to_json().to_string_pretty().as_bytes())
+    }
+}
+
+/// Write `bytes` to `path` via the atomic sequence: write a `.tmp`
+/// sibling, fsync it, rename over the target, fsync the parent directory.
+/// A reader never observes a half-written file — it sees the old content
+/// or the new, nothing in between.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension(match path.extension().and_then(|e| e.to_str()) {
+        Some(ext) => format!("{ext}.tmp"),
+        None => "tmp".to_string(),
+    });
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    f.write_all(bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    f.sync_all()
+        .with_context(|| format!("syncing {}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", path.display()))?;
+    if let Some(parent) = path.parent() {
+        sync_dir(parent);
+    }
+    Ok(())
+}
+
+/// Fsync a directory so a just-renamed entry is durable. Best-effort and
+/// Unix-only: directory fsync is not portable, and a failure here only
+/// weakens durability (not atomicity), so errors are ignored.
+pub fn sync_dir(dir: &Path) {
+    #[cfg(unix)]
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+}
+
+/// CRC32C of a whole file (for verify scans and manifest upgrades).
+pub fn file_crc32c(path: &Path) -> std::io::Result<(u64, u32)> {
+    let bytes = std::fs::read(path)?;
+    Ok((bytes.len() as u64, crc32c(&bytes)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("grass_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrips_through_disk() {
+        let dir = tmpdir("roundtrip");
+        let m = Manifest {
+            shards: vec![
+                ShardEntry { rows: 4, bytes: 64, crc32c: 0xDEAD_BEEF },
+                ShardEntry { rows: 2, bytes: 32, crc32c: 7 },
+            ],
+            precond_crc: Some(0xFFFF_FFFF),
+        };
+        m.save(&dir).unwrap();
+        let back = Manifest::load(&dir).unwrap().unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.committed_rows(), 6);
+        // No stray tmp file survives the atomic rewrite.
+        assert!(!dir.join("manifest.json.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn absent_manifest_is_none_not_an_error() {
+        let dir = tmpdir("absent");
+        assert!(Manifest::load(&dir).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_version_is_rejected() {
+        let dir = tmpdir("version");
+        std::fs::write(
+            dir.join(MANIFEST_FILE),
+            r#"{"version": 99, "shards": []}"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(err.contains("version 99"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_atomic_replaces_existing_content() {
+        let dir = tmpdir("atomic");
+        let path = dir.join("target.json");
+        write_atomic(&path, b"old").unwrap();
+        write_atomic(&path, b"new").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"new");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_crc_matches_slice_crc() {
+        let dir = tmpdir("filecrc");
+        let path = dir.join("blob.bin");
+        std::fs::write(&path, b"123456789").unwrap();
+        let (len, crc) = file_crc32c(&path).unwrap();
+        assert_eq!(len, 9);
+        assert_eq!(crc, 0xE306_9283);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -2,12 +2,32 @@
 //!
 //! Layout: a store directory holds `store.json` (metadata: k, n, shard
 //! size, method spec) plus `shard_NNNN.bin` files of raw little-endian f32
-//! rows, and optionally a fitted-preconditioner artifact
-//! ([`PRECOND_FILE`], written by `grass fit`). The writer streams rows in order with a bounded in-memory buffer
-//! (backpressure comes from the coordinator's bounded channels); the reader
-//! iterates shard-by-shard so attribution never needs the whole cache in
-//! memory — at Llama scale the cache is hundreds of GB (n·k·4 bytes) and
-//! this layout is what makes the attribute stage streamable.
+//! rows, a checksummed integrity [`manifest`] (`manifest.json`), and
+//! optionally a fitted-preconditioner artifact ([`PRECOND_FILE`], written
+//! by `grass fit`). The writer streams rows in order with a bounded
+//! in-memory buffer (backpressure comes from the coordinator's bounded
+//! channels) and commits each shard atomically — tmpfile → fsync → rename
+//! → manifest append — so a killed cache run loses at most the shard in
+//! flight and `grass cache --resume` restarts from the first missing row.
+//! The reader iterates shard-by-shard so attribution never needs the whole
+//! cache in memory — at Llama scale the cache is hundreds of GB (n·k·4
+//! bytes) and this layout is what makes the attribute stage streamable.
+//! Streaming reads can go through a [`retry`] guard for transient-error
+//! backoff and degraded-mode (quarantine-and-continue) scoring.
+
+pub mod checksum;
+pub mod error;
+#[cfg(any(test, feature = "fault-injection"))]
+pub mod faults;
+pub mod manifest;
+pub mod retry;
+
+pub use checksum::{crc32c, Crc32c};
+pub use error::{StoreError, StoreErrorKind};
+#[cfg(any(test, feature = "fault-injection"))]
+pub use faults::{FaultKind, FaultPlan};
+pub use manifest::{Manifest, ShardEntry, MANIFEST_FILE};
+pub use retry::{ReadGuard, ReadLog, RetryPolicy};
 
 use crate::models::shapes::ModelShapes;
 use crate::sketch::MethodSpec;
@@ -21,6 +41,12 @@ use std::sync::Mutex;
 
 /// Rows per shard file.
 pub const DEFAULT_SHARD_ROWS: usize = 4096;
+
+/// Name of the in-progress marker written while a cache run is under way:
+/// the full [`StoreMeta`] minus the final row count. Its presence means
+/// the store is *resumable*, not readable; [`StoreWriter::finish`]
+/// replaces it with the real `store.json`.
+pub const PARTIAL_FILE: &str = "store.partial.json";
 
 /// File name of the persisted fitted-preconditioner artifact inside a
 /// store directory (written by `grass fit` /
@@ -195,13 +221,56 @@ fn shard_path(dir: &Path, idx: usize) -> PathBuf {
     dir.join(format!("shard_{idx:04}.bin"))
 }
 
-/// Streaming writer: rows arrive in order, shards roll automatically.
+fn shard_tmp_path(dir: &Path, idx: usize) -> PathBuf {
+    dir.join(format!("shard_{idx:04}.bin.tmp"))
+}
+
+/// Remove leftover `shard_*.bin.tmp` staging files — uncommitted writes
+/// that the on-disk invariant (only manifest-listed shards are real)
+/// declares garbage. Best-effort: cleanup failures only leave clutter.
+fn remove_tmp_shards(dir: &Path) {
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with("shard_") && name.ends_with(".bin.tmp") {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
+}
+
+/// The shard currently being written, staged in a `.bin.tmp` sibling with
+/// a running CRC32C until [`StoreWriter`] commits it.
+struct ShardInFlight {
+    file: BufWriter<std::fs::File>,
+    crc: Crc32c,
+    rows: usize,
+    bytes: u64,
+    tmp: PathBuf,
+}
+
+/// Streaming writer: rows arrive in order, shards roll automatically, and
+/// every full shard is committed atomically — staged tmpfile → fsync →
+/// rename → `manifest.json` append (itself an atomic rewrite) — so a crash
+/// at any instant loses at most the shard in flight.
+///
+/// **On-disk invariant: only manifest-listed shards are real.** Anything
+/// else in the directory (`*.bin.tmp` staging files, a renamed shard the
+/// manifest never recorded) is garbage that [`StoreWriter::resume`] and
+/// `Drop` delete.
 pub struct StoreWriter {
     dir: PathBuf,
     meta: StoreMeta,
-    current: Option<BufWriter<std::fs::File>>,
-    rows_in_shard: usize,
+    current: Option<ShardInFlight>,
     shard_idx: usize,
+    manifest: Manifest,
+    finished: bool,
+    /// Set when an injected torn write fired: `Drop` then leaves the torn
+    /// tmpfile in place so crash-recovery tests can observe it.
+    torn: bool,
+    #[cfg(any(test, feature = "fault-injection"))]
+    faults: Option<std::sync::Arc<FaultPlan>>,
 }
 
 impl StoreWriter {
@@ -241,14 +310,147 @@ impl StoreWriter {
         ensure!(meta.k > 0, "store row width k must be positive (got 0)");
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)?;
+        // A fresh cache restarts from row zero: drop any previous store's
+        // metadata and shards up front so a crash mid-recache can never
+        // leave a stale store.json pointing at new shards. A fitted
+        // `precond.bin` is deliberately kept — attribute-time validation
+        // rejects a stale artifact with a descriptive error.
+        let _ = std::fs::remove_file(dir.join("store.json"));
+        if let Ok(entries) = std::fs::read_dir(&dir) {
+            for e in entries.flatten() {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with("shard_")
+                    && (name.ends_with(".bin") || name.ends_with(".bin.tmp"))
+                {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
         meta.n = 0;
+        // The in-progress marker records the run's full identity so
+        // `--resume` can refuse a mismatched restart.
+        manifest::write_atomic(
+            &dir.join(PARTIAL_FILE),
+            meta.to_json().to_string_pretty().as_bytes(),
+        )?;
+        let man = Manifest::default();
+        man.save(&dir)?;
         Ok(Self {
             dir,
             meta,
             current: None,
-            rows_in_shard: 0,
             shard_idx: 0,
+            manifest: man,
+            finished: false,
+            torn: false,
+            #[cfg(any(test, feature = "fault-injection"))]
+            faults: None,
         })
+    }
+
+    /// Reopen an interrupted cache run: validate every manifest-listed
+    /// shard on disk (exact length + CRC32C), discard anything broken or
+    /// unlisted, and return the writer positioned after the last good
+    /// shard plus the number of rows already committed — the caller
+    /// restarts compression from that row. `expect` guards against
+    /// resuming with a different method/seed/geometry than the run being
+    /// resumed (`n` is ignored: the marker records 0).
+    pub fn resume(dir: impl AsRef<Path>, expect: &StoreMeta) -> Result<(Self, usize)> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join(PARTIAL_FILE)).with_context(|| {
+            format!(
+                "no in-progress cache to resume at {} (missing {PARTIAL_FILE} — a \
+                 finished store has store.json; re-run without --resume to recache)",
+                dir.display()
+            )
+        })?;
+        let stored = StoreMeta::from_json(&Json::parse(&text)?)?;
+        let same = stored.k == expect.k
+            && stored.shard_rows == expect.shard_rows
+            && stored.method == expect.method
+            && stored.seed == expect.seed
+            && stored.model == expect.model
+            && stored.input_dim == expect.input_dim
+            && stored.layer_dims == expect.layer_dims
+            && (stored.density - expect.density).abs() < 1e-12;
+        ensure!(
+            same,
+            "cannot resume at {}: the interrupted run used method '{}' seed {} k {} \
+             shard_rows {} but this run wants method '{}' seed {} k {} shard_rows {} — \
+             delete the directory to start over",
+            dir.display(),
+            stored.method,
+            stored.seed,
+            stored.k,
+            stored.shard_rows,
+            expect.method,
+            expect.seed,
+            expect.k,
+            expect.shard_rows
+        );
+        let mut man = Manifest::load(&dir)?.unwrap_or_default();
+        // Validate committed shards in order; the first invalid one (and
+        // everything after it) is discarded and rewritten.
+        let mut keep = 0usize;
+        for (i, entry) in man.shards.iter().enumerate() {
+            let path = shard_path(&dir, i);
+            let good = match std::fs::read(&path) {
+                Ok(bytes) => {
+                    bytes.len() as u64 == entry.bytes
+                        && entry.bytes == (entry.rows * stored.k * 4) as u64
+                        && crc32c(&bytes) == entry.crc32c
+                }
+                Err(_) => false,
+            };
+            if !good {
+                eprintln!(
+                    "warning: resume found committed shard {i} invalid on disk — \
+                     discarding it and every later shard"
+                );
+                break;
+            }
+            keep = i + 1;
+        }
+        // A ragged last shard is only committed by `finish`, which also
+        // writes store.json — but a crash between the two can leave one.
+        // Appending after it would misplace later rows, so rewrite it.
+        if keep > 0 && man.shards[keep - 1].rows < stored.shard_rows {
+            keep -= 1;
+        }
+        man.shards.truncate(keep);
+        let mut idx = keep;
+        while shard_path(&dir, idx).exists() {
+            let p = shard_path(&dir, idx);
+            std::fs::remove_file(&p).with_context(|| format!("removing {}", p.display()))?;
+            idx += 1;
+        }
+        remove_tmp_shards(&dir);
+        man.save(&dir)?;
+        let committed = man.committed_rows();
+        let mut meta = stored;
+        meta.n = committed;
+        Ok((
+            Self {
+                dir,
+                meta,
+                current: None,
+                shard_idx: keep,
+                manifest: man,
+                finished: false,
+                torn: false,
+                #[cfg(any(test, feature = "fault-injection"))]
+                faults: None,
+            },
+            committed,
+        ))
+    }
+
+    /// Attach a fault plan: shard commits consult it for scripted torn
+    /// writes (test / `fault-injection` builds only).
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub fn inject_faults(&mut self, plan: std::sync::Arc<FaultPlan>) {
+        self.faults = Some(plan);
     }
 
     /// Append one compressed row.
@@ -256,17 +458,24 @@ impl StoreWriter {
         if row.len() != self.meta.k {
             bail!("row len {} != k {}", row.len(), self.meta.k);
         }
-        if self.current.is_none() || self.rows_in_shard == self.meta.shard_rows {
+        let full = match &self.current {
+            None => true,
+            Some(s) => s.rows == self.meta.shard_rows,
+        };
+        if full {
             self.roll()?;
         }
-        let w = self.current.as_mut().unwrap();
-        // Little-endian f32; safe, portable serialisation.
+        let s = self.current.as_mut().unwrap();
+        // Little-endian f32; safe, portable serialisation. The bytes feed
+        // the shard's running CRC32C as they are written.
         let mut buf = Vec::with_capacity(row.len() * 4);
         for &v in row {
             buf.extend_from_slice(&v.to_le_bytes());
         }
-        w.write_all(&buf)?;
-        self.rows_in_shard += 1;
+        s.file.write_all(&buf)?;
+        s.crc.update(&buf);
+        s.rows += 1;
+        s.bytes += buf.len() as u64;
         self.meta.n += 1;
         Ok(())
     }
@@ -280,29 +489,99 @@ impl StoreWriter {
     }
 
     fn roll(&mut self) -> Result<()> {
-        if let Some(mut w) = self.current.take() {
-            w.flush()?;
-            self.shard_idx += 1;
-        }
-        let path = shard_path(&self.dir, self.shard_idx);
-        self.current = Some(BufWriter::new(
-            std::fs::File::create(&path)
-                .with_context(|| format!("creating {}", path.display()))?,
-        ));
-        self.rows_in_shard = 0;
+        self.commit_current()?;
+        let tmp = shard_tmp_path(&self.dir, self.shard_idx);
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        self.current = Some(ShardInFlight {
+            file: BufWriter::new(file),
+            crc: Crc32c::new(),
+            rows: 0,
+            bytes: 0,
+            tmp,
+        });
         Ok(())
     }
 
-    /// Flush shards and write metadata. Returns the final meta.
-    pub fn finish(mut self) -> Result<StoreMeta> {
-        if let Some(mut w) = self.current.take() {
-            w.flush()?;
+    /// Commit the in-flight shard: flush + fsync the tmpfile, rename it to
+    /// its final `shard_NNNN.bin` name, fsync the directory, and append
+    /// the shard's entry (rows, bytes, CRC32C) to `manifest.json` — itself
+    /// an atomic rewrite. A crash at any point in this sequence leaves the
+    /// manifest naming exactly the durable shards.
+    fn commit_current(&mut self) -> Result<()> {
+        let Some(mut s) = self.current.take() else {
+            return Ok(());
+        };
+        if s.rows == 0 {
+            drop(s.file);
+            let _ = std::fs::remove_file(&s.tmp);
+            return Ok(());
         }
-        std::fs::write(
-            self.dir.join("store.json"),
-            self.meta.to_json().to_string_pretty(),
+        s.file
+            .flush()
+            .with_context(|| format!("flushing {}", s.tmp.display()))?;
+        let file = s
+            .file
+            .into_inner()
+            .map_err(|e| anyhow!("flushing {}: {e}", s.tmp.display()))?;
+        #[cfg(any(test, feature = "fault-injection"))]
+        if let Some(plan) = &self.faults {
+            if plan.take_torn_write(self.shard_idx) {
+                // Simulate a crash mid-write: half the payload is durable
+                // in the tmpfile, nothing was renamed, no manifest entry
+                // exists. `torn` keeps Drop from tidying the evidence.
+                let _ = file.set_len(s.bytes / 2);
+                let _ = file.sync_all();
+                self.torn = true;
+                bail!(
+                    "injected torn write on shard {} (tmpfile truncated, commit aborted)",
+                    self.shard_idx
+                );
+            }
+        }
+        file.sync_all()
+            .with_context(|| format!("syncing {}", s.tmp.display()))?;
+        drop(file);
+        let path = shard_path(&self.dir, self.shard_idx);
+        std::fs::rename(&s.tmp, &path)
+            .with_context(|| format!("renaming {} into place", path.display()))?;
+        manifest::sync_dir(&self.dir);
+        self.manifest.shards.push(ShardEntry {
+            rows: s.rows,
+            bytes: s.bytes,
+            crc32c: s.crc.finalize(),
+        });
+        self.manifest.save(&self.dir)?;
+        self.shard_idx += 1;
+        Ok(())
+    }
+
+    /// Commit the final (possibly ragged) shard, write `store.json`
+    /// atomically, and remove the in-progress marker. Returns the final
+    /// meta. On error, `Drop` cleans up the uncommitted staging file.
+    pub fn finish(mut self) -> Result<StoreMeta> {
+        self.commit_current()?;
+        manifest::write_atomic(
+            &self.dir.join("store.json"),
+            self.meta.to_json().to_string_pretty().as_bytes(),
         )?;
-        Ok(self.meta)
+        let _ = std::fs::remove_file(self.dir.join(PARTIAL_FILE));
+        self.finished = true;
+        Ok(self.meta.clone())
+    }
+}
+
+impl Drop for StoreWriter {
+    fn drop(&mut self) {
+        if self.finished || self.torn {
+            return;
+        }
+        // Abandoned mid-run (error path, or a caller dropping the writer
+        // without `finish`): close the in-flight handle and clear
+        // uncommitted staging files. Committed shards, the manifest, and
+        // the in-progress marker stay — `resume` picks up from them.
+        self.current = None;
+        remove_tmp_shards(&self.dir);
     }
 }
 
@@ -458,24 +737,137 @@ impl ShardCursor<'_> {
     }
 }
 
+/// Outcome of verifying one file in [`StoreReader::verify_checksums`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardStatus {
+    /// Bytes on disk match the recorded length and CRC32C.
+    Ok,
+    /// The file is gone.
+    Missing,
+    /// Wrong length on disk.
+    SizeMismatch { expected: u64, actual: u64 },
+    /// Right length, wrong CRC32C — bytes were altered in place.
+    ChecksumMismatch { expected: u32, actual: u32 },
+}
+
+impl ShardStatus {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, ShardStatus::Ok)
+    }
+}
+
+impl std::fmt::Display for ShardStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardStatus::Ok => write!(f, "ok"),
+            ShardStatus::Missing => write!(f, "missing"),
+            ShardStatus::SizeMismatch { expected, actual } => write!(
+                f,
+                "size mismatch ({actual} bytes on disk, {expected} recorded)"
+            ),
+            ShardStatus::ChecksumMismatch { expected, actual } => write!(
+                f,
+                "checksum mismatch (file hashes to 0x{actual:08x}, manifest records \
+                 0x{expected:08x})"
+            ),
+        }
+    }
+}
+
+/// Full integrity-scan result (see [`StoreReader::verify_checksums`]).
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    /// Per-shard status, in shard order.
+    pub shards: Vec<(usize, ShardStatus)>,
+    /// Status of `precond.bin` — `Some` only when the artifact's checksum
+    /// is recorded in the manifest (or it is recorded but the file is
+    /// gone); `None` when there is nothing to verify.
+    pub precond: Option<ShardStatus>,
+    /// Whether a manifest backed the scan — without one only file sizes
+    /// can be checked.
+    pub has_manifest: bool,
+}
+
+impl VerifyReport {
+    pub fn all_ok(&self) -> bool {
+        let precond_ok = match self.precond {
+            Some(s) => s.is_ok(),
+            None => true,
+        };
+        self.shards.iter().all(|(_, s)| s.is_ok()) && precond_ok
+    }
+}
+
 /// Reader over a finished store.
 pub struct StoreReader {
     dir: PathBuf,
     pub meta: StoreMeta,
+    manifest: Option<Manifest>,
+    #[cfg(any(test, feature = "fault-injection"))]
+    faults: Option<std::sync::Arc<FaultPlan>>,
 }
 
 impl StoreReader {
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
-        let text = std::fs::read_to_string(dir.join("store.json"))
-            .with_context(|| format!("opening store at {}", dir.display()))?;
+        let text = match std::fs::read_to_string(dir.join("store.json")) {
+            Ok(t) => t,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::NotFound
+                    && dir.join(PARTIAL_FILE).exists() =>
+            {
+                bail!(
+                    "store at {} is an unfinished cache run (found {PARTIAL_FILE} but no \
+                     store.json) — finish it with `grass cache ... --resume` first",
+                    dir.display()
+                );
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("opening store at {}", dir.display()));
+            }
+        };
         let meta = StoreMeta::from_json(&Json::parse(&text)?)?;
         ensure!(
             meta.shard_rows > 0,
             "store at {} has invalid shard_rows = 0 in store.json",
             dir.display()
         );
-        Ok(Self { dir, meta })
+        let manifest = Manifest::load(&dir)?;
+        match &manifest {
+            Some(man) => {
+                // Open-time verification is counts-only (cheap, and a
+                // shard truncated behind our back still surfaces as a
+                // descriptive read-time error); `verify_checksums` does
+                // the full integrity scan.
+                let num_shards = meta.n.div_ceil(meta.shard_rows);
+                ensure!(
+                    man.shards.len() == num_shards && man.committed_rows() == meta.n,
+                    "store at {}: manifest.json lists {} shards / {} rows but store.json \
+                     records {} shards / {} rows — the store is inconsistent; recache it",
+                    dir.display(),
+                    man.shards.len(),
+                    man.committed_rows(),
+                    num_shards,
+                    meta.n
+                );
+            }
+            None => {
+                eprintln!(
+                    "warning: store at {} has no manifest.json (written before checksummed \
+                     manifests) — integrity cannot be verified; upgrade in place with \
+                     `grass verify --store {} --upgrade`",
+                    dir.display(),
+                    dir.display()
+                );
+            }
+        }
+        Ok(Self {
+            dir,
+            meta,
+            manifest,
+            #[cfg(any(test, feature = "fault-injection"))]
+            faults: None,
+        })
     }
 
     /// Open and validate against the requesting method spec + seed: a
@@ -523,35 +915,186 @@ impl StoreReader {
         &self.dir
     }
 
+    /// Whether the store carries an integrity manifest (`manifest.json`).
+    pub fn has_manifest(&self) -> bool {
+        self.manifest.is_some()
+    }
+
+    /// The parsed manifest, when present.
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
+    }
+
+    /// Attach a fault plan: subsequent `read_rows` calls consult it per
+    /// shard (test / `fault-injection` builds only).
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub fn inject_faults(&mut self, plan: std::sync::Arc<FaultPlan>) {
+        self.faults = Some(plan);
+    }
+
+    /// The attached fault plan, if any (test / `fault-injection` builds
+    /// only) — lets re-opened readers inherit an injection script.
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub fn fault_plan(&self) -> Option<std::sync::Arc<FaultPlan>> {
+        self.faults.clone()
+    }
+
+    /// Full integrity scan: re-read every shard and compare exact length +
+    /// CRC32C against the manifest (size-only when the store predates
+    /// manifests), plus `precond.bin` when its checksum was recorded. Read
+    /// errors other than "file missing" still abort — this reports
+    /// *corruption*, not environment flakiness.
+    pub fn verify_checksums(&self) -> Result<VerifyReport> {
+        let shard_rows = self.meta.shard_rows.max(1);
+        let mut shards = Vec::with_capacity(self.num_shards());
+        for idx in 0..self.num_shards() {
+            let path = shard_path(&self.dir, idx);
+            let rows = (self.meta.n - idx * shard_rows).min(shard_rows);
+            let expected_len = (rows * self.meta.k * 4) as u64;
+            let status = match std::fs::read(&path) {
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => ShardStatus::Missing,
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("reading shard {idx} at {}", path.display()));
+                }
+                Ok(bytes) => {
+                    let entry = self.manifest.as_ref().and_then(|m| m.shards.get(idx));
+                    let want_len = entry.map_or(expected_len, |s| s.bytes);
+                    if bytes.len() as u64 != want_len {
+                        ShardStatus::SizeMismatch {
+                            expected: want_len,
+                            actual: bytes.len() as u64,
+                        }
+                    } else if let Some(entry) = entry {
+                        let actual = crc32c(&bytes);
+                        if actual != entry.crc32c {
+                            ShardStatus::ChecksumMismatch {
+                                expected: entry.crc32c,
+                                actual,
+                            }
+                        } else {
+                            ShardStatus::Ok
+                        }
+                    } else {
+                        ShardStatus::Ok
+                    }
+                }
+            };
+            shards.push((idx, status));
+        }
+        let precond_path = self.dir.join(PRECOND_FILE);
+        let precond = match (
+            self.manifest.as_ref().and_then(|m| m.precond_crc),
+            precond_path.exists(),
+        ) {
+            (Some(expected), true) => {
+                let (_, actual) = manifest::file_crc32c(&precond_path)
+                    .with_context(|| format!("reading {}", precond_path.display()))?;
+                Some(if actual == expected {
+                    ShardStatus::Ok
+                } else {
+                    ShardStatus::ChecksumMismatch { expected, actual }
+                })
+            }
+            (Some(_), false) => Some(ShardStatus::Missing),
+            _ => None,
+        };
+        Ok(VerifyReport {
+            shards,
+            precond,
+            has_manifest: self.manifest.is_some(),
+        })
+    }
+
+    /// Upgrade a legacy store in place: hash every shard file (refusing if
+    /// any has the wrong length — an upgrade must not bless corruption)
+    /// and write a fresh `manifest.json`, recording the `precond.bin`
+    /// checksum when an artifact is present.
+    pub fn write_manifest(&mut self) -> Result<&Manifest> {
+        let shard_rows = self.meta.shard_rows.max(1);
+        let mut man = Manifest::default();
+        for idx in 0..self.num_shards() {
+            let path = shard_path(&self.dir, idx);
+            let rows = (self.meta.n - idx * shard_rows).min(shard_rows);
+            let expected = (rows * self.meta.k * 4) as u64;
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading shard {idx} at {}", path.display()))?;
+            ensure!(
+                bytes.len() as u64 == expected,
+                "cannot write a manifest over shard {idx} at {}: it holds {} bytes but \
+                 {rows} rows × k = {} columns require {expected} bytes — repair the store \
+                 before upgrading",
+                path.display(),
+                bytes.len(),
+                self.meta.k
+            );
+            man.shards.push(ShardEntry {
+                rows,
+                bytes: expected,
+                crc32c: crc32c(&bytes),
+            });
+        }
+        let precond_path = self.dir.join(PRECOND_FILE);
+        if precond_path.exists() {
+            let (_, crc) = manifest::file_crc32c(&precond_path)
+                .with_context(|| format!("reading {}", precond_path.display()))?;
+            man.precond_crc = Some(crc);
+        }
+        man.save(&self.dir)?;
+        self.manifest = Some(man);
+        Ok(self.manifest.as_ref().unwrap())
+    }
+
     /// Read `rows` rows starting at global row `start` into `buf`
     /// (`rows × k` values). The block must lie within one shard — the unit
-    /// [`StoreReader::plan_blocks`] hands out. A truncated or corrupted
-    /// shard file is a descriptive error naming the shard index and the
-    /// expected-vs-actual byte lengths.
-    pub fn read_rows(&self, start: usize, rows: usize, buf: &mut [f32]) -> Result<()> {
+    /// [`StoreReader::plan_blocks`] hands out. Errors are typed
+    /// [`StoreError`]s (corrupt / transient / missing, with the shard
+    /// index when identifiable) so retry and quarantine logic can act on
+    /// the *kind*; the messages stay as descriptive as ever — a truncated
+    /// shard names the shard index and expected-vs-actual byte lengths.
+    pub fn read_rows(
+        &self,
+        start: usize,
+        rows: usize,
+        buf: &mut [f32],
+    ) -> std::result::Result<(), StoreError> {
         if rows == 0 {
             return Ok(());
         }
         let k = self.meta.k;
-        ensure!(
-            start + rows <= self.meta.n,
-            "rows {start}..{} out of range (store has {} rows)",
-            start + rows,
-            self.meta.n
-        );
-        ensure!(
-            buf.len() >= rows * k,
-            "buffer holds {} values but the block needs {} ({rows} rows × k = {k})",
-            buf.len(),
-            rows * k
-        );
+        if start + rows > self.meta.n {
+            return Err(StoreError::missing(
+                None,
+                format!(
+                    "rows {start}..{} out of range (store has {} rows)",
+                    start + rows,
+                    self.meta.n
+                ),
+            ));
+        }
+        if buf.len() < rows * k {
+            return Err(StoreError::corrupt(
+                None,
+                format!(
+                    "buffer holds {} values but the block needs {} ({rows} rows × k = {k})",
+                    buf.len(),
+                    rows * k
+                ),
+            ));
+        }
         let shard_rows = self.meta.shard_rows.max(1);
         let shard = start / shard_rows;
         let row_in_shard = start - shard * shard_rows;
-        ensure!(
-            row_in_shard + rows <= shard_rows,
-            "row block {start}+{rows} crosses the shard {shard} boundary"
-        );
+        if row_in_shard + rows > shard_rows {
+            return Err(StoreError::corrupt(
+                Some(shard),
+                format!("row block {start}+{rows} crosses the shard {shard} boundary"),
+            ));
+        }
+        #[cfg(any(test, feature = "fault-injection"))]
+        if let Some(plan) = &self.faults {
+            plan.check_read(shard)?;
+        }
         let path = shard_path(&self.dir, shard);
         let rows_in_shard = (self.meta.n - shard * shard_rows).min(shard_rows);
         let expected = (rows_in_shard * k * 4) as u64;
@@ -561,18 +1104,27 @@ impl StoreReader {
         // (seek-based reads past a truncation point otherwise succeed
         // silently for earlier blocks). Block sizing amortises the cost.
         let actual = std::fs::metadata(&path)
-            .with_context(|| format!("shard {shard} at {}", path.display()))?
+            .map_err(|e| {
+                StoreError::from_io(Some(shard), format!("shard {shard} at {}", path.display()), e)
+            })?
             .len();
         if actual != expected {
-            bail!(
-                "shard {shard} at {} holds {actual} bytes but {rows_in_shard} rows × k = {k} \
-                 columns require {expected} bytes — the shard file is truncated or corrupted",
-                path.display()
-            );
+            return Err(StoreError::corrupt(
+                Some(shard),
+                format!(
+                    "shard {shard} at {} holds {actual} bytes but {rows_in_shard} rows × k = {k} \
+                     columns require {expected} bytes — the shard file is truncated or corrupted",
+                    path.display()
+                ),
+            ));
         }
-        let mut f = std::fs::File::open(&path)
-            .with_context(|| format!("shard {shard} at {}", path.display()))?;
-        f.seek(SeekFrom::Start((row_in_shard * k * 4) as u64))?;
+        let mut f = std::fs::File::open(&path).map_err(|e| {
+            StoreError::from_io(Some(shard), format!("shard {shard} at {}", path.display()), e)
+        })?;
+        f.seek(SeekFrom::Start((row_in_shard * k * 4) as u64))
+            .map_err(|e| {
+                StoreError::from_io(Some(shard), format!("shard {shard}: seek failed"), e)
+            })?;
         // Fixed staging buffer: the read path allocates nothing, so
         // per-worker streaming buffers are the only resident state.
         let total = rows * k;
@@ -581,8 +1133,12 @@ impl StoreReader {
         while done < total {
             let take = (total - done).min(bytes.len() / 4);
             let nb = take * 4;
-            f.read_exact(&mut bytes[..nb]).with_context(|| {
-                format!("shard {shard}: short read at value {done} of {total}")
+            f.read_exact(&mut bytes[..nb]).map_err(|e| {
+                StoreError::from_io(
+                    Some(shard),
+                    format!("shard {shard}: short read at value {done} of {total}"),
+                    e,
+                )
             })?;
             for (dst, ch) in buf[done..done + take]
                 .iter_mut()
@@ -596,13 +1152,16 @@ impl StoreReader {
     }
 
     /// Read shard `idx` fully: returns (first_row_index, rows × k data).
-    pub fn read_shard(&self, idx: usize) -> Result<(usize, Vec<f32>)> {
+    pub fn read_shard(&self, idx: usize) -> std::result::Result<(usize, Vec<f32>), StoreError> {
         let start = idx * self.meta.shard_rows.max(1);
         if start >= self.meta.n {
-            bail!(
-                "shard {idx} out of range (store has {} shards)",
-                self.num_shards()
-            );
+            return Err(StoreError::missing(
+                Some(idx),
+                format!(
+                    "shard {idx} out of range (store has {} shards)",
+                    self.num_shards()
+                ),
+            ));
         }
         let rows = (self.meta.n - start).min(self.meta.shard_rows);
         let mut data = vec![0.0f32; rows * self.meta.k];
@@ -688,6 +1247,38 @@ impl StoreReader {
     where
         F: Fn(usize, RowBlock, &mut [f32], &mut Vec<f32>) -> Result<()> + Sync,
     {
+        self.par_for_each_block_guarded(
+            chunk_rows,
+            ranges,
+            workers,
+            &RetryPolicy::none(),
+            false,
+            &ReadLog::default(),
+            f,
+        )
+    }
+
+    /// [`StoreReader::par_for_each_block`] with fault handling: every
+    /// block read goes through a [`ReadGuard`] — transient errors retry
+    /// per `retry` with jittered backoff, and with `skip_corrupt` a bad
+    /// shard is quarantined in `log` (its blocks are skipped and the
+    /// closure never sees them, leaving their outputs at the zero default)
+    /// instead of aborting the whole pass. With `skip_corrupt` off this
+    /// degenerates to first-error-wins, exactly like the plain variant.
+    #[allow(clippy::too_many_arguments)]
+    pub fn par_for_each_block_guarded<F>(
+        &self,
+        chunk_rows: usize,
+        ranges: &[Range<usize>],
+        workers: usize,
+        retry: &RetryPolicy,
+        skip_corrupt: bool,
+        log: &ReadLog,
+        f: F,
+    ) -> Result<()>
+    where
+        F: Fn(usize, RowBlock, &mut [f32], &mut Vec<f32>) -> Result<()> + Sync,
+    {
         let blocks = self.plan_blocks(chunk_rows, ranges);
         if blocks.is_empty() {
             return Ok(());
@@ -702,12 +1293,19 @@ impl StoreReader {
         .max(1);
         let next = AtomicUsize::new(0);
         let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let guard = ReadGuard {
+            reader: self,
+            retry: retry.clone(),
+            skip_corrupt,
+            log,
+        };
         std::thread::scope(|s| {
             for _ in 0..workers {
                 let next = &next;
                 let error = &error;
                 let blocks = &blocks;
                 let f = &f;
+                let guard = &guard;
                 s.spawn(move || {
                     let mut buf = vec![0.0f32; max_rows * self.meta.k];
                     let mut scratch = Vec::new();
@@ -721,9 +1319,11 @@ impl StoreReader {
                         }
                         let b = blocks[i];
                         let want = b.rows * self.meta.k;
-                        let res = self
-                            .read_rows(b.start, b.rows, &mut buf[..want])
-                            .and_then(|()| f(i, b, &mut buf[..want], &mut scratch));
+                        let res = match guard.read_block(b, &mut buf[..want]) {
+                            Ok(true) => f(i, b, &mut buf[..want], &mut scratch),
+                            Ok(false) => Ok(()),
+                            Err(e) => Err(e),
+                        };
                         if let Err(e) = res {
                             let mut g = error.lock().unwrap();
                             if g.is_none() {
@@ -1041,6 +1641,210 @@ mod tests {
         use crate::sketch::MethodSpec;
         assert!(StoreReader::open_checked(&dir, &MethodSpec::RandomMask { k: 4 }, 3).is_ok());
         assert!(StoreReader::open_checked(&dir, &MethodSpec::RandomMask { k: 4 }, 9).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    fn bare_meta(k: usize, method: &str, seed: u64, shard_rows: usize) -> StoreMeta {
+        StoreMeta {
+            k,
+            n: 0,
+            shard_rows,
+            method: method.to_string(),
+            seed,
+            model: String::new(),
+            input_dim: 0,
+            layer_dims: vec![],
+            density: 1.0,
+        }
+    }
+
+    #[test]
+    fn writer_commits_shards_atomically_with_manifest() {
+        let dir = tmpdir("manifest_commit");
+        let mut w = StoreWriter::create(&dir, 2, "rm:k=2", 0, 3).unwrap();
+        for i in 0..7 {
+            w.push(&[i as f32, 0.5]).unwrap();
+        }
+        assert!(dir.join(PARTIAL_FILE).exists(), "marker present mid-run");
+        w.finish().unwrap();
+        assert!(!dir.join(PARTIAL_FILE).exists(), "marker removed by finish");
+        let man = Manifest::load(&dir).unwrap().expect("manifest written");
+        assert_eq!(man.shards.len(), 3);
+        assert_eq!(
+            man.shards.iter().map(|s| s.rows).collect::<Vec<_>>(),
+            vec![3, 3, 1]
+        );
+        for (i, entry) in man.shards.iter().enumerate() {
+            let (len, crc) = manifest::file_crc32c(&shard_path(&dir, i)).unwrap();
+            assert_eq!(len, entry.bytes, "shard {i} length");
+            assert_eq!(crc, entry.crc32c, "shard {i} checksum");
+        }
+        // No staging leftovers anywhere in the directory.
+        for e in std::fs::read_dir(&dir).unwrap().flatten() {
+            assert!(
+                !e.file_name().to_string_lossy().ends_with(".tmp"),
+                "stray tmp file {:?}",
+                e.file_name()
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dropped_writer_resumes_from_committed_rows() {
+        // Reference: an uninterrupted run of 7 rows.
+        let refdir = tmpdir("resume_ref");
+        let mut w = StoreWriter::create(&refdir, 2, "rm:k=2", 4, 2).unwrap();
+        for i in 0..7 {
+            w.push(&[i as f32, -(i as f32)]).unwrap();
+        }
+        w.finish().unwrap();
+
+        // Interrupted: drop after 5 rows (2 committed shards + 1 in flight).
+        let dir = tmpdir("resume");
+        let mut w = StoreWriter::create(&dir, 2, "rm:k=2", 4, 2).unwrap();
+        for i in 0..5 {
+            w.push(&[i as f32, -(i as f32)]).unwrap();
+        }
+        drop(w);
+        assert!(!dir.join("store.json").exists(), "no store.json mid-run");
+        let man = Manifest::load(&dir).unwrap().unwrap();
+        assert_eq!(man.shards.len(), 2, "only full shards were committed");
+
+        let expect = bare_meta(2, "rm:k=2", 4, 2);
+        let (mut w, committed) = StoreWriter::resume(&dir, &expect).unwrap();
+        assert_eq!(committed, 4, "2 full shards of 2 rows were durable");
+        for i in committed..7 {
+            w.push(&[i as f32, -(i as f32)]).unwrap();
+        }
+        w.finish().unwrap();
+        // The resumed store is byte-identical to the uninterrupted one.
+        for i in 0..4 {
+            assert_eq!(
+                std::fs::read(shard_path(&dir, i)).unwrap(),
+                std::fs::read(shard_path(&refdir, i)).unwrap(),
+                "shard {i} differs from the uninterrupted run"
+            );
+        }
+        let r = StoreReader::open(&dir).unwrap();
+        assert!(r.verify_checksums().unwrap().all_ok());
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::remove_dir_all(&refdir).unwrap();
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_run_and_missing_marker() {
+        let dir = tmpdir("resume_reject");
+        let mut w = StoreWriter::create(&dir, 2, "rm:k=2", 4, 2).unwrap();
+        w.push(&[0.0, 1.0]).unwrap();
+        drop(w);
+        let err = format!(
+            "{:#}",
+            StoreWriter::resume(&dir, &bare_meta(2, "rm:k=2", 9, 2)).unwrap_err()
+        );
+        assert!(err.contains("seed 4") && err.contains("seed 9"), "{err}");
+        // A finished store has no marker: resume refuses and points back.
+        let (w, _) = StoreWriter::resume(&dir, &bare_meta(2, "rm:k=2", 4, 2)).unwrap();
+        w.finish().unwrap();
+        let err = format!(
+            "{:#}",
+            StoreWriter::resume(&dir, &bare_meta(2, "rm:k=2", 4, 2)).unwrap_err()
+        );
+        assert!(err.contains(PARTIAL_FILE), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_write_loses_only_the_inflight_shard() {
+        let dir = tmpdir("torn");
+        let mut w = StoreWriter::create(&dir, 2, "m", 0, 2).unwrap();
+        let plan = FaultPlan::new();
+        plan.fail_write(1);
+        w.inject_faults(plan);
+        for i in 0..4 {
+            w.push(&[i as f32, i as f32]).unwrap();
+        }
+        // Shard 1 is full; its commit fires on the next roll and is torn.
+        let err = format!("{:#}", w.push(&[4.0, 4.0]).unwrap_err());
+        assert!(err.contains("torn write"), "{err}");
+        drop(w);
+        // The torn tmpfile survives the drop (simulated crash evidence)…
+        assert!(shard_tmp_path(&dir, 1).exists());
+        // …and resume discards it, keeping only the durable shard 0.
+        let (mut w, committed) = StoreWriter::resume(&dir, &bare_meta(2, "m", 0, 2)).unwrap();
+        assert_eq!(committed, 2, "only shard 0 was durable");
+        assert!(!shard_tmp_path(&dir, 1).exists(), "resume clears torn staging");
+        for i in committed..5 {
+            w.push(&[i as f32, i as f32]).unwrap();
+        }
+        let meta = w.finish().unwrap();
+        assert_eq!(meta.n, 5);
+        let r = StoreReader::open(&dir).unwrap();
+        assert!(r.verify_checksums().unwrap().all_ok());
+        let all = r.read_all().unwrap();
+        assert_eq!(all.len(), 10);
+        assert_eq!(all[4], 2.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn verify_flags_bitflips_that_open_accepts() {
+        let dir = tmpdir("verify");
+        let mut w = StoreWriter::create(&dir, 2, "m", 0, 2).unwrap();
+        for i in 0..4 {
+            w.push(&[i as f32, 1.0]).unwrap();
+        }
+        w.finish().unwrap();
+        // Flip one byte in shard 1 without changing its length.
+        let p = shard_path(&dir, 1);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[3] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        // Open verifies counts only, so it still succeeds…
+        let r = StoreReader::open(&dir).unwrap();
+        // …but the full scan pinpoints the altered shard.
+        let report = r.verify_checksums().unwrap();
+        assert!(!report.all_ok());
+        assert!(report.has_manifest);
+        assert!(report.shards[0].1.is_ok());
+        assert!(matches!(
+            report.shards[1].1,
+            ShardStatus::ChecksumMismatch { .. }
+        ));
+        // A truncated shard reports a size mismatch; a deleted one, missing.
+        std::fs::write(&p, &bytes[..4]).unwrap();
+        assert!(matches!(
+            r.verify_checksums().unwrap().shards[1].1,
+            ShardStatus::SizeMismatch { .. }
+        ));
+        std::fs::remove_file(&p).unwrap();
+        assert!(matches!(
+            r.verify_checksums().unwrap().shards[1].1,
+            ShardStatus::Missing
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn legacy_store_opens_without_manifest_and_upgrades_in_place() {
+        let dir = tmpdir("upgrade");
+        let mut w = StoreWriter::create(&dir, 2, "m", 0, 2).unwrap();
+        for i in 0..3 {
+            w.push(&[i as f32, 2.0]).unwrap();
+        }
+        w.finish().unwrap();
+        std::fs::remove_file(dir.join(MANIFEST_FILE)).unwrap();
+        let mut r = StoreReader::open(&dir).unwrap();
+        assert!(!r.has_manifest());
+        let report = r.verify_checksums().unwrap();
+        assert!(report.all_ok(), "the size-only legacy scan passes");
+        assert!(!report.has_manifest);
+        let man = r.write_manifest().unwrap().clone();
+        assert_eq!(man.shards.len(), 2);
+        assert!(r.has_manifest());
+        let r2 = StoreReader::open(&dir).unwrap();
+        assert!(r2.has_manifest());
+        assert!(r2.verify_checksums().unwrap().all_ok());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

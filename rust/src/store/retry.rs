@@ -1,0 +1,186 @@
+//! Retry policy and degraded-mode read bookkeeping for streaming reads.
+//!
+//! [`RetryPolicy`] is bounded exponential backoff with deterministic
+//! jitter (seeded [`Pcg`] — no wall-clock entropy, so tests are
+//! reproducible). [`ReadGuard`] wraps [`StoreReader::read_rows`] with the
+//! policy: transient errors are retried with jittered sleeps; corruption
+//! (or exhausted retries) either aborts or — in `skip_corrupt` mode —
+//! quarantines the shard in a shared [`ReadLog`] so every later block of
+//! the same shard is skipped without re-touching the bad file. The log
+//! also counts attempted retries for coverage reports and bench records.
+
+use super::error::StoreErrorKind;
+use super::{RowBlock, StoreReader};
+use crate::sketch::rng::{splitmix64, Pcg};
+use anyhow::Result;
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Bounded exponential backoff with deterministic jitter.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Max retries per block after the first attempt (0 = fail fast).
+    pub retries: usize,
+    /// Base backoff before the first retry; doubles per attempt.
+    pub backoff: Duration,
+    /// Jitter seed — the sleep for (block, attempt) is a pure function of
+    /// this seed, so runs are reproducible.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            retries: 2,
+            backoff: Duration::from_millis(50),
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries: every error surfaces on the first attempt.
+    pub fn none() -> Self {
+        Self {
+            retries: 0,
+            backoff: Duration::ZERO,
+            seed: 0,
+        }
+    }
+
+    /// Sleep before retry number `attempt` (1-based) of the block salted
+    /// by `salt`: `backoff × 2^(attempt−1) × U[0.5, 1.5)`, capped at 2 s.
+    pub fn delay(&self, attempt: usize, salt: u64) -> Duration {
+        let exp = 1u32 << (attempt.clamp(1, 6) - 1) as u32;
+        let mut rng = Pcg::new(self.seed ^ splitmix64(salt.wrapping_add(attempt as u64)));
+        let jitter = 0.5 + rng.next_f64();
+        let secs = self.backoff.as_secs_f64() * exp as f64 * jitter;
+        Duration::from_secs_f64(secs.min(2.0))
+    }
+}
+
+/// Shared bookkeeping of one streaming run: which shards were
+/// quarantined, and how many retries were attempted. One log is shared by
+/// every pass of a scorer (FIM fit, self-influence, score stream), so the
+/// final coverage report sees the union.
+#[derive(Debug, Default)]
+pub struct ReadLog {
+    quarantined: Mutex<BTreeSet<usize>>,
+    retries: AtomicU64,
+}
+
+impl ReadLog {
+    pub fn is_quarantined(&self, shard: usize) -> bool {
+        self.quarantined.lock().unwrap().contains(&shard)
+    }
+
+    /// Mark a shard quarantined; returns `true` if it was newly added
+    /// (callers warn exactly once per shard).
+    pub fn quarantine(&self, shard: usize) -> bool {
+        self.quarantined.lock().unwrap().insert(shard)
+    }
+
+    /// Sorted quarantined shard indices.
+    pub fn quarantined(&self) -> Vec<usize> {
+        self.quarantined.lock().unwrap().iter().copied().collect()
+    }
+
+    pub fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn retries_attempted(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+}
+
+/// A retrying, optionally-degrading view over one reader's block reads.
+pub struct ReadGuard<'a> {
+    pub reader: &'a StoreReader,
+    pub retry: RetryPolicy,
+    pub skip_corrupt: bool,
+    pub log: &'a ReadLog,
+}
+
+impl<'a> ReadGuard<'a> {
+    /// Read one block into `buf[..b.rows * k]`.
+    ///
+    /// Returns `Ok(true)` when the rows were read, `Ok(false)` when the
+    /// owning shard is (or just became) quarantined — the caller must skip
+    /// the block, leaving its output columns at their zero default — and
+    /// `Err` when the failure is fatal (`skip_corrupt` off, or an error
+    /// with no shard to quarantine).
+    pub fn read_block(&self, b: RowBlock, buf: &mut [f32]) -> Result<bool> {
+        let shard = b.start / self.reader.meta.shard_rows.max(1);
+        if self.log.is_quarantined(shard) {
+            return Ok(false);
+        }
+        let mut attempt = 0usize;
+        loop {
+            match self.reader.read_rows(b.start, b.rows, buf) {
+                Ok(()) => return Ok(true),
+                Err(e)
+                    if e.kind() == StoreErrorKind::Transient && attempt < self.retry.retries =>
+                {
+                    attempt += 1;
+                    self.log.note_retry();
+                    std::thread::sleep(self.retry.delay(attempt, b.start as u64));
+                }
+                Err(e) => {
+                    if self.skip_corrupt {
+                        if self.log.quarantine(shard) {
+                            eprintln!(
+                                "warning: quarantining shard {shard} ({} error): {e}",
+                                e.kind().as_str()
+                            );
+                        }
+                        return Ok(false);
+                    }
+                    return Err(e.into());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delay_is_deterministic_bounded_and_grows() {
+        let p = RetryPolicy {
+            retries: 5,
+            backoff: Duration::from_millis(40),
+            seed: 9,
+        };
+        let d1 = p.delay(1, 123);
+        assert_eq!(d1, p.delay(1, 123), "jitter must be seed-deterministic");
+        // Jitter range: [0.5, 1.5) × base × 2^(attempt−1).
+        assert!(d1 >= Duration::from_millis(20) && d1 < Duration::from_millis(60), "{d1:?}");
+        let d3 = p.delay(3, 123);
+        assert!(d3 >= Duration::from_millis(80) && d3 < Duration::from_millis(240), "{d3:?}");
+        // Deep attempts saturate at the 2 s cap.
+        let huge = RetryPolicy {
+            retries: 10,
+            backoff: Duration::from_secs(5),
+            seed: 0,
+        };
+        assert_eq!(huge.delay(6, 0), Duration::from_secs(2));
+    }
+
+    #[test]
+    fn log_tracks_quarantine_and_retries() {
+        let log = ReadLog::default();
+        assert!(!log.is_quarantined(2));
+        assert!(log.quarantine(2), "first quarantine is new");
+        assert!(!log.quarantine(2), "second is not");
+        assert!(log.quarantine(0));
+        assert_eq!(log.quarantined(), vec![0, 2]);
+        log.note_retry();
+        log.note_retry();
+        assert_eq!(log.retries_attempted(), 2);
+    }
+}

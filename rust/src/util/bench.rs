@@ -114,6 +114,12 @@ pub struct BenchRecord {
     /// Preconditioner apply cost (`apply_rows` over the record's `n`
     /// rows) in milliseconds, when known.
     pub precond_apply_ms: Option<f64>,
+    /// Rows a `--resume` run skipped recomputing (already committed by an
+    /// interrupted earlier run), when the record covers a recovery stage.
+    pub resume_skipped_rows: Option<u64>,
+    /// Shard-read retries the streaming passes attempted, when the record
+    /// covers a fault-injected run.
+    pub retries_attempted: Option<u64>,
     /// Free-form extra metrics (e.g. `speedup_vs_per_sample`, `tokens_per_sec`).
     pub extra: Vec<(String, f64)>,
 }
@@ -134,6 +140,8 @@ impl BenchRecord {
             mean_nnz: None,
             precond_fit_ms: None,
             precond_apply_ms: None,
+            resume_skipped_rows: None,
+            retries_attempted: None,
             extra: vec![],
         }
     }
@@ -160,6 +168,15 @@ impl BenchRecord {
         self
     }
 
+    /// Record recovery metrics of a fault-tolerance stage (builder style):
+    /// rows a `--resume` run skipped recomputing and shard-read retries the
+    /// streaming passes attempted.
+    pub fn with_recovery(mut self, resume_skipped_rows: u64, retries_attempted: u64) -> Self {
+        self.resume_skipped_rows = Some(resume_skipped_rows);
+        self.retries_attempted = Some(retries_attempted);
+        self
+    }
+
     fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("method", Json::Str(self.method.clone())),
@@ -180,6 +197,12 @@ impl BenchRecord {
         }
         if let Some(v) = self.precond_apply_ms {
             pairs.push(("precond_apply_ms", Json::Num(v)));
+        }
+        if let Some(v) = self.resume_skipped_rows {
+            pairs.push(("resume_skipped_rows", Json::Num(v as f64)));
+        }
+        if let Some(v) = self.retries_attempted {
+            pairs.push(("retries_attempted", Json::Num(v as f64)));
         }
         for (key, value) in &self.extra {
             pairs.push((key.as_str(), Json::Num(*value)));
@@ -276,6 +299,14 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.req("precond_fit_ms").unwrap().as_f64(), Some(12.5));
         assert_eq!(j.req("precond_apply_ms").unwrap().as_f64(), Some(0.75));
+        // Recovery metrics are omitted until recorded, then serialized.
+        assert!(j.get("resume_skipped_rows").is_none());
+        assert!(j.get("retries_attempted").is_none());
+        let r = BenchRecord::from_duration("resume", 10, 64, 64, Duration::from_millis(10))
+            .with_recovery(96, 2);
+        let j = r.to_json();
+        assert_eq!(j.req("resume_skipped_rows").unwrap().as_usize(), Some(96));
+        assert_eq!(j.req("retries_attempted").unwrap().as_usize(), Some(2));
     }
 
     #[test]

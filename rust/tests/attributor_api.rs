@@ -201,8 +201,7 @@ fn streamed_attribution_matches_in_memory_for_all_five_scorers() {
     let opts = StreamOpts {
         mem_budget: 3 * 2 * k * 4 * 2,
         workers: 3,
-        groups: None,
-        artifact: None,
+        ..StreamOpts::default()
     };
     assert_eq!(opts.chunk_rows(k), 2);
     assert!(opts.resident_bytes(k) < n * k * 4);
@@ -271,7 +270,7 @@ fn grouped_streaming_aggregates_member_rows() {
         mem_budget: 2 * 3 * k * 4 * 2,
         workers: 2,
         groups: Some(groups.clone()),
-        artifact: None,
+        ..StreamOpts::default()
     };
 
     // GradDot: group score is the sum of member dot products.

@@ -1,0 +1,461 @@
+//! Integration: the fault-tolerance layer end to end — crash-safe
+//! resumable caching (drop-without-finish, torn writes, SIGKILL through
+//! the CLI), retrying reads under injected transient faults, degraded-mode
+//! scoring with exact coverage accounting, and `grass verify`.
+
+use grass::attrib::{from_spec, AttributionSpec, Attributor, StreamOpts};
+use grass::sketch::rng::Pcg;
+use grass::sketch::MethodSpec;
+use grass::store::{FaultKind, FaultPlan, RetryPolicy, StoreMeta, StoreReader, StoreWriter};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("grass_fault_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn gaussian(rows: usize, k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..rows * k).map(|_| rng.next_gaussian()).collect()
+}
+
+fn raw_meta(k: usize, shard_rows: usize) -> StoreMeta {
+    StoreMeta {
+        k,
+        n: 0,
+        shard_rows,
+        method: "raw".to_string(),
+        seed: 0,
+        model: String::new(),
+        input_dim: 0,
+        layer_dims: vec![],
+        density: 1.0,
+    }
+}
+
+/// Sorted (name, bytes) of every committed shard file in a store dir.
+fn shard_files(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name().to_string_lossy().to_string();
+            if name.starts_with("shard_") && name.ends_with(".bin") {
+                Some((name, std::fs::read(e.path()).unwrap()))
+            } else {
+                None
+            }
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+fn graddot_spec(k: usize) -> AttributionSpec {
+    AttributionSpec::new("graddot", MethodSpec::RandomMask { k }, 0)
+}
+
+/// A cache run dropped without `finish` resumes from its committed shards
+/// and produces a store — and scores — bit-identical to an uninterrupted
+/// run over the same deterministic row source.
+#[test]
+fn interrupted_cache_resumes_bit_identical_store_and_scores() {
+    let (n, k, sr, m) = (48usize, 8usize, 6usize, 3usize);
+    let rows = gaussian(n, k, 41);
+    let queries = gaussian(m, k, 42);
+
+    let ref_dir = tmpdir("resume_ref");
+    let mut w = StoreWriter::create_described(&ref_dir, raw_meta(k, sr)).unwrap();
+    w.push_batch(&rows).unwrap();
+    w.finish().unwrap();
+
+    // "Crash" midway: half the rows pushed, writer dropped, no store.json.
+    let res_dir = tmpdir("resume_res");
+    let mut w = StoreWriter::create_described(&res_dir, raw_meta(k, sr)).unwrap();
+    w.push_batch(&rows[..(n / 2) * k]).unwrap();
+    drop(w);
+    assert!(!res_dir.join("store.json").exists());
+
+    // Resume restarts at the committed watermark; the row source is
+    // index-deterministic so recomputed rows match the reference exactly.
+    let (mut w, committed) = StoreWriter::resume(&res_dir, &raw_meta(k, sr)).unwrap();
+    assert!(committed > 0 && committed < n && committed % sr == 0, "{committed}");
+    w.push_batch(&rows[committed * k..]).unwrap();
+    let meta = w.finish().unwrap();
+    assert_eq!(meta.n, n);
+
+    assert_eq!(shard_files(&ref_dir), shard_files(&res_dir));
+    let r_ref = StoreReader::open(&ref_dir).unwrap();
+    let r_res = StoreReader::open(&res_dir).unwrap();
+    assert!(r_res.verify_checksums().unwrap().all_ok());
+
+    let opts = StreamOpts::default();
+    let mut a_ref = from_spec(&graddot_spec(k)).unwrap();
+    a_ref.cache_stream(&r_ref, &opts).unwrap();
+    let mut a_res = from_spec(&graddot_spec(k)).unwrap();
+    a_res.cache_stream(&r_res, &opts).unwrap();
+    let s_ref = a_ref.attribute(&queries, m).unwrap();
+    let s_res = a_res.attribute(&queries, m).unwrap();
+    for i in 0..m * n {
+        assert!(
+            (s_ref.scores[i] - s_res.scores[i]).abs() <= 1e-6,
+            "score {i}: {} vs {}",
+            s_ref.scores[i],
+            s_res.scores[i]
+        );
+    }
+    std::fs::remove_dir_all(&ref_dir).ok();
+    std::fs::remove_dir_all(&res_dir).ok();
+}
+
+/// An injected torn write aborts the commit with half a tmpfile on disk
+/// and no manifest entry; resume discards the evidence and recommits, and
+/// the repaired store matches a clean run byte for byte.
+#[test]
+fn torn_write_is_discarded_and_resume_recommits() {
+    let (n, k, sr) = (24usize, 4usize, 6usize);
+    let rows = gaussian(n, k, 51);
+
+    let ref_dir = tmpdir("torn_ref");
+    let mut w = StoreWriter::create_described(&ref_dir, raw_meta(k, sr)).unwrap();
+    w.push_batch(&rows).unwrap();
+    w.finish().unwrap();
+
+    let dir = tmpdir("torn_res");
+    let plan = FaultPlan::new();
+    plan.fail_write(1);
+    let mut w = StoreWriter::create_described(&dir, raw_meta(k, sr)).unwrap();
+    w.inject_faults(plan);
+    let err = w.push_batch(&rows).unwrap_err();
+    assert!(format!("{err:#}").contains("injected torn write"), "{err:#}");
+    drop(w);
+    // The torn tmpfile survives the drop; only shard 0 is manifest-listed.
+    assert!(dir.join("shard_0001.bin.tmp").exists());
+
+    let (mut w, committed) = StoreWriter::resume(&dir, &raw_meta(k, sr)).unwrap();
+    assert_eq!(committed, sr, "only the shard committed before the tear counts");
+    assert!(!dir.join("shard_0001.bin.tmp").exists());
+    w.push_batch(&rows[committed * k..]).unwrap();
+    w.finish().unwrap();
+
+    assert_eq!(shard_files(&ref_dir), shard_files(&dir));
+    assert!(StoreReader::open(&dir).unwrap().verify_checksums().unwrap().all_ok());
+    std::fs::remove_dir_all(&ref_dir).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Transient read faults injected under a full registry-built scorer are
+/// absorbed by the retry policy: scores match the fault-free run and the
+/// shared read log counts the retries; nothing is quarantined.
+#[test]
+fn transient_faults_retry_through_full_attributor() {
+    let (n, k, sr, m) = (30usize, 8usize, 5usize, 3usize);
+    let rows = gaussian(n, k, 61);
+    let queries = gaussian(m, k, 62);
+    let dir = tmpdir("retry");
+    let mut w = StoreWriter::create_described(&dir, raw_meta(k, sr)).unwrap();
+    w.push_batch(&rows).unwrap();
+    w.finish().unwrap();
+
+    let mut aspec = AttributionSpec::new("if", MethodSpec::RandomMask { k }, 0);
+    aspec.damping = 0.1;
+
+    let reader = StoreReader::open(&dir).unwrap();
+    let mut clean = from_spec(&aspec).unwrap();
+    clean.cache_stream(&reader, &StreamOpts::default()).unwrap();
+    let want = clean.attribute(&queries, m).unwrap();
+
+    let mut reader = StoreReader::open(&dir).unwrap();
+    let plan = FaultPlan::new();
+    plan.fail_read(2, FaultKind::Transient, 0, 2);
+    reader.inject_faults(plan);
+    let opts = StreamOpts {
+        retry: RetryPolicy {
+            retries: 3,
+            backoff: std::time::Duration::from_millis(1),
+            seed: 0,
+        },
+        ..StreamOpts::default()
+    };
+    let mut eng = from_spec(&aspec).unwrap();
+    eng.cache_stream(&reader, &opts).unwrap();
+    let got = eng.attribute(&queries, m).unwrap();
+    for i in 0..m * n {
+        assert!(
+            (got.scores[i] - want.scores[i]).abs() <= 1e-6,
+            "score {i}: {} vs {}",
+            got.scores[i],
+            want.scores[i]
+        );
+    }
+    assert!(opts.log.retries_attempted() >= 2, "{}", opts.log.retries_attempted());
+    assert!(opts.log.quarantined().is_empty());
+    let cov = eng.coverage().expect("streamed cache reports coverage");
+    assert!(!cov.is_degraded(), "{cov:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// One corrupt shard: the strict path refuses to score; `skip_corrupt`
+/// quarantines it, zeroes its rows, matches the full run on every
+/// surviving row, and reports exact coverage.
+#[test]
+fn degraded_skip_corrupt_matches_full_run_on_surviving_rows() {
+    let (n, k, sr, m) = (40usize, 8usize, 5usize, 3usize);
+    let rows = gaussian(n, k, 71);
+    let queries = gaussian(m, k, 72);
+    let dir = tmpdir("degraded");
+    let mut w = StoreWriter::create_described(&dir, raw_meta(k, sr)).unwrap();
+    w.push_batch(&rows).unwrap();
+    w.finish().unwrap();
+
+    // Full-run reference scores before any corruption.
+    let reader = StoreReader::open(&dir).unwrap();
+    let mut full = from_spec(&graddot_spec(k)).unwrap();
+    full.cache_stream(&reader, &StreamOpts::default()).unwrap();
+    let want = full.attribute(&queries, m).unwrap();
+
+    // Truncate shard 3 (rows 15..20) behind the manifest's back.
+    let victim = dir.join("shard_0003.bin");
+    let f = std::fs::OpenOptions::new().write(true).open(&victim).unwrap();
+    let len = f.metadata().unwrap().len();
+    f.set_len(len - 8).unwrap();
+    drop(f);
+
+    // Strict mode: the corruption is a hard error, not a silent zero
+    // (surfaced at whichever pass touches the bad shard first).
+    let reader = StoreReader::open(&dir).unwrap();
+    let mut strict = from_spec(&graddot_spec(k)).unwrap();
+    let res = strict
+        .cache_stream(&reader, &StreamOpts::default())
+        .and_then(|_| strict.attribute(&queries, m).map(|_| ()));
+    assert!(res.is_err());
+
+    // Degraded mode: quarantine, score the rest, account for every row.
+    let opts = StreamOpts {
+        skip_corrupt: true,
+        ..StreamOpts::default()
+    };
+    let mut deg = from_spec(&graddot_spec(k)).unwrap();
+    deg.cache_stream(&reader, &opts).unwrap();
+    let got = deg.attribute(&queries, m).unwrap();
+    for qi in 0..m {
+        for i in 0..n {
+            let v = got.scores[qi * n + i];
+            if (15..20).contains(&i) {
+                assert_eq!(v, 0.0, "quarantined row {i} must score zero");
+            } else {
+                assert!(
+                    (v - want.scores[qi * n + i]).abs() <= 1e-6,
+                    "surviving row {i}: {v} vs {}",
+                    want.scores[qi * n + i]
+                );
+            }
+        }
+    }
+    let cov = deg.coverage().expect("streamed cache reports coverage");
+    assert_eq!(cov.rows_total, n);
+    assert_eq!(cov.rows_scored, n - sr);
+    assert_eq!(cov.quarantined, vec![3]);
+    assert!(cov.is_degraded());
+    assert!(cov.describe().contains("35/40"), "{}", cov.describe());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// In-memory caches have no shards to lose: `coverage()` is None, so
+/// callers can distinguish "nothing to report" from "100% coverage".
+#[test]
+fn coverage_is_none_for_in_memory_caches() {
+    let (n, k) = (12usize, 6usize);
+    let rows = gaussian(n, k, 81);
+    let mut aspec = AttributionSpec::new("if", MethodSpec::RandomMask { k }, 0);
+    aspec.damping = 0.1;
+    let mut eng = from_spec(&aspec).unwrap();
+    eng.cache(&rows, n).unwrap();
+    assert!(eng.coverage().is_none());
+}
+
+/// SIGKILL a real `grass cache` run mid-write, resume it through the CLI,
+/// and end up with a store byte-identical to an uninterrupted run — the
+/// CLI-level version of the resume contract, plus `grass verify`.
+#[test]
+fn killed_cli_cache_run_resumes_verifies_and_scores() {
+    let exe = env!("CARGO_BIN_EXE_grass");
+    let ref_dir = tmpdir("cli_kill_ref");
+    let res_dir = tmpdir("cli_kill_res");
+    let base = |store: &Path| {
+        vec![
+            "cache".to_string(),
+            "--model".into(),
+            "synth".into(),
+            "--method".into(),
+            "factgrass:kin=8,kout=8,kl=16".into(),
+            "--n".into(),
+            "200".into(),
+            "--seed".into(),
+            "5".into(),
+            "--shard-rows".into(),
+            "16".into(),
+            "--store".into(),
+            store.to_str().unwrap().into(),
+        ]
+    };
+
+    let out = Command::new(exe).args(base(&ref_dir)).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // Throttled run killed mid-write: no store.json, shards committed.
+    let mut args = base(&res_dir);
+    args.extend(["--throttle-ms".to_string(), "10".to_string()]);
+    let mut child = Command::new(exe).args(&args).spawn().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(500));
+    child.kill().unwrap();
+    child.wait().unwrap();
+    assert!(!res_dir.join("store.json").exists(), "kill landed too late");
+
+    let mut args = base(&res_dir);
+    args.push("--resume".to_string());
+    let out = Command::new(exe).args(&args).output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(out.status.success(), "{stdout}{}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("resuming:"), "{stdout}");
+
+    let out = Command::new(exe)
+        .args(["verify", "--store", res_dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(0));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("verify: OK"));
+
+    assert_eq!(shard_files(&ref_dir), shard_files(&res_dir));
+
+    // Deterministic scoring on both stores prints identical top-k lines.
+    let attribute = |dir: &Path| {
+        let out = Command::new(exe)
+            .args([
+                "attribute",
+                "--store",
+                dir.to_str().unwrap(),
+                "--queries",
+                "3",
+                "--scorer",
+                "graddot",
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout)
+            .lines()
+            .filter(|l| l.trim_start().starts_with("query "))
+            .map(str::to_string)
+            .collect::<Vec<_>>()
+    };
+    let top_ref = attribute(&ref_dir);
+    let top_res = attribute(&res_dir);
+    assert!(!top_ref.is_empty());
+    assert_eq!(top_ref, top_res);
+    std::fs::remove_dir_all(&ref_dir).ok();
+    std::fs::remove_dir_all(&res_dir).ok();
+}
+
+/// `grass verify` exit codes: 0 on a clean store, 2 on checksum mismatch,
+/// 2 on a manifest-less legacy store — which `--upgrade` checksums in
+/// place back to 0.
+#[test]
+fn verify_cli_detects_corruption_and_upgrades_legacy() {
+    let exe = env!("CARGO_BIN_EXE_grass");
+    let (n, k, sr) = (32usize, 8usize, 8usize);
+    let rows = gaussian(n, k, 91);
+    let dir = tmpdir("verify_cli");
+    let mut w = StoreWriter::create_described(&dir, raw_meta(k, sr)).unwrap();
+    w.push_batch(&rows).unwrap();
+    w.finish().unwrap();
+    let dir_s = dir.to_str().unwrap();
+
+    let out = Command::new(exe).args(["verify", "--store", dir_s]).output().unwrap();
+    assert_eq!(out.status.code(), Some(0), "{}", String::from_utf8_lossy(&out.stdout));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("verify: OK"));
+
+    // Bit-flip one byte: same length, wrong CRC.
+    let victim = dir.join("shard_0002.bin");
+    let mut bytes = std::fs::read(&victim).unwrap();
+    bytes[5] ^= 0x40;
+    std::fs::write(&victim, &bytes).unwrap();
+    let out = Command::new(exe).args(["verify", "--store", dir_s]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("verify: FAILED"));
+
+    // Legacy store: no manifest → exit 2 with guidance; --upgrade fixes it.
+    let legacy = tmpdir("verify_legacy");
+    let mut w = StoreWriter::create_described(&legacy, raw_meta(k, sr)).unwrap();
+    w.push_batch(&rows).unwrap();
+    w.finish().unwrap();
+    std::fs::remove_file(legacy.join("manifest.json")).unwrap();
+    let legacy_s = legacy.to_str().unwrap();
+    let out = Command::new(exe).args(["verify", "--store", legacy_s]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("no manifest.json"));
+    let out = Command::new(exe)
+        .args(["verify", "--store", legacy_s, "--upgrade"])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    assert_eq!(out.status.code(), Some(0), "{stdout}");
+    assert!(stdout.contains("upgraded:"), "{stdout}");
+    assert!(stdout.contains("verify: OK"), "{stdout}");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&legacy).ok();
+}
+
+/// CLI degraded mode end to end: a corrupted shard fails a strict
+/// `grass attribute` (exit 1) but completes under `--skip-corrupt` with
+/// coverage reporting and the dedicated exit code 3.
+#[test]
+fn cli_attribute_skip_corrupt_reports_coverage_and_exit_code() {
+    let exe = env!("CARGO_BIN_EXE_grass");
+    let dir = tmpdir("cli_degraded");
+    let dir_s = dir.to_str().unwrap();
+    let out = Command::new(exe)
+        .args([
+            "cache", "--model", "synth", "--method", "sjlt:k=32", "--p", "256", "--n", "96",
+            "--seed", "7", "--shard-rows", "16", "--store", dir_s,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let victim = dir.join("shard_0003.bin");
+    let f = std::fs::OpenOptions::new().write(true).open(&victim).unwrap();
+    let len = f.metadata().unwrap().len();
+    f.set_len(len - 8).unwrap();
+    drop(f);
+
+    let strict = Command::new(exe)
+        .args(["attribute", "--store", dir_s, "--queries", "2", "--scorer", "graddot"])
+        .output()
+        .unwrap();
+    assert_eq!(strict.status.code(), Some(1), "{}", String::from_utf8_lossy(&strict.stdout));
+    let err = String::from_utf8_lossy(&strict.stderr).to_string();
+    assert!(err.contains("shard 3"), "{err}");
+
+    let out = Command::new(exe)
+        .args([
+            "attribute",
+            "--store",
+            dir_s,
+            "--queries",
+            "2",
+            "--scorer",
+            "graddot",
+            "--skip-corrupt",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    assert_eq!(out.status.code(), Some(3), "{stdout}");
+    assert!(stdout.contains("coverage: 80/96"), "{stdout}");
+    assert!(stdout.contains("quarantined shards: [3]"), "{stdout}");
+    assert!(stdout.contains("completed degraded"), "{stdout}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -9,7 +9,7 @@ use grass::attrib::{
     Attributor, InfluenceEngine, PrecondArtifact, PrecondSpec, StreamOpts,
 };
 use grass::sketch::rng::Pcg;
-use grass::store::{StoreReader, StoreWriter, PRECOND_FILE};
+use grass::store::{Manifest, StoreReader, StoreWriter, PRECOND_FILE};
 use std::path::PathBuf;
 use std::process::Command;
 use std::sync::Arc;
@@ -255,5 +255,85 @@ fn cli_fit_then_artifact_backed_attribute() {
     ]);
     assert!(ok, "--no-artifact attribute failed: {out5}{stderr}");
     assert!(out5.contains("fim-pass rows: 48"), "{out5}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Every way `precond.bin` can rot — a bit-flipped FIM payload, a manifest
+/// recording the wrong checksum, a truncated payload on a manifest-less
+/// legacy store — is rejected by `grass attribute` with a descriptive
+/// error, and `--no-artifact` falls back to a full refit each time.
+#[test]
+fn corrupt_artifacts_are_rejected_with_no_artifact_fallback() {
+    let dir = tmpdir("corrupt");
+    let dir_s = dir.to_str().unwrap().to_string();
+    let exe = env!("CARGO_BIN_EXE_grass");
+    let run = |cli: &[&str]| {
+        let out = Command::new(exe).args(cli).output().expect("spawn grass");
+        (
+            out.status.success(),
+            String::from_utf8_lossy(&out.stdout).to_string(),
+            String::from_utf8_lossy(&out.stderr).to_string(),
+        )
+    };
+
+    let (ok, stdout, stderr) = run(&[
+        "cache", "--model", "synth", "--method", "sjlt:k=32", "--p", "512", "--n", "48",
+        "--seed", "5", "--store", &dir_s,
+    ]);
+    assert!(ok, "cache failed: {stdout}{stderr}");
+    let (ok, stdout, stderr) = run(&["fit", "--store", &dir_s]);
+    assert!(ok, "fit failed: {stdout}{stderr}");
+    let art = dir.join(PRECOND_FILE);
+    let pristine = std::fs::read(&art).unwrap();
+
+    let attribute = || run(&["attribute", "--store", &dir_s, "--queries", "2", "--scorer", "if"]);
+    let fallback = || {
+        run(&[
+            "attribute", "--store", &dir_s, "--queries", "2", "--scorer", "if", "--no-artifact",
+        ])
+    };
+    let (ok, out, stderr) = attribute();
+    assert!(ok, "{out}{stderr}");
+    assert!(out.contains("fim-pass rows: 0"), "{out}");
+
+    // 1. Bit-flipped FIM payload: every length check still passes, the
+    //    whole-file checksum does not.
+    let mut bytes = pristine.clone();
+    let last = bytes.len() - 3;
+    bytes[last] ^= 0x01;
+    std::fs::write(&art, &bytes).unwrap();
+    let (ok, _out, stderr) = attribute();
+    assert!(!ok, "bit-flipped artifact must be rejected");
+    assert!(stderr.contains("failed its checksum"), "{stderr}");
+    assert!(stderr.contains("--no-artifact"), "{stderr}");
+    let (ok, out, stderr) = fallback();
+    assert!(ok, "--no-artifact fallback failed: {out}{stderr}");
+    assert!(out.contains("fim-pass rows: 48"), "{out}");
+
+    // 2. Manifest records the wrong checksum: the pristine file no longer
+    //    matches what the manifest claims.
+    std::fs::write(&art, &pristine).unwrap();
+    let mut man = Manifest::load(&dir).unwrap().expect("store has a manifest");
+    let recorded = man.precond_crc.expect("fit recorded the artifact checksum");
+    man.precond_crc = Some(recorded ^ 0xdead_beef);
+    man.save(&dir).unwrap();
+    let (ok, _out, stderr) = attribute();
+    assert!(!ok, "manifest checksum mismatch must be rejected");
+    assert!(stderr.contains("failed its checksum"), "{stderr}");
+    man.precond_crc = Some(recorded);
+    man.save(&dir).unwrap();
+    let (ok, out, stderr) = attribute();
+    assert!(ok && out.contains("fim-pass rows: 0"), "{out}{stderr}");
+
+    // 3. Truncated payload on a manifest-less legacy store: no checksum to
+    //    compare, but the exact-length check still catches it.
+    std::fs::remove_file(dir.join("manifest.json")).unwrap();
+    std::fs::write(&art, &pristine[..pristine.len() - 8]).unwrap();
+    let (ok, _out, stderr) = attribute();
+    assert!(!ok, "truncated artifact must be rejected");
+    assert!(stderr.contains("bytes on disk"), "{stderr}");
+    let (ok, out, stderr) = fallback();
+    assert!(ok, "--no-artifact fallback failed: {out}{stderr}");
+    assert!(out.contains("fim-pass rows: 48"), "{out}");
     std::fs::remove_dir_all(&dir).ok();
 }
