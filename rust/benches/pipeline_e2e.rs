@@ -298,12 +298,123 @@ fn recovery_bench(records: &mut Vec<BenchRecord>) {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Serving stage: an in-process daemon (ephemeral port, warm shard cache)
+/// answering synthetic score requests over one connection. Records QPS and
+/// the daemon's own p50/p95/p99 latency + shard-cache hit rate (pulled
+/// from a `stats` request) so the serving trajectory is diffable.
+fn serve_bench(records: &mut Vec<BenchRecord>) {
+    use grass::serve::proto::{self, QueryPayload, Request, Response, ScoreRequest};
+    use grass::serve::{self, ServeConfig};
+    use std::io::{BufReader, BufWriter};
+
+    let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
+    let (n, p, requests) = if fast {
+        (256usize, 512usize, 16usize)
+    } else {
+        (1024, 2048, 64)
+    };
+    let k = 64usize;
+    let dir = std::env::temp_dir().join(format!("grass_bench_serve_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // A flat synthetic store the daemon accepts (model = "synth").
+    let spec = MethodSpec::Sjlt { k, s: 1 };
+    let shapes = grass::models::shapes::ModelShapes::flat(p);
+    let bank = CompressorBank::Flat(spec.build(p, 11));
+    let c = bank.as_flat().unwrap();
+    let meta = StoreMeta::describe(&spec, 11, "synth", &shapes, 128).expect("meta");
+    let mut w = StoreWriter::create_described(&dir, meta).expect("writer");
+    let src = grass::data::synthgrad::SynthGrads::new(p, 11);
+    let rows = src.rows(0, n);
+    let mut out = vec![0.0f32; n * k];
+    let mut scratch = Scratch::new();
+    c.compress_batch_with(&rows, n, &mut out, &mut scratch);
+    w.push_batch(&out).expect("push");
+    w.finish().expect("finish");
+
+    let handle = serve::spawn(ServeConfig {
+        store: dir.clone(),
+        addr: "127.0.0.1:0".to_string(),
+        scorers: vec!["graddot".to_string()],
+        workers: 2,
+        cache_bytes: 64 << 20,
+        quiet: true,
+        ..ServeConfig::default()
+    })
+    .expect("spawn daemon");
+    let addr = handle.addr();
+    let stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut writer = BufWriter::new(stream.try_clone().expect("clone"));
+    let mut reader = BufReader::new(stream);
+    let mut ask = |req: Request| -> Response {
+        proto::write_frame(&mut writer, &req.to_line()).expect("write frame");
+        let frame = proto::read_frame(&mut reader)
+            .expect("read frame")
+            .expect("daemon replied");
+        Response::from_json(&frame).expect("parse response")
+    };
+
+    let m = 4usize;
+    let (_, d) = bench::time_once(|| {
+        for i in 0..requests {
+            let resp = ask(Request::Score(ScoreRequest {
+                id: i as u64 + 1,
+                scorer: "graddot".to_string(),
+                top_k: 5,
+                include_scores: false,
+                self_influence: false,
+                deadline_ms: None,
+                queries: QueryPayload::Synth { m },
+            }));
+            match resp {
+                Response::Scores(r) => assert_eq!(r.m, m),
+                other => panic!("unexpected daemon reply: {:?}", other.to_json()),
+            }
+        }
+    });
+    let qps = requests as f64 / d.as_secs_f64().max(1e-12);
+
+    let stats = match ask(Request::Stats { id: 0 }) {
+        Response::Stats { stats, .. } => stats,
+        other => panic!("unexpected stats reply: {:?}", other.to_json()),
+    };
+    let lat = stats.req("latency").expect("latency");
+    let pick = |key: &str| lat.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let (p50, p95, p99) = (pick("p50_ms"), pick("p95_ms"), pick("p99_ms"));
+    let hit_rate = stats
+        .get("shard_cache")
+        .and_then(|s| s.get("hit_rate"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+
+    match ask(Request::Shutdown { id: 0 }) {
+        Response::ShuttingDown { .. } => {}
+        other => panic!("unexpected shutdown reply: {:?}", other.to_json()),
+    }
+    drop(reader);
+    drop(writer);
+    handle.join().expect("serve daemon shutdown");
+
+    println!("== serving daemon (n={n}, k={k}, {requests} requests × {m} queries) ==");
+    println!(
+        "{qps:.1} req/s | p50 {p50:.2} ms p95 {p95:.2} ms p99 {p99:.2} ms | \
+         shard-cache hit rate {hit_rate:.3}"
+    );
+    records.push(
+        BenchRecord::from_duration("serve:graddot:synth", requests * m, k, k, d / requests as u32)
+            .with_serving(qps, p50, p95, p99)
+            .with_cache_hit_rate(hit_rate),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn main() {
     let mut records: Vec<BenchRecord> = Vec::new();
     compress_stage_bench(&mut records);
     streaming_attribute_bench(&mut records);
     precond_artifact_bench(&mut records);
     recovery_bench(&mut records);
+    serve_bench(&mut records);
 
     let dir = Runtime::artifacts_dir();
     if !dir.join("manifest.json").exists() {
@@ -363,6 +474,11 @@ fn main() {
                     precond_apply_ms: None,
                     resume_skipped_rows: None,
                     retries_attempted: None,
+                    qps: None,
+                    p50_ms: None,
+                    p95_ms: None,
+                    p99_ms: None,
+                    cache_hit_rate: None,
                     extra: vec![],
                 },
             );

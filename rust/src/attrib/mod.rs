@@ -152,7 +152,7 @@ impl AttributionSpec {
 /// assert_eq!(scores.row(0), &[1.0, 0.0]);
 /// assert_eq!(scorer.self_influence().unwrap(), vec![1.0, 1.0]);
 /// ```
-pub trait Attributor {
+pub trait Attributor: Send + Sync {
     /// Registry id of this scorer (`"if"`, `"graddot"`, …).
     fn name(&self) -> &'static str;
 

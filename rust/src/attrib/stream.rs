@@ -43,7 +43,6 @@ use crate::store::{ReadGuard, ReadLog, RetryPolicy, RowGroups, StoreReader};
 use crate::util::par;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::ops::Range;
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -514,7 +513,10 @@ fn overlap(a: &Range<usize>, b: &Range<usize>) -> usize {
 /// the eagerly computed self-influence diagonal. At no point does more
 /// than the budgeted buffer set of train rows sit in memory.
 pub(crate) struct StreamedCache {
-    dir: PathBuf,
+    /// Resident store handle: score passes reuse it (fault plans and any
+    /// attached shard cache included) instead of re-opening the directory
+    /// per pass — the hot state a long-lived serving daemon relies on.
+    reader: StoreReader,
     opts: StreamOpts,
     k: usize,
     pre: Option<Box<dyn Preconditioner>>,
@@ -522,8 +524,7 @@ pub(crate) struct StreamedCache {
     /// Rows the FIM ingest pass streamed (0 when a persisted artifact
     /// made the pass unnecessary, or the spec needs no FIM).
     fim_rows: usize,
-    /// Store row count snapshot (revalidated whenever the store is
-    /// re-opened for a score pass).
+    /// Store row count snapshot.
     n: usize,
     /// Shard row stride snapshot — maps quarantined shard indices back to
     /// row ranges for coverage accounting.
@@ -573,7 +574,7 @@ impl StreamedCache {
         };
         let self_inf = stream_self_influence(reader, opts, pre.as_deref())?;
         Ok(Self {
-            dir: reader.dir().to_path_buf(),
+            reader: reader.clone(),
             k: reader.meta.k,
             n: reader.meta.n,
             shard_rows: reader.meta.shard_rows,
@@ -633,25 +634,11 @@ impl StreamedCache {
         self.pre.as_ref().map(|p| p.describe())
     }
 
-    fn reader(&self) -> Result<StoreReader> {
-        let r = StoreReader::open(&self.dir)?;
-        ensure!(
-            r.meta.n == self.n && r.meta.k == self.k,
-            "store at {} changed since cache_stream (was {} rows × k = {}, now {} × {})",
-            self.dir.display(),
-            self.n,
-            self.k,
-            r.meta.n,
-            r.meta.k
-        );
-        Ok(r)
-    }
-
     /// Streamed attribute: re-stream the store and score `m` queries
-    /// against it, one block of train rows per worker at a time.
+    /// against it, one block of train rows per worker at a time. The
+    /// resident reader is reused — no per-pass store re-open.
     pub fn scores(&self, queries: &[f32], m: usize) -> Result<Vec<f32>> {
-        let reader = self.reader()?;
-        stream_scores(&reader, &self.opts, queries, m, self.pre.as_deref())
+        stream_scores(&self.reader, &self.opts, queries, m, self.pre.as_deref())
     }
 }
 

@@ -8,6 +8,7 @@
 
 pub mod corpus;
 pub mod images;
+pub mod queries;
 pub mod synthgrad;
 
 pub use corpus::{MusicEvents, ThemedCorpus};

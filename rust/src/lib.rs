@@ -44,6 +44,21 @@
 //!   [`store::ShardCursor`], [`store::StoreReader::par_for_each_shard`],
 //!   [`store::RowGroups`] (GGDA-style grouped row selection) — back the
 //!   out-of-core attribute stage.
+//! - [`serve`] — the attribution serving daemon behind `grass serve`: the
+//!   store is opened once, the [`sketch::CompressorBank`] and
+//!   [`attrib::PrecondArtifact`] stay resident, and scoring requests
+//!   (raw / pre-compressed / synthetic query gradients) are answered over
+//!   a versioned newline-delimited-JSON TCP protocol ([`serve::proto`]) by
+//!   a bounded worker pool with admission control ([`serve::Admission`]:
+//!   queue-depth load-shedding plus per-request deadlines, typed
+//!   `Overloaded` / `DeadlineExceeded` replies). [`serve::ShardCache`]
+//!   keeps warm shard bytes under an LRU byte budget with sequential
+//!   prefetch — attachable to any [`store::StoreReader`], so it
+//!   accelerates the batch path too — and [`serve::Metrics`] tracks
+//!   request counts, p50/p95/p99 latency, queue depth, and cache hit rate,
+//!   exposed via the `stats` request. A corrupt shard degrades one
+//!   response (per-reply coverage) through the [`store::ReadGuard`] layer
+//!   instead of killing the daemon.
 //! - [`eval`] — counterfactual evaluation (LDS) with Rust-driven subset
 //!   retraining through HLO train-step executables.
 //! - [`data`] — synthetic dataset substrates (digits, two-class images,
@@ -124,6 +139,7 @@ pub mod exp;
 pub mod linalg;
 pub mod models;
 pub mod runtime;
+pub mod serve;
 pub mod sketch;
 pub mod store;
 pub mod util;

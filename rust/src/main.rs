@@ -19,16 +19,20 @@ use anyhow::{anyhow, bail, ensure, Result};
 use grass::attrib::precond::select;
 use grass::attrib::{
     from_spec, AttributionSpec, Attributor, PrecondArtifact, PrecondSpec, Preconditioner,
-    StreamOpts, DEFAULT_MEM_BUDGET,
+    ScoreMatrix, StreamOpts, DEFAULT_MEM_BUDGET,
 };
 use grass::config::ExpConfig;
 use grass::coordinator::{pipeline::Source, CachePipeline, CompressorBank, PipelineConfig};
 use grass::data::corpus::ThemedCorpus;
 use grass::data::images::SynthDigits;
+use grass::data::queries::{compress_raw_queries, synth_queries, synth_raw_queries};
 use grass::data::synthgrad::{
     default_synth_layers, SYNTH_CLASSES, SYNTH_MODEL, SYNTH_SEQ, SynthGrads, SynthHooks,
 };
 use grass::exp;
+use grass::serve;
+use grass::serve::proto::{self, CoverageInfo, QueryPayload, Request, Response, ScoreRequest};
+use grass::util::json::Json;
 use grass::models::shapes::ModelShapes;
 use grass::runtime::{Arg, Runtime};
 use grass::sketch::{MethodSpec, Scratch};
@@ -56,6 +60,8 @@ fn run() -> Result<i32> {
         Some("fit") => run_fit(&args).map(|()| 0),
         Some("attribute") => run_attribute(&args),
         Some("verify") => run_verify(&args),
+        Some("serve") => run_serve(&args).map(|()| 0),
+        Some("query") => run_query(&args),
         Some("info") => run_info().map(|()| 0),
         _ => {
             print_help();
@@ -85,12 +91,23 @@ USAGE:
                   [--no-artifact] [--method <spec> --seed S to cross-check the store]
                   [--retries 2] [--retry-backoff 50 (ms)]
                   [--skip-corrupt (quarantine bad shards, score the rest; exit 3)]
+                  [--format text|json] [--shard-cache 0 (warm shard-byte LRU budget)]
   grass verify --store DIR [--upgrade (write a manifest over a legacy store)]
+  grass serve --store DIR --addr HOST:PORT [--scorers if,graddot] [--workers 2]
+              [--max-queue 32] [--deadline-ms 10000] [--shard-cache 256M]
+              [--mem-budget 256M] [--skip-corrupt] [--verify] [--no-artifact]
+              [--retries 2] [--retry-backoff 50] [--damping 1e-3] [--precond SPEC]
+              [--quiet]
+  grass query --addr HOST:PORT [--queries M] [--scorer if] [--top 5]
+              [--send synth|raw|compressed (raw/compressed need --store DIR)]
+              [--include-scores] [--self-influence] [--deadline-ms B]
+              [--stats | --ping | --shutdown] [--format text|json]
   grass info
 
 EXIT CODES:
   0 success | 1 error | 2 verify failed / corruption detected |
-  3 attribution completed degraded (--skip-corrupt quarantined shards)
+  3 attribution completed degraded (--skip-corrupt quarantined shards) |
+  4 query shed by the daemon (typed overloaded / deadline_exceeded reply)
 
 COMMON FLAGS:
   --ks 512,1024,2048    compression dimensions
@@ -122,7 +139,12 @@ CRC32C recorded in manifest.json, `grass cache --resume` restarts a
 killed run from its committed shards, `grass verify` scans every
 checksum, and `grass attribute --retries/--skip-corrupt` retries
 transient read errors and can score around corrupt shards (coverage
-reported, exit code 3). Full reference: docs/CLI.md;
+reported, exit code 3). `grass serve` keeps all of that state hot in a
+long-running daemon — store opened once, bank + precond artifact
+resident, warm shard cache with prefetch — answering scoring requests
+over newline-delimited JSON/TCP with admission control (queue bound +
+deadlines → typed overloaded/deadline_exceeded replies) and per-reply
+coverage; `grass query` is the client. Full reference: docs/CLI.md;
 data-flow and memory model: docs/ARCHITECTURE.md."
     );
 }
@@ -515,7 +537,18 @@ fn run_attribute(args: &Args) -> Result<i32> {
     };
     let top = args.get_usize("top", 5)?;
 
-    let reader = StoreReader::open(&store)?;
+    let mut reader = StoreReader::open(&store)?;
+    // Optional warm shard cache: the FIM, self-influence, and score
+    // passes re-read the same shards, so a byte-budgeted LRU of decoded
+    // shard bytes (with sequential prefetch) turns passes 2+ into memory
+    // reads. Off by default — batch runs over huge stores should stream.
+    let cache_bytes = args.get_bytes("shard-cache", 0)?;
+    if cache_bytes > 0 {
+        let cache = std::sync::Arc::new(grass::serve::ShardCache::new(cache_bytes));
+        cache.spawn_prefetcher(std::path::PathBuf::from(&store));
+        reader.attach_cache(cache);
+    }
+    let reader = reader;
     // Out-of-core streaming knobs: byte budget for the per-worker shard
     // buffers, worker count, optional GGDA-style row grouping, and the
     // fault-tolerance policy (retry transient read errors; optionally
@@ -626,6 +659,10 @@ fn run_attribute(args: &Args) -> Result<i32> {
     let meta = attributor.cache_stream(&reader, &opts)?;
     let scores = attributor.attribute(&queries, m)?;
 
+    if args.get_or("format", "text") == "json" {
+        return attribute_json(args, &meta, attributor.as_ref(), &scores, &classes, m, top);
+    }
+
     println!(
         "attributed {m} queries against {} cached rows (scorer '{}', method {}, k={}, \
          streamed under {} budget, {} score columns)",
@@ -698,6 +735,80 @@ fn run_attribute(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `--format json`: machine-readable attribute output — scores, top-k,
+/// self-influence, precond stats, coverage — with the same exit semantics
+/// as the text path (3 when degraded). The serve-vs-batch parity gate in
+/// CI diffs this against `grass query` responses.
+fn attribute_json(
+    args: &Args,
+    meta: &StoreMeta,
+    attributor: &dyn Attributor,
+    scores: &ScoreMatrix,
+    classes: &[usize],
+    m: usize,
+    top: usize,
+) -> Result<i32> {
+    let pstats = attributor.precond_stats();
+    let top_json = Json::Arr(
+        (0..m)
+            .map(|q| {
+                Json::Arr(
+                    scores
+                        .top_k(q, top)
+                        .into_iter()
+                        .map(|(i, s)| {
+                            Json::obj(vec![
+                                ("index", Json::Num(i as f64)),
+                                ("score", Json::Num(s as f64)),
+                            ])
+                        })
+                        .collect(),
+                )
+            })
+            .collect(),
+    );
+    let score_rows = Json::Arr((0..m).map(|q| Json::arr_f32(scores.row(q))).collect());
+    let mut pairs = vec![
+        ("scorer", Json::Str(attributor.name().to_string())),
+        ("method", Json::Str(meta.method.clone())),
+        ("k", Json::Num(meta.k as f64)),
+        ("rows", Json::Num(meta.n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(scores.n as f64)),
+        (
+            "precond",
+            Json::obj(vec![
+                ("describe", Json::Str(pstats.describe.clone())),
+                ("fim_rows", Json::Num(pstats.fim_rows as f64)),
+            ]),
+        ),
+        ("top", top_json),
+        ("scores", score_rows),
+    ];
+    if !classes.is_empty() {
+        pairs.push(("classes", Json::arr_usize(classes)));
+    }
+    if args.get_bool("self-influence") {
+        pairs.push(("self_influence", Json::arr_f32(&attributor.self_influence()?)));
+    }
+    let mut exit = 0;
+    if let Some(cov) = attributor.coverage() {
+        let info = CoverageInfo {
+            rows_total: cov.rows_total,
+            rows_scored: cov.rows_scored,
+            quarantined: cov.quarantined,
+            retries_attempted: cov.retries_attempted,
+        };
+        if info.is_degraded() {
+            exit = 3;
+        }
+        pairs.push(("coverage", info.to_json()));
+    }
+    pairs.push(("exit_code", Json::Num(exit as f64)));
+    println!("{}", Json::obj(pairs).to_string_pretty());
+    Ok(exit)
+}
+
 // ---------------------------------------------------------------------------
 // verify
 // ---------------------------------------------------------------------------
@@ -747,6 +858,178 @@ fn run_verify(args: &Args) -> Result<i32> {
             reader.num_shards()
         );
         Ok(2)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serve / query
+// ---------------------------------------------------------------------------
+
+/// `grass serve`: long-running attribution daemon over one store. Hot
+/// state (store handle + warm shard cache, compressor bank, precond
+/// artifact, per-scorer ingest) is built once; requests are scored by a
+/// bounded worker pool with admission control. Stop it with
+/// `grass query --addr ... --shutdown`.
+fn run_serve(args: &Args) -> Result<()> {
+    let scorers = match args.get("scorers") {
+        Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+        None => vec!["if".to_string(), "graddot".to_string()],
+    };
+    let cfg = serve::ServeConfig {
+        store: std::path::PathBuf::from(args.get_or("store", "grass_store")),
+        addr: args.get_or("addr", "127.0.0.1:4571").to_string(),
+        scorers,
+        workers: args.get_usize("workers", 2)?,
+        max_in_flight: args.get_usize("max-queue", 32)?,
+        deadline_ms: args.get_u64("deadline-ms", 10_000)?,
+        mem_budget: args.get_bytes("mem-budget", DEFAULT_MEM_BUDGET)?,
+        cache_bytes: args.get_bytes("shard-cache", 256 << 20)?,
+        skip_corrupt: args.get_bool("skip-corrupt"),
+        retries: args.get_usize("retries", 2)?,
+        retry_backoff_ms: args.get_u64("retry-backoff", 50)?,
+        verify: args.get_bool("verify"),
+        use_artifact: !args.get_bool("no-artifact"),
+        damping: args.get_f64("damping", 1e-3)?,
+        precond: args.get("precond").map(String::from),
+        quiet: args.get_bool("quiet"),
+    };
+    serve::run(cfg)
+}
+
+/// `grass query`: one-shot client for the serving daemon. Sends a single
+/// request (score by default; `--stats`/`--ping`/`--shutdown` for the
+/// control plane), prints the reply, and maps typed admission-shed
+/// replies (overloaded / deadline_exceeded) to exit code 4.
+fn run_query(args: &Args) -> Result<i32> {
+    let addr = args.get_or("addr", "127.0.0.1:4571").to_string();
+    let id = args.get_u64("id", 1)?;
+    let req = if args.get_bool("ping") {
+        Request::Ping { id }
+    } else if args.get_bool("stats") {
+        Request::Stats { id }
+    } else if args.get_bool("shutdown") {
+        Request::Shutdown { id }
+    } else {
+        let m = args.get_usize("queries", 4)?;
+        let send = args.get_or("send", "synth").to_string();
+        let queries = match send.as_str() {
+            "synth" => QueryPayload::Synth { m },
+            "raw" | "compressed" => {
+                // The client regenerates the deterministic query gradients
+                // locally from the store's recorded geometry (the same
+                // shared helper the server and `grass attribute` use), so
+                // the daemon receives genuinely client-supplied payloads.
+                let store = args.get("store").ok_or_else(|| {
+                    anyhow!("--send {send} regenerates query gradients locally; pass --store DIR")
+                })?;
+                let reader = StoreReader::open(store)?;
+                if send == "raw" {
+                    let (rows, _) = synth_raw_queries(&reader.meta, m)?;
+                    QueryPayload::Raw { m, rows }
+                } else {
+                    let bank = reader
+                        .meta
+                        .spec()?
+                        .build_bank(&reader.meta.shapes(), reader.meta.seed)?;
+                    let (rows, _) = synth_queries(&reader.meta, &bank, m)?;
+                    QueryPayload::Compressed { m, rows }
+                }
+            }
+            other => bail!("--send must be synth|raw|compressed, got '{other}'"),
+        };
+        let deadline_ms = match args.get("deadline-ms") {
+            Some(_) => Some(args.get_u64("deadline-ms", 0)?),
+            None => None,
+        };
+        Request::Score(ScoreRequest {
+            id,
+            scorer: args.get_or("scorer", "if").to_string(),
+            top_k: args.get_usize("top", 5)?,
+            include_scores: args.get_bool("include-scores"),
+            self_influence: args.get_bool("self-influence"),
+            deadline_ms,
+            queries,
+        })
+    };
+
+    let stream = std::net::TcpStream::connect(&addr)
+        .map_err(|e| anyhow!("connecting to the daemon at {addr}: {e}"))?;
+    let mut writer = std::io::BufWriter::new(stream.try_clone()?);
+    let mut reader = std::io::BufReader::new(stream);
+    proto::write_frame(&mut writer, &req.to_line())?;
+    let frame = proto::read_frame(&mut reader)?
+        .ok_or_else(|| anyhow!("daemon at {addr} closed the connection without replying"))?;
+    let resp = Response::from_json(&frame)?;
+
+    if args.get_or("format", "text") == "json" {
+        println!("{}", resp.to_json().to_string_pretty());
+    } else {
+        print_response_text(&resp);
+    }
+    Ok(match &resp {
+        Response::Scores(r) => {
+            if r.coverage.is_degraded() {
+                3
+            } else {
+                0
+            }
+        }
+        Response::Error { kind, .. } if kind.is_shed() => 4,
+        Response::Error { .. } => 1,
+        _ => 0,
+    })
+}
+
+/// Human-readable rendering of a daemon reply (the `--format json` path
+/// prints the raw frame instead).
+fn print_response_text(resp: &Response) {
+    match resp {
+        Response::Scores(r) => {
+            println!(
+                "scored {} queries against {} rows (scorer '{}', {:.1} ms server-side)",
+                r.m, r.coverage.rows_total, r.scorer, r.elapsed_ms
+            );
+            for (q, best) in r.top.iter().enumerate() {
+                let parts: Vec<String> = best
+                    .iter()
+                    .map(|(i, s)| format!("#{i} ({s:+.3})"))
+                    .collect();
+                let label = r
+                    .classes
+                    .as_ref()
+                    .and_then(|c| c.get(q))
+                    .map(|c| format!(" [class {c}]"))
+                    .unwrap_or_default();
+                println!("  query {q}{label}: top {}", parts.join(", "));
+            }
+            if let Some(si) = &r.self_influence {
+                let mut order: Vec<usize> = (0..si.len()).collect();
+                order.sort_by(|&a, &b| {
+                    si[b].partial_cmp(&si[a]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                let parts: Vec<String> = order
+                    .iter()
+                    .take(r.top.first().map_or(5, |t| t.len().max(1)))
+                    .map(|&i| format!("#{i} ({:+.3})", si[i]))
+                    .collect();
+                println!("top self-influence: {}", parts.join(", "));
+            }
+            if r.coverage.is_degraded() {
+                println!(
+                    "coverage: {}/{} rows scored | quarantined shards: {:?} (degraded, exit 3)",
+                    r.coverage.rows_scored, r.coverage.rows_total, r.coverage.quarantined
+                );
+            }
+        }
+        Response::Stats { stats, .. } => println!("{}", stats.to_string_pretty()),
+        Response::Pong { .. } => println!("pong"),
+        Response::ShuttingDown { .. } => println!("daemon shutting down"),
+        Response::Error { kind, message, .. } => {
+            println!("daemon replied {}: {message}", kind.as_str());
+            if kind.is_shed() {
+                println!("(admission shed — exit 4)");
+            }
+        }
     }
 }
 
@@ -865,51 +1148,6 @@ fn parse_row_groups(s: &str, n: usize) -> Result<RowGroups> {
     let groups = RowGroups::parse(s)?;
     groups.validate(n)?;
     Ok(groups)
-}
-
-/// Regenerate + compress `m` synthetic query gradients against the store's
-/// recorded geometry. Returns the `m × k` matrix and per-query classes.
-fn synth_queries(
-    meta: &StoreMeta,
-    bank: &CompressorBank,
-    m: usize,
-) -> Result<(Vec<f32>, Vec<usize>)> {
-    let mut scratch = Scratch::new();
-    let k = bank.output_dim();
-    if let Some(cs) = bank.as_factored() {
-        let hooks = SynthHooks::new(meta.layer_dims.clone(), meta.seed);
-        let mut out = vec![0.0f32; m * k];
-        let mut classes = Vec::with_capacity(m);
-        for q in 0..m {
-            let (sample, class) = hooks.query(q);
-            classes.push(class);
-            let mut off = 0;
-            for (li, c) in cs.iter().enumerate() {
-                let (x, dy) = &sample[li];
-                c.compress_batch_with(
-                    1,
-                    SYNTH_SEQ,
-                    x,
-                    dy,
-                    &mut out[q * k..(q + 1) * k],
-                    k,
-                    off,
-                    &mut scratch,
-                );
-                off += c.output_dim();
-            }
-        }
-        Ok((out, classes))
-    } else {
-        let c = bank.as_flat().expect("flat bank");
-        // Regenerate from the recorded density so queries live on the same
-        // class supports the sparse-cached train rows used.
-        let src = SynthGrads::with_density(meta.input_dim, meta.seed, meta.density as f32);
-        let (raw, classes) = src.queries(m);
-        let mut out = vec![0.0f32; m * k];
-        c.compress_batch_with(&raw, m, &mut out, &mut scratch);
-        Ok((out, classes))
-    }
 }
 
 /// Compute + compress `m` real query gradients through the PJRT runtime,

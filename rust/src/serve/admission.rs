@@ -1,0 +1,161 @@
+//! Admission control: a bounded in-flight counter plus per-request
+//! deadlines. Scoring work is only queued while a [`Ticket`] is held; when
+//! the bound is hit, new requests are shed immediately with a typed
+//! `Overloaded` reply instead of growing an unbounded backlog, and a
+//! request whose latency budget expires before a worker picks it up gets a
+//! typed `DeadlineExceeded` reply instead of stale scores.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Bounded admission counter shared by every connection thread.
+pub struct Admission {
+    max_in_flight: usize,
+    depth: AtomicUsize,
+}
+
+impl Admission {
+    /// Admit at most `max_in_flight` queued-or-running score requests;
+    /// `0` sheds everything (useful for deterministic overload tests).
+    pub fn new(max_in_flight: usize) -> Self {
+        Self {
+            max_in_flight,
+            depth: AtomicUsize::new(0),
+        }
+    }
+
+    /// Try to admit one request. `None` means shed now.
+    pub fn try_admit(self: &Arc<Self>) -> Option<Ticket> {
+        let mut cur = self.depth.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_in_flight {
+                return None;
+            }
+            match self.depth.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(Ticket { adm: self.clone() }),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Currently admitted (queued + running) requests.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub fn max_in_flight(&self) -> usize {
+        self.max_in_flight
+    }
+}
+
+/// RAII admission slot: dropping it (reply sent, request shed mid-queue,
+/// worker panicked out of scope) frees the slot.
+pub struct Ticket {
+    adm: Arc<Admission>,
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        self.adm.depth.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A request's latency budget, measured from arrival.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    start: Instant,
+    budget: Option<Duration>,
+}
+
+impl Deadline {
+    /// `request_ms` (per-request override) wins over `default_ms` (server
+    /// config); a budget of 0 ms expires immediately, and a `default_ms`
+    /// of 0 with no override means "no deadline".
+    pub fn new(request_ms: Option<u64>, default_ms: u64) -> Self {
+        let budget = match request_ms {
+            Some(ms) => Some(Duration::from_millis(ms)),
+            None if default_ms > 0 => Some(Duration::from_millis(default_ms)),
+            None => None,
+        };
+        Self {
+            start: Instant::now(),
+            budget,
+        }
+    }
+
+    pub fn expired(&self) -> bool {
+        self.budget.is_some_and(|b| self.start.elapsed() >= b)
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tickets_bound_depth_and_release_on_drop() {
+        let adm = Arc::new(Admission::new(2));
+        let t1 = adm.try_admit().unwrap();
+        let t2 = adm.try_admit().unwrap();
+        assert_eq!(adm.depth(), 2);
+        assert!(adm.try_admit().is_none(), "third request must shed");
+        drop(t1);
+        assert_eq!(adm.depth(), 1);
+        let t3 = adm.try_admit().unwrap();
+        assert!(adm.try_admit().is_none());
+        drop(t2);
+        drop(t3);
+        assert_eq!(adm.depth(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_sheds_everything() {
+        let adm = Arc::new(Admission::new(0));
+        assert!(adm.try_admit().is_none());
+        assert_eq!(adm.depth(), 0);
+    }
+
+    #[test]
+    fn concurrent_admission_never_exceeds_bound() {
+        let adm = Arc::new(Admission::new(4));
+        let peak = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let adm = adm.clone();
+                let peak = peak.clone();
+                s.spawn(move || {
+                    for _ in 0..200 {
+                        if let Some(_t) = adm.try_admit() {
+                            peak.fetch_max(adm.depth(), Ordering::Relaxed);
+                            std::hint::spin_loop();
+                        }
+                    }
+                });
+            }
+        });
+        assert!(peak.load(Ordering::Relaxed) <= 4);
+        assert_eq!(adm.depth(), 0);
+    }
+
+    #[test]
+    fn deadline_semantics() {
+        assert!(Deadline::new(Some(0), 1000).expired(), "0 ms expires now");
+        assert!(!Deadline::new(Some(10_000), 0).expired());
+        assert!(!Deadline::new(None, 10_000).expired());
+        let none = Deadline::new(None, 0);
+        assert!(!none.expired(), "no budget never expires");
+        let short = Deadline::new(Some(1), 0);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(short.expired());
+    }
+}

@@ -1,0 +1,212 @@
+//! Daemon metrics registry: request counters, latency percentiles, rows
+//! scored. Exposed live via the `stats` request and dumped once on
+//! shutdown. All counters are lock-free; only the latency reservoir takes
+//! a short mutex.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Rolling latency reservoir size — enough for stable p99 at smoke scale
+/// without unbounded growth on long-lived daemons.
+const LAT_CAP: usize = 4096;
+
+/// Percentile summary over the recorded latency reservoir.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    /// Total latencies ever recorded (the reservoir keeps the last
+    /// [`LAT_CAP`]).
+    pub count: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+struct Reservoir {
+    /// Last `LAT_CAP` request latencies, microseconds, ring-ordered.
+    ring: Vec<u64>,
+    next: usize,
+    total: u64,
+}
+
+/// Live metrics for one daemon instance.
+pub struct Metrics {
+    started: Instant,
+    pub requests: AtomicU64,
+    pub scored: AtomicU64,
+    pub overloaded: AtomicU64,
+    pub deadline_exceeded: AtomicU64,
+    pub bad_requests: AtomicU64,
+    pub internal_errors: AtomicU64,
+    pub degraded_responses: AtomicU64,
+    /// Training rows streamed through scoring passes.
+    pub rows_scored: AtomicU64,
+    lat: Mutex<Reservoir>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            scored: AtomicU64::new(0),
+            overloaded: AtomicU64::new(0),
+            deadline_exceeded: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            internal_errors: AtomicU64::new(0),
+            degraded_responses: AtomicU64::new(0),
+            rows_scored: AtomicU64::new(0),
+            lat: Mutex::new(Reservoir {
+                ring: Vec::new(),
+                next: 0,
+                total: 0,
+            }),
+        }
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Record one served-request latency.
+    pub fn note_latency(&self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        let mut lat = self.lat.lock().unwrap();
+        lat.total += 1;
+        if lat.ring.len() < LAT_CAP {
+            lat.ring.push(us);
+        } else {
+            let slot = lat.next;
+            lat.ring[slot] = us;
+        }
+        lat.next = (lat.next + 1) % LAT_CAP;
+    }
+
+    /// p50/p95/p99 over the reservoir (zeros when nothing recorded).
+    pub fn latency_summary(&self) -> LatencySummary {
+        let lat = self.lat.lock().unwrap();
+        let mut sorted = lat.ring.clone();
+        let total = lat.total;
+        drop(lat);
+        if sorted.is_empty() {
+            return LatencySummary {
+                count: total,
+                ..Default::default()
+            };
+        }
+        sorted.sort_unstable();
+        let pick = |q: f64| -> f64 {
+            let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+            sorted[idx] as f64 / 1000.0
+        };
+        LatencySummary {
+            count: total,
+            p50_ms: pick(0.50),
+            p95_ms: pick(0.95),
+            p99_ms: pick(0.99),
+        }
+    }
+
+    /// Snapshot every counter as a JSON object (the `stats` reply's
+    /// `requests` / `latency` sections).
+    pub fn snapshot_json(&self) -> Json {
+        let lat = self.latency_summary();
+        Json::obj(vec![
+            (
+                "requests",
+                Json::obj(vec![
+                    ("total", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+                    ("scored", Json::Num(self.scored.load(Ordering::Relaxed) as f64)),
+                    (
+                        "overloaded",
+                        Json::Num(self.overloaded.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "deadline_exceeded",
+                        Json::Num(self.deadline_exceeded.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "bad_requests",
+                        Json::Num(self.bad_requests.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "internal_errors",
+                        Json::Num(self.internal_errors.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "degraded",
+                        Json::Num(self.degraded_responses.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            (
+                "latency",
+                Json::obj(vec![
+                    ("count", Json::Num(lat.count as f64)),
+                    ("p50_ms", Json::Num(lat.p50_ms)),
+                    ("p95_ms", Json::Num(lat.p95_ms)),
+                    ("p99_ms", Json::Num(lat.p99_ms)),
+                ]),
+            ),
+            (
+                "rows_scored",
+                Json::Num(self.rows_scored.load(Ordering::Relaxed) as f64),
+            ),
+            ("uptime_s", Json::Num(self.uptime().as_secs_f64())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_over_known_distribution() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_summary().count, 0);
+        for i in 1..=100u64 {
+            m.note_latency(Duration::from_millis(i));
+        }
+        let s = m.latency_summary();
+        assert_eq!(s.count, 100);
+        assert!((s.p50_ms - 50.0).abs() <= 1.5, "p50 = {}", s.p50_ms);
+        assert!((s.p95_ms - 95.0).abs() <= 1.5, "p95 = {}", s.p95_ms);
+        assert!((s.p99_ms - 99.0).abs() <= 1.5, "p99 = {}", s.p99_ms);
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms);
+    }
+
+    #[test]
+    fn reservoir_is_bounded_but_count_is_total() {
+        let m = Metrics::new();
+        for _ in 0..(LAT_CAP + 100) {
+            m.note_latency(Duration::from_micros(10));
+        }
+        let s = m.latency_summary();
+        assert_eq!(s.count, (LAT_CAP + 100) as u64);
+        assert_eq!(m.lat.lock().unwrap().ring.len(), LAT_CAP);
+    }
+
+    #[test]
+    fn snapshot_serializes_counters() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.scored.fetch_add(2, Ordering::Relaxed);
+        m.overloaded.fetch_add(1, Ordering::Relaxed);
+        m.rows_scored.fetch_add(512, Ordering::Relaxed);
+        m.note_latency(Duration::from_millis(2));
+        let j = m.snapshot_json();
+        let req = j.get("requests").unwrap();
+        assert_eq!(req.get("total").unwrap().as_u64(), Some(3));
+        assert_eq!(req.get("overloaded").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("rows_scored").unwrap().as_u64(), Some(512));
+        assert_eq!(j.get("latency").unwrap().get("count").unwrap().as_u64(), Some(1));
+    }
+}

@@ -1,0 +1,41 @@
+//! Attribution serving: the long-running daemon behind `grass serve`.
+//!
+//! Batch attribution re-pays process startup, store open, bank
+//! construction, and precond-artifact load on every invocation. This
+//! module turns that cost into one-time daemon state:
+//!
+//! - [`server`] — hot-state construction (store opened once, engines
+//!   ingested once) and the bounded worker pool; [`ServeConfig`] /
+//!   [`spawn`] / [`run`] are the public surface.
+//! - [`proto`] — the versioned newline-delimited-JSON wire protocol
+//!   (`score` / `stats` / `ping` / `shutdown` requests; typed error
+//!   replies). `grass query` is the reference client.
+//! - [`admission`] — queue-depth load shedding ([`Admission`]) and
+//!   per-request latency budgets ([`admission::Deadline`]): a full queue
+//!   answers `Overloaded`, a stale request answers `DeadlineExceeded`, and
+//!   the daemon keeps serving either way.
+//! - [`shard_cache`] — [`ShardCache`], the warm LRU shard-byte pool with
+//!   sequential prefetch. It attaches to any
+//!   [`StoreReader`](crate::store::StoreReader), so the batch
+//!   `grass attribute --shard-cache` path reuses it too.
+//! - [`metrics`] — the [`Metrics`] registry (request counters, p50/p95/p99
+//!   latency, rows scored), served by the `stats` request and dumped on
+//!   graceful shutdown.
+//!
+//! Degradation model: scoring streams through the existing
+//! [`ReadGuard`](crate::store::ReadGuard) retry/quarantine layer, so a
+//! corrupt shard degrades the *response coverage* of affected replies
+//! instead of killing the daemon.
+
+pub mod admission;
+pub mod metrics;
+pub mod proto;
+pub mod server;
+pub(crate) mod session;
+pub mod shard_cache;
+
+pub use admission::Admission;
+pub use metrics::{LatencySummary, Metrics};
+pub use proto::{ErrorKind, QueryPayload, Request, Response, PROTO_VERSION};
+pub use server::{run, spawn, ServeConfig, ServerHandle};
+pub use shard_cache::{CacheStats, ShardCache};

@@ -1,0 +1,620 @@
+//! Versioned newline-delimited-JSON wire protocol for the serving daemon.
+//!
+//! Every message is one JSON object on one line, carrying `"v": 1` and a
+//! `"type"` tag. Requests flow client → server, responses server → client;
+//! both sides use [`crate::util::json::Json`] (no external deps). Unknown
+//! versions and malformed frames are rejected with a typed
+//! [`ErrorKind::BadRequest`] reply rather than a dropped connection.
+
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::{bail, ensure};
+use std::io::{BufRead, Write};
+
+/// Protocol version spoken (and required) by this build.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Typed failure classes a server reply can carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Admission control shed the request: the bounded queue was full.
+    Overloaded,
+    /// The request waited past its latency budget and was dropped unscored.
+    DeadlineExceeded,
+    /// The request was malformed, mis-versioned, or named an unknown scorer.
+    BadRequest,
+    /// The scoring path itself failed (store fatally unreadable, etc.).
+    Internal,
+}
+
+impl ErrorKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::DeadlineExceeded => "deadline_exceeded",
+            ErrorKind::BadRequest => "bad_request",
+            ErrorKind::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "overloaded" => ErrorKind::Overloaded,
+            "deadline_exceeded" => ErrorKind::DeadlineExceeded,
+            "bad_request" => ErrorKind::BadRequest,
+            "internal" => ErrorKind::Internal,
+            other => bail!("unknown error kind {other:?}"),
+        })
+    }
+
+    /// Whether this kind is an admission-control shed (client exit code 4)
+    /// rather than a hard failure.
+    pub fn is_shed(&self) -> bool {
+        matches!(self, ErrorKind::Overloaded | ErrorKind::DeadlineExceeded)
+    }
+}
+
+/// How a score request supplies its query gradients.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QueryPayload {
+    /// Server-side synthetic queries (deterministic from the store seed) —
+    /// the zero-bandwidth option for tests and smoke checks.
+    Synth { m: usize },
+    /// Raw per-query gradients (`m × input_dim`, row-major); the server
+    /// compresses them through its resident bank. Flat methods only.
+    Raw { m: usize, rows: Vec<f32> },
+    /// Pre-compressed query sketches (`m × k`, row-major), used verbatim.
+    Compressed { m: usize, rows: Vec<f32> },
+}
+
+impl QueryPayload {
+    pub fn m(&self) -> usize {
+        match self {
+            QueryPayload::Synth { m }
+            | QueryPayload::Raw { m, .. }
+            | QueryPayload::Compressed { m, .. } => *m,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            QueryPayload::Synth { m } => Json::obj(vec![
+                ("kind", Json::Str("synth".into())),
+                ("m", Json::Num(*m as f64)),
+            ]),
+            QueryPayload::Raw { m, rows } => Json::obj(vec![
+                ("kind", Json::Str("raw".into())),
+                ("m", Json::Num(*m as f64)),
+                ("rows", Json::arr_f32(rows)),
+            ]),
+            QueryPayload::Compressed { m, rows } => Json::obj(vec![
+                ("kind", Json::Str("compressed".into())),
+                ("m", Json::Num(*m as f64)),
+                ("rows", Json::arr_f32(rows)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let kind = v.req("kind")?.as_str().unwrap_or_default().to_string();
+        let m = v.req("m")?.as_usize().unwrap_or(0);
+        ensure!(m > 0, "query payload needs m >= 1");
+        let rows = |v: &Json| -> Result<Vec<f32>> {
+            let arr = v
+                .req("rows")?
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect())
+                .unwrap_or_default();
+            Ok(arr)
+        };
+        Ok(match kind.as_str() {
+            "synth" => QueryPayload::Synth { m },
+            "raw" => QueryPayload::Raw { m, rows: rows(v)? },
+            "compressed" => QueryPayload::Compressed { m, rows: rows(v)? },
+            other => bail!("unknown query payload kind {other:?}"),
+        })
+    }
+}
+
+/// A scoring request: which scorer, how many neighbours, what queries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoreRequest {
+    pub id: u64,
+    pub scorer: String,
+    /// Top-k training rows returned per query.
+    pub top_k: usize,
+    /// Include the full `m × n` score matrix in the reply (large!).
+    pub include_scores: bool,
+    /// Include per-query self-influence values.
+    pub self_influence: bool,
+    /// Per-request latency budget override (ms); `Some(0)` expires
+    /// immediately, `None` uses the server default.
+    pub deadline_ms: Option<u64>,
+    pub queries: QueryPayload,
+}
+
+/// Client → server messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Score(ScoreRequest),
+    /// Ask for the daemon's metrics / hot-state snapshot.
+    Stats { id: u64 },
+    /// Liveness probe.
+    Ping { id: u64 },
+    /// Graceful shutdown: the daemon stops accepting, drains, and exits.
+    Shutdown { id: u64 },
+}
+
+impl Request {
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Score(r) => r.id,
+            Request::Stats { id } | Request::Ping { id } | Request::Shutdown { id } => *id,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("v", Json::Num(PROTO_VERSION as f64))];
+        match self {
+            Request::Score(r) => {
+                pairs.push(("type", Json::Str("score".into())));
+                pairs.push(("id", Json::Num(r.id as f64)));
+                pairs.push(("scorer", Json::Str(r.scorer.clone())));
+                pairs.push(("top_k", Json::Num(r.top_k as f64)));
+                pairs.push(("include_scores", Json::Bool(r.include_scores)));
+                pairs.push(("self_influence", Json::Bool(r.self_influence)));
+                if let Some(d) = r.deadline_ms {
+                    pairs.push(("deadline_ms", Json::Num(d as f64)));
+                }
+                pairs.push(("queries", r.queries.to_json()));
+            }
+            Request::Stats { id } => {
+                pairs.push(("type", Json::Str("stats".into())));
+                pairs.push(("id", Json::Num(*id as f64)));
+            }
+            Request::Ping { id } => {
+                pairs.push(("type", Json::Str("ping".into())));
+                pairs.push(("id", Json::Num(*id as f64)));
+            }
+            Request::Shutdown { id } => {
+                pairs.push(("type", Json::Str("shutdown".into())));
+                pairs.push(("id", Json::Num(*id as f64)));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        check_version(v)?;
+        let id = v.get("id").and_then(|x| x.as_u64()).unwrap_or(0);
+        let ty = v.req("type")?.as_str().unwrap_or_default().to_string();
+        Ok(match ty.as_str() {
+            "score" => Request::Score(ScoreRequest {
+                id,
+                scorer: v.req("scorer")?.as_str().unwrap_or_default().to_string(),
+                top_k: v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(5),
+                include_scores: v
+                    .get("include_scores")
+                    .and_then(|x| x.as_bool())
+                    .unwrap_or(false),
+                self_influence: v
+                    .get("self_influence")
+                    .and_then(|x| x.as_bool())
+                    .unwrap_or(false),
+                deadline_ms: v.get("deadline_ms").and_then(|x| x.as_u64()),
+                queries: QueryPayload::from_json(v.req("queries")?)?,
+            }),
+            "stats" => Request::Stats { id },
+            "ping" => Request::Ping { id },
+            "shutdown" => Request::Shutdown { id },
+            other => bail!("unknown request type {other:?}"),
+        })
+    }
+
+    /// One-line wire frame (compact JSON + newline).
+    pub fn to_line(&self) -> String {
+        let mut s = self.to_json().to_string_compact();
+        s.push('\n');
+        s
+    }
+}
+
+/// Per-reply coverage: how much of the store actually contributed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoverageInfo {
+    pub rows_total: usize,
+    pub rows_scored: usize,
+    pub quarantined: Vec<usize>,
+    pub retries_attempted: u64,
+}
+
+impl CoverageInfo {
+    pub fn is_degraded(&self) -> bool {
+        self.rows_scored < self.rows_total || !self.quarantined.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rows_total", Json::Num(self.rows_total as f64)),
+            ("rows_scored", Json::Num(self.rows_scored as f64)),
+            ("quarantined", Json::arr_usize(&self.quarantined)),
+            ("retries_attempted", Json::Num(self.retries_attempted as f64)),
+            ("degraded", Json::Bool(self.is_degraded())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            rows_total: v.req("rows_total")?.as_usize().unwrap_or(0),
+            rows_scored: v.req("rows_scored")?.as_usize().unwrap_or(0),
+            quarantined: v
+                .get("quarantined")
+                .and_then(|x| x.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            retries_attempted: v
+                .get("retries_attempted")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(0),
+        })
+    }
+}
+
+/// A successful scoring reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoreResponse {
+    pub id: u64,
+    pub scorer: String,
+    pub m: usize,
+    pub n: usize,
+    /// Per-query `(train_row, score)` pairs, best first.
+    pub top: Vec<Vec<(usize, f32)>>,
+    /// Full `m × n` score matrix, row-major, when requested.
+    pub scores: Option<Vec<f32>>,
+    /// Per-query self-influence, when requested.
+    pub self_influence: Option<Vec<f32>>,
+    /// Synthetic query class labels, when the server generated the queries.
+    pub classes: Option<Vec<usize>>,
+    pub coverage: CoverageInfo,
+    pub elapsed_ms: f64,
+}
+
+/// Server → client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Scores(Box<ScoreResponse>),
+    Stats { id: u64, stats: Json },
+    Pong { id: u64 },
+    ShuttingDown { id: u64 },
+    Error { id: u64, kind: ErrorKind, message: String },
+}
+
+impl Response {
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Scores(r) => r.id,
+            Response::Stats { id, .. }
+            | Response::Pong { id }
+            | Response::ShuttingDown { id }
+            | Response::Error { id, .. } => *id,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("v", Json::Num(PROTO_VERSION as f64))];
+        match self {
+            Response::Scores(r) => {
+                pairs.push(("type", Json::Str("scores".into())));
+                pairs.push(("id", Json::Num(r.id as f64)));
+                pairs.push(("scorer", Json::Str(r.scorer.clone())));
+                pairs.push(("m", Json::Num(r.m as f64)));
+                pairs.push(("n", Json::Num(r.n as f64)));
+                let top = Json::Arr(
+                    r.top
+                        .iter()
+                        .map(|q| {
+                            Json::Arr(
+                                q.iter()
+                                    .map(|(i, s)| {
+                                        Json::obj(vec![
+                                            ("index", Json::Num(*i as f64)),
+                                            ("score", Json::Num(*s as f64)),
+                                        ])
+                                    })
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                );
+                pairs.push(("top", top));
+                if let Some(scores) = &r.scores {
+                    let rows = Json::Arr(
+                        scores
+                            .chunks(r.n.max(1))
+                            .map(Json::arr_f32)
+                            .collect(),
+                    );
+                    pairs.push(("scores", rows));
+                }
+                if let Some(si) = &r.self_influence {
+                    pairs.push(("self_influence", Json::arr_f32(si)));
+                }
+                if let Some(classes) = &r.classes {
+                    pairs.push(("classes", Json::arr_usize(classes)));
+                }
+                pairs.push(("coverage", r.coverage.to_json()));
+                pairs.push(("elapsed_ms", Json::Num(r.elapsed_ms)));
+            }
+            Response::Stats { id, stats } => {
+                pairs.push(("type", Json::Str("stats".into())));
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("stats", stats.clone()));
+            }
+            Response::Pong { id } => {
+                pairs.push(("type", Json::Str("pong".into())));
+                pairs.push(("id", Json::Num(*id as f64)));
+            }
+            Response::ShuttingDown { id } => {
+                pairs.push(("type", Json::Str("shutting_down".into())));
+                pairs.push(("id", Json::Num(*id as f64)));
+            }
+            Response::Error { id, kind, message } => {
+                pairs.push(("type", Json::Str("error".into())));
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("kind", Json::Str(kind.as_str().into())));
+                pairs.push(("message", Json::Str(message.clone())));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        check_version(v)?;
+        let id = v.get("id").and_then(|x| x.as_u64()).unwrap_or(0);
+        let ty = v.req("type")?.as_str().unwrap_or_default().to_string();
+        Ok(match ty.as_str() {
+            "scores" => {
+                let n = v.req("n")?.as_usize().unwrap_or(0);
+                let top = v
+                    .req("top")?
+                    .as_arr()
+                    .map(|qs| {
+                        qs.iter()
+                            .map(|q| {
+                                q.as_arr()
+                                    .map(|pairs| {
+                                        pairs
+                                            .iter()
+                                            .filter_map(|p| {
+                                                Some((
+                                                    p.get("index")?.as_usize()?,
+                                                    p.get("score")?.as_f64()? as f32,
+                                                ))
+                                            })
+                                            .collect()
+                                    })
+                                    .unwrap_or_default()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let floats = |v: &Json| -> Vec<f32> {
+                    v.as_arr()
+                        .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect())
+                        .unwrap_or_default()
+                };
+                let scores = v.get("scores").and_then(|rows| {
+                    rows.as_arr()
+                        .map(|rs| rs.iter().flat_map(|r| floats(r)).collect::<Vec<f32>>())
+                });
+                Response::Scores(Box::new(ScoreResponse {
+                    id,
+                    scorer: v.req("scorer")?.as_str().unwrap_or_default().to_string(),
+                    m: v.req("m")?.as_usize().unwrap_or(0),
+                    n,
+                    top,
+                    scores,
+                    self_influence: v.get("self_influence").map(floats),
+                    classes: v.get("classes").and_then(|c| {
+                        c.as_arr()
+                            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    }),
+                    coverage: CoverageInfo::from_json(v.req("coverage")?)?,
+                    elapsed_ms: v.get("elapsed_ms").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                }))
+            }
+            "stats" => Response::Stats {
+                id,
+                stats: v.req("stats")?.clone(),
+            },
+            "pong" => Response::Pong { id },
+            "shutting_down" => Response::ShuttingDown { id },
+            "error" => Response::Error {
+                id,
+                kind: ErrorKind::parse(v.req("kind")?.as_str().unwrap_or_default())?,
+                message: v
+                    .get("message")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            },
+            other => bail!("unknown response type {other:?}"),
+        })
+    }
+
+    /// One-line wire frame (compact JSON + newline).
+    pub fn to_line(&self) -> String {
+        let mut s = self.to_json().to_string_compact();
+        s.push('\n');
+        s
+    }
+}
+
+fn check_version(v: &Json) -> Result<()> {
+    let got = v.req("v")?.as_u64().unwrap_or(0);
+    ensure!(
+        got == PROTO_VERSION,
+        "protocol version mismatch: peer speaks v{got}, this build speaks v{PROTO_VERSION}"
+    );
+    Ok(())
+}
+
+/// Write one frame and flush (NDJSON framing is line-buffered).
+pub fn write_frame(w: &mut impl Write, line: &str) -> std::io::Result<()> {
+    w.write_all(line.as_bytes())?;
+    w.flush()
+}
+
+/// Read one NDJSON frame; `Ok(None)` on a clean EOF, `Err` on parse failure.
+pub fn read_frame(r: &mut impl BufRead) -> Result<Option<Json>> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = r.read_line(&mut line)?;
+        if n == 0 {
+            return Ok(None);
+        }
+        if line.trim().is_empty() {
+            continue; // tolerate blank keep-alive lines
+        }
+        return Json::parse(line.trim()).map(Some);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_all_variants() {
+        let reqs = vec![
+            Request::Score(ScoreRequest {
+                id: 7,
+                scorer: "if".into(),
+                top_k: 5,
+                include_scores: true,
+                self_influence: true,
+                deadline_ms: Some(250),
+                queries: QueryPayload::Synth { m: 4 },
+            }),
+            Request::Score(ScoreRequest {
+                id: 8,
+                scorer: "graddot".into(),
+                top_k: 3,
+                include_scores: false,
+                self_influence: false,
+                deadline_ms: None,
+                queries: QueryPayload::Compressed {
+                    m: 2,
+                    rows: vec![1.0, -2.5, 0.25, 3.0],
+                },
+            }),
+            Request::Score(ScoreRequest {
+                id: 9,
+                scorer: "if".into(),
+                top_k: 1,
+                include_scores: false,
+                self_influence: false,
+                deadline_ms: Some(0),
+                queries: QueryPayload::Raw {
+                    m: 1,
+                    rows: vec![0.5; 8],
+                },
+            }),
+            Request::Stats { id: 1 },
+            Request::Ping { id: 2 },
+            Request::Shutdown { id: 3 },
+        ];
+        for req in reqs {
+            let line = req.to_line();
+            assert!(line.ends_with('\n') && !line[..line.len() - 1].contains('\n'));
+            let back = Request::from_json(&Json::parse(line.trim()).unwrap()).unwrap();
+            assert_eq!(req, back);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_all_variants() {
+        let resps = vec![
+            Response::Scores(Box::new(ScoreResponse {
+                id: 7,
+                scorer: "if".into(),
+                m: 2,
+                n: 3,
+                top: vec![vec![(2, 1.5), (0, 0.25)], vec![(1, -0.5)]],
+                scores: Some(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+                self_influence: Some(vec![0.5, 0.75]),
+                classes: Some(vec![3, 1]),
+                coverage: CoverageInfo {
+                    rows_total: 3,
+                    rows_scored: 3,
+                    quarantined: vec![],
+                    retries_attempted: 0,
+                },
+                elapsed_ms: 1.5,
+            })),
+            Response::Stats {
+                id: 1,
+                stats: Json::obj(vec![("requests", Json::Num(4.0))]),
+            },
+            Response::Pong { id: 2 },
+            Response::ShuttingDown { id: 3 },
+            Response::Error {
+                id: 4,
+                kind: ErrorKind::Overloaded,
+                message: "queue full".into(),
+            },
+        ];
+        for resp in resps {
+            let back = Response::from_json(&Json::parse(resp.to_line().trim()).unwrap()).unwrap();
+            assert_eq!(resp, back);
+        }
+    }
+
+    #[test]
+    fn degraded_coverage_roundtrips() {
+        let cov = CoverageInfo {
+            rows_total: 512,
+            rows_scored: 480,
+            quarantined: vec![2],
+            retries_attempted: 3,
+        };
+        assert!(cov.is_degraded());
+        let j = cov.to_json();
+        assert_eq!(j.get("degraded").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(CoverageInfo::from_json(&j).unwrap(), cov);
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let v = Json::parse(r#"{"v":2,"type":"ping","id":1}"#).unwrap();
+        let err = Request::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err}");
+        let kinds = [
+            ErrorKind::Overloaded,
+            ErrorKind::DeadlineExceeded,
+            ErrorKind::BadRequest,
+            ErrorKind::Internal,
+        ];
+        for k in kinds {
+            assert_eq!(ErrorKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(ErrorKind::Overloaded.is_shed());
+        assert!(ErrorKind::DeadlineExceeded.is_shed());
+        assert!(!ErrorKind::BadRequest.is_shed());
+    }
+
+    #[test]
+    fn frame_io_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Request::Ping { id: 9 }.to_line()).unwrap();
+        write_frame(&mut buf, "\n").unwrap();
+        write_frame(&mut buf, &Request::Stats { id: 10 }.to_line()).unwrap();
+        let mut r = std::io::BufReader::new(&buf[..]);
+        let a = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(Request::from_json(&a).unwrap(), Request::Ping { id: 9 });
+        let b = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(Request::from_json(&b).unwrap(), Request::Stats { id: 10 });
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+}

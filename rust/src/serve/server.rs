@@ -1,0 +1,598 @@
+//! The serving daemon: hot state built once, then a bounded worker pool
+//! scoring requests for the lifetime of the process.
+//!
+//! Startup opens the store a single time (manifest-verified), optionally
+//! attaches a prefetching [`ShardCache`], rebuilds the
+//! [`CompressorBank`], loads + validates the persisted
+//! [`PrecondArtifact`](crate::attrib::PrecondArtifact), and runs each
+//! configured scorer's `cache_stream` ingest (FIM + self-influence passes)
+//! exactly once. Every subsequent request reuses that state — observable
+//! via the `stats` request: `store.opens` stays 1 and per-engine
+//! `fim_rows` never grows while `requests.scored` does.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, ensure, Context};
+
+use crate::attrib::{from_spec, AttributionSpec, Attributor, PrecondArtifact, PrecondSpec, StreamOpts, DEFAULT_MEM_BUDGET};
+use crate::coordinator::CompressorBank;
+use crate::data::queries::{compress_raw_queries, synth_queries};
+use crate::data::synthgrad::SYNTH_MODEL;
+use crate::serve::admission::{Admission, Deadline, Ticket};
+use crate::serve::metrics::Metrics;
+use crate::serve::proto::{
+    CoverageInfo, ErrorKind, QueryPayload, Response, ScoreRequest, ScoreResponse,
+};
+use crate::serve::shard_cache::ShardCache;
+use crate::store::{RetryPolicy, StoreMeta, StoreReader};
+use crate::util::json::Json;
+use crate::Result;
+
+/// Everything `grass serve` configures about a daemon instance.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Store directory to serve.
+    pub store: PathBuf,
+    /// Bind address (`host:port`; port 0 auto-assigns — the bound address
+    /// is reported by [`ServerHandle::addr`]).
+    pub addr: String,
+    /// Scorers kept hot (each pays its ingest passes once at startup).
+    pub scorers: Vec<String>,
+    /// Scoring worker threads.
+    pub workers: usize,
+    /// Admission bound: queued + running score requests; 0 sheds all.
+    pub max_in_flight: usize,
+    /// Default per-request latency budget (ms); 0 = no deadline.
+    pub deadline_ms: u64,
+    /// Streaming byte budget per scoring pass.
+    pub mem_budget: usize,
+    /// Warm shard-cache byte budget; 0 disables the cache.
+    pub cache_bytes: usize,
+    /// Quarantine corrupt shards and serve degraded coverage instead of
+    /// failing requests.
+    pub skip_corrupt: bool,
+    /// Transient-read retry policy.
+    pub retries: usize,
+    pub retry_backoff_ms: u64,
+    /// Run a full checksum scan before serving (refuse to start on
+    /// corruption unless `skip_corrupt` is set).
+    pub verify: bool,
+    /// Consume a persisted `precond.bin` artifact when present + valid.
+    pub use_artifact: bool,
+    /// FIM damping λ for the preconditioned scorers.
+    pub damping: f64,
+    /// Explicit preconditioner spec; `None` = each scorer's default.
+    pub precond: Option<String>,
+    /// Suppress stdout chatter (tests / benches).
+    pub quiet: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            store: PathBuf::from("grass_store"),
+            addr: "127.0.0.1:0".to_string(),
+            scorers: vec!["if".to_string(), "graddot".to_string()],
+            workers: 2,
+            max_in_flight: 32,
+            deadline_ms: 10_000,
+            mem_budget: DEFAULT_MEM_BUDGET,
+            cache_bytes: 256 << 20,
+            skip_corrupt: false,
+            retries: 2,
+            retry_backoff_ms: 50,
+            verify: false,
+            use_artifact: true,
+            damping: 1e-3,
+            precond: None,
+            quiet: false,
+        }
+    }
+}
+
+/// Canonical scorer id (the registry aliases collapsed), so config keys
+/// and request keys always meet.
+pub(crate) fn canon_scorer(s: &str) -> &str {
+    match s {
+        "influence" => "if",
+        "dot" => "graddot",
+        "bw" => "blockwise",
+        other => other,
+    }
+}
+
+/// One resident scorer: ingested once at startup, shared by all workers.
+pub(crate) struct Engine {
+    pub attributor: Box<dyn Attributor>,
+    pub fim_rows: usize,
+    pub describe: String,
+}
+
+/// A queued scoring job: request + admission ticket + reply channel.
+pub(crate) struct Job {
+    pub req: ScoreRequest,
+    pub deadline: Deadline,
+    pub ticket: Ticket,
+    pub reply: Sender<Response>,
+}
+
+/// Shared daemon state (hot stores, engines, metrics, shutdown plumbing).
+pub(crate) struct ServerState {
+    pub cfg: ServeConfig,
+    pub meta: StoreMeta,
+    pub bank: CompressorBank,
+    pub engines: BTreeMap<String, Engine>,
+    pub admission: Arc<Admission>,
+    pub metrics: Metrics,
+    pub cache: Option<Arc<ShardCache>>,
+    pub artifact_loaded: bool,
+    /// Store opens over the daemon's lifetime — 1 by construction; the
+    /// `stats` request exposes it so hot-state reuse is testable.
+    pub store_opens: AtomicU64,
+    pub jobs: Mutex<Option<Sender<Job>>>,
+    pub shutdown: AtomicBool,
+    pub addr: SocketAddr,
+}
+
+impl ServerState {
+    /// Flip the shutdown flag and poke the accept loop awake.
+    pub fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// The full `stats`-request payload: metrics counters + hot-state
+    /// evidence (store opens, per-engine fim rows, cache hit rate).
+    pub fn stats_json(&self) -> Json {
+        let mut map = match self.metrics.snapshot_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("metrics snapshot is an object"),
+        };
+        map.insert(
+            "store".to_string(),
+            Json::obj(vec![
+                ("dir", Json::Str(self.cfg.store.display().to_string())),
+                ("n", Json::Num(self.meta.n as f64)),
+                ("k", Json::Num(self.meta.k as f64)),
+                ("method", Json::Str(self.meta.method.clone())),
+                (
+                    "shards",
+                    Json::Num(self.meta.n.div_ceil(self.meta.shard_rows.max(1)) as f64),
+                ),
+                (
+                    "opens",
+                    Json::Num(self.store_opens.load(Ordering::Relaxed) as f64),
+                ),
+            ]),
+        );
+        let engines = self
+            .engines
+            .iter()
+            .map(|(name, e)| {
+                (
+                    name.clone(),
+                    Json::obj(vec![
+                        ("fim_rows", Json::Num(e.fim_rows as f64)),
+                        ("precond", Json::Str(e.describe.clone())),
+                    ]),
+                )
+            })
+            .collect();
+        map.insert("engines".to_string(), Json::Obj(engines));
+        map.insert("artifact_loaded".to_string(), Json::Bool(self.artifact_loaded));
+        map.insert(
+            "admission".to_string(),
+            Json::obj(vec![
+                ("queue_depth", Json::Num(self.admission.depth() as f64)),
+                (
+                    "max_in_flight",
+                    Json::Num(self.admission.max_in_flight() as f64),
+                ),
+                ("workers", Json::Num(self.cfg.workers as f64)),
+            ]),
+        );
+        let cache = match &self.cache {
+            Some(c) => {
+                let s = c.stats();
+                Json::obj(vec![
+                    ("hits", Json::Num(s.hits as f64)),
+                    ("misses", Json::Num(s.misses as f64)),
+                    ("hit_rate", Json::Num(s.hit_rate())),
+                    ("prefetch_loads", Json::Num(s.prefetch_loads as f64)),
+                    ("evictions", Json::Num(s.evictions as f64)),
+                    ("resident_shards", Json::Num(s.resident_shards as f64)),
+                    ("resident_bytes", Json::Num(s.resident_bytes as f64)),
+                    ("budget_bytes", Json::Num(s.budget_bytes as f64)),
+                ])
+            }
+            None => Json::Null,
+        };
+        map.insert("shard_cache".to_string(), cache);
+        Json::Obj(map)
+    }
+}
+
+/// Build the daemon's hot state: one store open, one bank rebuild, one
+/// artifact load, one ingest per scorer.
+fn build_state(cfg: ServeConfig) -> Result<ServerState> {
+    ensure!(!cfg.scorers.is_empty(), "serve needs at least one --scorer");
+    let mut reader = StoreReader::open(&cfg.store)?;
+    if cfg.verify {
+        let report = reader.verify_checksums()?;
+        if !report.all_ok() {
+            let bad: Vec<usize> = report
+                .shards
+                .iter()
+                .filter(|(_, s)| !s.is_ok())
+                .map(|(i, _)| *i)
+                .collect();
+            ensure!(
+                cfg.skip_corrupt,
+                "store at {} failed verification (bad shards: {bad:?}); refusing to serve — \
+                 pass --skip-corrupt to serve degraded",
+                cfg.store.display()
+            );
+            if !cfg.quiet {
+                eprintln!(
+                    "warning: serving degraded — verification flagged shards {bad:?} at {}",
+                    cfg.store.display()
+                );
+            }
+        }
+    }
+    let cache = if cfg.cache_bytes > 0 {
+        let cache = Arc::new(ShardCache::new(cfg.cache_bytes));
+        cache.spawn_prefetcher(cfg.store.clone());
+        reader.attach_cache(cache.clone());
+        Some(cache)
+    } else {
+        None
+    };
+    let shapes = reader.meta.shapes();
+    ensure!(
+        shapes.p > 0 || !shapes.layers.is_empty(),
+        "store at {} records no gradient geometry (pre-redesign cache?); re-run `grass cache`",
+        cfg.store.display()
+    );
+    let spec = reader.meta.spec()?;
+    let seed = reader.meta.seed;
+    let bank = spec.build_bank(&shapes, seed)?;
+    ensure!(
+        bank.output_dim() == reader.meta.k,
+        "rebuilt bank emits {} columns but the store has k = {}",
+        bank.output_dim(),
+        reader.meta.k
+    );
+    let model = reader.meta.model.as_str();
+    ensure!(
+        model == SYNTH_MODEL || model.is_empty(),
+        "serving store model '{model}' needs the PJRT runtime per query; only synthetic-model \
+         stores are servable today"
+    );
+
+    let artifact = if cfg.use_artifact {
+        match PrecondArtifact::load_if_present(&cfg.store)? {
+            Some(a) => {
+                a.validate_store(&reader.meta)?;
+                Some(Arc::new(a))
+            }
+            None => None,
+        }
+    } else {
+        None
+    };
+    let artifact_loaded = artifact.is_some();
+
+    let base_opts = StreamOpts {
+        mem_budget: cfg.mem_budget,
+        workers: cfg.workers.max(1),
+        retry: RetryPolicy {
+            retries: cfg.retries,
+            backoff: Duration::from_millis(cfg.retry_backoff_ms),
+            seed,
+        },
+        skip_corrupt: cfg.skip_corrupt,
+        ..StreamOpts::default()
+    };
+
+    let mut engines = BTreeMap::new();
+    for name in &cfg.scorers {
+        let scorer = canon_scorer(name).to_string();
+        if engines.contains_key(&scorer) {
+            continue;
+        }
+        let pspec = match &cfg.precond {
+            Some(s) => PrecondSpec::parse_with(s, cfg.damping)?,
+            None => PrecondSpec::default_for_scorer(&scorer, cfg.damping),
+        };
+        let mut opts = base_opts.clone();
+        if pspec.needs_fim() {
+            opts.artifact = artifact.clone();
+        }
+        let mut aspec = AttributionSpec::new(&scorer, spec.clone(), seed);
+        aspec.damping = cfg.damping;
+        aspec.layout = bank.layer_dims();
+        aspec.precond = Some(pspec);
+        let mut attributor = from_spec(&aspec)
+            .with_context(|| format!("building serve engine for scorer '{scorer}'"))?;
+        attributor
+            .cache_stream(&reader, &opts)
+            .with_context(|| format!("ingesting store for scorer '{scorer}'"))?;
+        let pstats = attributor.precond_stats();
+        engines.insert(
+            scorer,
+            Engine {
+                attributor,
+                fim_rows: pstats.fim_rows,
+                describe: pstats.describe,
+            },
+        );
+    }
+
+    Ok(ServerState {
+        admission: Arc::new(Admission::new(cfg.max_in_flight)),
+        meta: reader.meta.clone(),
+        bank,
+        engines,
+        metrics: Metrics::new(),
+        cache,
+        artifact_loaded,
+        store_opens: AtomicU64::new(1),
+        jobs: Mutex::new(None),
+        shutdown: AtomicBool::new(false),
+        addr: "127.0.0.1:0".parse().expect("literal addr"),
+        cfg,
+    })
+}
+
+/// Score one admitted job (already past admission + deadline checks).
+fn score_request(state: &ServerState, req: &ScoreRequest, deadline: &Deadline) -> Response {
+    let id = req.id;
+    let scorer = canon_scorer(&req.scorer).to_string();
+    let Some(engine) = state.engines.get(&scorer) else {
+        let available: Vec<&str> = state.engines.keys().map(|s| s.as_str()).collect();
+        return Response::Error {
+            id,
+            kind: ErrorKind::BadRequest,
+            message: format!("scorer '{}' is not loaded (serving: {available:?})", req.scorer),
+        };
+    };
+    let m = req.queries.m();
+    let k = state.meta.k;
+    let (queries, classes) = match &req.queries {
+        QueryPayload::Synth { m } => match synth_queries(&state.meta, &state.bank, *m) {
+            Ok((q, c)) => (q, Some(c)),
+            Err(e) => {
+                return Response::Error {
+                    id,
+                    kind: ErrorKind::Internal,
+                    message: format!("synthesising queries: {e:#}"),
+                }
+            }
+        },
+        QueryPayload::Raw { m, rows } => match compress_raw_queries(&state.bank, rows, *m) {
+            Ok(q) => (q, None),
+            Err(e) => {
+                return Response::Error {
+                    id,
+                    kind: ErrorKind::BadRequest,
+                    message: format!("raw queries rejected: {e:#}"),
+                }
+            }
+        },
+        QueryPayload::Compressed { m, rows } => {
+            if rows.len() != m * k {
+                return Response::Error {
+                    id,
+                    kind: ErrorKind::BadRequest,
+                    message: format!(
+                        "compressed queries hold {} values but m = {m} × k = {k} requires {}",
+                        rows.len(),
+                        m * k
+                    ),
+                };
+            }
+            (rows.clone(), None)
+        }
+    };
+    let scores = match engine.attributor.attribute(&queries, m) {
+        Ok(s) => s,
+        Err(e) => {
+            state.metrics.internal_errors.fetch_add(1, Ordering::Relaxed);
+            return Response::Error {
+                id,
+                kind: ErrorKind::Internal,
+                message: format!("scoring failed: {e:#}"),
+            };
+        }
+    };
+    let top: Vec<Vec<(usize, f32)>> = (0..m).map(|q| scores.top_k(q, req.top_k)).collect();
+    let self_influence = if req.self_influence {
+        match engine.attributor.self_influence() {
+            Ok(si) => Some(si),
+            Err(e) => {
+                state.metrics.internal_errors.fetch_add(1, Ordering::Relaxed);
+                return Response::Error {
+                    id,
+                    kind: ErrorKind::Internal,
+                    message: format!("self-influence failed: {e:#}"),
+                };
+            }
+        }
+    } else {
+        None
+    };
+    let coverage = match engine.attributor.coverage() {
+        Some(c) => CoverageInfo {
+            rows_total: c.rows_total,
+            rows_scored: c.rows_scored,
+            quarantined: c.quarantined,
+            retries_attempted: c.retries_attempted,
+        },
+        None => CoverageInfo {
+            rows_total: state.meta.n,
+            rows_scored: state.meta.n,
+            quarantined: vec![],
+            retries_attempted: 0,
+        },
+    };
+    state.metrics.scored.fetch_add(1, Ordering::Relaxed);
+    state
+        .metrics
+        .rows_scored
+        .fetch_add(coverage.rows_scored as u64, Ordering::Relaxed);
+    if coverage.is_degraded() {
+        state
+            .metrics
+            .degraded_responses
+            .fetch_add(1, Ordering::Relaxed);
+    }
+    Response::Scores(Box::new(ScoreResponse {
+        id,
+        scorer,
+        m,
+        n: scores.n,
+        top,
+        scores: req.include_scores.then(|| {
+            let mut flat = Vec::with_capacity(m * scores.n);
+            for q in 0..m {
+                flat.extend_from_slice(scores.row(q));
+            }
+            flat
+        }),
+        self_influence,
+        classes,
+        coverage,
+        elapsed_ms: deadline.elapsed().as_secs_f64() * 1e3,
+    }))
+}
+
+/// One worker: drain jobs until the channel closes.
+fn worker_loop(state: Arc<ServerState>, rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(Job {
+            req,
+            deadline,
+            ticket,
+            reply,
+        }) = job
+        else {
+            return; // sender dropped: shutdown drain finished
+        };
+        let resp = if deadline.expired() {
+            state
+                .metrics
+                .deadline_exceeded
+                .fetch_add(1, Ordering::Relaxed);
+            Response::Error {
+                id: req.id,
+                kind: ErrorKind::DeadlineExceeded,
+                message: format!(
+                    "request waited {:.1} ms, past its deadline",
+                    deadline.elapsed().as_secs_f64() * 1e3
+                ),
+            }
+        } else {
+            let r = score_request(&state, &req, &deadline);
+            if matches!(r, Response::Scores(_)) {
+                state.metrics.note_latency(deadline.elapsed());
+            }
+            r
+        };
+        drop(ticket); // free the admission slot before the reply blocks
+        let _ = reply.send(resp);
+    }
+}
+
+/// A running daemon: bound address + join handle.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    accept: JoinHandle<()>,
+}
+
+impl ServerHandle {
+    /// The actually bound address (resolves `:0` auto-assignment).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the daemon shuts down (via a `shutdown` request).
+    pub fn join(self) -> Result<()> {
+        self.accept
+            .join()
+            .map_err(|_| anyhow!("serve accept thread panicked"))
+    }
+}
+
+/// Build hot state, bind, and start serving in background threads.
+/// Returns once the daemon is accepting connections.
+pub fn spawn(cfg: ServeConfig) -> Result<ServerHandle> {
+    let mut state = build_state(cfg)?;
+    let listener = TcpListener::bind(&state.cfg.addr)
+        .with_context(|| format!("binding {}", state.cfg.addr))?;
+    let addr = listener.local_addr()?;
+    state.addr = addr;
+    let state = Arc::new(state);
+
+    let (tx, rx) = mpsc::channel::<Job>();
+    *state.jobs.lock().unwrap() = Some(tx);
+    let rx = Arc::new(Mutex::new(rx));
+    let workers: Vec<JoinHandle<()>> = (0..state.cfg.workers.max(1))
+        .map(|_| {
+            let state = state.clone();
+            let rx = rx.clone();
+            std::thread::spawn(move || worker_loop(state, rx))
+        })
+        .collect();
+
+    let accept_state = state.clone();
+    let accept = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if accept_state.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let conn_state = accept_state.clone();
+            std::thread::spawn(move || crate::serve::session::handle_conn(stream, conn_state));
+        }
+        // Drain: close the job channel, let workers finish queued work.
+        drop(accept_state.jobs.lock().unwrap().take());
+        for w in workers {
+            let _ = w.join();
+        }
+        if !accept_state.cfg.quiet {
+            println!("serve: graceful shutdown — final metrics:");
+            println!("{}", accept_state.stats_json().to_string_pretty());
+        }
+    });
+    Ok(ServerHandle { addr, accept })
+}
+
+/// `grass serve` entry point: spawn, announce, and block until shutdown.
+pub fn run(cfg: ServeConfig) -> Result<()> {
+    let quiet = cfg.quiet;
+    let store = cfg.store.clone();
+    let scorers = cfg.scorers.clone();
+    let handle = spawn(cfg)?;
+    if !quiet {
+        println!(
+            "serve: listening on {} (store {}, scorers {scorers:?}) — send a shutdown \
+             request or `grass query --addr {} --shutdown` to stop",
+            handle.addr(),
+            store.display(),
+            handle.addr()
+        );
+    }
+    handle.join()
+}

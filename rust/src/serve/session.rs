@@ -1,0 +1,120 @@
+//! Per-connection protocol loop: read NDJSON frames, run admission, hand
+//! scoring jobs to the worker pool, write replies. One thread per
+//! connection; all heavy work happens on the bounded worker pool, so a
+//! slow client costs one blocked thread, not a scoring slot.
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+
+use crate::serve::admission::Deadline;
+use crate::serve::proto::{self, ErrorKind, Request, Response};
+use crate::serve::server::{Job, ServerState};
+
+pub(crate) fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
+    let peer_read = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(peer_read);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        if state.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let frame = match proto::read_frame(&mut reader) {
+            Ok(Some(v)) => v,
+            Ok(None) => return, // clean EOF
+            Err(e) => {
+                state.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let resp = Response::Error {
+                    id: 0,
+                    kind: ErrorKind::BadRequest,
+                    message: format!("unparseable frame: {e:#}"),
+                };
+                let _ = proto::write_frame(&mut writer, &resp.to_line());
+                return; // desynced stream: drop the connection
+            }
+        };
+        let req = match Request::from_json(&frame) {
+            Ok(r) => r,
+            Err(e) => {
+                state.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let id = frame.get("id").and_then(|x| x.as_u64()).unwrap_or(0);
+                let resp = Response::Error {
+                    id,
+                    kind: ErrorKind::BadRequest,
+                    message: format!("{e:#}"),
+                };
+                if proto::write_frame(&mut writer, &resp.to_line()).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+        state.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let resp = match req {
+            Request::Ping { id } => Response::Pong { id },
+            Request::Stats { id } => Response::Stats {
+                id,
+                stats: state.stats_json(),
+            },
+            Request::Shutdown { id } => {
+                let _ = proto::write_frame(&mut writer, &Response::ShuttingDown { id }.to_line());
+                state.begin_shutdown();
+                return;
+            }
+            Request::Score(score) => {
+                let deadline = Deadline::new(score.deadline_ms, state.cfg.deadline_ms);
+                match state.admission.try_admit() {
+                    None => {
+                        state.metrics.overloaded.fetch_add(1, Ordering::Relaxed);
+                        Response::Error {
+                            id: score.id,
+                            kind: ErrorKind::Overloaded,
+                            message: format!(
+                                "queue full ({} in flight, bound {})",
+                                state.admission.depth(),
+                                state.admission.max_in_flight()
+                            ),
+                        }
+                    }
+                    Some(ticket) => {
+                        let (reply_tx, reply_rx) = mpsc::channel();
+                        let id = score.id;
+                        let job = Job {
+                            req: score,
+                            deadline,
+                            ticket,
+                            reply: reply_tx,
+                        };
+                        let enqueued = match state.jobs.lock().unwrap().as_ref() {
+                            Some(tx) => tx.send(job).is_ok(),
+                            None => false,
+                        };
+                        if enqueued {
+                            match reply_rx.recv() {
+                                Ok(resp) => resp,
+                                Err(_) => Response::Error {
+                                    id,
+                                    kind: ErrorKind::Internal,
+                                    message: "worker dropped the request".to_string(),
+                                },
+                            }
+                        } else {
+                            Response::Error {
+                                id,
+                                kind: ErrorKind::Internal,
+                                message: "daemon is shutting down".to_string(),
+                            }
+                        }
+                    }
+                }
+            }
+        };
+        if proto::write_frame(&mut writer, &resp.to_line()).is_err() {
+            return;
+        }
+    }
+}

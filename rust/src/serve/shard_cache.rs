@@ -1,0 +1,317 @@
+//! Warm shard cache with sequential prefetch.
+//!
+//! The streaming scorers re-read every shard once per pass (FIM,
+//! self-influence, scores) and the serving daemon re-reads the whole store
+//! per request. [`ShardCache`] keeps decoded shard bytes (`Vec<f32>`)
+//! resident under an LRU byte budget so repeat passes hit memory, and an
+//! optional background prefetcher overlaps the *next* shard's disk read
+//! with scoring of the current one.
+//!
+//! Failure semantics: a shard that fails to load is **never** cached — the
+//! typed [`StoreError`] propagates to the caller exactly as the uncached
+//! path would, so [`crate::store::ReadGuard`] retry/quarantine behaviour is
+//! unchanged with the cache attached.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::store::{StoreError, StoreReader};
+
+/// Point-in-time counters for a [`ShardCache`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub prefetch_loads: u64,
+    pub evictions: u64,
+    pub resident_shards: usize,
+    pub resident_bytes: usize,
+    pub budget_bytes: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from memory (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Inner {
+    /// shard index → decoded rows×k values.
+    map: HashMap<usize, Arc<Vec<f32>>>,
+    /// LRU order, most recently used last.
+    lru: Vec<usize>,
+    bytes: usize,
+}
+
+/// LRU cache of decoded shard bytes with an optional sequential prefetcher.
+///
+/// Attach to a [`StoreReader`] with [`StoreReader::attach_cache`]; every
+/// clone of that reader shares the cache, so concurrent streaming workers
+/// and the serving daemon's scorers all warm the same pool.
+pub struct ShardCache {
+    budget: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    prefetch_loads: AtomicU64,
+    evictions: AtomicU64,
+    /// Hint channel into the prefetch thread; `None` until
+    /// [`ShardCache::spawn_prefetcher`] runs. `Sender` is `!Sync`, hence
+    /// the mutex.
+    prefetch: Mutex<Option<Sender<usize>>>,
+}
+
+impl ShardCache {
+    /// A cache that retains at most `budget_bytes` of decoded shard data.
+    pub fn new(budget_bytes: usize) -> Self {
+        Self {
+            budget: budget_bytes,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                lru: Vec::new(),
+                bytes: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            prefetch_loads: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            prefetch: Mutex::new(None),
+        }
+    }
+
+    /// Return shard `shard`'s data, loading it through `reader`'s
+    /// fault-checked uncached path on a miss. Load failures are returned
+    /// (not cached), so corruption surfaces on every attempt until the
+    /// caller quarantines the shard.
+    pub fn get_or_load(
+        &self,
+        reader: &StoreReader,
+        shard: usize,
+    ) -> std::result::Result<Arc<Vec<f32>>, StoreError> {
+        if let Some(data) = self.lookup(shard) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(data);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Load outside the lock: concurrent misses on the same shard may
+        // duplicate the read, but never block each other on disk I/O.
+        let (_, data) = reader.read_shard_uncached(shard)?;
+        let data = Arc::new(data);
+        self.insert(shard, data.clone());
+        Ok(data)
+    }
+
+    /// Whether shard `shard` is currently resident.
+    pub fn contains(&self, shard: usize) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.map.contains_key(&shard)
+    }
+
+    /// Hint that shard `shard + 1` is likely next; the prefetch thread (if
+    /// spawned) loads it in the background while the caller scores the
+    /// current block.
+    pub fn hint_next(&self, shard: usize, num_shards: usize) {
+        let next = shard + 1;
+        if next >= num_shards || self.contains(next) {
+            return;
+        }
+        if let Some(tx) = self.prefetch.lock().unwrap().as_ref() {
+            let _ = tx.send(next);
+        }
+    }
+
+    /// Start a background prefetch thread reading hinted shards from the
+    /// store at `dir` through its own uncached reader. The thread exits
+    /// when the cache is dropped (the hint channel closes). Prefetch
+    /// failures are silently skipped — the scoring read path will hit (and
+    /// handle) the same error itself.
+    pub fn spawn_prefetcher(self: &Arc<Self>, dir: PathBuf) {
+        let (tx, rx) = mpsc::channel::<usize>();
+        *self.prefetch.lock().unwrap() = Some(tx);
+        // Weak: the thread must not keep the cache (and thus the channel)
+        // alive, or it would never observe the close.
+        let cache = Arc::downgrade(self);
+        std::thread::spawn(move || {
+            let reader = match StoreReader::open(&dir) {
+                Ok(r) => r,
+                Err(_) => return,
+            };
+            while let Ok(shard) = rx.recv() {
+                let Some(cache) = cache.upgrade() else { return };
+                if cache.contains(shard) {
+                    continue;
+                }
+                if let Ok((_, data)) = reader.read_shard_uncached(shard) {
+                    cache.prefetch_loads.fetch_add(1, Ordering::Relaxed);
+                    cache.insert(shard, Arc::new(data));
+                }
+            }
+        });
+    }
+
+    /// Drop every resident shard (counters are kept).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.clear();
+        inner.lru.clear();
+        inner.bytes = 0;
+    }
+
+    /// Current counters and residency.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            prefetch_loads: self.prefetch_loads.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_shards: inner.map.len(),
+            resident_bytes: inner.bytes,
+            budget_bytes: self.budget,
+        }
+    }
+
+    fn lookup(&self, shard: usize) -> Option<Arc<Vec<f32>>> {
+        let mut inner = self.inner.lock().unwrap();
+        let data = inner.map.get(&shard)?.clone();
+        if let Some(pos) = inner.lru.iter().position(|&s| s == shard) {
+            inner.lru.remove(pos);
+        }
+        inner.lru.push(shard);
+        Some(data)
+    }
+
+    fn insert(&self, shard: usize, data: Arc<Vec<f32>>) {
+        let bytes = data.len() * 4;
+        if bytes > self.budget {
+            return; // larger than the whole budget: serve it, don't cache it
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.contains_key(&shard) {
+            return; // a concurrent miss or the prefetcher beat us to it
+        }
+        while inner.bytes + bytes > self.budget {
+            if inner.lru.is_empty() {
+                break;
+            }
+            let victim = inner.lru.remove(0);
+            if let Some(old) = inner.map.remove(&victim) {
+                inner.bytes -= old.len() * 4;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        inner.bytes += bytes;
+        inner.map.insert(shard, data);
+        inner.lru.push(shard);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::StoreWriter;
+    use std::path::PathBuf;
+
+    fn tmp_store(tag: &str, n: usize, k: usize, shard_rows: usize) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("grass_shard_cache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = StoreWriter::create(&dir, k, "edge", 0, shard_rows).unwrap();
+        for i in 0..n {
+            let row: Vec<f32> = (0..k).map(|j| (i * k + j) as f32).collect();
+            w.push(&row).unwrap();
+        }
+        w.finish().unwrap();
+        dir
+    }
+
+    #[test]
+    fn cache_hits_after_first_pass_and_matches_disk() {
+        let dir = tmp_store("hits", 12, 4, 4);
+        let mut reader = StoreReader::open(&dir).unwrap();
+        let plain = reader.read_all().unwrap();
+        let cache = Arc::new(ShardCache::new(1 << 20));
+        reader.attach_cache(cache.clone());
+        let warm1 = reader.read_all().unwrap();
+        let warm2 = reader.read_all().unwrap();
+        assert_eq!(plain, warm1);
+        assert_eq!(plain, warm2);
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 3, "one miss per shard on the first pass");
+        assert_eq!(stats.hits, 3, "second pass fully warm");
+        assert_eq!(stats.resident_shards, 3);
+        assert!(stats.hit_rate() > 0.49);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lru_evicts_to_budget() {
+        let dir = tmp_store("lru", 12, 4, 4);
+        let mut reader = StoreReader::open(&dir).unwrap();
+        // Budget fits exactly two 4×4 shards (4 rows × 4 cols × 4 bytes = 64).
+        let cache = Arc::new(ShardCache::new(128));
+        reader.attach_cache(cache.clone());
+        reader.read_all().unwrap();
+        let stats = cache.stats();
+        assert_eq!(stats.resident_shards, 2);
+        assert!(stats.evictions >= 1);
+        assert!(stats.resident_bytes <= 128);
+        // Shard 0 was evicted; the most recent two remain.
+        assert!(!cache.contains(0));
+        assert!(cache.contains(1) && cache.contains(2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_shard_is_not_cached_and_errors_every_time() {
+        let dir = tmp_store("corrupt", 12, 4, 4);
+        let shard1 = dir.join("shard_0001.bin");
+        let len = std::fs::metadata(&shard1).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&shard1).unwrap();
+        f.set_len(len - 8).unwrap();
+        let mut reader = StoreReader::open(&dir).unwrap();
+        let cache = Arc::new(ShardCache::new(1 << 20));
+        reader.attach_cache(cache.clone());
+        let mut buf = vec![0.0f32; 16];
+        assert!(reader.read_rows(0, 4, &mut buf).is_ok());
+        for _ in 0..2 {
+            let err = reader.read_rows(4, 4, &mut buf).unwrap_err();
+            assert!(err.to_string().contains("truncated or corrupted"), "{err}");
+        }
+        assert!(!cache.contains(1), "failed loads must not be cached");
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 3, "each failed attempt is a fresh miss");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prefetcher_warms_the_next_shard() {
+        let dir = tmp_store("prefetch", 16, 4, 4);
+        let mut reader = StoreReader::open(&dir).unwrap();
+        let cache = Arc::new(ShardCache::new(1 << 20));
+        cache.spawn_prefetcher(dir.clone());
+        reader.attach_cache(cache.clone());
+        let mut buf = vec![0.0f32; 16];
+        reader.read_rows(0, 4, &mut buf).unwrap();
+        // The read of shard 0 hints shard 1; wait for the background load.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while !cache.contains(1) && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(cache.contains(1), "prefetcher never loaded the hinted shard");
+        reader.read_rows(4, 4, &mut buf).unwrap();
+        assert_eq!(buf[0], 16.0);
+        let stats = cache.stats();
+        assert!(stats.prefetch_loads >= 1);
+        assert!(stats.hits >= 1, "the prefetched shard should hit");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -803,8 +803,25 @@ pub struct StoreReader {
     dir: PathBuf,
     pub meta: StoreMeta,
     manifest: Option<Manifest>,
+    /// Optional warm shard cache (see [`crate::serve::ShardCache`]): when
+    /// attached, `read_rows` serves blocks from resident shard bytes and
+    /// falls back to disk on a miss. Clones share the same cache.
+    cache: Option<std::sync::Arc<crate::serve::ShardCache>>,
     #[cfg(any(test, feature = "fault-injection"))]
     faults: Option<std::sync::Arc<FaultPlan>>,
+}
+
+impl Clone for StoreReader {
+    fn clone(&self) -> Self {
+        Self {
+            dir: self.dir.clone(),
+            meta: self.meta.clone(),
+            manifest: self.manifest.clone(),
+            cache: self.cache.clone(),
+            #[cfg(any(test, feature = "fault-injection"))]
+            faults: self.faults.clone(),
+        }
+    }
 }
 
 impl StoreReader {
@@ -865,6 +882,7 @@ impl StoreReader {
             dir,
             meta,
             manifest,
+            cache: None,
             #[cfg(any(test, feature = "fault-injection"))]
             faults: None,
         })
@@ -1091,6 +1109,32 @@ impl StoreReader {
                 format!("row block {start}+{rows} crosses the shard {shard} boundary"),
             ));
         }
+        if let Some(cache) = &self.cache {
+            // Warm path: the whole shard is (or becomes) resident; load
+            // failures fall through as typed errors so retry/quarantine
+            // still see them — the cache never holds a failed load.
+            let data = cache.get_or_load(self, shard)?;
+            let off = row_in_shard * k;
+            buf[..rows * k].copy_from_slice(&data[off..off + rows * k]);
+            cache.hint_next(shard, self.num_shards());
+            return Ok(());
+        }
+        self.read_rows_from_disk(shard, row_in_shard, rows, buf)
+    }
+
+    /// The uncached block read: fault hook, full-shard size check, then a
+    /// seek + staged read. [`crate::serve::ShardCache`] misses land here
+    /// (via [`StoreReader::read_shard_uncached`]) so injected faults and
+    /// truncation detection behave identically with the cache attached.
+    fn read_rows_from_disk(
+        &self,
+        shard: usize,
+        row_in_shard: usize,
+        rows: usize,
+        buf: &mut [f32],
+    ) -> std::result::Result<(), StoreError> {
+        let k = self.meta.k;
+        let shard_rows = self.meta.shard_rows.max(1);
         #[cfg(any(test, feature = "fault-injection"))]
         if let Some(plan) = &self.faults {
             plan.check_read(shard)?;
@@ -1167,6 +1211,42 @@ impl StoreReader {
         let mut data = vec![0.0f32; rows * self.meta.k];
         self.read_rows(start, rows, &mut data)?;
         Ok((start, data))
+    }
+
+    /// Read shard `idx` fully, bypassing any attached [`crate::serve::ShardCache`].
+    /// This is the cache's own load path — it must hit the disk (and the
+    /// fault hook) rather than recurse into itself.
+    pub(crate) fn read_shard_uncached(
+        &self,
+        idx: usize,
+    ) -> std::result::Result<(usize, Vec<f32>), StoreError> {
+        let shard_rows = self.meta.shard_rows.max(1);
+        let start = idx * shard_rows;
+        if start >= self.meta.n {
+            return Err(StoreError::missing(
+                Some(idx),
+                format!(
+                    "shard {idx} out of range (store has {} shards)",
+                    self.num_shards()
+                ),
+            ));
+        }
+        let rows = (self.meta.n - start).min(shard_rows);
+        let mut data = vec![0.0f32; rows * self.meta.k];
+        self.read_rows_from_disk(idx, 0, rows, &mut data)?;
+        Ok((start, data))
+    }
+
+    /// Attach a warm shard cache: subsequent reads (including through
+    /// clones made *after* this call) are served from resident shard bytes,
+    /// with misses loaded through the normal fault-checked disk path.
+    pub fn attach_cache(&mut self, cache: std::sync::Arc<crate::serve::ShardCache>) {
+        self.cache = Some(cache);
+    }
+
+    /// The attached shard cache, if any.
+    pub fn shard_cache(&self) -> Option<&std::sync::Arc<crate::serve::ShardCache>> {
+        self.cache.as_ref()
     }
 
     /// Load the entire store as an `n × k` matrix (small experiments only).

@@ -120,6 +120,16 @@ pub struct BenchRecord {
     /// Shard-read retries the streaming passes attempted, when the record
     /// covers a fault-injected run.
     pub retries_attempted: Option<u64>,
+    /// Served queries per second, when the record covers a `grass serve`
+    /// daemon stage.
+    pub qps: Option<f64>,
+    /// Request latency percentiles (milliseconds) of the serving stage.
+    pub p50_ms: Option<f64>,
+    pub p95_ms: Option<f64>,
+    pub p99_ms: Option<f64>,
+    /// Shard-cache hit rate in `[0, 1]` of the serving stage, when a warm
+    /// [`crate::serve::ShardCache`] was attached.
+    pub cache_hit_rate: Option<f64>,
     /// Free-form extra metrics (e.g. `speedup_vs_per_sample`, `tokens_per_sec`).
     pub extra: Vec<(String, f64)>,
 }
@@ -142,6 +152,11 @@ impl BenchRecord {
             precond_apply_ms: None,
             resume_skipped_rows: None,
             retries_attempted: None,
+            qps: None,
+            p50_ms: None,
+            p95_ms: None,
+            p99_ms: None,
+            cache_hit_rate: None,
             extra: vec![],
         }
     }
@@ -177,6 +192,23 @@ impl BenchRecord {
         self
     }
 
+    /// Record serving-stage throughput and latency percentiles (builder
+    /// style) so the daemon's QPS/p50/p95/p99 trajectory lands in
+    /// `BENCH_*.json` artifacts.
+    pub fn with_serving(mut self, qps: f64, p50_ms: f64, p95_ms: f64, p99_ms: f64) -> Self {
+        self.qps = Some(qps);
+        self.p50_ms = Some(p50_ms);
+        self.p95_ms = Some(p95_ms);
+        self.p99_ms = Some(p99_ms);
+        self
+    }
+
+    /// Record the serving stage's shard-cache hit rate (builder style).
+    pub fn with_cache_hit_rate(mut self, rate: f64) -> Self {
+        self.cache_hit_rate = Some(rate);
+        self
+    }
+
     fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("method", Json::Str(self.method.clone())),
@@ -203,6 +235,21 @@ impl BenchRecord {
         }
         if let Some(v) = self.retries_attempted {
             pairs.push(("retries_attempted", Json::Num(v as f64)));
+        }
+        if let Some(v) = self.qps {
+            pairs.push(("qps", Json::Num(v)));
+        }
+        if let Some(v) = self.p50_ms {
+            pairs.push(("p50_ms", Json::Num(v)));
+        }
+        if let Some(v) = self.p95_ms {
+            pairs.push(("p95_ms", Json::Num(v)));
+        }
+        if let Some(v) = self.p99_ms {
+            pairs.push(("p99_ms", Json::Num(v)));
+        }
+        if let Some(v) = self.cache_hit_rate {
+            pairs.push(("cache_hit_rate", Json::Num(v)));
         }
         for (key, value) in &self.extra {
             pairs.push((key.as_str(), Json::Num(*value)));
@@ -307,6 +354,18 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.req("resume_skipped_rows").unwrap().as_usize(), Some(96));
         assert_eq!(j.req("retries_attempted").unwrap().as_usize(), Some(2));
+        // Serving metrics are omitted until recorded, then serialized.
+        assert!(j.get("qps").is_none());
+        assert!(j.get("cache_hit_rate").is_none());
+        let r = BenchRecord::from_duration("serve", 10, 64, 64, Duration::from_millis(10))
+            .with_serving(250.0, 3.5, 9.0, 14.0)
+            .with_cache_hit_rate(0.97);
+        let j = r.to_json();
+        assert_eq!(j.req("qps").unwrap().as_f64(), Some(250.0));
+        assert_eq!(j.req("p50_ms").unwrap().as_f64(), Some(3.5));
+        assert_eq!(j.req("p95_ms").unwrap().as_f64(), Some(9.0));
+        assert_eq!(j.req("p99_ms").unwrap().as_f64(), Some(14.0));
+        assert_eq!(j.req("cache_hit_rate").unwrap().as_f64(), Some(0.97));
     }
 
     #[test]

@@ -100,9 +100,21 @@ impl Json {
         Json::Arr(xs.iter().map(|s| Json::Str(s.to_string())).collect())
     }
 
+    pub fn arr_f32(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, true);
+        out
+    }
+
+    /// Single-line serialization with no whitespace, suitable for
+    /// newline-delimited protocols where one value must occupy one line.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
         out
     }
 
@@ -371,6 +383,18 @@ mod tests {
         let s = v.to_string_pretty();
         assert!(s.contains("123456789"));
         assert!(!s.contains("123456789.0"));
+    }
+
+    #[test]
+    fn compact_is_single_line_and_roundtrips() {
+        let src = r#"{"a": [1, 2.5], "b": {"c": "x\ny"}, "d": null}"#;
+        let v = Json::parse(src).unwrap();
+        let s = v.to_string_compact();
+        assert!(!s.contains('\n'), "compact output must be one line: {s:?}");
+        assert!(!s.contains(": "), "compact output has no pretty spacing");
+        assert_eq!(Json::parse(&s).unwrap(), v);
+        let f = Json::arr_f32(&[1.5, -0.25]);
+        assert_eq!(f.to_string_compact(), "[1.5,-0.25]");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! attribute` CLI smoke on the same path.
 
 use grass::attrib::{from_spec, AttributionSpec, Attributor, InfluenceEngine, StreamOpts};
+use grass::data::queries::synth_queries;
 use grass::data::synthgrad::{SYNTH_CLASSES, SYNTH_SEQ, SynthGrads, SynthHooks};
 use grass::models::shapes::ModelShapes;
 use grass::sketch::rng::Pcg;
@@ -62,13 +63,11 @@ fn spec_store_attributor_end_to_end_with_class_signal() {
     let meta = attributor.cache_store(&reader).unwrap();
     assert_eq!(meta.n, n);
 
-    // Compress fresh synthetic queries with the reconstructed bank.
-    let src = SynthGrads::new(p, seed);
+    // Compress fresh synthetic queries with the reconstructed bank via the
+    // shared helper — the same path `grass attribute`, `grass query`, and
+    // the serving daemon use, so parity tests compare identical sketches.
     let m = 8;
-    let (raw, classes) = src.queries(m);
-    let c = bank.as_flat().unwrap();
-    let mut q = vec![0.0f32; m * c.output_dim()];
-    c.compress_batch(&raw, m, &mut q);
+    let (q, classes) = synth_queries(&reader.meta, &bank, m).unwrap();
     let scores = attributor.attribute(&q, m).unwrap();
     assert_eq!((scores.m, scores.n), (m, n));
 
@@ -141,27 +140,11 @@ fn factorized_store_blockwise_scorer_end_to_end() {
     let mut attributor: Box<dyn Attributor> = from_spec(&aspec).unwrap();
     attributor.cache_store(&reader).unwrap();
 
+    // Factored query sketches through the same shared helper the CLI and
+    // daemon use (SynthHooks regenerated from store-recorded layer dims).
     let m = 4;
-    let cs2 = bank2.as_factored().unwrap();
-    let mut q = vec![0.0f32; m * k];
-    for qi in 0..m {
-        let (sample, _) = hooks.query(qi);
-        let mut off = 0;
-        for (li, c) in cs2.iter().enumerate() {
-            let (x, dy) = &sample[li];
-            c.compress_batch_with(
-                1,
-                SYNTH_SEQ,
-                x,
-                dy,
-                &mut q[qi * k..(qi + 1) * k],
-                k,
-                off,
-                &mut scratch,
-            );
-            off += c.output_dim();
-        }
-    }
+    let (q, _classes) = synth_queries(&reader.meta, &bank2, m).unwrap();
+    assert_eq!(q.len(), m * k);
     let scores = attributor.attribute(&q, m).unwrap();
     assert_eq!((scores.m, scores.n), (m, n));
     assert!(scores.scores.iter().any(|&v| v != 0.0));

@@ -1,0 +1,408 @@
+//! Integration: the serving daemon end to end over real TCP — served
+//! scores match the batch `Attributor` path bit-for-bit (modulo JSON f64
+//! round-trip, which is exact), concurrent clients each get correct
+//! replies, admission control and deadlines shed with typed errors while
+//! the daemon keeps serving, a corrupt shard degrades one response's
+//! coverage instead of killing the process, and the `stats` request proves
+//! hot-state reuse (`store.opens == 1`, constant `fim_rows`).
+
+use grass::attrib::{from_spec, AttributionSpec, Attributor, PrecondArtifact, PrecondSpec, StreamOpts};
+use grass::data::queries::synth_queries;
+use grass::data::synthgrad::SynthGrads;
+use grass::models::shapes::ModelShapes;
+use grass::serve::proto::{self, ScoreRequest};
+use grass::serve::{spawn, ErrorKind, QueryPayload, Request, Response, ServeConfig};
+use grass::sketch::{MethodSpec, Scratch};
+use grass::store::{StoreMeta, StoreReader, StoreWriter};
+use grass::util::json::Json;
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("grass_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Cache a flat synthetic store the daemon can serve (model `"synth"`,
+/// geometry recorded, compressed through the spec's bank).
+fn write_synth_store(tag: &str, n: usize, p: usize, seed: u64, shard_rows: usize) -> PathBuf {
+    let dir = tmpdir(tag);
+    let spec = MethodSpec::Sjlt { k: 32, s: 1 };
+    let shapes = ModelShapes::flat(p);
+    let bank = spec.build_bank(&shapes, seed).unwrap();
+    let c = bank.as_flat().unwrap();
+    let meta = StoreMeta::describe(&spec, seed, "synth", &shapes, shard_rows).unwrap();
+    let mut w = StoreWriter::create_described(&dir, meta).unwrap();
+    let rows = SynthGrads::new(p, seed).rows(0, n);
+    let mut out = vec![0.0f32; n * c.output_dim()];
+    let mut scratch = Scratch::new();
+    c.compress_batch_with(&rows, n, &mut out, &mut scratch);
+    w.push_batch(&out).unwrap();
+    w.finish().unwrap();
+    dir
+}
+
+fn quiet_cfg(dir: &PathBuf, scorers: &[&str]) -> ServeConfig {
+    ServeConfig {
+        store: dir.clone(),
+        scorers: scorers.iter().map(|s| s.to_string()).collect(),
+        quiet: true,
+        ..ServeConfig::default()
+    }
+}
+
+/// One NDJSON client connection: send a request frame, read one reply.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect to daemon");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Self {
+            reader,
+            writer: BufWriter::new(stream),
+        }
+    }
+
+    fn ask(&mut self, req: &Request) -> Response {
+        proto::write_frame(&mut self.writer, &req.to_line()).expect("write frame");
+        let frame = proto::read_frame(&mut self.reader)
+            .expect("read frame")
+            .expect("daemon closed the connection without replying");
+        Response::from_json(&frame).expect("parse response")
+    }
+}
+
+fn score_req(id: u64, scorer: &str, m: usize) -> Request {
+    Request::Score(ScoreRequest {
+        id,
+        scorer: scorer.to_string(),
+        top_k: 3,
+        include_scores: true,
+        self_influence: true,
+        deadline_ms: None,
+        queries: QueryPayload::Synth { m },
+    })
+}
+
+fn stat(stats: &Json, path: &[&str]) -> f64 {
+    let mut v = stats;
+    for key in path {
+        v = v.get(key).unwrap_or_else(|| panic!("stats missing {path:?}"));
+    }
+    v.as_f64().unwrap_or_else(|| panic!("stats {path:?} is not a number"))
+}
+
+/// The parity gate: for `if` (with a persisted solver artifact) and
+/// `graddot`, the daemon's served scores, self-influence, and top-k match
+/// a batch engine built the same way, to ≤ 1e-6 — and the `stats` request
+/// proves repeat queries reuse the hot state.
+#[test]
+fn served_scores_match_batch_attribution_and_reuse_hot_state() {
+    let (n, p, seed, m) = (48usize, 256usize, 9u64, 4usize);
+    let dir = write_synth_store("parity", n, p, seed, 16);
+
+    // Fit + persist the solver artifact the daemon consumes at startup.
+    {
+        let reader = StoreReader::open(&dir).unwrap();
+        let pspec = PrecondSpec::default_for_scorer("if", 1e-3);
+        assert!(pspec.needs_fim());
+        let layout = pspec.layout_for(reader.meta.k, &[]);
+        let artifact = PrecondArtifact::fit(&reader, &StreamOpts::default(), &layout).unwrap();
+        artifact.save(&dir).unwrap();
+    }
+
+    let reader = StoreReader::open(&dir).unwrap();
+    let spec = reader.meta.spec().unwrap();
+    let bank = spec.build_bank(&reader.meta.shapes(), seed).unwrap();
+    let artifact = PrecondArtifact::load_if_present(&dir).unwrap().map(Arc::new);
+    assert!(artifact.is_some(), "fitted artifact must load back");
+    let (q, classes) = synth_queries(&reader.meta, &bank, m).unwrap();
+
+    let handle = spawn(quiet_cfg(&dir, &["if", "graddot"])).unwrap();
+    let mut client = Client::connect(handle.addr());
+
+    for (ri, scorer) in ["if", "graddot"].iter().enumerate() {
+        // Batch reference: the same construction the daemon performs —
+        // same spec, damping, preconditioner default, artifact, workers.
+        let pspec = PrecondSpec::default_for_scorer(scorer, 1e-3);
+        let mut opts = StreamOpts {
+            workers: 2,
+            ..StreamOpts::default()
+        };
+        if pspec.needs_fim() {
+            opts.artifact = artifact.clone();
+        }
+        let mut aspec = AttributionSpec::new(scorer, spec.clone(), seed);
+        aspec.layout = bank.layer_dims();
+        aspec.precond = Some(pspec);
+        let mut engine = from_spec(&aspec).unwrap();
+        engine.cache_stream(&reader, &opts).unwrap();
+        let want = engine.attribute(&q, m).unwrap();
+        let want_si = engine.self_influence().unwrap();
+
+        let resp = client.ask(&score_req(10 + ri as u64, scorer, m));
+        let Response::Scores(r) = resp else {
+            panic!("{scorer}: expected scores, got {resp:?}");
+        };
+        assert_eq!((r.m, r.n), (m, n), "{scorer} shape");
+        assert_eq!(r.scorer, *scorer);
+        assert_eq!(r.classes.as_ref(), Some(&classes), "{scorer} classes");
+        assert!(!r.coverage.is_degraded(), "{scorer}: {:?}", r.coverage);
+        assert_eq!(r.coverage.rows_scored, n);
+
+        let got = r.scores.as_ref().expect("include_scores was set");
+        assert_eq!(got.len(), m * n);
+        for i in 0..m * n {
+            let (a, b) = (got[i], want.scores[i]);
+            assert!(
+                (a - b).abs() <= 1e-6 * (1.0 + b.abs()),
+                "{scorer} score {i}: served {a} vs batch {b}"
+            );
+        }
+        let got_si = r.self_influence.as_ref().expect("self_influence was set");
+        assert_eq!(got_si.len(), n);
+        for i in 0..n {
+            assert!(
+                (got_si[i] - want_si[i]).abs() <= 1e-6 * (1.0 + want_si[i].abs()),
+                "{scorer} self-influence {i}: served {} vs batch {}",
+                got_si[i],
+                want_si[i]
+            );
+        }
+        assert_eq!(r.top.len(), m);
+        for (qi, top) in r.top.iter().enumerate() {
+            let want_top = want.top_k(qi, 3);
+            assert_eq!(top.len(), want_top.len(), "{scorer} query {qi} top len");
+            for ((gi, gs), (wi, ws)) in top.iter().zip(&want_top) {
+                assert_eq!(gi, wi, "{scorer} query {qi} top index");
+                assert!((gs - ws).abs() <= 1e-6 * (1.0 + ws.abs()));
+            }
+        }
+    }
+
+    // Hot-state evidence: one store open, artifact consumed — the `if`
+    // engine streamed 0 FIM rows because the persisted artifact made the
+    // refit unnecessary.
+    let Response::Stats { stats, .. } = client.ask(&Request::Stats { id: 20 }) else {
+        panic!("expected stats reply");
+    };
+    assert_eq!(stat(&stats, &["store", "opens"]), 1.0);
+    assert_eq!(stats.get("artifact_loaded").and_then(|x| x.as_bool()), Some(true));
+    let fim_rows = stat(&stats, &["engines", "if", "fim_rows"]);
+    assert_eq!(fim_rows, 0.0, "artifact reuse must skip the FIM ingest pass");
+    let scored = stat(&stats, &["requests", "scored"]);
+    assert_eq!(scored, 2.0);
+
+    // Repeat queries never re-open the store or refit the FIM.
+    let resp = client.ask(&score_req(21, "if", m));
+    assert!(matches!(resp, Response::Scores(_)), "{resp:?}");
+    let Response::Stats { stats, .. } = client.ask(&Request::Stats { id: 22 }) else {
+        panic!("expected stats reply");
+    };
+    assert_eq!(stat(&stats, &["store", "opens"]), 1.0);
+    assert_eq!(stat(&stats, &["engines", "if", "fim_rows"]), fim_rows);
+    assert_eq!(stat(&stats, &["requests", "scored"]), scored + 1.0);
+
+    let resp = client.ask(&Request::Shutdown { id: 30 });
+    assert!(matches!(resp, Response::ShuttingDown { id: 30 }));
+    handle.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// N concurrent clients, each sending several requests over its own
+/// connection, all receive the exact batch-path scores.
+#[test]
+fn concurrent_clients_each_get_correct_scores() {
+    let (n, p, seed, m) = (32usize, 128usize, 3u64, 3usize);
+    let dir = write_synth_store("concurrent", n, p, seed, 8);
+
+    // Expected scores from the batch path (graddot: no FIM involved).
+    let reader = StoreReader::open(&dir).unwrap();
+    let spec = reader.meta.spec().unwrap();
+    let bank = spec.build_bank(&reader.meta.shapes(), seed).unwrap();
+    let mut aspec = AttributionSpec::new("graddot", spec.clone(), seed);
+    aspec.layout = bank.layer_dims();
+    aspec.precond = Some(PrecondSpec::default_for_scorer("graddot", 1e-3));
+    let mut engine = from_spec(&aspec).unwrap();
+    engine
+        .cache_stream(
+            &reader,
+            &StreamOpts {
+                workers: 2,
+                ..StreamOpts::default()
+            },
+        )
+        .unwrap();
+    let (q, _classes) = synth_queries(&reader.meta, &bank, m).unwrap();
+    let want = engine.attribute(&q, m).unwrap();
+    let want = &want;
+
+    let handle = spawn(quiet_cfg(&dir, &["graddot"])).unwrap();
+    let addr = handle.addr();
+
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            s.spawn(move || {
+                let mut client = Client::connect(addr);
+                for r in 0..3u64 {
+                    let resp = client.ask(&score_req(t * 10 + r, "graddot", m));
+                    let Response::Scores(resp) = resp else {
+                        panic!("client {t} request {r}: unexpected reply {resp:?}");
+                    };
+                    assert_eq!((resp.m, resp.n), (m, n), "client {t}");
+                    let got = resp.scores.as_ref().expect("include_scores");
+                    for i in 0..m * n {
+                        let (a, b) = (got[i], want.scores[i]);
+                        assert!(
+                            (a - b).abs() <= 1e-6 * (1.0 + b.abs()),
+                            "client {t} score {i}: served {a} vs batch {b}"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    let mut client = Client::connect(addr);
+    let Response::Stats { stats, .. } = client.ask(&Request::Stats { id: 99 }) else {
+        panic!("expected stats reply");
+    };
+    assert_eq!(stat(&stats, &["requests", "scored"]), 12.0);
+    assert_eq!(stat(&stats, &["store", "opens"]), 1.0);
+    assert!(stat(&stats, &["latency", "count"]) >= 12.0);
+    client.ask(&Request::Shutdown { id: 100 });
+    handle.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Overload and deadline sheds are typed replies on a live connection —
+/// the daemon never drops the socket, and keeps scoring afterwards.
+#[test]
+fn admission_and_deadlines_shed_typed_replies_while_serving() {
+    let (n, p, seed) = (24usize, 64usize, 5u64);
+    let dir = write_synth_store("shed", n, p, seed, 8);
+
+    // Queue bound 0: every score request sheds, liveness stays up.
+    let handle = spawn(ServeConfig {
+        max_in_flight: 0,
+        ..quiet_cfg(&dir, &["graddot"])
+    })
+    .unwrap();
+    let mut client = Client::connect(handle.addr());
+    let resp = client.ask(&score_req(1, "graddot", 2));
+    let Response::Error { kind, message, .. } = resp else {
+        panic!("expected overload shed, got {resp:?}");
+    };
+    assert_eq!(kind, ErrorKind::Overloaded);
+    assert!(kind.is_shed());
+    assert!(message.contains("queue full"), "{message}");
+    assert!(matches!(client.ask(&Request::Ping { id: 2 }), Response::Pong { id: 2 }));
+    let Response::Stats { stats, .. } = client.ask(&Request::Stats { id: 3 }) else {
+        panic!("expected stats reply");
+    };
+    assert_eq!(stat(&stats, &["requests", "overloaded"]), 1.0);
+    assert_eq!(stat(&stats, &["requests", "scored"]), 0.0);
+    client.ask(&Request::Shutdown { id: 4 });
+    handle.join().unwrap();
+
+    // Fresh daemon with capacity: an already-expired per-request deadline
+    // sheds typed, and the same connection's next request still scores.
+    let handle = spawn(quiet_cfg(&dir, &["graddot"])).unwrap();
+    let mut client = Client::connect(handle.addr());
+    let mut req = ScoreRequest {
+        id: 5,
+        scorer: "graddot".to_string(),
+        top_k: 2,
+        include_scores: false,
+        self_influence: false,
+        deadline_ms: Some(0),
+        queries: QueryPayload::Synth { m: 2 },
+    };
+    let resp = client.ask(&Request::Score(req.clone()));
+    let Response::Error { kind, .. } = resp else {
+        panic!("expected deadline shed, got {resp:?}");
+    };
+    assert_eq!(kind, ErrorKind::DeadlineExceeded);
+    assert!(kind.is_shed());
+    req.id = 6;
+    req.deadline_ms = None;
+    let resp = client.ask(&Request::Score(req));
+    assert!(
+        matches!(resp, Response::Scores(_)),
+        "daemon must keep serving after a shed: {resp:?}"
+    );
+
+    // A scorer that isn't loaded is a typed BadRequest, not a hangup.
+    let resp = client.ask(&score_req(7, "trak", 2));
+    let Response::Error { kind, message, .. } = resp else {
+        panic!("expected bad request, got {resp:?}");
+    };
+    assert_eq!(kind, ErrorKind::BadRequest);
+    assert!(!kind.is_shed());
+    assert!(message.contains("not loaded"), "{message}");
+
+    let Response::Stats { stats, .. } = client.ask(&Request::Stats { id: 8 }) else {
+        panic!("expected stats reply");
+    };
+    assert_eq!(stat(&stats, &["requests", "deadline_exceeded"]), 1.0);
+    assert_eq!(stat(&stats, &["requests", "scored"]), 1.0);
+    client.ask(&Request::Shutdown { id: 9 });
+    handle.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A truncated shard under `skip_corrupt` degrades the response's
+/// coverage (quarantined shard listed, fewer rows scored) but the daemon
+/// keeps answering; without `skip_corrupt` the daemon refuses to start.
+#[test]
+fn corrupt_shard_degrades_coverage_but_daemon_keeps_serving() {
+    let (n, p, seed, m) = (48usize, 64usize, 7u64, 2usize);
+    let shard_rows = 16usize; // 3 shards of 16
+    let dir = write_synth_store("degraded", n, p, seed, shard_rows);
+    let shard1 = dir.join("shard_0001.bin");
+    let len = std::fs::metadata(&shard1).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&shard1).unwrap();
+    f.set_len(len - 8).unwrap();
+    drop(f);
+
+    // Strict mode: ingest hits the corrupt shard and spawn fails cleanly.
+    assert!(
+        spawn(quiet_cfg(&dir, &["graddot"])).is_err(),
+        "corrupt shard without skip_corrupt must refuse to serve"
+    );
+
+    let handle = spawn(ServeConfig {
+        skip_corrupt: true,
+        cache_bytes: 0,
+        ..quiet_cfg(&dir, &["graddot"])
+    })
+    .unwrap();
+    let mut client = Client::connect(handle.addr());
+    let resp = client.ask(&score_req(1, "graddot", m));
+    let Response::Scores(r) = resp else {
+        panic!("degraded store must still score: {resp:?}");
+    };
+    assert!(r.coverage.is_degraded(), "{:?}", r.coverage);
+    assert_eq!(r.coverage.quarantined, vec![1]);
+    assert_eq!(r.coverage.rows_total, n);
+    assert_eq!(r.coverage.rows_scored, n - shard_rows);
+
+    // One bad shard costs coverage in that response, not the daemon.
+    let resp = client.ask(&score_req(2, "graddot", m));
+    assert!(matches!(resp, Response::Scores(_)), "{resp:?}");
+    let Response::Stats { stats, .. } = client.ask(&Request::Stats { id: 3 }) else {
+        panic!("expected stats reply");
+    };
+    assert_eq!(stat(&stats, &["requests", "degraded"]), 2.0);
+    assert_eq!(stat(&stats, &["requests", "scored"]), 2.0);
+    client.ask(&Request::Shutdown { id: 4 });
+    handle.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -5,10 +5,11 @@
 //! error naming the shard and byte counts, not a bare I/O error).
 
 use grass::attrib::{from_spec, AttributionSpec, Attributor, StreamOpts};
+use grass::serve::ShardCache;
 use grass::sketch::MethodSpec;
-use grass::store::{RowBlock, StoreReader, StoreWriter};
+use grass::store::{ReadLog, RetryPolicy, RowBlock, StoreReader, StoreWriter};
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 fn tmpdir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!(
@@ -201,6 +202,72 @@ fn truncated_shard_is_a_descriptive_error() {
     assert!(reader
         .par_for_each_shard(2, |_, _, _, _| Ok(()))
         .is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The serving daemon's concurrency model: many threads stream the same
+/// open store at once (each a guarded multi-worker pass, sharing one warm
+/// [`ShardCache`]). Every pass must visit every row exactly once with
+/// bit-correct contents — no cross-thread corruption, no double visits —
+/// and the shared cache must actually serve repeat passes from memory.
+#[test]
+fn concurrent_guarded_readers_share_one_store_without_corruption() {
+    let dir = tmpdir("concurrent");
+    let (n, k) = (64usize, 8usize); // shard_rows 5 → 13 shards, ragged tail
+    write_store(&dir, n, k, 5);
+    let mut reader = StoreReader::open(&dir).unwrap();
+    let cache = Arc::new(ShardCache::new(1 << 20));
+    reader.attach_cache(cache.clone());
+    // Warm the cache with one sequential pass (13 misses); the concurrent
+    // passes below must then be pure hits — first-touch miss races between
+    // threads would otherwise make the miss count nondeterministic.
+    reader.read_all().unwrap();
+    assert_eq!(cache.stats().misses as usize, reader.num_shards());
+    let reader = &reader;
+
+    std::thread::scope(|s| {
+        for t in 0..4usize {
+            s.spawn(move || {
+                let seen = Mutex::new(vec![0usize; n]);
+                reader
+                    .par_for_each_block_guarded(
+                        3,
+                        &[],
+                        2,
+                        &RetryPolicy::none(),
+                        false,
+                        &ReadLog::default(),
+                        |_, b, data, _| {
+                            let mut g = seen.lock().unwrap();
+                            for j in 0..b.rows {
+                                g[b.start + j] += 1;
+                                assert_eq!(
+                                    &data[j * k..(j + 1) * k],
+                                    &row(b.start + j, k)[..],
+                                    "thread {t}: row {} corrupted",
+                                    b.start + j
+                                );
+                            }
+                            Ok(())
+                        },
+                    )
+                    .unwrap();
+                assert!(
+                    seen.into_inner().unwrap().iter().all(|&c| c == 1),
+                    "thread {t}: some row visited != once"
+                );
+            });
+        }
+    });
+
+    // 4 passes × 13 shards with a budget holding the whole store: the
+    // shared cache must have absorbed the repeat reads.
+    let stats = cache.stats();
+    assert!(stats.hits > 0, "shared cache saw no hits: {stats:?}");
+    assert!(
+        stats.misses as usize <= reader.num_shards(),
+        "each shard should miss at most once: {stats:?}"
+    );
     std::fs::remove_dir_all(&dir).ok();
 }
 
