@@ -13,11 +13,15 @@
 //!    streaming influence engine at 1/2/4 workers. Asserts streamed ==
 //!    in-memory scores (≤ 1e-5 rel) and that the configured resident
 //!    buffer allocation stays within the budget.
-//! 3. **Recovery** (always runs): an interrupted cache run resumed from
+//! 3. **Quantized streaming** (always runs): the same rows under f32 and
+//!    f16 payload codecs scored by the dequant-fused streaming engine —
+//!    asserts the 2× encoded bytes-per-row reduction and ≤ 1e-2 LDS drift
+//!    that the CI quantization gate re-checks from the JSON.
+//! 4. **Recovery** (always runs): an interrupted cache run resumed from
 //!    its committed shards, then fault-injected streamed scoring whose
 //!    transient read failures the retry policy absorbs — records
 //!    `resume_skipped_rows` / `retries_attempted`.
-//! 4. **Full pipeline** (requires `make artifacts`): PJRT gradient workers
+//! 5. **Full pipeline** (requires `make artifacts`): PJRT gradient workers
 //!    feeding the batch compress stage and the reordering store writer.
 //!
 //! Run: `cargo bench --bench pipeline_e2e`
@@ -31,7 +35,9 @@ use grass::data::images::SynthDigits;
 use grass::runtime::{Arg, Runtime};
 use grass::sketch::rng::Pcg;
 use grass::sketch::{Compressor, MethodSpec, Scratch};
-use grass::store::{FaultKind, FaultPlan, RetryPolicy, StoreMeta, StoreReader, StoreWriter};
+use grass::store::{
+    FaultKind, FaultPlan, PayloadDtype, RetryPolicy, StoreMeta, StoreReader, StoreWriter,
+};
 use grass::util::bench::{self, BenchRecord};
 
 /// The compress stage in isolation: one MLP-sized gradient block through
@@ -173,6 +179,130 @@ fn streaming_attribute_bench(records: &mut Vec<BenchRecord>) {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Quantized streamed scoring: the same rows cached under the f32 and f16
+/// payload codecs, scored out-of-core by the streaming influence engine.
+/// Asserts the encoded bytes-per-row reduction (2× for f16, the
+/// bandwidth-bound gain the CI gate checks as ≥ 1.5×), that f16 scores
+/// track f32 within the codec's error envelope, and that the LDS computed
+/// from both score matrices over identical subsets drifts ≤ 1e-2. Records
+/// `dtype`/`bytes_per_row` plus `lds_drift` so the gate reads everything
+/// from `BENCH_pipeline_e2e.json`.
+fn quantized_stream_bench(records: &mut Vec<BenchRecord>) {
+    let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
+    let (n, k, m) = if fast {
+        (1024usize, 128usize, 8usize)
+    } else {
+        (4096, 256, 16)
+    };
+    let mut rng = Pcg::new(41);
+    let rows: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+    let queries: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
+    let base = std::env::temp_dir().join(format!("grass_bench_quant_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+
+    println!("== quantized streamed scoring: f32 vs f16 payloads (n={n}, k={k}) ==");
+    let mut runs: Vec<(PayloadDtype, Vec<f32>, f64)> = Vec::new();
+    for dtype in [PayloadDtype::F32, PayloadDtype::F16] {
+        let dir = base.join(dtype.as_str());
+        let meta = StoreMeta {
+            k,
+            n: 0,
+            shard_rows: 512,
+            method: "bench".to_string(),
+            seed: 0,
+            model: String::new(),
+            input_dim: 0,
+            layer_dims: vec![],
+            density: 1.0,
+            dtype,
+        };
+        let mut w = StoreWriter::create_described(&dir, meta).expect("writer");
+        w.push_batch(&rows).expect("push");
+        w.finish().expect("finish");
+        let reader = StoreReader::open(&dir).expect("reader");
+        let opts = StreamOpts::default();
+        let mut eng = InfluenceEngine::new(k, 0.1);
+        eng.cache_stream(&reader, &opts).expect("cache_stream");
+        let got = Attributor::attribute(&eng, &queries, m).expect("attribute");
+        // The measured cost is the dequant-fused streaming cache pass —
+        // the phase whose byte traffic quantization halves.
+        let r = bench::bench(&format!("cache_stream dtype={dtype}"), || {
+            let mut eng = InfluenceEngine::new(k, 0.1);
+            eng.cache_stream(&reader, &opts).unwrap();
+        });
+        println!("{}", r.report());
+        runs.push((dtype, got.scores, r.median_secs()));
+    }
+
+    let (_, f32_scores, f32_secs) = &runs[0];
+    let (_, f16_scores, f16_secs) = &runs[1];
+    for i in 0..m * n {
+        let (a, b) = (f16_scores[i], f32_scores[i]);
+        assert!(
+            (a - b).abs() <= 2e-2 * (1.0 + b.abs()),
+            "f16 streamed score drifted at {i}: {a} vs f32 {b}"
+        );
+    }
+
+    // LDS drift over identical subsets: ground-truth losses follow the
+    // additive datamodel implied by the f32 scores, so f32 scores LDS ≈ 1
+    // and the f16 delta isolates what quantization costs the ranking.
+    let s_count = 32usize;
+    let subsets = grass::eval::sample_subsets(n, s_count, 0.5, 43);
+    let mut losses = vec![0.0f32; s_count * m];
+    for (s, subset) in subsets.iter().enumerate() {
+        for q in 0..m {
+            losses[s * m + q] = -subset.iter().map(|&i| f32_scores[q * n + i]).sum::<f32>();
+        }
+    }
+    let (lds_f32, _) = grass::eval::lds_score(f32_scores, n, m, &subsets, &losses);
+    let (lds_f16, _) = grass::eval::lds_score(f16_scores, n, m, &subsets, &losses);
+    let lds_drift = (lds_f32 - lds_f16).abs();
+    assert!(
+        lds_drift <= 1e-2,
+        "f16 LDS drift {lds_drift:.4} exceeds 1e-2 (f32 {lds_f32:.4} vs f16 {lds_f16:.4})"
+    );
+
+    let bytes_f32 = PayloadDtype::F32.row_bytes(k) as f64;
+    let bytes_f16 = PayloadDtype::F16.row_bytes(k) as f64;
+    let bytes_ratio = bytes_f32 / bytes_f16;
+    assert!(
+        bytes_ratio >= 1.5,
+        "f16 bytes-per-row reduction {bytes_ratio:.2}x is under the 1.5x gate"
+    );
+    let wall_speedup = f32_secs / f16_secs.max(1e-12);
+    println!(
+        "f16 vs f32: {bytes_ratio:.2}x fewer shard bytes/row, {wall_speedup:.2}x wall \
+         (page-cached), LDS drift {lds_drift:.5}"
+    );
+    records.push(
+        BenchRecord::from_duration(
+            "stream:quant:f32:if",
+            n,
+            k,
+            k,
+            std::time::Duration::from_secs_f64(*f32_secs),
+        )
+        .with_dtype("f32", bytes_f32)
+        .with("lds", lds_f32),
+    );
+    records.push(
+        BenchRecord::from_duration(
+            "stream:quant:f16:if",
+            n,
+            k,
+            k,
+            std::time::Duration::from_secs_f64(*f16_secs),
+        )
+        .with_dtype("f16", bytes_f16)
+        .with("lds", lds_f16)
+        .with("lds_drift", lds_drift)
+        .with("bytes_ratio_vs_f32", bytes_ratio)
+        .with("wall_speedup_vs_f32", wall_speedup),
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
 /// Preconditioner fit/apply costs: the stream-FIM fit pass vs loading the
 /// persisted `precond.bin` artifact (which skips the row stream entirely),
 /// plus the per-row apply cost. Records `precond_fit_ms`/`precond_apply_ms`
@@ -252,6 +382,7 @@ fn recovery_bench(records: &mut Vec<BenchRecord>) {
         input_dim: 0,
         layer_dims: vec![],
         density: 1.0,
+        dtype: PayloadDtype::F32,
     };
 
     // Interrupted run: push the first half, then drop the writer without
@@ -412,6 +543,7 @@ fn main() {
     let mut records: Vec<BenchRecord> = Vec::new();
     compress_stage_bench(&mut records);
     streaming_attribute_bench(&mut records);
+    quantized_stream_bench(&mut records);
     precond_artifact_bench(&mut records);
     recovery_bench(&mut records);
     serve_bench(&mut records);
@@ -479,6 +611,8 @@ fn main() {
                     p95_ms: None,
                     p99_ms: None,
                     cache_hit_rate: None,
+                    dtype: None,
+                    bytes_per_row: None,
                     extra: vec![],
                 },
             );

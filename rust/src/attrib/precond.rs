@@ -1088,6 +1088,7 @@ mod tests {
             input_dim: 0,
             layer_dims: vec![],
             density: 1.0,
+            dtype: crate::store::PayloadDtype::F32,
         };
         assert!(back.validate_store(&meta("rm:k=4", 7, 4, 99)).is_ok());
         let e = format!("{:#}", back.validate_store(&meta("sjlt:k=4,s=1", 7, 4, 99)).unwrap_err());

@@ -22,11 +22,16 @@
 //!    score columns incrementally. Workers never hold more than one block.
 //!
 //! [`StreamOpts::mem_budget`] bounds the resident streaming buffers:
-//! `workers × chunk_rows × k × 4 bytes × 2` (each worker owns one row
-//! buffer plus an equally sized scratch used for transformed copies and
-//! score blocks). The query block (`m × k`) and the output score matrix
-//! (`m × out_cols`) sit outside the budget — they are the caller's inputs
-//! and outputs, not streaming state.
+//! `workers × chunk_rows × (k × 4 + row_bytes)` — each worker owns one
+//! decoded `chunk_rows × k` f32 row buffer plus, per row, the encoded
+//! payload bytes in flight (scratch for transformed copies and score
+//! blocks reuses the same envelope). On an f32 store `row_bytes = 4k` and
+//! the bound is the historical `workers × chunk_rows × k × 4 × 2`;
+//! quantized payloads shrink `row_bytes` (2k for f16/bf16, 4+k for int8)
+//! so the same `--mem-budget` streams proportionally larger blocks. The
+//! query block (`m × k`) and the output score matrix (`m × out_cols`) sit
+//! outside the budget — they are the caller's inputs and outputs, not
+//! streaming state.
 //!
 //! Row-group selection ([`RowGroups`]) turns per-row score columns into
 //! per-group columns (GGDA-style grouped attribution): every member row's
@@ -39,7 +44,7 @@
 use super::blockwise::BlockLayout;
 use super::fim::FimAccumulator;
 use super::precond::{apply_rows_parallel, PrecondArtifact, PrecondSpec, Preconditioner};
-use crate::store::{ReadGuard, ReadLog, RetryPolicy, RowGroups, StoreReader};
+use crate::store::{PayloadDtype, ReadGuard, ReadLog, RetryPolicy, RowGroups, StoreReader};
 use crate::util::par;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::ops::Range;
@@ -114,18 +119,40 @@ impl StreamOpts {
         .max(1)
     }
 
-    /// Rows per streamed block: the largest count that keeps every
-    /// worker's two `chunk_rows × k` f32 buffers inside the budget
-    /// (floored at one row).
-    pub fn chunk_rows(&self, k: usize) -> usize {
-        let per_row = 2 * 4 * k.max(1);
+    /// Resident bytes one streamed row costs a worker under `dtype`: the
+    /// decoded `k × 4` f32 buffer entry plus the row's encoded payload in
+    /// flight. `4k + 4k = 8k` on f32 stores (the historical two-f32-buffer
+    /// accounting), `6k` at 2 bytes/elem (f16/bf16), `5k + 4` for int8.
+    fn per_row_bytes(k: usize, dtype: PayloadDtype) -> usize {
+        4 * k.max(1) + dtype.row_bytes(k.max(1))
+    }
+
+    /// Rows per streamed block under the store's payload dtype: the
+    /// largest count that keeps every worker's resident per-row bytes
+    /// inside the budget (floored at one row). Quantized payloads cost
+    /// fewer bytes per row, so the same budget streams larger blocks.
+    pub fn chunk_rows_for(&self, k: usize, dtype: PayloadDtype) -> usize {
+        let per_row = Self::per_row_bytes(k, dtype);
         (self.mem_budget / (self.effective_workers() * per_row)).max(1)
     }
 
+    /// [`StreamOpts::chunk_rows_for`] on an f32 payload (the legacy
+    /// accounting: two `chunk_rows × k` f32 buffers per worker).
+    pub fn chunk_rows(&self, k: usize) -> usize {
+        self.chunk_rows_for(k, PayloadDtype::F32)
+    }
+
     /// The configured resident buffer allocation the budget bounds:
-    /// `workers × chunk_rows × k × 4 × 2` bytes.
+    /// `workers × chunk_rows × (k × 4 + row_bytes)`.
+    pub fn resident_bytes_for(&self, k: usize, dtype: PayloadDtype) -> usize {
+        self.effective_workers()
+            * self.chunk_rows_for(k, dtype)
+            * Self::per_row_bytes(k, dtype)
+    }
+
+    /// [`StreamOpts::resident_bytes_for`] on an f32 payload.
     pub fn resident_bytes(&self, k: usize) -> usize {
-        self.effective_workers() * self.chunk_rows(k) * 2 * 4 * k.max(1)
+        self.resident_bytes_for(k, PayloadDtype::F32)
     }
 
     /// Selected row ranges (empty = the whole store).
@@ -205,7 +232,7 @@ pub(crate) fn stream_block_fims(
         layout.total()
     );
     let ranges = opts.ranges();
-    let blocks = reader.plan_blocks(opts.chunk_rows(k), &ranges);
+    let blocks = reader.plan_blocks(opts.chunk_rows_for(k, reader.meta.dtype), &ranges);
     let max_rows = blocks.iter().map(|b| b.rows).max().unwrap_or(0);
     let workers = opts.effective_workers().min(blocks.len()).max(1);
     let next = AtomicUsize::new(0);
@@ -309,7 +336,7 @@ pub(crate) fn stream_self_influence(
     let out = Mutex::new(vec![0.0f64; out_len]);
     let ranges = opts.ranges();
     reader.par_for_each_block_guarded(
-        opts.chunk_rows(k),
+        opts.chunk_rows_for(k, reader.meta.dtype),
         &ranges,
         opts.effective_workers(),
         &opts.retry,
@@ -382,7 +409,7 @@ pub(crate) fn stream_scores(
     // written once (f32 → f64 → f32 is lossless), so the ungrouped path
     // stays bit-identical to the in-memory GEMM.
     let scores = Mutex::new(vec![0.0f64; m * out_cols]);
-    let chunk_rows = opts.chunk_rows(k);
+    let chunk_rows = opts.chunk_rows_for(k, reader.meta.dtype);
     // The GEMM scratch honours the same budget as the row buffer: score
     // the block in spans of at most ⌈chunk_rows·k / m⌉ rows, so worker
     // scratch never exceeds max(chunk_rows × k, m) floats.
@@ -829,6 +856,50 @@ mod tests {
             ..StreamOpts::default()
         };
         assert_eq!(tiny.chunk_rows(1024), 1);
+    }
+
+    #[test]
+    fn chunk_rows_are_dtype_aware_at_2_and_1_bytes_per_elem() {
+        let k = 8;
+        let o = StreamOpts {
+            mem_budget: 2 * 2 * 4 * k * 2, // fits 2 rows/worker at f32
+            workers: 2,
+            ..StreamOpts::default()
+        };
+        // f32: per_row = 4k + 4k = 64 B → 2 rows, the legacy accounting.
+        assert_eq!(o.chunk_rows_for(k, PayloadDtype::F32), o.chunk_rows(k));
+        assert_eq!(o.chunk_rows_for(k, PayloadDtype::F32), 2);
+        // 2 bytes/elem (f16/bf16): per_row = 4k + 2k = 48 B → 2 un-decoded
+        // bytes per element come back as ⌊256/96⌋ = 2 rows… same floor, so
+        // scale the budget to see the stretch: 6 rows vs 4 at f32.
+        let bigger = StreamOpts {
+            mem_budget: 2 * 48 * 6,
+            workers: 2,
+            ..StreamOpts::default()
+        };
+        assert_eq!(bigger.chunk_rows_for(k, PayloadDtype::F32), 4);
+        assert_eq!(bigger.chunk_rows_for(k, PayloadDtype::F16), 6);
+        assert_eq!(bigger.chunk_rows_for(k, PayloadDtype::Bf16), 6);
+        // 1 byte/elem (int8): per_row = 4k + 4 + k = 44 B → ⌊288/44⌋ = 6.
+        assert_eq!(bigger.chunk_rows_for(k, PayloadDtype::Int8), 6);
+        let tighter = StreamOpts {
+            mem_budget: 44 * 6,
+            workers: 1,
+            ..StreamOpts::default()
+        };
+        assert_eq!(tighter.chunk_rows_for(k, PayloadDtype::Int8), 6);
+        assert_eq!(tighter.chunk_rows_for(k, PayloadDtype::F16), 5);
+        assert_eq!(tighter.chunk_rows_for(k, PayloadDtype::F32), 4);
+        // The configured residency never exceeds the budget under any dtype.
+        for dt in [
+            PayloadDtype::F32,
+            PayloadDtype::F16,
+            PayloadDtype::Bf16,
+            PayloadDtype::Int8,
+        ] {
+            assert!(bigger.resident_bytes_for(k, dt) <= bigger.mem_budget, "{dt}");
+            assert!(tighter.resident_bytes_for(k, dt) <= tighter.mem_budget, "{dt}");
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@ use crate::data::{Labelled, Sequences};
 use crate::runtime::{Arg, Executable, Runtime};
 use crate::sketch::sparse::probe;
 use crate::sketch::{Compressor, FactorizedCompressor, Scratch, SparseRows};
-use crate::store::{StoreMeta, StoreWriter};
+use crate::store::{PayloadDtype, StoreMeta, StoreWriter};
 use anyhow::{anyhow, Result};
 
 pub use crate::sketch::CompressorBank;
@@ -35,6 +35,9 @@ pub struct PipelineConfig {
     /// and restart gradient computation from the first missing row instead
     /// of recomputing everything (see [`StoreWriter::resume`]).
     pub resume: bool,
+    /// Payload codec the writer encodes shard rows with (`grass cache
+    /// --dtype`); f32 is the legacy default.
+    pub dtype: PayloadDtype,
 }
 
 impl Default for PipelineConfig {
@@ -46,6 +49,7 @@ impl Default for PipelineConfig {
             shard_rows: crate::store::DEFAULT_SHARD_ROWS,
             mem_budget: crate::attrib::DEFAULT_MEM_BUDGET,
             resume: false,
+            dtype: PayloadDtype::F32,
         }
     }
 }
@@ -219,6 +223,7 @@ impl<'a> CachePipeline<'a> {
                 vec![]
             },
             density: 1.0,
+            dtype: self.cfg.dtype,
         };
         let (writer, committed) = if self.cfg.resume {
             let (w, committed) = StoreWriter::resume(store_dir, &target)?;

@@ -372,6 +372,13 @@ pub fn run_density(
                     precond_apply_ms: None,
                     resume_skipped_rows: None,
                     retries_attempted: None,
+                    qps: None,
+                    p50_ms: None,
+                    p95_ms: None,
+                    p99_ms: None,
+                    cache_hit_rate: None,
+                    dtype: None,
+                    bytes_per_row: None,
                     extra: vec![
                         ("tokens_per_sec".to_string(), sparse_tps),
                         ("dense_tokens_per_sec".to_string(), dense_tps),
@@ -486,6 +493,13 @@ pub fn run_bench(
             precond_apply_ms: None,
             resume_skipped_rows: None,
             retries_attempted: None,
+            qps: None,
+            p50_ms: None,
+            p95_ms: None,
+            p99_ms: None,
+            cache_hit_rate: None,
+            dtype: None,
+            bytes_per_row: None,
             extra: vec![
                 ("tokens_per_sec".to_string(), tps),
                 ("cache_tokens_per_sec".to_string(), cache),

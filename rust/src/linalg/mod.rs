@@ -1,14 +1,17 @@
 //! Small dense linear algebra used across the attribution pipeline:
 //! Cholesky factorisation (FIM inversion), the symmetric Jacobi
 //! eigensolver (eigen-truncated preconditioners), the fast Walsh–Hadamard
-//! transform (FJLT baseline), correlation statistics (LDS), and the
+//! transform (FJLT baseline), correlation statistics (LDS), the
 //! register-tiled blocked matmuls behind the factorized compressors and the
-//! influence scoring GEMM.
+//! influence scoring GEMM, and the scalar quantization kernels
+//! (f16/bf16/int8) the store payload codecs decode through on every
+//! streamed read.
 
 pub mod cholesky;
 pub mod eigh;
 pub mod fwht;
 pub mod matmul;
+pub mod quantize;
 pub mod stats;
 
 pub use cholesky::CholeskyFactor;

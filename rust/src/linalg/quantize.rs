@@ -1,0 +1,219 @@
+//! Scalar quantization kernels behind the store payload codecs: IEEE
+//! binary16 (f16) and bfloat16 conversions with round-to-nearest-even,
+//! plus symmetric int8 row quantization against a per-row absmax scale.
+//! The framing (row layout, scale headers, dtype tags) lives in
+//! [`crate::store::quant`]; this module is the pure numeric inner loops
+//! the dequant-on-read path runs per element, kept in `linalg` next to
+//! the matmuls that consume the decoded tiles.
+
+/// Convert an `f32` to IEEE binary16 bits, rounding to nearest even.
+/// Overflow saturates to ±inf, underflow denormalizes and then flushes
+/// to ±0; NaNs stay NaN (quiet bit forced so the payload can't vanish).
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN: truncate the payload, forcing a quiet bit for NaN.
+        let quiet = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | quiet | (man >> 13) as u16;
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // below the smallest subnormal → ±0
+        }
+        // Subnormal: shift the implicit leading 1 into the mantissa and
+        // round to nearest even at the shifted position.
+        let m = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rounded = (m + (half - 1) + ((m >> shift) & 1)) >> shift;
+        return sign | rounded as u16;
+    }
+    // Normal: round the 23-bit mantissa to 10 bits, nearest even; a
+    // mantissa carry bumps the exponent (possibly into ±inf).
+    let rounded = man + 0x0fff + ((man >> 13) & 1);
+    let mut e16 = e as u32;
+    let mut m16 = rounded >> 13;
+    if m16 & 0x400 != 0 {
+        m16 = 0;
+        e16 += 1;
+        if e16 >= 0x1f {
+            return sign | 0x7c00;
+        }
+    }
+    sign | ((e16 << 10) as u16) | (m16 as u16)
+}
+
+/// Convert IEEE binary16 bits back to `f32` (exact: every f16 value is
+/// representable in f32).
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        // ±0 or subnormal: man × 2⁻²⁴, an exact power-of-two scale.
+        let v = man as f32 * f32::from_bits(0x3380_0000); // 2^-24
+        return if sign != 0 { -v } else { v };
+    }
+    f32::from_bits(sign | ((exp + 127 - 15) << 23) | (man << 13))
+}
+
+/// Convert an `f32` to bfloat16 bits (top 16 bits of the f32 layout),
+/// rounding to nearest even. NaNs keep a quiet payload bit.
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if bits & 0x7fff_ffff > 0x7f80_0000 {
+        return ((bits >> 16) as u16) | 0x0040; // NaN stays NaN
+    }
+    let round = 0x7fff + ((bits >> 16) & 1);
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// Convert bfloat16 bits back to `f32` (exact by construction).
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// The symmetric per-row int8 scale: `absmax / 127`, so the full ±127
+/// code range covers the row. Zero rows (and all-zero gradients) get a
+/// zero scale, which round-trips every element exactly to 0.
+#[inline]
+pub fn i8_row_scale(row: &[f32]) -> f32 {
+    let mut absmax = 0.0f32;
+    for &v in row {
+        let a = v.abs();
+        if a > absmax {
+            absmax = a;
+        }
+    }
+    absmax / 127.0
+}
+
+/// Quantize a row to int8 codes against `scale` (as from
+/// [`i8_row_scale`]), appending one byte per element. Codes saturate at
+/// ±127; non-finite inputs collapse to 0 via Rust's saturating cast.
+#[inline]
+pub fn quantize_i8(row: &[f32], scale: f32, out: &mut Vec<u8>) {
+    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    for &v in row {
+        let q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        out.push(q as u8);
+    }
+}
+
+/// Dequantize int8 codes back to `f32` against the row's scale.
+#[inline]
+pub fn dequantize_i8(bytes: &[u8], scale: f32, out: &mut [f32]) {
+    for (o, &b) in out.iter_mut().zip(bytes) {
+        *o = (b as i8) as f32 * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    #[test]
+    fn f16_roundtrip_exact_values_and_edge_cases() {
+        // Exactly representable values survive the roundtrip bit-perfectly.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v, "{v}");
+        }
+        // Signed zero keeps its sign bit.
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        // Overflow saturates to ±inf.
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xfc00);
+        assert!(f16_bits_to_f32(0x7c00).is_infinite());
+        // NaN stays NaN.
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Underflow flushes to zero, tiny-but-representable stays nonzero.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-10)), 0.0);
+        let sub = f16_bits_to_f32(f32_to_f16_bits(3e-7));
+        assert!(sub > 0.0 && (sub - 3e-7).abs() < 6e-8, "{sub}");
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even_ties() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16
+        // (1 + 2^-10); nearest-even rounds down to 1.0.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0 + 0.00048828125)), 1.0);
+        // 1 + 3·2^-11 is halfway between 1+2^-10 and 1+2^-9; nearest-even
+        // rounds up to 1 + 2^-9 (even mantissa 2).
+        let up = f16_bits_to_f32(f32_to_f16_bits(1.0 + 3.0 * 0.000488281250));
+        assert_eq!(up, 1.0 + 2.0 * 0.0009765625);
+    }
+
+    #[test]
+    fn f16_relative_error_within_half_ulp() {
+        let mut rng = Pcg::new(3);
+        for _ in 0..20_000 {
+            let v = rng.next_gaussian() * 10f32.powi((rng.next_f32() * 8.0 - 4.0) as i32);
+            let rt = f16_bits_to_f32(f32_to_f16_bits(v));
+            // Normal range: rel err ≤ 2^-11; subnormal: abs err ≤ 2^-25.
+            let tol = f32::max(4.8829e-4 * v.abs(), 3.0e-8);
+            assert!((rt - v).abs() <= tol, "{v} -> {rt}");
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_and_rounding() {
+        for v in [0.0f32, -0.0, 1.0, -2.5, 3.0e38, 1.0e-30] {
+            let rt = bf16_bits_to_f32(f32_to_bf16_bits(v));
+            assert!((rt - v).abs() <= 3.91e-3 * v.abs(), "{v} -> {rt}");
+        }
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(1.0)), 1.0);
+        assert_eq!(f32_to_bf16_bits(-0.0), 0x8000);
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::INFINITY)).is_infinite());
+        // Values just under the rounding boundary stay put; the tie at
+        // 1 + 2^-9 rounds to even (down to 1.0).
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(1.0 + 0.001953125)), 1.0);
+        let mut rng = Pcg::new(5);
+        for _ in 0..20_000 {
+            let v = rng.next_gaussian();
+            let rt = bf16_bits_to_f32(f32_to_bf16_bits(v));
+            assert!((rt - v).abs() <= 3.91e-3 * (1e-30 + v.abs()), "{v} -> {rt}");
+        }
+    }
+
+    #[test]
+    fn i8_row_quantization_bounds_and_zero_row() {
+        let mut rng = Pcg::new(7);
+        let row: Vec<f32> = (0..64).map(|_| rng.next_gaussian()).collect();
+        let scale = i8_row_scale(&row);
+        let mut enc = Vec::new();
+        quantize_i8(&row, scale, &mut enc);
+        assert_eq!(enc.len(), row.len());
+        let mut dec = vec![0.0f32; row.len()];
+        dequantize_i8(&enc, scale, &mut dec);
+        let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for (i, (&v, &d)) in row.iter().zip(&dec).enumerate() {
+            // Rounding error ≤ scale/2 = absmax/254.
+            assert!((v - d).abs() <= absmax / 254.0 + 1e-7, "elem {i}: {v} vs {d}");
+        }
+        // The row absmax maps to exactly ±127 and back exactly.
+        let zero = vec![0.0f32; 8];
+        let s0 = i8_row_scale(&zero);
+        assert_eq!(s0, 0.0);
+        let mut enc0 = Vec::new();
+        quantize_i8(&zero, s0, &mut enc0);
+        let mut dec0 = vec![1.0f32; 8];
+        dequantize_i8(&enc0, s0, &mut dec0);
+        assert!(dec0.iter().all(|&v| v == 0.0));
+    }
+}

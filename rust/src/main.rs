@@ -5,7 +5,8 @@
 //! grass exp table1a|table1b|table1c|table1d [--fast] [--ks ...] [...]
 //! grass exp table2 [--ks 256,1024,4096] [--tokens 256] [--reps 8]
 //! grass exp fig9 [--kl 256]
-//! grass cache --model mlp --method sjlt:k=1024 --n 1000 --store DIR [--resume]
+//! grass cache --model mlp --method sjlt:k=1024 --n 1000 --store DIR [--resume] [--dtype f16]
+//! grass quantize --store DIR --dtype f16 [--out DIR]
 //! grass fit --store DIR [--precond damped|blockwise|eig:r]
 //! grass attribute --store DIR --queries 8 --scorer if [--precond ...] [--damping grid]
 //! grass verify --store DIR [--upgrade]
@@ -37,7 +38,7 @@ use grass::models::shapes::ModelShapes;
 use grass::runtime::{Arg, Runtime};
 use grass::sketch::{MethodSpec, Scratch};
 use grass::store::{
-    RetryPolicy, RowGroups, StoreMeta, StoreReader, StoreWriter, DEFAULT_SHARD_ROWS,
+    PayloadDtype, RetryPolicy, RowGroups, StoreMeta, StoreReader, StoreWriter, DEFAULT_SHARD_ROWS,
 };
 use grass::util::cli::Args;
 use std::path::Path;
@@ -60,6 +61,7 @@ fn run() -> Result<i32> {
         Some("fit") => run_fit(&args).map(|()| 0),
         Some("attribute") => run_attribute(&args),
         Some("verify") => run_verify(&args),
+        Some("quantize") => run_quantize(&args).map(|()| 0),
         Some("serve") => run_serve(&args).map(|()| 0),
         Some("query") => run_query(&args),
         Some("info") => run_info().map(|()| 0),
@@ -82,6 +84,9 @@ USAGE:
               [--shard-rows R|0=auto] [--mem-budget 256M]
               [--resume (continue a killed run from its committed shards)]
               [--throttle-ms T (slow the synthetic writer; crash-testing aid)]
+              [--dtype f32|f16|bf16|int8 (payload codec; f32 default)]
+  grass quantize --store DIR --dtype <f16|bf16|int8>
+                 [--out DIR (default: rewrite the store in place)]
   grass fit --store DIR [--precond damped|blockwise|eig:r[,λ]] [--damping 1e-3]
             [--mem-budget 256M] [--workers N]
   grass attribute --store DIR [--queries M] [--scorer if|graddot|trak|tracin|blockwise]
@@ -139,7 +144,11 @@ CRC32C recorded in manifest.json, `grass cache --resume` restarts a
 killed run from its committed shards, `grass verify` scans every
 checksum, and `grass attribute --retries/--skip-corrupt` retries
 transient read errors and can score around corrupt shards (coverage
-reported, exit code 3). `grass serve` keeps all of that state hot in a
+reported, exit code 3). Shard payloads are quantizable (`--dtype
+f16|bf16|int8` at cache time, or `grass quantize` offline): rows are
+encoded on commit and dequantized on read, fused into the streaming
+scorers, so f16/bf16 halve and int8 roughly quarter the shard bytes;
+stores without a recorded dtype read as f32. `grass serve` keeps all of that state hot in a
 long-running daemon — store opened once, bank + precond artifact
 resident, warm shard cache with prefetch — answering scoring requests
 over newline-delimited JSON/TCP with admission control (queue bound +
@@ -281,12 +290,14 @@ fn run_cache(args: &Args) -> Result<()> {
 }
 
 /// Pipeline config from the shared cache-stage flags: `--shard-rows`
-/// (0 = auto-size from the budget), `--mem-budget`, and `--resume`.
+/// (0 = auto-size from the budget), `--mem-budget`, `--resume`, and
+/// `--dtype` (payload codec the shards are encoded with; f32 default).
 fn cache_pipeline_config(args: &Args) -> Result<PipelineConfig> {
     Ok(PipelineConfig {
         shard_rows: args.get_usize("shard-rows", DEFAULT_SHARD_ROWS)?,
         mem_budget: args.get_bytes("mem-budget", DEFAULT_MEM_BUDGET)?,
         resume: args.get_bool("resume"),
+        dtype: PayloadDtype::parse(args.get_or("dtype", "f32"))?,
         ..PipelineConfig::default()
     })
 }
@@ -404,8 +415,9 @@ fn cache_synthetic(
         let bank = spec.build_bank(&shapes, seed)?;
         let cs = bank.as_factored().expect("factorized spec builds a factored bank");
         let k = bank.output_dim();
-        let described =
+        let mut described =
             StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, cfg.effective_shard_rows(k))?;
+        described.dtype = cfg.dtype;
         let (mut w, committed) = open_writer(dir, described, resume)?;
         let hooks = SynthHooks::new(layers, seed);
         let mut row = vec![0.0f32; k];
@@ -430,6 +442,7 @@ fn cache_synthetic(
         let mut described =
             StoreMeta::describe(spec, seed, SYNTH_MODEL, &shapes, cfg.effective_shard_rows(k))?;
         described.density = density;
+        described.dtype = cfg.dtype;
         let (mut w, committed) = open_writer(dir, described, resume)?;
         let src = SynthGrads::with_density(p, seed, density as f32);
         let chunk = 64usize;
@@ -859,6 +872,88 @@ fn run_verify(args: &Args) -> Result<i32> {
         );
         Ok(2)
     }
+}
+
+// ---------------------------------------------------------------------------
+// quantize
+// ---------------------------------------------------------------------------
+
+/// `grass quantize`: offline payload-codec converter. Streams the source
+/// store's decoded f32 rows and re-encodes them under `--dtype` into a
+/// fully described store — at `--out DIR`, or (default) in place via an
+/// atomic staging-directory swap. Because the source rows decode to the
+/// exact f32 values the writer would have seen, the output is
+/// byte-identical to a cache run that used `--dtype` natively.
+fn run_quantize(args: &Args) -> Result<()> {
+    let store = args.get_or("store", "grass_store").to_string();
+    let dtype = PayloadDtype::parse(args.get_or("dtype", "f16"))?;
+    let in_place = args.get("out").is_none();
+    let out_dir = args
+        .get("out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("{store}.quantize.tmp"));
+
+    {
+        let reader = StoreReader::open(&store)?;
+        let src = reader.meta.dtype;
+        ensure!(
+            src.is_lossless(),
+            "store at {store} already holds lossy '{src}' payloads; re-quantizing would \
+             compound rounding error — re-run `grass cache --dtype {dtype}` from the source"
+        );
+        if dtype == src {
+            println!("store at {store} already uses payload dtype {dtype}; nothing to do");
+            return Ok(());
+        }
+        let (n, k) = (reader.meta.n, reader.meta.k);
+        let meta = StoreMeta {
+            dtype,
+            n: 0,
+            ..reader.meta.clone()
+        };
+        let _ = std::fs::remove_dir_all(&out_dir);
+        let mut w = StoreWriter::create_described(Path::new(&out_dir), meta)?;
+        let mut cur = reader.cursor_with(reader.meta.shard_rows.max(1), &[]);
+        let mut buf = Vec::new();
+        let mut written = 0usize;
+        while let Some(b) = cur.next_block(&mut buf)? {
+            ensure!(
+                b.start == written,
+                "cursor returned rows out of order (block at {} after {written} written)",
+                b.start
+            );
+            w.push_batch(&buf[..b.rows * k])?;
+            written += b.rows;
+        }
+        let out_meta = w.finish()?;
+        ensure!(
+            out_meta.n == n,
+            "quantized store holds {} rows but the source holds {n}",
+            out_meta.n
+        );
+        println!(
+            "quantized {n} rows × k={k}: {src} → {dtype} \
+             ({} → {} shard bytes/row)",
+            src.row_bytes(k),
+            dtype.row_bytes(k)
+        );
+    }
+
+    if in_place {
+        // Swap the staging directory over the source atomically enough
+        // that a healthy store exists at `store` at every step: the source
+        // is parked, the staging dir takes its name, then the park is
+        // dropped. The open reader is gone by now (scope above).
+        let old = format!("{store}.quantize.old");
+        let _ = std::fs::remove_dir_all(&old);
+        std::fs::rename(&store, &old)?;
+        std::fs::rename(&out_dir, &store)?;
+        std::fs::remove_dir_all(&old)?;
+        println!("rewrote {store} in place");
+    } else {
+        println!("wrote {out_dir} (source {store} untouched)");
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------

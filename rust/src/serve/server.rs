@@ -162,6 +162,8 @@ impl ServerState {
                 ("n", Json::Num(self.meta.n as f64)),
                 ("k", Json::Num(self.meta.k as f64)),
                 ("method", Json::Str(self.meta.method.clone())),
+                ("dtype", Json::Str(self.meta.dtype.as_str().to_string())),
+                ("bytes_per_row", Json::Num(self.meta.row_bytes() as f64)),
                 (
                     "shards",
                     Json::Num(self.meta.n.div_ceil(self.meta.shard_rows.max(1)) as f64),

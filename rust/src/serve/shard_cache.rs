@@ -2,10 +2,15 @@
 //!
 //! The streaming scorers re-read every shard once per pass (FIM,
 //! self-influence, scores) and the serving daemon re-reads the whole store
-//! per request. [`ShardCache`] keeps decoded shard bytes (`Vec<f32>`)
-//! resident under an LRU byte budget so repeat passes hit memory, and an
-//! optional background prefetcher overlaps the *next* shard's disk read
-//! with scoring of the current one.
+//! per request. [`ShardCache`] keeps shard payloads resident *in their
+//! on-disk encoded form* (`Vec<u8>`, per the store's
+//! [`crate::store::PayloadDtype`]) under an LRU byte budget so repeat
+//! passes hit memory — on quantized stores the same budget holds 2–4× more
+//! rows than decoded f32 would — and an optional background prefetcher
+//! overlaps the *next* shard's disk read with scoring of the current one.
+//! Warm reads dequantize the requested rows straight into the caller's
+//! buffer ([`crate::store::StoreReader::read_rows`]), never materializing
+//! a decoded copy of the whole shard.
 //!
 //! Failure semantics: a shard that fails to load is **never** cached — the
 //! typed [`StoreError`] propagates to the caller exactly as the uncached
@@ -45,14 +50,14 @@ impl CacheStats {
 }
 
 struct Inner {
-    /// shard index → decoded rows×k values.
-    map: HashMap<usize, Arc<Vec<f32>>>,
+    /// shard index → the shard's encoded payload bytes.
+    map: HashMap<usize, Arc<Vec<u8>>>,
     /// LRU order, most recently used last.
     lru: Vec<usize>,
     bytes: usize,
 }
 
-/// LRU cache of decoded shard bytes with an optional sequential prefetcher.
+/// LRU cache of encoded shard bytes with an optional sequential prefetcher.
 ///
 /// Attach to a [`StoreReader`] with [`StoreReader::attach_cache`]; every
 /// clone of that reader shares the cache, so concurrent streaming workers
@@ -71,7 +76,7 @@ pub struct ShardCache {
 }
 
 impl ShardCache {
-    /// A cache that retains at most `budget_bytes` of decoded shard data.
+    /// A cache that retains at most `budget_bytes` of encoded shard data.
     pub fn new(budget_bytes: usize) -> Self {
         Self {
             budget: budget_bytes,
@@ -88,15 +93,15 @@ impl ShardCache {
         }
     }
 
-    /// Return shard `shard`'s data, loading it through `reader`'s
-    /// fault-checked uncached path on a miss. Load failures are returned
-    /// (not cached), so corruption surfaces on every attempt until the
-    /// caller quarantines the shard.
+    /// Return shard `shard`'s encoded payload, loading it through
+    /// `reader`'s fault-checked uncached path on a miss. Load failures are
+    /// returned (not cached), so corruption surfaces on every attempt
+    /// until the caller quarantines the shard.
     pub fn get_or_load(
         &self,
         reader: &StoreReader,
         shard: usize,
-    ) -> std::result::Result<Arc<Vec<f32>>, StoreError> {
+    ) -> std::result::Result<Arc<Vec<u8>>, StoreError> {
         if let Some(data) = self.lookup(shard) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(data);
@@ -104,7 +109,7 @@ impl ShardCache {
         self.misses.fetch_add(1, Ordering::Relaxed);
         // Load outside the lock: concurrent misses on the same shard may
         // duplicate the read, but never block each other on disk I/O.
-        let (_, data) = reader.read_shard_uncached(shard)?;
+        let (_, data) = reader.read_shard_bytes_uncached(shard)?;
         let data = Arc::new(data);
         self.insert(shard, data.clone());
         Ok(data)
@@ -150,7 +155,7 @@ impl ShardCache {
                 if cache.contains(shard) {
                     continue;
                 }
-                if let Ok((_, data)) = reader.read_shard_uncached(shard) {
+                if let Ok((_, data)) = reader.read_shard_bytes_uncached(shard) {
                     cache.prefetch_loads.fetch_add(1, Ordering::Relaxed);
                     cache.insert(shard, Arc::new(data));
                 }
@@ -180,7 +185,7 @@ impl ShardCache {
         }
     }
 
-    fn lookup(&self, shard: usize) -> Option<Arc<Vec<f32>>> {
+    fn lookup(&self, shard: usize) -> Option<Arc<Vec<u8>>> {
         let mut inner = self.inner.lock().unwrap();
         let data = inner.map.get(&shard)?.clone();
         if let Some(pos) = inner.lru.iter().position(|&s| s == shard) {
@@ -190,8 +195,8 @@ impl ShardCache {
         Some(data)
     }
 
-    fn insert(&self, shard: usize, data: Arc<Vec<f32>>) {
-        let bytes = data.len() * 4;
+    fn insert(&self, shard: usize, data: Arc<Vec<u8>>) {
+        let bytes = data.len();
         if bytes > self.budget {
             return; // larger than the whole budget: serve it, don't cache it
         }
@@ -205,7 +210,7 @@ impl ShardCache {
             }
             let victim = inner.lru.remove(0);
             if let Some(old) = inner.map.remove(&victim) {
-                inner.bytes -= old.len() * 4;
+                inner.bytes -= old.len();
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -267,6 +272,51 @@ mod tests {
         // Shard 0 was evicted; the most recent two remain.
         assert!(!cache.contains(0));
         assert!(cache.contains(1) && cache.contains(2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quantized_shards_stay_encoded_and_stretch_the_budget() {
+        use crate::store::{PayloadDtype, StoreMeta};
+        let dir = std::env::temp_dir()
+            .join(format!("grass_shard_cache_f16_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let meta = StoreMeta {
+            k: 4,
+            n: 0,
+            shard_rows: 4,
+            method: "edge".into(),
+            seed: 0,
+            model: String::new(),
+            input_dim: 0,
+            layer_dims: vec![],
+            density: 1.0,
+            dtype: PayloadDtype::F16,
+        };
+        let mut w = crate::store::StoreWriter::create_described(&dir, meta).unwrap();
+        for i in 0..12 {
+            // Small integers are exactly representable in f16, so warm
+            // reads must match disk bit-for-bit.
+            let row: Vec<f32> = (0..4).map(|j| (i * 4 + j) as f32).collect();
+            w.push(&row).unwrap();
+        }
+        w.finish().unwrap();
+        let mut reader = StoreReader::open(&dir).unwrap();
+        let plain = reader.read_all().unwrap();
+        // 128 bytes held only two f32 shards (64 B each); the same budget
+        // holds all three f16 shards (32 B each).
+        let cache = Arc::new(ShardCache::new(128));
+        reader.attach_cache(cache.clone());
+        let warm1 = reader.read_all().unwrap();
+        let warm2 = reader.read_all().unwrap();
+        assert_eq!(plain, warm1);
+        assert_eq!(plain, warm2);
+        let stats = cache.stats();
+        assert_eq!(stats.resident_shards, 3, "encoded f16 shards all fit");
+        assert_eq!(stats.resident_bytes, 12 * 4 * 2, "resident bytes are encoded");
+        assert_eq!(stats.evictions, 0);
+        assert_eq!(stats.misses, 3);
+        assert_eq!(stats.hits, 3, "second pass fully warm");
         std::fs::remove_dir_all(&dir).ok();
     }
 

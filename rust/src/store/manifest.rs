@@ -31,10 +31,15 @@ pub struct ShardEntry {
 
 /// The parsed manifest. `precond_crc` is recorded by `grass fit` when it
 /// writes `precond.bin`, so artifact loads verify end-to-end integrity.
+/// `dtype` names the payload codec the recorded byte lengths and CRC32C
+/// values were computed over (absent on legacy manifests, meaning raw
+/// f32 rows), so integrity tooling can size-check shards without
+/// consulting `store.json`.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Manifest {
     pub shards: Vec<ShardEntry>,
     pub precond_crc: Option<u32>,
+    pub dtype: Option<String>,
 }
 
 impl Manifest {
@@ -87,7 +92,15 @@ impl Manifest {
             });
         }
         let precond_crc = j.get("precond_crc").and_then(|v| v.as_u64()).map(|v| v as u32);
-        Ok(Some(Self { shards, precond_crc }))
+        let dtype = j
+            .get("dtype")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string());
+        Ok(Some(Self {
+            shards,
+            precond_crc,
+            dtype,
+        }))
     }
 
     fn to_json(&self) -> Json {
@@ -110,6 +123,9 @@ impl Manifest {
         ];
         if let Some(crc) = self.precond_crc {
             pairs.push(("precond_crc", Json::Num(crc as f64)));
+        }
+        if let Some(dtype) = &self.dtype {
+            pairs.push(("dtype", Json::Str(dtype.clone())));
         }
         Json::obj(pairs)
     }
@@ -183,11 +199,20 @@ mod tests {
                 ShardEntry { rows: 2, bytes: 32, crc32c: 7 },
             ],
             precond_crc: Some(0xFFFF_FFFF),
+            dtype: Some("f16".to_string()),
         };
         m.save(&dir).unwrap();
         let back = Manifest::load(&dir).unwrap().unwrap();
         assert_eq!(back, m);
         assert_eq!(back.committed_rows(), 6);
+        // Legacy manifests without the dtype key read back as None.
+        std::fs::write(
+            dir.join(MANIFEST_FILE),
+            r#"{"version": 1, "shards": []}"#,
+        )
+        .unwrap();
+        let legacy = Manifest::load(&dir).unwrap().unwrap();
+        assert_eq!(legacy.dtype, None);
         // No stray tmp file survives the atomic rewrite.
         assert!(!dir.join("manifest.json.tmp").exists());
         std::fs::remove_dir_all(&dir).ok();

@@ -1,8 +1,10 @@
 //! Sharded on-disk compressed-gradient store — the cache-stage output.
 //!
 //! Layout: a store directory holds `store.json` (metadata: k, n, shard
-//! size, method spec) plus `shard_NNNN.bin` files of raw little-endian f32
-//! rows, a checksummed integrity [`manifest`] (`manifest.json`), and
+//! size, method spec, payload dtype) plus `shard_NNNN.bin` files of rows
+//! encoded per the store's [`PayloadDtype`] (little-endian f32 by default;
+//! f16/bf16/int8 codecs halve or quarter the bytes — see [`quant`]), a
+//! checksummed integrity [`manifest`] (`manifest.json`), and
 //! optionally a fitted-preconditioner artifact ([`PRECOND_FILE`], written
 //! by `grass fit`). The writer streams rows in order with a bounded
 //! in-memory buffer (backpressure comes from the coordinator's bounded
@@ -10,8 +12,12 @@
 //! → manifest append — so a killed cache run loses at most the shard in
 //! flight and `grass cache --resume` restarts from the first missing row.
 //! The reader iterates shard-by-shard so attribution never needs the whole
-//! cache in memory — at Llama scale the cache is hundreds of GB (n·k·4
-//! bytes) and this layout is what makes the attribute stage streamable.
+//! cache in memory — at Llama scale the cache is hundreds of GB
+//! (n · row_bytes, where row_bytes is 4k for f32 down to 4+k for int8) and
+//! this layout is what makes the attribute stage streamable. Decoding is
+//! fused into the read itself: quantized payloads dequantize straight into
+//! the caller's f32 block buffer, never materializing a second copy of the
+//! shard.
 //! Streaming reads can go through a [`retry`] guard for transient-error
 //! backoff and degraded-mode (quarantine-and-continue) scoring.
 
@@ -20,6 +26,7 @@ pub mod error;
 #[cfg(any(test, feature = "fault-injection"))]
 pub mod faults;
 pub mod manifest;
+pub mod quant;
 pub mod retry;
 
 pub use checksum::{crc32c, Crc32c};
@@ -27,6 +34,7 @@ pub use error::{StoreError, StoreErrorKind};
 #[cfg(any(test, feature = "fault-injection"))]
 pub use faults::{FaultKind, FaultPlan};
 pub use manifest::{Manifest, ShardEntry, MANIFEST_FILE};
+pub use quant::PayloadDtype;
 pub use retry::{ReadGuard, ReadLog, RetryPolicy};
 
 use crate::models::shapes::ModelShapes;
@@ -82,6 +90,9 @@ pub struct StoreMeta {
     /// caches record their `--density` here so attribute-time queries
     /// regenerate from the same sparse substrate; 1.0 = dense).
     pub density: f64,
+    /// On-disk payload codec (see [`quant`]). Legacy stores carry no
+    /// `dtype` key and default to [`PayloadDtype::F32`].
+    pub dtype: PayloadDtype,
 }
 
 impl StoreMeta {
@@ -107,7 +118,13 @@ impl StoreMeta {
                 vec![]
             },
             density: 1.0,
+            dtype: PayloadDtype::F32,
         })
+    }
+
+    /// Encoded bytes of one row under this store's payload dtype.
+    pub fn row_bytes(&self) -> usize {
+        self.dtype.row_bytes(self.k)
     }
 
     /// Parse the stored method string back into a [`MethodSpec`].
@@ -179,6 +196,7 @@ impl StoreMeta {
             ("input_dim", Json::Num(self.input_dim as f64)),
             ("layer_dims", Json::Arr(layers)),
             ("density", Json::Num(self.density)),
+            ("dtype", Json::Str(self.dtype.as_str().to_string())),
         ])
     }
 
@@ -213,6 +231,12 @@ impl StoreMeta {
             layer_dims,
             // Pre-sparsity stores carry no density field: treat as dense.
             density: j.get("density").and_then(|v| v.as_f64()).unwrap_or(1.0),
+            // Pre-quantization stores carry no dtype field: raw f32 rows.
+            dtype: match j.get("dtype").and_then(|v| v.as_str()) {
+                Some(s) => PayloadDtype::parse(s)
+                    .context("store.json records an unreadable payload dtype")?,
+                None => PayloadDtype::F32,
+            },
         })
     }
 }
@@ -296,6 +320,7 @@ impl StoreWriter {
                 input_dim: 0,
                 layer_dims: vec![],
                 density: 1.0,
+                dtype: PayloadDtype::F32,
             },
         )
     }
@@ -334,7 +359,10 @@ impl StoreWriter {
             &dir.join(PARTIAL_FILE),
             meta.to_json().to_string_pretty().as_bytes(),
         )?;
-        let man = Manifest::default();
+        let man = Manifest {
+            dtype: Some(meta.dtype.as_str().to_string()),
+            ..Manifest::default()
+        };
         man.save(&dir)?;
         Ok(Self {
             dir,
@@ -373,7 +401,8 @@ impl StoreWriter {
             && stored.model == expect.model
             && stored.input_dim == expect.input_dim
             && stored.layer_dims == expect.layer_dims
-            && (stored.density - expect.density).abs() < 1e-12;
+            && (stored.density - expect.density).abs() < 1e-12
+            && stored.dtype == expect.dtype;
         ensure!(
             same,
             "cannot resume at {}: the interrupted run used method '{}' seed {} k {} \
@@ -390,6 +419,16 @@ impl StoreWriter {
             expect.shard_rows
         );
         let mut man = Manifest::load(&dir)?.unwrap_or_default();
+        if let Some(md) = &man.dtype {
+            ensure!(
+                md == stored.dtype.as_str(),
+                "cannot resume at {}: manifest.json records payload dtype '{md}' but the \
+                 interrupted run used '{}' — delete the directory to start over",
+                dir.display(),
+                stored.dtype
+            );
+        }
+        man.dtype = Some(stored.dtype.as_str().to_string());
         // Validate committed shards in order; the first invalid one (and
         // everything after it) is discarded and rewritten.
         let mut keep = 0usize;
@@ -398,7 +437,7 @@ impl StoreWriter {
             let good = match std::fs::read(&path) {
                 Ok(bytes) => {
                     bytes.len() as u64 == entry.bytes
-                        && entry.bytes == (entry.rows * stored.k * 4) as u64
+                        && entry.bytes == (entry.rows * stored.row_bytes()) as u64
                         && crc32c(&bytes) == entry.crc32c
                 }
                 Err(_) => false,
@@ -465,13 +504,13 @@ impl StoreWriter {
         if full {
             self.roll()?;
         }
+        let dtype = self.meta.dtype;
         let s = self.current.as_mut().unwrap();
-        // Little-endian f32; safe, portable serialisation. The bytes feed
-        // the shard's running CRC32C as they are written.
-        let mut buf = Vec::with_capacity(row.len() * 4);
-        for &v in row {
-            buf.extend_from_slice(&v.to_le_bytes());
-        }
+        // Encode per the store's payload dtype (raw little-endian f32 by
+        // default). The encoded bytes feed the shard's running CRC32C as
+        // they are written, so checksums always cover what's on disk.
+        let mut buf = Vec::with_capacity(dtype.row_bytes(row.len()));
+        dtype.encode_row(row, &mut buf);
         s.file.write_all(&buf)?;
         s.crc.update(&buf);
         s.rows += 1;
@@ -968,7 +1007,7 @@ impl StoreReader {
         for idx in 0..self.num_shards() {
             let path = shard_path(&self.dir, idx);
             let rows = (self.meta.n - idx * shard_rows).min(shard_rows);
-            let expected_len = (rows * self.meta.k * 4) as u64;
+            let expected_len = (rows * self.meta.row_bytes()) as u64;
             let status = match std::fs::read(&path) {
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => ShardStatus::Missing,
                 Err(e) => {
@@ -1030,11 +1069,14 @@ impl StoreReader {
     /// checksum when an artifact is present.
     pub fn write_manifest(&mut self) -> Result<&Manifest> {
         let shard_rows = self.meta.shard_rows.max(1);
-        let mut man = Manifest::default();
+        let mut man = Manifest {
+            dtype: Some(self.meta.dtype.as_str().to_string()),
+            ..Manifest::default()
+        };
         for idx in 0..self.num_shards() {
             let path = shard_path(&self.dir, idx);
             let rows = (self.meta.n - idx * shard_rows).min(shard_rows);
-            let expected = (rows * self.meta.k * 4) as u64;
+            let expected = (rows * self.meta.row_bytes()) as u64;
             let bytes = std::fs::read(&path)
                 .with_context(|| format!("reading shard {idx} at {}", path.display()))?;
             ensure!(
@@ -1110,12 +1152,18 @@ impl StoreReader {
             ));
         }
         if let Some(cache) = &self.cache {
-            // Warm path: the whole shard is (or becomes) resident; load
-            // failures fall through as typed errors so retry/quarantine
-            // still see them — the cache never holds a failed load.
+            // Warm path: the whole shard is (or becomes) resident in its
+            // *encoded* form — quantized stores stretch the byte budget
+            // 2–4× — and the requested rows decode straight into the
+            // caller's buffer. Load failures fall through as typed errors
+            // so retry/quarantine still see them — the cache never holds a
+            // failed load.
             let data = cache.get_or_load(self, shard)?;
-            let off = row_in_shard * k;
-            buf[..rows * k].copy_from_slice(&data[off..off + rows * k]);
+            let rb = self.meta.row_bytes();
+            let off = row_in_shard * rb;
+            self.meta
+                .dtype
+                .decode_rows(&data[off..off + rows * rb], k, rows, &mut buf[..rows * k]);
             cache.hint_next(shard, self.num_shards());
             return Ok(());
         }
@@ -1123,9 +1171,13 @@ impl StoreReader {
     }
 
     /// The uncached block read: fault hook, full-shard size check, then a
-    /// seek + staged read. [`crate::serve::ShardCache`] misses land here
-    /// (via [`StoreReader::read_shard_uncached`]) so injected faults and
-    /// truncation detection behave identically with the cache attached.
+    /// seek + staged read with decode fused in — encoded bytes stream
+    /// through a fixed staging buffer and dequantize straight into `buf`,
+    /// so a quantized shard never materializes a second f32 copy.
+    /// [`crate::serve::ShardCache`] misses land on the same fault hook and
+    /// size check (via [`StoreReader::read_shard_bytes_uncached`]) so
+    /// injected faults and truncation detection behave identically with
+    /// the cache attached.
     fn read_rows_from_disk(
         &self,
         shard: usize,
@@ -1134,6 +1186,8 @@ impl StoreReader {
         buf: &mut [f32],
     ) -> std::result::Result<(), StoreError> {
         let k = self.meta.k;
+        let dtype = self.meta.dtype;
+        let row_bytes = dtype.row_bytes(k);
         let shard_rows = self.meta.shard_rows.max(1);
         #[cfg(any(test, feature = "fault-injection"))]
         if let Some(plan) = &self.faults {
@@ -1141,7 +1195,7 @@ impl StoreReader {
         }
         let path = shard_path(&self.dir, shard);
         let rows_in_shard = (self.meta.n - shard * shard_rows).min(shard_rows);
-        let expected = (rows_in_shard * k * 4) as u64;
+        let expected = (rows_in_shard * row_bytes) as u64;
         // One stat + one open per block, deliberately: the full-shard size
         // check is what turns a partially-truncated shard into a
         // descriptive error even when this block's own bytes still read
@@ -1165,32 +1219,66 @@ impl StoreReader {
         let mut f = std::fs::File::open(&path).map_err(|e| {
             StoreError::from_io(Some(shard), format!("shard {shard} at {}", path.display()), e)
         })?;
-        f.seek(SeekFrom::Start((row_in_shard * k * 4) as u64))
+        f.seek(SeekFrom::Start((row_in_shard * row_bytes) as u64))
             .map_err(|e| {
                 StoreError::from_io(Some(shard), format!("shard {shard}: seek failed"), e)
             })?;
         // Fixed staging buffer: the read path allocates nothing, so
         // per-worker streaming buffers are the only resident state.
-        let total = rows * k;
-        let mut done = 0usize;
         let mut bytes = [0u8; 16384];
-        while done < total {
-            let take = (total - done).min(bytes.len() / 4);
-            let nb = take * 4;
-            f.read_exact(&mut bytes[..nb]).map_err(|e| {
-                StoreError::from_io(
-                    Some(shard),
-                    format!("shard {shard}: short read at value {done} of {total}"),
-                    e,
-                )
-            })?;
-            for (dst, ch) in buf[done..done + take]
-                .iter_mut()
-                .zip(bytes[..nb].chunks_exact(4))
-            {
-                *dst = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        match dtype.elem_bytes() {
+            Some(eb) => {
+                // Uniform-width payload: stream `total` elements through
+                // the staging buffer, decoding each filled chunk in place.
+                let total = rows * k;
+                let mut done = 0usize;
+                while done < total {
+                    let take = (total - done).min(bytes.len() / eb);
+                    let nb = take * eb;
+                    f.read_exact(&mut bytes[..nb]).map_err(|e| {
+                        StoreError::from_io(
+                            Some(shard),
+                            format!("shard {shard}: short read at value {done} of {total}"),
+                            e,
+                        )
+                    })?;
+                    dtype.decode_elems(&bytes[..nb], &mut buf[done..done + take]);
+                    done += take;
+                }
             }
-            done += take;
+            None => {
+                // Row-framed int8 payload: each row opens with its 4-byte
+                // f32 scale, then k one-byte codes stream through the
+                // staging buffer.
+                for r in 0..rows {
+                    let mut hdr = [0u8; 4];
+                    f.read_exact(&mut hdr).map_err(|e| {
+                        StoreError::from_io(
+                            Some(shard),
+                            format!("shard {shard}: short read at row {r} of {rows} (scale)"),
+                            e,
+                        )
+                    })?;
+                    let scale = f32::from_le_bytes(hdr);
+                    let mut done = 0usize;
+                    while done < k {
+                        let take = (k - done).min(bytes.len());
+                        f.read_exact(&mut bytes[..take]).map_err(|e| {
+                            StoreError::from_io(
+                                Some(shard),
+                                format!("shard {shard}: short read at row {r} value {done} of {k}"),
+                                e,
+                            )
+                        })?;
+                        crate::linalg::quantize::dequantize_i8(
+                            &bytes[..take],
+                            scale,
+                            &mut buf[r * k + done..r * k + done + take],
+                        );
+                        done += take;
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -1213,13 +1301,17 @@ impl StoreReader {
         Ok((start, data))
     }
 
-    /// Read shard `idx` fully, bypassing any attached [`crate::serve::ShardCache`].
-    /// This is the cache's own load path — it must hit the disk (and the
-    /// fault hook) rather than recurse into itself.
-    pub(crate) fn read_shard_uncached(
+    /// Read shard `idx`'s raw *encoded* payload, bypassing any attached
+    /// [`crate::serve::ShardCache`]. This is the cache's own load path —
+    /// it must hit the disk (and the fault hook) rather than recurse into
+    /// itself, and it keeps the bytes encoded so resident shards cost
+    /// `rows × row_bytes` instead of `rows × k × 4`. The same full-shard
+    /// size check as the decoding path guards it, so truncation surfaces
+    /// identically with the cache attached.
+    pub(crate) fn read_shard_bytes_uncached(
         &self,
         idx: usize,
-    ) -> std::result::Result<(usize, Vec<f32>), StoreError> {
+    ) -> std::result::Result<(usize, Vec<u8>), StoreError> {
         let shard_rows = self.meta.shard_rows.max(1);
         let start = idx * shard_rows;
         if start >= self.meta.n {
@@ -1231,9 +1323,28 @@ impl StoreReader {
                 ),
             ));
         }
+        #[cfg(any(test, feature = "fault-injection"))]
+        if let Some(plan) = &self.faults {
+            plan.check_read(idx)?;
+        }
         let rows = (self.meta.n - start).min(shard_rows);
-        let mut data = vec![0.0f32; rows * self.meta.k];
-        self.read_rows_from_disk(idx, 0, rows, &mut data)?;
+        let k = self.meta.k;
+        let expected = (rows * self.meta.row_bytes()) as u64;
+        let path = shard_path(&self.dir, idx);
+        let data = std::fs::read(&path).map_err(|e| {
+            StoreError::from_io(Some(idx), format!("shard {idx} at {}", path.display()), e)
+        })?;
+        if data.len() as u64 != expected {
+            return Err(StoreError::corrupt(
+                Some(idx),
+                format!(
+                    "shard {idx} at {} holds {} bytes but {rows} rows × k = {k} \
+                     columns require {expected} bytes — the shard file is truncated or corrupted",
+                    path.display(),
+                    data.len()
+                ),
+            ));
+        }
         Ok((start, data))
     }
 
@@ -1480,6 +1591,7 @@ mod tests {
                 input_dim: 8,
                 layer_dims: vec![],
                 density: 0.01,
+                dtype: PayloadDtype::F32,
             },
         )
         .unwrap();
@@ -1495,6 +1607,85 @@ mod tests {
         .unwrap();
         let m = StoreMeta::from_json(&legacy).unwrap();
         assert_eq!(m.density, 1.0);
+        // …and a pre-quantization store.json without a dtype reads as f32.
+        assert_eq!(m.dtype, PayloadDtype::F32);
+        assert_eq!(m.row_bytes(), 4);
+    }
+
+    #[test]
+    fn quantized_store_roundtrips_with_dtype_sized_shards() {
+        use crate::sketch::rng::Pcg;
+        for (dtype, tag, rel) in [
+            (PayloadDtype::F16, "f16", 1e-3f32),
+            (PayloadDtype::Bf16, "bf16", 4e-3),
+            (PayloadDtype::Int8, "int8", 1e-2),
+        ] {
+            let dir = tmpdir(&format!("quant_{tag}"));
+            let k = 6;
+            let n = 10;
+            let mut rng = Pcg::new(11);
+            let rows: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+            let mut meta = bare_meta(k, "rm:k=6", 3, 4);
+            meta.dtype = dtype;
+            let mut w = StoreWriter::create_described(&dir, meta).unwrap();
+            w.push_batch(&rows).unwrap();
+            w.finish().unwrap();
+
+            let r = StoreReader::open(&dir).unwrap();
+            assert_eq!(r.meta.dtype, dtype);
+            // Shards hold encoded bytes: sizes and checksums verify.
+            let man = Manifest::load(&dir).unwrap().unwrap();
+            assert_eq!(man.shards[0].bytes, (4 * dtype.row_bytes(k)) as u64);
+            assert_eq!(man.dtype.as_deref(), Some(dtype.as_str()));
+            assert!(r.verify_checksums().unwrap().all_ok());
+            // Decoded rows land within the dtype's error envelope; the
+            // bound is relative for the float dtypes and row-absmax-scaled
+            // for int8.
+            let all = r.read_all().unwrap();
+            assert_eq!(all.len(), n * k);
+            for (i, (&v, &d)) in rows.iter().zip(&all).enumerate() {
+                let row = &rows[(i / k) * k..(i / k + 1) * k];
+                let absmax = row.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                let tol = match dtype {
+                    PayloadDtype::Int8 => rel * absmax + 1e-7,
+                    _ => rel * v.abs() + 1e-7,
+                };
+                assert!((v - d).abs() <= tol, "{tag} elem {i}: {v} vs {d}");
+            }
+            // Partial-block reads agree with the full decode.
+            let mut block = vec![0.0f32; 2 * k];
+            r.read_rows(5, 2, &mut block).unwrap();
+            assert_eq!(block, all[5 * k..7 * k]);
+            std::fs::remove_dir_all(&dir).unwrap();
+        }
+    }
+
+    #[test]
+    fn resume_refuses_a_dtype_switch_and_resumes_matching_dtype() {
+        let dir = tmpdir("resume_dtype");
+        let mut meta = bare_meta(2, "rm:k=2", 4, 2);
+        meta.dtype = PayloadDtype::F16;
+        let mut w = StoreWriter::create_described(&dir, meta.clone()).unwrap();
+        for i in 0..3 {
+            w.push(&[i as f32, 0.25]).unwrap();
+        }
+        drop(w);
+        // Same run but asking for f32 payloads: refused.
+        let err = format!(
+            "{:#}",
+            StoreWriter::resume(&dir, &bare_meta(2, "rm:k=2", 4, 2)).unwrap_err()
+        );
+        assert!(err.contains("cannot resume"), "{err}");
+        // The matching dtype resumes from the committed full shard.
+        let (mut w, committed) = StoreWriter::resume(&dir, &meta).unwrap();
+        assert_eq!(committed, 2);
+        for i in committed..3 {
+            w.push(&[i as f32, 0.25]).unwrap();
+        }
+        let done = w.finish().unwrap();
+        assert_eq!(done.n, 3);
+        assert_eq!(done.dtype, PayloadDtype::F16);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
@@ -1735,6 +1926,7 @@ mod tests {
             input_dim: 0,
             layer_dims: vec![],
             density: 1.0,
+            dtype: PayloadDtype::F32,
         }
     }
 

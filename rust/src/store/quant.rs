@@ -1,0 +1,275 @@
+//! Payload dtype codecs: how a shard's `rows × k` f32 block is laid out
+//! on disk. The dtype is a first-class store property — recorded in
+//! `store.json` and `manifest.json`, encoded by [`crate::store::StoreWriter`]
+//! at commit time, and decoded on read *inside* the streaming visitors so
+//! scorers consume f32 tiles without a second materialized copy of the
+//! shard. Checksums always cover the encoded bytes.
+//!
+//! | dtype  | bytes/row   | codec                                      |
+//! |--------|-------------|--------------------------------------------|
+//! | `f32`  | `4k`        | raw little-endian f32 (legacy default)     |
+//! | `f16`  | `2k`        | IEEE binary16, round-to-nearest-even       |
+//! | `bf16` | `2k`        | bfloat16 (top f32 bits), round-to-nearest-even |
+//! | `int8` | `4 + k`     | per-row absmax scale (f32 LE header) + k symmetric int8 codes |
+//!
+//! Error model: f16 keeps ≤ 2⁻¹¹ relative error per element in its normal
+//! range, bf16 ≤ 2⁻⁸, and int8 ≤ absmax/254 absolute per element (the
+//! per-row scale makes this ≤ 1/254 of the row's largest magnitude).
+//! All three are exact at 0.0, so ReLU-induced gradient sparsity survives
+//! quantization bit-for-bit. The numeric inner loops live in
+//! [`crate::linalg::quantize`].
+
+use crate::linalg::quantize::{
+    bf16_bits_to_f32, dequantize_i8, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits,
+    i8_row_scale, quantize_i8,
+};
+use anyhow::{bail, Result};
+
+/// On-disk payload element type of a shard store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PayloadDtype {
+    /// Raw little-endian f32 rows — the legacy (and default) layout.
+    #[default]
+    F32,
+    /// IEEE binary16: half the bytes, ≤ 2⁻¹¹ relative error.
+    F16,
+    /// bfloat16: half the bytes, f32's exponent range, ≤ 2⁻⁸ relative error.
+    Bf16,
+    /// Symmetric int8 against a per-row absmax scale: ~quarter the bytes.
+    Int8,
+}
+
+impl PayloadDtype {
+    /// Parse a CLI/JSON dtype name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(PayloadDtype::F32),
+            "f16" => Ok(PayloadDtype::F16),
+            "bf16" => Ok(PayloadDtype::Bf16),
+            "int8" | "i8" => Ok(PayloadDtype::Int8),
+            other => bail!(
+                "unknown payload dtype '{other}' — expected one of f32, f16, bf16, int8"
+            ),
+        }
+    }
+
+    /// Canonical name (what `store.json` / `manifest.json` record).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PayloadDtype::F32 => "f32",
+            PayloadDtype::F16 => "f16",
+            PayloadDtype::Bf16 => "bf16",
+            PayloadDtype::Int8 => "int8",
+        }
+    }
+
+    /// Encoded bytes of one `k`-column row.
+    pub fn row_bytes(self, k: usize) -> usize {
+        match self {
+            PayloadDtype::F32 => 4 * k,
+            PayloadDtype::F16 | PayloadDtype::Bf16 => 2 * k,
+            // A 4-byte f32 scale header precedes the row's codes.
+            PayloadDtype::Int8 => 4 + k,
+        }
+    }
+
+    /// Encoded bytes per element for uniform-width dtypes; `None` for
+    /// int8, whose per-row scale header makes the payload row-framed.
+    pub fn elem_bytes(self) -> Option<usize> {
+        match self {
+            PayloadDtype::F32 => Some(4),
+            PayloadDtype::F16 | PayloadDtype::Bf16 => Some(2),
+            PayloadDtype::Int8 => None,
+        }
+    }
+
+    /// Whether decode(encode(x)) == x for every finite input.
+    pub fn is_lossless(self) -> bool {
+        matches!(self, PayloadDtype::F32)
+    }
+
+    /// Encode one row, appending exactly [`PayloadDtype::row_bytes`] bytes.
+    pub fn encode_row(self, row: &[f32], out: &mut Vec<u8>) {
+        match self {
+            PayloadDtype::F32 => {
+                for &v in row {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            PayloadDtype::F16 => {
+                for &v in row {
+                    out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+                }
+            }
+            PayloadDtype::Bf16 => {
+                for &v in row {
+                    out.extend_from_slice(&f32_to_bf16_bits(v).to_le_bytes());
+                }
+            }
+            PayloadDtype::Int8 => {
+                let scale = i8_row_scale(row);
+                out.extend_from_slice(&scale.to_le_bytes());
+                quantize_i8(row, scale, out);
+            }
+        }
+    }
+
+    /// Decode a contiguous run of elements of a uniform-width dtype
+    /// (`bytes.len() == out.len() × elem_bytes`). The disk read path
+    /// streams through a fixed staging buffer and decodes chunk by chunk
+    /// with this, fusing dequantization into the read itself.
+    ///
+    /// # Panics
+    /// On int8, which is row-framed — use [`PayloadDtype::decode_rows`].
+    pub fn decode_elems(self, bytes: &[u8], out: &mut [f32]) {
+        match self {
+            PayloadDtype::F32 => {
+                for (dst, ch) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+                    *dst = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+                }
+            }
+            PayloadDtype::F16 => {
+                for (dst, ch) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                    *dst = f16_bits_to_f32(u16::from_le_bytes([ch[0], ch[1]]));
+                }
+            }
+            PayloadDtype::Bf16 => {
+                for (dst, ch) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                    *dst = bf16_bits_to_f32(u16::from_le_bytes([ch[0], ch[1]]));
+                }
+            }
+            PayloadDtype::Int8 => {
+                panic!("int8 payloads are row-framed; decode_rows must be used")
+            }
+        }
+    }
+
+    /// Decode `rows` whole rows (`bytes.len() == rows × row_bytes(k)`)
+    /// into `out[..rows × k]`. This is the warm-cache read path: resident
+    /// shards stay encoded and each requested block decodes straight into
+    /// the caller's f32 buffer.
+    pub fn decode_rows(self, bytes: &[u8], k: usize, rows: usize, out: &mut [f32]) {
+        debug_assert_eq!(bytes.len(), rows * self.row_bytes(k));
+        debug_assert!(out.len() >= rows * k);
+        match self {
+            PayloadDtype::Int8 => {
+                let rb = self.row_bytes(k);
+                for r in 0..rows {
+                    let row = &bytes[r * rb..(r + 1) * rb];
+                    let scale = f32::from_le_bytes([row[0], row[1], row[2], row[3]]);
+                    dequantize_i8(&row[4..], scale, &mut out[r * k..(r + 1) * k]);
+                }
+            }
+            _ => self.decode_elems(&bytes[..rows * self.row_bytes(k)], &mut out[..rows * k]),
+        }
+    }
+}
+
+impl std::fmt::Display for PayloadDtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        (0..n).map(|_| rng.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn parse_display_and_row_bytes() {
+        for (name, dt, rb) in [
+            ("f32", PayloadDtype::F32, 4 * 16),
+            ("f16", PayloadDtype::F16, 2 * 16),
+            ("bf16", PayloadDtype::Bf16, 2 * 16),
+            ("int8", PayloadDtype::Int8, 4 + 16),
+        ] {
+            assert_eq!(PayloadDtype::parse(name).unwrap(), dt);
+            assert_eq!(dt.as_str(), name);
+            assert_eq!(dt.to_string(), name);
+            assert_eq!(dt.row_bytes(16), rb);
+        }
+        assert_eq!(PayloadDtype::parse("i8").unwrap(), PayloadDtype::Int8);
+        assert_eq!(PayloadDtype::default(), PayloadDtype::F32);
+        let err = format!("{:#}", PayloadDtype::parse("f64").unwrap_err());
+        assert!(err.contains("f64") && err.contains("bf16"), "{err}");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_per_dtype() {
+        let k = 24;
+        let rows = 5;
+        let data = gaussian(rows * k, 13);
+        for dt in [
+            PayloadDtype::F32,
+            PayloadDtype::F16,
+            PayloadDtype::Bf16,
+            PayloadDtype::Int8,
+        ] {
+            let mut enc = Vec::new();
+            for row in data.chunks(k) {
+                dt.encode_row(row, &mut enc);
+            }
+            assert_eq!(enc.len(), rows * dt.row_bytes(k), "{dt}");
+            let mut dec = vec![0.0f32; rows * k];
+            dt.decode_rows(&enc, k, rows, &mut dec);
+            for (i, (&v, &d)) in data.iter().zip(&dec).enumerate() {
+                let tol = match dt {
+                    PayloadDtype::F32 => 0.0,
+                    PayloadDtype::F16 => 1e-3 * v.abs() + 1e-7,
+                    PayloadDtype::Bf16 => 4e-3 * v.abs() + 1e-7,
+                    // Per-row scale: error bounded by the row's absmax.
+                    PayloadDtype::Int8 => {
+                        let row = &data[(i / k) * k..(i / k + 1) * k];
+                        row.iter().fold(0.0f32, |m, x| m.max(x.abs())) / 254.0 + 1e-7
+                    }
+                };
+                assert!((v - d).abs() <= tol, "{dt} elem {i}: {v} vs {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_are_exact_under_every_dtype() {
+        let k = 8;
+        let zeros = vec![0.0f32; k];
+        for dt in [
+            PayloadDtype::F32,
+            PayloadDtype::F16,
+            PayloadDtype::Bf16,
+            PayloadDtype::Int8,
+        ] {
+            let mut enc = Vec::new();
+            dt.encode_row(&zeros, &mut enc);
+            let mut dec = vec![1.0f32; k];
+            dt.decode_rows(&enc, k, 1, &mut dec);
+            assert!(dec.iter().all(|&v| v == 0.0), "{dt}: {dec:?}");
+        }
+    }
+
+    #[test]
+    fn decode_elems_matches_decode_rows_for_uniform_dtypes() {
+        let k = 6;
+        let data = gaussian(3 * k, 29);
+        for dt in [PayloadDtype::F32, PayloadDtype::F16, PayloadDtype::Bf16] {
+            let mut enc = Vec::new();
+            for row in data.chunks(k) {
+                dt.encode_row(row, &mut enc);
+            }
+            let mut a = vec![0.0f32; 3 * k];
+            let mut b = vec![0.0f32; 3 * k];
+            dt.decode_rows(&enc, k, 3, &mut a);
+            // Element-wise decode over an arbitrary chunking agrees.
+            let eb = dt.elem_bytes().unwrap();
+            let split = 7 * eb;
+            dt.decode_elems(&enc[..split], &mut b[..7]);
+            dt.decode_elems(&enc[split..], &mut b[7..]);
+            assert_eq!(a, b, "{dt}");
+        }
+    }
+}

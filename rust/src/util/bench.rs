@@ -130,6 +130,13 @@ pub struct BenchRecord {
     /// Shard-cache hit rate in `[0, 1]` of the serving stage, when a warm
     /// [`crate::serve::ShardCache`] was attached.
     pub cache_hit_rate: Option<f64>,
+    /// Payload codec of the store the record was measured against
+    /// (`"f32"`, `"f16"`, `"bf16"`, `"int8"`), when the stage reads a
+    /// quantized shard store.
+    pub dtype: Option<String>,
+    /// Encoded bytes per stored row under that codec, when known — lets
+    /// BENCH_*.json show the bandwidth reduction quantization buys.
+    pub bytes_per_row: Option<f64>,
     /// Free-form extra metrics (e.g. `speedup_vs_per_sample`, `tokens_per_sec`).
     pub extra: Vec<(String, f64)>,
 }
@@ -157,6 +164,8 @@ impl BenchRecord {
             p95_ms: None,
             p99_ms: None,
             cache_hit_rate: None,
+            dtype: None,
+            bytes_per_row: None,
             extra: vec![],
         }
     }
@@ -209,6 +218,15 @@ impl BenchRecord {
         self
     }
 
+    /// Record the payload codec of the measured store and its encoded
+    /// bytes per row (builder style) so quantized-vs-f32 runs are
+    /// distinguishable in `BENCH_*.json` artifacts.
+    pub fn with_dtype(mut self, dtype: &str, bytes_per_row: f64) -> Self {
+        self.dtype = Some(dtype.to_string());
+        self.bytes_per_row = Some(bytes_per_row);
+        self
+    }
+
     fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("method", Json::Str(self.method.clone())),
@@ -250,6 +268,12 @@ impl BenchRecord {
         }
         if let Some(v) = self.cache_hit_rate {
             pairs.push(("cache_hit_rate", Json::Num(v)));
+        }
+        if let Some(d) = &self.dtype {
+            pairs.push(("dtype", Json::Str(d.clone())));
+        }
+        if let Some(v) = self.bytes_per_row {
+            pairs.push(("bytes_per_row", Json::Num(v)));
         }
         for (key, value) in &self.extra {
             pairs.push((key.as_str(), Json::Num(*value)));
@@ -366,6 +390,14 @@ mod tests {
         assert_eq!(j.req("p95_ms").unwrap().as_f64(), Some(9.0));
         assert_eq!(j.req("p99_ms").unwrap().as_f64(), Some(14.0));
         assert_eq!(j.req("cache_hit_rate").unwrap().as_f64(), Some(0.97));
+        // Payload dtype fields are omitted until recorded, then serialized.
+        assert!(j.get("dtype").is_none());
+        assert!(j.get("bytes_per_row").is_none());
+        let r = BenchRecord::from_duration("stream", 10, 64, 64, Duration::from_millis(10))
+            .with_dtype("f16", 128.0);
+        let j = r.to_json();
+        assert_eq!(j.req("dtype").unwrap().as_str(), Some("f16"));
+        assert_eq!(j.req("bytes_per_row").unwrap().as_f64(), Some(128.0));
     }
 
     #[test]

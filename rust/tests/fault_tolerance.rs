@@ -6,7 +6,9 @@
 use grass::attrib::{from_spec, AttributionSpec, Attributor, StreamOpts};
 use grass::sketch::rng::Pcg;
 use grass::sketch::MethodSpec;
-use grass::store::{FaultKind, FaultPlan, RetryPolicy, StoreMeta, StoreReader, StoreWriter};
+use grass::store::{
+    FaultKind, FaultPlan, PayloadDtype, RetryPolicy, StoreMeta, StoreReader, StoreWriter,
+};
 use std::path::{Path, PathBuf};
 use std::process::Command;
 
@@ -32,6 +34,7 @@ fn raw_meta(k: usize, shard_rows: usize) -> StoreMeta {
         input_dim: 0,
         layer_dims: vec![],
         density: 1.0,
+        dtype: PayloadDtype::F32,
     }
 }
 
@@ -355,6 +358,106 @@ fn killed_cli_cache_run_resumes_verifies_and_scores() {
     let top_res = attribute(&res_dir);
     assert!(!top_ref.is_empty());
     assert_eq!(top_ref, top_res);
+    std::fs::remove_dir_all(&ref_dir).ok();
+    std::fs::remove_dir_all(&res_dir).ok();
+}
+
+/// Quantized stores get the same integrity guarantees: manifest CRCs are
+/// computed over the encoded f16 bytes, so a single bit flip in an f16
+/// shard fails `grass verify` with exit 2.
+#[test]
+fn verify_detects_bit_flip_in_f16_shard() {
+    let exe = env!("CARGO_BIN_EXE_grass");
+    let dir = tmpdir("verify_f16");
+    let dir_s = dir.to_str().unwrap();
+    let out = Command::new(exe)
+        .args([
+            "cache", "--model", "synth", "--method", "sjlt:k=32", "--p", "256", "--n", "64",
+            "--seed", "9", "--shard-rows", "16", "--dtype", "f16", "--store", dir_s,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // The encoded shard really is half the f32 size: 16 rows × 32 × 2 B.
+    let victim = dir.join("shard_0001.bin");
+    let mut bytes = std::fs::read(&victim).unwrap();
+    assert_eq!(bytes.len(), 16 * 32 * 2);
+    let out = Command::new(exe).args(["verify", "--store", dir_s]).output().unwrap();
+    assert_eq!(out.status.code(), Some(0), "{}", String::from_utf8_lossy(&out.stdout));
+
+    bytes[17] ^= 0x01; // same length, wrong CRC over the encoded payload
+    std::fs::write(&victim, &bytes).unwrap();
+    let out = Command::new(exe).args(["verify", "--store", dir_s]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2), "{}", String::from_utf8_lossy(&out.stdout));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("verify: FAILED"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The CLI resume contract holds for quantized payloads: a SIGKILLed
+/// `grass cache --dtype f16` run resumed with the same flags produces a
+/// store byte-identical (encoded shards included) to an uninterrupted run.
+#[test]
+fn killed_f16_cli_cache_resumes_byte_identical() {
+    let exe = env!("CARGO_BIN_EXE_grass");
+    let ref_dir = tmpdir("cli_kill_f16_ref");
+    let res_dir = tmpdir("cli_kill_f16_res");
+    let base = |store: &Path| {
+        vec![
+            "cache".to_string(),
+            "--model".into(),
+            "synth".into(),
+            "--method".into(),
+            "factgrass:kin=8,kout=8,kl=16".into(),
+            "--n".into(),
+            "200".into(),
+            "--seed".into(),
+            "5".into(),
+            "--shard-rows".into(),
+            "16".into(),
+            "--dtype".into(),
+            "f16".into(),
+            "--store".into(),
+            store.to_str().unwrap().into(),
+        ]
+    };
+
+    let out = Command::new(exe).args(base(&ref_dir)).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let mut args = base(&res_dir);
+    args.extend(["--throttle-ms".to_string(), "10".to_string()]);
+    let mut child = Command::new(exe).args(&args).spawn().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(500));
+    child.kill().unwrap();
+    child.wait().unwrap();
+    assert!(!res_dir.join("store.json").exists(), "kill landed too late");
+
+    // Resuming under a different dtype is refused with a descriptive
+    // error — the interrupted shards are already f16-encoded.
+    let mut args = base(&res_dir);
+    for a in &mut args {
+        if a == "f16" {
+            *a = "bf16".to_string();
+        }
+    }
+    args.push("--resume".to_string());
+    let out = Command::new(exe).args(&args).output().unwrap();
+    assert!(!out.status.success(), "dtype-switching resume must fail");
+
+    let mut args = base(&res_dir);
+    args.push("--resume".to_string());
+    let out = Command::new(exe).args(&args).output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(out.status.success(), "{stdout}{}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("resuming:"), "{stdout}");
+
+    let out = Command::new(exe)
+        .args(["verify", "--store", res_dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(0));
+    assert_eq!(shard_files(&ref_dir), shard_files(&res_dir));
     std::fs::remove_dir_all(&ref_dir).ok();
     std::fs::remove_dir_all(&res_dir).ok();
 }

@@ -1,0 +1,309 @@
+//! Numerics gate for quantized shard stores: payload codec roundtrip
+//! error pins per dtype (f16/bf16/int8), streamed-score equivalence of
+//! quantized stores against f32 for every scorer in the registry, and
+//! `grass quantize` output parity against a natively quantized cache.
+
+use grass::attrib::{from_spec, AttributionSpec, Attributor, StreamOpts};
+use grass::sketch::rng::Pcg;
+use grass::sketch::MethodSpec;
+use grass::store::{PayloadDtype, StoreMeta, StoreReader, StoreWriter};
+use std::path::PathBuf;
+use std::process::Command;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("grass_quant_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn gaussian(rows: usize, k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..rows * k).map(|_| rng.next_gaussian()).collect()
+}
+
+/// Write a raw `n × k` matrix as a store under the given payload codec.
+fn write_store(dir: &PathBuf, rows: &[f32], k: usize, shard_rows: usize, dtype: PayloadDtype) {
+    let meta = StoreMeta {
+        k,
+        n: 0,
+        shard_rows,
+        method: "raw".to_string(),
+        seed: 0,
+        model: String::new(),
+        input_dim: 0,
+        layer_dims: vec![],
+        density: 1.0,
+        dtype,
+    };
+    let mut w = StoreWriter::create_described(dir, meta).unwrap();
+    w.push_batch(rows).unwrap();
+    w.finish().unwrap();
+}
+
+/// The ISSUE's per-dtype roundtrip pins: f16 within 1e-3 relative, bf16
+/// within its 8-bit-mantissa envelope, int8 within 1e-2 of the row's
+/// absmax (per-row scales), and all three exact at zero.
+#[test]
+fn roundtrip_error_pins_per_dtype() {
+    let (rows, k) = (8usize, 64usize);
+    let mut rng = Pcg::new(3);
+    let mut data: Vec<f32> = (0..rows * k).map(|_| rng.next_gaussian() * 10.0).collect();
+    for v in &mut data[2 * k..3 * k] {
+        *v = 0.0; // one all-zero row: must survive every codec exactly
+    }
+
+    for (dtype, rel) in [(PayloadDtype::F16, 1e-3f32), (PayloadDtype::Bf16, 4e-3)] {
+        let mut enc = Vec::new();
+        for r in data.chunks(k) {
+            dtype.encode_row(r, &mut enc);
+        }
+        assert_eq!(enc.len(), rows * dtype.row_bytes(k), "{dtype} encoded size");
+        let mut dec = vec![0.0f32; rows * k];
+        dtype.decode_rows(&enc, k, rows, &mut dec);
+        for i in 0..rows * k {
+            let err = (dec[i] - data[i]).abs();
+            // + 1e-6 absolute floor: a sample landing in the codec's
+            // subnormal range has bounded absolute, not relative, error.
+            assert!(
+                err <= rel * data[i].abs() + 1e-6,
+                "{dtype} roundtrip at {i}: {} vs {} (err {err})",
+                dec[i],
+                data[i]
+            );
+        }
+        assert!(
+            dec[2 * k..3 * k].iter().all(|&v| v == 0.0),
+            "{dtype} zero row must roundtrip exactly"
+        );
+    }
+
+    let dtype = PayloadDtype::Int8;
+    let mut enc = Vec::new();
+    for r in data.chunks(k) {
+        dtype.encode_row(r, &mut enc);
+    }
+    assert_eq!(enc.len(), rows * (4 + k), "int8 rows carry a 4-byte scale");
+    let mut dec = vec![0.0f32; rows * k];
+    dtype.decode_rows(&enc, k, rows, &mut dec);
+    for (r, row) in data.chunks(k).enumerate() {
+        let absmax = row.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        for (i, &v) in row.iter().enumerate() {
+            let err = (dec[r * k + i] - v).abs();
+            assert!(
+                err <= 1e-2 * absmax,
+                "int8 roundtrip row {r} col {i}: {} vs {v} (err {err}, absmax {absmax})",
+                dec[r * k + i]
+            );
+        }
+    }
+    assert!(
+        dec[2 * k..3 * k].iter().all(|&v| v == 0.0),
+        "int8 zero row must roundtrip exactly (scale 0)"
+    );
+}
+
+/// The tentpole contract: a quantized store streamed through the
+/// dequant-fused read path produces the same scores as the f32 store for
+/// every scorer in the registry, within each codec's error envelope — and
+/// exactly zero for a zero gradient row under every codec.
+#[test]
+fn quantized_streamed_scores_match_f32_for_all_five_scorers() {
+    let (n, k, m) = (96usize, 32usize, 6usize);
+    let zero_row = 5usize;
+    let mut g1 = gaussian(n, k, 21);
+    let mut g2 = gaussian(n, k, 22);
+    for v in &mut g1[zero_row * k..(zero_row + 1) * k] {
+        *v = 0.0;
+    }
+    for v in &mut g2[zero_row * k..(zero_row + 1) * k] {
+        *v = 0.0;
+    }
+    let queries = gaussian(m, k, 23);
+
+    let f1 = tmpdir("eq_f32_a");
+    let f2 = tmpdir("eq_f32_b");
+    write_store(&f1, &g1, k, 7, PayloadDtype::F32); // ragged final shard
+    write_store(&f2, &g2, k, 7, PayloadDtype::F32);
+    let rf1 = StoreReader::open(&f1).unwrap();
+    let rf2 = StoreReader::open(&f2).unwrap();
+    // A budget small enough to force many streamed blocks on every store.
+    let opts = StreamOpts {
+        mem_budget: 3 * 2 * k * 4 * 2,
+        workers: 3,
+        ..StreamOpts::default()
+    };
+
+    for (dtype, tol) in [
+        (PayloadDtype::F16, 3e-2f32),
+        (PayloadDtype::Bf16, 1e-1),
+        (PayloadDtype::Int8, 3e-1),
+    ] {
+        let q1 = tmpdir(&format!("eq_{dtype}_a"));
+        let q2 = tmpdir(&format!("eq_{dtype}_b"));
+        write_store(&q1, &g1, k, 7, dtype);
+        write_store(&q2, &g2, k, 7, dtype);
+        let rq1 = StoreReader::open(&q1).unwrap();
+        let rq2 = StoreReader::open(&q2).unwrap();
+        assert_eq!(rq1.meta.dtype, dtype);
+        assert_eq!(rq1.meta.row_bytes(), dtype.row_bytes(k));
+
+        for scorer in ["if", "graddot", "trak", "tracin", "blockwise"] {
+            let mut aspec = AttributionSpec::new(scorer, MethodSpec::RandomMask { k }, 0);
+            // Heavy damping keeps the preconditioned solve well conditioned
+            // so the codec's input error is not amplified by the inverse.
+            aspec.damping = 0.5;
+            if scorer == "blockwise" {
+                aspec.layout = vec![12, 20];
+            }
+            let ensemble = matches!(scorer, "trak" | "tracin");
+
+            let mut base = from_spec(&aspec).unwrap();
+            base.cache_stream(&rf1, &opts).unwrap();
+            if ensemble {
+                base.cache_stream(&rf2, &opts).unwrap();
+            }
+            let mut quant = from_spec(&aspec).unwrap();
+            quant.cache_stream(&rq1, &opts).unwrap();
+            if ensemble {
+                quant.cache_stream(&rq2, &opts).unwrap();
+            }
+
+            let sb = base.attribute(&queries, m).unwrap();
+            let sq = quant.attribute(&queries, m).unwrap();
+            assert_eq!((sq.m, sq.n), (sb.m, sb.n), "{dtype}/{scorer} shape");
+            for i in 0..m * n {
+                let (a, b) = (sq.scores[i], sb.scores[i]);
+                assert!(
+                    (a - b).abs() <= tol * (1.0 + b.abs()),
+                    "{dtype}/{scorer} score {i}: quantized {a} vs f32 {b}"
+                );
+            }
+            // The zero gradient row scores exactly zero under every codec.
+            for q in 0..m {
+                assert_eq!(
+                    sq.scores[q * n + zero_row],
+                    0.0,
+                    "{dtype}/{scorer} zero row must score exactly 0"
+                );
+            }
+        }
+        std::fs::remove_dir_all(&q1).ok();
+        std::fs::remove_dir_all(&q2).ok();
+    }
+    std::fs::remove_dir_all(&f1).ok();
+    std::fs::remove_dir_all(&f2).ok();
+}
+
+/// `grass quantize` parity: converting an f32 cache offline produces
+/// byte-identical shards to a cache run that used `--dtype` natively
+/// (both encode the same exact f32 rows), and the in-place rewrite leaves
+/// a store that verifies clean and still attributes.
+#[test]
+fn cli_quantize_matches_native_quantized_cache() {
+    let exe = env!("CARGO_BIN_EXE_grass");
+    let dir_f32 = tmpdir("cli_f32");
+    let dir_native = tmpdir("cli_native");
+    let dir_conv = tmpdir("cli_conv");
+    let base_args = |store: &PathBuf, extra: &[&str]| {
+        let mut v = vec![
+            "cache".to_string(),
+            "--model".to_string(),
+            "synth".to_string(),
+            "--method".to_string(),
+            "rm:k=32".to_string(),
+            "--n".to_string(),
+            "40".to_string(),
+            "--p".to_string(),
+            "256".to_string(),
+            "--seed".to_string(),
+            "7".to_string(),
+            "--shard-rows".to_string(),
+            "16".to_string(),
+            "--store".to_string(),
+            store.to_str().unwrap().to_string(),
+        ];
+        v.extend(extra.iter().map(|s| s.to_string()));
+        v
+    };
+    let run = |args: &[String]| {
+        let out = Command::new(exe).args(args).output().expect("spawn grass");
+        assert!(
+            out.status.success(),
+            "grass {:?} failed: {}{}",
+            args,
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+
+    run(&base_args(&dir_f32, &[]));
+    run(&base_args(&dir_native, &["--dtype", "f16"]));
+    let stdout = run(&[
+        "quantize".to_string(),
+        "--store".to_string(),
+        dir_f32.to_str().unwrap().to_string(),
+        "--dtype".to_string(),
+        "f16".to_string(),
+        "--out".to_string(),
+        dir_conv.to_str().unwrap().to_string(),
+    ]);
+    assert!(stdout.contains("f32 → f16"), "{stdout}");
+
+    // Converted shards are byte-identical to the natively quantized cache.
+    for idx in 0..3 {
+        let name = format!("shard_{idx:04}.bin");
+        let a = std::fs::read(dir_conv.join(&name)).unwrap();
+        let b = std::fs::read(dir_native.join(&name)).unwrap();
+        assert_eq!(a.len(), 16 * 32 * 2, "{name} holds 16 f16 rows of k=32");
+        assert_eq!(a, b, "{name} differs between quantize and native cache");
+    }
+    let conv_meta = std::fs::read_to_string(dir_conv.join("store.json")).unwrap();
+    assert!(conv_meta.contains("f16"), "{conv_meta}");
+
+    // In-place rewrite: the f32 source becomes an f16 store that verifies
+    // clean and still attributes through the dequant-fused read path.
+    run(&[
+        "quantize".to_string(),
+        "--store".to_string(),
+        dir_f32.to_str().unwrap().to_string(),
+        "--dtype".to_string(),
+        "f16".to_string(),
+    ]);
+    let meta = std::fs::read_to_string(dir_f32.join("store.json")).unwrap();
+    assert!(meta.contains("f16"), "{meta}");
+    let out = Command::new(exe)
+        .args(["verify", "--store", dir_f32.to_str().unwrap()])
+        .output()
+        .expect("spawn grass verify");
+    assert_eq!(out.status.code(), Some(0), "verify after in-place quantize");
+    let stdout = run(&[
+        "attribute".to_string(),
+        "--store".to_string(),
+        dir_f32.to_str().unwrap().to_string(),
+        "--queries".to_string(),
+        "4".to_string(),
+        "--scorer".to_string(),
+        "graddot".to_string(),
+    ]);
+    assert!(stdout.contains("attributed 4 queries"), "{stdout}");
+
+    // Quantizing an already-lossy store is refused with a descriptive error.
+    let out = Command::new(exe)
+        .args([
+            "quantize",
+            "--store",
+            dir_f32.to_str().unwrap(),
+            "--dtype",
+            "int8",
+        ])
+        .output()
+        .expect("spawn grass quantize lossy");
+    assert!(!out.status.success(), "re-quantizing lossy payloads must fail");
+    let err = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(err.contains("f16"), "{err}");
+
+    std::fs::remove_dir_all(&dir_f32).ok();
+    std::fs::remove_dir_all(&dir_native).ok();
+    std::fs::remove_dir_all(&dir_conv).ok();
+}

@@ -13,7 +13,7 @@ use grass::models::shapes::ModelShapes;
 use grass::serve::proto::{self, ScoreRequest};
 use grass::serve::{spawn, ErrorKind, QueryPayload, Request, Response, ServeConfig};
 use grass::sketch::{MethodSpec, Scratch};
-use grass::store::{StoreMeta, StoreReader, StoreWriter};
+use grass::store::{PayloadDtype, StoreMeta, StoreReader, StoreWriter};
 use grass::util::json::Json;
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpStream};
@@ -29,12 +29,25 @@ fn tmpdir(tag: &str) -> PathBuf {
 /// Cache a flat synthetic store the daemon can serve (model `"synth"`,
 /// geometry recorded, compressed through the spec's bank).
 fn write_synth_store(tag: &str, n: usize, p: usize, seed: u64, shard_rows: usize) -> PathBuf {
+    write_synth_store_dtype(tag, n, p, seed, shard_rows, PayloadDtype::F32)
+}
+
+/// Same store, but committed under an explicit payload codec.
+fn write_synth_store_dtype(
+    tag: &str,
+    n: usize,
+    p: usize,
+    seed: u64,
+    shard_rows: usize,
+    dtype: PayloadDtype,
+) -> PathBuf {
     let dir = tmpdir(tag);
     let spec = MethodSpec::Sjlt { k: 32, s: 1 };
     let shapes = ModelShapes::flat(p);
     let bank = spec.build_bank(&shapes, seed).unwrap();
     let c = bank.as_flat().unwrap();
-    let meta = StoreMeta::describe(&spec, seed, "synth", &shapes, shard_rows).unwrap();
+    let mut meta = StoreMeta::describe(&spec, seed, "synth", &shapes, shard_rows).unwrap();
+    meta.dtype = dtype;
     let mut w = StoreWriter::create_described(&dir, meta).unwrap();
     let rows = SynthGrads::new(p, seed).rows(0, n);
     let mut out = vec![0.0f32; n * c.output_dim()];
@@ -354,6 +367,82 @@ fn admission_and_deadlines_shed_typed_replies_while_serving() {
     assert_eq!(stat(&stats, &["requests", "deadline_exceeded"]), 1.0);
     assert_eq!(stat(&stats, &["requests", "scored"]), 1.0);
     client.ask(&Request::Shutdown { id: 9 });
+    handle.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Serving an f16 store: served scores match the batch path on the same
+/// store to ≤ 1e-6 (both sides decode the identical encoded rows), and
+/// `stats` reports the payload dtype, the encoded bytes-per-row, and a
+/// shard-cache residency that reflects encoded — not dequantized — bytes.
+#[test]
+fn served_f16_store_matches_batch_and_reports_encoded_residency() {
+    let (n, p, seed, m) = (48usize, 256usize, 11u64, 4usize);
+    let dir = write_synth_store_dtype("f16", n, p, seed, 16, PayloadDtype::F16);
+
+    let reader = StoreReader::open(&dir).unwrap();
+    assert_eq!(reader.meta.dtype, PayloadDtype::F16);
+    let k = reader.meta.k;
+    let spec = reader.meta.spec().unwrap();
+    let bank = spec.build_bank(&reader.meta.shapes(), seed).unwrap();
+    let mut aspec = AttributionSpec::new("graddot", spec.clone(), seed);
+    aspec.layout = bank.layer_dims();
+    aspec.precond = Some(PrecondSpec::default_for_scorer("graddot", 1e-3));
+    let mut engine = from_spec(&aspec).unwrap();
+    engine
+        .cache_stream(
+            &reader,
+            &StreamOpts {
+                workers: 2,
+                ..StreamOpts::default()
+            },
+        )
+        .unwrap();
+    let (q, _classes) = synth_queries(&reader.meta, &bank, m).unwrap();
+    let want = engine.attribute(&q, m).unwrap();
+
+    let handle = spawn(quiet_cfg(&dir, &["graddot"])).unwrap();
+    let mut client = Client::connect(handle.addr());
+    let resp = client.ask(&score_req(1, "graddot", m));
+    let Response::Scores(r) = resp else {
+        panic!("expected scores, got {resp:?}");
+    };
+    assert_eq!((r.m, r.n), (m, n));
+    assert!(!r.coverage.is_degraded(), "{:?}", r.coverage);
+    let got = r.scores.as_ref().expect("include_scores was set");
+    for i in 0..m * n {
+        let (a, b) = (got[i], want.scores[i]);
+        assert!(
+            (a - b).abs() <= 1e-6 * (1.0 + b.abs()),
+            "f16 served score {i}: {a} vs batch {b}"
+        );
+    }
+
+    let Response::Stats { stats, .. } = client.ask(&Request::Stats { id: 2 }) else {
+        panic!("expected stats reply");
+    };
+    let dtype = stats
+        .get("store")
+        .and_then(|s| s.get("dtype"))
+        .and_then(|d| d.as_str())
+        .expect("stats.store.dtype");
+    assert_eq!(dtype, "f16");
+    assert_eq!(
+        stat(&stats, &["store", "bytes_per_row"]),
+        (k * 2) as f64,
+        "f16 rows are 2 bytes per element"
+    );
+    // The resident cache holds encoded shard bytes: at most the f16
+    // payload footprint, strictly below what dequantized f32 would cost.
+    let resident = stat(&stats, &["shard_cache", "resident_bytes"]);
+    assert!(resident > 0.0, "ingest must have warmed the shard cache");
+    assert!(
+        resident <= (n * k * 2) as f64,
+        "resident {resident} exceeds the encoded f16 footprint {}",
+        n * k * 2
+    );
+
+    client.ask(&Request::Shutdown { id: 3 });
     handle.join().unwrap();
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -173,15 +173,24 @@ fn truncated_shard_is_a_descriptive_error() {
     f.set_len(full_len - 5).unwrap();
     drop(f);
 
+    // The expected byte count is computed here independently of the
+    // writer: 4 rows × k columns × 4 bytes per f32 element.
+    let expected_bytes = 4 * k * std::mem::size_of::<f32>();
+    assert_eq!(full_len as usize, expected_bytes, "test premise");
+    let actual_bytes = expected_bytes - 5;
+
     let reader = StoreReader::open(&dir).unwrap();
     // Healthy shards still read.
     assert!(reader.read_shard(0).is_ok());
     assert!(reader.read_shard(2).is_ok());
-    // The truncated shard names itself and both byte counts.
+    // The truncated shard names its index, its on-disk path, the row/column
+    // geometry, and both the expected and the actual byte counts.
     let err = format!("{:#}", reader.read_shard(1).unwrap_err());
     assert!(err.contains("shard 1"), "{err}");
-    assert!(err.contains(&full_len.to_string()), "{err}");
-    assert!(err.contains(&(full_len - 5).to_string()), "{err}");
+    assert!(err.contains("shard_0001.bin"), "{err}");
+    assert!(err.contains(&format!("require {expected_bytes} bytes")), "{err}");
+    assert!(err.contains(&format!("holds {actual_bytes} bytes")), "{err}");
+    assert!(err.contains(&format!("4 rows × k = {k}")), "{err}");
     assert!(err.contains("truncated or corrupted"), "{err}");
     // Every whole-store path surfaces the same failure.
     assert!(reader.read_all().is_err());
