@@ -505,6 +505,27 @@ fn serve_bench(records: &mut Vec<BenchRecord>) {
     });
     let qps = requests as f64 / d.as_secs_f64().max(1e-12);
 
+    // Resilience probe: a burst of already-expired requests must shed
+    // with typed replies (never a dropped connection). Availability is
+    // the fraction of all offered score requests answered with scores —
+    // here exactly requests / (requests + burst) when nothing else fails.
+    let burst = 8usize;
+    for i in 0..burst {
+        let resp = ask(Request::Score(ScoreRequest {
+            id: 9000 + i as u64,
+            scorer: "graddot".to_string(),
+            top_k: 5,
+            include_scores: false,
+            self_influence: false,
+            deadline_ms: Some(0),
+            queries: QueryPayload::Synth { m },
+        }));
+        match resp {
+            Response::Error { kind, .. } => assert!(kind.is_shed(), "{kind:?}"),
+            other => panic!("expired request must shed typed: {:?}", other.to_json()),
+        }
+    }
+
     let stats = match ask(Request::Stats { id: 0 }) {
         Response::Stats { stats, .. } => stats,
         other => panic!("unexpected stats reply: {:?}", other.to_json()),
@@ -517,6 +538,11 @@ fn serve_bench(records: &mut Vec<BenchRecord>) {
         .and_then(|s| s.get("hit_rate"))
         .and_then(|v| v.as_f64())
         .unwrap_or(0.0);
+    let req_stats = stats.req("requests").expect("requests");
+    let req_stat = |key: &str| req_stats.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let sheds = req_stat("overloaded") + req_stat("deadline_exceeded");
+    let offered = (requests + burst) as f64;
+    let availability = req_stat("scored") / offered.max(1.0);
 
     match ask(Request::Shutdown { id: 0 }) {
         Response::ShuttingDown { .. } => {}
@@ -529,12 +555,14 @@ fn serve_bench(records: &mut Vec<BenchRecord>) {
     println!("== serving daemon (n={n}, k={k}, {requests} requests × {m} queries) ==");
     println!(
         "{qps:.1} req/s | p50 {p50:.2} ms p95 {p95:.2} ms p99 {p99:.2} ms | \
-         shard-cache hit rate {hit_rate:.3}"
+         shard-cache hit rate {hit_rate:.3} | availability {availability:.3} \
+         ({sheds:.0} typed sheds)"
     );
     records.push(
         BenchRecord::from_duration("serve:graddot:synth", requests * m, k, k, d / requests as u32)
             .with_serving(qps, p50, p95, p99)
-            .with_cache_hit_rate(hit_rate),
+            .with_cache_hit_rate(hit_rate)
+            .with_availability(availability, sheds as u64),
     );
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -611,6 +639,8 @@ fn main() {
                     p95_ms: None,
                     p99_ms: None,
                     cache_hit_rate: None,
+                    availability: None,
+                    sheds: None,
                     dtype: None,
                     bytes_per_row: None,
                     extra: vec![],

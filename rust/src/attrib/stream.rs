@@ -84,6 +84,11 @@ pub struct StreamOpts {
     /// the final coverage report sees the union. Clones of these opts
     /// share the log through the `Arc`.
     pub log: Arc<ReadLog>,
+    /// Circuit-breaker threshold armed on the shared log: a shard whose
+    /// failed read attempts reach this count is force-quarantined so later
+    /// passes degrade instantly instead of re-paying retry backoff. 0
+    /// (default) leaves the breaker disarmed — the batch CLI behaviour.
+    pub breaker: usize,
 }
 
 impl Default for StreamOpts {
@@ -96,6 +101,7 @@ impl Default for StreamOpts {
             retry: RetryPolicy::none(),
             skip_corrupt: false,
             log: Arc::default(),
+            breaker: 0,
         }
     }
 }
@@ -106,6 +112,16 @@ impl StreamOpts {
         Self {
             mem_budget,
             ..Self::default()
+        }
+    }
+
+    /// Arm the shared log's circuit breaker from these opts. Every
+    /// streaming entry point calls this so a non-zero [`StreamOpts::breaker`]
+    /// takes effect no matter which pass runs first; a zero threshold
+    /// leaves whatever is already armed on the log untouched.
+    pub(crate) fn arm_breaker(&self) {
+        if self.breaker > 0 {
+            self.log.set_breaker(self.breaker);
         }
     }
 
@@ -231,6 +247,7 @@ pub(crate) fn stream_block_fims(
         "stream layout totals {} but store rows have k = {k}",
         layout.total()
     );
+    opts.arm_breaker();
     let ranges = opts.ranges();
     let blocks = reader.plan_blocks(opts.chunk_rows_for(k, reader.meta.dtype), &ranges);
     let max_rows = blocks.iter().map(|b| b.rows).max().unwrap_or(0);
@@ -334,6 +351,7 @@ pub(crate) fn stream_self_influence(
     // f64 for the same scheduling-stability reason as `stream_scores`;
     // per-row entries are written once, so that path stays lossless.
     let out = Mutex::new(vec![0.0f64; out_len]);
+    opts.arm_breaker();
     let ranges = opts.ranges();
     reader.par_for_each_block_guarded(
         opts.chunk_rows_for(k, reader.meta.dtype),
@@ -409,6 +427,7 @@ pub(crate) fn stream_scores(
     // written once (f32 → f64 → f32 is lossless), so the ungrouped path
     // stays bit-identical to the in-memory GEMM.
     let scores = Mutex::new(vec![0.0f64; m * out_cols]);
+    opts.arm_breaker();
     let chunk_rows = opts.chunk_rows_for(k, reader.meta.dtype);
     // The GEMM scratch honours the same budget as the row buffer: score
     // the block in spans of at most ⌈chunk_rows·k / m⌉ rows, so worker

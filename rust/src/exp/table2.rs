@@ -377,6 +377,8 @@ pub fn run_density(
                     p95_ms: None,
                     p99_ms: None,
                     cache_hit_rate: None,
+                    availability: None,
+                    sheds: None,
                     dtype: None,
                     bytes_per_row: None,
                     extra: vec![
@@ -498,6 +500,8 @@ pub fn run_bench(
             p95_ms: None,
             p99_ms: None,
             cache_hit_rate: None,
+            availability: None,
+            sheds: None,
             dtype: None,
             bytes_per_row: None,
             extra: vec![

@@ -102,11 +102,13 @@ USAGE:
               [--max-queue 32] [--deadline-ms 10000] [--shard-cache 256M]
               [--mem-budget 256M] [--skip-corrupt] [--verify] [--no-artifact]
               [--retries 2] [--retry-backoff 50] [--damping 1e-3] [--precond SPEC]
-              [--quiet]
+              [--drain-ms 5000] [--idle-ms 30000] [--breaker 3] [--quiet]
   grass query --addr HOST:PORT [--queries M] [--scorer if] [--top 5]
               [--send synth|raw|compressed (raw/compressed need --store DIR)]
               [--include-scores] [--self-influence] [--deadline-ms B]
-              [--stats | --ping | --shutdown] [--format text|json]
+              [--timeout-ms T (connect/read budget; 0 = block forever)]
+              [--stats | --ping | --shutdown | --reload [--store DIR]]
+              [--format text|json]
   grass info
 
 EXIT CODES:
@@ -149,11 +151,18 @@ f16|bf16|int8` at cache time, or `grass quantize` offline): rows are
 encoded on commit and dequantized on read, fused into the streaming
 scorers, so f16/bf16 halve and int8 roughly quarter the shard bytes;
 stores without a recorded dtype read as f32. `grass serve` keeps all of that state hot in a
-long-running daemon — store opened once, bank + precond artifact
-resident, warm shard cache with prefetch — answering scoring requests
-over newline-delimited JSON/TCP with admission control (queue bound +
-deadlines → typed overloaded/deadline_exceeded replies) and per-reply
-coverage; `grass query` is the client. Full reference: docs/CLI.md;
+long-running daemon — store opened once per epoch, bank + precond
+artifact resident, warm shard cache with prefetch — answering scoring
+requests over newline-delimited JSON/TCP with admission control (queue
+bound + deadlines → typed overloaded/deadline_exceeded replies) and
+per-reply coverage; `grass query` is the client. The daemon is
+supervised: worker panics answer with a typed internal error and the
+worker respawns, shards that keep failing reads trip a circuit breaker
+(--breaker), byte-dribbling clients are reaped after --idle-ms, and
+SIGTERM/SIGINT or `grass query --shutdown` drains in-flight work within
+--drain-ms before dumping final metrics. `grass query --reload` swaps in
+a rewritten/appended store (optionally from a new --store DIR) with zero
+downtime. Full reference: docs/CLI.md;
 data-flow and memory model: docs/ARCHITECTURE.md."
     );
 }
@@ -962,9 +971,11 @@ fn run_quantize(args: &Args) -> Result<()> {
 
 /// `grass serve`: long-running attribution daemon over one store. Hot
 /// state (store handle + warm shard cache, compressor bank, precond
-/// artifact, per-scorer ingest) is built once; requests are scored by a
-/// bounded worker pool with admission control. Stop it with
-/// `grass query --addr ... --shutdown`.
+/// artifact, per-scorer ingest) is built once per epoch; requests are
+/// scored by a supervised worker pool with admission control. Stop it
+/// with SIGTERM/SIGINT or `grass query --addr ... --shutdown` (both
+/// drain within `--drain-ms`); swap in a rewritten or appended store
+/// without downtime via `grass query --addr ... --reload`.
 fn run_serve(args: &Args) -> Result<()> {
     let scorers = match args.get("scorers") {
         Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
@@ -986,15 +997,23 @@ fn run_serve(args: &Args) -> Result<()> {
         use_artifact: !args.get_bool("no-artifact"),
         damping: args.get_f64("damping", 1e-3)?,
         precond: args.get("precond").map(String::from),
+        drain_ms: args.get_u64("drain-ms", 5_000)?,
+        idle_ms: args.get_u64("idle-ms", 30_000)?,
+        breaker: args.get_usize("breaker", 3)?,
         quiet: args.get_bool("quiet"),
+        // `..Default::default()` also covers the test-only fault-injection
+        // field, which does not exist in release builds.
+        ..Default::default()
     };
     serve::run(cfg)
 }
 
 /// `grass query`: one-shot client for the serving daemon. Sends a single
-/// request (score by default; `--stats`/`--ping`/`--shutdown` for the
-/// control plane), prints the reply, and maps typed admission-shed
-/// replies (overloaded / deadline_exceeded) to exit code 4.
+/// request (score by default; `--stats`/`--ping`/`--shutdown`/`--reload`
+/// for the control plane), prints the reply, and maps typed
+/// admission-shed replies (overloaded / deadline_exceeded) to exit
+/// code 4. `--timeout-ms` bounds connect and reply reads; a timeout is a
+/// plain error (exit 1) naming the daemon and the budget.
 fn run_query(args: &Args) -> Result<i32> {
     let addr = args.get_or("addr", "127.0.0.1:4571").to_string();
     let id = args.get_u64("id", 1)?;
@@ -1004,6 +1023,11 @@ fn run_query(args: &Args) -> Result<i32> {
         Request::Stats { id }
     } else if args.get_bool("shutdown") {
         Request::Shutdown { id }
+    } else if args.get_bool("reload") {
+        Request::Reload {
+            id,
+            store: args.get("store").map(String::from),
+        }
     } else {
         let m = args.get_usize("queries", 4)?;
         let send = args.get_or("send", "synth").to_string();
@@ -1047,12 +1071,19 @@ fn run_query(args: &Args) -> Result<i32> {
         })
     };
 
-    let stream = std::net::TcpStream::connect(&addr)
-        .map_err(|e| anyhow!("connecting to the daemon at {addr}: {e}"))?;
+    let timeout_ms = args.get_u64("timeout-ms", 0)?;
+    let stream = connect_daemon(&addr, timeout_ms)?;
     let mut writer = std::io::BufWriter::new(stream.try_clone()?);
     let mut reader = std::io::BufReader::new(stream);
     proto::write_frame(&mut writer, &req.to_line())?;
-    let frame = proto::read_frame(&mut reader)?
+    let frame = proto::read_frame(&mut reader)
+        .map_err(|e| {
+            if timeout_ms > 0 {
+                anyhow!("no reply from the daemon at {addr} within {timeout_ms} ms: {e:#}")
+            } else {
+                e
+            }
+        })?
         .ok_or_else(|| anyhow!("daemon at {addr} closed the connection without replying"))?;
     let resp = Response::from_json(&frame)?;
 
@@ -1073,6 +1104,38 @@ fn run_query(args: &Args) -> Result<i32> {
         Response::Error { .. } => 1,
         _ => 0,
     })
+}
+
+/// Connect to the daemon, optionally under a `--timeout-ms` budget. With
+/// a budget, every resolved address is tried with `connect_timeout` and
+/// the socket's read/write timeouts are set, so an unreachable or hung
+/// daemon becomes a descriptive error instead of an indefinite hang.
+/// `timeout_ms == 0` keeps the legacy blocking behavior.
+fn connect_daemon(addr: &str, timeout_ms: u64) -> Result<std::net::TcpStream> {
+    use std::net::{TcpStream, ToSocketAddrs};
+    if timeout_ms == 0 {
+        return TcpStream::connect(addr)
+            .map_err(|e| anyhow!("connecting to the daemon at {addr}: {e}"));
+    }
+    let budget = std::time::Duration::from_millis(timeout_ms);
+    let resolved: Vec<std::net::SocketAddr> = addr
+        .to_socket_addrs()
+        .map_err(|e| anyhow!("resolving daemon address {addr}: {e}"))?
+        .collect();
+    ensure!(!resolved.is_empty(), "daemon address {addr} resolved to nothing");
+    let mut last_err = None;
+    for sock in &resolved {
+        match TcpStream::connect_timeout(sock, budget) {
+            Ok(s) => {
+                s.set_read_timeout(Some(budget))?;
+                s.set_write_timeout(Some(budget))?;
+                return Ok(s);
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    let e = last_err.expect("resolved is non-empty, so at least one connect ran");
+    bail!("connecting to the daemon at {addr} within {timeout_ms} ms: {e}")
 }
 
 /// Human-readable rendering of a daemon reply (the `--format json` path
@@ -1119,6 +1182,9 @@ fn print_response_text(resp: &Response) {
         Response::Stats { stats, .. } => println!("{}", stats.to_string_pretty()),
         Response::Pong { .. } => println!("pong"),
         Response::ShuttingDown { .. } => println!("daemon shutting down"),
+        Response::Reloaded { epoch, store, .. } => {
+            println!("daemon reloaded store {store} (epoch {epoch})");
+        }
         Response::Error { kind, message, .. } => {
             println!("daemon replied {}: {message}", kind.as_str());
             if kind.is_shed() {

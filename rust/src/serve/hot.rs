@@ -1,0 +1,309 @@
+//! Epoch-versioned hot state for the serving daemon.
+//!
+//! Everything a request needs to score — store meta, compressor bank,
+//! ingested engines, the warm shard cache, and the shared read log — lives
+//! in one immutable [`HotState`] behind an `Arc`. Workers clone the `Arc`
+//! per job, so a hot reload can build a replacement state in the
+//! background and atomically swap it in while in-flight requests finish on
+//! the epoch they started with; the old state (and its cache/prefetcher)
+//! drops when the last in-flight reference does. Each build gets a fresh
+//! [`ReadLog`], which is also what clears the runtime circuit breaker on
+//! reload.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{ensure, Context};
+
+use crate::attrib::{
+    from_spec, AttributionSpec, Attributor, PrecondArtifact, PrecondSpec, StreamOpts,
+};
+use crate::coordinator::CompressorBank;
+use crate::data::synthgrad::SYNTH_MODEL;
+use crate::serve::server::ServeConfig;
+use crate::serve::shard_cache::ShardCache;
+use crate::store::{ReadLog, RetryPolicy, StoreMeta, StoreReader};
+use crate::Result;
+
+/// Canonical scorer id (the registry aliases collapsed), so config keys
+/// and request keys always meet.
+pub(crate) fn canon_scorer(s: &str) -> &str {
+    match s {
+        "influence" => "if",
+        "dot" => "graddot",
+        "bw" => "blockwise",
+        other => other,
+    }
+}
+
+/// One resident scorer: ingested once per epoch, shared by all workers.
+pub(crate) struct Engine {
+    pub attributor: Box<dyn Attributor>,
+    pub fim_rows: usize,
+    pub describe: String,
+}
+
+/// One epoch of servable state. Immutable once built; swapped whole.
+pub(crate) struct HotState {
+    /// Monotonic epoch: 1 at startup, +1 per completed reload.
+    pub epoch: u64,
+    /// The store directory this epoch serves (reload may retarget it).
+    pub dir: PathBuf,
+    pub meta: StoreMeta,
+    pub bank: CompressorBank,
+    pub engines: BTreeMap<String, Engine>,
+    pub cache: Option<Arc<ShardCache>>,
+    pub artifact_loaded: bool,
+    /// Read log shared by every engine of this epoch — quarantine set,
+    /// retry counts, and the armed circuit breaker.
+    pub read_log: Arc<ReadLog>,
+}
+
+impl HotState {
+    /// Build one epoch of hot state against the store at `dir`: one store
+    /// open, one bank rebuild, one artifact load, one ingest per scorer.
+    ///
+    /// `expect` carries the previous epoch's meta during a reload: the new
+    /// store must describe the *same attribution space* (method spec,
+    /// seed, sketch width, gradient geometry) or the reload is refused
+    /// descriptively before any expensive ingest runs. Row count, payload
+    /// dtype, and density may change — that is what reload is for
+    /// (appended or re-quantized stores).
+    pub fn build(
+        cfg: &ServeConfig,
+        dir: &Path,
+        epoch: u64,
+        expect: Option<&StoreMeta>,
+    ) -> Result<Self> {
+        ensure!(!cfg.scorers.is_empty(), "serve needs at least one --scorer");
+        let mut reader = StoreReader::open(dir)
+            .with_context(|| format!("opening store at {}", dir.display()))?;
+        #[cfg(any(test, feature = "fault-injection"))]
+        if let Some(plan) = &cfg.faults {
+            reader.inject_faults(plan.clone());
+        }
+        if let Some(old) = expect {
+            check_reload_compat(old, &reader.meta)
+                .with_context(|| format!("store at {}", dir.display()))?;
+        }
+        if cfg.verify {
+            let report = reader.verify_checksums()?;
+            if !report.all_ok() {
+                let bad: Vec<usize> = report
+                    .shards
+                    .iter()
+                    .filter(|(_, s)| !s.is_ok())
+                    .map(|(i, _)| *i)
+                    .collect();
+                ensure!(
+                    cfg.skip_corrupt,
+                    "store at {} failed verification (bad shards: {bad:?}); refusing to serve — \
+                     pass --skip-corrupt to serve degraded",
+                    dir.display()
+                );
+                if !cfg.quiet {
+                    eprintln!(
+                        "warning: serving degraded — verification flagged shards {bad:?} at {}",
+                        dir.display()
+                    );
+                }
+            }
+        }
+        let cache = if cfg.cache_bytes > 0 {
+            let cache = Arc::new(ShardCache::new(cfg.cache_bytes));
+            // The prefetcher clones the reader *before* the cache attaches:
+            // it must read bytes from disk (through the fault hooks), not
+            // look itself up.
+            cache.spawn_prefetcher_with(reader.clone());
+            reader.attach_cache(cache.clone());
+            Some(cache)
+        } else {
+            None
+        };
+        let shapes = reader.meta.shapes();
+        ensure!(
+            shapes.p > 0 || !shapes.layers.is_empty(),
+            "store at {} records no gradient geometry (pre-redesign cache?); re-run `grass cache`",
+            dir.display()
+        );
+        let spec = reader.meta.spec()?;
+        let seed = reader.meta.seed;
+        let bank = spec.build_bank(&shapes, seed)?;
+        ensure!(
+            bank.output_dim() == reader.meta.k,
+            "rebuilt bank emits {} columns but the store has k = {}",
+            bank.output_dim(),
+            reader.meta.k
+        );
+        let model = reader.meta.model.as_str();
+        ensure!(
+            model == SYNTH_MODEL || model.is_empty(),
+            "serving store model '{model}' needs the PJRT runtime per query; only synthetic-model \
+             stores are servable today"
+        );
+
+        let artifact = if cfg.use_artifact {
+            match PrecondArtifact::load_if_present(dir)? {
+                Some(a) => {
+                    a.validate_store(&reader.meta)?;
+                    Some(Arc::new(a))
+                }
+                None => None,
+            }
+        } else {
+            None
+        };
+        let artifact_loaded = artifact.is_some();
+
+        let base_opts = StreamOpts {
+            mem_budget: cfg.mem_budget,
+            workers: cfg.workers.max(1),
+            retry: RetryPolicy {
+                retries: cfg.retries,
+                backoff: Duration::from_millis(cfg.retry_backoff_ms),
+                seed,
+            },
+            skip_corrupt: cfg.skip_corrupt,
+            breaker: cfg.breaker,
+            ..StreamOpts::default()
+        };
+        let read_log = base_opts.log.clone();
+
+        let mut engines = BTreeMap::new();
+        for name in &cfg.scorers {
+            let scorer = canon_scorer(name).to_string();
+            if engines.contains_key(&scorer) {
+                continue;
+            }
+            let pspec = match &cfg.precond {
+                Some(s) => PrecondSpec::parse_with(s, cfg.damping)?,
+                None => PrecondSpec::default_for_scorer(&scorer, cfg.damping),
+            };
+            let mut opts = base_opts.clone();
+            if pspec.needs_fim() {
+                opts.artifact = artifact.clone();
+            }
+            let mut aspec = AttributionSpec::new(&scorer, spec.clone(), seed);
+            aspec.damping = cfg.damping;
+            aspec.layout = bank.layer_dims();
+            aspec.precond = Some(pspec);
+            let mut attributor = from_spec(&aspec)
+                .with_context(|| format!("building serve engine for scorer '{scorer}'"))?;
+            attributor
+                .cache_stream(&reader, &opts)
+                .with_context(|| format!("ingesting store for scorer '{scorer}'"))?;
+            let pstats = attributor.precond_stats();
+            engines.insert(
+                scorer,
+                Engine {
+                    attributor,
+                    fim_rows: pstats.fim_rows,
+                    describe: pstats.describe,
+                },
+            );
+        }
+
+        Ok(HotState {
+            epoch,
+            dir: dir.to_path_buf(),
+            meta: reader.meta.clone(),
+            bank,
+            engines,
+            cache,
+            artifact_loaded,
+            read_log,
+        })
+    }
+}
+
+/// Refuse a reload that would change the attribution space under the
+/// clients' feet. Same method spec + seed + sketch width + gradient
+/// geometry are required; `n`, payload dtype, and density are free to
+/// change (appended / re-quantized stores are the point of reload).
+fn check_reload_compat(old: &StoreMeta, new: &StoreMeta) -> Result<()> {
+    ensure!(
+        new.method == old.method,
+        "reload would change the compression method ('{}' → '{}'); \
+         start a fresh daemon for a different method spec",
+        old.method,
+        new.method
+    );
+    ensure!(
+        new.seed == old.seed,
+        "reload would change the sketch seed ({} → {}); scores would be \
+         incomparable across the swap",
+        old.seed,
+        new.seed
+    );
+    ensure!(
+        new.k == old.k,
+        "reload would change the sketch width (k = {} → {})",
+        old.k,
+        new.k
+    );
+    ensure!(
+        new.input_dim == old.input_dim && new.layer_dims == old.layer_dims,
+        "reload would change the gradient geometry (input_dim {} → {}, layers {:?} → {:?})",
+        old.input_dim,
+        new.input_dim,
+        old.layer_dims,
+        new.layer_dims
+    );
+    ensure!(
+        new.model == old.model,
+        "reload would change the gradient model ('{}' → '{}')",
+        old.model,
+        new.model
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(k: usize, seed: u64) -> StoreMeta {
+        StoreMeta {
+            k,
+            n: 64,
+            shard_rows: 8,
+            method: "sjlt:k=32".into(),
+            seed,
+            model: "synth".into(),
+            input_dim: 128,
+            layer_dims: vec![],
+            density: 1.0,
+            dtype: crate::store::PayloadDtype::F32,
+        }
+    }
+
+    #[test]
+    fn compat_allows_growth_and_requant_but_not_spec_changes() {
+        let old = meta(32, 7);
+        // Appended rows + a different payload dtype are fine.
+        let mut grown = meta(32, 7);
+        grown.n = 128;
+        grown.dtype = crate::store::PayloadDtype::F16;
+        grown.density = 0.5;
+        assert!(check_reload_compat(&old, &grown).is_ok());
+        // Changed seed / width / method / geometry are refused.
+        let mut bad_seed = meta(32, 8);
+        bad_seed.n = 64;
+        let err = check_reload_compat(&old, &bad_seed).unwrap_err();
+        assert!(err.to_string().contains("seed"), "{err}");
+        let bad_k = meta(16, 7);
+        assert!(check_reload_compat(&old, &bad_k).is_err());
+        let mut bad_method = meta(32, 7);
+        bad_method.method = "edge".into();
+        let err = check_reload_compat(&old, &bad_method).unwrap_err();
+        assert!(err.to_string().contains("method"), "{err}");
+        let mut bad_geom = meta(32, 7);
+        bad_geom.input_dim = 256;
+        assert!(check_reload_compat(&old, &bad_geom).is_err());
+        let mut bad_model = meta(32, 7);
+        bad_model.model = "real".into();
+        assert!(check_reload_compat(&old, &bad_model).is_err());
+    }
+}

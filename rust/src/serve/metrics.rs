@@ -38,8 +38,25 @@ pub struct Metrics {
     pub overloaded: AtomicU64,
     pub deadline_exceeded: AtomicU64,
     pub bad_requests: AtomicU64,
+    /// Bad frames that failed to parse (malformed JSON / bad UTF-8).
+    pub bad_frames_parse: AtomicU64,
+    /// Bad frames rejected for exceeding the per-frame byte bound.
+    pub bad_frames_oversized: AtomicU64,
     pub internal_errors: AtomicU64,
     pub degraded_responses: AtomicU64,
+    /// Worker panics caught by the supervisor (each produced a typed
+    /// `Internal` reply, never a silent drop).
+    pub panics: AtomicU64,
+    /// Workers respawned after a panic killed their thread.
+    pub respawns: AtomicU64,
+    /// Completed hot store reloads (epoch swaps).
+    pub reloads: AtomicU64,
+    /// Connections accepted over the daemon's lifetime.
+    pub connections_opened: AtomicU64,
+    /// Currently-open connections (gauge).
+    pub connections_active: AtomicU64,
+    /// Connections closed by the idle reaper (slow/stalled peers).
+    pub reaped_idle: AtomicU64,
     /// Training rows streamed through scoring passes.
     pub rows_scored: AtomicU64,
     lat: Mutex<Reservoir>,
@@ -60,8 +77,16 @@ impl Metrics {
             overloaded: AtomicU64::new(0),
             deadline_exceeded: AtomicU64::new(0),
             bad_requests: AtomicU64::new(0),
+            bad_frames_parse: AtomicU64::new(0),
+            bad_frames_oversized: AtomicU64::new(0),
             internal_errors: AtomicU64::new(0),
             degraded_responses: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            connections_opened: AtomicU64::new(0),
+            connections_active: AtomicU64::new(0),
+            reaped_idle: AtomicU64::new(0),
             rows_scored: AtomicU64::new(0),
             lat: Mutex::new(Reservoir {
                 ring: Vec::new(),
@@ -75,10 +100,27 @@ impl Metrics {
         self.started.elapsed()
     }
 
+    /// Track one accepted connection (pair with [`Metrics::conn_closed`]).
+    pub fn conn_opened(&self) {
+        self.connections_opened.fetch_add(1, Ordering::Relaxed);
+        self.connections_active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn conn_closed(&self) {
+        self.connections_active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Currently-open connections.
+    pub fn active_connections(&self) -> u64 {
+        self.connections_active.load(Ordering::Relaxed)
+    }
+
     /// Record one served-request latency.
     pub fn note_latency(&self, d: Duration) {
         let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
-        let mut lat = self.lat.lock().unwrap();
+        // Workers run requests under catch_unwind; recover the reservoir
+        // rather than poisoning the whole metrics surface.
+        let mut lat = self.lat.lock().unwrap_or_else(|p| p.into_inner());
         lat.total += 1;
         if lat.ring.len() < LAT_CAP {
             lat.ring.push(us);
@@ -91,7 +133,7 @@ impl Metrics {
 
     /// p50/p95/p99 over the reservoir (zeros when nothing recorded).
     pub fn latency_summary(&self) -> LatencySummary {
-        let lat = self.lat.lock().unwrap();
+        let lat = self.lat.lock().unwrap_or_else(|p| p.into_inner());
         let mut sorted = lat.ring.clone();
         let total = lat.total;
         drop(lat);
@@ -137,6 +179,14 @@ impl Metrics {
                         Json::Num(self.bad_requests.load(Ordering::Relaxed) as f64),
                     ),
                     (
+                        "bad_frames_parse",
+                        Json::Num(self.bad_frames_parse.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "bad_frames_oversized",
+                        Json::Num(self.bad_frames_oversized.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
                         "internal_errors",
                         Json::Num(self.internal_errors.load(Ordering::Relaxed) as f64),
                     ),
@@ -145,6 +195,37 @@ impl Metrics {
                         Json::Num(self.degraded_responses.load(Ordering::Relaxed) as f64),
                     ),
                 ]),
+            ),
+            (
+                "workers",
+                Json::obj(vec![
+                    ("panics", Json::Num(self.panics.load(Ordering::Relaxed) as f64)),
+                    (
+                        "respawns",
+                        Json::Num(self.respawns.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            (
+                "connections",
+                Json::obj(vec![
+                    (
+                        "active",
+                        Json::Num(self.connections_active.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "opened",
+                        Json::Num(self.connections_opened.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "reaped_idle",
+                        Json::Num(self.reaped_idle.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            (
+                "reloads",
+                Json::Num(self.reloads.load(Ordering::Relaxed) as f64),
             ),
             (
                 "latency",
@@ -192,6 +273,27 @@ mod tests {
         let s = m.latency_summary();
         assert_eq!(s.count, (LAT_CAP + 100) as u64);
         assert_eq!(m.lat.lock().unwrap().ring.len(), LAT_CAP);
+    }
+
+    #[test]
+    fn connection_gauge_tracks_open_and_close() {
+        let m = Metrics::new();
+        m.conn_opened();
+        m.conn_opened();
+        assert_eq!(m.active_connections(), 2);
+        m.conn_closed();
+        assert_eq!(m.active_connections(), 1);
+        m.conn_closed();
+        assert_eq!(m.active_connections(), 0);
+        let j = m.snapshot_json();
+        let conns = j.get("connections").unwrap();
+        assert_eq!(conns.get("opened").unwrap().as_u64(), Some(2));
+        assert_eq!(conns.get("active").unwrap().as_u64(), Some(0));
+        assert_eq!(conns.get("reaped_idle").unwrap().as_u64(), Some(0));
+        let workers = j.get("workers").unwrap();
+        assert_eq!(workers.get("panics").unwrap().as_u64(), Some(0));
+        assert_eq!(workers.get("respawns").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("reloads").unwrap().as_u64(), Some(0));
     }
 
     #[test]

@@ -4,35 +4,45 @@
 //! construction, and precond-artifact load on every invocation. This
 //! module turns that cost into one-time daemon state:
 //!
-//! - [`server`] — hot-state construction (store opened once, engines
-//!   ingested once) and the bounded worker pool; [`ServeConfig`] /
-//!   [`spawn`] / [`run`] are the public surface.
+//! - [`server`] — the supervised worker pool and the drain sequence;
+//!   [`ServeConfig`] / [`spawn`] / [`run`] are the public surface.
+//! - [`hot`](self) — epoch-versioned hot state (store opened once per
+//!   epoch, engines ingested once per epoch); the `reload` request swaps
+//!   epochs atomically while in-flight requests finish on the old one.
 //! - [`proto`] — the versioned newline-delimited-JSON wire protocol
-//!   (`score` / `stats` / `ping` / `shutdown` requests; typed error
-//!   replies). `grass query` is the reference client.
+//!   (`score` / `stats` / `ping` / `reload` / `shutdown` requests; typed
+//!   error replies; frames bounded by [`proto::MAX_FRAME_BYTES`]).
+//!   `grass query` is the reference client.
 //! - [`admission`] — queue-depth load shedding ([`Admission`]) and
 //!   per-request latency budgets ([`admission::Deadline`]): a full queue
 //!   answers `Overloaded`, a stale request answers `DeadlineExceeded`, and
 //!   the daemon keeps serving either way.
+//! - [`signal`] — std-only SIGTERM/SIGINT capture (CLI path only); a
+//!   signal and a protocol `shutdown` request are two doors into the same
+//!   draining shutdown.
 //! - [`shard_cache`] — [`ShardCache`], the warm LRU shard-byte pool with
 //!   sequential prefetch. It attaches to any
 //!   [`StoreReader`](crate::store::StoreReader), so the batch
 //!   `grass attribute --shard-cache` path reuses it too.
 //! - [`metrics`] — the [`Metrics`] registry (request counters, p50/p95/p99
-//!   latency, rows scored), served by the `stats` request and dumped on
-//!   graceful shutdown.
+//!   latency, worker panics/respawns, connection gauge, reloads), served
+//!   by the `stats` request and dumped on graceful shutdown.
 //!
 //! Degradation model: scoring streams through the existing
-//! [`ReadGuard`](crate::store::ReadGuard) retry/quarantine layer, so a
-//! corrupt shard degrades the *response coverage* of affected replies
-//! instead of killing the daemon.
+//! [`ReadGuard`](crate::store::ReadGuard) retry/quarantine layer, a
+//! runtime circuit breaker quarantines shards that keep failing reads
+//! (cleared by `reload`), worker panics answer their client with a typed
+//! `internal` error and the worker is respawned — a corrupt shard, a slow
+//! client, or a panicking scorer degrades one reply, never the daemon.
 
 pub mod admission;
+pub(crate) mod hot;
 pub mod metrics;
 pub mod proto;
 pub mod server;
 pub(crate) mod session;
 pub mod shard_cache;
+pub mod signal;
 
 pub use admission::Admission;
 pub use metrics::{LatencySummary, Metrics};

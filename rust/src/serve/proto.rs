@@ -8,11 +8,16 @@
 
 use crate::util::json::Json;
 use crate::Result;
-use anyhow::{bail, ensure};
+use anyhow::{anyhow, bail, ensure};
 use std::io::{BufRead, Write};
 
 /// Protocol version spoken (and required) by this build.
 pub const PROTO_VERSION: u64 = 1;
+
+/// Largest accepted NDJSON frame (64 MiB). Far above any legitimate
+/// request, far below what one malicious unterminated line would need to
+/// OOM the daemon.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
 /// Typed failure classes a server reply can carry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -143,13 +148,19 @@ pub enum Request {
     Ping { id: u64 },
     /// Graceful shutdown: the daemon stops accepting, drains, and exits.
     Shutdown { id: u64 },
+    /// Hot store reload: rebuild engines against the (possibly different)
+    /// store directory and swap epochs without dropping in-flight requests.
+    Reload { id: u64, store: Option<String> },
 }
 
 impl Request {
     pub fn id(&self) -> u64 {
         match self {
             Request::Score(r) => r.id,
-            Request::Stats { id } | Request::Ping { id } | Request::Shutdown { id } => *id,
+            Request::Stats { id }
+            | Request::Ping { id }
+            | Request::Shutdown { id }
+            | Request::Reload { id, .. } => *id,
         }
     }
 
@@ -180,6 +191,13 @@ impl Request {
                 pairs.push(("type", Json::Str("shutdown".into())));
                 pairs.push(("id", Json::Num(*id as f64)));
             }
+            Request::Reload { id, store } => {
+                pairs.push(("type", Json::Str("reload".into())));
+                pairs.push(("id", Json::Num(*id as f64)));
+                if let Some(store) = store {
+                    pairs.push(("store", Json::Str(store.clone())));
+                }
+            }
         }
         Json::obj(pairs)
     }
@@ -207,6 +225,10 @@ impl Request {
             "stats" => Request::Stats { id },
             "ping" => Request::Ping { id },
             "shutdown" => Request::Shutdown { id },
+            "reload" => Request::Reload {
+                id,
+                store: v.get("store").and_then(|x| x.as_str()).map(String::from),
+            },
             other => bail!("unknown request type {other:?}"),
         })
     }
@@ -277,6 +299,9 @@ pub struct ScoreResponse {
     pub classes: Option<Vec<usize>>,
     pub coverage: CoverageInfo,
     pub elapsed_ms: f64,
+    /// Hot-state epoch that scored this reply (bumps on every reload; 0
+    /// when the peer predates epochs).
+    pub epoch: u64,
 }
 
 /// Server → client messages.
@@ -286,6 +311,8 @@ pub enum Response {
     Stats { id: u64, stats: Json },
     Pong { id: u64 },
     ShuttingDown { id: u64 },
+    /// A hot reload completed: the daemon now serves `store` at `epoch`.
+    Reloaded { id: u64, epoch: u64, store: String },
     Error { id: u64, kind: ErrorKind, message: String },
 }
 
@@ -296,6 +323,7 @@ impl Response {
             Response::Stats { id, .. }
             | Response::Pong { id }
             | Response::ShuttingDown { id }
+            | Response::Reloaded { id, .. }
             | Response::Error { id, .. } => *id,
         }
     }
@@ -344,6 +372,7 @@ impl Response {
                 }
                 pairs.push(("coverage", r.coverage.to_json()));
                 pairs.push(("elapsed_ms", Json::Num(r.elapsed_ms)));
+                pairs.push(("epoch", Json::Num(r.epoch as f64)));
             }
             Response::Stats { id, stats } => {
                 pairs.push(("type", Json::Str("stats".into())));
@@ -357,6 +386,12 @@ impl Response {
             Response::ShuttingDown { id } => {
                 pairs.push(("type", Json::Str("shutting_down".into())));
                 pairs.push(("id", Json::Num(*id as f64)));
+            }
+            Response::Reloaded { id, epoch, store } => {
+                pairs.push(("type", Json::Str("reloaded".into())));
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("epoch", Json::Num(*epoch as f64)));
+                pairs.push(("store", Json::Str(store.clone())));
             }
             Response::Error { id, kind, message } => {
                 pairs.push(("type", Json::Str("error".into())));
@@ -421,6 +456,7 @@ impl Response {
                     }),
                     coverage: CoverageInfo::from_json(v.req("coverage")?)?,
                     elapsed_ms: v.get("elapsed_ms").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                    epoch: v.get("epoch").and_then(|x| x.as_u64()).unwrap_or(0),
                 }))
             }
             "stats" => Response::Stats {
@@ -429,6 +465,15 @@ impl Response {
             },
             "pong" => Response::Pong { id },
             "shutting_down" => Response::ShuttingDown { id },
+            "reloaded" => Response::Reloaded {
+                id,
+                epoch: v.get("epoch").and_then(|x| x.as_u64()).unwrap_or(0),
+                store: v
+                    .get("store")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            },
             "error" => Response::Error {
                 id,
                 kind: ErrorKind::parse(v.req("kind")?.as_str().unwrap_or_default())?,
@@ -465,19 +510,136 @@ pub fn write_frame(w: &mut impl Write, line: &str) -> std::io::Result<()> {
     w.flush()
 }
 
-/// Read one NDJSON frame; `Ok(None)` on a clean EOF, `Err` on parse failure.
+/// Why a frame could not be produced (see [`FrameReader::poll_frame`]).
+/// A real enum rather than an opaque error chain so the session can count
+/// oversized frames separately from parse failures.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The frame exceeded the byte bound without producing a newline.
+    TooLarge { limit: usize },
+    /// The frame arrived but was not valid UTF-8 / JSON.
+    Parse(anyhow::Error),
+    /// The transport failed mid-read (not a timeout — timeouts are
+    /// [`FramePoll::Pending`]).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::TooLarge { limit } => {
+                write!(f, "frame exceeds the {limit}-byte bound without a newline")
+            }
+            FrameError::Parse(e) => write!(f, "{e:#}"),
+            FrameError::Io(e) => write!(f, "reading frame: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// One poll step of a [`FrameReader`].
+#[derive(Debug)]
+pub enum FramePoll {
+    /// A complete frame was parsed.
+    Frame(Json),
+    /// The peer closed the stream with no frame pending.
+    Eof,
+    /// The read timed out (`WouldBlock` / `TimedOut`) before a full frame
+    /// arrived. Already-received bytes are retained — poll again.
+    Pending,
+}
+
+/// Incremental NDJSON frame reader that survives read timeouts and bounds
+/// per-frame memory.
+///
+/// `BufRead::read_until` appends whatever bytes arrived before an error to
+/// the caller's buffer, so a persistent buffer turns a per-connection read
+/// timeout into a *tick*: a slow client's half-frame accumulates across
+/// polls instead of desyncing the stream, and the session loop gets
+/// control back between polls to check idle/shutdown state. A `Take`
+/// bound on every poll caps how many bytes one frame may ever buffer
+/// (see [`FrameError::TooLarge`]).
+pub struct FrameReader<R: BufRead> {
+    r: R,
+    buf: Vec<u8>,
+}
+
+impl<R: BufRead> FrameReader<R> {
+    pub fn new(r: R) -> Self {
+        Self { r, buf: Vec::new() }
+    }
+
+    /// Bytes of a partial frame currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Advance toward the next frame, reading at most `max_bytes + 1`
+    /// bytes total for it (one byte past the bound distinguishes an
+    /// exactly-max frame from an oversized one).
+    pub fn poll_frame(&mut self, max_bytes: usize) -> std::result::Result<FramePoll, FrameError> {
+        fn parse(line: Vec<u8>) -> std::result::Result<Option<FramePoll>, FrameError> {
+            let text = std::str::from_utf8(&line)
+                .map_err(|_| FrameError::Parse(anyhow!("frame is not valid UTF-8")))?;
+            let trimmed = text.trim();
+            if trimmed.is_empty() {
+                return Ok(None); // blank keep-alive line
+            }
+            Json::parse(trimmed)
+                .map(|v| Some(FramePoll::Frame(v)))
+                .map_err(FrameError::Parse)
+        }
+        loop {
+            let budget = (max_bytes + 1).saturating_sub(self.buf.len()) as u64;
+            let n = match (&mut self.r).take(budget).read_until(b'\n', &mut self.buf) {
+                Ok(n) => n,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(FramePoll::Pending);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(FrameError::Io(e)),
+            };
+            if self.buf.last() == Some(&b'\n') {
+                match parse(std::mem::take(&mut self.buf))? {
+                    Some(frame) => return Ok(frame),
+                    None => continue, // tolerate blank keep-alive lines
+                }
+            }
+            if self.buf.len() > max_bytes {
+                return Err(FrameError::TooLarge { limit: max_bytes });
+            }
+            if n == 0 {
+                // True EOF (the budget can only run dry past the bound,
+                // handled above). An unterminated final line still parses,
+                // matching the historical `read_frame` behaviour.
+                if self.buf.is_empty() {
+                    return Ok(FramePoll::Eof);
+                }
+                return match parse(std::mem::take(&mut self.buf))? {
+                    Some(frame) => Ok(frame),
+                    None => Ok(FramePoll::Eof),
+                };
+            }
+        }
+    }
+}
+
+/// Read one NDJSON frame, bounded at [`MAX_FRAME_BYTES`]; `Ok(None)` on a
+/// clean EOF, `Err` on a parse failure, an oversized frame
+/// ([`FrameError::TooLarge`]), or a read timeout on a stream with a read
+/// deadline set (`grass query --timeout-ms`).
 pub fn read_frame(r: &mut impl BufRead) -> Result<Option<Json>> {
-    let mut line = String::new();
-    loop {
-        line.clear();
-        let n = r.read_line(&mut line)?;
-        if n == 0 {
-            return Ok(None);
-        }
-        if line.trim().is_empty() {
-            continue; // tolerate blank keep-alive lines
-        }
-        return Json::parse(line.trim()).map(Some);
+    let mut fr = FrameReader::new(r);
+    match fr.poll_frame(MAX_FRAME_BYTES)? {
+        FramePoll::Frame(v) => Ok(Some(v)),
+        FramePoll::Eof => Ok(None),
+        FramePoll::Pending => bail!("timed out waiting for a frame"),
     }
 }
 
@@ -524,6 +686,11 @@ mod tests {
             Request::Stats { id: 1 },
             Request::Ping { id: 2 },
             Request::Shutdown { id: 3 },
+            Request::Reload { id: 4, store: None },
+            Request::Reload {
+                id: 5,
+                store: Some("/tmp/other_store".into()),
+            },
         ];
         for req in reqs {
             let line = req.to_line();
@@ -552,6 +719,7 @@ mod tests {
                     retries_attempted: 0,
                 },
                 elapsed_ms: 1.5,
+                epoch: 3,
             })),
             Response::Stats {
                 id: 1,
@@ -559,6 +727,11 @@ mod tests {
             },
             Response::Pong { id: 2 },
             Response::ShuttingDown { id: 3 },
+            Response::Reloaded {
+                id: 5,
+                epoch: 2,
+                store: "/tmp/store".into(),
+            },
             Response::Error {
                 id: 4,
                 kind: ErrorKind::Overloaded,
@@ -616,5 +789,83 @@ mod tests {
         let b = read_frame(&mut r).unwrap().unwrap();
         assert_eq!(Request::from_json(&b).unwrap(), Request::Stats { id: 10 });
         assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_frame_is_a_typed_error() {
+        // A newline-terminated line past the bound…
+        let line = format!("{}\n", "x".repeat(64));
+        let mut r = std::io::BufReader::new(line.as_bytes());
+        let err = FrameReader::new(&mut r).poll_frame(16).unwrap_err();
+        assert!(matches!(err, FrameError::TooLarge { limit: 16 }), "{err}");
+        // …and an unterminated one: same typed error, no unbounded buffering.
+        let blob = "y".repeat(1000);
+        let mut r = std::io::BufReader::new(blob.as_bytes());
+        let err = FrameReader::new(&mut r).poll_frame(16).unwrap_err();
+        assert!(matches!(err, FrameError::TooLarge { .. }), "{err}");
+        // A frame of exactly the bound still parses.
+        let exact = format!("{}\n", r#"{"v":1,"type":"ping","id":1}"#);
+        let max = exact.trim().len();
+        let mut r = std::io::BufReader::new(exact.as_bytes());
+        match FrameReader::new(&mut r).poll_frame(max + 1).unwrap() {
+            FramePoll::Frame(v) => {
+                assert_eq!(Request::from_json(&v).unwrap(), Request::Ping { id: 1 });
+            }
+            other => panic!("expected a frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_reader_retains_partial_bytes_across_polls() {
+        // Simulate a timeout mid-frame: a reader that yields half the
+        // frame, then a TimedOut error, then the rest.
+        struct Dribble {
+            parts: Vec<Vec<u8>>,
+            next: usize,
+        }
+        impl std::io::Read for Dribble {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.next >= self.parts.len() {
+                    return Ok(0);
+                }
+                if self.parts[self.next].is_empty() {
+                    self.next += 1;
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "injected timeout",
+                    ));
+                }
+                let part = &self.parts[self.next];
+                let n = part.len().min(buf.len());
+                buf[..n].copy_from_slice(&part[..n]);
+                let rest = part[n..].to_vec();
+                if rest.is_empty() {
+                    self.next += 1;
+                } else {
+                    self.parts[self.next] = rest;
+                }
+                Ok(n)
+            }
+        }
+        let line = Request::Ping { id: 42 }.to_line();
+        let (a, b) = line.as_bytes().split_at(line.len() / 2);
+        let r = Dribble {
+            parts: vec![a.to_vec(), vec![], b.to_vec()],
+            next: 0,
+        };
+        let mut fr = FrameReader::new(std::io::BufReader::with_capacity(4, r));
+        let first = fr.poll_frame(MAX_FRAME_BYTES).unwrap();
+        assert!(matches!(first, FramePoll::Pending), "{first:?}");
+        assert!(fr.buffered() > 0, "partial bytes must survive the timeout");
+        match fr.poll_frame(MAX_FRAME_BYTES).unwrap() {
+            FramePoll::Frame(v) => {
+                assert_eq!(Request::from_json(&v).unwrap(), Request::Ping { id: 42 });
+            }
+            other => panic!("expected the completed frame, got {other:?}"),
+        }
+        assert!(matches!(
+            fr.poll_frame(MAX_FRAME_BYTES).unwrap(),
+            FramePoll::Eof
+        ));
     }
 }

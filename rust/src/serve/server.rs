@@ -1,39 +1,51 @@
-//! The serving daemon: hot state built once, then a bounded worker pool
-//! scoring requests for the lifetime of the process.
+//! The serving daemon: epoch-versioned hot state, a supervised worker
+//! pool, and a single draining shutdown sequence.
 //!
-//! Startup opens the store a single time (manifest-verified), optionally
-//! attaches a prefetching [`ShardCache`], rebuilds the
-//! [`CompressorBank`], loads + validates the persisted
-//! [`PrecondArtifact`](crate::attrib::PrecondArtifact), and runs each
-//! configured scorer's `cache_stream` ingest (FIM + self-influence passes)
-//! exactly once. Every subsequent request reuses that state — observable
-//! via the `stats` request: `store.opens` stays 1 and per-engine
-//! `fim_rows` never grows while `requests.scored` does.
+//! Startup builds one [`HotState`] (store opened once, engines ingested
+//! once) and pins it behind an `RwLock<Arc<_>>`; every request clones the
+//! `Arc`, so a `reload` request can build a replacement epoch in the
+//! background and swap it in without failing anything in flight.
+//! Observable via the `stats` request: `store.opens` counts exactly one
+//! open per epoch, per-engine `fim_rows` never grows while
+//! `requests.scored` does, and `epoch` ticks only on reload.
+//!
+//! Resilience model:
+//! - workers run each job under `catch_unwind`; a panicking scorer
+//!   produces a typed `internal` reply and the supervisor (the accept
+//!   loop) respawns the dead worker (`workers.panics` / `workers.respawns`
+//!   in stats);
+//! - SIGTERM/SIGINT (CLI path only) and the protocol `shutdown` request
+//!   are two doors into the same drain: stop accepting, finish queued
+//!   work within `--drain-ms`, join workers, dump final metrics;
+//! - shards that keep failing reads trip a circuit breaker inside the
+//!   shared [`ReadLog`](crate::store::ReadLog) and are quarantined for
+//!   the rest of the epoch (a reload clears the breaker).
 
-use std::collections::BTreeMap;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, ensure, Context};
+use anyhow::{anyhow, Context};
 
-use crate::attrib::{from_spec, AttributionSpec, Attributor, PrecondArtifact, PrecondSpec, StreamOpts, DEFAULT_MEM_BUDGET};
-use crate::coordinator::CompressorBank;
+use crate::attrib::DEFAULT_MEM_BUDGET;
 use crate::data::queries::{compress_raw_queries, synth_queries};
-use crate::data::synthgrad::SYNTH_MODEL;
 use crate::serve::admission::{Admission, Deadline, Ticket};
+use crate::serve::hot::{canon_scorer, HotState};
 use crate::serve::metrics::Metrics;
 use crate::serve::proto::{
     CoverageInfo, ErrorKind, QueryPayload, Response, ScoreRequest, ScoreResponse,
 };
-use crate::serve::shard_cache::ShardCache;
-use crate::store::{RetryPolicy, StoreMeta, StoreReader};
+use crate::serve::signal;
 use crate::util::json::Json;
 use crate::Result;
+
+/// Supervisor / accept-loop poll interval.
+const ACCEPT_TICK: Duration = Duration::from_millis(10);
 
 /// Everything `grass serve` configures about a daemon instance.
 #[derive(Debug, Clone)]
@@ -43,7 +55,7 @@ pub struct ServeConfig {
     /// Bind address (`host:port`; port 0 auto-assigns — the bound address
     /// is reported by [`ServerHandle::addr`]).
     pub addr: String,
-    /// Scorers kept hot (each pays its ingest passes once at startup).
+    /// Scorers kept hot (each pays its ingest passes once per epoch).
     pub scorers: Vec<String>,
     /// Scoring worker threads.
     pub workers: usize,
@@ -70,8 +82,20 @@ pub struct ServeConfig {
     pub damping: f64,
     /// Explicit preconditioner spec; `None` = each scorer's default.
     pub precond: Option<String>,
+    /// Shutdown drain budget (ms): queued work and open connections get
+    /// this long to finish before the drain is forced.
+    pub drain_ms: u64,
+    /// Idle-connection reap threshold (ms); 0 disables the reaper.
+    pub idle_ms: u64,
+    /// Circuit-breaker threshold: failed reads of one shard before it is
+    /// quarantined for the epoch; 0 disarms the breaker.
+    pub breaker: usize,
     /// Suppress stdout chatter (tests / benches).
     pub quiet: bool,
+    /// Scripted store faults injected into the epoch's reader (chaos
+    /// tests only; release builds have no injection path).
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub faults: Option<Arc<crate::store::FaultPlan>>,
 }
 
 impl Default for ServeConfig {
@@ -92,27 +116,14 @@ impl Default for ServeConfig {
             use_artifact: true,
             damping: 1e-3,
             precond: None,
+            drain_ms: 5_000,
+            idle_ms: 30_000,
+            breaker: 3,
             quiet: false,
+            #[cfg(any(test, feature = "fault-injection"))]
+            faults: None,
         }
     }
-}
-
-/// Canonical scorer id (the registry aliases collapsed), so config keys
-/// and request keys always meet.
-pub(crate) fn canon_scorer(s: &str) -> &str {
-    match s {
-        "influence" => "if",
-        "dot" => "graddot",
-        "bw" => "blockwise",
-        other => other,
-    }
-}
-
-/// One resident scorer: ingested once at startup, shared by all workers.
-pub(crate) struct Engine {
-    pub attributor: Box<dyn Attributor>,
-    pub fim_rows: usize,
-    pub describe: String,
 }
 
 /// A queued scoring job: request + admission ticket + reply channel.
@@ -123,50 +134,126 @@ pub(crate) struct Job {
     pub reply: Sender<Response>,
 }
 
-/// Shared daemon state (hot stores, engines, metrics, shutdown plumbing).
+/// Shared daemon state: the swappable hot epoch plus everything that
+/// outlives reloads (admission, metrics, shutdown plumbing).
 pub(crate) struct ServerState {
     pub cfg: ServeConfig,
-    pub meta: StoreMeta,
-    pub bank: CompressorBank,
-    pub engines: BTreeMap<String, Engine>,
+    /// Current epoch; workers clone the `Arc` per job so a swap never
+    /// yanks state out from under an in-flight request.
+    pub hot: RwLock<Arc<HotState>>,
     pub admission: Arc<Admission>,
     pub metrics: Metrics,
-    pub cache: Option<Arc<ShardCache>>,
-    pub artifact_loaded: bool,
-    /// Store opens over the daemon's lifetime — 1 by construction; the
-    /// `stats` request exposes it so hot-state reuse is testable.
+    /// Store opens over the daemon's lifetime — exactly one per epoch;
+    /// the `stats` request exposes it so hot-state reuse is testable.
     pub store_opens: AtomicU64,
+    /// Single-flight guard for reloads.
+    pub reloading: AtomicBool,
     pub jobs: Mutex<Option<Sender<Job>>>,
     pub shutdown: AtomicBool,
+    /// What triggered the drain ("SIGTERM", "shutdown request", …).
+    pub drain_reason: Mutex<Option<String>>,
+    /// Final drain report, filled once the drain sequence finishes.
+    pub drain_report: Mutex<Option<Json>>,
     pub addr: SocketAddr,
 }
 
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 impl ServerState {
-    /// Flip the shutdown flag and poke the accept loop awake.
-    pub fn begin_shutdown(&self) {
+    /// The current hot epoch (cloned `Arc`: safe across a concurrent swap).
+    pub fn hot(&self) -> Arc<HotState> {
+        self.hot
+            .read()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone()
+    }
+
+    /// Enter the drain sequence: record the trigger (first one wins) and
+    /// flip the flag the accept loop and sessions poll.
+    pub fn begin_shutdown(&self, reason: &str) {
+        let mut r = lock_unpoisoned(&self.drain_reason);
+        if r.is_none() {
+            *r = Some(reason.to_string());
+        }
+        drop(r);
         self.shutdown.store(true, Ordering::Release);
-        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Serve a `reload` request: rebuild hot state (same dir, or `store`
+    /// when given) and atomically swap epochs. Single-flight; refusals
+    /// (spec mismatch, unreadable store) keep the current epoch serving.
+    pub fn try_reload(&self, id: u64, store: Option<&str>) -> Response {
+        if self.reloading.swap(true, Ordering::AcqRel) {
+            return Response::Error {
+                id,
+                kind: ErrorKind::Overloaded,
+                message: "a reload is already in progress".to_string(),
+            };
+        }
+        let result = self.do_reload(store);
+        self.reloading.store(false, Ordering::Release);
+        match result {
+            Ok((epoch, dir)) => Response::Reloaded {
+                id,
+                epoch,
+                store: dir,
+            },
+            Err(e) => Response::Error {
+                id,
+                kind: ErrorKind::BadRequest,
+                message: format!("reload refused: {e:#}"),
+            },
+        }
+    }
+
+    fn do_reload(&self, store: Option<&str>) -> Result<(u64, String)> {
+        let cur = self.hot();
+        let dir = match store {
+            Some(s) => PathBuf::from(s),
+            None => cur.dir.clone(),
+        };
+        // Build the whole replacement epoch before touching the lock:
+        // in-flight and new requests keep scoring on the old epoch for
+        // the full (potentially long) ingest.
+        let next = HotState::build(&self.cfg, &dir, cur.epoch + 1, Some(&cur.meta))
+            .with_context(|| format!("rebuilding hot state from {}", dir.display()))?;
+        self.store_opens.fetch_add(1, Ordering::Relaxed);
+        let epoch = next.epoch;
+        *self.hot.write().unwrap_or_else(|p| p.into_inner()) = Arc::new(next);
+        self.metrics.reloads.fetch_add(1, Ordering::Relaxed);
+        if !self.cfg.quiet {
+            println!(
+                "serve: hot reload complete — epoch {epoch} now serving {}",
+                dir.display()
+            );
+        }
+        Ok((epoch, dir.display().to_string()))
     }
 
     /// The full `stats`-request payload: metrics counters + hot-state
-    /// evidence (store opens, per-engine fim rows, cache hit rate).
+    /// evidence (store opens, epoch, per-engine fim rows, cache hit rate,
+    /// breaker state, drain report).
     pub fn stats_json(&self) -> Json {
+        let hot = self.hot();
         let mut map = match self.metrics.snapshot_json() {
             Json::Obj(m) => m,
             _ => unreachable!("metrics snapshot is an object"),
         };
+        map.insert("epoch".to_string(), Json::Num(hot.epoch as f64));
         map.insert(
             "store".to_string(),
             Json::obj(vec![
-                ("dir", Json::Str(self.cfg.store.display().to_string())),
-                ("n", Json::Num(self.meta.n as f64)),
-                ("k", Json::Num(self.meta.k as f64)),
-                ("method", Json::Str(self.meta.method.clone())),
-                ("dtype", Json::Str(self.meta.dtype.as_str().to_string())),
-                ("bytes_per_row", Json::Num(self.meta.row_bytes() as f64)),
+                ("dir", Json::Str(hot.dir.display().to_string())),
+                ("n", Json::Num(hot.meta.n as f64)),
+                ("k", Json::Num(hot.meta.k as f64)),
+                ("method", Json::Str(hot.meta.method.clone())),
+                ("dtype", Json::Str(hot.meta.dtype.as_str().to_string())),
+                ("bytes_per_row", Json::Num(hot.meta.row_bytes() as f64)),
                 (
                     "shards",
-                    Json::Num(self.meta.n.div_ceil(self.meta.shard_rows.max(1)) as f64),
+                    Json::Num(hot.meta.n.div_ceil(hot.meta.shard_rows.max(1)) as f64),
                 ),
                 (
                     "opens",
@@ -174,7 +261,7 @@ impl ServerState {
                 ),
             ]),
         );
-        let engines = self
+        let engines = hot
             .engines
             .iter()
             .map(|(name, e)| {
@@ -188,7 +275,7 @@ impl ServerState {
             })
             .collect();
         map.insert("engines".to_string(), Json::Obj(engines));
-        map.insert("artifact_loaded".to_string(), Json::Bool(self.artifact_loaded));
+        map.insert("artifact_loaded".to_string(), Json::Bool(hot.artifact_loaded));
         map.insert(
             "admission".to_string(),
             Json::obj(vec![
@@ -200,7 +287,30 @@ impl ServerState {
                 ("workers", Json::Num(self.cfg.workers as f64)),
             ]),
         );
-        let cache = match &self.cache {
+        let log = &hot.read_log;
+        map.insert(
+            "breaker".to_string(),
+            Json::obj(vec![
+                ("threshold", Json::Num(log.breaker_threshold() as f64)),
+                ("trips", Json::Num(log.breaker_trips() as f64)),
+                (
+                    "quarantined",
+                    Json::Arr(
+                        log.quarantined()
+                            .into_iter()
+                            .map(|s| Json::Num(s as f64))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "failed_reads",
+                    Json::Num(
+                        log.failure_counts().iter().map(|(_, c)| *c).sum::<u64>() as f64,
+                    ),
+                ),
+            ]),
+        );
+        let cache = match &hot.cache {
             Some(c) => {
                 let s = c.stats();
                 Json::obj(vec![
@@ -217,149 +327,32 @@ impl ServerState {
             None => Json::Null,
         };
         map.insert("shard_cache".to_string(), cache);
+        map.insert(
+            "drain".to_string(),
+            lock_unpoisoned(&self.drain_report)
+                .clone()
+                .unwrap_or(Json::Null),
+        );
         Json::Obj(map)
     }
 }
 
-/// Build the daemon's hot state: one store open, one bank rebuild, one
-/// artifact load, one ingest per scorer.
-fn build_state(cfg: ServeConfig) -> Result<ServerState> {
-    ensure!(!cfg.scorers.is_empty(), "serve needs at least one --scorer");
-    let mut reader = StoreReader::open(&cfg.store)?;
-    if cfg.verify {
-        let report = reader.verify_checksums()?;
-        if !report.all_ok() {
-            let bad: Vec<usize> = report
-                .shards
-                .iter()
-                .filter(|(_, s)| !s.is_ok())
-                .map(|(i, _)| *i)
-                .collect();
-            ensure!(
-                cfg.skip_corrupt,
-                "store at {} failed verification (bad shards: {bad:?}); refusing to serve — \
-                 pass --skip-corrupt to serve degraded",
-                cfg.store.display()
-            );
-            if !cfg.quiet {
-                eprintln!(
-                    "warning: serving degraded — verification flagged shards {bad:?} at {}",
-                    cfg.store.display()
-                );
-            }
-        }
-    }
-    let cache = if cfg.cache_bytes > 0 {
-        let cache = Arc::new(ShardCache::new(cfg.cache_bytes));
-        cache.spawn_prefetcher(cfg.store.clone());
-        reader.attach_cache(cache.clone());
-        Some(cache)
-    } else {
-        None
-    };
-    let shapes = reader.meta.shapes();
-    ensure!(
-        shapes.p > 0 || !shapes.layers.is_empty(),
-        "store at {} records no gradient geometry (pre-redesign cache?); re-run `grass cache`",
-        cfg.store.display()
-    );
-    let spec = reader.meta.spec()?;
-    let seed = reader.meta.seed;
-    let bank = spec.build_bank(&shapes, seed)?;
-    ensure!(
-        bank.output_dim() == reader.meta.k,
-        "rebuilt bank emits {} columns but the store has k = {}",
-        bank.output_dim(),
-        reader.meta.k
-    );
-    let model = reader.meta.model.as_str();
-    ensure!(
-        model == SYNTH_MODEL || model.is_empty(),
-        "serving store model '{model}' needs the PJRT runtime per query; only synthetic-model \
-         stores are servable today"
-    );
-
-    let artifact = if cfg.use_artifact {
-        match PrecondArtifact::load_if_present(&cfg.store)? {
-            Some(a) => {
-                a.validate_store(&reader.meta)?;
-                Some(Arc::new(a))
-            }
-            None => None,
-        }
-    } else {
-        None
-    };
-    let artifact_loaded = artifact.is_some();
-
-    let base_opts = StreamOpts {
-        mem_budget: cfg.mem_budget,
-        workers: cfg.workers.max(1),
-        retry: RetryPolicy {
-            retries: cfg.retries,
-            backoff: Duration::from_millis(cfg.retry_backoff_ms),
-            seed,
-        },
-        skip_corrupt: cfg.skip_corrupt,
-        ..StreamOpts::default()
-    };
-
-    let mut engines = BTreeMap::new();
-    for name in &cfg.scorers {
-        let scorer = canon_scorer(name).to_string();
-        if engines.contains_key(&scorer) {
-            continue;
-        }
-        let pspec = match &cfg.precond {
-            Some(s) => PrecondSpec::parse_with(s, cfg.damping)?,
-            None => PrecondSpec::default_for_scorer(&scorer, cfg.damping),
-        };
-        let mut opts = base_opts.clone();
-        if pspec.needs_fim() {
-            opts.artifact = artifact.clone();
-        }
-        let mut aspec = AttributionSpec::new(&scorer, spec.clone(), seed);
-        aspec.damping = cfg.damping;
-        aspec.layout = bank.layer_dims();
-        aspec.precond = Some(pspec);
-        let mut attributor = from_spec(&aspec)
-            .with_context(|| format!("building serve engine for scorer '{scorer}'"))?;
-        attributor
-            .cache_stream(&reader, &opts)
-            .with_context(|| format!("ingesting store for scorer '{scorer}'"))?;
-        let pstats = attributor.precond_stats();
-        engines.insert(
-            scorer,
-            Engine {
-                attributor,
-                fim_rows: pstats.fim_rows,
-                describe: pstats.describe,
-            },
-        );
-    }
-
-    Ok(ServerState {
-        admission: Arc::new(Admission::new(cfg.max_in_flight)),
-        meta: reader.meta.clone(),
-        bank,
-        engines,
-        metrics: Metrics::new(),
-        cache,
-        artifact_loaded,
-        store_opens: AtomicU64::new(1),
-        jobs: Mutex::new(None),
-        shutdown: AtomicBool::new(false),
-        addr: "127.0.0.1:0".parse().expect("literal addr"),
-        cfg,
-    })
-}
-
-/// Score one admitted job (already past admission + deadline checks).
-fn score_request(state: &ServerState, req: &ScoreRequest, deadline: &Deadline) -> Response {
+/// Score one admitted job (already past admission + deadline checks)
+/// against the epoch it was admitted under.
+fn score_request(
+    state: &ServerState,
+    hot: &HotState,
+    req: &ScoreRequest,
+    deadline: &Deadline,
+) -> Response {
     let id = req.id;
+    #[cfg(any(test, feature = "fault-injection"))]
+    if req.scorer == "__panic__" {
+        panic!("injected worker panic (scorer '__panic__')");
+    }
     let scorer = canon_scorer(&req.scorer).to_string();
-    let Some(engine) = state.engines.get(&scorer) else {
-        let available: Vec<&str> = state.engines.keys().map(|s| s.as_str()).collect();
+    let Some(engine) = hot.engines.get(&scorer) else {
+        let available: Vec<&str> = hot.engines.keys().map(|s| s.as_str()).collect();
         return Response::Error {
             id,
             kind: ErrorKind::BadRequest,
@@ -367,9 +360,9 @@ fn score_request(state: &ServerState, req: &ScoreRequest, deadline: &Deadline) -
         };
     };
     let m = req.queries.m();
-    let k = state.meta.k;
+    let k = hot.meta.k;
     let (queries, classes) = match &req.queries {
-        QueryPayload::Synth { m } => match synth_queries(&state.meta, &state.bank, *m) {
+        QueryPayload::Synth { m } => match synth_queries(&hot.meta, &hot.bank, *m) {
             Ok((q, c)) => (q, Some(c)),
             Err(e) => {
                 return Response::Error {
@@ -379,7 +372,7 @@ fn score_request(state: &ServerState, req: &ScoreRequest, deadline: &Deadline) -
                 }
             }
         },
-        QueryPayload::Raw { m, rows } => match compress_raw_queries(&state.bank, rows, *m) {
+        QueryPayload::Raw { m, rows } => match compress_raw_queries(&hot.bank, rows, *m) {
             Ok(q) => (q, None),
             Err(e) => {
                 return Response::Error {
@@ -439,8 +432,8 @@ fn score_request(state: &ServerState, req: &ScoreRequest, deadline: &Deadline) -
             retries_attempted: c.retries_attempted,
         },
         None => CoverageInfo {
-            rows_total: state.meta.n,
-            rows_scored: state.meta.n,
+            rows_total: hot.meta.n,
+            rows_scored: hot.meta.n,
             quarantined: vec![],
             retries_attempted: 0,
         },
@@ -472,15 +465,29 @@ fn score_request(state: &ServerState, req: &ScoreRequest, deadline: &Deadline) -
         self_influence,
         classes,
         coverage,
+        epoch: hot.epoch,
         elapsed_ms: deadline.elapsed().as_secs_f64() * 1e3,
     }))
 }
 
-/// One worker: drain jobs until the channel closes.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One worker: drain jobs until the channel closes. Each job runs under
+/// `catch_unwind`, so a panicking scorer answers its client with a typed
+/// `internal` error instead of hanging the session; the worker then exits
+/// and the supervisor respawns it.
 fn worker_loop(state: Arc<ServerState>, rx: Arc<Mutex<Receiver<Job>>>) {
     loop {
         let job = {
-            let guard = rx.lock().unwrap();
+            let guard = lock_unpoisoned(&rx);
             guard.recv()
         };
         let Ok(Job {
@@ -492,28 +499,122 @@ fn worker_loop(state: Arc<ServerState>, rx: Arc<Mutex<Receiver<Job>>>) {
         else {
             return; // sender dropped: shutdown drain finished
         };
-        let resp = if deadline.expired() {
+        let id = req.id;
+        if deadline.expired() {
             state
                 .metrics
                 .deadline_exceeded
                 .fetch_add(1, Ordering::Relaxed);
-            Response::Error {
-                id: req.id,
+            let resp = Response::Error {
+                id,
                 kind: ErrorKind::DeadlineExceeded,
                 message: format!(
                     "request waited {:.1} ms, past its deadline",
                     deadline.elapsed().as_secs_f64() * 1e3
                 ),
+            };
+            drop(ticket); // free the admission slot before the reply blocks
+            let _ = reply.send(resp);
+            continue;
+        }
+        // Pin the epoch for the whole request: a concurrent reload swaps
+        // the RwLock'd Arc, but this job finishes on the state it started
+        // with.
+        let hot = state.hot();
+        match catch_unwind(AssertUnwindSafe(|| {
+            score_request(&state, &hot, &req, &deadline)
+        })) {
+            Ok(resp) => {
+                if matches!(resp, Response::Scores(_)) {
+                    state.metrics.note_latency(deadline.elapsed());
+                }
+                drop(ticket); // free the admission slot before the reply blocks
+                let _ = reply.send(resp);
             }
-        } else {
-            let r = score_request(&state, &req, &deadline);
-            if matches!(r, Response::Scores(_)) {
-                state.metrics.note_latency(deadline.elapsed());
+            Err(payload) => {
+                state.metrics.panics.fetch_add(1, Ordering::Relaxed);
+                state.metrics.internal_errors.fetch_add(1, Ordering::Relaxed);
+                let msg = panic_message(payload.as_ref());
+                drop(ticket);
+                let _ = reply.send(Response::Error {
+                    id,
+                    kind: ErrorKind::Internal,
+                    message: format!("worker panicked while scoring: {msg}"),
+                });
+                // The thread's state is suspect after an unwind through
+                // scorer internals — exit and let the supervisor respawn.
+                return;
             }
-            r
-        };
-        drop(ticket); // free the admission slot before the reply blocks
-        let _ = reply.send(resp);
+        }
+    }
+}
+
+fn spawn_worker(state: Arc<ServerState>, rx: Arc<Mutex<Receiver<Job>>>) -> JoinHandle<()> {
+    std::thread::spawn(move || worker_loop(state, rx))
+}
+
+/// The drain sequence — the single exit path shared by SIGTERM/SIGINT and
+/// the protocol `shutdown` request. Queued jobs finish (workers drain the
+/// closed channel), workers and open connections get `drain_ms` to wind
+/// down, and the final report lands in `stats.drain` + stdout.
+fn drain(state: &Arc<ServerState>, mut workers: Vec<JoinHandle<()>>) {
+    let started = Instant::now();
+    let budget = Duration::from_millis(state.cfg.drain_ms.max(1));
+    let reason = lock_unpoisoned(&state.drain_reason)
+        .clone()
+        .unwrap_or_else(|| "shutdown".to_string());
+    // Closing the channel is what ends the workers: queued jobs drain
+    // (mpsc lets receivers finish buffered sends), then recv() errors.
+    drop(lock_unpoisoned(&state.jobs).take());
+    let total = workers.len();
+    let mut joined = 0usize;
+    let mut forced = false;
+    loop {
+        let mut remaining = Vec::new();
+        for w in workers {
+            if w.is_finished() {
+                let _ = w.join();
+                joined += 1;
+            } else {
+                remaining.push(w);
+            }
+        }
+        workers = remaining;
+        if workers.is_empty() {
+            break;
+        }
+        if started.elapsed() >= budget {
+            // Leak rather than block forever on a wedged scorer: the
+            // process is exiting anyway, and the report says so.
+            forced = true;
+            break;
+        }
+        std::thread::sleep(ACCEPT_TICK);
+    }
+    // Sessions poll the shutdown flag between frames (their reads tick),
+    // so open connections close themselves; give them the same budget.
+    while state.metrics.active_connections() > 0 && started.elapsed() < budget {
+        std::thread::sleep(ACCEPT_TICK);
+    }
+    let conns_left = state.metrics.active_connections();
+    if conns_left > 0 {
+        forced = true;
+    }
+    let report = Json::obj(vec![
+        ("reason", Json::Str(reason.clone())),
+        ("forced", Json::Bool(forced)),
+        ("workers_total", Json::Num(total as f64)),
+        ("workers_joined", Json::Num(joined as f64)),
+        ("connections_at_exit", Json::Num(conns_left as f64)),
+        (
+            "elapsed_ms",
+            Json::Num(started.elapsed().as_secs_f64() * 1e3),
+        ),
+    ]);
+    *lock_unpoisoned(&state.drain_report) = Some(report);
+    if !state.cfg.quiet {
+        println!("serve: graceful shutdown ({reason}) — final metrics:");
+        println!("{}", state.stats_json().to_string_pretty());
     }
 }
 
@@ -529,7 +630,7 @@ impl ServerHandle {
         self.addr
     }
 
-    /// Block until the daemon shuts down (via a `shutdown` request).
+    /// Block until the daemon shuts down (signal or `shutdown` request).
     pub fn join(self) -> Result<()> {
         self.accept
             .join()
@@ -539,58 +640,98 @@ impl ServerHandle {
 
 /// Build hot state, bind, and start serving in background threads.
 /// Returns once the daemon is accepting connections.
+///
+/// Signal handlers are NOT installed here — embedders and tests keep
+/// their process disposition; only the CLI path ([`run`]) installs them.
 pub fn spawn(cfg: ServeConfig) -> Result<ServerHandle> {
-    let mut state = build_state(cfg)?;
-    let listener = TcpListener::bind(&state.cfg.addr)
-        .with_context(|| format!("binding {}", state.cfg.addr))?;
+    let hot = HotState::build(&cfg, &cfg.store, 1, None)?;
+    let listener =
+        TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
     let addr = listener.local_addr()?;
-    state.addr = addr;
-    let state = Arc::new(state);
+    // Non-blocking accept: the loop has to poll the shutdown flag and the
+    // signal box, and supervise workers, even when no client connects.
+    listener
+        .set_nonblocking(true)
+        .context("setting the listener non-blocking")?;
+    let state = Arc::new(ServerState {
+        admission: Arc::new(Admission::new(cfg.max_in_flight)),
+        metrics: Metrics::new(),
+        hot: RwLock::new(Arc::new(hot)),
+        store_opens: AtomicU64::new(1),
+        reloading: AtomicBool::new(false),
+        jobs: Mutex::new(None),
+        shutdown: AtomicBool::new(false),
+        drain_reason: Mutex::new(None),
+        drain_report: Mutex::new(None),
+        addr,
+        cfg,
+    });
 
     let (tx, rx) = mpsc::channel::<Job>();
-    *state.jobs.lock().unwrap() = Some(tx);
+    *lock_unpoisoned(&state.jobs) = Some(tx);
     let rx = Arc::new(Mutex::new(rx));
-    let workers: Vec<JoinHandle<()>> = (0..state.cfg.workers.max(1))
-        .map(|_| {
-            let state = state.clone();
-            let rx = rx.clone();
-            std::thread::spawn(move || worker_loop(state, rx))
-        })
+    let mut workers: Vec<JoinHandle<()>> = (0..state.cfg.workers.max(1))
+        .map(|_| spawn_worker(state.clone(), rx.clone()))
         .collect();
 
     let accept_state = state.clone();
     let accept = std::thread::spawn(move || {
-        for conn in listener.incoming() {
+        loop {
+            if let Some(sig) = signal::pending() {
+                accept_state.begin_shutdown(sig);
+            }
             if accept_state.shutdown.load(Ordering::Acquire) {
                 break;
             }
-            let Ok(stream) = conn else { continue };
-            let conn_state = accept_state.clone();
-            std::thread::spawn(move || crate::serve::session::handle_conn(stream, conn_state));
+            // Supervise: respawn any worker whose thread died (panic
+            // escape hatch in worker_loop).
+            for slot in workers.iter_mut() {
+                if slot.is_finished() {
+                    let dead = std::mem::replace(
+                        slot,
+                        spawn_worker(accept_state.clone(), rx.clone()),
+                    );
+                    let _ = dead.join();
+                    accept_state.metrics.respawns.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    // The listener's non-blocking mode is inherited by
+                    // accepted sockets on some platforms; sessions use
+                    // timeouts, not non-blocking reads.
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let conn_state = accept_state.clone();
+                    std::thread::spawn(move || {
+                        crate::serve::session::handle_conn(stream, conn_state)
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_TICK);
+                }
+                Err(_) => std::thread::sleep(ACCEPT_TICK),
+            }
         }
-        // Drain: close the job channel, let workers finish queued work.
-        drop(accept_state.jobs.lock().unwrap().take());
-        for w in workers {
-            let _ = w.join();
-        }
-        if !accept_state.cfg.quiet {
-            println!("serve: graceful shutdown — final metrics:");
-            println!("{}", accept_state.stats_json().to_string_pretty());
-        }
+        drain(&accept_state, workers);
     });
     Ok(ServerHandle { addr, accept })
 }
 
-/// `grass serve` entry point: spawn, announce, and block until shutdown.
+/// `grass serve` entry point: install signal handlers, spawn, announce,
+/// and block until a signal or shutdown request drains the daemon.
 pub fn run(cfg: ServeConfig) -> Result<()> {
+    signal::install();
     let quiet = cfg.quiet;
     let store = cfg.store.clone();
     let scorers = cfg.scorers.clone();
+    let drain_ms = cfg.drain_ms;
     let handle = spawn(cfg)?;
     if !quiet {
         println!(
-            "serve: listening on {} (store {}, scorers {scorers:?}) — send a shutdown \
-             request or `grass query --addr {} --shutdown` to stop",
+            "serve: listening on {} (store {}, scorers {scorers:?}) — SIGTERM/SIGINT or \
+             `grass query --addr {} --shutdown` drains within {drain_ms} ms",
             handle.addr(),
             store.display(),
             handle.addr()

@@ -2,36 +2,99 @@
 //! scoring jobs to the worker pool, write replies. One thread per
 //! connection; all heavy work happens on the bounded worker pool, so a
 //! slow client costs one blocked thread, not a scoring slot.
+//!
+//! Slow-client protection: reads tick on a short timeout (so the loop
+//! observes the shutdown flag between frames), writes carry a bounded
+//! timeout, and a connection that completes no frame for `--idle-ms` is
+//! reaped — a byte-dribbling peer cannot hold a session thread forever.
+//! Frames are bounded by [`proto::MAX_FRAME_BYTES`]; parse failures and
+//! oversized frames are counted separately and answered with one typed
+//! error before the desynced stream is dropped.
 
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use crate::serve::admission::Deadline;
-use crate::serve::proto::{self, ErrorKind, Request, Response};
+use crate::serve::proto::{self, ErrorKind, FramePoll, FrameReader, Request, Response};
 use crate::serve::server::{Job, ServerState};
 
+/// Read-timeout tick: how often an idle session re-checks the shutdown
+/// flag and its idle budget.
+const SESSION_TICK: Duration = Duration::from_millis(100);
+
+/// Decrements the active-connections gauge on every exit path.
+struct ConnGuard(Arc<ServerState>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.metrics.conn_closed();
+    }
+}
+
 pub(crate) fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
+    state.metrics.conn_opened();
+    let _guard = ConnGuard(state.clone());
     let peer_read = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     };
-    let mut reader = BufReader::new(peer_read);
+    let _ = peer_read.set_read_timeout(Some(SESSION_TICK));
+    // A peer that stops reading its replies blocks the writer at most
+    // this long; the session then drops the connection.
+    let write_ms = state.cfg.idle_ms.max(1_000);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(write_ms)));
+    let mut frames = FrameReader::new(BufReader::new(peer_read));
     let mut writer = BufWriter::new(stream);
+    let idle = (state.cfg.idle_ms > 0).then(|| Duration::from_millis(state.cfg.idle_ms));
+    let mut last_frame = Instant::now();
     loop {
         if state.shutdown.load(Ordering::Acquire) {
             return;
         }
-        let frame = match proto::read_frame(&mut reader) {
-            Ok(Some(v)) => v,
-            Ok(None) => return, // clean EOF
+        let frame = match frames.poll_frame(proto::MAX_FRAME_BYTES) {
+            Ok(FramePoll::Frame(v)) => {
+                last_frame = Instant::now();
+                v
+            }
+            Ok(FramePoll::Eof) => return, // clean EOF
+            Ok(FramePoll::Pending) => {
+                if let Some(budget) = idle {
+                    if last_frame.elapsed() >= budget {
+                        state.metrics.reaped_idle.fetch_add(1, Ordering::Relaxed);
+                        let resp = Response::Error {
+                            id: 0,
+                            kind: ErrorKind::BadRequest,
+                            message: format!(
+                                "no complete frame in {} ms; closing idle connection",
+                                budget.as_millis()
+                            ),
+                        };
+                        let _ = proto::write_frame(&mut writer, &resp.to_line());
+                        return;
+                    }
+                }
+                continue;
+            }
             Err(e) => {
+                if matches!(e, proto::FrameError::TooLarge { .. }) {
+                    state
+                        .metrics
+                        .bad_frames_oversized
+                        .fetch_add(1, Ordering::Relaxed);
+                } else {
+                    state
+                        .metrics
+                        .bad_frames_parse
+                        .fetch_add(1, Ordering::Relaxed);
+                }
                 state.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
                 let resp = Response::Error {
                     id: 0,
                     kind: ErrorKind::BadRequest,
-                    message: format!("unparseable frame: {e:#}"),
+                    message: format!("unparseable frame: {e}"),
                 };
                 let _ = proto::write_frame(&mut writer, &resp.to_line());
                 return; // desynced stream: drop the connection
@@ -60,9 +123,10 @@ pub(crate) fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
                 id,
                 stats: state.stats_json(),
             },
+            Request::Reload { id, store } => state.try_reload(id, store.as_deref()),
             Request::Shutdown { id } => {
                 let _ = proto::write_frame(&mut writer, &Response::ShuttingDown { id }.to_line());
-                state.begin_shutdown();
+                state.begin_shutdown("shutdown request");
                 return;
             }
             Request::Score(score) => {
@@ -89,7 +153,12 @@ pub(crate) fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
                             ticket,
                             reply: reply_tx,
                         };
-                        let enqueued = match state.jobs.lock().unwrap().as_ref() {
+                        let enqueued = match state
+                            .jobs
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner())
+                            .as_ref()
+                        {
                             Some(tx) => tx.send(job).is_ok(),
                             None => false,
                         };

@@ -140,16 +140,22 @@ impl ShardCache {
     /// failures are silently skipped — the scoring read path will hit (and
     /// handle) the same error itself.
     pub fn spawn_prefetcher(self: &Arc<Self>, dir: PathBuf) {
+        if let Ok(reader) = StoreReader::open(&dir) {
+            self.spawn_prefetcher_with(reader);
+        }
+    }
+
+    /// [`ShardCache::spawn_prefetcher`] with an explicit reader. The
+    /// serving daemon passes a clone of its hot reader so the prefetch
+    /// thread reads the same store epoch (and, under fault injection,
+    /// sees the same fault plan instead of silently bypassing it).
+    pub fn spawn_prefetcher_with(self: &Arc<Self>, reader: StoreReader) {
         let (tx, rx) = mpsc::channel::<usize>();
         *self.prefetch.lock().unwrap() = Some(tx);
         // Weak: the thread must not keep the cache (and thus the channel)
         // alive, or it would never observe the close.
         let cache = Arc::downgrade(self);
         std::thread::spawn(move || {
-            let reader = match StoreReader::open(&dir) {
-                Ok(r) => r,
-                Err(_) => return,
-            };
             while let Ok(shard) = rx.recv() {
                 let Some(cache) = cache.upgrade() else { return };
                 if cache.contains(shard) {

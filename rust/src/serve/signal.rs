@@ -1,0 +1,101 @@
+//! Std-only SIGTERM/SIGINT capture for the serving daemon.
+//!
+//! The handler is the minimal async-signal-safe kind: one atomic store
+//! into a process-global flag. The accept loop (already a non-blocking
+//! poll so a signal flag is enough to wake it) observes the flag on its
+//! next tick and enters the same drain sequence a protocol `shutdown`
+//! request uses. No `libc` crate — the C `signal(2)` entry point is
+//! declared directly; on non-Unix targets installation is a no-op and the
+//! protocol `shutdown` request remains the only trigger.
+//!
+//! Handlers are installed by [`install`] from the CLI path
+//! ([`crate::serve::run`]) only — library embedders and tests that
+//! [`crate::serve::spawn`] a daemon in-process never have their process
+//! signal disposition hijacked.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+
+/// Last shutdown signal received (0 = none).
+static PENDING: AtomicUsize = AtomicUsize::new(0);
+
+/// Whether this process opted into signal-driven drains ([`install`]).
+/// [`pending`] reports nothing until armed, so in-process daemons
+/// (tests, embedders) never react to flags they did not ask for.
+static WATCHED: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(sig: i32) {
+    // Async-signal-safe: a single atomic store.
+    PENDING.store(sig as usize, Ordering::SeqCst);
+}
+
+/// Install SIGTERM/SIGINT handlers that flag a draining shutdown.
+/// Idempotent; no-op on non-Unix targets.
+#[cfg(unix)]
+pub fn install() {
+    WATCHED.store(true, Ordering::SeqCst);
+    extern "C" {
+        // `sighandler_t signal(int signum, sighandler_t handler)` — both
+        // handler values are pointer-sized, so `usize` matches the ABI on
+        // every supported Unix target.
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    let handler = on_signal as extern "C" fn(i32) as usize;
+    unsafe {
+        signal(SIGTERM, handler);
+        signal(SIGINT, handler);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install() {
+    WATCHED.store(true, Ordering::SeqCst);
+}
+
+/// The signal name pending shutdown, if one was received. Always `None`
+/// until [`install`] armed this process.
+pub fn pending() -> Option<&'static str> {
+    if !WATCHED.load(Ordering::SeqCst) {
+        return None;
+    }
+    match PENDING.load(Ordering::SeqCst) as i32 {
+        SIGINT => Some("SIGINT"),
+        SIGTERM => Some("SIGTERM"),
+        _ => None,
+    }
+}
+
+/// Clear both flags (tests that raise signals in-process).
+#[cfg(any(test, feature = "fault-injection"))]
+pub fn reset() {
+    PENDING.store(0, Ordering::SeqCst);
+    WATCHED.store(false, Ordering::SeqCst);
+}
+
+/// Arm [`pending`] without touching the process signal disposition
+/// (tests that simulate signal delivery in-process).
+#[cfg(any(test, feature = "fault-injection"))]
+pub fn arm_for_tests() {
+    WATCHED.store(true, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pending_reports_the_stored_signal_only_when_armed() {
+        reset();
+        assert_eq!(pending(), None);
+        on_signal(SIGTERM);
+        assert_eq!(pending(), None, "unarmed process reports nothing");
+        arm_for_tests();
+        assert_eq!(pending(), Some("SIGTERM"));
+        on_signal(SIGINT);
+        assert_eq!(pending(), Some("SIGINT"));
+        reset();
+        assert_eq!(pending(), None);
+    }
+}

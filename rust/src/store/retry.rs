@@ -8,15 +8,30 @@
 //! quarantines the shard in a shared [`ReadLog`] so every later block of
 //! the same shard is skipped without re-touching the bad file. The log
 //! also counts attempted retries for coverage reports and bench records.
+//!
+//! The log additionally carries an optional **circuit breaker** for
+//! long-lived processes (the serving daemon): when armed via
+//! [`ReadLog::set_breaker`], every failed read *attempt* of a shard is
+//! counted, and a shard that accumulates the threshold is promoted to the
+//! quarantine set even when retries would still be available — later
+//! requests degrade instantly instead of re-paying backoff sleeps against
+//! a persistently bad file. Batch runs leave the breaker disarmed
+//! (threshold 0) and keep the exact pre-breaker behaviour.
 
 use super::error::StoreErrorKind;
 use super::{RowBlock, StoreReader};
 use crate::sketch::rng::{splitmix64, Pcg};
 use anyhow::Result;
-use std::collections::BTreeSet;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Recover a mutex guard even if a holder panicked — the log's state is
+/// plain counters, always valid.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// Bounded exponential backoff with deterministic jitter.
 #[derive(Debug, Clone)]
@@ -69,22 +84,29 @@ impl RetryPolicy {
 pub struct ReadLog {
     quarantined: Mutex<BTreeSet<usize>>,
     retries: AtomicU64,
+    /// Failed read attempts per shard (feeds the circuit breaker).
+    failures: Mutex<BTreeMap<usize, u64>>,
+    /// Breaker threshold: failed attempts per shard before it is
+    /// force-quarantined. 0 = breaker disarmed.
+    breaker: AtomicUsize,
+    /// How many shards the breaker has promoted to quarantine.
+    trips: AtomicU64,
 }
 
 impl ReadLog {
     pub fn is_quarantined(&self, shard: usize) -> bool {
-        self.quarantined.lock().unwrap().contains(&shard)
+        lock_unpoisoned(&self.quarantined).contains(&shard)
     }
 
     /// Mark a shard quarantined; returns `true` if it was newly added
     /// (callers warn exactly once per shard).
     pub fn quarantine(&self, shard: usize) -> bool {
-        self.quarantined.lock().unwrap().insert(shard)
+        lock_unpoisoned(&self.quarantined).insert(shard)
     }
 
     /// Sorted quarantined shard indices.
     pub fn quarantined(&self) -> Vec<usize> {
-        self.quarantined.lock().unwrap().iter().copied().collect()
+        lock_unpoisoned(&self.quarantined).iter().copied().collect()
     }
 
     pub fn note_retry(&self) {
@@ -93,6 +115,55 @@ impl ReadLog {
 
     pub fn retries_attempted(&self) -> u64 {
         self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Arm (or, with 0, disarm) the circuit breaker: a shard whose failed
+    /// read attempts reach `threshold` is promoted straight to quarantine.
+    pub fn set_breaker(&self, threshold: usize) {
+        self.breaker.store(threshold, Ordering::Relaxed);
+    }
+
+    /// The armed breaker threshold (0 = disarmed).
+    pub fn breaker_threshold(&self) -> usize {
+        self.breaker.load(Ordering::Relaxed)
+    }
+
+    /// Shards the breaker has force-quarantined so far.
+    pub fn breaker_trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Sorted `(shard, failed_attempts)` pairs seen by this log.
+    pub fn failure_counts(&self) -> Vec<(usize, u64)> {
+        lock_unpoisoned(&self.failures)
+            .iter()
+            .map(|(&s, &c)| (s, c))
+            .collect()
+    }
+
+    /// Record one failed read attempt of `shard`. Returns `true` when the
+    /// breaker is armed and the shard just reached (or is past) the
+    /// threshold — the caller must stop retrying and degrade; the shard is
+    /// quarantined here so every later read skips it outright.
+    pub fn note_failure(&self, shard: usize) -> bool {
+        let count = {
+            let mut f = lock_unpoisoned(&self.failures);
+            let c = f.entry(shard).or_insert(0);
+            *c += 1;
+            *c
+        };
+        let threshold = self.breaker.load(Ordering::Relaxed) as u64;
+        if threshold == 0 || count < threshold {
+            return false;
+        }
+        if self.quarantine(shard) {
+            self.trips.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "warning: circuit breaker tripped — quarantining shard {shard} after \
+                 {count} failed read attempts"
+            );
+        }
+        true
     }
 }
 
@@ -112,6 +183,11 @@ impl<'a> ReadGuard<'a> {
     /// the block, leaving its output columns at their zero default — and
     /// `Err` when the failure is fatal (`skip_corrupt` off, or an error
     /// with no shard to quarantine).
+    ///
+    /// Every failed attempt (including transient ones that would retry) is
+    /// reported to the log's circuit breaker; a tripped breaker quarantines
+    /// the shard and degrades immediately, even mid-backoff and even
+    /// without `skip_corrupt` — the breaker is an explicit serving policy.
     pub fn read_block(&self, b: RowBlock, buf: &mut [f32]) -> Result<bool> {
         let shard = b.start / self.reader.meta.shard_rows.max(1);
         if self.log.is_quarantined(shard) {
@@ -124,11 +200,17 @@ impl<'a> ReadGuard<'a> {
                 Err(e)
                     if e.kind() == StoreErrorKind::Transient && attempt < self.retry.retries =>
                 {
+                    if self.log.note_failure(shard) {
+                        return Ok(false); // breaker tripped: stop retrying
+                    }
                     attempt += 1;
                     self.log.note_retry();
                     std::thread::sleep(self.retry.delay(attempt, b.start as u64));
                 }
                 Err(e) => {
+                    if self.log.note_failure(shard) {
+                        return Ok(false);
+                    }
                     if self.skip_corrupt {
                         if self.log.quarantine(shard) {
                             eprintln!(
@@ -182,5 +264,34 @@ mod tests {
         log.note_retry();
         log.note_retry();
         assert_eq!(log.retries_attempted(), 2);
+    }
+
+    #[test]
+    fn disarmed_breaker_only_counts() {
+        let log = ReadLog::default();
+        assert_eq!(log.breaker_threshold(), 0);
+        for _ in 0..10 {
+            assert!(!log.note_failure(3), "disarmed breaker never trips");
+        }
+        assert_eq!(log.failure_counts(), vec![(3, 10)]);
+        assert_eq!(log.breaker_trips(), 0);
+        assert!(!log.is_quarantined(3));
+    }
+
+    #[test]
+    fn armed_breaker_trips_at_threshold_and_quarantines() {
+        let log = ReadLog::default();
+        log.set_breaker(3);
+        assert!(!log.note_failure(5));
+        assert!(!log.note_failure(5));
+        assert!(log.note_failure(5), "third failure reaches the threshold");
+        assert!(log.is_quarantined(5), "tripping quarantines the shard");
+        assert_eq!(log.breaker_trips(), 1);
+        // Further failures keep reporting tripped but don't re-count trips.
+        assert!(log.note_failure(5));
+        assert_eq!(log.breaker_trips(), 1);
+        // Other shards are independent.
+        assert!(!log.note_failure(6));
+        assert_eq!(log.failure_counts(), vec![(5, 4), (6, 1)]);
     }
 }

@@ -130,6 +130,13 @@ pub struct BenchRecord {
     /// Shard-cache hit rate in `[0, 1]` of the serving stage, when a warm
     /// [`crate::serve::ShardCache`] was attached.
     pub cache_hit_rate: Option<f64>,
+    /// Fraction of admitted-eligible requests the serving stage answered
+    /// with scores (`answered / offered`, in `[0, 1]`), when the record
+    /// covers a resilience/soak stage.
+    pub availability: Option<f64>,
+    /// Requests the daemon shed with typed overloaded/deadline replies
+    /// during the measured serving stage.
+    pub sheds: Option<u64>,
     /// Payload codec of the store the record was measured against
     /// (`"f32"`, `"f16"`, `"bf16"`, `"int8"`), when the stage reads a
     /// quantized shard store.
@@ -164,6 +171,8 @@ impl BenchRecord {
             p95_ms: None,
             p99_ms: None,
             cache_hit_rate: None,
+            availability: None,
+            sheds: None,
             dtype: None,
             bytes_per_row: None,
             extra: vec![],
@@ -218,6 +227,15 @@ impl BenchRecord {
         self
     }
 
+    /// Record the serving stage's availability (fraction of offered
+    /// requests answered with scores) and typed-shed count (builder
+    /// style) so resilience regressions show up in `BENCH_*.json`.
+    pub fn with_availability(mut self, availability: f64, sheds: u64) -> Self {
+        self.availability = Some(availability);
+        self.sheds = Some(sheds);
+        self
+    }
+
     /// Record the payload codec of the measured store and its encoded
     /// bytes per row (builder style) so quantized-vs-f32 runs are
     /// distinguishable in `BENCH_*.json` artifacts.
@@ -268,6 +286,12 @@ impl BenchRecord {
         }
         if let Some(v) = self.cache_hit_rate {
             pairs.push(("cache_hit_rate", Json::Num(v)));
+        }
+        if let Some(v) = self.availability {
+            pairs.push(("availability", Json::Num(v)));
+        }
+        if let Some(v) = self.sheds {
+            pairs.push(("sheds", Json::Num(v as f64)));
         }
         if let Some(d) = &self.dtype {
             pairs.push(("dtype", Json::Str(d.clone())));
@@ -390,6 +414,14 @@ mod tests {
         assert_eq!(j.req("p95_ms").unwrap().as_f64(), Some(9.0));
         assert_eq!(j.req("p99_ms").unwrap().as_f64(), Some(14.0));
         assert_eq!(j.req("cache_hit_rate").unwrap().as_f64(), Some(0.97));
+        // Availability metrics are omitted until recorded, then serialized.
+        assert!(j.get("availability").is_none());
+        assert!(j.get("sheds").is_none());
+        let r = BenchRecord::from_duration("soak", 10, 64, 64, Duration::from_millis(10))
+            .with_availability(0.95, 7);
+        let j = r.to_json();
+        assert_eq!(j.req("availability").unwrap().as_f64(), Some(0.95));
+        assert_eq!(j.req("sheds").unwrap().as_usize(), Some(7));
         // Payload dtype fields are omitted until recorded, then serialized.
         assert!(j.get("dtype").is_none());
         assert!(j.get("bytes_per_row").is_none());

@@ -1,0 +1,580 @@
+//! Chaos soak for the serving daemon: scripted store faults (transient +
+//! corrupt reads), panicking scorers, byte-dribbling and mid-request
+//! disconnecting clients, oversized and unparseable frames, and concurrent
+//! hot reloads — all at once, asserting liveness (every honest request is
+//! answered correctly), correct shedding (every dishonest one gets a typed
+//! reply or a bounded reap, never a wedge), and a clean draining shutdown.
+//! A separate test drives the real binary through SIGTERM and checks the
+//! drain banner, final metrics dump, and exit code 0.
+
+use grass::data::synthgrad::SynthGrads;
+use grass::models::shapes::ModelShapes;
+use grass::serve::proto::{self, ScoreRequest};
+use grass::serve::{spawn, ErrorKind, QueryPayload, Request, Response, ServeConfig};
+use grass::sketch::{MethodSpec, Scratch};
+use grass::store::{FaultKind, FaultPlan, StoreMeta, StoreWriter};
+use grass::util::json::Json;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("grass_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Cache a flat synthetic store the daemon can serve (model `"synth"`,
+/// geometry recorded, compressed through the spec's bank).
+fn write_synth_store(tag: &str, n: usize, p: usize, seed: u64, shard_rows: usize) -> PathBuf {
+    let dir = tmpdir(tag);
+    let spec = MethodSpec::Sjlt { k: 32, s: 1 };
+    let shapes = ModelShapes::flat(p);
+    let bank = spec.build_bank(&shapes, seed).unwrap();
+    let c = bank.as_flat().unwrap();
+    let meta = StoreMeta::describe(&spec, seed, "synth", &shapes, shard_rows).unwrap();
+    let mut w = StoreWriter::create_described(&dir, meta).unwrap();
+    let rows = SynthGrads::new(p, seed).rows(0, n);
+    let mut out = vec![0.0f32; n * c.output_dim()];
+    let mut scratch = Scratch::new();
+    c.compress_batch_with(&rows, n, &mut out, &mut scratch);
+    w.push_batch(&out).unwrap();
+    w.finish().unwrap();
+    dir
+}
+
+fn quiet_cfg(dir: &PathBuf, scorers: &[&str]) -> ServeConfig {
+    ServeConfig {
+        store: dir.clone(),
+        scorers: scorers.iter().map(|s| s.to_string()).collect(),
+        quiet: true,
+        ..ServeConfig::default()
+    }
+}
+
+/// One NDJSON client connection: send a request frame, read one reply.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect to daemon");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Self {
+            reader,
+            writer: BufWriter::new(stream),
+        }
+    }
+
+    fn ask(&mut self, req: &Request) -> Response {
+        proto::write_frame(&mut self.writer, &req.to_line()).expect("write frame");
+        let frame = proto::read_frame(&mut self.reader)
+            .expect("read frame")
+            .expect("daemon closed the connection without replying");
+        Response::from_json(&frame).expect("parse response")
+    }
+
+    fn stats(&mut self) -> Json {
+        match self.ask(&Request::Stats { id: 0 }) {
+            Response::Stats { stats, .. } => stats,
+            other => panic!("expected stats, got {other:?}"),
+        }
+    }
+}
+
+fn score_req(id: u64, scorer: &str, m: usize) -> Request {
+    Request::Score(ScoreRequest {
+        id,
+        scorer: scorer.to_string(),
+        top_k: 3,
+        include_scores: false,
+        self_influence: false,
+        deadline_ms: None,
+        queries: QueryPayload::Synth { m },
+    })
+}
+
+fn stat(stats: &Json, path: &[&str]) -> f64 {
+    let mut v = stats;
+    for key in path {
+        v = v.get(key).unwrap_or_else(|| panic!("stats missing {path:?}"));
+    }
+    v.as_f64().unwrap_or_else(|| panic!("stats {path:?} is not a number"))
+}
+
+fn quarantined(stats: &Json) -> Vec<usize> {
+    match stats.get("breaker").and_then(|b| b.get("quarantined")) {
+        Some(Json::Arr(xs)) => xs
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .map(|f| f as usize)
+            .collect(),
+        _ => panic!("stats.breaker.quarantined missing"),
+    }
+}
+
+fn wait_until(mut cond: impl FnMut() -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The soak: a faulty store (one recoverable shard, one breaker-tripping
+/// shard, one corrupt shard), honest scoring load, panicking scorers,
+/// a stalled half-frame client, mid-request disconnects, garbage and
+/// oversized frames — concurrently. Every honest request succeeds with
+/// correct degraded coverage; every fault is a typed reply or a counted
+/// reap; the supervisor heals the worker pool; reloads clear the breaker
+/// once the underlying fault is gone; the drain is clean.
+#[test]
+fn chaos_soak_keeps_serving_through_faults_panics_and_bad_clients() {
+    let (n, p, seed) = (48usize, 64usize, 13u64);
+    let shard_rows = 8usize; // 6 shards: 0..=5
+    let dir = write_synth_store("soak", n, p, seed, shard_rows);
+
+    let plan = FaultPlan::new();
+    // Shard 1: one transient error — retries recover it, full coverage.
+    plan.fail_read(1, FaultKind::Transient, 0, 1);
+    // Shard 3: persistent transient errors — the breaker (threshold 2)
+    // trips mid-retry and quarantines it for the epoch. Five firings
+    // leave three for the first reload (trips again) and one for the
+    // second (absorbed by a retry: the shard heals).
+    plan.fail_read(3, FaultKind::Transient, 0, 5);
+    // Shard 4: one corrupt read — quarantined via skip_corrupt outright.
+    plan.fail_read(4, FaultKind::Corrupt, 0, 1);
+
+    let handle = spawn(ServeConfig {
+        workers: 2,
+        skip_corrupt: true,
+        cache_bytes: 0, // reads hit the fault hooks, not a warm cache
+        retries: 4,
+        retry_backoff_ms: 1,
+        breaker: 2,
+        idle_ms: 2_000,
+        drain_ms: 2_000,
+        faults: Some(plan),
+        ..quiet_cfg(&dir, &["graddot"])
+    })
+    .unwrap();
+    let addr = handle.addr();
+
+    // The build already exercised the fault plan: shard 1 recovered,
+    // shard 3 breaker-quarantined, shard 4 corrupt-quarantined.
+    {
+        let mut probe = Client::connect(addr);
+        let stats = probe.stats();
+        assert_eq!(stat(&stats, &["epoch"]), 1.0);
+        assert_eq!(stat(&stats, &["breaker", "threshold"]), 2.0);
+        assert_eq!(stat(&stats, &["breaker", "trips"]), 1.0);
+        assert_eq!(quarantined(&stats), vec![3, 4]);
+        assert!(stat(&stats, &["breaker", "failed_reads"]) >= 4.0);
+        // dropped before the chaos: an idle connection would be reaped
+    }
+
+    let degraded_rows = n - 2 * shard_rows;
+    std::thread::scope(|s| {
+        // Honest scoring load: every reply must be Scores with the
+        // degraded-but-correct coverage, pinned to epoch 1.
+        for t in 0..3u64 {
+            s.spawn(move || {
+                let mut c = Client::connect(addr);
+                for r in 0..4u64 {
+                    let resp = c.ask(&score_req(t * 100 + r, "graddot", 2));
+                    let Response::Scores(resp) = resp else {
+                        panic!("scorer {t} request {r} failed: {resp:?}");
+                    };
+                    assert_eq!(resp.epoch, 1);
+                    assert_eq!(resp.coverage.rows_scored, degraded_rows);
+                    assert_eq!(resp.coverage.quarantined, vec![3, 4]);
+                }
+            });
+        }
+        // Liveness pinger.
+        s.spawn(move || {
+            let mut c = Client::connect(addr);
+            for i in 0..20u64 {
+                let resp = c.ask(&Request::Ping { id: i });
+                assert!(matches!(resp, Response::Pong { .. }), "{resp:?}");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+        // Panicking scorer: each panic is a typed internal reply, the
+        // worker dies, and the supervisor respawns it.
+        s.spawn(move || {
+            for i in 0..2u64 {
+                let mut c = Client::connect(addr);
+                let resp = c.ask(&score_req(900 + i, "__panic__", 1));
+                let Response::Error { kind, message, .. } = resp else {
+                    panic!("expected a typed panic reply, got {resp:?}");
+                };
+                assert_eq!(kind, ErrorKind::Internal);
+                assert!(message.contains("panicked"), "{message}");
+            }
+        });
+        // Byte-dribbling client: half a frame, then silence — the idle
+        // reaper answers descriptively and closes the connection.
+        s.spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(b"{\"v\":1,").unwrap();
+            stream.flush().unwrap();
+            stream
+                .set_read_timeout(Some(Duration::from_secs(15)))
+                .unwrap();
+            let mut line = String::new();
+            BufReader::new(stream).read_line(&mut line).unwrap();
+            assert!(line.contains("idle connection"), "{line}");
+        });
+        // Mid-request disconnects: a full frame, then vanish before the
+        // reply — the admission ticket must still come back.
+        for t in 0..2u64 {
+            s.spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut w = BufWriter::new(stream);
+                proto::write_frame(&mut w, &score_req(800 + t, "graddot", 1).to_line())
+                    .unwrap();
+                // dropped here: FIN while the request is in flight
+            });
+        }
+        // Garbage frame: typed BadRequest, counted as a parse failure.
+        s.spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(b"this is not json\n").unwrap();
+            stream.flush().unwrap();
+            stream
+                .set_read_timeout(Some(Duration::from_secs(15)))
+                .unwrap();
+            let mut line = String::new();
+            BufReader::new(stream).read_line(&mut line).unwrap();
+            assert!(line.contains("unparseable frame"), "{line}");
+        });
+        // Oversized frame: one unbounded line must not OOM the daemon —
+        // the read is cut off at the frame bound and answered best-effort
+        // (the peer may see the connection drop mid-write instead).
+        s.spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let blob = vec![b'x'; proto::MAX_FRAME_BYTES + 2];
+            let _ = stream.write_all(&blob);
+            let _ = stream.flush();
+        });
+    });
+
+    // Supervisor evidence: both panics were counted, the pool healed, and
+    // no admission slot leaked across the chaos.
+    let mut client = Client::connect(addr);
+    wait_until(
+        || {
+            let s = client.stats();
+            stat(&s, &["workers", "respawns"]) >= 2.0
+                && stat(&s, &["admission", "queue_depth"]) == 0.0
+                && stat(&s, &["requests", "bad_frames_oversized"]) >= 1.0
+        },
+        "worker respawns, a drained admission queue, and the oversized-frame count",
+    );
+    let stats = client.stats();
+    assert_eq!(stat(&stats, &["workers", "panics"]), 2.0);
+    assert_eq!(stat(&stats, &["requests", "bad_frames_parse"]), 1.0);
+    assert!(stat(&stats, &["connections", "reaped_idle"]) >= 1.0);
+    assert!(stat(&stats, &["requests", "scored"]) >= 12.0);
+
+    // The pool still serves after every worker died at least once.
+    let resp = client.ask(&score_req(2000, "graddot", 2));
+    assert!(matches!(resp, Response::Scores(_)), "{resp:?}");
+
+    // Reload #1: fresh epoch, fresh breaker — but the underlying fault
+    // still fires, so shard 3 trips again; shard 4's fault is spent.
+    let resp = client.ask(&Request::Reload {
+        id: 3000,
+        store: None,
+    });
+    let Response::Reloaded { epoch, .. } = resp else {
+        panic!("reload failed: {resp:?}");
+    };
+    assert_eq!(epoch, 2);
+    let stats = client.stats();
+    assert_eq!(stat(&stats, &["epoch"]), 2.0);
+    assert_eq!(stat(&stats, &["store", "opens"]), 2.0);
+    assert_eq!(stat(&stats, &["breaker", "trips"]), 1.0);
+    assert_eq!(quarantined(&stats), vec![3]);
+
+    // Reload #2: one transient firing left — a retry absorbs it, the
+    // breaker stays closed, and coverage is whole again.
+    let resp = client.ask(&Request::Reload {
+        id: 3001,
+        store: None,
+    });
+    assert!(matches!(resp, Response::Reloaded { epoch: 3, .. }), "{resp:?}");
+    let stats = client.stats();
+    assert_eq!(stat(&stats, &["breaker", "trips"]), 0.0);
+    assert!(quarantined(&stats).is_empty());
+    let resp = client.ask(&score_req(4000, "graddot", 2));
+    let Response::Scores(r) = resp else {
+        panic!("post-reload score failed: {resp:?}");
+    };
+    assert_eq!(r.epoch, 3);
+    assert_eq!(r.coverage.rows_scored, n);
+    assert!(!r.coverage.is_degraded(), "{:?}", r.coverage);
+
+    // Clean drain: the protocol shutdown joins everything.
+    let resp = client.ask(&Request::Shutdown { id: 5000 });
+    assert!(matches!(resp, Response::ShuttingDown { .. }), "{resp:?}");
+    handle.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Hot reload under load: a hammering client never sees a failed request
+/// while same-dir and retargeting reloads swap epochs; racing reloads are
+/// single-flight (losers get a typed overloaded reply).
+#[test]
+fn hot_reload_swaps_epochs_without_failing_in_flight_requests() {
+    let (n, p, seed, m) = (32usize, 128usize, 3u64, 2usize);
+    let dir = write_synth_store("reload", n, p, seed, 8);
+    let dir2 = write_synth_store("reload_grown", 2 * n, p, seed, 8);
+
+    let handle = spawn(quiet_cfg(&dir, &["graddot"])).unwrap();
+    let addr = handle.addr();
+
+    let stop = &AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let hammer = s.spawn(move || {
+            let mut c = Client::connect(addr);
+            let mut served = 0u64;
+            let mut id = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                id += 1;
+                let resp = c.ask(&score_req(id, "graddot", m));
+                let Response::Scores(r) = resp else {
+                    panic!("request {id} failed during a reload: {resp:?}");
+                };
+                // Every reply is self-consistent with the epoch it was
+                // scored on: the original store or the grown one.
+                match r.epoch {
+                    1 | 2 => assert_eq!(r.n, n, "epoch {} row count", r.epoch),
+                    _ => assert_eq!(r.n, 2 * n, "epoch {} row count", r.epoch),
+                }
+                served += 1;
+            }
+            served
+        });
+        let mut c = Client::connect(addr);
+        std::thread::sleep(Duration::from_millis(30));
+        // Same-dir reload: the epoch bumps, nothing in flight fails.
+        let resp = c.ask(&Request::Reload {
+            id: 9001,
+            store: None,
+        });
+        assert!(matches!(resp, Response::Reloaded { epoch: 2, .. }), "{resp:?}");
+        std::thread::sleep(Duration::from_millis(30));
+        // Retargeting reload: the daemon swaps to the grown store.
+        let resp = c.ask(&Request::Reload {
+            id: 9002,
+            store: Some(dir2.to_str().unwrap().to_string()),
+        });
+        let Response::Reloaded { epoch, store, .. } = resp else {
+            panic!("retargeting reload failed: {resp:?}");
+        };
+        assert_eq!(epoch, 3);
+        assert!(store.contains("reload_grown"), "{store}");
+        std::thread::sleep(Duration::from_millis(30));
+        stop.store(true, Ordering::Relaxed);
+        let served = hammer.join().unwrap();
+        assert!(served > 0, "the hammer must have scored during the reloads");
+
+        // Racing reloads: single-flight. At least one wins; any loser gets
+        // a typed overloaded reply, never a broken epoch.
+        let outcomes: Vec<Response> = std::thread::scope(|s2| {
+            let h1 = s2.spawn(|| {
+                Client::connect(addr).ask(&Request::Reload {
+                    id: 9003,
+                    store: None,
+                })
+            });
+            let h2 = s2.spawn(|| {
+                Client::connect(addr).ask(&Request::Reload {
+                    id: 9004,
+                    store: None,
+                })
+            });
+            vec![h1.join().unwrap(), h2.join().unwrap()]
+        });
+        let wins = outcomes
+            .iter()
+            .filter(|r| matches!(r, Response::Reloaded { .. }))
+            .count();
+        assert!(wins >= 1, "{outcomes:?}");
+        for r in &outcomes {
+            if let Response::Error { kind, message, .. } = r {
+                assert_eq!(*kind, ErrorKind::Overloaded);
+                assert!(message.contains("reload"), "{message}");
+            }
+        }
+        let stats = c.stats();
+        assert_eq!(stat(&stats, &["epoch"]), (3 + wins) as f64);
+        assert_eq!(stat(&stats, &["store", "opens"]), (3 + wins) as f64);
+        assert_eq!(stat(&stats, &["reloads"]), (2 + wins) as f64);
+        // The current epoch serves the grown store.
+        let resp = c.ask(&score_req(9100, "graddot", m));
+        let Response::Scores(r) = resp else {
+            panic!("post-reload score failed: {resp:?}");
+        };
+        assert_eq!(r.n, 2 * n);
+        let resp = c.ask(&Request::Shutdown { id: 9999 });
+        assert!(matches!(resp, Response::ShuttingDown { .. }), "{resp:?}");
+    });
+    handle.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+/// A reload that would change the attribution space (different sketch
+/// seed) or point at an unreadable directory is refused descriptively;
+/// the current epoch keeps serving untouched.
+#[test]
+fn reload_refuses_an_incompatible_store_and_keeps_the_current_epoch() {
+    let dir = write_synth_store("reload_ok", 32, 64, 3, 8);
+    let other_seed = write_synth_store("reload_bad_seed", 32, 64, 4, 8);
+    let handle = spawn(quiet_cfg(&dir, &["graddot"])).unwrap();
+    let mut client = Client::connect(handle.addr());
+
+    let resp = client.ask(&Request::Reload {
+        id: 1,
+        store: Some(other_seed.to_str().unwrap().to_string()),
+    });
+    let Response::Error { kind, message, .. } = resp else {
+        panic!("incompatible reload must be refused: {resp:?}");
+    };
+    assert_eq!(kind, ErrorKind::BadRequest);
+    assert!(message.contains("reload refused"), "{message}");
+    assert!(message.contains("seed"), "{message}");
+
+    let resp = client.ask(&Request::Reload {
+        id: 2,
+        store: Some("/nonexistent/grass_store".to_string()),
+    });
+    let Response::Error { kind, message, .. } = resp else {
+        panic!("unreadable reload must be refused: {resp:?}");
+    };
+    assert_eq!(kind, ErrorKind::BadRequest);
+    assert!(message.contains("reload refused"), "{message}");
+
+    let stats = client.stats();
+    assert_eq!(stat(&stats, &["epoch"]), 1.0);
+    assert_eq!(stat(&stats, &["store", "opens"]), 1.0);
+    assert_eq!(stat(&stats, &["reloads"]), 0.0);
+    let resp = client.ask(&score_req(3, "graddot", 2));
+    assert!(matches!(resp, Response::Scores(_)), "{resp:?}");
+    client.ask(&Request::Shutdown { id: 4 });
+    handle.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&other_seed).ok();
+}
+
+/// Regression (admission-ticket hygiene): a client that disconnects after
+/// sending a request must not leak its admission slot. With a queue bound
+/// of 1, any leaked ticket wedges the daemon — every later request would
+/// shed overloaded forever.
+#[test]
+fn mid_request_disconnects_never_leak_admission_slots() {
+    let dir = write_synth_store("tickets", 32, 64, 5, 8);
+    let handle = spawn(ServeConfig {
+        workers: 1,
+        max_in_flight: 1,
+        ..quiet_cfg(&dir, &["graddot"])
+    })
+    .unwrap();
+    let addr = handle.addr();
+
+    // Three clients send a full score request and vanish before reading
+    // the reply; each briefly held the only admission slot.
+    for i in 0..3u64 {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = BufWriter::new(stream);
+        proto::write_frame(&mut w, &score_req(i, "graddot", 1).to_line()).unwrap();
+        // dropped: FIN before the reply is written
+    }
+
+    let mut client = Client::connect(addr);
+    wait_until(
+        || stat(&client.stats(), &["admission", "queue_depth"]) == 0.0,
+        "admission slots released after mid-request disconnects",
+    );
+    // The freed slot admits a real request on the first try.
+    let resp = client.ask(&score_req(10, "graddot", 2));
+    assert!(matches!(resp, Response::Scores(_)), "slot leaked: {resp:?}");
+    let stats = client.stats();
+    assert_eq!(stat(&stats, &["admission", "queue_depth"]), 0.0);
+    assert!(stat(&stats, &["requests", "scored"]) >= 1.0);
+    client.ask(&Request::Shutdown { id: 11 });
+    handle.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The real binary under SIGTERM: serve a store, score once over TCP,
+/// deliver the signal, and require a graceful drain — the "graceful
+/// shutdown (SIGTERM)" banner, the final metrics dump (with its drain
+/// report), and exit code 0.
+#[test]
+fn sigterm_drains_the_real_binary_and_dumps_final_metrics() {
+    if !cfg!(unix) {
+        return; // signal delivery via kill(1) is Unix-only
+    }
+    let dir = write_synth_store("sigterm", 32, 64, 5, 8);
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_grass"))
+        .args([
+            "serve",
+            "--store",
+            dir.to_str().unwrap(),
+            "--addr",
+            "127.0.0.1:0",
+            "--scorers",
+            "graddot",
+            "--drain-ms",
+            "2000",
+            "--shard-cache",
+            "0",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn the grass binary");
+    let mut lines = BufReader::new(child.stdout.take().expect("piped stdout"));
+    let mut banner = String::new();
+    lines.read_line(&mut banner).expect("read the serve banner");
+    assert!(banner.contains("serve: listening on"), "{banner}");
+    let addr: SocketAddr = banner
+        .split_whitespace()
+        .nth(3)
+        .expect("bound address in the banner")
+        .parse()
+        .expect("parse the bound address");
+
+    // Liveness over real TCP, then the signal.
+    let mut client = Client::connect(addr);
+    let resp = client.ask(&score_req(1, "graddot", 2));
+    assert!(matches!(resp, Response::Scores(_)), "{resp:?}");
+    drop(client);
+    let killed = std::process::Command::new("kill")
+        .args(["-TERM", &child.id().to_string()])
+        .status()
+        .expect("run kill");
+    assert!(killed.success());
+
+    let mut rest = String::new();
+    lines.read_to_string(&mut rest).expect("drain the daemon's stdout");
+    let status = child.wait().expect("wait for the daemon");
+    assert!(
+        status.success(),
+        "SIGTERM must exit 0, got {status:?}; output:\n{rest}"
+    );
+    assert!(
+        rest.contains("graceful shutdown (SIGTERM)"),
+        "drain banner missing from:\n{rest}"
+    );
+    assert!(rest.contains("\"drain\""), "drain report missing from:\n{rest}");
+    std::fs::remove_dir_all(&dir).ok();
+}
