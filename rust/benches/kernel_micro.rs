@@ -1,0 +1,248 @@
+//! Bench: per-kernel scalar-vs-SIMD A/B over the `linalg::simd` layer —
+//! every dispatched hot loop measured twice through the same closure,
+//! once pinned to the scalar reference (`set_simd_enabled(false)`) and
+//! once on the detected ISA. Emits `BENCH_kernel_micro.json` with
+//! per-kernel GB/s on both paths and the speedup; CI gates the `dot4x4`
+//! and `decode_f16` speedups at ≥ 1.5× on AVX2 runners (the JSON's
+//! top-level `simd_isa` says which kernel path the run dispatched to, so
+//! the gate can skip itself with a logged reason on scalar-only hosts).
+//!
+//! Run: `cargo bench --bench kernel_micro`
+//! Env: GRASS_BENCH_FAST=1 shrinks the workloads;
+//!      GRASS_BENCH_BUDGET_MS caps each measurement;
+//!      GRASS_NO_SIMD=1 collapses both sides to the scalar path.
+
+use grass::linalg::fwht::fwht_inplace;
+use grass::linalg::quantize::{f32_to_bf16_bits, f32_to_f16_bits};
+use grass::linalg::simd;
+use grass::sketch::rng::Pcg;
+use grass::store::PayloadDtype;
+use grass::util::bench::{self, black_box, BenchRecord};
+use std::time::Duration;
+
+fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..n).map(|_| rng.next_gaussian()).collect()
+}
+
+/// Measure one closure on the scalar path, then on the detected ISA.
+fn ab<F: FnMut()>(label: &str, mut f: F) -> (Duration, Duration) {
+    simd::set_simd_enabled(false);
+    let scalar = bench::bench(&format!("{label} [scalar]"), &mut f);
+    simd::set_simd_enabled(true);
+    let active = bench::bench(&format!("{label} [{}]", simd::active_isa()), &mut f);
+    println!("{}", scalar.report());
+    println!("{}", active.report());
+    (scalar.median, active.median)
+}
+
+/// One JSON record per kernel: bytes-touched throughput on both paths
+/// plus the scalar→SIMD speedup the CI gate reads.
+fn record(
+    records: &mut Vec<BenchRecord>,
+    name: &str,
+    elems: usize,
+    bytes: f64,
+    scalar: Duration,
+    active: Duration,
+) {
+    let gb = |d: Duration| bytes / d.as_secs_f64().max(1e-12) / 1e9;
+    let speedup = scalar.as_secs_f64() / active.as_secs_f64().max(1e-12);
+    println!(
+        "  {name}: {:.2} → {:.2} GB/s ({speedup:.2}×)",
+        gb(scalar),
+        gb(active)
+    );
+    records.push(
+        BenchRecord::from_duration(&format!("kernel:{name}"), 1, elems, elems, active)
+            .with("scalar_gb_s", gb(scalar))
+            .with("simd_gb_s", gb(active))
+            .with("speedup", speedup),
+    );
+}
+
+fn main() {
+    let fast = std::env::var("GRASS_BENCH_FAST").is_ok();
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    // GEMM microkernel: one 4×4 output tile over a long shared dimension,
+    // the inner loop of every matmul in the scorers.
+    {
+        let kdim = if fast { 1024 } else { 4096 };
+        let reps = 32;
+        let a = gaussian(4 * kdim, 1);
+        let b = gaussian(4 * kdim, 2);
+        let ar = [
+            &a[..kdim],
+            &a[kdim..2 * kdim],
+            &a[2 * kdim..3 * kdim],
+            &a[3 * kdim..],
+        ];
+        let br = [
+            &b[..kdim],
+            &b[kdim..2 * kdim],
+            &b[2 * kdim..3 * kdim],
+            &b[3 * kdim..],
+        ];
+        let (s, v) = ab("dot4x4", || {
+            for _ in 0..reps {
+                let mut acc = [[0.0f32; 4]; 4];
+                simd::dot4x4(ar, br, kdim, &mut acc);
+                black_box(&acc);
+            }
+        });
+        let bytes = (reps * 8 * kdim * 4) as f64;
+        record(&mut records, "dot4x4", 8 * kdim, bytes, s, v);
+    }
+
+    // axpy: the rank-1 update in the tall-skinny matmul tail paths.
+    {
+        let n = if fast { 1 << 14 } else { 1 << 16 };
+        let reps = 16;
+        let b = gaussian(n, 3);
+        let mut c = gaussian(n, 4);
+        let (s, v) = ab("axpy", || {
+            for _ in 0..reps {
+                simd::axpy(&mut c, 1.000001, &b);
+            }
+            black_box(&c);
+        });
+        let bytes = (reps * n * 12) as f64;
+        record(&mut records, "axpy", n, bytes, s, v);
+    }
+
+    // Mask gather: RandomMask / GraSS stage 1 (`out[i] = src[idx[i]]·s`).
+    {
+        let p = if fast { 1 << 16 } else { 1 << 18 };
+        let k = p / 16;
+        let reps = 16;
+        let src = gaussian(p, 5);
+        let idx = Pcg::new(6).sample_distinct(p, k);
+        let mut out = vec![0.0f32; k];
+        let (s, v) = ab("gather_scale", || {
+            for _ in 0..reps {
+                simd::gather_scale(&src, &idx, 0.5, &mut out);
+            }
+            black_box(&out);
+        });
+        let bytes = (reps * k * 8) as f64;
+        record(&mut records, "gather_scale", k, bytes, s, v);
+    }
+
+    // SJLT scatter: one dense coordinate chunk through the (bucket, sign)
+    // table, half the inputs zero (the vector win is the 8-wide zero-skip).
+    {
+        let chunk = 4096;
+        let k = 2048;
+        let sreps = 2usize;
+        let reps = if fast { 16 } else { 64 };
+        let mut rng = Pcg::new(7);
+        let g: Vec<f32> = (0..chunk)
+            .map(|_| {
+                if rng.next_f32() < 0.5 {
+                    0.0
+                } else {
+                    rng.next_gaussian()
+                }
+            })
+            .collect();
+        let table: Vec<(u32, f32)> = (0..chunk * sreps)
+            .map(|_| {
+                let b = (rng.next_u64() % k as u64) as u32;
+                let sgn = if rng.next_f32() < 0.5 { -1.0 } else { 1.0 };
+                (b, sgn)
+            })
+            .collect();
+        let mut acc = vec![0.0f32; k];
+        let (s, v) = ab("sjlt_scatter", || {
+            for _ in 0..reps {
+                simd::sjlt_scatter(&g, &table, sreps, &mut acc);
+            }
+            black_box(&acc);
+        });
+        let bytes = (reps * chunk * 4) as f64;
+        record(&mut records, "sjlt_scatter", chunk, bytes, s, v);
+    }
+
+    // FWHT: the full transform (log n butterfly sweeps + the 1/√n scale),
+    // measured through its real entry point.
+    {
+        let n = if fast { 1 << 12 } else { 1 << 14 };
+        let reps = 8;
+        let mut x = gaussian(n, 8);
+        let stages = n.trailing_zeros() as usize;
+        let (s, v) = ab("fwht", || {
+            for _ in 0..reps {
+                fwht_inplace(&mut x);
+            }
+            black_box(&x);
+        });
+        let bytes = (reps * n * stages * 8) as f64;
+        record(&mut records, "fwht", n, bytes, s, v);
+    }
+
+    // Payload decoders: the dequant-fused shard read path.
+    let n = if fast { 1 << 14 } else { 1 << 16 };
+    let vals = gaussian(n, 9);
+    {
+        let bytes: Vec<u8> = vals
+            .iter()
+            .flat_map(|&x| f32_to_f16_bits(x).to_le_bytes())
+            .collect();
+        let mut out = vec![0.0f32; n];
+        let reps = 16;
+        let (s, v) = ab("decode_f16", || {
+            for _ in 0..reps {
+                simd::decode_f16(&bytes, &mut out);
+            }
+            black_box(&out);
+        });
+        let moved = (reps * n * 6) as f64;
+        record(&mut records, "decode_f16", n, moved, s, v);
+    }
+    {
+        let bytes: Vec<u8> = vals
+            .iter()
+            .flat_map(|&x| f32_to_bf16_bits(x).to_le_bytes())
+            .collect();
+        let mut out = vec![0.0f32; n];
+        let reps = 16;
+        let (s, v) = ab("decode_bf16", || {
+            for _ in 0..reps {
+                simd::decode_bf16(&bytes, &mut out);
+            }
+            black_box(&out);
+        });
+        let moved = (reps * n * 6) as f64;
+        record(&mut records, "decode_bf16", n, moved, s, v);
+    }
+
+    // Row-framed int8 decode: per-row scale header + k codes per frame,
+    // through the same `decode_rows` entry the warm-cache read path uses.
+    {
+        let k = 1024;
+        let rows = n / k;
+        let dt = PayloadDtype::Int8;
+        let mut enc = Vec::with_capacity(rows * dt.row_bytes(k));
+        for row in vals.chunks(k) {
+            dt.encode_row(row, &mut enc);
+        }
+        let mut out = vec![0.0f32; rows * k];
+        let reps = 16;
+        let (s, v) = ab("decode_rows:int8", || {
+            for _ in 0..reps {
+                dt.decode_rows(&enc, k, rows, &mut out);
+            }
+            black_box(&out);
+        });
+        let moved = (reps * rows * (dt.row_bytes(k) + 4 * k)) as f64;
+        record(&mut records, "decode_rows_int8", rows * k, moved, s, v);
+    }
+
+    // The A/B loop leaves SIMD enabled, so the JSON's top-level
+    // `simd_isa` names the path the "simd_gb_s" numbers ran on.
+    match bench::write_bench_json("kernel_micro", &records) {
+        Ok(path) => println!("bench json: {}", path.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
+}

@@ -1,6 +1,13 @@
 //! Fast Walsh–Hadamard transform — the `H` in the FJLT's `P·H·D` sandwich.
 //! In-place, O(n log n), n must be a power of two. Normalised by `1/√n` so
 //! the transform is orthonormal (applying it twice gives the identity).
+//!
+//! Each butterfly stage runs through [`crate::linalg::simd::fwht_butterfly`]
+//! on the paired half-blocks, so the stage is vectorized whenever the
+//! half-block length `h` covers at least one vector lane group; the
+//! per-element arithmetic is identical to the scalar loop (bit-compatible).
+
+use crate::linalg::simd;
 
 /// In-place orthonormal FWHT. Panics unless `data.len()` is a power of two.
 pub fn fwht_inplace(data: &mut [f32]) {
@@ -8,19 +15,13 @@ pub fn fwht_inplace(data: &mut [f32]) {
     assert!(n.is_power_of_two(), "FWHT length {n} not a power of two");
     let mut h = 1;
     while h < n {
-        for block in (0..n).step_by(h * 2) {
-            for i in block..block + h {
-                let (a, b) = (data[i], data[i + h]);
-                data[i] = a + b;
-                data[i + h] = a - b;
-            }
+        for block in data.chunks_exact_mut(h * 2) {
+            let (lo, hi) = block.split_at_mut(h);
+            simd::fwht_butterfly(lo, hi);
         }
         h *= 2;
     }
-    let scale = 1.0 / (n as f32).sqrt();
-    for v in data.iter_mut() {
-        *v *= scale;
-    }
+    simd::scale_inplace(data, 1.0 / (n as f32).sqrt());
 }
 
 /// Next power of two ≥ n.

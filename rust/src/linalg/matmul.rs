@@ -21,19 +21,29 @@
 //! loops land within a small factor of a tuned BLAS while keeping the crate
 //! dependency-free; Table 2 compares method-vs-method on the same matmul
 //! substrate, so the *ratio* the paper reports is preserved.
+//!
+//! The microkernels themselves live in [`crate::linalg::simd`]: `micro`
+//! below is a thin façade over the runtime-dispatched `simd::axpy` /
+//! `simd::dot4x4` / `simd::dot_tile`, which pick AVX2+FMA, NEON, or the
+//! 8-wide-unrolled scalar reference once per process (and honour the
+//! `--no-simd` / `GRASS_NO_SIMD=1` escape hatch). The dot kernels skip
+//! vector dispatch below `simd::MIN_SIMD_K` shared-dimension elements —
+//! tiny-`k` edge tiles can't amortise vector setup — so the blocked loops
+//! here never need size checks of their own.
 
 use crate::util::par;
 
-/// Shared microkernels: every GEMM shape reduces to one of these two inner
-/// loops, so tuning (or later, SIMD intrinsics) lands in one place.
+/// Shared microkernels: every GEMM shape reduces to one of these inner
+/// loops. Each delegates to the runtime-dispatched kernel in
+/// [`crate::linalg::simd`], so ISA selection lands in one place.
 pub(crate) mod micro {
+    use crate::linalg::simd;
+
     /// `c += a · b` over one row — the rank-1 row update shared by
     /// [`super::matmul`] and [`super::matmul_at_b`].
     #[inline(always)]
     pub fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
-        for (cv, &bv) in c.iter_mut().zip(b) {
-            *cv += a * bv;
-        }
+        simd::axpy(c, a, b);
     }
 
     /// Register-tiled 4×4 dot-product block over a shared inner dimension:
@@ -41,16 +51,7 @@ pub(crate) mod micro {
     /// live in registers for the whole `kdim` sweep.
     #[inline(always)]
     pub fn dot4x4(a: [&[f32]; 4], b: [&[f32]; 4], kdim: usize, acc: &mut [[f32; 4]; 4]) {
-        for kk in 0..kdim {
-            let av = [a[0][kk], a[1][kk], a[2][kk], a[3][kk]];
-            let bv = [b[0][kk], b[1][kk], b[2][kk], b[3][kk]];
-            for (ai, row) in av.iter().zip(acc.iter_mut()) {
-                row[0] += ai * bv[0];
-                row[1] += ai * bv[1];
-                row[2] += ai * bv[2];
-                row[3] += ai * bv[3];
-            }
-        }
+        simd::dot4x4(a, b, kdim, acc);
     }
 
     /// Edge-tile fallback for [`dot4x4`]: `ib×jb` block with `ib, jb ≤ 4`.
@@ -63,15 +64,7 @@ pub(crate) mod micro {
         jb: usize,
         acc: &mut [[f32; 4]; 4],
     ) {
-        for kk in 0..kdim {
-            for ii in 0..ib {
-                let av = a[ii * kdim + kk];
-                let row = &mut acc[ii];
-                for (jj, cell) in row.iter_mut().enumerate().take(jb) {
-                    *cell += av * b[jj * kdim + kk];
-                }
-            }
-        }
+        simd::dot_tile(a, b, kdim, ib, jb, acc);
     }
 }
 
@@ -316,6 +309,40 @@ mod tests {
                     c[i],
                     want[i]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_dot4x4_tile_matches_naive() {
+        // Regression pin for the rewritten scalar microkernel (the per-kk
+        // av/bv temp arrays are gone; the tile is now sixteen 8-wide
+        // unrolled dot products): exact shape change, same results.
+        use crate::linalg::simd;
+        for kdim in [1usize, 7, 8, 64, 257] {
+            let mut rng = Pcg::new(40 + kdim as u64);
+            let rows: Vec<Vec<f32>> = (0..8)
+                .map(|_| (0..kdim).map(|_| rng.next_gaussian()).collect())
+                .collect();
+            let a = [&rows[0][..], &rows[1][..], &rows[2][..], &rows[3][..]];
+            let b = [&rows[4][..], &rows[5][..], &rows[6][..], &rows[7][..]];
+            let mut acc = [[0.0f32; 4]; 4];
+            simd::scalar::dot4x4(a, b, kdim, &mut acc);
+            for ii in 0..4 {
+                for jj in 0..4 {
+                    let mut want = 0.0f64;
+                    let mut cond = 0.0f64;
+                    for kk in 0..kdim {
+                        let p = a[ii][kk] as f64 * b[jj][kk] as f64;
+                        want += p;
+                        cond += p.abs();
+                    }
+                    assert!(
+                        (acc[ii][jj] as f64 - want).abs() <= 1e-6 * (1.0 + cond),
+                        "kdim={kdim} ({ii},{jj}): {} vs {want}",
+                        acc[ii][jj]
+                    );
+                }
             }
         }
     }

@@ -5,13 +5,15 @@
 //! register-tiled blocked matmuls behind the factorized compressors and the
 //! influence scoring GEMM, and the scalar quantization kernels
 //! (f16/bf16/int8) the store payload codecs decode through on every
-//! streamed read.
+//! streamed read. The hot loops of all of these dispatch through the
+//! [`simd`] layer, which picks AVX2+FMA / NEON / scalar once at runtime.
 
 pub mod cholesky;
 pub mod eigh;
 pub mod fwht;
 pub mod matmul;
 pub mod quantize;
+pub mod simd;
 pub mod stats;
 
 pub use cholesky::CholeskyFactor;

@@ -4,7 +4,8 @@
 //! The framing (row layout, scale headers, dtype tags) lives in
 //! [`crate::store::quant`]; this module is the pure numeric inner loops
 //! the dequant-on-read path runs per element, kept in `linalg` next to
-//! the matmuls that consume the decoded tiles.
+//! the matmuls that consume the decoded tiles. The bulk decode loops
+//! (f16/bf16/int8 → f32) dispatch through [`crate::linalg::simd`].
 
 /// Convert an `f32` to IEEE binary16 bits, rounding to nearest even.
 /// Overflow saturates to ±inf, underflow denormalizes and then flushes
@@ -114,12 +115,13 @@ pub fn quantize_i8(row: &[f32], scale: f32, out: &mut Vec<u8>) {
     }
 }
 
-/// Dequantize int8 codes back to `f32` against the row's scale.
+/// Dequantize int8 codes back to `f32` against the row's scale. Routes
+/// through the runtime-dispatched [`crate::linalg::simd::dequant_i8`]
+/// kernel — one exact widening convert plus one multiply per element on
+/// every ISA, so the result is identical to the scalar loop bit-for-bit.
 #[inline]
 pub fn dequantize_i8(bytes: &[u8], scale: f32, out: &mut [f32]) {
-    for (o, &b) in out.iter_mut().zip(bytes) {
-        *o = (b as i8) as f32 * scale;
-    }
+    crate::linalg::simd::dequant_i8(bytes, scale, out);
 }
 
 #[cfg(test)]

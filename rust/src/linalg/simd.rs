@@ -1,0 +1,1017 @@
+//! Runtime-dispatched SIMD kernels behind every hot loop in the crate.
+//!
+//! The crate is dependency-free, so this layer is hand-rolled on
+//! `std::arch`: one scalar reference implementation per kernel (the
+//! [`scalar`] module — always available, property-pinned against the
+//! vectorized paths by `tests/simd_kernels.rs`), an AVX2+FMA(+F16C)
+//! implementation for `x86_64`, and a NEON implementation for `aarch64`.
+//! The instruction set is picked **once at runtime** (`is_x86_feature_
+//! detected!` / `is_aarch64_feature_detected!`), so a single portable
+//! binary runs the widest loops the host supports.
+//!
+//! ## Dispatch table
+//!
+//! | kernel                | consumer                                   | AVX2+FMA | NEON | scalar |
+//! |-----------------------|--------------------------------------------|----------|------|--------|
+//! | [`dot4x4`]            | `matmul_abt` scoring / LoGra GEMM tile     | ✓ (8-wide FMA) | ✓ (4-wide FMA) | ✓ (8-wide unroll) |
+//! | [`dot`] / [`dot_tile`]| `matmul_abt` edge tiles                    | ✓        | ✓    | ✓ |
+//! | [`axpy`]              | `matmul` / `matmul_at_b` rank-1 updates    | ✓        | ✓    | ✓ |
+//! | [`add_assign`]        | private-accumulator reductions             | ✓        | ✓    | ✓ |
+//! | [`scale_inplace`]     | SJLT `1/√s`, FWHT `1/√n` normalisation     | ✓        | ✓    | ✓ |
+//! | [`fwht_butterfly`]    | FJLT's Walsh–Hadamard stages (`h ≥ 8`)     | ✓        | ✓    | ✓ |
+//! | [`gather_scale`]      | RandomMask / GraSS stage-1 batch gather    | ✓ (`vgatherdps`) | scalar | ✓ |
+//! | [`sjlt_scatter`]      | SJLT dense chunked-table scatter           | ✓ (vectorized zero-skip) | scalar | ✓ |
+//! | [`decode_f16`]        | f16 shard payload dequant                  | ✓ (`vcvtph2ps`) | scalar | ✓ |
+//! | [`decode_bf16`]       | bf16 shard payload dequant                 | ✓        | ✓    | ✓ |
+//! | [`dequant_i8`]        | int8 shard payload dequant                 | ✓        | ✓    | ✓ |
+//!
+//! Kernels marked "scalar" under NEON fall back to the reference loop on
+//! aarch64 (no gather instruction; f16 conversion intrinsics are not
+//! stable) — the dispatch layer makes adding them later a local change.
+//!
+//! ## Where SIMD is skipped
+//!
+//! The dot-product kernels fall back to the scalar path below
+//! [`MIN_SIMD_K`] shared-dimension elements: tiny-`k` edge tiles pay more
+//! in vector setup + horizontal reduction than the lanes save. Everything
+//! elementwise (axpy, scale, butterflies, decodes) vectorizes at any
+//! length with a scalar tail for the last `len % lanes` elements.
+//!
+//! ## Numerics
+//!
+//! Elementwise kernels (`scale_inplace`, `fwht_butterfly`,
+//! `gather_scale`, `add_assign`, the three decoders) perform *exactly*
+//! the scalar arithmetic per element, so they are bit-compatible with the
+//! reference. The FMA dot/axpy kernels fuse the multiply-add (one
+//! rounding instead of two) and reassociate the `k`-sum across lanes;
+//! `tests/simd_kernels.rs` pins them within `1e-6` of the scalar
+//! reference relative to `Σ|aᵢ·bᵢ|` (the natural condition measure of a
+//! dot product).
+//!
+//! ## Observability & escape hatch
+//!
+//! [`active_isa`] reports the selected instruction set (`"avx2+fma"`,
+//! `"neon"`, `"scalar"`); it is surfaced in `grass serve` stats
+//! (`simd_isa`), every `BENCH_*.json`, and the `grass serve` startup log.
+//! Setting `GRASS_NO_SIMD=1` in the environment (read once at first
+//! dispatch) or passing `--no-simd` to any `grass` subcommand (which
+//! calls [`set_simd_enabled`]`(false)`) forces the scalar reference
+//! everywhere, so the fallback stays testable on wide hosts.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Shared-dimension floor below which the dot-product kernels stay
+/// scalar: a `k < 16` tile cannot amortise vector setup and horizontal
+/// reduction (see module docs, "Where SIMD is skipped").
+pub const MIN_SIMD_K: usize = 16;
+
+/// Instruction set selected by runtime detection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable reference loops (also the `GRASS_NO_SIMD` escape hatch).
+    Scalar,
+    /// x86_64 with AVX2 + FMA + F16C (every AVX2-era core has all three).
+    Avx2,
+    /// aarch64 NEON (baseline on every aarch64 core).
+    Neon,
+}
+
+impl Isa {
+    /// Stable human/machine-readable name (what stats and bench JSON carry).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2+fma",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+static DETECTED: OnceLock<Isa> = OnceLock::new();
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+fn detect() -> Isa {
+    // Env escape hatch: checked once, folded into the cached detection so
+    // a `GRASS_NO_SIMD=1` process can never silently re-enable wide loops.
+    if std::env::var_os("GRASS_NO_SIMD").is_some_and(|v| v != "0") {
+        return Isa::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+            && is_x86_feature_detected!("f16c")
+        {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Isa::Neon;
+        }
+    }
+    Isa::Scalar
+}
+
+/// The instruction set every dispatched kernel will run on right now.
+#[inline]
+pub fn isa() -> Isa {
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        return Isa::Scalar;
+    }
+    *DETECTED.get_or_init(detect)
+}
+
+/// Name of the active instruction set: `"avx2+fma"`, `"neon"`, or
+/// `"scalar"`.
+pub fn active_isa() -> &'static str {
+    isa().as_str()
+}
+
+/// Runtime escape hatch (the `--no-simd` flag): `false` forces every
+/// dispatched kernel onto the scalar reference; `true` restores the
+/// detected instruction set (which stays `scalar` when the host lacks
+/// the features or `GRASS_NO_SIMD=1` was set at startup).
+pub fn set_simd_enabled(enabled: bool) {
+    FORCE_SCALAR.store(!enabled, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference implementations
+// ---------------------------------------------------------------------------
+
+/// Portable reference kernels. Every vectorized path is property-pinned
+/// against these (`tests/simd_kernels.rs`), and they *are* the dispatch
+/// target under `GRASS_NO_SIMD=1` / `--no-simd` / unsupported hosts.
+///
+/// The dot kernels are written with 8-wide unrolled partial sums and no
+/// per-`kk` temporaries, so the compiler's autovectorizer can use the
+/// baseline vector ISA (SSE2 on x86_64) even on the fallback path.
+pub mod scalar {
+    use crate::linalg::quantize::{bf16_bits_to_f32, f16_bits_to_f32};
+
+    /// `c += a · b` over one row (rank-1 row update).
+    #[inline]
+    pub fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
+        for (cv, &bv) in c.iter_mut().zip(b) {
+            *cv += a * bv;
+        }
+    }
+
+    /// Dot product with 8 independent partial sums (breaks the serial
+    /// add dependency chain, autovectorizes on the baseline ISA).
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let (a, b) = (&a[..n], &b[..n]);
+        let mut acc = [0.0f32; 8];
+        let ca = a.chunks_exact(8);
+        let cb = b.chunks_exact(8);
+        let (ra, rb) = (ca.remainder(), cb.remainder());
+        for (ea, eb) in ca.zip(cb) {
+            for l in 0..8 {
+                acc[l] += ea[l] * eb[l];
+            }
+        }
+        let mut tail = 0.0f32;
+        for (x, y) in ra.iter().zip(rb) {
+            tail += x * y;
+        }
+        let s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        s + tail
+    }
+
+    /// Register-tiled 4×4 dot-product block: `acc[ii][jj] += ⟨a[ii], b[jj]⟩`
+    /// over the shared inner dimension. Sixteen independent unrolled dot
+    /// products — the per-`kk` `av`/`bv` temp arrays of the original
+    /// kernel are gone, so nothing blocks autovectorization.
+    #[inline]
+    pub fn dot4x4(a: [&[f32]; 4], b: [&[f32]; 4], kdim: usize, acc: &mut [[f32; 4]; 4]) {
+        for (ii, row) in acc.iter_mut().enumerate() {
+            let ar = &a[ii][..kdim];
+            for (jj, cell) in row.iter_mut().enumerate() {
+                *cell += dot(ar, &b[jj][..kdim]);
+            }
+        }
+    }
+
+    /// Element-wise `a += b` (private-accumulator merge).
+    #[inline]
+    pub fn add_assign(a: &mut [f32], b: &[f32]) {
+        for (x, &y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+    }
+
+    /// `v[i] *= s` for every element.
+    #[inline]
+    pub fn scale_inplace(v: &mut [f32], s: f32) {
+        for x in v.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// One Walsh–Hadamard butterfly stage over paired halves:
+    /// `(lo[i], hi[i]) ← (lo[i] + hi[i], lo[i] − hi[i])`.
+    #[inline]
+    pub fn fwht_butterfly(lo: &mut [f32], hi: &mut [f32]) {
+        for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
+            let (x, y) = (*a, *b);
+            *a = x + y;
+            *b = x - y;
+        }
+    }
+
+    /// Mask gather: `out[i] = src[idx[i]] · scale`. Caller guarantees
+    /// every index is in range (mask indices are validated at
+    /// construction).
+    #[inline]
+    pub fn gather_scale(src: &[f32], idx: &[u32], scale: f32, out: &mut [f32]) {
+        for (o, &j) in out.iter_mut().zip(idx) {
+            *o = src[j as usize] * scale;
+        }
+    }
+
+    /// SJLT scatter of one dense coordinate chunk through the shared
+    /// `(bucket, sign)` table (`s` replicas per coordinate), ascending-`j`
+    /// accumulation order. Zero entries cost one branch (nnz-scaling).
+    #[inline]
+    pub fn sjlt_scatter(g: &[f32], table: &[(u32, f32)], s: usize, acc: &mut [f32]) {
+        debug_assert!(table.len() >= g.len() * s);
+        for (jj, &v) in g.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            for &(b, sgn) in &table[jj * s..jj * s + s] {
+                acc[b as usize] += sgn * v;
+            }
+        }
+    }
+
+    /// Decode little-endian IEEE binary16 payload bytes to f32.
+    #[inline]
+    pub fn decode_f16(bytes: &[u8], out: &mut [f32]) {
+        for (dst, ch) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+            *dst = f16_bits_to_f32(u16::from_le_bytes([ch[0], ch[1]]));
+        }
+    }
+
+    /// Decode little-endian bfloat16 payload bytes to f32.
+    #[inline]
+    pub fn decode_bf16(bytes: &[u8], out: &mut [f32]) {
+        for (dst, ch) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+            *dst = bf16_bits_to_f32(u16::from_le_bytes([ch[0], ch[1]]));
+        }
+    }
+
+    /// Dequantize symmetric int8 codes against a (row) scale.
+    #[inline]
+    pub fn dequant_i8(codes: &[u8], scale: f32, out: &mut [f32]) {
+        for (o, &b) in out.iter_mut().zip(codes) {
+            *o = (b as i8) as f32 * scale;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA (+ F16C) implementations — x86_64 only
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of one 8-lane register: pairwise (lo+hi halves,
+    /// then within the 128-bit half), matching the scalar reference's
+    /// pairwise partial-sum reduction shape.
+    #[inline]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let lo = _mm256_castps256_ps128(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+        _mm_cvtss_f32(s)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
+        let n = c.len().min(b.len());
+        let av = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            let cv = _mm256_loadu_ps(c.as_ptr().add(i));
+            _mm256_storeu_ps(c.as_mut_ptr().add(i), _mm256_fmadd_ps(av, bv, cv));
+            i += 8;
+        }
+        while i < n {
+            *c.get_unchecked_mut(i) += a * b.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        // Two accumulator streams hide FMA latency on the 8-wide sweep.
+        let mut s0 = _mm256_setzero_ps();
+        let mut s1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
+            let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
+            s0 = _mm256_fmadd_ps(a0, b0, s0);
+            let a1 = _mm256_loadu_ps(a.as_ptr().add(i + 8));
+            let b1 = _mm256_loadu_ps(b.as_ptr().add(i + 8));
+            s1 = _mm256_fmadd_ps(a1, b1, s1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
+            let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
+            s0 = _mm256_fmadd_ps(a0, b0, s0);
+            i += 8;
+        }
+        let mut s = hsum256(_mm256_add_ps(s0, s1));
+        while i < n {
+            s += a.get_unchecked(i) * b.get_unchecked(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// 4×4 register tile: 16 8-lane accumulators over the shared `kdim`
+    /// sweep, each `b` row loaded once per 4 output rows per step.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot4x4(a: [&[f32]; 4], b: [&[f32]; 4], kdim: usize, acc: &mut [[f32; 4]; 4]) {
+        let mut vacc = [[_mm256_setzero_ps(); 4]; 4];
+        let mut kk = 0;
+        while kk + 8 <= kdim {
+            let bv = [
+                _mm256_loadu_ps(b[0].as_ptr().add(kk)),
+                _mm256_loadu_ps(b[1].as_ptr().add(kk)),
+                _mm256_loadu_ps(b[2].as_ptr().add(kk)),
+                _mm256_loadu_ps(b[3].as_ptr().add(kk)),
+            ];
+            for ii in 0..4 {
+                let av = _mm256_loadu_ps(a[ii].as_ptr().add(kk));
+                for jj in 0..4 {
+                    vacc[ii][jj] = _mm256_fmadd_ps(av, bv[jj], vacc[ii][jj]);
+                }
+            }
+            kk += 8;
+        }
+        for ii in 0..4 {
+            for jj in 0..4 {
+                let mut s = hsum256(vacc[ii][jj]);
+                for t in kk..kdim {
+                    s += a[ii].get_unchecked(t) * b[jj].get_unchecked(t);
+                }
+                acc[ii][jj] += s;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign(a: &mut [f32], b: &[f32]) {
+        let n = a.len().min(b.len());
+        let mut i = 0;
+        while i + 8 <= n {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            _mm256_storeu_ps(a.as_mut_ptr().add(i), _mm256_add_ps(av, bv));
+            i += 8;
+        }
+        while i < n {
+            *a.get_unchecked_mut(i) += b.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_inplace(v: &mut [f32], s: f32) {
+        let sv = _mm256_set1_ps(s);
+        let n = v.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(v.as_ptr().add(i));
+            _mm256_storeu_ps(v.as_mut_ptr().add(i), _mm256_mul_ps(x, sv));
+            i += 8;
+        }
+        while i < n {
+            *v.get_unchecked_mut(i) *= s;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fwht_butterfly(lo: &mut [f32], hi: &mut [f32]) {
+        let n = lo.len().min(hi.len());
+        let mut i = 0;
+        while i + 8 <= n {
+            let a = _mm256_loadu_ps(lo.as_ptr().add(i));
+            let b = _mm256_loadu_ps(hi.as_ptr().add(i));
+            _mm256_storeu_ps(lo.as_mut_ptr().add(i), _mm256_add_ps(a, b));
+            _mm256_storeu_ps(hi.as_mut_ptr().add(i), _mm256_sub_ps(a, b));
+            i += 8;
+        }
+        while i < n {
+            let (x, y) = (*lo.get_unchecked(i), *hi.get_unchecked(i));
+            *lo.get_unchecked_mut(i) = x + y;
+            *hi.get_unchecked_mut(i) = x - y;
+            i += 1;
+        }
+    }
+
+    /// 8-lane `vgatherdps` mask gather. Caller guarantees `idx[i] <
+    /// src.len()` (mask indices are construction-validated).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_scale(src: &[f32], idx: &[u32], scale: f32, out: &mut [f32]) {
+        let n = out.len().min(idx.len());
+        let sv = _mm256_set1_ps(scale);
+        let mut i = 0;
+        while i + 8 <= n {
+            let iv = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
+            let g = _mm256_i32gather_ps::<4>(src.as_ptr(), iv);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(g, sv));
+            i += 8;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) = src[*idx.get_unchecked(i) as usize] * scale;
+            i += 1;
+        }
+    }
+
+    /// Dense SJLT scatter with a vectorized zero-skip: 8 coordinates are
+    /// tested per compare+movemask, and only lanes holding non-zeros walk
+    /// the scalar scatter (ascending-`j` within the block, so the
+    /// accumulation order matches the reference exactly). `NEQ_UQ` keeps
+    /// NaN lanes "non-zero", matching the scalar `v == 0.0` test.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sjlt_scatter(g: &[f32], table: &[(u32, f32)], s: usize, acc: &mut [f32]) {
+        debug_assert!(table.len() >= g.len() * s);
+        let zero = _mm256_setzero_ps();
+        let n = g.len();
+        let mut jj = 0;
+        while jj + 8 <= n {
+            let v = _mm256_loadu_ps(g.as_ptr().add(jj));
+            let mut m = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_NEQ_UQ>(v, zero)) as u32;
+            while m != 0 {
+                let lane = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let j = jj + lane;
+                let x = *g.get_unchecked(j);
+                for &(b, sgn) in &table[j * s..j * s + s] {
+                    *acc.get_unchecked_mut(b as usize) += sgn * x;
+                }
+            }
+            jj += 8;
+        }
+        while jj < n {
+            let x = *g.get_unchecked(jj);
+            if x != 0.0 {
+                for &(b, sgn) in &table[jj * s..jj * s + s] {
+                    *acc.get_unchecked_mut(b as usize) += sgn * x;
+                }
+            }
+            jj += 1;
+        }
+    }
+
+    /// `vcvtph2ps` f16 → f32 widening decode, 8 elements per step. The
+    /// hardware conversion is IEEE-exact, identical to the scalar
+    /// bit-twiddling reference on every finite value.
+    #[target_feature(enable = "avx2,f16c")]
+    pub unsafe fn decode_f16(bytes: &[u8], out: &mut [f32]) {
+        let n = out.len().min(bytes.len() / 2);
+        let mut i = 0;
+        while i + 8 <= n {
+            let h = _mm_loadu_si128(bytes.as_ptr().add(2 * i) as *const __m128i);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_cvtph_ps(h));
+            i += 8;
+        }
+        super::scalar::decode_f16(&bytes[2 * i..], &mut out[i..n]);
+    }
+
+    /// bf16 → f32: widen each u16 and shift into the top half (exact).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn decode_bf16(bytes: &[u8], out: &mut [f32]) {
+        let n = out.len().min(bytes.len() / 2);
+        let mut i = 0;
+        while i + 8 <= n {
+            let h = _mm_loadu_si128(bytes.as_ptr().add(2 * i) as *const __m128i);
+            let w = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_castsi256_ps(w));
+            i += 8;
+        }
+        super::scalar::decode_bf16(&bytes[2 * i..], &mut out[i..n]);
+    }
+
+    /// int8 → f32 widening convert + scale multiply (both exact: every
+    /// i8 is representable, and the multiply is the same single rounding
+    /// the scalar reference performs).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_i8(codes: &[u8], scale: f32, out: &mut [f32]) {
+        let n = out.len().min(codes.len());
+        let sv = _mm256_set1_ps(scale);
+        let mut i = 0;
+        while i + 8 <= n {
+            let c = _mm_loadl_epi64(codes.as_ptr().add(i) as *const __m128i);
+            let w = _mm256_cvtepi8_epi32(c);
+            let f = _mm256_cvtepi32_ps(w);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(f, sv));
+            i += 8;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) = (*codes.get_unchecked(i) as i8) as f32 * scale;
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON implementations — aarch64 only
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
+        let n = c.len().min(b.len());
+        let av = vdupq_n_f32(a);
+        let mut i = 0;
+        while i + 4 <= n {
+            let bv = vld1q_f32(b.as_ptr().add(i));
+            let cv = vld1q_f32(c.as_ptr().add(i));
+            vst1q_f32(c.as_mut_ptr().add(i), vfmaq_f32(cv, av, bv));
+            i += 4;
+        }
+        while i < n {
+            c[i] += a * b[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut s0 = vdupq_n_f32(0.0);
+        let mut s1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            let a0 = vld1q_f32(a.as_ptr().add(i));
+            let b0 = vld1q_f32(b.as_ptr().add(i));
+            s0 = vfmaq_f32(s0, a0, b0);
+            let a1 = vld1q_f32(a.as_ptr().add(i + 4));
+            let b1 = vld1q_f32(b.as_ptr().add(i + 4));
+            s1 = vfmaq_f32(s1, a1, b1);
+            i += 8;
+        }
+        if i + 4 <= n {
+            let a0 = vld1q_f32(a.as_ptr().add(i));
+            let b0 = vld1q_f32(b.as_ptr().add(i));
+            s0 = vfmaq_f32(s0, a0, b0);
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(s0, s1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot4x4(a: [&[f32]; 4], b: [&[f32]; 4], kdim: usize, acc: &mut [[f32; 4]; 4]) {
+        let mut vacc = [[vdupq_n_f32(0.0); 4]; 4];
+        let mut kk = 0;
+        while kk + 4 <= kdim {
+            let bv = [
+                vld1q_f32(b[0].as_ptr().add(kk)),
+                vld1q_f32(b[1].as_ptr().add(kk)),
+                vld1q_f32(b[2].as_ptr().add(kk)),
+                vld1q_f32(b[3].as_ptr().add(kk)),
+            ];
+            for ii in 0..4 {
+                let av = vld1q_f32(a[ii].as_ptr().add(kk));
+                for jj in 0..4 {
+                    vacc[ii][jj] = vfmaq_f32(vacc[ii][jj], av, bv[jj]);
+                }
+            }
+            kk += 4;
+        }
+        for ii in 0..4 {
+            for jj in 0..4 {
+                let mut s = vaddvq_f32(vacc[ii][jj]);
+                for t in kk..kdim {
+                    s += a[ii][t] * b[jj][t];
+                }
+                acc[ii][jj] += s;
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn add_assign(a: &mut [f32], b: &[f32]) {
+        let n = a.len().min(b.len());
+        let mut i = 0;
+        while i + 4 <= n {
+            let av = vld1q_f32(a.as_ptr().add(i));
+            let bv = vld1q_f32(b.as_ptr().add(i));
+            vst1q_f32(a.as_mut_ptr().add(i), vaddq_f32(av, bv));
+            i += 4;
+        }
+        while i < n {
+            a[i] += b[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_inplace(v: &mut [f32], s: f32) {
+        let sv = vdupq_n_f32(s);
+        let n = v.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = vld1q_f32(v.as_ptr().add(i));
+            vst1q_f32(v.as_mut_ptr().add(i), vmulq_f32(x, sv));
+            i += 4;
+        }
+        while i < n {
+            v[i] *= s;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fwht_butterfly(lo: &mut [f32], hi: &mut [f32]) {
+        let n = lo.len().min(hi.len());
+        let mut i = 0;
+        while i + 4 <= n {
+            let a = vld1q_f32(lo.as_ptr().add(i));
+            let b = vld1q_f32(hi.as_ptr().add(i));
+            vst1q_f32(lo.as_mut_ptr().add(i), vaddq_f32(a, b));
+            vst1q_f32(hi.as_mut_ptr().add(i), vsubq_f32(a, b));
+            i += 4;
+        }
+        while i < n {
+            let (x, y) = (lo[i], hi[i]);
+            lo[i] = x + y;
+            hi[i] = x - y;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn decode_bf16(bytes: &[u8], out: &mut [f32]) {
+        let n = out.len().min(bytes.len() / 2);
+        let mut i = 0;
+        while i + 4 <= n {
+            let h = vld1_u16(bytes.as_ptr().add(2 * i) as *const u16);
+            let w = vshlq_n_u32::<16>(vmovl_u16(h));
+            vst1q_f32(out.as_mut_ptr().add(i), vreinterpretq_f32_u32(w));
+            i += 4;
+        }
+        super::scalar::decode_bf16(&bytes[2 * i..], &mut out[i..n]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dequant_i8(codes: &[u8], scale: f32, out: &mut [f32]) {
+        let n = out.len().min(codes.len());
+        let sv = vdupq_n_f32(scale);
+        let mut i = 0;
+        while i + 8 <= n {
+            let c = vld1_s8(codes.as_ptr().add(i) as *const i8);
+            let w = vmovl_s8(c);
+            let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w)));
+            let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w)));
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(lo, sv));
+            vst1q_f32(out.as_mut_ptr().add(i + 4), vmulq_f32(hi, sv));
+            i += 8;
+        }
+        while i < n {
+            out[i] = (codes[i] as i8) as f32 * scale;
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched entry points
+// ---------------------------------------------------------------------------
+
+/// `c += a · b` over one row — the rank-1 row update behind `matmul` and
+/// `matmul_at_b`.
+#[inline]
+pub fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::axpy(c, a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::axpy(c, a, b) },
+        _ => scalar::axpy(c, a, b),
+    }
+}
+
+/// Dot product `⟨a, b⟩` over `min(len)` elements. Stays scalar below
+/// [`MIN_SIMD_K`] (tiny-k edge tiles — see module docs).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    if a.len().min(b.len()) < MIN_SIMD_K {
+        return scalar::dot(a, b);
+    }
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot(a, b) },
+        _ => scalar::dot(a, b),
+    }
+}
+
+/// Register-tiled 4×4 dot-product block over a shared inner dimension:
+/// `acc[ii][jj] += ⟨a[ii][..kdim], b[jj][..kdim]⟩` (additive, like the
+/// historical `micro::dot4x4` contract). Stays scalar below
+/// [`MIN_SIMD_K`].
+#[inline]
+pub fn dot4x4(a: [&[f32]; 4], b: [&[f32]; 4], kdim: usize, acc: &mut [[f32; 4]; 4]) {
+    debug_assert!(a.iter().chain(b.iter()).all(|r| r.len() >= kdim));
+    if kdim < MIN_SIMD_K {
+        return scalar::dot4x4(a, b, kdim, acc);
+    }
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::dot4x4(a, b, kdim, acc) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot4x4(a, b, kdim, acc) },
+        _ => scalar::dot4x4(a, b, kdim, acc),
+    }
+}
+
+/// Edge-tile fallback for [`dot4x4`]: `ib×jb` block with `ib, jb ≤ 4`,
+/// rows packed contiguously at stride `kdim`. Each pair runs the
+/// dispatched [`dot`] kernel.
+#[inline]
+pub fn dot_tile(a: &[f32], b: &[f32], kdim: usize, ib: usize, jb: usize, acc: &mut [[f32; 4]; 4]) {
+    for ii in 0..ib {
+        let ar = &a[ii * kdim..(ii + 1) * kdim];
+        for jj in 0..jb {
+            acc[ii][jj] += dot(ar, &b[jj * kdim..(jj + 1) * kdim]);
+        }
+    }
+}
+
+/// Element-wise `a += b` (private-accumulator merges in the parallel
+/// reductions).
+#[inline]
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::add_assign(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::add_assign(a, b) },
+        _ => scalar::add_assign(a, b),
+    }
+}
+
+/// `v[i] *= s` — the SJLT `1/√s` and FWHT `1/√n` normalisation sweeps.
+/// Bit-compatible with the scalar reference (same single multiply).
+#[inline]
+pub fn scale_inplace(v: &mut [f32], s: f32) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::scale_inplace(v, s) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::scale_inplace(v, s) },
+        _ => scalar::scale_inplace(v, s),
+    }
+}
+
+/// One Walsh–Hadamard butterfly stage over paired halves (`lo[i] ± hi[i]`).
+/// Bit-compatible with the scalar reference (same adds/subs per element).
+#[inline]
+pub fn fwht_butterfly(lo: &mut [f32], hi: &mut [f32]) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::fwht_butterfly(lo, hi) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::fwht_butterfly(lo, hi) },
+        _ => scalar::fwht_butterfly(lo, hi),
+    }
+}
+
+/// Mask gather `out[i] = src[idx[i]] · scale` — RandomMask / GraSS
+/// stage 1. Every index must be `< src.len()` (mask indices are
+/// validated at construction; checked here in debug builds).
+/// Bit-compatible with the scalar reference.
+#[inline]
+pub fn gather_scale(src: &[f32], idx: &[u32], scale: f32, out: &mut [f32]) {
+    debug_assert!(idx.iter().all(|&j| (j as usize) < src.len()));
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2 {
+        return unsafe { avx2::gather_scale(src, idx, scale, out) };
+    }
+    scalar::gather_scale(src, idx, scale, out)
+}
+
+/// Dense SJLT scatter of one coordinate chunk through the shared
+/// `(bucket, sign)` table (`s` replicas per coordinate, `+=` semantics,
+/// ascending-`j` order preserved). The vector win is the 8-wide
+/// zero-skip; the scatter itself is serial by nature (bucket conflicts).
+#[inline]
+pub fn sjlt_scatter(g: &[f32], table: &[(u32, f32)], s: usize, acc: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2 {
+        return unsafe { avx2::sjlt_scatter(g, table, s, acc) };
+    }
+    scalar::sjlt_scatter(g, table, s, acc)
+}
+
+/// Decode little-endian f16 payload bytes to f32 (IEEE-exact on either
+/// path).
+#[inline]
+pub fn decode_f16(bytes: &[u8], out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2 {
+        return unsafe { avx2::decode_f16(bytes, out) };
+    }
+    scalar::decode_f16(bytes, out)
+}
+
+/// Decode little-endian bf16 payload bytes to f32 (exact on either path).
+#[inline]
+pub fn decode_bf16(bytes: &[u8], out: &mut [f32]) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::decode_bf16(bytes, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::decode_bf16(bytes, out) },
+        _ => scalar::decode_bf16(bytes, out),
+    }
+}
+
+/// Dequantize symmetric int8 codes against a row scale (exact widening
+/// convert + one multiply on either path).
+#[inline]
+pub fn dequant_i8(codes: &[u8], scale: f32, out: &mut [f32]) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::dequant_i8(codes, scale, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dequant_i8(codes, scale, out) },
+        _ => scalar::dequant_i8(codes, scale, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::rng::Pcg;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        (0..n).map(|_| rng.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn isa_name_is_stable() {
+        let name = active_isa();
+        assert!(
+            ["scalar", "avx2+fma", "neon"].contains(&name),
+            "unexpected ISA name {name}"
+        );
+    }
+
+    #[test]
+    fn scalar_dot_matches_f64_reference() {
+        for n in [0, 1, 7, 8, 17, 64, 1000] {
+            let a = gaussian(n, 1);
+            let b = gaussian(n, 2);
+            let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = scalar::dot(&a, &b) as f64;
+            let cond: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| (x as f64 * y as f64).abs())
+                .sum();
+            assert!(
+                (got - want).abs() <= 1e-6 * (1.0 + cond),
+                "n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn dispatched_elementwise_kernels_match_scalar_bitwise() {
+        // scale, butterfly, gather, add_assign, decodes: exactly the
+        // scalar arithmetic per element, so bitwise equality holds on
+        // every ISA.
+        let v = gaussian(101, 3);
+        let mut a = v.clone();
+        let mut b = v.clone();
+        scale_inplace(&mut a, 0.37);
+        scalar::scale_inplace(&mut b, 0.37);
+        assert_eq!(a, b);
+
+        let (mut lo1, mut hi1) = (gaussian(33, 4), gaussian(33, 5));
+        let (mut lo2, mut hi2) = (lo1.clone(), hi1.clone());
+        fwht_butterfly(&mut lo1, &mut hi1);
+        scalar::fwht_butterfly(&mut lo2, &mut hi2);
+        assert_eq!((lo1, hi1), (lo2, hi2));
+
+        let src = gaussian(500, 6);
+        let idx: Vec<u32> = (0..77).map(|i| (i * 13 + 5) % 500).collect();
+        let mut o1 = vec![0.0f32; idx.len()];
+        let mut o2 = vec![0.0f32; idx.len()];
+        gather_scale(&src, &idx, 1.25, &mut o1);
+        scalar::gather_scale(&src, &idx, 1.25, &mut o2);
+        assert_eq!(o1, o2);
+
+        let mut a1 = gaussian(67, 7);
+        let mut a2 = a1.clone();
+        let add = gaussian(67, 8);
+        add_assign(&mut a1, &add);
+        scalar::add_assign(&mut a2, &add);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn dispatched_dot4x4_within_fma_tolerance() {
+        for kdim in [1, 5, 16, 33, 256, 1000] {
+            let rows: Vec<Vec<f32>> = (0..8).map(|i| gaussian(kdim, 10 + i as u64)).collect();
+            let a = [&rows[0][..], &rows[1][..], &rows[2][..], &rows[3][..]];
+            let b = [&rows[4][..], &rows[5][..], &rows[6][..], &rows[7][..]];
+            let mut got = [[0.0f32; 4]; 4];
+            let mut want = [[0.0f32; 4]; 4];
+            dot4x4(a, b, kdim, &mut got);
+            scalar::dot4x4(a, b, kdim, &mut want);
+            for ii in 0..4 {
+                for jj in 0..4 {
+                    let cond: f32 = a[ii].iter().zip(b[jj]).map(|(x, y)| (x * y).abs()).sum();
+                    assert!(
+                        (got[ii][jj] - want[ii][jj]).abs() <= 1e-6 * (1.0 + cond),
+                        "kdim={kdim} ({ii},{jj}): {} vs {}",
+                        got[ii][jj],
+                        want[ii][jj]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sjlt_scatter_handles_tails_and_zeros() {
+        // 8-wide zero-skip with ragged tails: identical buckets and
+        // identical ascending-j accumulation order on every ISA.
+        let mut rng = Pcg::new(20);
+        for n in [3usize, 8, 9, 64, 100] {
+            for s in [1usize, 3] {
+                let g: Vec<f32> = (0..n)
+                    .map(|_| {
+                        if rng.next_f32() < 0.5 {
+                            0.0
+                        } else {
+                            rng.next_gaussian()
+                        }
+                    })
+                    .collect();
+                let table: Vec<(u32, f32)> = (0..n * s)
+                    .map(|i| ((i as u32 * 7) % 16, if i % 2 == 0 { 1.0 } else { -1.0 }))
+                    .collect();
+                let mut acc1 = vec![0.0f32; 16];
+                let mut acc2 = vec![0.0f32; 16];
+                sjlt_scatter(&g, &table, s, &mut acc1);
+                scalar::sjlt_scatter(&g, &table, s, &mut acc2);
+                assert_eq!(acc1, acc2, "n={n} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn decoders_match_scalar_bitwise() {
+        use crate::linalg::quantize::{f32_to_bf16_bits, f32_to_f16_bits};
+        let vals = gaussian(115, 30);
+        let (mut f16b, mut bf16b) = (Vec::new(), Vec::new());
+        for &v in &vals {
+            f16b.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+            bf16b.extend_from_slice(&f32_to_bf16_bits(v).to_le_bytes());
+        }
+        let mut a = vec![0.0f32; vals.len()];
+        let mut b = vec![0.0f32; vals.len()];
+        decode_f16(&f16b, &mut a);
+        scalar::decode_f16(&f16b, &mut b);
+        assert_eq!(a, b, "f16");
+        decode_bf16(&bf16b, &mut a);
+        scalar::decode_bf16(&bf16b, &mut b);
+        assert_eq!(a, b, "bf16");
+        let codes: Vec<u8> = (0..115u32).map(|i| (i * 37) as u8).collect();
+        dequant_i8(&codes, 0.031, &mut a);
+        scalar::dequant_i8(&codes, 0.031, &mut b);
+        assert_eq!(a, b, "int8");
+    }
+}

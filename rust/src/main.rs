@@ -55,6 +55,12 @@ fn main() {
 
 fn run() -> Result<i32> {
     let args = Args::from_env()?;
+    // Global escape hatch: pin every kernel to the scalar reference path
+    // (equivalent to GRASS_NO_SIMD=1) for A/B timing or sidestepping a
+    // suspect vector path in the field. Must run before any kernel does.
+    if args.get_bool("no-simd") {
+        grass::linalg::simd::set_simd_enabled(false);
+    }
     match args.subcommand.as_deref() {
         Some("exp") => run_exp(&args).map(|()| 0),
         Some("cache") => run_cache(&args).map(|()| 0),
@@ -120,6 +126,8 @@ COMMON FLAGS:
   --ks 512,1024,2048    compression dimensions
   --n-train / --n-test / --subsets / --checkpoints / --epochs / --lr / --seed
   --fast                shrink everything for a smoke run
+  --no-simd             pin every kernel to the scalar reference path
+                        (any subcommand; env equivalent GRASS_NO_SIMD=1)
   --out results.json    append table to a JSON report
 
 METHOD SPECS (flat):        rm:k=.. | sm:k=.. | sjlt:k=..,s=1 | gauss:k=.. |

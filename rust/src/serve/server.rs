@@ -243,6 +243,10 @@ impl ServerState {
         };
         map.insert("epoch".to_string(), Json::Num(hot.epoch as f64));
         map.insert(
+            "simd_isa".to_string(),
+            Json::Str(crate::linalg::simd::active_isa().to_string()),
+        );
+        map.insert(
             "store".to_string(),
             Json::obj(vec![
                 ("dir", Json::Str(hot.dir.display().to_string())),
@@ -730,10 +734,11 @@ pub fn run(cfg: ServeConfig) -> Result<()> {
     let handle = spawn(cfg)?;
     if !quiet {
         println!(
-            "serve: listening on {} (store {}, scorers {scorers:?}) — SIGTERM/SIGINT or \
-             `grass query --addr {} --shutdown` drains within {drain_ms} ms",
+            "serve: listening on {} (store {}, scorers {scorers:?}, simd {}) — SIGTERM/SIGINT \
+             or `grass query --addr {} --shutdown` drains within {drain_ms} ms",
             handle.addr(),
             store.display(),
+            crate::linalg::simd::active_isa(),
             handle.addr()
         );
     }

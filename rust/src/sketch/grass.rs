@@ -11,6 +11,7 @@ use super::selective::TrainedMask;
 use super::sjlt::Sjlt;
 use super::sparse::SparseRows;
 use super::{Compressor, MaskKind, Scratch};
+use crate::linalg::simd;
 use crate::util::par;
 
 pub struct Grass {
@@ -164,9 +165,7 @@ impl Compressor for Grass {
                     }
                 }
                 if s > 1 {
-                    for o in orow.iter_mut() {
-                        *o *= inv;
-                    }
+                    simd::scale_inplace(orow, inv);
                 }
             }
         });

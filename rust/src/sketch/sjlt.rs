@@ -22,6 +22,7 @@
 use super::rng::{hash3, to_sign};
 use super::sparse::SparseRows;
 use super::{Compressor, Scratch};
+use crate::linalg::simd;
 use crate::util::par;
 
 /// Below this many input elements, parallel fan-out costs more than it saves.
@@ -125,9 +126,7 @@ impl Compressor for Sjlt {
             out.copy_from_slice(&acc);
         }
         if self.s > 1 {
-            for v in out.iter_mut() {
-                *v *= self.inv_sqrt_s;
-            }
+            simd::scale_inplace(out, self.inv_sqrt_s);
         }
     }
 
@@ -161,28 +160,20 @@ impl Compressor for Sjlt {
             }
             let table = &table[..cl * s];
             // Scatter the chunk for every row; each row owns its output
-            // slice, so the parallel fan-out is contention-free.
+            // slice, so the parallel fan-out is contention-free. The
+            // scatter itself is the SIMD-dispatched kernel: an 8-wide
+            // zero-skip sweep that preserves ascending-j addition order.
             par::par_chunks_mut(out, k, 1, |row_start, rows| {
                 for (off, orow) in rows.chunks_mut(k).enumerate() {
                     let i = row_start + off;
                     let g = &gs[i * p + j0..i * p + j0 + cl];
-                    for (jj, &v) in g.iter().enumerate() {
-                        if v == 0.0 {
-                            continue; // nnz-scaling: zero entries cost one branch
-                        }
-                        for r in 0..s {
-                            let (b, sgn) = table[jj * s + r];
-                            orow[b as usize] += sgn * v;
-                        }
-                    }
+                    simd::sjlt_scatter(g, table, s, orow);
                 }
             });
             j0 += cl;
         }
         if s > 1 {
-            for v in out.iter_mut() {
-                *v *= inv;
-            }
+            simd::scale_inplace(out, inv);
         }
         scratch.put_table(table);
     }
@@ -197,6 +188,9 @@ impl Compressor for Sjlt {
     /// one splitmix round per replica — hashing in bucket order matches the
     /// dense path's ascending-`j` accumulation order exactly, so sparse and
     /// dense outputs agree to fp-identical sums over the stored non-zeros.
+    /// The per-nonzero hash+scatter stays scalar (no dense run of
+    /// coordinates to sweep — see the `linalg::simd` dispatch table); only
+    /// the final `1/√s` scale dispatches to SIMD.
     fn compress_sparse_batch_with(
         &self,
         rows: &SparseRows,
@@ -222,9 +216,7 @@ impl Compressor for Sjlt {
                     }
                 }
                 if s > 1 {
-                    for o in orow.iter_mut() {
-                        *o *= inv;
-                    }
+                    simd::scale_inplace(orow, inv);
                 }
             }
         });
@@ -245,9 +237,7 @@ impl Compressor for Sjlt {
             }
         }
         if self.s > 1 {
-            for v in out.iter_mut() {
-                *v *= self.inv_sqrt_s;
-            }
+            simd::scale_inplace(out, self.inv_sqrt_s);
         }
     }
 

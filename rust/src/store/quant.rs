@@ -16,13 +16,14 @@
 //! range, bf16 ≤ 2⁻⁸, and int8 ≤ absmax/254 absolute per element (the
 //! per-row scale makes this ≤ 1/254 of the row's largest magnitude).
 //! All three are exact at 0.0, so ReLU-induced gradient sparsity survives
-//! quantization bit-for-bit. The numeric inner loops live in
-//! [`crate::linalg::quantize`].
+//! quantization bit-for-bit. The per-element conversion math lives in
+//! [`crate::linalg::quantize`]; the decode loops dispatch through the
+//! [`crate::linalg::simd`] kernel layer (`vcvtph2ps` f16 widening, bf16
+//! shift-widening, int8 sign-extend + scale multiply on AVX2), exact on
+//! every ISA.
 
-use crate::linalg::quantize::{
-    bf16_bits_to_f32, dequantize_i8, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits,
-    i8_row_scale, quantize_i8,
-};
+use crate::linalg::quantize::{f32_to_bf16_bits, f32_to_f16_bits, i8_row_scale, quantize_i8};
+use crate::linalg::simd;
 use anyhow::{bail, Result};
 
 /// On-disk payload element type of a shard store.
@@ -121,6 +122,7 @@ impl PayloadDtype {
     ///
     /// # Panics
     /// On int8, which is row-framed — use [`PayloadDtype::decode_rows`].
+    #[inline]
     pub fn decode_elems(self, bytes: &[u8], out: &mut [f32]) {
         match self {
             PayloadDtype::F32 => {
@@ -128,41 +130,43 @@ impl PayloadDtype {
                     *dst = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
                 }
             }
-            PayloadDtype::F16 => {
-                for (dst, ch) in out.iter_mut().zip(bytes.chunks_exact(2)) {
-                    *dst = f16_bits_to_f32(u16::from_le_bytes([ch[0], ch[1]]));
-                }
-            }
-            PayloadDtype::Bf16 => {
-                for (dst, ch) in out.iter_mut().zip(bytes.chunks_exact(2)) {
-                    *dst = bf16_bits_to_f32(u16::from_le_bytes([ch[0], ch[1]]));
-                }
-            }
-            PayloadDtype::Int8 => {
-                panic!("int8 payloads are row-framed; decode_rows must be used")
-            }
+            PayloadDtype::F16 => simd::decode_f16(bytes, out),
+            PayloadDtype::Bf16 => simd::decode_bf16(bytes, out),
+            PayloadDtype::Int8 => row_framed_int8(),
         }
     }
 
     /// Decode `rows` whole rows (`bytes.len() == rows × row_bytes(k)`)
     /// into `out[..rows × k]`. This is the warm-cache read path: resident
     /// shards stay encoded and each requested block decodes straight into
-    /// the caller's f32 buffer.
+    /// the caller's f32 buffer. The int8 arm walks exact-length row
+    /// frames so the per-row scale is loaded once per frame (broadcast
+    /// into a vector register by the SIMD kernel), not re-read per
+    /// element.
+    #[inline]
     pub fn decode_rows(self, bytes: &[u8], k: usize, rows: usize, out: &mut [f32]) {
         debug_assert_eq!(bytes.len(), rows * self.row_bytes(k));
         debug_assert!(out.len() >= rows * k);
         match self {
             PayloadDtype::Int8 => {
                 let rb = self.row_bytes(k);
-                for r in 0..rows {
-                    let row = &bytes[r * rb..(r + 1) * rb];
+                for (row, orow) in bytes.chunks_exact(rb).zip(out.chunks_exact_mut(k)) {
                     let scale = f32::from_le_bytes([row[0], row[1], row[2], row[3]]);
-                    dequantize_i8(&row[4..], scale, &mut out[r * k..(r + 1) * k]);
+                    simd::dequant_i8(&row[4..], scale, orow);
                 }
             }
             _ => self.decode_elems(&bytes[..rows * self.row_bytes(k)], &mut out[..rows * k]),
         }
     }
+}
+
+/// int8 is the only row-framed dtype; reaching it through the uniform
+/// element decoder is a framing bug in the caller. Kept out of line so
+/// the panic machinery stays off the hot decode dispatch.
+#[cold]
+#[inline(never)]
+fn row_framed_int8() -> ! {
+    panic!("int8 payloads are row-framed; decode_rows must be used")
 }
 
 impl std::fmt::Display for PayloadDtype {

@@ -314,11 +314,17 @@ pub fn bench_json_path(name: &str) -> PathBuf {
 
 /// Write benchmark records to `BENCH_<name>.json` (overwriting any previous
 /// run) and return the path. Every bench target calls this so the perf
-/// trajectory is diffable across PRs.
+/// trajectory is diffable across PRs. The top level records the SIMD ISA
+/// the run dispatched to (`"avx2+fma"` / `"neon"` / `"scalar"`), so perf
+/// numbers are never compared across different kernel paths by accident.
 pub fn write_bench_json(name: &str, records: &[BenchRecord]) -> std::io::Result<PathBuf> {
     let path = bench_json_path(name);
     let j = Json::obj(vec![
         ("bench", Json::Str(name.to_string())),
+        (
+            "simd_isa",
+            Json::Str(crate::linalg::simd::active_isa().to_string()),
+        ),
         (
             "records",
             Json::Arr(records.iter().map(|r| r.to_json()).collect()),

@@ -123,12 +123,13 @@ where
     });
 }
 
-/// Element-wise `a += b` (used to merge private accumulators).
+/// Element-wise `a += b` (used to merge private accumulators). Runs
+/// through the runtime-dispatched [`crate::linalg::simd::add_assign`]
+/// kernel; one add per element on every ISA, so merges are
+/// bit-compatible with the scalar loop.
 pub fn add_assign(a: &mut [f32], b: &[f32]) {
     debug_assert_eq!(a.len(), b.len());
-    for (x, y) in a.iter_mut().zip(b) {
-        *x += y;
-    }
+    crate::linalg::simd::add_assign(a, b);
 }
 
 #[cfg(test)]

@@ -208,6 +208,13 @@ fn served_scores_match_batch_attribution_and_reuse_hot_state() {
     };
     assert_eq!(stat(&stats, &["store", "opens"]), 1.0);
     assert_eq!(stats.get("artifact_loaded").and_then(|x| x.as_bool()), Some(true));
+    // The daemon reports which kernel path its scorers dispatch to —
+    // the same string `linalg::simd::active_isa()` returns in-process.
+    assert_eq!(
+        stats.get("simd_isa").and_then(|x| x.as_str()),
+        Some(grass::linalg::simd::active_isa()),
+        "stats must carry the active SIMD ISA"
+    );
     let fim_rows = stat(&stats, &["engines", "if", "fim_rows"]);
     assert_eq!(fim_rows, 0.0, "artifact reuse must skip the FIM ingest pass");
     let scored = stat(&stats, &["requests", "scored"]);

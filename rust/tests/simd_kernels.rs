@@ -1,0 +1,129 @@
+//! SIMD dispatch layer, exercised end to end through the public surface:
+//! the `set_simd_enabled` escape hatch flips `active_isa()` to "scalar",
+//! and every consumer of the dispatched kernels (matmul, FWHT, mask
+//! gather, SJLT scatter, payload decode) produces the same numbers on
+//! the vector and scalar paths — bitwise for the elementwise kernels,
+//! within FMA-reassociation tolerance for the dot-product family.
+//!
+//! The toggle is process-global, so every toggle-sensitive assertion
+//! lives in ONE `#[test]` — the harness runs tests in parallel threads,
+//! and a second test flipping the switch mid-measurement would race.
+
+use grass::linalg::fwht::fwht_inplace;
+use grass::linalg::matmul::{matmul, matmul_abt};
+use grass::linalg::simd;
+use grass::sketch::rng::Pcg;
+use grass::sketch::sjlt::Sjlt;
+use grass::sketch::{Compressor, Scratch};
+use grass::store::PayloadDtype;
+
+fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..n).map(|_| rng.next_gaussian()).collect()
+}
+
+/// Run `f` twice — SIMD enabled, then pinned scalar — and return both
+/// results. Always re-enables SIMD on the way out.
+fn on_both_paths<R>(mut f: impl FnMut() -> R) -> (R, R) {
+    simd::set_simd_enabled(true);
+    let vectored = f();
+    simd::set_simd_enabled(false);
+    let scalar = f();
+    simd::set_simd_enabled(true);
+    (vectored, scalar)
+}
+
+#[test]
+fn escape_hatch_pins_scalar_and_paths_agree() {
+    // The hatch itself: forcing scalar is observable through the same
+    // string `grass serve` stats and BENCH_*.json report, and releasing
+    // it restores whatever the host detected.
+    let detected = simd::active_isa();
+    assert!(
+        ["avx2+fma", "neon", "scalar"].contains(&detected),
+        "unexpected ISA name {detected}"
+    );
+    simd::set_simd_enabled(false);
+    assert_eq!(simd::active_isa(), "scalar");
+    simd::set_simd_enabled(true);
+    assert_eq!(simd::active_isa(), detected);
+
+    // Dot-product family (FMA on AVX2): within reassociation tolerance.
+    let (m, t, n) = (13, 257, 9);
+    let a = gaussian(m * t, 1);
+    let b = gaussian(t * n, 2);
+    let (vec_c, sc_c) = on_both_paths(|| {
+        let mut c = vec![0.0f32; m * n];
+        matmul(&a, &b, &mut c, m, t, n);
+        c
+    });
+    for (i, (x, y)) in vec_c.iter().zip(&sc_c).enumerate() {
+        let tol = 1e-5 * (1.0 + x.abs().max(y.abs())) * (t as f32).sqrt();
+        assert!((x - y).abs() <= tol, "matmul elem {i}: {x} vs {y}");
+    }
+    let bt = gaussian(n * t, 3);
+    let (vec_g, sc_g) = on_both_paths(|| {
+        let mut c = vec![0.0f32; m * n];
+        matmul_abt(&a, &bt, &mut c, m, t, n);
+        c
+    });
+    for (i, (x, y)) in vec_g.iter().zip(&sc_g).enumerate() {
+        let tol = 1e-5 * (1.0 + x.abs().max(y.abs())) * (t as f32).sqrt();
+        assert!((x - y).abs() <= tol, "matmul_abt elem {i}: {x} vs {y}");
+    }
+
+    // FWHT: butterflies and the 1/√n scale are single-op elementwise
+    // kernels on every path — bitwise identical.
+    let x0 = gaussian(256, 4);
+    let (vec_h, sc_h) = on_both_paths(|| {
+        let mut x = x0.clone();
+        fwht_inplace(&mut x);
+        x
+    });
+    assert_eq!(vec_h, sc_h, "FWHT diverges between ISA paths");
+
+    // SJLT batch (dense scatter + 1/√s scale): the vector path preserves
+    // the scalar ascending-j accumulation order — bitwise identical.
+    let (p, k, rows) = (700, 64, 5);
+    let sj = Sjlt::new(p, k, 3, 42);
+    let gs: Vec<f32> = {
+        let mut rng = Pcg::new(5);
+        (0..rows * p)
+            .map(|_| {
+                if rng.next_f32() < 0.4 {
+                    0.0
+                } else {
+                    rng.next_gaussian()
+                }
+            })
+            .collect()
+    };
+    let (vec_s, sc_s) = on_both_paths(|| {
+        let mut scratch = Scratch::new();
+        let mut out = vec![0.0f32; rows * k];
+        sj.compress_batch_with(&gs, rows, &mut out, &mut scratch);
+        out
+    });
+    assert_eq!(vec_s, sc_s, "SJLT batch diverges between ISA paths");
+
+    // Mask gather through the single-row entry point (vgatherdps on
+    // AVX2): one multiply per element — bitwise identical.
+    let mask = grass::sketch::mask::RandomMask::new(p, 96, 7);
+    let (vec_m, sc_m) = on_both_paths(|| mask.compress(&gs[..p]));
+    assert_eq!(vec_m, sc_m, "mask gather diverges between ISA paths");
+
+    // Payload decoders (f16 / bf16 / int8): exact converts on every path.
+    let vals = gaussian(6 * 50, 8);
+    for dt in [PayloadDtype::F16, PayloadDtype::Bf16, PayloadDtype::Int8] {
+        let mut enc = Vec::new();
+        for row in vals.chunks(50) {
+            dt.encode_row(row, &mut enc);
+        }
+        let (vec_d, sc_d) = on_both_paths(|| {
+            let mut out = vec![0.0f32; vals.len()];
+            dt.decode_rows(&enc, 50, 6, &mut out);
+            out
+        });
+        assert_eq!(vec_d, sc_d, "{dt} decode diverges between ISA paths");
+    }
+}
